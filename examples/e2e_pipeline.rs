@@ -1,0 +1,226 @@
+//! End-to-end driver: the full DegreeSketch system on a real small
+//! workload, proving all three layers compose (EXPERIMENTS.md §E2E).
+//!
+//! Pipeline (a data-pipeline paper's analogue of "train a model end to
+//! end"):
+//!   1. build a ground-truthable Kronecker graph (karate ⊗ karate — paper
+//!      Appendix C) and a power-law RMAT graph;
+//!   2. Algorithm 1: accumulate DegreeSketch on 8 threaded ranks;
+//!   3. Algorithm 2: t ≤ 5 neighborhood estimation → MRE vs exact BFS;
+//!   4. Algorithms 4/5: triangle heavy hitters → precision/recall vs
+//!      exact, with BOTH the native MLE backend and the PJRT backend
+//!      (JAX/Pallas AOT artifact through Layer 3) when artifacts exist;
+//!   5. report the paper's headline metrics: wall time linear in m,
+//!      estimation MRE ≈ HLL standard error, heavy-hitter P/R.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pipeline`
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Instant;
+
+use degreesketch::comm::Backend;
+use degreesketch::coordinator::anf::{neighborhood_approximation, AnfOptions};
+use degreesketch::coordinator::sketch::{
+    accumulate_stream, AccumulateOptions,
+};
+use degreesketch::coordinator::{
+    edge_triangle_heavy_hitters, vertex_triangle_heavy_hitters,
+    IntersectBackend, TriangleOptions,
+};
+use degreesketch::graph::csr::Csr;
+use degreesketch::graph::exact;
+use degreesketch::graph::gen::GraphSpec;
+use degreesketch::graph::stream::{EdgeStream, MemoryStream};
+use degreesketch::graph::Edge;
+use degreesketch::hll::HllConfig;
+use degreesketch::runtime::{default_artifacts_dir, PjrtService};
+use degreesketch::util::stats::{mean_relative_error, precision_recall};
+
+const RANKS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== DegreeSketch end-to-end pipeline ===\n");
+    let mut total_edges = 0usize;
+    let mut total_secs = 0.0f64;
+    for spec in ["kron-karate:2", "rmat:14:16"] {
+        let (m, s) = run_graph(spec)?;
+        total_edges += m;
+        total_secs += s;
+    }
+    println!(
+        "=== pipeline complete: {total_edges} edges processed in \
+         {total_secs:.2}s ({:.2e} edges/s end-to-end) ===",
+        total_edges as f64 / total_secs
+    );
+    Ok(())
+}
+
+fn run_graph(spec_str: &str) -> anyhow::Result<(usize, f64)> {
+    let wall = Instant::now();
+    let spec = GraphSpec::parse(spec_str).unwrap();
+    let edges = spec.generate(11);
+    let csr = Csr::from_edges(&edges);
+    println!(
+        "--- {spec_str} ({}): |V|={} |E|={}",
+        spec.type_name(),
+        csr.num_vertices(),
+        csr.num_edges()
+    );
+
+    // ---- Algorithm 1: accumulation --------------------------------
+    let stream = MemoryStream::new(edges.clone());
+    let t0 = Instant::now();
+    let ds = accumulate_stream(
+        &stream,
+        RANKS,
+        HllConfig::new(8, 0xE2E),
+        AccumulateOptions {
+            backend: Backend::Threaded,
+            ..Default::default()
+        },
+    );
+    let accum_s = t0.elapsed().as_secs_f64();
+    println!(
+        "accumulate: {:.3}s ({:.2e} edges/s, {} messages, {:.1} KiB sketches)",
+        accum_s,
+        edges.len() as f64 / accum_s,
+        ds.accumulation_stats.messages,
+        ds.memory_bytes() as f64 / 1024.0
+    );
+
+    // ---- Algorithm 2: neighborhoods vs exact BFS -------------------
+    let shards = stream.shard(RANKS);
+    let max_t = 5;
+    let t0 = Instant::now();
+    let anf = neighborhood_approximation(
+        &ds,
+        &shards,
+        AnfOptions {
+            backend: Backend::Threaded,
+            max_t,
+            ..Default::default()
+        },
+    );
+    let anf_s = t0.elapsed().as_secs_f64();
+    let truth = exact::neighborhood_sizes(&csr, max_t);
+    print!("anf ({anf_s:.3}s): MRE per t:");
+    for t in 1..=max_t {
+        let pairs: Vec<(f64, f64)> = (0..csr.num_vertices() as u32)
+            .map(|v| {
+                let tr = if t == 1 {
+                    csr.degree(v) as f64
+                } else {
+                    truth[v as usize][t - 1] as f64
+                };
+                (tr, anf.per_vertex[&csr.original_id(v)][t - 1])
+            })
+            .collect();
+        print!(" t{t}={:.3}", mean_relative_error(&pairs));
+    }
+    println!("  (HLL standard error at p=8 is 0.065)");
+
+    // ---- Algorithms 4/5: triangle heavy hitters --------------------
+    // ground truth top-k sets
+    let k = 100;
+    let ds = Arc::new(ds);
+    let edge_truth = exact::edge_triangles(&csr);
+    let mut ranked: Vec<(usize, Edge)> = edge_truth
+        .iter()
+        .map(|&(u, v, c)| {
+            let (a, b) = (csr.original_id(u), csr.original_id(v));
+            (c, (a.min(b), a.max(b)))
+        })
+        .collect();
+    ranked.sort_unstable_by(|a, b| b.cmp(a));
+    let true_topk: HashSet<Edge> =
+        ranked.iter().take(k).map(|&(_, e)| e).collect();
+
+    let t0 = Instant::now();
+    let eres = edge_triangle_heavy_hitters(
+        &ds,
+        &shards,
+        &TriangleOptions {
+            backend: Backend::Threaded,
+            k,
+            ..Default::default()
+        },
+    );
+    let tri_s = t0.elapsed().as_secs_f64();
+    let predicted: HashSet<Edge> =
+        eres.heavy_hitters.iter().map(|&(_, e)| e).collect();
+    let (prec, rec) = precision_recall(&true_topk, &predicted);
+    let exact_t = exact::global_triangles(&csr) as f64;
+    println!(
+        "edge-HH (native MLE, {tri_s:.3}s, {:.2e} pairs/s): \
+         precision={prec:.2} recall={rec:.2}  T est {:.3e} vs exact {:.3e}",
+        eres.pairs_estimated as f64 / tri_s,
+        eres.global_estimate,
+        exact_t
+    );
+
+    // vertex heavy hitters
+    let vres = vertex_triangle_heavy_hitters(
+        &ds,
+        &shards,
+        &TriangleOptions {
+            backend: Backend::Threaded,
+            k,
+            ..Default::default()
+        },
+    );
+    let vt = exact::vertex_triangles(&csr);
+    let mut vranked: Vec<(usize, u64)> = vt
+        .iter()
+        .enumerate()
+        .map(|(v, &c)| (c, csr.original_id(v as u32)))
+        .collect();
+    vranked.sort_unstable_by(|a, b| b.cmp(a));
+    let vtrue: HashSet<u64> = vranked.iter().take(k).map(|&(_, v)| v).collect();
+    let vpred: HashSet<u64> =
+        vres.heavy_hitters.iter().map(|&(_, v)| v).collect();
+    let (vprec, vrec) = precision_recall(&vtrue, &vpred);
+    println!(
+        "vertex-HH: precision={vprec:.2} recall={vrec:.2}  T est {:.3e}",
+        vres.global_estimate
+    );
+
+    // ---- PJRT leg: the L1/L2 artifact on the L3 hot path -----------
+    // (interpret-mode Pallas on CPU is far slower than the native solver,
+    // so the composition proof runs on the smaller workload only)
+    let artifacts = default_artifacts_dir();
+    if artifacts.join("manifest.txt").exists() && edges.len() < 50_000 {
+        let service = PjrtService::start(&artifacts)?;
+        let t0 = Instant::now();
+        let pres = edge_triangle_heavy_hitters(
+            &ds,
+            &shards,
+            &TriangleOptions {
+                backend: Backend::Sequential,
+                k,
+                intersect: IntersectBackend::Batched {
+                    batch: 256,
+                    exec: Arc::new(service.handle()),
+                },
+                ..Default::default()
+            },
+        );
+        let pjrt_s = t0.elapsed().as_secs_f64();
+        let ppred: HashSet<Edge> =
+            pres.heavy_hitters.iter().map(|&(_, e)| e).collect();
+        let (pprec, prec2) = precision_recall(&true_topk, &ppred);
+        println!(
+            "edge-HH (PJRT artifact, {pjrt_s:.3}s): precision={pprec:.2} \
+             recall={prec2:.2}  T est {:.3e}",
+            pres.global_estimate
+        );
+    } else if edges.len() >= 50_000 {
+        println!("(PJRT leg skipped on large workload: interpret-mode Pallas)");
+    } else {
+        println!("(PJRT leg skipped: run `make artifacts`)");
+    }
+
+    let total = wall.elapsed().as_secs_f64();
+    println!("--- {spec_str} done in {total:.2}s\n");
+    Ok((edges.len(), total))
+}

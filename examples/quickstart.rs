@@ -1,0 +1,108 @@
+//! Quickstart: accumulate a DegreeSketch over the (real) Zachary karate
+//! club, query degrees, neighborhoods and triangle counts, and compare
+//! against exact ground truth.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use degreesketch::coordinator::anf::{neighborhood_approximation, AnfOptions};
+use degreesketch::coordinator::sketch::{
+    accumulate_stream, AccumulateOptions,
+};
+use degreesketch::coordinator::{
+    edge_triangle_heavy_hitters, QueryEngine, TriangleOptions,
+};
+use degreesketch::graph::csr::Csr;
+use degreesketch::graph::exact;
+use degreesketch::graph::gen::karate;
+use degreesketch::graph::stream::{EdgeStream, MemoryStream};
+use degreesketch::hll::HllConfig;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The graph arrives as an edge stream, sharded across 4 logical
+    //    processors (the paper's σ and P).
+    let edges = karate::edges();
+    let stream = MemoryStream::new(edges.clone());
+    let ranks = 4;
+
+    // 2. Algorithm 1: one pass accumulates a per-vertex HLL sketch shard
+    //    on each processor.
+    let ds = accumulate_stream(
+        &stream,
+        ranks,
+        HllConfig::new(12, 0xD5),
+        AccumulateOptions::default(),
+    );
+    println!(
+        "accumulated {} sketches ({} bytes, {} messages)",
+        ds.num_vertices(),
+        ds.memory_bytes(),
+        ds.accumulation_stats.messages
+    );
+
+    // 3. Degree queries straight off the sketch.
+    let csr = Csr::from_edges(&edges);
+    println!("\nvertex  est.degree  true.degree");
+    for v in [0u64, 33, 5] {
+        let truth = csr.degree(csr.compact_id(v).unwrap());
+        println!("{v:>6}  {:>10.2}  {truth:>11}", ds.degree_estimate(v));
+    }
+
+    // 4. Algorithm 2: t-neighborhood sizes (distributed HyperANF).
+    let shards = stream.shard(ranks);
+    let anf = neighborhood_approximation(
+        &ds,
+        &shards,
+        AnfOptions {
+            max_t: 3,
+            ..Default::default()
+        },
+    );
+    let truth = exact::neighborhood_sizes(&csr, 3);
+    println!("\nvertex  est.N(x,3)  N(x,3)");
+    for v in [0u64, 33, 16] {
+        let cid = csr.compact_id(v).unwrap() as usize;
+        println!(
+            "{v:>6}  {:>10.1}  {:>6}",
+            anf.per_vertex[&v][2], truth[cid][2]
+        );
+    }
+
+    // 5. Algorithm 4: edge-local triangle heavy hitters.
+    let ds = Arc::new(ds);
+    let res = edge_triangle_heavy_hitters(
+        &ds,
+        &shards,
+        &TriangleOptions {
+            k: 5,
+            ..Default::default()
+        },
+    );
+    println!(
+        "\nglobal triangles: estimated {:.1}, exact {}",
+        res.global_estimate,
+        exact::global_triangles(&csr)
+    );
+    println!("top-5 edge heavy hitters (est vs exact):");
+    for (est, (u, v)) in &res.heavy_hitters {
+        let (cu, cv) =
+            (csr.compact_id(*u).unwrap(), csr.compact_id(*v).unwrap());
+        println!(
+            "  ({u},{v})  est ≈ {est:.1}   exact = {}",
+            csr.common_neighbors(cu, cv)
+        );
+    }
+
+    // 6. The leave-behind property: persist and re-load as a query engine.
+    let dir = std::env::temp_dir().join("degreesketch_quickstart");
+    QueryEngine::new(Arc::try_unwrap(ds).unwrap()).save(&dir)?;
+    let engine = QueryEngine::load(&dir)?;
+    println!(
+        "\nreloaded engine: deg(33) ≈ {:.2}, |adj(0) ∪ adj(33)| ≈ {:.2}",
+        engine.degree(33).unwrap(),
+        engine.union_cardinality(&[0, 33]).unwrap()
+    );
+    std::fs::remove_dir_all(&dir)?;
+    Ok(())
+}

@@ -1,0 +1,105 @@
+"""AOT lowering: JAX/Pallas computations → HLO text artifacts for rust/PJRT.
+
+Interchange format is HLO **text**, NOT ``lowered.compile().serialize()``:
+jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``). The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md and gen_hlo.py.
+
+Emits, per (p, batch) configuration:
+
+* ``estimate_p{p}_b{batch}.hlo.txt``   — regs[B,R] i32 → est[B] f32
+* ``intersect_p{p}_b{batch}.hlo.txt``  — a,b[B,R] i32 → [B,4] f32
+                                          (λa, λb, λx, |A∪B|)
+* ``union_p{p}_b{batch}.hlo.txt``      — a,b[B,R] i32 → est[B] f32
+
+plus ``manifest.txt``: one line per artifact
+``name kind p q r batch file``  consumed by ``rust/src/runtime``.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+# (p, batch) configurations to compile. p=8 matches the paper's
+# neighborhood/scaling experiments, p=12 its heavy-hitter experiments.
+CONFIGS = [
+    (8, 256),
+    (12, 64),
+]
+
+WORD_BITS = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifacts(p: int, batch: int) -> dict[str, str]:
+    """Lower the three computations for one (p, batch) config."""
+    q = WORD_BITS - p
+    r = 1 << p
+    spec = jax.ShapeDtypeStruct((batch, r), jnp.int32)
+
+    est = jax.jit(functools.partial(model.batched_estimate, q=q))
+    inter = jax.jit(functools.partial(model.batched_intersect, q=q))
+    union = jax.jit(functools.partial(model.batched_union_estimate, q=q))
+
+    return {
+        f"estimate_p{p}_b{batch}": to_hlo_text(est.lower(spec)),
+        f"intersect_p{p}_b{batch}": to_hlo_text(inter.lower(spec, spec)),
+        f"union_p{p}_b{batch}": to_hlo_text(union.lower(spec, spec)),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default=",".join(f"{p}:{b}" for p, b in CONFIGS),
+        help="comma list of p:batch pairs",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    configs = [tuple(map(int, c.split(":"))) for c in args.configs.split(",")]
+    manifest_lines = []
+    for p, batch in configs:
+        q = WORD_BITS - p
+        r = 1 << p
+        arts = lower_artifacts(p, batch)
+        for name, text in arts.items():
+            kind = name.split("_")[0]
+            fname = f"{name}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest_lines.append(f"{name} {kind} {p} {q} {r} {batch} {fname}")
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

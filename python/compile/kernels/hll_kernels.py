@@ -1,0 +1,226 @@
+"""Layer-1 Pallas kernels: the HLL register-crunch hot spot.
+
+Three kernels operate on dense register arrays ``[B, R]`` (``R = 2**p``,
+int32 values in ``[0, q + 1]``):
+
+* ``harmonic``  — per-sketch harmonic sum ``sum_i 2**-r_i`` + zero count.
+* ``histogram`` — per-sketch register-value histogram ``[B, kmax + 1]``.
+* ``pair_stats`` — per-pair Eq. 19 comparison statistics ``[B, 5, kmax+1]``.
+
+All are written against the TPU mental model (see DESIGN.md
+§Hardware-Adaptation): the register axis stays resident in VMEM while
+BlockSpec partitions the batch axis into row blocks; histograms are expressed
+as masked reductions (VPU-friendly — no scatter). ``interpret=True`` is
+mandatory here: real TPU lowering emits Mosaic custom-calls the CPU PJRT
+plugin cannot execute, and correctness is validated against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of registers processed per kernel invocation. 8 rows of 4096 int32
+# registers = 128 KiB per operand block: comfortably VMEM-resident alongside
+# the (tiny) output block.
+DEFAULT_BLOCK_B = 8
+
+
+def _block_b(batch: int, block_b: int) -> int:
+    """Largest block size that divides ``batch`` and is <= ``block_b``."""
+    bb = min(block_b, batch)
+    while batch % bb != 0:
+        bb -= 1
+    return bb
+
+
+# ---------------------------------------------------------------------------
+# harmonic: [B, R] -> (hsum [B], zeros [B])
+# ---------------------------------------------------------------------------
+
+
+def _harmonic_kernel(regs_ref, hsum_ref, zeros_ref):
+    regs = regs_ref[...]
+    hsum_ref[...] = jnp.sum(jnp.exp2(-regs.astype(jnp.float32)), axis=-1)
+    zeros_ref[...] = jnp.sum((regs == 0).astype(jnp.int32), axis=-1)
+
+
+def harmonic(regs: jnp.ndarray, *, block_b: int = DEFAULT_BLOCK_B):
+    """Pallas harmonic-sum kernel; see ``ref.harmonic_stats``."""
+    batch, r = regs.shape
+    bb = _block_b(batch, block_b)
+    grid = (batch // bb,)
+    return pl.pallas_call(
+        _harmonic_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bb, r), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        ],
+        interpret=True,
+    )(regs)
+
+
+# ---------------------------------------------------------------------------
+# histogram: [B, R] -> [B, kmax + 1]
+# ---------------------------------------------------------------------------
+
+
+def _histogram_kernel(regs_ref, out_ref, *, kmax: int):
+    regs = regs_ref[...]
+    # Masked reduction per bucket: out[b, k] = sum_i (regs[b, i] == k).
+    ks = jax.lax.broadcasted_iota(jnp.int32, (1, 1, kmax + 1), 2)
+    eq = (regs[:, :, None] == ks).astype(jnp.int32)
+    out_ref[...] = jnp.sum(eq, axis=1)
+
+
+def histogram(
+    regs: jnp.ndarray, kmax: int, *, block_b: int = DEFAULT_BLOCK_B
+) -> jnp.ndarray:
+    """Pallas register-histogram kernel; see ``ref.register_histogram``."""
+    batch, r = regs.shape
+    bb = _block_b(batch, block_b)
+    grid = (batch // bb,)
+    return pl.pallas_call(
+        functools.partial(_histogram_kernel, kmax=kmax),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bb, r), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, kmax + 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, kmax + 1), jnp.int32),
+        interpret=True,
+    )(regs)
+
+
+# ---------------------------------------------------------------------------
+# pair_stats: [B, R] x [B, R] -> [B, 5, kmax + 1]   (paper Eq. 19)
+# ---------------------------------------------------------------------------
+
+
+def _pair_stats_kernel(a_ref, b_ref, out_ref, *, kmax: int):
+    a = a_ref[...]
+    b = b_ref[...]
+    ks = jax.lax.broadcasted_iota(jnp.int32, (1, 1, kmax + 1), 2)
+    a3 = a[:, :, None]
+    b3 = b[:, :, None]
+    lt = (a < b)[:, :, None]
+    gt = (a > b)[:, :, None]
+    eq = (a == b)[:, :, None]
+    i32 = jnp.int32
+    c_a_lt = jnp.sum(((a3 == ks) & lt).astype(i32), axis=1)
+    c_a_gt = jnp.sum(((a3 == ks) & gt).astype(i32), axis=1)
+    c_b_lt = jnp.sum(((b3 == ks) & gt).astype(i32), axis=1)
+    c_b_gt = jnp.sum(((b3 == ks) & lt).astype(i32), axis=1)
+    c_eq = jnp.sum(((a3 == ks) & eq).astype(i32), axis=1)
+    out_ref[...] = jnp.stack([c_a_lt, c_a_gt, c_b_lt, c_b_gt, c_eq], axis=1)
+
+
+def pair_stats(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    kmax: int,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+) -> jnp.ndarray:
+    """Pallas Eq.-19 pair-statistics kernel; see ``ref.pair_stats``."""
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch: {a.shape} vs {b.shape}")
+    batch, r = a.shape
+    bb = _block_b(batch, block_b)
+    grid = (batch // bb,)
+    return pl.pallas_call(
+        functools.partial(_pair_stats_kernel, kmax=kmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, r), lambda i: (i, 0)),
+            pl.BlockSpec((bb, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 5, kmax + 1), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, 5, kmax + 1), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# union_harmonic: fused merge + harmonic for the union estimate
+# ---------------------------------------------------------------------------
+
+
+def _union_harmonic_kernel(a_ref, b_ref, hsum_ref, zeros_ref):
+    u = jnp.maximum(a_ref[...], b_ref[...])
+    hsum_ref[...] = jnp.sum(jnp.exp2(-u.astype(jnp.float32)), axis=-1)
+    zeros_ref[...] = jnp.sum((u == 0).astype(jnp.int32), axis=-1)
+
+
+def union_harmonic(
+    a: jnp.ndarray, b: jnp.ndarray, *, block_b: int = DEFAULT_BLOCK_B
+):
+    """Fused register-max + harmonic stats of the union sketch."""
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch: {a.shape} vs {b.shape}")
+    batch, r = a.shape
+    bb = _block_b(batch, block_b)
+    grid = (batch // bb,)
+    return pl.pallas_call(
+        _union_harmonic_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, r), lambda i: (i, 0)),
+            pl.BlockSpec((bb, r), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        ],
+        interpret=True,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# union_histogram: fused merge + histogram (for the union cardinality
+# estimate via the improved estimator, which consumes histograms)
+# ---------------------------------------------------------------------------
+
+
+def _union_histogram_kernel(a_ref, b_ref, out_ref, *, kmax: int):
+    u = jnp.maximum(a_ref[...], b_ref[...])
+    ks = jax.lax.broadcasted_iota(jnp.int32, (1, 1, kmax + 1), 2)
+    eq = (u[:, :, None] == ks).astype(jnp.int32)
+    out_ref[...] = jnp.sum(eq, axis=1)
+
+
+def union_histogram(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    kmax: int,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+) -> jnp.ndarray:
+    """Fused register-max + histogram of the union sketch."""
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch: {a.shape} vs {b.shape}")
+    batch, r = a.shape
+    bb = _block_b(batch, block_b)
+    grid = (batch // bb,)
+    return pl.pallas_call(
+        functools.partial(_union_histogram_kernel, kmax=kmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, r), lambda i: (i, 0)),
+            pl.BlockSpec((bb, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, kmax + 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, kmax + 1), jnp.int32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracle for the Pallas HLL register kernels.
+
+These functions define the *ground-truth semantics* of the L1 kernels in
+``hll_kernels.py``. Everything here is straight-line jnp over dense register
+arrays; the Pallas kernels must match these bit-for-bit (integers) or to
+float tolerance (harmonic sums). The pytest suite (``python/tests``) sweeps
+shapes and register distributions with hypothesis and asserts agreement.
+
+Register conventions (shared with the rust implementation, see
+``rust/src/hll``):
+
+* An HLL(p, q) sketch has ``r = 2**p`` registers with integer values in
+  ``[0, q + 1]``; value 0 means "never touched".
+* ``kmax = q + 1`` is the saturation value, so each register takes one of
+  ``q + 2`` distinct values.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def harmonic_stats(regs: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-sketch harmonic sum and zero-register count.
+
+    Args:
+      regs: int32 array ``[B, R]`` of register values.
+
+    Returns:
+      ``(hsum, zeros)`` where ``hsum[b] = sum_i 2**-regs[b, i]`` (float32;
+      zero registers contribute 1.0) and ``zeros[b] = #{i : regs[b,i] == 0}``
+      (int32).
+    """
+    hsum = jnp.sum(jnp.exp2(-regs.astype(jnp.float32)), axis=-1)
+    zeros = jnp.sum((regs == 0).astype(jnp.int32), axis=-1)
+    return hsum, zeros
+
+
+def register_histogram(regs: jnp.ndarray, kmax: int) -> jnp.ndarray:
+    """Per-sketch histogram of register values.
+
+    Args:
+      regs: int32 ``[B, R]``.
+      kmax: maximum register value (``q + 1``).
+
+    Returns:
+      int32 ``[B, kmax + 1]`` with ``out[b, k] = #{i : regs[b, i] == k}``.
+    """
+    ks = jnp.arange(kmax + 1, dtype=regs.dtype)
+    return jnp.sum(
+        (regs[:, :, None] == ks[None, None, :]).astype(jnp.int32), axis=1
+    )
+
+
+def pair_stats(a: jnp.ndarray, b: jnp.ndarray, kmax: int) -> jnp.ndarray:
+    """Joint register-comparison count statistics (paper Eq. 19).
+
+    For each sketch pair, counts per register value ``k`` in five categories:
+
+    * ``out[b, 0, k] = #{i : k = a_i <  b_i}``  (``c_k^{A,<}``)
+    * ``out[b, 1, k] = #{i : k = a_i >  b_i}``  (``c_k^{A,>}``)
+    * ``out[b, 2, k] = #{i : k = b_i <  a_i}``  (``c_k^{B,<}``)
+    * ``out[b, 3, k] = #{i : k = b_i >  a_i}``  (``c_k^{B,>}``)
+    * ``out[b, 4, k] = #{i : k = a_i =  b_i}``  (``c_k^{=}``)
+
+    These are the sufficient statistics for the joint Poisson MLE
+    intersection estimator (Ertl 2017); the likelihood never needs the raw
+    registers once these are known.
+
+    Args:
+      a, b: int32 ``[B, R]`` register arrays of two sketch batches.
+      kmax: maximum register value (``q + 1``).
+
+    Returns:
+      int32 ``[B, 5, kmax + 1]``.
+    """
+    ks = jnp.arange(kmax + 1, dtype=a.dtype)[None, None, :]
+    a3 = a[:, :, None]
+    b3 = b[:, :, None]
+    lt = (a < b)[:, :, None]
+    gt = (a > b)[:, :, None]
+    eq = (a == b)[:, :, None]
+    c_a_lt = jnp.sum(((a3 == ks) & lt).astype(jnp.int32), axis=1)
+    c_a_gt = jnp.sum(((a3 == ks) & gt).astype(jnp.int32), axis=1)
+    c_b_lt = jnp.sum(((b3 == ks) & gt).astype(jnp.int32), axis=1)
+    c_b_gt = jnp.sum(((b3 == ks) & lt).astype(jnp.int32), axis=1)
+    c_eq = jnp.sum(((a3 == ks) & eq).astype(jnp.int32), axis=1)
+    return jnp.stack([c_a_lt, c_a_gt, c_b_lt, c_b_gt, c_eq], axis=1)
+
+
+def union_registers(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Element-wise register max — the HLL union/merge (paper Alg. 6)."""
+    return jnp.maximum(a, b)

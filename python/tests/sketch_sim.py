@@ -1,0 +1,32 @@
+"""Shared helper: simulate HLL register arrays for known-cardinality sets.
+
+Uses splitmix64 as the element hash — the same mixer family as the rust
+side's PRNGs — so tests exercise realistic register distributions rather
+than uniform-random register values.
+"""
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+
+
+def splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & MASK
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return (z ^ (z >> 31)) & MASK
+
+
+def build_registers(ids, p: int) -> np.ndarray:
+    """Insert ``ids`` into a fresh HLL(p, 64-p) and return its registers."""
+    q = 64 - p
+    regs = np.zeros(1 << p, np.int32)
+    for e in ids:
+        w = splitmix64(int(e))
+        j = w >> (64 - p)
+        rest = (w << p) & MASK
+        rho = min((64 - rest.bit_length()) + 1 if rest else q + 1, q + 1)
+        if rho > regs[j]:
+            regs[j] = rho
+    return regs

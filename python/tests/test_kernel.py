@@ -1,0 +1,117 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (batch, p) and register distributions; integer
+outputs must match exactly, float outputs to tight tolerance.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hll_kernels as hk
+from compile.kernels import ref
+
+WORD_BITS = 64
+
+
+def random_regs(rng, batch, r, kmax, zero_frac):
+    regs = rng.integers(0, kmax + 1, (batch, r)).astype(np.int32)
+    regs[rng.random((batch, r)) < zero_frac] = 0
+    return regs
+
+
+reg_cases = st.tuples(
+    st.integers(min_value=1, max_value=13),  # batch (incl. non-divisible)
+    st.sampled_from([4, 5, 6, 8]),  # p
+    st.floats(min_value=0.0, max_value=1.0),  # zero fraction
+    st.integers(min_value=0, max_value=2**32 - 1),  # seed
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(reg_cases)
+def test_harmonic_matches_ref(case):
+    batch, p, zf, seed = case
+    q = WORD_BITS - p
+    rng = np.random.default_rng(seed)
+    regs = jnp.array(random_regs(rng, batch, 1 << p, q + 1, zf))
+    h_k, z_k = hk.harmonic(regs)
+    h_r, z_r = ref.harmonic_stats(regs)
+    np.testing.assert_allclose(np.array(h_k), np.array(h_r), rtol=1e-6)
+    np.testing.assert_array_equal(np.array(z_k), np.array(z_r))
+
+
+@settings(max_examples=40, deadline=None)
+@given(reg_cases)
+def test_histogram_matches_ref(case):
+    batch, p, zf, seed = case
+    q = WORD_BITS - p
+    rng = np.random.default_rng(seed)
+    regs = jnp.array(random_regs(rng, batch, 1 << p, q + 1, zf))
+    np.testing.assert_array_equal(
+        np.array(hk.histogram(regs, q + 1)),
+        np.array(ref.register_histogram(regs, q + 1)),
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(reg_cases)
+def test_pair_stats_matches_ref(case):
+    batch, p, zf, seed = case
+    q = WORD_BITS - p
+    rng = np.random.default_rng(seed)
+    a = jnp.array(random_regs(rng, batch, 1 << p, q + 1, zf))
+    b = jnp.array(random_regs(rng, batch, 1 << p, q + 1, 1.0 - zf))
+    np.testing.assert_array_equal(
+        np.array(hk.pair_stats(a, b, q + 1)),
+        np.array(ref.pair_stats(a, b, q + 1)),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(reg_cases)
+def test_union_kernels_match_ref(case):
+    batch, p, zf, seed = case
+    q = WORD_BITS - p
+    rng = np.random.default_rng(seed)
+    a = jnp.array(random_regs(rng, batch, 1 << p, q + 1, zf))
+    b = jnp.array(random_regs(rng, batch, 1 << p, q + 1, zf))
+    u = ref.union_registers(a, b)
+    h_k, z_k = hk.union_harmonic(a, b)
+    h_r, z_r = ref.harmonic_stats(u)
+    np.testing.assert_allclose(np.array(h_k), np.array(h_r), rtol=1e-6)
+    np.testing.assert_array_equal(np.array(z_k), np.array(z_r))
+    np.testing.assert_array_equal(
+        np.array(hk.union_histogram(a, b, q + 1)),
+        np.array(ref.register_histogram(u, q + 1)),
+    )
+
+
+def test_pair_stats_invariants():
+    """Category counts partition the register set (sum over all = r)."""
+    rng = np.random.default_rng(7)
+    p, q = 6, 58
+    a = jnp.array(random_regs(rng, 4, 1 << p, q + 1, 0.4))
+    b = jnp.array(random_regs(rng, 4, 1 << p, q + 1, 0.4))
+    s = np.array(ref.pair_stats(a, b, q + 1))
+    # lt_a + gt_a + eq partitions A's registers:
+    np.testing.assert_array_equal(
+        s[:, 0].sum(-1) + s[:, 1].sum(-1) + s[:, 4].sum(-1), 1 << p
+    )
+    # count of (a < b) registers equals count of (b > a) registers:
+    np.testing.assert_array_equal(s[:, 0].sum(-1), s[:, 3].sum(-1))
+    np.testing.assert_array_equal(s[:, 1].sum(-1), s[:, 2].sum(-1))
+
+
+def test_shape_mismatch_raises():
+    a = jnp.zeros((2, 64), jnp.int32)
+    b = jnp.zeros((3, 64), jnp.int32)
+    with pytest.raises(ValueError):
+        hk.pair_stats(a, b, 59)
+    with pytest.raises(ValueError):
+        hk.union_harmonic(a, b)

@@ -1,0 +1,124 @@
+"""L2 model tests: estimator accuracy and MLE intersection recovery.
+
+These are statistical tests with planted ground truth: sets of known
+cardinality and overlap are hashed into registers and the estimators must
+recover them within a few multiples of the HLL standard error
+(≈ 1.04/sqrt(2^p)).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from tests.sketch_sim import build_registers
+
+
+@pytest.mark.parametrize("p", [6, 8])
+@pytest.mark.parametrize("n", [0, 1, 5, 50, 500, 5000, 50000])
+def test_estimate_accuracy(p, n):
+    q = 64 - p
+    rng = np.random.default_rng(p * 1000 + n)
+    ids = rng.integers(0, 1 << 62, n)
+    regs = jnp.array(build_registers(ids, p)[None])
+    est = float(model.batched_estimate_ref(regs, q=q)[0])
+    if n == 0:
+        assert est < 1.0
+    else:
+        se = 1.04 / np.sqrt(1 << p)
+        # 5 standard errors + small-range slack.
+        assert abs(est - n) <= max(5 * se * n, 3.0), (est, n)
+
+
+@pytest.mark.parametrize("p", [8])
+def test_estimate_pallas_equals_ref(p):
+    q = 64 - p
+    rng = np.random.default_rng(0)
+    regs = np.stack(
+        [build_registers(rng.integers(0, 1 << 62, n), p) for n in (10, 1000)]
+    )
+    a = model.batched_estimate(jnp.array(regs), q=q)
+    b = model.batched_estimate_ref(jnp.array(regs), q=q)
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-5)
+
+
+def _planted_pair(p, na, nb, nx, seed):
+    rng = np.random.default_rng(seed)
+    univ = rng.integers(0, 1 << 62, na + nb - nx)
+    A = univ[:na]
+    B = univ[na - nx :]
+    return (
+        jnp.array(build_registers(A, p)[None]),
+        jnp.array(build_registers(B, p)[None]),
+    )
+
+
+@pytest.mark.parametrize(
+    "na,nb,nx",
+    [
+        (3000, 3000, 1500),
+        (5000, 5000, 4000),
+        (10000, 2000, 1500),
+    ],
+)
+def test_mle_intersection_recovery(na, nb, nx):
+    """Large relative intersections must be recovered within ~20%.
+
+    (The paper's own App. B shows small relative intersections are
+    unrecoverable — that regime is exercised by fig7/fig8 benches, not
+    asserted here.)
+    """
+    p, q = 8, 56
+    a, b = _planted_pair(p, na, nb, nx, seed=na * 7 + nb * 3 + nx)
+    out = np.array(model.batched_intersect_ref(a, b, q=q))[0]
+    lam_a, lam_b, lam_x, union = out
+    assert abs(lam_x - nx) / nx < 0.25, out
+    assert abs(union - (na + nb - nx)) / (na + nb - nx) < 0.1, out
+    assert abs(lam_a - (na - nx)) / max(na - nx, 1) < 0.35, out
+    assert abs(lam_b - (nb - nx)) / max(nb - nx, 1) < 0.35, out
+
+
+def test_mle_pallas_equals_ref():
+    p, q = 6, 58
+    a, b = _planted_pair(p, 2000, 2000, 1000, seed=11)
+    out_k = np.array(model.batched_intersect(a, b, q=q))
+    out_r = np.array(model.batched_intersect_ref(a, b, q=q))
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-4)
+
+
+def test_union_estimate_equals_merged_estimate():
+    """|A ∪ B| via the fused kernel == estimate of the merged sketch."""
+    p, q = 8, 56
+    a, b = _planted_pair(p, 4000, 3000, 500, seed=3)
+    u = jnp.maximum(a, b)
+    fused = np.array(model.batched_union_estimate(a, b, q=q))
+    merged = np.array(model.batched_estimate_ref(u, q=q))
+    np.testing.assert_allclose(fused, merged, rtol=1e-5)
+
+
+def test_disjoint_sets_small_intersection():
+    """Disjoint sets must not produce a large phantom intersection."""
+    p, q = 8, 56
+    rng = np.random.default_rng(42)
+    A = rng.integers(0, 1 << 61, 3000)
+    B = rng.integers((1 << 61), 1 << 62, 3000)
+    a = jnp.array(build_registers(A, p)[None])
+    b = jnp.array(build_registers(B, p)[None])
+    out = np.array(model.batched_intersect_ref(a, b, q=q))[0]
+    # phantom intersection below ~15% of |A|
+    assert out[2] < 0.15 * 3000, out
+
+
+def test_sigma_tau_bounds():
+    """σ, τ sanity: σ(0)=0, τ(0)=τ(1)=0, monotone σ on [0, 0.9]."""
+    xs = jnp.linspace(0.0, 0.9, 10).astype(jnp.float64)
+    sig = np.array(jax.vmap(model._sigma)(xs))
+    assert sig[0] == 0.0
+    assert np.all(np.diff(sig) > 0)
+    # finite TAU_ITERS leaves a 2^-TAU_ITERS/3 residue at x = 0
+    assert abs(float(model._tau(jnp.float64(0.0)))) < 1e-12
+    assert abs(float(model._tau(jnp.float64(1.0)))) < 1e-12

@@ -1,0 +1,110 @@
+//! Figure 3: triangle counts and triangle densities (Jaccard of endpoint
+//! adjacency sets) of the top edge-local heavy hitters, contrasting a
+//! graph where recovery works with the paper's three failure regimes.
+//!
+//! Paper's cast → ours:
+//!   cit-Patents (dense, works)        → kron-karate:2
+//!   kronecker em⊗em (tie-heavy)       → ws:2000:8:0 (k-regular lattice)
+//!   P2P-Gnutella24 (low density)      → er:3000:9000
+//!   ca-HepTh (tied at small counts)   → ba:3000:4 tail
+
+use degreesketch::bench_util::{bench_header, Table};
+use degreesketch::graph::csr::Csr;
+use degreesketch::graph::exact;
+use degreesketch::graph::gen::GraphSpec;
+use degreesketch::util::stats::Summary;
+
+const GRAPHS: &[&str] = &[
+    "kron-karate:2",
+    "ws:2000:8:0",
+    "er:3000:9000",
+    "ba:3000:4",
+];
+
+const TOP: usize = 10_000;
+
+fn main() {
+    bench_header(
+        "fig3_triangle_density",
+        "Figure 3: triangle counts + densities of top-1e4 HH edges",
+        "exact counts; density = |N(u)∩N(v)| / |N(u)∪N(v)| (Jaccard)",
+    );
+    let mut table = Table::new(&[
+        "graph",
+        "edges",
+        "tri p50",
+        "tri p95",
+        "tri max",
+        "ties@top",
+        "dens p50",
+        "dens p95",
+        "verdict",
+    ]);
+    for spec_str in GRAPHS {
+        let spec = GraphSpec::parse(spec_str).unwrap();
+        let edges = spec.generate(2);
+        let csr = Csr::from_edges(&edges);
+        let mut ranked: Vec<(usize, f64)> = exact::edge_triangles(&csr)
+            .into_iter()
+            .map(|(u, v, c)| {
+                let du = csr.degree(u);
+                let dv = csr.degree(v);
+                let union = du + dv - c;
+                let dens = if union == 0 {
+                    0.0
+                } else {
+                    c as f64 / union as f64
+                };
+                (c, dens)
+            })
+            .collect();
+        ranked.sort_unstable_by(|a, b| {
+            b.0.cmp(&a.0).then(
+                b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal),
+            )
+        });
+        let top: Vec<(usize, f64)> =
+            ranked.into_iter().take(TOP).collect();
+        let tris: Vec<f64> = top.iter().map(|&(c, _)| c as f64).collect();
+        let dens: Vec<f64> = top.iter().map(|&(_, d)| d).collect();
+        let st = Summary::of(&tris);
+        let sd = Summary::of(&dens);
+        // tie fraction at the modal top count (the paper's em⊗em / ca-HepTh
+        // pathology)
+        let modal = top
+            .iter()
+            .map(|&(c, _)| c)
+            .fold(std::collections::HashMap::new(), |mut m, c| {
+                *m.entry(c).or_insert(0usize) += 1;
+                m
+            })
+            .into_values()
+            .max()
+            .unwrap_or(0);
+        let tie_frac = modal as f64 / top.len() as f64;
+        let verdict = if sd.p50 < 0.02 {
+            "low-density (hard)"
+        } else if tie_frac > 0.3 {
+            "tie-heavy (hard)"
+        } else {
+            "recoverable"
+        };
+        table.row(&[
+            spec_str.to_string(),
+            csr.num_edges().to_string(),
+            format!("{:.0}", st.p50),
+            format!("{:.0}", st.p95),
+            format!("{:.0}", st.max),
+            format!("{:.2}", tie_frac),
+            format!("{:.4}", sd.p50),
+            format!("{:.4}", sd.p95),
+            verdict.to_string(),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nexpected shape: the dense kron graph is recoverable; the \
+         k-regular lattice ties, ER has near-zero density, and the BA tail \
+         ties at small counts — the paper's three Figure-3 outlier modes."
+    );
+}

@@ -1,0 +1,86 @@
+//! Figure 5 + Table 1: accumulate + vertex-local triangle estimation time
+//! vs edge count on a suite of growing graphs at fixed rank count — the
+//! paper's "wall time is linear in the number of edges" claim, run on its
+//! Table-1-style inventory (scaled to this testbed).
+
+use std::sync::Arc;
+
+use degreesketch::bench_util::{bench_header, Table};
+use degreesketch::comm::Backend;
+use degreesketch::coordinator::sketch::{
+    accumulate_stream, AccumulateOptions,
+};
+use degreesketch::coordinator::{
+    vertex_triangle_heavy_hitters, TriangleOptions,
+};
+use degreesketch::graph::csr::Csr;
+use degreesketch::graph::gen::GraphSpec;
+use degreesketch::graph::stream::{EdgeStream, MemoryStream};
+use degreesketch::hll::HllConfig;
+
+/// The Table 1 analogue: increasing |E| across graph families.
+const GRAPHS: &[&str] = &[
+    "kron-karate:2", // citation-like kron
+    "ba:20000:4",
+    "rmat:14:8",
+    "kron-karate:3",
+    "rmat:15:8",
+    "rmat:16:8",
+];
+
+fn main() {
+    bench_header(
+        "fig5_linear_scaling (+ Table 1)",
+        "Figure 5: accumulation + Alg 5 time vs |E| at fixed ranks",
+        "p = 8, ranks = 8 (threaded); per-edge cost should be ~constant",
+    );
+    let ranks = 8;
+    let mut table = Table::new(&[
+        "graph", "type", "|V|", "|E|", "accum(s)", "tri(s)",
+        "edges/s(acc)", "pairs/s(tri)", "ns/edge",
+    ]);
+    for spec_str in GRAPHS {
+        let spec = GraphSpec::parse(spec_str).unwrap();
+        let edges = spec.generate(5);
+        let csr = Csr::from_edges(&edges);
+        let stream = MemoryStream::new(edges.clone());
+        let t0 = std::time::Instant::now();
+        let ds = Arc::new(accumulate_stream(
+            &stream,
+            ranks,
+            HllConfig::new(8, 0xF165),
+            AccumulateOptions {
+                backend: Backend::Threaded,
+                ..Default::default()
+            },
+        ));
+        let accum_s = t0.elapsed().as_secs_f64();
+        let shards = stream.shard(ranks);
+        let res = vertex_triangle_heavy_hitters(
+            &ds,
+            &shards,
+            &TriangleOptions {
+                backend: Backend::Threaded,
+                k: 100,
+                ..Default::default()
+            },
+        );
+        let total = accum_s + res.seconds;
+        table.row(&[
+            spec_str.to_string(),
+            spec.type_name().to_string(),
+            csr.num_vertices().to_string(),
+            csr.num_edges().to_string(),
+            format!("{accum_s:.3}"),
+            format!("{:.3}", res.seconds),
+            format!("{:.2e}", edges.len() as f64 / accum_s),
+            format!("{:.2e}", res.pairs_estimated as f64 / res.seconds),
+            format!("{:.0}", total * 1e9 / edges.len() as f64),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nexpected shape: ns/edge roughly flat across graphs — wall time \
+         linear in |E| for both accumulation and estimation (paper Fig. 5)."
+    );
+}

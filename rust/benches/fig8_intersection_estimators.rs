@@ -1,0 +1,70 @@
+//! Figure 8 (Appendix B): inclusion-exclusion vs joint-MLE intersection
+//! estimators as the true intersection shrinks, |A| = |B| fixed.
+//!
+//! Paper: |A| = |B| = 1e7; we scale to 1e5 (the error behaviour depends on
+//! |A∩B|/|B| and p, not absolute sizes — noted in EXPERIMENTS.md).
+//! Expected: MRE grows as the relative intersection shrinks, with the MLE
+//! beating inclusion-exclusion by roughly an order of magnitude.
+
+use degreesketch::bench_util::{bench_header, Table};
+use degreesketch::hash::Xoshiro256ss;
+use degreesketch::hll::{
+    inclusion_exclusion, mle_intersect, Hll, HllConfig, MleOptions,
+};
+use degreesketch::util::stats::Summary;
+
+const P: u8 = 12;
+const SIZE: u64 = 100_000;
+const TRIALS: usize = 15;
+
+fn main() {
+    bench_header(
+        "fig8_intersection_estimators",
+        "Figure 8 / App. B: IX vs joint-MLE MRE, |A| = |B|, |A∩B| sweep",
+        &format!("p = {P}, |A| = |B| = {SIZE}, {TRIALS} trials per point"),
+    );
+    let cfg = HllConfig::new(P, 0xF168);
+    let mut rng = Xoshiro256ss::new(77);
+    let mut table = Table::new(&[
+        "|A∩B|/|B|", "|A∩B|", "MLE MRE", "IX MRE", "IX/MLE",
+    ]);
+    for frac in [1.0f64, 0.5, 0.2, 0.1, 0.03, 0.01, 0.003] {
+        let nx = ((SIZE as f64) * frac).round().max(1.0) as u64;
+        let mut err_mle = Vec::new();
+        let mut err_ix = Vec::new();
+        for _ in 0..TRIALS {
+            let mut a = Hll::new(cfg);
+            let mut b = Hll::new(cfg);
+            for _ in 0..nx {
+                let e = rng.next_u64();
+                a.insert(e);
+                b.insert(e);
+            }
+            for _ in 0..SIZE - nx {
+                a.insert(rng.next_u64());
+            }
+            for _ in 0..SIZE - nx {
+                b.insert(rng.next_u64());
+            }
+            let mle = mle_intersect(&a, &b, &MleOptions::default());
+            let ix = inclusion_exclusion(&a, &b);
+            err_mle.push((mle.intersection - nx as f64).abs() / nx as f64);
+            err_ix.push((ix.intersection - nx as f64).abs() / nx as f64);
+        }
+        let m = Summary::of(&err_mle).mean;
+        let i = Summary::of(&err_ix).mean;
+        table.row(&[
+            format!("{frac:.3}"),
+            nx.to_string(),
+            format!("{m:.4}"),
+            format!("{i:.4}"),
+            format!("{:.1}x", i / m.max(1e-9)),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nexpected shape: both errors grow as the relative intersection \
+         shrinks; the MLE consistently beats inclusion-exclusion, by about \
+         an order of magnitude at small intersections (paper Fig. 8)."
+    );
+}

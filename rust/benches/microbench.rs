@@ -1,0 +1,176 @@
+//! Hot-path microbenchmarks — the §Perf instrumentation (EXPERIMENTS.md).
+//!
+//! Components: hash, sketch insert (sparse + dense regimes), merge,
+//! estimators, Eq. 19 pair statistics, MLE solve, inclusion-exclusion.
+//! These are the units the perf pass optimizes one at a time.
+
+use degreesketch::bench_util::{bench_header, Bench, Table};
+use degreesketch::hash::{xxh64_u64, Xoshiro256ss};
+use degreesketch::hll::{
+    inclusion_exclusion, mle_intersect, pair_stats, Estimator, Hll,
+    HllConfig, MleOptions,
+};
+
+fn filled(cfg: HllConfig, n: u64, rng: &mut Xoshiro256ss) -> Hll {
+    let mut s = Hll::new(cfg);
+    for _ in 0..n {
+        s.insert(rng.next_u64());
+    }
+    s
+}
+
+fn main() {
+    bench_header(
+        "microbench",
+        "§Perf: per-component hot-path costs",
+        "p = 8 and p = 12 variants where relevant",
+    );
+    let bench = Bench::new(2, 5);
+    let mut rng = Xoshiro256ss::new(1);
+    let mut table = Table::new(&["component", "items/iter", "mean", "rate"]);
+
+    // hash
+    {
+        let n = 10_000_000u64;
+        let r = bench.run(|| {
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc ^= xxh64_u64(i, 0);
+            }
+            acc
+        });
+        table.row(&[
+            "xxh64_u64".into(),
+            n.to_string(),
+            format!("{:.3}s", r.mean_s),
+            format!("{:.2e}/s", r.throughput(n)),
+        ]);
+    }
+
+    // insert: sparse regime (degree ~8) and dense regime (degree ~100k)
+    for (label, per_sketch, sketches) in [
+        ("insert sparse (deg 8)", 8u64, 100_000u64),
+        ("insert dense", 100_000, 20),
+    ] {
+        let cfg = HllConfig::new(8, 2);
+        let total = per_sketch * sketches;
+        let r = bench.run(|| {
+            let mut rng = Xoshiro256ss::new(3);
+            let mut sum = 0usize;
+            for _ in 0..sketches {
+                let mut s = Hll::new(cfg);
+                for _ in 0..per_sketch {
+                    s.insert(rng.next_u64());
+                }
+                sum += s.nonzero_registers();
+            }
+            sum
+        });
+        table.row(&[
+            label.into(),
+            total.to_string(),
+            format!("{:.3}s", r.mean_s),
+            format!("{:.2e}/s", r.throughput(total)),
+        ]);
+    }
+
+    // merge (dense x dense, p = 8)
+    {
+        let cfg = HllConfig::new(8, 4);
+        let a = filled(cfg, 5000, &mut rng);
+        let b = filled(cfg, 5000, &mut rng);
+        let n = 100_000u64;
+        let r = bench.run(|| {
+            let mut acc = a.clone();
+            for _ in 0..n {
+                acc.merge(&b);
+            }
+            acc.nonzero_registers()
+        });
+        table.row(&[
+            "merge dense p8".into(),
+            n.to_string(),
+            format!("{:.3}s", r.mean_s),
+            format!("{:.2e}/s", r.throughput(n)),
+        ]);
+    }
+
+    // estimators
+    for (label, est) in [
+        ("estimate classic", Estimator::Classic),
+        ("estimate loglog-beta", Estimator::LogLogBeta),
+        ("estimate ertl", Estimator::ErtlImproved),
+    ] {
+        let cfg = HllConfig::new(8, 5);
+        let s = filled(cfg, 20_000, &mut rng);
+        let n = 100_000u64;
+        let r = bench.run(|| {
+            let mut acc = 0.0;
+            for _ in 0..n {
+                acc += s.estimate_with(est);
+            }
+            acc
+        });
+        table.row(&[
+            label.into(),
+            n.to_string(),
+            format!("{:.3}s", r.mean_s),
+            format!("{:.2e}/s", r.throughput(n)),
+        ]);
+    }
+
+    // pair stats + intersections, p = 8 and p = 12
+    for p in [8u8, 12] {
+        let cfg = HllConfig::new(p, 6);
+        let a = filled(cfg, 5000, &mut rng);
+        let b = filled(cfg, 5000, &mut rng);
+        let n = if p == 8 { 20_000u64 } else { 5_000 };
+        let r = bench.run(|| {
+            let mut acc = 0u32;
+            for _ in 0..n {
+                let s = pair_stats(&a, &b);
+                acc ^= s.c[4][0];
+            }
+            acc
+        });
+        table.row(&[
+            format!("pair_stats p{p}"),
+            n.to_string(),
+            format!("{:.3}s", r.mean_s),
+            format!("{:.2e}/s", r.throughput(n)),
+        ]);
+
+        let n = if p == 8 { 2_000u64 } else { 500 };
+        let r = bench.run(|| {
+            let mut acc = 0.0;
+            for _ in 0..n {
+                acc +=
+                    mle_intersect(&a, &b, &MleOptions::default()).intersection;
+            }
+            acc
+        });
+        table.row(&[
+            format!("mle_intersect p{p}"),
+            n.to_string(),
+            format!("{:.3}s", r.mean_s),
+            format!("{:.2e}/s", r.throughput(n)),
+        ]);
+
+        let n = if p == 8 { 20_000u64 } else { 5_000 };
+        let r = bench.run(|| {
+            let mut acc = 0.0;
+            for _ in 0..n {
+                acc += inclusion_exclusion(&a, &b).intersection;
+            }
+            acc
+        });
+        table.row(&[
+            format!("inclusion_exclusion p{p}"),
+            n.to_string(),
+            format!("{:.3}s", r.mean_s),
+            format!("{:.2e}/s", r.throughput(n)),
+        ]);
+    }
+
+    table.print();
+}

@@ -1,0 +1,145 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Benches are `harness = false` binaries that use [`Bench`] for warmup +
+//! repeated timing and print paper-style tables with [`Table`]. Output is
+//! plain text so `cargo bench | tee bench_output.txt` captures everything.
+
+use std::time::Instant;
+
+/// Timing harness: warmups then measured iterations, reporting a summary.
+pub struct Bench {
+    warmup: usize,
+    iters: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn per_item(&self, items: u64) -> f64 {
+        self.mean_s / items.max(1) as f64
+    }
+
+    pub fn throughput(&self, items: u64) -> f64 {
+        items as f64 / self.mean_s
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        assert!(iters > 0);
+        Self { warmup, iters }
+    }
+
+    /// Time `f` (its return value is black-boxed to keep the work alive).
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let start = Instant::now();
+            std::hint::black_box(f());
+            times.push(start.elapsed().as_secs_f64());
+        }
+        let sum: f64 = times.iter().sum();
+        BenchResult {
+            mean_s: sum / times.len() as f64,
+            min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_s: times.iter().cloned().fold(0.0, f64::max),
+            iters: self.iters,
+        }
+    }
+}
+
+/// Fixed-width text table writer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("{c:>w$}  ", w = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Standard preamble printed by each bench binary.
+pub fn bench_header(id: &str, paper_ref: &str, workload: &str) {
+    println!("=== {id} ===");
+    println!("paper: {paper_ref}");
+    println!("workload: {workload}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let b = Bench::new(1, 3);
+        let r = b.run(|| {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s);
+        assert!(r.throughput(1000) > 0.0);
+    }
+
+    #[test]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || t.row(&["only-one".into()]),
+        ));
+        assert!(result.is_err());
+    }
+}

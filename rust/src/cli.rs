@@ -1,0 +1,154 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `degreesketch <subcommand> [--flag value]... [--bool-flag]...`
+//! plus `--config file` / `--set section.key=value` feeding [`crate::config`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments: subcommand + flag map + positional args.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+/// Flags that take no value.
+const BOOL_FLAGS: &[&str] = &[
+    "exact", "metrics", "help", "discard-dominated", "write", "quiet",
+];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if BOOL_FLAGS.contains(&name) {
+                    args.bools.push(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .with_context(|| format!("--{name} needs a value"))?;
+                    if name == "set" {
+                        // repeatable: accumulate with \n separator
+                        let prev = args.flags.remove("set").unwrap_or_default();
+                        let joined = if prev.is_empty() {
+                            val.clone()
+                        } else {
+                            format!("{prev}\n{val}")
+                        };
+                        args.flags.insert("set".into(), joined);
+                    } else {
+                        args.flags.insert(name.to_string(), val.clone());
+                    }
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad number {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.get_u64(name, default as u64)? as usize)
+    }
+
+    pub fn get_u8(&self, name: &str, default: u8) -> Result<u8> {
+        let v = self.get_u64(name, default as u64)?;
+        if v > 255 {
+            bail!("--{name}: {v} out of range");
+        }
+        Ok(v as u8)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .with_context(|| format!("missing required --{name}"))
+    }
+
+    /// Error on unknown flags (everything present but never consumed).
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !consumed.iter().any(|c| c == k) {
+                bail!("unknown flag --{k} for `{}`", self.subcommand);
+            }
+        }
+        for b in &self.bools {
+            if !consumed.iter().any(|c| c == b) {
+                bail!("unknown flag --{b} for `{}`", self.subcommand);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn basic_parsing() {
+        let a = parse("anf --spec rmat:16:16 --ranks 8 --exact pos1");
+        assert_eq!(a.subcommand, "anf");
+        assert_eq!(a.get("spec"), Some("rmat:16:16"));
+        assert_eq!(a.get_u64("ranks", 1).unwrap(), 8);
+        assert!(a.has("exact"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn repeatable_set() {
+        let a = parse("run --set a.b=1 --set c.d=2");
+        assert_eq!(a.get("set"), Some("a.b=1\nc.d=2"));
+    }
+
+    #[test]
+    fn unknown_flags_error() {
+        let a = parse("anf --bogus 3");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let argv = vec!["x".to_string(), "--ranks".to_string()];
+        assert!(Args::parse(&argv).is_err());
+    }
+}

@@ -1,0 +1,244 @@
+//! A YGM-like asynchronous communication substrate, simulated in-process.
+//!
+//! The paper (§2) assumes each processor `P` has buffered send/receive
+//! queues `S[P]`, `R[P]` and alternates between **Send**, **Receive** and
+//! **Computation contexts**, with YGM (Priest et al. 2019) managing
+//! buffering and context switching opaquely. This module provides the same
+//! surface for `|P|` *logical ranks* inside one process:
+//!
+//! * [`Actor`] — one per rank: a `seed` computation context (reads the
+//!   rank's substream σ_P and pushes initial messages), an `on_message`
+//!   receive context, and an `on_idle` hook invoked at global quiescence
+//!   (used e.g. to flush partially filled PJRT batches).
+//! * [`Outbox`] — per-destination buffered sends (YGM's send queues).
+//! * Two schedulers with identical semantics:
+//!   [`run_sequential`] — deterministic round-robin used by tests and
+//!   accuracy experiments; [`run_threaded`] — one OS thread per rank with
+//!   quiescence detection, used by the scaling figures (4–6).
+//!
+//! REDUCE (global sums / top-k heap merges) happens **between** runs, on
+//! the actor states the schedulers hand back — matching the paper's
+//! "REDUCE operations occur between passes over σ".
+
+mod outbox;
+mod sequential;
+mod threaded;
+
+pub use outbox::Outbox;
+pub use sequential::run_sequential;
+pub use threaded::run_threaded;
+
+/// Statistics of one communication epoch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommStats {
+    /// Application messages delivered.
+    pub messages: u64,
+    /// Number of batch flushes (channel sends / queue transfers).
+    pub flushes: u64,
+    /// Global idle rounds executed before quiescence.
+    pub idle_rounds: u64,
+}
+
+/// A logical processor: per-rank state plus the three contexts of the
+/// paper's algorithm listings.
+pub trait Actor: Send {
+    type Msg: Send + 'static;
+
+    /// Computation context: read the local substream and push messages.
+    fn seed(&mut self, out: &mut Outbox<Self::Msg>);
+
+    /// Receive context: handle one delivered message (may send more).
+    fn on_message(&mut self, msg: Self::Msg, out: &mut Outbox<Self::Msg>);
+
+    /// Called once per global quiescence round; may send messages (which
+    /// trigger another round). Default: nothing.
+    fn on_idle(&mut self, _out: &mut Outbox<Self::Msg>) {}
+}
+
+/// Scheduler selection for an epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Deterministic single-threaded round-robin.
+    #[default]
+    Sequential,
+    /// One OS thread per rank.
+    Threaded,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "seq" | "sequential" => Some(Self::Sequential),
+            "threads" | "threaded" => Some(Self::Threaded),
+            _ => None,
+        }
+    }
+}
+
+/// Run one epoch (seed → message storm → idle rounds → quiescence) on the
+/// chosen backend. Actors are mutated in place; stats are returned.
+pub fn run_epoch<A: Actor + 'static>(
+    backend: Backend,
+    actors: &mut Vec<A>,
+) -> CommStats {
+    match backend {
+        Backend::Sequential => run_sequential(actors),
+        Backend::Threaded => {
+            let owned = std::mem::take(actors);
+            let (mut back, stats) = run_threaded(owned);
+            std::mem::swap(actors, &mut back);
+            stats
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Token-passing actor: passes a counter around the ring `hops` times.
+    struct Ring {
+        rank: usize,
+        ranks: usize,
+        hops: u64,
+        received: u64,
+    }
+
+    impl Actor for Ring {
+        type Msg = u64;
+
+        fn seed(&mut self, out: &mut Outbox<u64>) {
+            if self.rank == 0 {
+                out.send((self.rank + 1) % self.ranks, self.hops);
+            }
+        }
+
+        fn on_message(&mut self, remaining: u64, out: &mut Outbox<u64>) {
+            self.received += 1;
+            if remaining > 1 {
+                out.send((self.rank + 1) % self.ranks, remaining - 1);
+            }
+        }
+    }
+
+    fn ring(ranks: usize, hops: u64) -> Vec<Ring> {
+        (0..ranks)
+            .map(|rank| Ring {
+                rank,
+                ranks,
+                hops,
+                received: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ring_token_sequential_and_threaded_agree() {
+        for backend in [Backend::Sequential, Backend::Threaded] {
+            let mut actors = ring(5, 100);
+            let stats = run_epoch(backend, &mut actors);
+            assert_eq!(stats.messages, 100, "{backend:?}");
+            let total: u64 = actors.iter().map(|a| a.received).sum();
+            assert_eq!(total, 100, "{backend:?}");
+        }
+    }
+
+    /// All-to-all flood with fan-out chains.
+    struct Flood {
+        rank: usize,
+        ranks: usize,
+        got: Vec<u64>,
+    }
+
+    impl Actor for Flood {
+        type Msg = (usize, u64);
+
+        fn seed(&mut self, out: &mut Outbox<(usize, u64)>) {
+            for to in 0..self.ranks {
+                out.send(to, (2, (self.rank * 1000 + to) as u64));
+            }
+        }
+
+        fn on_message(&mut self, (depth, val): (usize, u64), out: &mut Outbox<(usize, u64)>) {
+            self.got.push(val);
+            if depth > 0 {
+                // chain: forward once to a fixed peer
+                out.send((self.rank + 1) % self.ranks, (depth - 1, val + 1));
+            }
+        }
+    }
+
+    #[test]
+    fn flood_chains_complete_on_both_backends() {
+        for backend in [Backend::Sequential, Backend::Threaded] {
+            let mut actors: Vec<Flood> = (0..4)
+                .map(|rank| Flood {
+                    rank,
+                    ranks: 4,
+                    got: Vec::new(),
+                })
+                .collect();
+            let stats = run_epoch(backend, &mut actors);
+            // 16 seeds, each chains 2 more: 48 total deliveries
+            assert_eq!(stats.messages, 48, "{backend:?}");
+            let total: usize = actors.iter().map(|a| a.got.len()).sum();
+            assert_eq!(total, 48);
+        }
+    }
+
+    /// Idle-hook actor: sends one message per idle round, twice.
+    struct Idler {
+        rank: usize,
+        idle_calls: u64,
+        received: u64,
+    }
+
+    impl Actor for Idler {
+        type Msg = ();
+
+        fn seed(&mut self, _out: &mut Outbox<()>) {}
+
+        fn on_message(&mut self, _: (), _out: &mut Outbox<()>) {
+            self.received += 1;
+        }
+
+        fn on_idle(&mut self, out: &mut Outbox<()>) {
+            self.idle_calls += 1;
+            if self.idle_calls <= 2 && self.rank == 0 {
+                out.send(1, ());
+            }
+        }
+    }
+
+    #[test]
+    fn idle_rounds_flush_deferred_work() {
+        for backend in [Backend::Sequential, Backend::Threaded] {
+            let mut actors: Vec<Idler> = (0..3)
+                .map(|rank| Idler {
+                    rank,
+                    idle_calls: 0,
+                    received: 0,
+                })
+                .collect();
+            let stats = run_epoch(backend, &mut actors);
+            assert_eq!(actors[1].received, 2, "{backend:?}");
+            assert!(stats.idle_rounds >= 2, "{backend:?}: {stats:?}");
+        }
+    }
+
+    #[test]
+    fn sequential_is_deterministic() {
+        let run = || {
+            let mut actors: Vec<Flood> = (0..4)
+                .map(|rank| Flood {
+                    rank,
+                    ranks: 4,
+                    got: Vec::new(),
+                })
+                .collect();
+            run_sequential(&mut actors);
+            actors.into_iter().map(|a| a.got).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,98 @@
+//! Per-destination buffered send queues — the `S[P]` of the paper.
+
+/// Buffered sends from one rank. The scheduler drains it after each
+/// context runs; the threaded backend additionally flushes buffers that
+/// exceed [`Outbox::flush_threshold`] mid-context to bound memory.
+pub struct Outbox<M> {
+    bufs: Vec<Vec<M>>,
+    sent: u64,
+    flush_threshold: usize,
+    /// Destinations whose buffer crossed the threshold (threaded backend
+    /// drains these eagerly).
+    hot: Vec<usize>,
+}
+
+impl<M> Outbox<M> {
+    pub(crate) fn new(ranks: usize, flush_threshold: usize) -> Self {
+        Self {
+            bufs: (0..ranks).map(|_| Vec::new()).collect(),
+            sent: 0,
+            flush_threshold,
+            hot: Vec::new(),
+        }
+    }
+
+    /// Number of ranks addressable from this outbox.
+    pub fn num_ranks(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Queue `msg` for delivery to `to`.
+    #[inline]
+    pub fn send(&mut self, to: usize, msg: M) {
+        let buf = &mut self.bufs[to];
+        buf.push(msg);
+        self.sent += 1;
+        if buf.len() == self.flush_threshold {
+            self.hot.push(to);
+        }
+    }
+
+    /// Total messages ever queued through this outbox.
+    pub fn total_sent(&self) -> u64 {
+        self.sent
+    }
+
+    pub(crate) fn take_hot(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.hot)
+    }
+
+    pub(crate) fn take_buf(&mut self, to: usize) -> Vec<M> {
+        std::mem::take(&mut self.bufs[to])
+    }
+
+    /// Drain all buffers as `(destination, batch)` pairs.
+    pub(crate) fn drain_all(&mut self) -> Vec<(usize, Vec<M>)> {
+        self.hot.clear();
+        self.bufs
+            .iter_mut()
+            .enumerate()
+            .filter(|(_, b)| !b.is_empty())
+            .map(|(to, b)| (to, std::mem::take(b)))
+            .collect()
+    }
+
+    #[cfg(test)]
+    pub(crate) fn is_empty(&self) -> bool {
+        self.bufs.iter().all(|b| b.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_per_destination() {
+        let mut out: Outbox<u32> = Outbox::new(3, 1024);
+        out.send(0, 1);
+        out.send(2, 2);
+        out.send(2, 3);
+        assert_eq!(out.total_sent(), 3);
+        let drained = out.drain_all();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0], (0, vec![1]));
+        assert_eq!(drained[1], (2, vec![2, 3]));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn hot_marks_threshold_crossing() {
+        let mut out: Outbox<u32> = Outbox::new(2, 3);
+        for i in 0..3 {
+            out.send(1, i);
+        }
+        assert_eq!(out.take_hot(), vec![1]);
+        assert_eq!(out.take_buf(1).len(), 3);
+    }
+}

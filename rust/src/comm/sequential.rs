@@ -1,0 +1,65 @@
+//! Deterministic single-threaded scheduler: round-robin over ranks,
+//! mirroring the paper's pseudocode structure (drain `R[P]` per rank, loop
+//! to quiescence, then idle rounds).
+
+use std::collections::VecDeque;
+
+use super::{Actor, CommStats, Outbox};
+
+/// Run one epoch deterministically. Used by accuracy experiments and as
+/// the semantic reference for the threaded backend.
+pub fn run_sequential<A: Actor>(actors: &mut [A]) -> CommStats {
+    let ranks = actors.len();
+    assert!(ranks > 0);
+    let mut stats = CommStats::default();
+    let mut queues: Vec<VecDeque<A::Msg>> =
+        (0..ranks).map(|_| VecDeque::new()).collect();
+
+    // large threshold: sequential delivery needs no mid-context flushing
+    let mut outbox: Outbox<A::Msg> = Outbox::new(ranks, usize::MAX);
+
+    // Computation context (σ_P read) for every rank.
+    for (rank, actor) in actors.iter_mut().enumerate() {
+        let _ = rank;
+        actor.seed(&mut outbox);
+        drain(&mut outbox, &mut queues, &mut stats);
+    }
+
+    loop {
+        // message storm to quiescence
+        let mut progressed = true;
+        while progressed {
+            progressed = false;
+            for rank in 0..ranks {
+                while let Some(msg) = queues[rank].pop_front() {
+                    actors[rank].on_message(msg, &mut outbox);
+                    stats.messages += 1;
+                    progressed = true;
+                    drain(&mut outbox, &mut queues, &mut stats);
+                }
+            }
+        }
+        // global idle round
+        stats.idle_rounds += 1;
+        let before = outbox.total_sent();
+        for actor in actors.iter_mut() {
+            actor.on_idle(&mut outbox);
+            drain(&mut outbox, &mut queues, &mut stats);
+        }
+        if outbox.total_sent() == before {
+            break;
+        }
+    }
+    stats
+}
+
+fn drain<M>(
+    outbox: &mut Outbox<M>,
+    queues: &mut [VecDeque<M>],
+    stats: &mut CommStats,
+) {
+    for (to, batch) in outbox.drain_all() {
+        stats.flushes += 1;
+        queues[to].extend(batch);
+    }
+}

@@ -1,0 +1,178 @@
+//! Threaded scheduler: one OS thread per logical rank, mpsc channels as
+//! receive queues, and counter-based global quiescence detection — the
+//! in-process analogue of YGM's pseudo-asynchronous MPI engine.
+//!
+//! Termination protocol: an atomic `outstanding` counter tracks
+//! (a) messages queued-but-not-yet-handled and (b) ranks still running a
+//! context. It is incremented *at buffer time* (so buffered messages can
+//! never be invisible), and workers always flush their outbox before
+//! blocking. The driver waits for `outstanding == 0`, then runs global
+//! idle rounds (each rank's `on_idle` counts as a context) until an idle
+//! round sends nothing, then broadcasts Stop.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::{Actor, CommStats, Outbox};
+
+enum Packet<M> {
+    Batch(Vec<M>),
+    IdleProbe,
+    Stop,
+}
+
+struct Shared {
+    outstanding: AtomicI64,
+    delivered: AtomicU64,
+    flushes: AtomicU64,
+}
+
+/// Messages buffered per destination before an eager flush.
+const FLUSH_THRESHOLD: usize = 1024;
+
+/// Run one epoch on one thread per rank; returns the actors and stats.
+pub fn run_threaded<A: Actor + 'static>(actors: Vec<A>) -> (Vec<A>, CommStats) {
+    let ranks = actors.len();
+    assert!(ranks > 0);
+    let shared = Arc::new(Shared {
+        // one "context token" per rank for the seed phase
+        outstanding: AtomicI64::new(ranks as i64),
+        delivered: AtomicU64::new(0),
+        flushes: AtomicU64::new(0),
+    });
+
+    let mut senders: Vec<Sender<Packet<A::Msg>>> = Vec::with_capacity(ranks);
+    let mut receivers: Vec<Receiver<Packet<A::Msg>>> = Vec::with_capacity(ranks);
+    for _ in 0..ranks {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+
+    let mut handles = Vec::with_capacity(ranks);
+    for (rank, (mut actor, rx)) in
+        actors.into_iter().zip(receivers).enumerate().map(|(r, p)| (r, p))
+    {
+        let senders = senders.clone();
+        let shared = Arc::clone(&shared);
+        handles.push(std::thread::spawn(move || {
+            let _ = rank;
+            let mut outbox: Outbox<A::Msg> = Outbox::new(ranks, FLUSH_THRESHOLD);
+            let mut sent_base = 0u64;
+
+            // Seed context.
+            actor.seed(&mut outbox);
+            flush(&mut outbox, &mut sent_base, &senders, &shared, true);
+            shared.outstanding.fetch_sub(1, Ordering::AcqRel);
+
+            loop {
+                match rx.recv_timeout(Duration::from_micros(200)) {
+                    Ok(Packet::Batch(batch)) => {
+                        let n = batch.len() as i64;
+                        for msg in batch {
+                            actor.on_message(msg, &mut outbox);
+                            flush(&mut outbox, &mut sent_base, &senders, &shared, false);
+                        }
+                        shared.delivered.fetch_add(n as u64, Ordering::Relaxed);
+                        // flush before acknowledging, so our sends are
+                        // visible in `outstanding` before the decrement
+                        flush(&mut outbox, &mut sent_base, &senders, &shared, true);
+                        shared.outstanding.fetch_sub(n, Ordering::AcqRel);
+                    }
+                    Ok(Packet::IdleProbe) => {
+                        actor.on_idle(&mut outbox);
+                        flush(&mut outbox, &mut sent_base, &senders, &shared, true);
+                        shared.outstanding.fetch_sub(1, Ordering::AcqRel);
+                    }
+                    Ok(Packet::Stop) => break,
+                    Err(RecvTimeoutError::Timeout) => {
+                        flush(&mut outbox, &mut sent_base, &senders, &shared, true);
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            actor
+        }));
+    }
+
+    // Driver: wait for quiescence, run idle rounds, stop.
+    let mut idle_rounds = 0u64;
+    loop {
+        wait_quiescent(&shared);
+        idle_rounds += 1;
+        let before = shared.delivered.load(Ordering::SeqCst);
+        let outstanding_before = shared.outstanding.load(Ordering::SeqCst);
+        debug_assert_eq!(outstanding_before, 0);
+        shared
+            .outstanding
+            .fetch_add(ranks as i64, Ordering::AcqRel);
+        for tx in &senders {
+            tx.send(Packet::IdleProbe).expect("worker alive");
+        }
+        wait_quiescent(&shared);
+        if shared.delivered.load(Ordering::SeqCst) == before {
+            break;
+        }
+    }
+    for tx in &senders {
+        tx.send(Packet::Stop).expect("worker alive");
+    }
+    let actors: Vec<A> = handles
+        .into_iter()
+        .map(|h| h.join().expect("worker panicked"))
+        .collect();
+
+    let stats = CommStats {
+        messages: shared.delivered.load(Ordering::SeqCst),
+        flushes: shared.flushes.load(Ordering::SeqCst),
+        idle_rounds,
+    };
+    (actors, stats)
+}
+
+/// Move outbox contents into channels. `force`: flush everything;
+/// otherwise only buffers that crossed the threshold.
+fn flush<M>(
+    outbox: &mut Outbox<M>,
+    sent_base: &mut u64,
+    senders: &[Sender<Packet<M>>],
+    shared: &Shared,
+    force: bool,
+) {
+    // account newly queued messages in `outstanding` *before* moving them
+    let queued = outbox.total_sent();
+    if queued > *sent_base {
+        shared
+            .outstanding
+            .fetch_add((queued - *sent_base) as i64, Ordering::AcqRel);
+        *sent_base = queued;
+    }
+    if force {
+        for (to, batch) in outbox.drain_all() {
+            shared.flushes.fetch_add(1, Ordering::Relaxed);
+            senders[to].send(Packet::Batch(batch)).expect("receiver alive");
+        }
+    } else {
+        for to in outbox.take_hot() {
+            let batch = outbox.take_buf(to);
+            if !batch.is_empty() {
+                shared.flushes.fetch_add(1, Ordering::Relaxed);
+                senders[to].send(Packet::Batch(batch)).expect("receiver alive");
+            }
+        }
+    }
+}
+
+fn wait_quiescent(shared: &Shared) {
+    let mut spins = 0u32;
+    while shared.outstanding.load(Ordering::SeqCst) != 0 {
+        spins += 1;
+        if spins < 64 {
+            std::hint::spin_loop();
+        } else {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Configuration system: a TOML-subset file format plus CLI overrides.
+//!
+//! (serde/toml are unavailable offline, so we parse the subset we need:
+//! `[section]` headers, `key = value` pairs with string / integer / float /
+//! boolean values, `#` comments.) The CLI accepts `--config path` and any
+//! `--set section.key=value` overrides.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::Backend;
+use crate::coordinator::Partitioner;
+use crate::hll::Estimator;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Result<Value> {
+        let s = raw.trim();
+        if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+            return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+        }
+        if s == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if s == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        bail!("unparseable value {s:?} (strings need quotes)")
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A flat `section.key → value` map with typed getters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    bail!("line {}: malformed section {line:?}", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got {line:?}", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(
+                key,
+                Value::parse(v).with_context(|| format!("line {}", lineno + 1))?,
+            );
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text).with_context(|| path.display().to_string())
+    }
+
+    /// Apply a `section.key=value` override string (CLI `--set`).
+    pub fn set_override(&mut self, spec: &str) -> Result<()> {
+        let Some((k, v)) = spec.split_once('=') else {
+            bail!("override must be key=value, got {spec:?}");
+        };
+        self.values.insert(k.trim().to_string(), Value::parse(v)?);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn get_int(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn get_float(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    /// Typed convenience getters for the common coordinator knobs.
+    pub fn backend(&self) -> Result<Backend> {
+        let s = self.get_str("run.backend", "sequential");
+        Backend::parse(s).with_context(|| format!("bad run.backend {s:?}"))
+    }
+
+    pub fn partitioner(&self) -> Result<Partitioner> {
+        let s = self.get_str("run.partitioner", "round-robin");
+        Partitioner::parse(s).with_context(|| format!("bad run.partitioner {s:?}"))
+    }
+
+    pub fn estimator(&self) -> Result<Estimator> {
+        let s = self.get_str("hll.estimator", "ertl");
+        Estimator::parse(s).with_context(|| format!("bad hll.estimator {s:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# DegreeSketch run configuration
+[run]
+ranks = 8
+backend = "threads"   # or sequential
+partitioner = "hash"
+
+[hll]
+p = 12
+seed = 1234
+estimator = "beta"
+
+[triangles]
+k = 100
+discard_dominated = true
+lr = 0.35
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_int("run.ranks", 0), 8);
+        assert_eq!(c.get_str("run.backend", ""), "threads");
+        assert_eq!(c.get_int("hll.p", 0), 12);
+        assert!(c.get_bool("triangles.discard_dominated", false));
+        assert_eq!(c.get_float("triangles.lr", 0.0), 0.35);
+        assert_eq!(c.backend().unwrap(), Backend::Threaded);
+        assert!(matches!(
+            c.partitioner().unwrap(),
+            Partitioner::Hashed { .. }
+        ));
+        assert_eq!(c.estimator().unwrap(), Estimator::LogLogBeta);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_int("run.ranks", 4), 4);
+        assert_eq!(c.backend().unwrap(), Backend::Sequential);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set_override("run.ranks=16").unwrap();
+        c.set_override("hll.estimator=\"classic\"").unwrap();
+        assert_eq!(c.get_int("run.ranks", 0), 16);
+        assert_eq!(c.estimator().unwrap(), Estimator::Classic);
+        assert!(c.set_override("no-equals-sign").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unclosed\nx = 1").is_err());
+        assert!(Config::parse("justakey\n").is_err());
+        assert!(Config::parse("x = unquoted string\n").is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! The persistent query engine — DegreeSketch's "leave-behind" property.
+//!
+//! After accumulation, `D` is saved once and answers graph queries forever
+//! after without touching the edge stream: degree estimates, pairwise
+//! intersection (edge-local triangle) estimates, Jaccard similarity, and
+//! cardinalities of arbitrary adjacency-set unions — the "more general
+//! queries that can be phrased as unions and possibly an intersection of
+//! adjacency sets" of the paper's conclusion.
+//!
+//! On-disk layout (`save_dir`):
+//! ```text
+//! meta.txt          p seed ranks partitioner-name
+//! shard_<r>.bin     u32 count, then count × (u64 vertex, HLL blob)
+//! ```
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::CommStats;
+use crate::hll::{
+    mle_intersect, Estimator, Hll, HllConfig, IntersectionEstimate,
+    MleOptions,
+};
+
+use super::partition::Partitioner;
+use super::sketch::{DegreeSketch, Shard};
+
+/// A loaded (or freshly accumulated) DegreeSketch plus query methods.
+pub struct QueryEngine {
+    ds: DegreeSketch,
+    mle: MleOptions,
+    estimator: Estimator,
+}
+
+impl QueryEngine {
+    pub fn new(ds: DegreeSketch) -> Self {
+        Self {
+            ds,
+            mle: MleOptions::default(),
+            estimator: Estimator::default(),
+        }
+    }
+
+    pub fn sketch_data(&self) -> &DegreeSketch {
+        &self.ds
+    }
+
+    /// `|D[x]|` — degree estimate (None if x never appeared).
+    pub fn degree(&self, x: u64) -> Option<f64> {
+        self.ds.sketch(x).map(|s| s.estimate_with(self.estimator))
+    }
+
+    /// `|D̃[x] ∩ D̃[y]|` — edge-local triangle estimate for any vertex pair
+    /// (Eq. 10); also reports the union and domination status.
+    pub fn intersection(&self, x: u64, y: u64) -> Option<IntersectionEstimate> {
+        let a = self.ds.sketch(x)?;
+        let b = self.ds.sketch(y)?;
+        Some(mle_intersect(a, b, &self.mle))
+    }
+
+    /// Jaccard similarity of two adjacency sets — the paper's triangle
+    /// density (Figure 3).
+    pub fn jaccard(&self, x: u64, y: u64) -> Option<f64> {
+        self.intersection(x, y).map(|e| e.jaccard())
+    }
+
+    /// `|∪̃_i D[x_i]|` — cardinality of a union of adjacency sets, e.g.
+    /// "how many distinct accounts are adjacent to this suspect set?".
+    pub fn union_cardinality(&self, xs: &[u64]) -> Option<f64> {
+        let mut it = xs.iter().filter_map(|&x| self.ds.sketch(x));
+        let first = it.next()?;
+        let mut acc = first.clone();
+        for s in it {
+            acc.merge(s);
+        }
+        Some(acc.estimate_with(self.estimator))
+    }
+
+    /// Persist to a directory (created if needed).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let meta = format!(
+            "{} {} {} {}\n",
+            self.ds.config().p(),
+            self.ds.config().hasher().seed(),
+            self.ds.num_ranks(),
+            self.ds.partitioner().name(),
+        );
+        std::fs::write(dir.join("meta.txt"), meta)?;
+        for (rank, shard) in self.ds.shards().iter().enumerate() {
+            let f = File::create(dir.join(format!("shard_{rank}.bin")))?;
+            let mut w = BufWriter::with_capacity(1 << 20, f);
+            w.write_all(&(shard.len() as u32).to_le_bytes())?;
+            // deterministic order for reproducible files
+            let mut keys: Vec<u64> = shard.keys().copied().collect();
+            keys.sort_unstable();
+            for v in keys {
+                w.write_all(&v.to_le_bytes())?;
+                shard[&v].write_to(&mut w)?;
+            }
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Load a previously saved engine.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta = std::fs::read_to_string(dir.join("meta.txt"))
+            .with_context(|| format!("reading {}/meta.txt", dir.display()))?;
+        let parts: Vec<&str> = meta.split_whitespace().collect();
+        if parts.len() != 4 {
+            bail!("malformed meta.txt: {meta:?}");
+        }
+        let p: u8 = parts[0].parse().context("bad p")?;
+        let seed: u64 = parts[1].parse().context("bad seed")?;
+        let ranks: usize = parts[2].parse().context("bad ranks")?;
+        let partitioner = Partitioner::from_name(parts[3])
+            .with_context(|| format!("bad partitioner {:?}", parts[3]))?;
+        let config = HllConfig::new(p, seed);
+
+        let mut shards: Vec<Shard> = Vec::with_capacity(ranks);
+        for rank in 0..ranks {
+            let f = File::open(dir.join(format!("shard_{rank}.bin")))?;
+            let mut r = BufReader::with_capacity(1 << 20, f);
+            let mut count_buf = [0u8; 4];
+            r.read_exact(&mut count_buf)?;
+            let count = u32::from_le_bytes(count_buf) as usize;
+            let mut shard = HashMap::with_capacity(count);
+            for _ in 0..count {
+                let mut vbuf = [0u8; 8];
+                r.read_exact(&mut vbuf)?;
+                let v = u64::from_le_bytes(vbuf);
+                let h = Hll::read_from(&mut r)?;
+                if h.config() != &config {
+                    bail!("shard {rank}: sketch config mismatch for vertex {v}");
+                }
+                if partitioner.rank_of(v, ranks) != rank {
+                    bail!("shard {rank}: vertex {v} stored on wrong rank");
+                }
+                shard.insert(v, h);
+            }
+            shards.push(shard);
+        }
+        Ok(Self::new(DegreeSketch::from_parts(
+            config,
+            partitioner,
+            shards,
+            CommStats::default(),
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sketch::{accumulate_stream, AccumulateOptions};
+    use crate::graph::gen::karate;
+    use crate::graph::stream::MemoryStream;
+
+    fn engine() -> QueryEngine {
+        let stream = MemoryStream::new(karate::edges());
+        let ds = accumulate_stream(
+            &stream,
+            3,
+            HllConfig::new(12, 0xE0),
+            AccumulateOptions::default(),
+        );
+        QueryEngine::new(ds)
+    }
+
+    #[test]
+    fn degree_queries() {
+        let e = engine();
+        // vertex 33 (1-indexed 34) has degree 17
+        let d = e.degree(33).unwrap();
+        assert!((d - 17.0).abs() < 2.0, "{d}");
+        assert_eq!(e.degree(999), None);
+    }
+
+    #[test]
+    fn union_queries() {
+        let e = engine();
+        // union of the two hubs' adjacency covers most of the club
+        let u = e.union_cardinality(&[0, 33]).unwrap();
+        assert!(u > 25.0 && u < 40.0, "{u}");
+        assert_eq!(e.union_cardinality(&[777]), None);
+    }
+
+    #[test]
+    fn intersection_and_jaccard() {
+        let e = engine();
+        let est = e.intersection(0, 33).unwrap();
+        assert!(est.intersection >= 0.0);
+        let j = e.jaccard(0, 33).unwrap();
+        assert!((0.0..=1.0).contains(&j));
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let e = engine();
+        let dir = std::env::temp_dir().join("degreesketch_engine_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        e.save(&dir).unwrap();
+        let loaded = QueryEngine::load(&dir).unwrap();
+        assert_eq!(
+            loaded.sketch_data().num_vertices(),
+            e.sketch_data().num_vertices()
+        );
+        for (v, h) in e.sketch_data().iter() {
+            assert_eq!(loaded.sketch_data().sketch(v), Some(h), "vertex {v}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_corruption() {
+        let e = engine();
+        let dir = std::env::temp_dir().join("degreesketch_engine_corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        e.save(&dir).unwrap();
+        std::fs::write(dir.join("meta.txt"), "lol").unwrap();
+        assert!(QueryEngine::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

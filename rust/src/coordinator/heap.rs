@@ -1,0 +1,164 @@
+//! Bounded max-k heaps `H̃_k` (paper Algorithms 3–5) and their REDUCE.
+//!
+//! Each processor keeps the top-k scored items it has seen; the global
+//! result is the merge of all per-rank heaps ("REDUCE ... the creation of
+//! a global max heap", §2). Implemented as a size-k min-heap on score so
+//! insertion is `O(log k)` and eviction is the root.
+
+use std::collections::BinaryHeap;
+use std::cmp::Ordering;
+
+/// A score with total order (ties broken by the item's `Ord`, so results
+/// are deterministic across backends).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Entry<T> {
+    score: f64,
+    item: T,
+}
+
+impl<T: Eq> Eq for Entry<T> {}
+
+impl<T: Ord + Eq> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap via Reverse at usage sites; here: natural ascending
+        self.score
+            .partial_cmp(&other.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| self.item.cmp(&other.item))
+    }
+}
+
+impl<T: Ord + Eq> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Top-k tracker by f64 score (NaN scores are rejected).
+#[derive(Debug, Clone)]
+pub struct TopK<T: Ord + Eq + Clone> {
+    k: usize,
+    heap: BinaryHeap<std::cmp::Reverse<Entry<T>>>,
+}
+
+impl<T: Ord + Eq + Clone> TopK<T> {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            heap: BinaryHeap::with_capacity(k + 1),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// "Try to insert" (Alg. 4 line 16): keeps the item only if it beats
+    /// the current k-th score.
+    pub fn insert(&mut self, score: f64, item: T) {
+        if self.k == 0 || score.is_nan() {
+            return;
+        }
+        self.heap.push(std::cmp::Reverse(Entry { score, item }));
+        if self.heap.len() > self.k {
+            self.heap.pop();
+        }
+    }
+
+    /// REDUCE: merge another heap into this one.
+    pub fn merge(&mut self, other: &TopK<T>) {
+        for std::cmp::Reverse(e) in other.heap.iter() {
+            self.insert(e.score, e.item.clone());
+        }
+    }
+
+    /// Descending (score, item) list.
+    pub fn into_sorted_vec(self) -> Vec<(f64, T)> {
+        let mut v: Vec<(f64, T)> = self
+            .heap
+            .into_iter()
+            .map(|std::cmp::Reverse(e)| (e.score, e.item))
+            .collect();
+        v.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(Ordering::Equal)
+                .then_with(|| a.1.cmp(&b.1))
+        });
+        v
+    }
+
+    /// Smallest retained score (the admission threshold).
+    pub fn threshold(&self) -> Option<f64> {
+        self.heap.peek().map(|std::cmp::Reverse(e)| e.score)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_top_k() {
+        let mut h = TopK::new(3);
+        for (s, v) in [(1.0, 1u64), (5.0, 5), (3.0, 3), (2.0, 2), (4.0, 4)] {
+            h.insert(s, v);
+        }
+        let top = h.into_sorted_vec();
+        assert_eq!(
+            top,
+            vec![(5.0, 5), (4.0, 4), (3.0, 3)]
+        );
+    }
+
+    #[test]
+    fn merge_is_global_topk() {
+        let mut a = TopK::new(2);
+        let mut b = TopK::new(2);
+        a.insert(10.0, 1u64);
+        a.insert(1.0, 2);
+        b.insert(5.0, 3);
+        b.insert(7.0, 4);
+        a.merge(&b);
+        let top = a.into_sorted_vec();
+        assert_eq!(top, vec![(10.0, 1), (7.0, 4)]);
+    }
+
+    #[test]
+    fn ties_break_deterministically() {
+        let mut h = TopK::new(2);
+        h.insert(1.0, 30u64);
+        h.insert(1.0, 10);
+        h.insert(1.0, 20);
+        // larger items win ties (Entry orders by item after score)
+        let top = h.into_sorted_vec();
+        assert_eq!(top, vec![(1.0, 20), (1.0, 30)]);
+    }
+
+    #[test]
+    fn nan_rejected_zero_k_noop() {
+        let mut h = TopK::new(0);
+        h.insert(1.0, 1u64);
+        assert!(h.is_empty());
+        let mut h = TopK::new(2);
+        h.insert(f64::NAN, 1u64);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn threshold_tracks_kth() {
+        let mut h = TopK::new(2);
+        assert_eq!(h.threshold(), None);
+        h.insert(3.0, 1u64);
+        h.insert(9.0, 2);
+        h.insert(5.0, 3);
+        assert_eq!(h.threshold(), Some(5.0));
+    }
+}

@@ -1,0 +1,33 @@
+//! The DegreeSketch coordinator — the paper's system contribution.
+//!
+//! * [`partition`] — the vertex→processor mapping `f` (§2; round-robin as
+//!   in the paper's experiments, plus a hashed alternative).
+//! * [`sketch`] — the distributed `D` dictionary and **Algorithm 1**
+//!   (single-pass accumulation).
+//! * [`anf`] — **Algorithm 2**: local t-neighborhood estimation, the
+//!   distributed HyperANF generalization.
+//! * [`triangles`] — **Algorithms 3–5**: edge- and vertex-local triangle
+//!   count heavy hitters via sketch intersection.
+//! * [`heap`] — the bounded max-k heaps `H_k` and their REDUCE merge.
+//! * [`engine`] — persistence + the "leave-behind queryable data
+//!   structure": save/load an accumulated DegreeSketch and answer degree /
+//!   intersection / union queries without touching σ again.
+//! * [`server`] — a line-protocol TCP front end over the engine.
+
+pub mod anf;
+pub mod engine;
+pub mod heap;
+pub mod partition;
+pub mod server;
+pub mod sketch;
+pub mod triangles;
+
+pub use anf::{neighborhood_approximation, AnfResult};
+pub use engine::QueryEngine;
+pub use heap::TopK;
+pub use partition::Partitioner;
+pub use sketch::{accumulate, DegreeSketch};
+pub use triangles::{
+    edge_triangle_heavy_hitters, vertex_triangle_heavy_hitters,
+    IntersectBackend, TriangleOptions, TriangleResult,
+};

@@ -1,0 +1,96 @@
+//! The vertex partition `f : V → P` (paper §2).
+//!
+//! The paper treats partitioning as an external concern ("our algorithms
+//! are designed to work alongside any reasonable f") and uses simple
+//! round-robin assignment in its experiments (§5 "Hardware"). We provide
+//! that plus a seeded hash partition for skew resistance.
+
+use crate::hash::xxh64_u64;
+
+/// A cheap, cloneable vertex→rank mapping shared by every processor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partitioner {
+    /// `f(v) = v mod |P|` — the paper's experimental choice.
+    RoundRobin,
+    /// `f(v) = xxh64(v, seed) mod |P|` — destroys id-locality skew.
+    Hashed { seed: u64 },
+}
+
+impl Default for Partitioner {
+    fn default() -> Self {
+        Self::RoundRobin
+    }
+}
+
+impl Partitioner {
+    #[inline]
+    pub fn rank_of(&self, v: u64, ranks: usize) -> usize {
+        debug_assert!(ranks > 0);
+        match *self {
+            Self::RoundRobin => (v % ranks as u64) as usize,
+            Self::Hashed { seed } => (xxh64_u64(v, seed) % ranks as u64) as usize,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "round-robin" | "rr" => Some(Self::RoundRobin),
+            "hash" | "hashed" => Some(Self::Hashed { seed: 0x9E37 }),
+            _ => None,
+        }
+    }
+
+    /// Stable name for serialization.
+    pub fn name(&self) -> String {
+        match self {
+            Self::RoundRobin => "round-robin".into(),
+            Self::Hashed { seed } => format!("hashed:{seed}"),
+        }
+    }
+
+    /// Inverse of [`Partitioner::name`].
+    pub fn from_name(s: &str) -> Option<Self> {
+        if s == "round-robin" {
+            return Some(Self::RoundRobin);
+        }
+        if let Some(rest) = s.strip_prefix("hashed:") {
+            return rest.parse().ok().map(|seed| Self::Hashed { seed });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_covers_all_ranks() {
+        let p = Partitioner::RoundRobin;
+        let mut seen = vec![false; 7];
+        for v in 0..100u64 {
+            seen[p.rank_of(v, 7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn hashed_is_balanced() {
+        let p = Partitioner::Hashed { seed: 1 };
+        let ranks = 8;
+        let mut counts = vec![0usize; ranks];
+        for v in 0..80_000u64 {
+            counts[p.rank_of(v, ranks)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 1_000.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn name_round_trips() {
+        for p in [Partitioner::RoundRobin, Partitioner::Hashed { seed: 42 }] {
+            assert_eq!(Partitioner::from_name(&p.name()), Some(p));
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! TCP query server: a line protocol over the persistent [`QueryEngine`].
+//!
+//! This is the deployment face of the "leave-behind query engine": a
+//! saved DegreeSketch is loaded once and served to clients. Protocol
+//! (request → response, one line each):
+//!
+//! ```text
+//! DEG <x>              → <estimate> | NONE
+//! TRI <x> <y>          → <intersection> <union> <dominated:0|1> | NONE
+//! JACCARD <x> <y>      → <jaccard> | NONE
+//! UNION <x> [<y> ...]  → <estimate> | NONE
+//! STATS                → vertices=<n> ranks=<p> p=<p> mem=<bytes>
+//! QUIT                 → BYE (closes the connection)
+//! ```
+//!
+//! Unknown commands answer `ERR <reason>`. One thread per connection; the
+//! engine is shared read-only.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::hll::Domination;
+
+use super::engine::QueryEngine;
+
+/// A running server handle (listener thread spawns per-connection threads).
+pub struct QueryServer {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl QueryServer {
+    /// Bind and start serving. `addr` like `"127.0.0.1:0"` (0 = ephemeral).
+    pub fn start(engine: Arc<QueryEngine>, addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop = Arc::clone(&shutdown);
+        let handle = std::thread::spawn(move || {
+            let mut workers = Vec::new();
+            loop {
+                if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let engine = Arc::clone(&engine);
+                        workers.push(std::thread::spawn(move || {
+                            let _ = serve_connection(stream, &engine);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for w in workers {
+                let _ = w.join();
+            }
+        });
+        Ok(Self {
+            addr: local,
+            shutdown,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the listener thread.
+    pub fn stop(mut self) {
+        self.shutdown
+            .store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for QueryServer {
+    fn drop(&mut self) {
+        self.shutdown
+            .store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_connection(stream: TcpStream, engine: &QueryEngine) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let response = match respond(&line, engine) {
+            Response::Line(s) => s,
+            Response::Bye => {
+                writeln!(writer, "BYE")?;
+                break;
+            }
+        };
+        writeln!(writer, "{response}")?;
+    }
+    Ok(())
+}
+
+enum Response {
+    Line(String),
+    Bye,
+}
+
+fn respond(line: &str, engine: &QueryEngine) -> Response {
+    let mut it = line.split_whitespace();
+    let cmd = match it.next() {
+        Some(c) => c.to_ascii_uppercase(),
+        None => return Response::Line("ERR empty".into()),
+    };
+    let parse_ids = |it: std::str::SplitWhitespace| -> Result<Vec<u64>, String> {
+        it.map(|t| t.parse::<u64>().map_err(|_| format!("bad id {t:?}")))
+            .collect()
+    };
+    match cmd.as_str() {
+        "DEG" => match parse_ids(it) {
+            Ok(ids) if ids.len() == 1 => Response::Line(
+                engine
+                    .degree(ids[0])
+                    .map(|d| format!("{d:.3}"))
+                    .unwrap_or_else(|| "NONE".into()),
+            ),
+            Ok(_) => Response::Line("ERR usage: DEG <x>".into()),
+            Err(e) => Response::Line(format!("ERR {e}")),
+        },
+        "TRI" => match parse_ids(it) {
+            Ok(ids) if ids.len() == 2 => {
+                match engine.intersection(ids[0], ids[1]) {
+                    Some(est) => Response::Line(format!(
+                        "{:.3} {:.3} {}",
+                        est.intersection,
+                        est.union,
+                        u8::from(est.domination != Domination::None)
+                    )),
+                    None => Response::Line("NONE".into()),
+                }
+            }
+            Ok(_) => Response::Line("ERR usage: TRI <x> <y>".into()),
+            Err(e) => Response::Line(format!("ERR {e}")),
+        },
+        "JACCARD" => match parse_ids(it) {
+            Ok(ids) if ids.len() == 2 => Response::Line(
+                engine
+                    .jaccard(ids[0], ids[1])
+                    .map(|j| format!("{j:.6}"))
+                    .unwrap_or_else(|| "NONE".into()),
+            ),
+            Ok(_) => Response::Line("ERR usage: JACCARD <x> <y>".into()),
+            Err(e) => Response::Line(format!("ERR {e}")),
+        },
+        "UNION" => match parse_ids(it) {
+            Ok(ids) if !ids.is_empty() => Response::Line(
+                engine
+                    .union_cardinality(&ids)
+                    .map(|u| format!("{u:.3}"))
+                    .unwrap_or_else(|| "NONE".into()),
+            ),
+            Ok(_) => Response::Line("ERR usage: UNION <x> [<y> ...]".into()),
+            Err(e) => Response::Line(format!("ERR {e}")),
+        },
+        "STATS" => {
+            let ds = engine.sketch_data();
+            Response::Line(format!(
+                "vertices={} ranks={} p={} mem={}",
+                ds.num_vertices(),
+                ds.num_ranks(),
+                ds.config().p(),
+                ds.memory_bytes()
+            ))
+        }
+        "QUIT" => Response::Bye,
+        other => Response::Line(format!("ERR unknown command {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sketch::{accumulate_stream, AccumulateOptions};
+    use crate::graph::gen::karate;
+    use crate::graph::stream::MemoryStream;
+    use crate::hll::HllConfig;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn test_engine() -> Arc<QueryEngine> {
+        let stream = MemoryStream::new(karate::edges());
+        let ds = accumulate_stream(
+            &stream,
+            2,
+            HllConfig::new(12, 0x5E),
+            AccumulateOptions::default(),
+        );
+        Arc::new(QueryEngine::new(ds))
+    }
+
+    fn ask(addr: std::net::SocketAddr, lines: &[&str]) -> Vec<String> {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut out = Vec::new();
+        for l in lines {
+            writeln!(w, "{l}").unwrap();
+            let mut resp = String::new();
+            r.read_line(&mut resp).unwrap();
+            out.push(resp.trim().to_string());
+        }
+        out
+    }
+
+    #[test]
+    fn serves_queries_over_tcp() {
+        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let resp = ask(
+            addr,
+            &[
+                "DEG 33",
+                "DEG 999",
+                "TRI 0 33",
+                "JACCARD 0 1",
+                "UNION 0 33",
+                "STATS",
+                "NOPE",
+                "QUIT",
+            ],
+        );
+        let d: f64 = resp[0].parse().unwrap();
+        assert!((d - 17.0).abs() < 2.0, "{resp:?}");
+        assert_eq!(resp[1], "NONE");
+        assert_eq!(resp[2].split_whitespace().count(), 3);
+        let j: f64 = resp[3].parse().unwrap();
+        assert!((0.0..=1.0).contains(&j));
+        assert!(resp[4].parse::<f64>().unwrap() > 20.0);
+        assert!(resp[5].starts_with("vertices=34"));
+        assert!(resp[6].starts_with("ERR"));
+        assert_eq!(resp[7], "BYE");
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let resp = ask(addr, &["DEG 0", "QUIT"]);
+                    resp[0].parse::<f64>().unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let d = h.join().unwrap();
+            assert!((d - 16.0).abs() < 2.0);
+        }
+        server.stop();
+    }
+}

@@ -1,0 +1,571 @@
+//! **Algorithms 3–5**: edge- and vertex-local triangle count heavy hitters.
+//!
+//! The shared chassis (Algorithm 3): every processor reads its substream
+//! and forwards each edge `uv` as an EDGE message to `f(u)`. The owner
+//! responds with a SKETCH message carrying `D[u]` to `f(v)`, which
+//! estimates `T̃(uv) = |D̃[v] ∩ D̃[u]|` and updates its local counter `T̃`
+//! plus either a top-k heap of edges (**Algorithm 4**) or the per-vertex
+//! accumulators `T̃(x)` — forwarding an EST message to the other endpoint's
+//! owner (**Algorithm 5**). Final REDUCEs merge heaps and sum `T̃/3`.
+//!
+//! Intersection estimation is pluggable ([`IntersectBackend`]): the native
+//! joint-MLE, inclusion-exclusion (the paper's Figure 8 baseline), or a
+//! *batched* executor (the PJRT path — pairs buffer per rank and flush
+//! through the AOT-compiled artifact, with `on_idle` draining partial
+//! batches at quiescence).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::comm::{run_epoch, Actor, Backend, CommStats, Outbox};
+use crate::graph::stream::{EdgeStream, MemoryStream};
+use crate::graph::{canonical, Edge, VertexId};
+use crate::hll::{
+    inclusion_exclusion, mle_intersect, Domination, Hll,
+    IntersectionEstimate, MleOptions,
+};
+
+use super::heap::TopK;
+use super::sketch::DegreeSketch;
+
+/// A batched intersection executor (implemented by `runtime::PjrtIntersect`).
+pub trait BatchIntersect: Send + Sync {
+    /// Estimate |A∩B| (and friends) for each pair.
+    fn intersect(&self, pairs: &[(Hll, Hll)]) -> Vec<IntersectionEstimate>;
+}
+
+/// Which estimator the triangle algorithms use per sketch pair.
+#[derive(Clone)]
+pub enum IntersectBackend {
+    /// Native joint Poisson MLE (the default; mirrors the paper's §4.1).
+    Mle(MleOptions),
+    /// Inclusion-exclusion (Eq. 18) — the high-variance baseline.
+    InclusionExclusion,
+    /// Batched executor (PJRT artifact); `batch` pairs buffer per rank.
+    Batched {
+        batch: usize,
+        exec: Arc<dyn BatchIntersect>,
+    },
+}
+
+impl Default for IntersectBackend {
+    fn default() -> Self {
+        Self::Mle(MleOptions::default())
+    }
+}
+
+impl std::fmt::Debug for IntersectBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Mle(o) => write!(f, "Mle({o:?})"),
+            Self::InclusionExclusion => write!(f, "InclusionExclusion"),
+            Self::Batched { batch, .. } => write!(f, "Batched({batch})"),
+        }
+    }
+}
+
+/// Options shared by Algorithms 4 and 5.
+#[derive(Debug, Clone)]
+pub struct TriangleOptions {
+    pub backend: Backend,
+    /// Heavy-hitter count k.
+    pub k: usize,
+    pub intersect: IntersectBackend,
+    /// Appendix B mitigation: skip pairs where one sketch dominates the
+    /// other (their estimates are unreliable). Off by default, as in the
+    /// paper's main algorithms; the fig7 bench ablates it.
+    pub discard_dominated: bool,
+}
+
+impl Default for TriangleOptions {
+    fn default() -> Self {
+        Self {
+            backend: Backend::Sequential,
+            k: 100,
+            intersect: IntersectBackend::default(),
+            discard_dominated: false,
+        }
+    }
+}
+
+/// Output of Algorithms 4/5. `I` is the heavy-hitter identity: a canonical
+/// edge for Algorithm 4, a vertex id for Algorithm 5.
+#[derive(Debug, Clone)]
+pub struct TriangleResult<I> {
+    /// `T̃` — the global triangle count estimate (already divided by 3).
+    pub global_estimate: f64,
+    /// `H̃_k` — descending (estimate, item).
+    pub heavy_hitters: Vec<(f64, I)>,
+    /// Per-pair estimates count and Appendix-B domination tallies.
+    pub pairs_estimated: u64,
+    pub pairs_dominated: u64,
+    pub comm: CommStats,
+    /// Wall-clock of the estimation epoch (Figures 5/6).
+    pub seconds: f64,
+}
+
+enum TriMsg {
+    /// (x, y) delivered to f(x).
+    Edge(VertexId, VertexId),
+    /// (D[x], x, y) delivered to f(y).
+    Sketch(Hll, VertexId, VertexId),
+    /// (x, T̃(xy)) delivered to f(x) — Algorithm 5 only.
+    Est(VertexId, f64),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    EdgeHH,
+    VertexHH,
+}
+
+struct TriActor {
+    rank: usize,
+    ranks: usize,
+    mode: Mode,
+    ds: Arc<DegreeSketch>,
+    substream: MemoryStream,
+    opts: TriangleOptions,
+    // Alg 3 state
+    tri_sum: f64,
+    edge_heap: TopK<(VertexId, VertexId)>,
+    vertex_counts: HashMap<VertexId, f64>,
+    pairs_estimated: u64,
+    pairs_dominated: u64,
+    /// Deferred pairs for the batched backend: (x, y, D[x] copy).
+    pending: Vec<(VertexId, VertexId, Hll)>,
+}
+
+impl TriActor {
+    fn estimate_now(&self, a: &Hll, b: &Hll) -> IntersectionEstimate {
+        match &self.opts.intersect {
+            IntersectBackend::Mle(o) => mle_intersect(a, b, o),
+            IntersectBackend::InclusionExclusion => inclusion_exclusion(a, b),
+            IntersectBackend::Batched { .. } => unreachable!("batched path"),
+        }
+    }
+
+    /// Record T̃(xy) (and route EST for Algorithm 5).
+    fn record(
+        &mut self,
+        x: VertexId,
+        y: VertexId,
+        est: IntersectionEstimate,
+        out: &mut Outbox<TriMsg>,
+    ) {
+        self.pairs_estimated += 1;
+        if est.domination != Domination::None {
+            self.pairs_dominated += 1;
+            if self.opts.discard_dominated {
+                return;
+            }
+        }
+        let t_xy = est.intersection;
+        self.tri_sum += t_xy;
+        match self.mode {
+            Mode::EdgeHH => {
+                self.edge_heap.insert(t_xy, canonical((x, y)));
+            }
+            Mode::VertexHH => {
+                *self.vertex_counts.entry(y).or_insert(0.0) += t_xy;
+                out.send(
+                    self.ds.partitioner().rank_of(x, self.ranks),
+                    TriMsg::Est(x, t_xy),
+                );
+            }
+        }
+    }
+
+    fn flush_pending(&mut self, out: &mut Outbox<TriMsg>) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let IntersectBackend::Batched { exec, .. } = &self.opts.intersect
+        else {
+            unreachable!()
+        };
+        let exec = Arc::clone(exec);
+        let pending = std::mem::take(&mut self.pending);
+        // assemble (D[y], D[x]) pairs; y's sketch is rank-local
+        let pairs: Vec<(Hll, Hll)> = pending
+            .iter()
+            .map(|(_, y, skx)| {
+                let sky = self
+                    .ds
+                    .sketch(*y)
+                    .expect("endpoint with an edge must have a sketch")
+                    .clone();
+                (sky, skx.clone())
+            })
+            .collect();
+        let results = exec.intersect(&pairs);
+        assert_eq!(results.len(), pending.len());
+        for ((x, y, _), est) in pending.into_iter().zip(results) {
+            self.record(x, y, est, out);
+        }
+    }
+}
+
+impl Actor for TriActor {
+    type Msg = TriMsg;
+
+    fn seed(&mut self, out: &mut Outbox<TriMsg>) {
+        // Algorithm 3: forward each stream edge to f(u).
+        let ranks = self.ranks;
+        let part = self.ds.partitioner();
+        self.substream.for_each(&mut |(u, v)| {
+            if u == v {
+                return;
+            }
+            out.send(part.rank_of(u, ranks), TriMsg::Edge(u, v));
+        });
+        let _ = self.rank;
+    }
+
+    fn on_message(&mut self, msg: TriMsg, out: &mut Outbox<TriMsg>) {
+        match msg {
+            TriMsg::Edge(x, y) => {
+                // forward D[x] to f(y)
+                if let Some(sk) = self.ds.sketch(x) {
+                    out.send(
+                        self.ds.partitioner().rank_of(y, self.ranks),
+                        TriMsg::Sketch(sk.clone(), x, y),
+                    );
+                }
+            }
+            TriMsg::Sketch(skx, x, y) => {
+                if matches!(self.opts.intersect, IntersectBackend::Batched { .. }) {
+                    self.pending.push((x, y, skx));
+                    let IntersectBackend::Batched { batch, .. } =
+                        &self.opts.intersect
+                    else {
+                        unreachable!()
+                    };
+                    if self.pending.len() >= *batch {
+                        self.flush_pending(out);
+                    }
+                } else if let Some(sky) = self.ds.sketch(y) {
+                    let est = self.estimate_now(sky, &skx);
+                    self.record(x, y, est, out);
+                }
+            }
+            TriMsg::Est(x, t_xy) => {
+                *self.vertex_counts.entry(x).or_insert(0.0) += t_xy;
+            }
+        }
+    }
+
+    fn on_idle(&mut self, out: &mut Outbox<TriMsg>) {
+        if matches!(self.opts.intersect, IntersectBackend::Batched { .. }) {
+            self.flush_pending(out);
+        }
+    }
+}
+
+fn run_chassis(
+    ds: &Arc<DegreeSketch>,
+    substreams: &[MemoryStream],
+    opts: &TriangleOptions,
+    mode: Mode,
+) -> (Vec<TriActor>, CommStats, f64) {
+    assert_eq!(substreams.len(), ds.num_ranks());
+    let start = std::time::Instant::now();
+    let mut actors: Vec<TriActor> = substreams
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(rank, substream)| TriActor {
+            rank,
+            ranks: ds.num_ranks(),
+            mode,
+            ds: Arc::clone(ds),
+            substream,
+            opts: opts.clone(),
+            tri_sum: 0.0,
+            edge_heap: TopK::new(opts.k),
+            vertex_counts: HashMap::new(),
+            pairs_estimated: 0,
+            pairs_dominated: 0,
+            pending: Vec::new(),
+        })
+        .collect();
+    let comm = run_epoch(opts.backend, &mut actors);
+    let seconds = start.elapsed().as_secs_f64();
+    (actors, comm, seconds)
+}
+
+/// **Algorithm 4**: top-k edge-local triangle count heavy hitters.
+pub fn edge_triangle_heavy_hitters(
+    ds: &Arc<DegreeSketch>,
+    substreams: &[MemoryStream],
+    opts: &TriangleOptions,
+) -> TriangleResult<Edge> {
+    let (actors, comm, seconds) = run_chassis(ds, substreams, opts, Mode::EdgeHH);
+    // REDUCE: global T̃ and the global max-k heap.
+    let mut heap = TopK::new(opts.k);
+    let mut tri = 0.0;
+    let mut pairs_estimated = 0;
+    let mut pairs_dominated = 0;
+    for a in &actors {
+        heap.merge(&a.edge_heap);
+        tri += a.tri_sum;
+        pairs_estimated += a.pairs_estimated;
+        pairs_dominated += a.pairs_dominated;
+    }
+    TriangleResult {
+        global_estimate: tri / 3.0,
+        heavy_hitters: heap.into_sorted_vec(),
+        pairs_estimated,
+        pairs_dominated,
+        comm,
+        seconds,
+    }
+}
+
+/// **Algorithm 5**: top-k vertex-local triangle count heavy hitters.
+/// Reported counts are `T̃(x) = ½ Σ_{xy} T̃(xy)` (Eq. 12).
+pub fn vertex_triangle_heavy_hitters(
+    ds: &Arc<DegreeSketch>,
+    substreams: &[MemoryStream],
+    opts: &TriangleOptions,
+) -> TriangleResult<VertexId> {
+    let (actors, comm, seconds) =
+        run_chassis(ds, substreams, opts, Mode::VertexHH);
+    let mut heap = TopK::new(opts.k);
+    let mut tri = 0.0;
+    let mut pairs_estimated = 0;
+    let mut pairs_dominated = 0;
+    for a in &actors {
+        for (&v, &t2) in &a.vertex_counts {
+            heap.insert(t2 / 2.0, v);
+        }
+        tri += a.tri_sum;
+        pairs_estimated += a.pairs_estimated;
+        pairs_dominated += a.pairs_dominated;
+    }
+    TriangleResult {
+        global_estimate: tri / 3.0,
+        heavy_hitters: heap.into_sorted_vec(),
+        pairs_estimated,
+        pairs_dominated,
+        comm,
+        seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sketch::{accumulate_stream, AccumulateOptions};
+    use crate::graph::csr::Csr;
+    use crate::graph::exact;
+    use crate::graph::gen::{karate, GraphSpec};
+    use crate::hll::HllConfig;
+
+    fn setup(
+        edges: &[Edge],
+        ranks: usize,
+        p: u8,
+        backend: Backend,
+    ) -> (Arc<DegreeSketch>, Vec<MemoryStream>) {
+        let stream = MemoryStream::new(edges.to_vec());
+        let ds = accumulate_stream(
+            &stream,
+            ranks,
+            HllConfig::new(p, 0x7121),
+            AccumulateOptions {
+                backend,
+                ..Default::default()
+            },
+        );
+        (Arc::new(ds), stream.shard(ranks))
+    }
+
+    #[test]
+    fn vertex_counts_cover_both_endpoints() {
+        // Every stream edge must contribute to BOTH endpoint accumulators
+        // (direct at f(y), EST at f(x)): total vertex mass = 2·edge mass.
+        let edges = karate::edges();
+        let (ds, shards) = setup(&edges, 3, 12, Backend::Sequential);
+        let (actors, _, _) = run_chassis(
+            &ds,
+            &shards,
+            &TriangleOptions::default(),
+            Mode::VertexHH,
+        );
+        let vertex_mass: f64 = actors
+            .iter()
+            .flat_map(|a| a.vertex_counts.values())
+            .sum();
+        let edge_mass: f64 = actors.iter().map(|a| a.tri_sum).sum();
+        assert!((vertex_mass - 2.0 * edge_mass).abs() < 1e-6);
+    }
+
+    #[test]
+    fn karate_edge_heavy_hitters_mostly_real() {
+        let edges = karate::edges();
+        let csr = Csr::from_edges(&edges);
+        let truth: HashMap<Edge, usize> = exact::edge_triangles(&csr)
+            .into_iter()
+            .map(|(u, v, c)| {
+                ((csr.original_id(u).min(csr.original_id(v)),
+                  csr.original_id(u).max(csr.original_id(v))), c)
+            })
+            .collect();
+        let (ds, shards) = setup(&edges, 4, 12, Backend::Sequential);
+        let opts = TriangleOptions {
+            k: 10,
+            ..Default::default()
+        };
+        let res = edge_triangle_heavy_hitters(&ds, &shards, &opts);
+        assert_eq!(res.pairs_estimated, edges.len() as u64);
+        // top-10 returned edges should mostly have high true counts
+        let mut true_counts: Vec<usize> = truth.values().copied().collect();
+        true_counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top10_floor = true_counts[9];
+        let hits = res
+            .heavy_hitters
+            .iter()
+            .filter(|(_, e)| truth[e] >= top10_floor.saturating_sub(1))
+            .count();
+        assert!(hits >= 5, "only {hits} of top-10 are near-true HHs");
+        // global estimate in the right ballpark (45 triangles)
+        assert!(
+            res.global_estimate > 15.0 && res.global_estimate < 135.0,
+            "global {}",
+            res.global_estimate
+        );
+    }
+
+    #[test]
+    fn karate_vertex_heavy_hitters_find_hubs() {
+        let edges = karate::edges();
+        let csr = Csr::from_edges(&edges);
+        let vt = exact::vertex_triangles(&csr);
+        let (ds, shards) = setup(&edges, 4, 12, Backend::Sequential);
+        let opts = TriangleOptions {
+            k: 5,
+            ..Default::default()
+        };
+        let res = vertex_triangle_heavy_hitters(&ds, &shards, &opts);
+        // true top-5 vertices by triangle count
+        let mut ranked: Vec<(usize, u32)> = vt
+            .iter()
+            .enumerate()
+            .map(|(v, &t)| (t, v as u32))
+            .collect();
+        ranked.sort_unstable_by(|a, b| b.cmp(a));
+        let true_top: std::collections::HashSet<u64> = ranked[..5]
+            .iter()
+            .map(|&(_, v)| csr.original_id(v))
+            .collect();
+        let found = res
+            .heavy_hitters
+            .iter()
+            .filter(|(_, v)| true_top.contains(v))
+            .count();
+        assert!(found >= 3, "found only {found} of the true top-5");
+    }
+
+    #[test]
+    fn backends_agree_on_global_estimate() {
+        let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(2);
+        let (ds_a, sh_a) = setup(&edges, 3, 10, Backend::Sequential);
+        let (ds_b, sh_b) = setup(&edges, 3, 10, Backend::Threaded);
+        let opts = TriangleOptions {
+            k: 20,
+            ..Default::default()
+        };
+        let a = edge_triangle_heavy_hitters(&ds_a, &sh_a, &opts);
+        let b = edge_triangle_heavy_hitters(&ds_b, &sh_b, &opts);
+        assert!((a.global_estimate - b.global_estimate).abs() < 1e-9);
+        assert_eq!(a.heavy_hitters.len(), b.heavy_hitters.len());
+        // same estimates per returned edge (identical sketches both ways)
+        let to_map = |r: &TriangleResult<Edge>| -> HashMap<Edge, u64> {
+            r.heavy_hitters
+                .iter()
+                .map(|&(s, e)| (e, s.to_bits()))
+                .collect()
+        };
+        assert_eq!(to_map(&a), to_map(&b));
+    }
+
+    #[test]
+    fn batched_backend_matches_inline_mle() {
+        struct NativeBatch;
+        impl BatchIntersect for NativeBatch {
+            fn intersect(&self, pairs: &[(Hll, Hll)]) -> Vec<IntersectionEstimate> {
+                pairs
+                    .iter()
+                    .map(|(a, b)| mle_intersect(a, b, &MleOptions::default()))
+                    .collect()
+            }
+        }
+        let edges = karate::edges();
+        let (ds, shards) = setup(&edges, 2, 10, Backend::Sequential);
+        let inline = edge_triangle_heavy_hitters(
+            &ds,
+            &shards,
+            &TriangleOptions {
+                k: 10,
+                ..Default::default()
+            },
+        );
+        let batched = edge_triangle_heavy_hitters(
+            &ds,
+            &shards,
+            &TriangleOptions {
+                k: 10,
+                intersect: IntersectBackend::Batched {
+                    batch: 7, // deliberately not a divisor: exercises on_idle
+                    exec: Arc::new(NativeBatch),
+                },
+                ..Default::default()
+            },
+        );
+        assert!(
+            (inline.global_estimate - batched.global_estimate).abs() < 1e-9
+        );
+        assert_eq!(inline.pairs_estimated, batched.pairs_estimated);
+    }
+
+    #[test]
+    fn inclusion_exclusion_backend_runs() {
+        let edges = karate::edges();
+        let (ds, shards) = setup(&edges, 2, 12, Backend::Sequential);
+        let res = edge_triangle_heavy_hitters(
+            &ds,
+            &shards,
+            &TriangleOptions {
+                k: 10,
+                intersect: IntersectBackend::InclusionExclusion,
+                ..Default::default()
+            },
+        );
+        assert_eq!(res.pairs_estimated, edges.len() as u64);
+        assert!(res.global_estimate >= 0.0);
+    }
+
+    #[test]
+    fn discard_dominated_reduces_pairs() {
+        // Huge hub vs degree-1 leaves: D[0] has ~50k inserts so every
+        // register sits near log2(50k/256) ≈ 7.6, while each leaf sketch
+        // has a single small register — the hub (register-wise) dominates
+        // almost every leaf (Appendix B's |A| >> |B| regime).
+        let edges: Vec<Edge> = (1..8_000u64).map(|v| (0, v)).collect();
+        let (ds, shards) = setup(&edges, 2, 8, Backend::Sequential);
+        let res = edge_triangle_heavy_hitters(
+            &ds,
+            &shards,
+            &TriangleOptions {
+                k: 10,
+                discard_dominated: true,
+                ..Default::default()
+            },
+        );
+        assert!(
+            res.pairs_dominated > 0,
+            "star graph must produce dominations"
+        );
+    }
+}

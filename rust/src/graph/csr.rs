@@ -1,0 +1,216 @@
+//! Compressed sparse row adjacency — the in-memory view used by exact
+//! baselines (the paper's ground-truth computations) and by tests.
+//!
+//! Construction mirrors the paper's data hygiene (§5 "Graphs"): input
+//! edges are cast as undirected, and self-loops and repeated edges are
+//! dropped. Vertex ids are compacted to `0..n`; the original ids are kept
+//! for reporting.
+
+use std::collections::HashMap;
+
+use super::stream::EdgeStream;
+use super::{Edge, VertexId};
+
+/// Immutable undirected simple graph in CSR form.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    /// Offsets into `adj`, length n+1.
+    offsets: Vec<usize>,
+    /// Concatenated sorted neighbor lists (compact ids).
+    adj: Vec<u32>,
+    /// Compact id -> original id.
+    vertex_ids: Vec<VertexId>,
+    /// Original id -> compact id.
+    index: HashMap<VertexId, u32>,
+    /// Number of undirected edges after dedup.
+    num_edges: usize,
+}
+
+impl Csr {
+    /// Build from an edge stream (one pass), dropping self-loops and
+    /// duplicate edges, ignoring direction.
+    pub fn from_stream(stream: &dyn EdgeStream) -> Self {
+        Self::from_edges_impl(&stream.collect_edges())
+    }
+
+    /// Build from an edge slice.
+    pub fn from_edges(edges: &[Edge]) -> Self {
+        Self::from_edges_impl(edges)
+    }
+
+    fn from_edges_impl(raw: &[Edge]) -> Self {
+        // compact ids in first-seen order (deterministic)
+        let mut index: HashMap<VertexId, u32> = HashMap::new();
+        let mut vertex_ids: Vec<VertexId> = Vec::new();
+        let intern = |id: VertexId,
+                          index: &mut HashMap<VertexId, u32>,
+                          vertex_ids: &mut Vec<VertexId>| {
+            *index.entry(id).or_insert_with(|| {
+                vertex_ids.push(id);
+                (vertex_ids.len() - 1) as u32
+            })
+        };
+        let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(raw.len());
+        for &(u, v) in raw {
+            if u == v {
+                continue;
+            }
+            let cu = intern(u, &mut index, &mut vertex_ids);
+            let cv = intern(v, &mut index, &mut vertex_ids);
+            pairs.push((cu.min(cv), cu.max(cv)));
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        let n = vertex_ids.len();
+        let num_edges = pairs.len();
+
+        let mut degree = vec![0usize; n];
+        for &(u, v) in &pairs {
+            degree[u as usize] += 1;
+            degree[v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + degree[i];
+        }
+        let mut adj = vec![0u32; offsets[n]];
+        let mut cursor = offsets.clone();
+        for &(u, v) in &pairs {
+            adj[cursor[u as usize]] = v;
+            cursor[u as usize] += 1;
+            adj[cursor[v as usize]] = u;
+            cursor[v as usize] += 1;
+        }
+        for i in 0..n {
+            adj[offsets[i]..offsets[i + 1]].sort_unstable();
+        }
+        Self {
+            offsets,
+            adj,
+            vertex_ids,
+            index,
+            num_edges,
+        }
+    }
+
+    /// Number of vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.vertex_ids.len()
+    }
+
+    /// Number of undirected edges (post dedup / self-loop removal).
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    /// Sorted neighbors of a compact vertex id.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.adj[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    /// Degree of a compact vertex id.
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        self.neighbors(v).len()
+    }
+
+    /// Original id of a compact id.
+    #[inline]
+    pub fn original_id(&self, v: u32) -> VertexId {
+        self.vertex_ids[v as usize]
+    }
+
+    /// Compact id of an original id, if present.
+    #[inline]
+    pub fn compact_id(&self, id: VertexId) -> Option<u32> {
+        self.index.get(&id).copied()
+    }
+
+    /// Whether the (undirected) edge u–v exists (compact ids).
+    #[inline]
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Iterate canonical (u < v, compact) edges.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.num_vertices() as u32).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .copied()
+                .filter(move |&v| u < v)
+                .map(move |v| (u, v))
+        })
+    }
+
+    /// Size of the sorted intersection of two neighbor lists — the common
+    /// neighbor count, i.e. the exact edge-local triangle count when u–v is
+    /// an edge (paper Eq. 3).
+    pub fn common_neighbors(&self, u: u32, v: u32) -> usize {
+        let (a, b) = (self.neighbors(u), self.neighbors(v));
+        let (mut i, mut j, mut count) = (0usize, 0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    count += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let csr = Csr::from_edges(&[(1, 2), (2, 1), (1, 1), (2, 3), (2, 3)]);
+        assert_eq!(csr.num_vertices(), 3);
+        assert_eq!(csr.num_edges(), 2);
+        let v1 = csr.compact_id(1).unwrap();
+        let v2 = csr.compact_id(2).unwrap();
+        let v3 = csr.compact_id(3).unwrap();
+        assert!(csr.has_edge(v1, v2));
+        assert!(csr.has_edge(v2, v3));
+        assert!(!csr.has_edge(v1, v3));
+    }
+
+    #[test]
+    fn triangle_common_neighbors() {
+        // K4: every edge has 2 common neighbors.
+        let csr = Csr::from_edges(&[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        for (u, v) in csr.edges() {
+            assert_eq!(csr.common_neighbors(u, v), 2);
+        }
+    }
+
+    #[test]
+    fn neighbors_sorted_and_degrees_consistent() {
+        let csr = Csr::from_edges(&[(5, 1), (5, 9), (5, 3), (1, 9)]);
+        let v5 = csr.compact_id(5).unwrap();
+        let ns = csr.neighbors(v5);
+        assert!(ns.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(csr.degree(v5), 3);
+        let total: usize =
+            (0..csr.num_vertices() as u32).map(|v| csr.degree(v)).sum();
+        assert_eq!(total, 2 * csr.num_edges());
+    }
+
+    #[test]
+    fn edges_iterator_yields_each_once() {
+        let csr = Csr::from_edges(&[(0, 1), (1, 2), (2, 0), (2, 3)]);
+        let edges: Vec<_> = csr.edges().collect();
+        assert_eq!(edges.len(), csr.num_edges());
+        let mut dedup = edges.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), edges.len());
+    }
+}

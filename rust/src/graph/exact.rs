@@ -1,0 +1,171 @@
+//! Exact baselines: the ground truth for every accuracy figure.
+//!
+//! * [`neighborhood_sizes`] — exact `N(x, t)` for all `t ≤ k` by truncated
+//!   BFS from each source (paper Eq. 1/2; used by Figure 1's MRE).
+//! * [`edge_triangles`] — exact `T(xy)` for every edge by sorted adjacency
+//!   intersection (paper Eq. 3; Figures 2–3), the `O(m^{3/2})`-ish
+//!   algorithm class the paper cites as the exact competitor.
+//! * [`vertex_triangles`] / [`global_triangles`] — Eq. 4–6 derived counts.
+
+use std::collections::VecDeque;
+
+use super::csr::Csr;
+
+/// Exact local t-neighborhood sizes `N(x, t)` for all vertices and all
+/// `1 <= t <= max_t`, via BFS truncated at depth `max_t`.
+///
+/// Returns `out[x][t - 1] = N(x, t)` (compact vertex ids). `N(x, t)`
+/// counts vertices at distance `<= t` **excluding** x itself... actually
+/// per paper Eq. 1 it *includes* x (d(x,x) = 0 <= t), and our estimators
+/// approximate the same union-of-adjacency sets, so we follow Eq. 1 and
+/// include the source.
+pub fn neighborhood_sizes(csr: &Csr, max_t: usize) -> Vec<Vec<usize>> {
+    let n = csr.num_vertices();
+    let mut out = vec![vec![0usize; max_t]; n];
+    let mut dist = vec![u32::MAX; n];
+    let mut queue = VecDeque::new();
+    for src in 0..n as u32 {
+        // truncated BFS
+        dist[src as usize] = 0;
+        queue.push_back(src);
+        let mut counts = vec![0usize; max_t + 1]; // counts[d] = #at distance d
+        counts[0] = 1;
+        let mut touched = vec![src];
+        while let Some(u) = queue.pop_front() {
+            let du = dist[u as usize];
+            if du as usize >= max_t {
+                continue;
+            }
+            for &v in csr.neighbors(u) {
+                if dist[v as usize] == u32::MAX {
+                    dist[v as usize] = du + 1;
+                    counts[du as usize + 1] += 1;
+                    touched.push(v);
+                    queue.push_back(v);
+                }
+            }
+        }
+        let mut acc = counts[0];
+        for t in 1..=max_t {
+            acc += counts[t];
+            out[src as usize][t - 1] = acc;
+        }
+        for v in touched {
+            dist[v as usize] = u32::MAX;
+        }
+        queue.clear();
+    }
+    out
+}
+
+/// Exact global t-neighborhood `N(t) = Σ_x N(x, t)` (paper Eq. 2).
+pub fn global_neighborhood(per_vertex: &[Vec<usize>]) -> Vec<usize> {
+    if per_vertex.is_empty() {
+        return Vec::new();
+    }
+    let max_t = per_vertex[0].len();
+    let mut out = vec![0usize; max_t];
+    for row in per_vertex {
+        for (t, &c) in row.iter().enumerate() {
+            out[t] += c;
+        }
+    }
+    out
+}
+
+/// Exact edge-local triangle counts `T(xy)` for every canonical edge
+/// (paper Eq. 3). Returns `(u, v, count)` with compact ids, u < v.
+pub fn edge_triangles(csr: &Csr) -> Vec<(u32, u32, usize)> {
+    csr.edges()
+        .map(|(u, v)| (u, v, csr.common_neighbors(u, v)))
+        .collect()
+}
+
+/// Exact vertex-local triangle counts `T(x) = ½ Σ_{xy∈E} T(xy)`
+/// (paper Eq. 5), indexed by compact vertex id.
+pub fn vertex_triangles(csr: &Csr) -> Vec<usize> {
+    let mut t2 = vec![0usize; csr.num_vertices()]; // 2·T(x)
+    for (u, v, c) in edge_triangles(csr) {
+        t2[u as usize] += c;
+        t2[v as usize] += c;
+    }
+    t2.into_iter().map(|x| x / 2).collect()
+}
+
+/// Exact global triangle count `T = ⅓ Σ_{xy∈E} T(xy)` (paper Eq. 6).
+pub fn global_triangles(csr: &Csr) -> usize {
+    let total: usize = edge_triangles(csr).iter().map(|&(_, _, c)| c).sum();
+    debug_assert_eq!(total % 3, 0);
+    total / 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::karate;
+
+    #[test]
+    fn triangle_of_triangle_graph() {
+        let csr = Csr::from_edges(&[(0, 1), (1, 2), (2, 0)]);
+        assert_eq!(global_triangles(&csr), 1);
+        assert_eq!(vertex_triangles(&csr), vec![1, 1, 1]);
+        for (_, _, c) in edge_triangles(&csr) {
+            assert_eq!(c, 1);
+        }
+    }
+
+    #[test]
+    fn k5_counts() {
+        let mut edges = Vec::new();
+        for i in 0..5u64 {
+            for j in i + 1..5 {
+                edges.push((i, j));
+            }
+        }
+        let csr = Csr::from_edges(&edges);
+        // C(5,3) = 10 triangles; each vertex in C(4,2) = 6; each edge in 3.
+        assert_eq!(global_triangles(&csr), 10);
+        assert!(vertex_triangles(&csr).iter().all(|&t| t == 6));
+        assert!(edge_triangles(&csr).iter().all(|&(_, _, c)| c == 3));
+    }
+
+    #[test]
+    fn karate_has_45_triangles() {
+        // The canonical Zachary karate club value.
+        let csr = Csr::from_edges(&karate::edges());
+        assert_eq!(global_triangles(&csr), 45);
+    }
+
+    #[test]
+    fn path_graph_neighborhoods() {
+        // path 0-1-2-3-4
+        let csr = Csr::from_edges(&[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let ns = neighborhood_sizes(&csr, 4);
+        let v0 = csr.compact_id(0).unwrap() as usize;
+        let v2 = csr.compact_id(2).unwrap() as usize;
+        assert_eq!(ns[v0], vec![2, 3, 4, 5]);
+        assert_eq!(ns[v2], vec![3, 5, 5, 5]);
+    }
+
+    #[test]
+    fn neighborhood_saturates_at_component() {
+        // two disjoint triangles
+        let csr =
+            Csr::from_edges(&[(0, 1), (1, 2), (2, 0), (10, 11), (11, 12), (12, 10)]);
+        let ns = neighborhood_sizes(&csr, 3);
+        for row in &ns {
+            assert_eq!(row[0], 3);
+            assert_eq!(row[2], 3);
+        }
+        let g = global_neighborhood(&ns);
+        assert_eq!(g, vec![18, 18, 18]);
+    }
+
+    #[test]
+    fn vertex_counts_from_edge_counts() {
+        let csr = Csr::from_edges(&karate::edges());
+        let vt = vertex_triangles(&csr);
+        let sum: usize = vt.iter().sum();
+        assert_eq!(sum, 3 * global_triangles(&csr));
+    }
+}

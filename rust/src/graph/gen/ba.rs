@@ -1,0 +1,78 @@
+//! Barabási–Albert preferential attachment: each new vertex attaches to
+//! `k` existing vertices chosen proportionally to degree. Produces the
+//! heavy-tailed degree distribution of social networks — the shape that
+//! stresses DegreeSketch's sparse→dense transition and the domination
+//! phenomenon of Appendix B (hubs dominate leaves).
+
+use crate::graph::Edge;
+use crate::hash::Xoshiro256ss;
+
+/// Generate a BA graph with `n` vertices and `k` attachments per vertex.
+pub fn barabasi_albert(n: u64, k: u64, seed: u64) -> Vec<Edge> {
+    assert!(k >= 1, "k must be >= 1");
+    assert!(n > k, "need n > k");
+    let mut rng = Xoshiro256ss::new(seed);
+    // `targets` holds one entry per degree unit — sampling uniformly from
+    // it is exactly degree-proportional sampling.
+    let mut targets: Vec<u64> = Vec::with_capacity((2 * k * n) as usize);
+    let mut edges: Vec<Edge> = Vec::with_capacity((k * n) as usize);
+
+    // seed clique on k+1 vertices
+    for u in 0..=k {
+        for v in u + 1..=k {
+            edges.push((u, v));
+            targets.push(u);
+            targets.push(v);
+        }
+    }
+    for u in k + 1..n {
+        let mut picked: Vec<u64> = Vec::with_capacity(k as usize);
+        while picked.len() < k as usize {
+            let t = targets[rng.next_below(targets.len() as u64) as usize];
+            if !picked.contains(&t) {
+                picked.push(t);
+            }
+        }
+        for &v in &picked {
+            edges.push((v, u));
+            targets.push(u);
+            targets.push(v);
+        }
+    }
+    super::finish(edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+
+    #[test]
+    fn shape_and_connectivity() {
+        let edges = barabasi_albert(500, 3, 2);
+        let csr = Csr::from_edges(&edges);
+        assert_eq!(csr.num_vertices(), 500);
+        // m = C(4,2) + 3·(n - 4)
+        assert_eq!(csr.num_edges(), 6 + 3 * (500 - 4));
+        // connected: BFS from 0 reaches everything
+        let ns = crate::graph::exact::neighborhood_sizes(&csr, 500.min(32));
+        assert_eq!(ns[0][31], 500);
+    }
+
+    #[test]
+    fn heavy_tail() {
+        let edges = barabasi_albert(2000, 2, 3);
+        let csr = Csr::from_edges(&edges);
+        let max_deg = (0..csr.num_vertices() as u32)
+            .map(|v| csr.degree(v))
+            .max()
+            .unwrap();
+        // hubs should far exceed the mean degree (4)
+        assert!(max_deg > 40, "max degree {max_deg} not heavy-tailed");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(barabasi_albert(200, 2, 7), barabasi_albert(200, 2, 7));
+    }
+}

@@ -1,0 +1,61 @@
+//! Zachary's karate club (Zachary 1977) — the one *real* graph we can
+//! carry without network access. 34 vertices, 78 edges, 45 triangles.
+//!
+//! It serves the role the UF sparse matrix collection's small graphs
+//! (polbooks, celegans, …) play in the paper's Appendix C: a natural
+//! small factor for nonstochastic Kronecker products with exact triangle
+//! ground truth.
+
+use crate::graph::Edge;
+
+/// Number of vertices (ids 0..34).
+pub const NUM_VERTICES: usize = 34;
+
+/// The canonical 78-edge list (0-indexed, u < v).
+pub fn edges() -> Vec<Edge> {
+    // 1-indexed pairs from the canonical UCINET data, shifted to 0-index.
+    const E: [(u64, u64); 78] = [
+        (1, 2), (1, 3), (1, 4), (1, 5), (1, 6), (1, 7), (1, 8), (1, 9),
+        (1, 11), (1, 12), (1, 13), (1, 14), (1, 18), (1, 20), (1, 22),
+        (1, 32), (2, 3), (2, 4), (2, 8), (2, 14), (2, 18), (2, 20), (2, 22),
+        (2, 31), (3, 4), (3, 8), (3, 9), (3, 10), (3, 14), (3, 28), (3, 29),
+        (3, 33), (4, 8), (4, 13), (4, 14), (5, 7), (5, 11), (6, 7), (6, 11),
+        (6, 17), (7, 17), (9, 31), (9, 33), (9, 34), (10, 34), (14, 34),
+        (15, 33), (15, 34), (16, 33), (16, 34), (19, 33), (19, 34), (20, 34),
+        (21, 33), (21, 34), (23, 33), (23, 34), (24, 26), (24, 28), (24, 30),
+        (24, 33), (24, 34), (25, 26), (25, 28), (25, 32), (26, 32), (27, 30),
+        (27, 34), (28, 34), (29, 32), (29, 34), (30, 33), (30, 34), (31, 33),
+        (31, 34), (32, 33), (32, 34), (33, 34),
+    ];
+    E.iter().map(|&(u, v)| (u - 1, v - 1)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape() {
+        let e = edges();
+        assert_eq!(e.len(), 78);
+        let max = e.iter().map(|&(u, v)| u.max(v)).max().unwrap();
+        assert_eq!(max as usize + 1, NUM_VERTICES);
+        for &(u, v) in &e {
+            assert!(u < v);
+        }
+    }
+
+    #[test]
+    fn known_degrees() {
+        // vertex 34 (0-indexed 33) has degree 17; vertex 1 (0-indexed 0)
+        // degree 16 — the two "leaders" of the club.
+        let mut deg = [0usize; NUM_VERTICES];
+        for (u, v) in edges() {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        assert_eq!(deg[33], 17);
+        assert_eq!(deg[0], 16);
+        assert_eq!(deg.iter().sum::<usize>(), 2 * 78);
+    }
+}

@@ -1,0 +1,110 @@
+//! Nonstochastic Kronecker graph products (paper Appendix C;
+//! Weichsel 1962).
+//!
+//! For factor graphs `A` (n_a vertices) and `B` (n_b vertices), the product
+//! `C = A ⊗ B` has vertex set `V_A × V_B` (encoded `a · n_b + b`) and an
+//! edge `{(a1,b1), (a2,b2)}` iff `a1a2 ∈ E_A` and `b1b2 ∈ E_B`. Each pair
+//! of factor edges therefore contributes (up to) two product edges:
+//! `(a1,b1)-(a2,b2)` and `(a1,b2)-(a2,b1)`.
+//!
+//! The attraction (paper App. C): exact triangle ground truth is cheap —
+//! see [`super::super::kron_truth`].
+
+use crate::graph::Edge;
+
+/// Kronecker product of two undirected edge lists.
+///
+/// `n_b` is the vertex-universe size of `B` used for id encoding
+/// (`id = a * n_b + b`); `n_a` is accepted for symmetry/validation.
+pub fn kronecker_product(
+    a_edges: &[Edge],
+    n_a: u64,
+    b_edges: &[Edge],
+    n_b: u64,
+) -> Vec<Edge> {
+    for &(u, v) in a_edges {
+        assert!(u < n_a && v < n_a, "A edge ({u},{v}) out of range {n_a}");
+    }
+    for &(u, v) in b_edges {
+        assert!(u < n_b && v < n_b, "B edge ({u},{v}) out of range {n_b}");
+    }
+    let mut edges = Vec::with_capacity(a_edges.len() * b_edges.len() * 2);
+    for &(a1, a2) in a_edges {
+        for &(b1, b2) in b_edges {
+            edges.push((a1 * n_b + b1, a2 * n_b + b2));
+            edges.push((a1 * n_b + b2, a2 * n_b + b1));
+        }
+    }
+    super::finish(edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+    use crate::graph::gen::karate;
+
+    #[test]
+    fn triangle_squared() {
+        // C3 ⊗ C3: tensor product of two triangles.
+        let c3 = vec![(0u64, 1u64), (1, 2), (0, 2)];
+        let prod = kronecker_product(&c3, 3, &c3, 3);
+        let csr = Csr::from_edges(&prod);
+        // tensor product of C3 with itself = two disjoint C... in general
+        // m = 2·m_A·m_B (minus collisions/self-loops): 2·3·3 = 18
+        assert_eq!(csr.num_edges(), 18);
+        // every vertex has degree d_A·d_B = 4
+        for v in 0..csr.num_vertices() as u32 {
+            assert_eq!(csr.degree(v), 4);
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_adjacency() {
+        // definition check on small random-ish factors
+        let a = vec![(0u64, 1u64), (1, 2), (2, 3), (0, 3), (0, 2)];
+        let b = karate::edges();
+        let n_a = 4u64;
+        let n_b = karate::NUM_VERTICES as u64;
+        let prod = kronecker_product(&a, n_a, &b, n_b);
+        let csr = Csr::from_edges(&prod);
+        let has =
+            |x: u64, y: u64| -> bool {
+                match (csr.compact_id(x), csr.compact_id(y)) {
+                    (Some(cx), Some(cy)) => csr.has_edge(cx, cy),
+                    _ => false,
+                }
+            };
+        let a_adj = |u: u64, v: u64| {
+            a.iter().any(|&(x, y)| (x, y) == (u.min(v), u.max(v)))
+        };
+        let b_adj = |u: u64, v: u64| {
+            b.iter().any(|&(x, y)| (x, y) == (u.min(v), u.max(v)))
+        };
+        // sample the full product adjacency on a subset
+        for a1 in 0..n_a {
+            for a2 in 0..n_a {
+                for b1 in 0..6 {
+                    for b2 in 0..6 {
+                        let expect = a_adj(a1, a2) && b_adj(b1, b2);
+                        let got = has(a1 * n_b + b1, a2 * n_b + b2);
+                        assert_eq!(
+                            got, expect,
+                            "({a1},{b1})-({a2},{b2})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn edge_count_upper_bound() {
+        let k = karate::edges();
+        let n = karate::NUM_VERTICES as u64;
+        let prod = kronecker_product(&k, n, &k, n);
+        // 2·78·78 = 12168 minus self-loops/collisions
+        assert!(prod.len() <= 12168);
+        assert!(prod.len() > 11000);
+    }
+}

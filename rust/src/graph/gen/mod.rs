@@ -1,0 +1,185 @@
+//! Synthetic graph generators — the stand-ins for the paper's SNAP /
+//! KONECT / WDC corpora (no network access in this environment; see
+//! DESIGN.md §Distributed-substrate substitution).
+//!
+//! All generators emit deduplicated, self-loop-free, undirected edge lists
+//! with canonical (u < v) ordering, deterministic in their seed.
+//!
+//! * [`karate`] — the real Zachary karate-club graph, built in (the small
+//!   "natural" factor for Appendix C Kronecker products);
+//! * [`erdos_renyi`] — G(n, m)-style uniform random graphs;
+//! * [`barabasi_albert`] — preferential attachment (heavy-tail degrees,
+//!   the social-network shape);
+//! * [`watts_strogatz`] — small-world ring rewiring (high clustering —
+//!   triangle-dense like ca-HepTh);
+//! * [`chung_lu`] — configuration-model power-law (degree-sequence
+//!   controlled);
+//! * [`rmat`] — recursive matrix power-law (the SNAP/web-graph shape,
+//!   including its low-triangle-density P2P-like regime);
+//! * [`kronecker`] — nonstochastic Kronecker products (paper Appendix C)
+//!   with exact triangle ground truth via [`super::kron_truth`].
+
+pub mod ba;
+pub mod chung_lu;
+pub mod er;
+pub mod karate;
+pub mod kronecker;
+pub mod rmat;
+pub mod ws;
+
+pub use ba::barabasi_albert;
+pub use chung_lu::chung_lu;
+pub use er::erdos_renyi;
+pub use kronecker::kronecker_product;
+pub use rmat::rmat;
+pub use ws::watts_strogatz;
+
+use crate::graph::Edge;
+
+/// Canonicalize + sort + dedup + strip self-loops: the common postlude of
+/// every generator.
+pub(crate) fn finish(mut edges: Vec<Edge>) -> Vec<Edge> {
+    for e in edges.iter_mut() {
+        *e = crate::graph::canonical(*e);
+    }
+    edges.retain(|&(u, v)| u != v);
+    edges.sort_unstable();
+    edges.dedup();
+    edges
+}
+
+/// A named graph spec used by the CLI and experiment suites.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphSpec {
+    Karate,
+    /// karate ⊗ karate ⊗ ... (`order` factors).
+    KronKarate { order: u32 },
+    ErdosRenyi { n: u64, m: u64 },
+    BarabasiAlbert { n: u64, k: u64 },
+    WattsStrogatz { n: u64, k: u64, rewire_pct: u64 },
+    ChungLu { n: u64, exponent_x100: u64 },
+    Rmat { scale: u32, edge_factor: u64 },
+}
+
+impl GraphSpec {
+    /// Parse specs like `karate`, `kron-karate:2`, `er:1000:5000`,
+    /// `ba:1000:4`, `ws:1000:8:10`, `cl:1000:250`, `rmat:16:16`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |i: usize| parts.get(i).and_then(|x| x.parse::<u64>().ok());
+        match parts[0] {
+            "karate" => Some(Self::Karate),
+            "kron-karate" => Some(Self::KronKarate {
+                order: num(1)? as u32,
+            }),
+            "er" => Some(Self::ErdosRenyi {
+                n: num(1)?,
+                m: num(2)?,
+            }),
+            "ba" => Some(Self::BarabasiAlbert {
+                n: num(1)?,
+                k: num(2)?,
+            }),
+            "ws" => Some(Self::WattsStrogatz {
+                n: num(1)?,
+                k: num(2)?,
+                rewire_pct: num(3)?,
+            }),
+            "cl" => Some(Self::ChungLu {
+                n: num(1)?,
+                exponent_x100: num(2)?,
+            }),
+            "rmat" => Some(Self::Rmat {
+                scale: num(1)? as u32,
+                edge_factor: num(2)?,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Human-readable type name (Table 1 column).
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Self::Karate => "Social (real)",
+            Self::KronKarate { .. } => "Kronecker",
+            Self::ErdosRenyi { .. } => "Erdős–Rényi",
+            Self::BarabasiAlbert { .. } => "Pref. attachment",
+            Self::WattsStrogatz { .. } => "Small world",
+            Self::ChungLu { .. } => "Power law (CL)",
+            Self::Rmat { .. } => "RMAT",
+        }
+    }
+
+    /// Generate the edge list.
+    pub fn generate(&self, seed: u64) -> Vec<Edge> {
+        match *self {
+            Self::Karate => karate::edges(),
+            Self::KronKarate { order } => {
+                let base = karate::edges();
+                let mut edges = base.clone();
+                let mut n = karate::NUM_VERTICES as u64;
+                for _ in 1..order.max(1) {
+                    edges = kronecker_product(&edges, n, &base, karate::NUM_VERTICES as u64);
+                    n *= karate::NUM_VERTICES as u64;
+                }
+                edges
+            }
+            Self::ErdosRenyi { n, m } => erdos_renyi(n, m, seed),
+            Self::BarabasiAlbert { n, k } => barabasi_albert(n, k, seed),
+            Self::WattsStrogatz { n, k, rewire_pct } => {
+                watts_strogatz(n, k, rewire_pct as f64 / 100.0, seed)
+            }
+            Self::ChungLu { n, exponent_x100 } => {
+                chung_lu(n, exponent_x100 as f64 / 100.0, seed)
+            }
+            Self::Rmat { scale, edge_factor } => {
+                rmat(scale, edge_factor, 0.57, 0.19, 0.19, seed)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finish_cleans() {
+        let edges = finish(vec![(3, 1), (1, 3), (2, 2), (1, 3), (0, 5)]);
+        assert_eq!(edges, vec![(0, 5), (1, 3)]);
+    }
+
+    #[test]
+    fn spec_parse_round_trips() {
+        for s in [
+            "karate",
+            "kron-karate:2",
+            "er:100:300",
+            "ba:100:3",
+            "ws:100:6:10",
+            "cl:100:250",
+            "rmat:10:8",
+        ] {
+            let spec = GraphSpec::parse(s).unwrap_or_else(|| panic!("{s}"));
+            let edges = spec.generate(7);
+            assert!(!edges.is_empty(), "{s} generated no edges");
+            // canonical + dedup + no self loops
+            for &(u, v) in &edges {
+                assert!(u < v);
+            }
+            let mut d = edges.clone();
+            d.dedup();
+            assert_eq!(d.len(), edges.len());
+        }
+        assert!(GraphSpec::parse("wat:1").is_none());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = GraphSpec::parse("rmat:10:8").unwrap().generate(5);
+        let b = GraphSpec::parse("rmat:10:8").unwrap().generate(5);
+        assert_eq!(a, b);
+        let c = GraphSpec::parse("rmat:10:8").unwrap().generate(6);
+        assert_ne!(a, c);
+    }
+}

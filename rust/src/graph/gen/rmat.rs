@@ -1,0 +1,88 @@
+//! RMAT (recursive matrix) generator — the standard stand-in for scale-free
+//! SNAP/web graphs (Graph500 uses the same construction). Each edge is
+//! placed by `scale` recursive quadrant choices with probabilities
+//! (a, b, c, d).
+
+use crate::graph::Edge;
+use crate::hash::Xoshiro256ss;
+
+/// Generate an RMAT graph over `2^scale` vertices with `edge_factor`
+/// directed samples per vertex (dedup makes the final count slightly
+/// lower). `(a, b, c)` are the quadrant probabilities; `d = 1 - a - b - c`.
+pub fn rmat(
+    scale: u32,
+    edge_factor: u64,
+    a: f64,
+    b: f64,
+    c: f64,
+    seed: u64,
+) -> Vec<Edge> {
+    assert!(scale >= 1 && scale <= 30);
+    let d = 1.0 - a - b - c;
+    assert!(d >= 0.0 && a > 0.0 && b >= 0.0 && c >= 0.0);
+    let n = 1u64 << scale;
+    let m = n * edge_factor;
+    let mut rng = Xoshiro256ss::new(seed);
+    let mut edges = Vec::with_capacity(m as usize);
+    for _ in 0..m {
+        let (mut u, mut v) = (0u64, 0u64);
+        for _ in 0..scale {
+            u <<= 1;
+            v <<= 1;
+            let x = rng.next_f64();
+            if x < a {
+                // (0,0)
+            } else if x < a + b {
+                v |= 1;
+            } else if x < a + b + c {
+                u |= 1;
+            } else {
+                u |= 1;
+                v |= 1;
+            }
+        }
+        edges.push((u, v));
+    }
+    super::finish(edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+
+    #[test]
+    fn shape_and_determinism() {
+        let a = rmat(12, 8, 0.57, 0.19, 0.19, 3);
+        let b = rmat(12, 8, 0.57, 0.19, 0.19, 3);
+        assert_eq!(a, b);
+        for &(u, v) in &a {
+            assert!(u < v && v < (1 << 12));
+        }
+        // dedup loses some of the 32768 samples but not most
+        assert!(a.len() > 20_000, "{}", a.len());
+    }
+
+    #[test]
+    fn skewed_quadrants_give_hubs() {
+        let edges = rmat(13, 8, 0.57, 0.19, 0.19, 1);
+        let csr = Csr::from_edges(&edges);
+        let mut degs: Vec<usize> =
+            (0..csr.num_vertices() as u32).map(|v| csr.degree(v)).collect();
+        degs.sort_unstable_by(|x, y| y.cmp(x));
+        let mean = degs.iter().sum::<usize>() as f64 / degs.len() as f64;
+        assert!(degs[0] as f64 > 10.0 * mean);
+    }
+
+    #[test]
+    fn uniform_quadrants_approximate_er() {
+        let edges = rmat(12, 8, 0.25, 0.25, 0.25, 2);
+        let csr = Csr::from_edges(&edges);
+        let max_deg = (0..csr.num_vertices() as u32)
+            .map(|v| csr.degree(v))
+            .max()
+            .unwrap();
+        // no big hubs when quadrants are uniform
+        assert!(max_deg < 40, "{max_deg}");
+    }
+}

@@ -1,0 +1,39 @@
+//! Graph substrate: edge streams, CSR, generators, exact baselines.
+//!
+//! The paper's input model is a *semi-streaming* one: the graph arrives as
+//! an edge stream `σ` partitioned across processors, and algorithms may
+//! take a bounded number of passes ([`stream::EdgeStream`]). On top of that
+//! we provide:
+//!
+//! * [`csr::Csr`] — an in-memory compressed-sparse-row view used by the
+//!   *exact* baselines (the paper's ground truth for Figures 1–3);
+//! * [`gen`] — synthetic graph generators standing in for the paper's SNAP
+//!   / Kronecker corpora (see DESIGN.md §Distributed-substrate
+//!   substitution), including the nonstochastic Kronecker construction of
+//!   Appendix C with exact edge-local triangle formulas ([`kron_truth`]);
+//! * [`exact`] — exact t-neighborhood sizes (BFS) and exact edge-/vertex-
+//!   local triangle counts (sorted adjacency intersection).
+
+pub mod csr;
+pub mod exact;
+pub mod gen;
+pub mod kron_truth;
+pub mod stream;
+
+/// Vertex identifier. Streams may carry arbitrary u64 ids (they need not be
+/// contiguous); CSR construction compacts them.
+pub type VertexId = u64;
+
+/// An undirected edge. Stored unordered; [`Edge::canonical`] normalizes.
+pub type Edge = (VertexId, VertexId);
+
+/// Canonical form (min, max) of an undirected edge — the key used for
+/// dedup, exact counts, and heavy-hitter identity.
+#[inline]
+pub fn canonical(e: Edge) -> Edge {
+    if e.0 <= e.1 {
+        e
+    } else {
+        (e.1, e.0)
+    }
+}

@@ -1,0 +1,302 @@
+//! LogLogBeta β(r, z) bias correction (Qin et al. 2016; paper Eq. 17).
+//!
+//! β is a 7th-degree polynomial in `zl = ln(z + 1)` (plus a linear `z`
+//! term) whose weights are fitted experimentally by least squares, exactly
+//! as §II.C of the LogLogBeta paper and the paper's §4 describe. The
+//! shipped [`BETA_TABLE`] holds coefficients for the `p` values used by the
+//! experiments, produced by [`fit_beta`] via the `degreesketch
+//! calibrate-beta` subcommand (see EXPERIMENTS.md §Calibration); for other
+//! `p` we fall back to the widely used m = 2^14 coefficient set from the
+//! LogLogBeta paper.
+
+use crate::hash::Xoshiro256ss;
+
+use super::estimate::alpha;
+use super::{Hll, HllConfig};
+
+/// Coefficients for β(r, z) = c0·z + Σ_{i=1..7} c_i · ln(z+1)^i.
+pub type BetaCoefficients = [f64; 8];
+
+/// The m = 2^14 coefficients published in Qin et al. 2016 — the generic
+/// fallback when no fitted entry exists for a given p.
+pub const BETA_P14_PUBLISHED: BetaCoefficients = [
+    -0.370393911,
+    0.070471823,
+    0.17393686,
+    0.16339839,
+    -0.09237745,
+    0.03738027,
+    -0.005384159,
+    0.00042419,
+];
+
+/// Per-p fitted coefficients (`(p, coefficients)`), generated with
+/// `degreesketch calibrate-beta`. Entries produced in this repository's
+/// calibration run; see EXPERIMENTS.md §Calibration.
+pub static BETA_TABLE: &[(u8, BetaCoefficients)] = &[
+    (4, [3.581640264, 2.005361018, -18.413213625, 23.793264718, -18.370210807, 7.290935137, -1.435534385, 0.101802449]),
+    (5, [127.136965589, -121.924909221, -82.571314958, 11.602882286, -31.986566720, 9.949333007, -2.292328500, 0.103955982]),
+    (6, [55.349942095, -48.806846831, -41.886374943, 2.511776286, -4.174312703, -2.001299599, 0.644211962, -0.106428747]),
+    (7, [-12.299911172, 14.556264519, 5.195603537, 1.250959494, 2.049902872, -0.453535376, 0.074988943, 0.006669360]),
+    (8, [5.742229161, 2.452681334, -14.635993908, 5.986776996, -1.321132012, -0.336479677, 0.122145474, -0.014903268]),
+    (9, [-1.735820947, 9.214533206, -13.425023715, 12.475311569, -5.059832508, 1.297172638, -0.174001665, 0.011837164]),
+    (10, [0.318745506, 2.082782136, 1.963790596, -4.275641263, 2.444220780, -0.551988762, 0.055393657, -0.001594857]),
+    (11, [0.820992132, 4.192246961, -6.240209312, 3.771918812, -0.961784934, 0.083300384, 0.004538386, -0.000889827]),
+    (12, [-1.840330777, -25.741942217, 34.817510685, -1.062859544, -8.726788243, 3.649201020, -0.558311159, 0.032768518]),
+    (13, [0.601617666, -8.889072510, 17.518333578, -10.415488830, 2.715389041, -0.311838441, 0.013192079, 0.000170989]),
+    (14, [0.592797267, 4.128930414, -11.728886292, 9.074836392, -2.929852965, 0.495874221, -0.043436570, 0.001782752]),
+    (15, [0.671072085, -8.899746937, 9.504358428, -7.547509985, 3.244504478, -0.657178793, 0.062400766, -0.002109866]),
+    (16, [0.647516877, 4.092836996, -4.632061297, -0.755003812, 1.341550873, -0.316464388, 0.027671163, -0.000595391]),
+];
+
+/// Look up (or fall back for) the β polynomial and evaluate it at `z`.
+pub fn beta_correction(p: u8, z: f64) -> f64 {
+    let coeffs = BETA_TABLE
+        .iter()
+        .find(|&&(tp, _)| tp == p)
+        .map(|&(_, c)| c)
+        .unwrap_or(BETA_P14_PUBLISHED);
+    eval_beta(&coeffs, z)
+}
+
+/// Evaluate a β polynomial at `z` registers-equal-to-zero.
+pub fn eval_beta(coeffs: &BetaCoefficients, z: f64) -> f64 {
+    let zl = (z + 1.0).ln();
+    let mut acc = coeffs[0] * z;
+    let mut pow = 1.0;
+    for &c in &coeffs[1..] {
+        pow *= zl;
+        acc += c * pow;
+    }
+    acc
+}
+
+/// Fit β(r, z) for prefix size `p` by simulation + least squares
+/// (Qin et al. §II.C): for a sweep of true cardinalities, accumulate
+/// sketches, record `(z, hsum)` and solve for the β value that would make
+/// Eq. 17 exact; then least-squares fit the polynomial basis
+/// `[z, zl, zl², …, zl⁷]`.
+///
+/// `trials_per_n` sketches are simulated for each of `points`
+/// log-spaced cardinalities in `[1, max_n]`.
+pub fn fit_beta(
+    p: u8,
+    points: usize,
+    trials_per_n: usize,
+    max_n: u64,
+    seed: u64,
+) -> BetaCoefficients {
+    let r = 1usize << p;
+    let a = alpha(r);
+    let mut rows: Vec<[f64; 8]> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    let mut rng = Xoshiro256ss::new(seed);
+
+    // Two sampling regimes: log-spaced cardinalities across [1, max_n],
+    // plus a sweep that targets the small-z tail (z ≈ r·e^{-n/r}) where an
+    // unconstrained polynomial otherwise extrapolates wildly for large p.
+    let mut ns: Vec<u64> = Vec::new();
+    for i in 0..points {
+        let frac = i as f64 / (points - 1).max(1) as f64;
+        ns.push(((max_n as f64).powf(frac)).round().max(1.0) as u64);
+    }
+    let z_targets = points / 2;
+    for i in 0..z_targets {
+        let frac = i as f64 / (z_targets - 1).max(1) as f64;
+        // z from 1 up to r/4, log-spaced; n = r·ln(r/z)
+        let z = (r as f64 / 4.0).powf(frac).max(1.0);
+        ns.push((r as f64 * (r as f64 / z).ln()).round().max(1.0) as u64);
+    }
+
+    for &n in &ns {
+        for _ in 0..trials_per_n {
+            let mut s = Hll::new(HllConfig::new(p, rng.next_u64()));
+            for _ in 0..n {
+                s.insert(rng.next_u64());
+            }
+            let hist = s.histogram();
+            let z = hist[0] as f64;
+            if z == r as f64 {
+                continue;
+            }
+            let hsum: f64 = hist
+                .iter()
+                .enumerate()
+                .skip(1)
+                .map(|(k, &c)| c as f64 * (-(k as f64)).exp2())
+                .sum();
+            // Eq. 17 solved for β:
+            let beta_needed =
+                a * r as f64 * (r as f64 - z) / n as f64 - hsum;
+            let zl = (z + 1.0).ln();
+            let mut row = [0.0f64; 8];
+            row[0] = z;
+            let mut pow = 1.0;
+            for j in 1..8 {
+                pow *= zl;
+                row[j] = pow;
+            }
+            rows.push(row);
+            ys.push(beta_needed);
+        }
+    }
+    least_squares(&rows, &ys)
+}
+
+/// Solve min ‖Xw - y‖² via the normal equations (8×8 Gaussian elimination
+/// with partial pivoting — tiny system, no external linalg needed).
+fn least_squares(rows: &[[f64; 8]], ys: &[f64]) -> BetaCoefficients {
+    let mut xtx = [[0.0f64; 8]; 8];
+    let mut xty = [0.0f64; 8];
+    for (row, &y) in rows.iter().zip(ys) {
+        for i in 0..8 {
+            xty[i] += row[i] * y;
+            for j in 0..8 {
+                xtx[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    // Equilibrate columns (scale to unit diagonal) so the collinear zl^i
+    // basis is well conditioned, then apply a tiny relative ridge.
+    let mut scale = [1.0f64; 8];
+    for i in 0..8 {
+        if xtx[i][i] > 0.0 {
+            scale[i] = xtx[i][i].sqrt();
+        }
+    }
+    for i in 0..8 {
+        xty[i] /= scale[i];
+        for j in 0..8 {
+            xtx[i][j] /= scale[i] * scale[j];
+        }
+    }
+    for (i, row) in xtx.iter_mut().enumerate() {
+        row[i] += 1e-10;
+    }
+    let w = gaussian_solve(xtx, xty);
+    std::array::from_fn(|i| w[i] / scale[i])
+}
+
+fn gaussian_solve(mut a: [[f64; 8]; 8], mut b: [f64; 8]) -> [f64; 8] {
+    for col in 0..8 {
+        // partial pivot
+        let mut pivot = col;
+        for row in col + 1..8 {
+            if a[row][col].abs() > a[pivot][col].abs() {
+                pivot = row;
+            }
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        let diag = a[col][col];
+        assert!(diag.abs() > 1e-30, "singular normal equations");
+        for row in col + 1..8 {
+            let f = a[row][col] / diag;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..8 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0f64; 8];
+    for col in (0..8).rev() {
+        let mut acc = b[col];
+        for k in col + 1..8 {
+            acc -= a[col][k] * x[k];
+        }
+        x[col] = acc / a[col][col];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_beta_zero_registers() {
+        // z = 0 ⇒ every term vanishes.
+        assert_eq!(eval_beta(&BETA_P14_PUBLISHED, 0.0), 0.0);
+    }
+
+    #[test]
+    fn gaussian_solve_identity() {
+        let mut a = [[0.0; 8]; 8];
+        for (i, row) in a.iter_mut().enumerate() {
+            row[i] = 2.0;
+        }
+        let b = [2.0; 8];
+        let x = gaussian_solve(a, b);
+        for xi in x {
+            assert!((xi - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn least_squares_recovers_planted_weights() {
+        // y = 3·z - 2·zl + 0.5·zl³ exactly; fit must recover it.
+        let mut rng = Xoshiro256ss::new(5);
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..200 {
+            let z = rng.next_below(1000) as f64;
+            let zl = (z + 1.0).ln();
+            let mut row = [0.0f64; 8];
+            row[0] = z;
+            let mut pow = 1.0;
+            for j in 1..8 {
+                pow *= zl;
+                row[j] = pow;
+            }
+            rows.push(row);
+            ys.push(3.0 * z - 2.0 * zl + 0.5 * zl * zl * zl);
+        }
+        let w = least_squares(&rows, &ys);
+        // the zl^i basis is collinear, so check *predictions*, not weights
+        for _ in 0..50 {
+            let z = rng.next_below(1000) as f64;
+            let zl = (z + 1.0).ln();
+            let truth = 3.0 * z - 2.0 * zl + 0.5 * zl * zl * zl;
+            let pred = eval_beta(&w, z);
+            assert!(
+                (pred - truth).abs() < 1e-3 * (1.0 + truth.abs()),
+                "z={z} pred={pred} truth={truth} w={w:?}"
+            );
+        }
+    }
+
+    #[test]
+    #[ignore] // slow calibration smoke test; run with --ignored
+    fn fit_beta_improves_small_range() {
+        let p = 8;
+        let coeffs = fit_beta(p, 24, 8, 100_000, 99);
+        // fitted β must keep mid/small-range error within a few std errs
+        let mut rng = Xoshiro256ss::new(123);
+        for n in [5u64, 50, 500, 5_000] {
+            let mut errs = Vec::new();
+            for _ in 0..20 {
+                let mut s = Hll::new(HllConfig::new(p, rng.next_u64()));
+                for _ in 0..n {
+                    s.insert(rng.next_u64());
+                }
+                let hist = s.histogram();
+                let z = hist[0] as f64;
+                let r = 256.0;
+                let hsum: f64 = hist
+                    .iter()
+                    .enumerate()
+                    .skip(1)
+                    .map(|(k, &c)| c as f64 * (-(k as f64)).exp2())
+                    .sum();
+                let est =
+                    alpha(256) * r * (r - z) / (eval_beta(&coeffs, z) + hsum);
+                errs.push((est - n as f64).abs() / n as f64);
+            }
+            let mre = errs.iter().sum::<f64>() / errs.len() as f64;
+            assert!(mre < 0.2, "n={n} mre={mre}");
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Cardinality estimators over HLL register histograms.
+//!
+//! Three estimators are provided (paper §4 uses LogLogBeta; we also carry
+//! the classic Flajolet estimator for reference and Ertl's improved σ/τ
+//! estimator, which is the library default because it needs no empirically
+//! fitted constants and is unbiased across the full cardinality range):
+//!
+//! * [`Estimator::Classic`] — Eq. 14 with the usual small-range linear
+//!   counting switch-over.
+//! * [`Estimator::LogLogBeta`] — Eq. 17, `α_r · r(r-z) / (β(r,z) + Σ 2^-r_i)`
+//!   with per-p β polynomials fitted by least squares (see `beta.rs`,
+//!   mirroring Qin et al. §II.C).
+//! * [`Estimator::ErtlImproved`] — Ertl 2017 Alg. 6 (σ/τ corrected); this is
+//!   also the math the L2 JAX artifact implements, so PJRT and native
+//!   backends agree.
+
+use super::beta::beta_correction;
+use super::Hll;
+
+/// Which cardinality estimator to apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Estimator {
+    /// Flajolet et al. 2007 bias-corrected harmonic mean + linear counting.
+    Classic,
+    /// LogLogBeta (Qin et al. 2016), the paper's Eq. 17.
+    LogLogBeta,
+    /// Ertl 2017 improved estimator (σ/τ corrections) — default.
+    #[default]
+    ErtlImproved,
+}
+
+impl Estimator {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "classic" => Some(Self::Classic),
+            "beta" | "loglog-beta" => Some(Self::LogLogBeta),
+            "ertl" | "improved" => Some(Self::ErtlImproved),
+            _ => None,
+        }
+    }
+}
+
+/// α_r bias-correction constant (Flajolet et al. 2007).
+pub fn alpha(r: usize) -> f64 {
+    match r {
+        16 => 0.673,
+        32 => 0.697,
+        64 => 0.709,
+        _ => 0.7213 / (1.0 + 1.079 / r as f64),
+    }
+}
+
+/// α_∞ = 1 / (2 ln 2), the limit constant used by the improved estimator.
+pub const ALPHA_INF: f64 = 0.721_347_520_444_481_7;
+
+pub(super) fn estimate(sketch: &Hll, estimator: Estimator) -> f64 {
+    let hist = sketch.histogram();
+    let q = sketch.config().q() as usize;
+    match estimator {
+        Estimator::Classic => classic_from_hist(&hist, q),
+        Estimator::LogLogBeta => {
+            beta_from_hist(&hist, q, sketch.config().p())
+        }
+        Estimator::ErtlImproved => ertl_estimate_from_hist(&hist, q),
+    }
+}
+
+fn harmonic_sum(hist: &[u32]) -> f64 {
+    // Σ C[k]·2^-k over all k (zero registers contribute C[0]·1).
+    hist.iter()
+        .enumerate()
+        .map(|(k, &c)| c as f64 * (-(k as f64)).exp2())
+        .sum()
+}
+
+/// Classic HLL estimate (paper Eq. 14) with linear-counting small-range
+/// correction. The 64-bit hash makes the large-range correction moot
+/// (paper §4).
+pub fn classic_from_hist(hist: &[u32], _q: usize) -> f64 {
+    let r: u32 = hist.iter().sum();
+    let r = r as f64;
+    let raw = alpha(r as usize) * r * r / harmonic_sum(hist);
+    let zeros = hist[0] as f64;
+    if raw <= 2.5 * r && zeros > 0.0 {
+        // linear counting
+        r * (r / zeros).ln()
+    } else {
+        raw
+    }
+}
+
+/// LogLogBeta estimate (paper Eq. 17).
+pub fn beta_from_hist(hist: &[u32], _q: usize, p: u8) -> f64 {
+    let r: u32 = hist.iter().sum();
+    let r = r as f64;
+    let z = hist[0] as f64;
+    if z == r {
+        return 0.0;
+    }
+    // Σ over nonzero registers only (zero registers are absorbed into the
+    // (r - z) factor and β, following Qin et al.).
+    let hsum: f64 = hist
+        .iter()
+        .enumerate()
+        .skip(1)
+        .map(|(k, &c)| c as f64 * (-(k as f64)).exp2())
+        .sum();
+    alpha(r as usize) * r * (r - z) / (beta_correction(p, z) + hsum)
+}
+
+/// Ertl improved estimate from a register histogram (Ertl 2017 Alg. 6).
+/// `hist.len()` must be `q + 2`.
+pub fn ertl_estimate_from_hist(hist: &[u32], q: usize) -> f64 {
+    debug_assert_eq!(hist.len(), q + 2);
+    let m: u32 = hist.iter().sum();
+    let m = m as f64;
+    // z = m·τ(1 - C[q+1]/m); then Horner over k = q..1; then + m·σ(C[0]/m).
+    let mut z = m * tau(1.0 - hist[q + 1] as f64 / m);
+    for k in (1..=q).rev() {
+        z = 0.5 * (z + hist[k] as f64);
+    }
+    z += m * sigma(hist[0] as f64 / m);
+    if z.is_infinite() {
+        return 0.0; // empty sketch: σ(1) = ∞ ⇒ estimate 0
+    }
+    ALPHA_INF * m * m / z
+}
+
+/// Ertl's σ(x) = x + Σ_{k≥1} x^(2^k)·2^(k-1); diverges at x = 1.
+pub fn sigma(x: f64) -> f64 {
+    if x == 1.0 {
+        return f64::INFINITY;
+    }
+    let mut xk = x;
+    let mut y = 1.0;
+    let mut z = x;
+    loop {
+        xk *= xk;
+        let z_prev = z;
+        z += xk * y;
+        y += y;
+        if z == z_prev {
+            return z;
+        }
+    }
+}
+
+/// Ertl's τ(x) = (1/3)·(1 - x - Σ_{k≥1} (1 - x^(2^-k))²·2^-k).
+pub fn tau(x: f64) -> f64 {
+    if x == 0.0 || x == 1.0 {
+        return 0.0;
+    }
+    let mut xk = x;
+    let mut y = 1.0;
+    let mut z = 1.0 - x;
+    loop {
+        xk = xk.sqrt();
+        let z_prev = z;
+        y *= 0.5;
+        z -= (1.0 - xk) * (1.0 - xk) * y;
+        if z == z_prev {
+            return z / 3.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hll::{Hll, HllConfig};
+    use crate::util::prop::Cases;
+
+    fn filled(p: u8, n: u64, seed: u64) -> Hll {
+        let mut s = Hll::new(HllConfig::new(p, 0xABCD));
+        let mut rng = crate::hash::Xoshiro256ss::new(seed);
+        for _ in 0..n {
+            s.insert(rng.next_u64());
+        }
+        s
+    }
+
+    #[test]
+    fn sigma_tau_fixed_points() {
+        assert_eq!(sigma(0.0), 0.0);
+        assert!(sigma(1.0).is_infinite());
+        assert_eq!(tau(0.0), 0.0);
+        assert_eq!(tau(1.0), 0.0);
+        // σ is increasing on [0, 1)
+        let mut prev = -1.0;
+        for i in 0..10 {
+            let s = sigma(i as f64 * 0.1);
+            assert!(s > prev);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn all_estimators_track_truth() {
+        for n in [10u64, 200, 5_000, 100_000] {
+            let s = filled(10, n, n);
+            let se = 1.04 / (1024f64).sqrt();
+            for est in [
+                Estimator::Classic,
+                Estimator::LogLogBeta,
+                Estimator::ErtlImproved,
+            ] {
+                let e = s.estimate_with(est);
+                let tol = (6.0 * se * n as f64).max(4.0);
+                assert!(
+                    (e - n as f64).abs() < tol,
+                    "{est:?} n={n} est={e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ertl_matches_small_and_large_regimes() {
+        Cases::new("ertl_regimes", 25).run(|rng| {
+            let n = 1 + rng.next_below(200_000);
+            let mut s = Hll::new(HllConfig::new(8, 0x11));
+            for _ in 0..n {
+                s.insert(rng.next_u64());
+            }
+            let e = s.estimate_with(Estimator::ErtlImproved);
+            let se = 1.04 / 16.0; // p = 8
+            assert!(
+                (e - n as f64).abs() < (6.0 * se * n as f64).max(4.0),
+                "n={n} est={e}"
+            );
+        });
+    }
+
+    #[test]
+    fn estimators_agree_with_each_other() {
+        // In the mid-range all three are near-identical.
+        let s = filled(12, 40_000, 3);
+        let c = s.estimate_with(Estimator::Classic);
+        let b = s.estimate_with(Estimator::LogLogBeta);
+        let e = s.estimate_with(Estimator::ErtlImproved);
+        for (x, y) in [(c, b), (b, e), (c, e)] {
+            assert!((x - y).abs() / x < 0.05, "{c} {b} {e}");
+        }
+    }
+
+    #[test]
+    fn estimator_parse() {
+        assert_eq!(Estimator::parse("classic"), Some(Estimator::Classic));
+        assert_eq!(Estimator::parse("beta"), Some(Estimator::LogLogBeta));
+        assert_eq!(Estimator::parse("ertl"), Some(Estimator::ErtlImproved));
+        assert_eq!(Estimator::parse("nope"), None);
+    }
+
+    #[test]
+    fn alpha_constants() {
+        assert_eq!(alpha(16), 0.673);
+        assert_eq!(alpha(32), 0.697);
+        assert_eq!(alpha(64), 0.709);
+        assert!((alpha(1 << 14) - 0.7213 / (1.0 + 1.079 / 16384.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,894 @@
+//! Sketch intersection estimation (paper §4.1, Appendix B).
+//!
+//! Two estimators over a pair of HLL sketches `A`, `B`:
+//!
+//! * [`inclusion_exclusion`] — `|A∩B| ≈ |Ã| + |B̃| - |A∪B|` (paper Eq. 18);
+//!   cheap but high-variance, kept as the baseline the paper compares
+//!   against in Figure 8.
+//! * [`mle_intersect`] — the joint Poisson maximum-likelihood estimator
+//!   (Ertl 2017): compress the register pair into the Eq. 19 count
+//!   statistics, then ascend the log-likelihood of `(λa, λb, λx)` =
+//!   `(|A\B|, |B\A|, |A∩B|)` in log-space with Adam and an analytic
+//!   gradient. The math mirrors `python/compile/model.py` exactly so the
+//!   PJRT artifact and this native path can be cross-checked.
+//!
+//! Appendix B's *domination* phenomenon (all of one sketch's registers ≥
+//! the other's) is detected by [`domination`]; dominated pairs yield
+//! unreliable intersection estimates and callers may choose to discard
+//! them (`MleOptions::flag_dominated`).
+
+use super::estimate::ertl_estimate_from_hist;
+use super::Hll;
+
+/// Eq. 19 count statistics for a register pair.
+///
+/// `c[0][k] = #{i : k = a_i < b_i}`   (`c_k^{A,<}`)
+/// `c[1][k] = #{i : k = a_i > b_i}`   (`c_k^{A,>}`)
+/// `c[2][k] = #{i : k = b_i < a_i}`   (`c_k^{B,<}`)
+/// `c[3][k] = #{i : k = b_i > a_i}`   (`c_k^{B,>}`)
+/// `c[4][k] = #{i : k = a_i = b_i}`   (`c_k^{=}`)
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PairStats {
+    pub c: [Vec<u32>; 5],
+    pub q: usize,
+    pub m: usize,
+}
+
+impl PairStats {
+    /// Histogram of A's registers (`c^{A,<} + c^{A,>} + c^=`).
+    pub fn hist_a(&self) -> Vec<u32> {
+        self.combine(&[0, 1, 4])
+    }
+
+    /// Histogram of B's registers.
+    pub fn hist_b(&self) -> Vec<u32> {
+        self.combine(&[2, 3, 4])
+    }
+
+    /// Histogram of the union's registers (register-wise max:
+    /// `c^{A,>} + c^{B,>} + c^=`).
+    pub fn hist_union(&self) -> Vec<u32> {
+        self.combine(&[1, 3, 4])
+    }
+
+    fn combine(&self, idx: &[usize]) -> Vec<u32> {
+        let mut out = vec![0u32; self.q + 2];
+        for &i in idx {
+            for (o, &v) in out.iter_mut().zip(&self.c[i]) {
+                *o += v;
+            }
+        }
+        out
+    }
+}
+
+/// Accumulate the Eq. 19 statistics for a sketch pair.
+///
+/// Panics if the sketches' configs differ (different `(p, seed)` sketches
+/// are not comparable).
+pub fn pair_stats(a: &Hll, b: &Hll) -> PairStats {
+    assert_eq!(
+        a.config(),
+        b.config(),
+        "cannot intersect sketches with different (p, seed)"
+    );
+    let q = a.config().q() as usize;
+    let m = a.config().num_registers();
+    let mut c: [Vec<u32>; 5] = std::array::from_fn(|_| vec![0u32; q + 2]);
+
+    match (a.dense_registers(), b.dense_registers()) {
+        (Some(da), Some(db)) => {
+            for (&ra, &rb) in da.iter().zip(db) {
+                bump(&mut c, ra, rb);
+            }
+        }
+        _ => {
+            // At least one side sparse: walk the union of nonzero indices,
+            // then account for the all-zero remainder in c^=[0].
+            let mut nonzero = 0usize;
+            let av: Vec<(u32, u8)> = a.iter_nonzero().collect();
+            let bv: Vec<(u32, u8)> = b.iter_nonzero().collect();
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < av.len() || j < bv.len() {
+                let (ra, rb) = match (av.get(i), bv.get(j)) {
+                    (Some(&(ia, xa)), Some(&(ib, xb))) => {
+                        if ia == ib {
+                            i += 1;
+                            j += 1;
+                            (xa, xb)
+                        } else if ia < ib {
+                            i += 1;
+                            (xa, 0)
+                        } else {
+                            j += 1;
+                            (0, xb)
+                        }
+                    }
+                    (Some(&(_, xa)), None) => {
+                        i += 1;
+                        (xa, 0)
+                    }
+                    (None, Some(&(_, xb))) => {
+                        j += 1;
+                        (0, xb)
+                    }
+                    (None, None) => unreachable!(),
+                };
+                bump(&mut c, ra, rb);
+                nonzero += 1;
+            }
+            c[4][0] += (m - nonzero) as u32;
+        }
+    }
+    PairStats { c, q, m }
+}
+
+#[inline]
+fn bump(c: &mut [Vec<u32>; 5], ra: u8, rb: u8) {
+    use std::cmp::Ordering::*;
+    match ra.cmp(&rb) {
+        Less => {
+            c[0][ra as usize] += 1;
+            c[3][rb as usize] += 1;
+        }
+        Greater => {
+            c[1][ra as usize] += 1;
+            c[2][rb as usize] += 1;
+        }
+        Equal => c[4][ra as usize] += 1,
+    }
+}
+
+/// Appendix B domination classification of a sketch pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domination {
+    /// Neither sketch dominates: the MLE has information to work with.
+    None,
+    /// A's registers ≥ B's everywhere (`c^{A,<} = c^{B,>} = 0`).
+    ADominatesB,
+    /// ...and additionally no ties at nonzero values (strict domination —
+    /// the MLE's λx is unidentifiable, App. B).
+    AStrictlyDominatesB,
+    /// Symmetric cases.
+    BDominatesA,
+    BStrictlyDominatesA,
+}
+
+/// Detect domination from pair statistics (paper Appendix B).
+pub fn domination(stats: &PairStats) -> Domination {
+    let a_lt: u32 = stats.c[0].iter().sum();
+    let b_lt: u32 = stats.c[2].iter().sum();
+    let eq_nonzero: u32 = stats.c[4].iter().skip(1).sum();
+    match (a_lt == 0, b_lt == 0) {
+        (true, true) | (false, false) => Domination::None,
+        (true, false) => {
+            if eq_nonzero == 0 {
+                Domination::AStrictlyDominatesB
+            } else {
+                Domination::ADominatesB
+            }
+        }
+        (false, true) => {
+            if eq_nonzero == 0 {
+                Domination::BStrictlyDominatesA
+            } else {
+                Domination::BDominatesA
+            }
+        }
+    }
+}
+
+/// The result of an intersection estimation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IntersectionEstimate {
+    /// |A \ B| estimate (MLE only; NaN for inclusion-exclusion).
+    pub a_minus_b: f64,
+    /// |B \ A| estimate (MLE only; NaN for inclusion-exclusion).
+    pub b_minus_a: f64,
+    /// |A ∩ B| estimate.
+    pub intersection: f64,
+    /// |A ∪ B| estimate (from the merged registers).
+    pub union: f64,
+    /// Domination classification of the pair.
+    pub domination: Domination,
+}
+
+impl IntersectionEstimate {
+    /// Jaccard similarity |A∩B| / |A∪B| — the paper's *triangle density*
+    /// proxy (§5, Figure 3).
+    pub fn jaccard(&self) -> f64 {
+        if self.union <= 0.0 {
+            0.0
+        } else {
+            (self.intersection / self.union).clamp(0.0, 1.0)
+        }
+    }
+}
+
+/// Inclusion-exclusion intersection estimate (paper Eq. 18), clamped at 0
+/// from below (the paper notes the raw difference can go negative).
+pub fn inclusion_exclusion(a: &Hll, b: &Hll) -> IntersectionEstimate {
+    let stats = pair_stats(a, b);
+    inclusion_exclusion_from_stats(&stats)
+}
+
+pub(crate) fn inclusion_exclusion_from_stats(
+    stats: &PairStats,
+) -> IntersectionEstimate {
+    let q = stats.q;
+    let est_a = ertl_estimate_from_hist(&stats.hist_a(), q);
+    let est_b = ertl_estimate_from_hist(&stats.hist_b(), q);
+    let est_u = ertl_estimate_from_hist(&stats.hist_union(), q);
+    IntersectionEstimate {
+        a_minus_b: f64::NAN,
+        b_minus_a: f64::NAN,
+        intersection: (est_a + est_b - est_u).max(0.0),
+        union: est_u,
+        domination: domination(stats),
+    }
+}
+
+/// Options for the joint MLE optimizer. The defaults mirror the L2 JAX
+/// artifact (`python/compile/model.py`) so both backends land on the same
+/// optimum.
+#[derive(Debug, Clone, Copy)]
+pub struct MleOptions {
+    /// Maximum number of Adam iterations.
+    pub iterations: usize,
+    /// Initial learning rate (decays exponentially to `lr_final`).
+    pub lr_initial: f64,
+    pub lr_final: f64,
+    /// Early-stop once the gradient ∞-norm (normalized by the register
+    /// count m, whose scale the counts carry) stays below this for two
+    /// consecutive iterations (0 disables; the JAX artifact runs the fixed
+    /// count — both converge to the same optimum).
+    pub tolerance: f64,
+}
+
+impl Default for MleOptions {
+    fn default() -> Self {
+        Self {
+            iterations: 150,
+            lr_initial: 0.5,
+            lr_final: 0.02,
+            tolerance: 2e-4,
+        }
+    }
+}
+
+/// Compact per-k solver view of [`PairStats`]: only rows with a nonzero
+/// count survive, with counts pre-cast to f64 — the §Perf hot-path layout
+/// (most of the q+2 rows are empty for real sketches).
+struct SolverStats {
+    /// (t = 2^-min(k,q), is_k0, is_saturation, c_a_lt, c_a_gt, c_b_lt,
+    ///  c_b_gt, c_eq)
+    entries: Vec<(f64, bool, bool, f64, f64, f64, f64, f64)>,
+}
+
+impl SolverStats {
+    fn new(stats: &PairStats) -> Self {
+        let q = stats.q;
+        let mut entries = Vec::with_capacity(16);
+        for k in 0..=q + 1 {
+            let c0 = stats.c[0][k];
+            let c1 = stats.c[1][k];
+            let c2 = stats.c[2][k];
+            let c3 = stats.c[3][k];
+            let c4 = stats.c[4][k];
+            if c0 | c1 | c2 | c3 | c4 == 0 {
+                continue;
+            }
+            entries.push((
+                tk(k, q),
+                k == 0,
+                k == q + 1,
+                c0 as f64,
+                c1 as f64,
+                c2 as f64,
+                c3 as f64,
+                c4 as f64,
+            ));
+        }
+        Self { entries }
+    }
+
+    /// Gradient of the log-likelihood w.r.t. θ = ln λ, computed with three
+    /// exponentials per entry: `ea = e^{-va·t}`, `eb`, `ex`, from which
+    /// every ΔF and equal-pmf term follows by products.
+    fn grad(&self, va: f64, vb: f64, vx: f64) -> [f64; 3] {
+        let mut ga = 0.0;
+        let mut gb = 0.0;
+        let mut gx = 0.0;
+        for &(t, k0, sat, c0, c1, c2, c3, c4) in &self.entries {
+            if k0 {
+                // every ΔF_u(0) = e^{-u}: d/du log = -1
+                ga -= c0 + c1 + c4;
+                gb -= c2 + c3 + c4;
+                gx -= c0 + c2 + c4;
+                continue;
+            }
+            let ea = (-va * t).exp();
+            let eb = (-vb * t).exp();
+            let ex = (-vx * t).exp();
+
+            // 1 - e^{-ut}, cancellation-free for tiny ut (≈ ut·(1 - ut/2)).
+            #[inline]
+            fn om(ut: f64, e: f64) -> f64 {
+                if ut < 1e-8 {
+                    (ut * (1.0 - 0.5 * ut)).max(1e-300)
+                } else {
+                    1.0 - e
+                }
+            }
+
+            // d log ΔF_u(k)/du given e = e^{-u·t}:
+            //   mid: -t + t·e/(1-e);  saturation row: t·e/(1-e)
+            let base = if sat { 0.0 } else { -t };
+            if c0 != 0.0 {
+                let u = va + vx;
+                let e = ea * ex;
+                let d = (base + t * e / om(u * t, e)) * c0;
+                ga += d;
+                gx += d;
+            }
+            if c3 != 0.0 {
+                let d = (base + t * eb / om(vb * t, eb)) * c3;
+                gb += d;
+            }
+            if c2 != 0.0 {
+                let u = vb + vx;
+                let e = eb * ex;
+                let d = (base + t * e / om(u * t, e)) * c2;
+                gb += d;
+                gx += d;
+            }
+            if c1 != 0.0 {
+                let d = (base + t * ea / om(va * t, ea)) * c1;
+                ga += d;
+            }
+            if c4 != 0.0 {
+                // equal-register pmf bracket terms from shared exps
+                let a = ea * ex;
+                let bv = eb * ex;
+                let c = ea * eb * ex;
+                let x = ex;
+                let oma = om((va + vx) * t, a);
+                let omb = om((vb + vx) * t, bv);
+                let omxx = om(vx * t, x);
+                let br = (oma * omb + c * omxx).max(1e-300);
+                let dba = t * (a * omb - c * omxx);
+                let dbb = t * (bv * oma - c * omxx);
+                let dbx = t * (a * omb + bv * oma - c * omxx + c * x);
+                ga += (base + dba / br) * c4;
+                gb += (base + dbb / br) * c4;
+                gx += (base + dbx / br) * c4;
+            }
+        }
+        [ga * va, gb * vb, gx * vx]
+    }
+}
+
+/// Joint Poisson MLE intersection estimate (Ertl 2017; paper §4.1).
+pub fn mle_intersect(a: &Hll, b: &Hll, opts: &MleOptions) -> IntersectionEstimate {
+    let stats = pair_stats(a, b);
+    mle_from_stats(&stats, opts)
+}
+
+/// MLE from precomputed statistics (the PJRT batcher and benches reuse
+/// stats across estimators).
+pub fn mle_from_stats(stats: &PairStats, opts: &MleOptions) -> IntersectionEstimate {
+    let q = stats.q;
+    let m = stats.m as f64;
+    let est_a = ertl_estimate_from_hist(&stats.hist_a(), q);
+    let est_b = ertl_estimate_from_hist(&stats.hist_b(), q);
+    let est_u = ertl_estimate_from_hist(&stats.hist_union(), q);
+
+    // Degenerate cases: an empty side pins the intersection at 0.
+    if est_a <= 0.0 || est_b <= 0.0 {
+        return IntersectionEstimate {
+            a_minus_b: est_a,
+            b_minus_a: est_b,
+            intersection: 0.0,
+            union: est_u,
+            domination: domination(stats),
+        };
+    }
+
+    // Initialization from inclusion-exclusion, clamped into feasibility.
+    let ix = (est_a + est_b - est_u).clamp(1.0, est_a.min(est_b));
+    let mut theta = [
+        (est_a - ix).max(1.0).ln(),
+        (est_b - ix).max(1.0).ln(),
+        ix.ln(),
+    ];
+    let theta_max = m.ln() + 48.0;
+
+    let solver = SolverStats::new(stats);
+    let m_inv = 1.0 / m;
+    let mut mom = [0.0f64; 3];
+    let mut vel = [0.0f64; 3];
+    let (beta1, beta2, eps) = (0.9, 0.999, 1e-8);
+    let decay = (opts.lr_final / opts.lr_initial)
+        .powf(1.0 / opts.iterations as f64);
+    let mut lr = opts.lr_initial;
+    // incremental bias-correction products (avoids powf in the loop)
+    let mut b1t = 1.0f64;
+    let mut b2t = 1.0f64;
+    let mut calm_iters = 0u32;
+
+    for _ in 0..opts.iterations {
+        let g = solver.grad(
+            theta[0].exp() * m_inv,
+            theta[1].exp() * m_inv,
+            theta[2].exp() * m_inv,
+        );
+        b1t *= beta1;
+        b2t *= beta2;
+        let mut g_inf = 0.0f64;
+        for d in 0..3 {
+            mom[d] = beta1 * mom[d] + (1.0 - beta1) * g[d];
+            vel[d] = beta2 * vel[d] + (1.0 - beta2) * g[d] * g[d];
+            let mhat = mom[d] / (1.0 - b1t);
+            let vhat = vel[d] / (1.0 - b2t);
+            theta[d] = (theta[d] + lr * mhat / (vhat.sqrt() + eps))
+                .clamp(-11.0, theta_max);
+            g_inf = g_inf.max(g[d].abs());
+        }
+        lr *= decay;
+        if opts.tolerance > 0.0 {
+            if g_inf < opts.tolerance * m {
+                calm_iters += 1;
+                if calm_iters >= 2 {
+                    break;
+                }
+            } else {
+                calm_iters = 0;
+            }
+        }
+    }
+
+    IntersectionEstimate {
+        a_minus_b: theta[0].exp(),
+        b_minus_a: theta[1].exp(),
+        intersection: theta[2].exp(),
+        union: est_u,
+        domination: domination(stats),
+    }
+}
+
+/// Log-likelihood of the Eq. 19 statistics under the Poisson model, at
+/// `theta = (ln λa, ln λb, ln λx)`. Exposed for tests and benches.
+pub fn log_likelihood(theta: &[f64; 3], stats: &PairStats) -> f64 {
+    let m = stats.m as f64;
+    let va = theta[0].exp() / m;
+    let vb = theta[1].exp() / m;
+    let vx = theta[2].exp() / m;
+    let q = stats.q;
+    let mut ll = 0.0;
+    for k in 0..=q + 1 {
+        let t = tk(k, q);
+        let sat = k == q + 1;
+        let add = |c: u32, u: f64| -> f64 {
+            if c == 0 {
+                0.0
+            } else {
+                c as f64 * log_df(u, t, k == 0, sat)
+            }
+        };
+        ll += add(stats.c[0][k], va + vx);
+        ll += add(stats.c[3][k], vb);
+        ll += add(stats.c[2][k], vb + vx);
+        ll += add(stats.c[1][k], va);
+        let ceq = stats.c[4][k];
+        if ceq != 0 {
+            ll += ceq as f64 * log_pmf_eq(va, vb, vx, t, k == 0, sat);
+        }
+    }
+    ll
+}
+
+/// Analytic gradient of [`log_likelihood`] w.r.t. θ (chain rule through
+/// `v = e^θ / m` gives a clean `v·∂/∂v` form). Verified against central
+/// differences in the tests.
+pub fn grad_log_likelihood(theta: &[f64; 3], stats: &PairStats) -> [f64; 3] {
+    let m = stats.m as f64;
+    let va = theta[0].exp() / m;
+    let vb = theta[1].exp() / m;
+    let vx = theta[2].exp() / m;
+    let q = stats.q;
+    // accumulate ∂ll/∂v (per-register-rate space)
+    let mut ga = 0.0;
+    let mut gb = 0.0;
+    let mut gx = 0.0;
+    for k in 0..=q + 1 {
+        let t = tk(k, q);
+        let k0 = k == 0;
+        let sat = k == q + 1;
+
+        // d log ΔF_u(k) / du
+        let c0 = stats.c[0][k];
+        if c0 != 0 {
+            let d = dlog_df(va + vx, t, k0, sat) * c0 as f64;
+            ga += d;
+            gx += d;
+        }
+        let c3 = stats.c[3][k];
+        if c3 != 0 {
+            gb += dlog_df(vb, t, k0, sat) * c3 as f64;
+        }
+        let c2 = stats.c[2][k];
+        if c2 != 0 {
+            let d = dlog_df(vb + vx, t, k0, sat) * c2 as f64;
+            gb += d;
+            gx += d;
+        }
+        let c1 = stats.c[1][k];
+        if c1 != 0 {
+            ga += dlog_df(va, t, k0, sat) * c1 as f64;
+        }
+
+        let ceq = stats.c[4][k];
+        if ceq != 0 {
+            let (da, db, dx) = dlog_pmf_eq(va, vb, vx, t, k0, sat);
+            let w = ceq as f64;
+            ga += w * da;
+            gb += w * db;
+            gx += w * dx;
+        }
+    }
+    // chain rule: dll/dθ = v·m·(dll/dλ)… directly: λ = e^θ, v = λ/m,
+    // dll/dθ = dll/dv · dv/dθ = dll/dv · v.
+    [ga * va, gb * vb, gx * vx]
+}
+
+#[inline]
+fn tk(k: usize, q: usize) -> f64 {
+    if k <= q {
+        (-(k as f64)).exp2()
+    } else {
+        (-(q as f64)).exp2()
+    }
+}
+
+/// log ΔF_u(k), the stable expm1 form (see model.py `log_dF`).
+#[inline]
+fn log_df(u: f64, t: f64, k0: bool, sat: bool) -> f64 {
+    const TINY: f64 = 1e-300;
+    if k0 {
+        return -u;
+    }
+    let ut = u * t;
+    let body = (-(-ut).exp_m1()).max(TINY).ln();
+    if sat {
+        body
+    } else {
+        -ut + body
+    }
+}
+
+/// d log ΔF_u(k) / du.
+#[inline]
+fn dlog_df(u: f64, t: f64, k0: bool, sat: bool) -> f64 {
+    if k0 {
+        return -1.0;
+    }
+    let ut = u * t;
+    let e = (-ut).exp();
+    // d/du log(1 - e^{-ut}) = t·e^{-ut} / (1 - e^{-ut})
+    let dsat = t * e / (-(-ut).exp_m1()).max(1e-300);
+    if sat {
+        dsat
+    } else {
+        // log ΔF = -ut + log(1 - e^{-ut})
+        -t + dsat
+    }
+}
+
+/// log pmf of an equal register pair (see model.py bracket derivation).
+#[inline]
+fn log_pmf_eq(va: f64, vb: f64, vx: f64, t: f64, k0: bool, sat: bool) -> f64 {
+    const TINY: f64 = 1e-300;
+    let vs = va + vb + vx;
+    if k0 {
+        return -vs;
+    }
+    let br = bracket(va, vb, vx, t).max(TINY).ln();
+    if sat {
+        br
+    } else {
+        -vs * t + br
+    }
+}
+
+/// B(t) = expm1(-(va+vx)t)·expm1(-(vb+vx)t) + e^{-vs·t}·(-expm1(-vx t)).
+#[inline]
+fn bracket(va: f64, vb: f64, vx: f64, t: f64) -> f64 {
+    let ea = (-(va + vx) * t).exp_m1();
+    let eb = (-(vb + vx) * t).exp_m1();
+    let c = (-(va + vb + vx) * t).exp();
+    ea * eb + c * (-(-vx * t).exp_m1())
+}
+
+/// Gradient of log pmf_eq w.r.t. (va, vb, vx).
+#[inline]
+fn dlog_pmf_eq(
+    va: f64,
+    vb: f64,
+    vx: f64,
+    t: f64,
+    k0: bool,
+    sat: bool,
+) -> (f64, f64, f64) {
+    if k0 {
+        return (-1.0, -1.0, -1.0);
+    }
+    // A = e^{-(va+vx)t}, Bv = e^{-(vb+vx)t}, C = e^{-vs·t}, X = e^{-vx·t}
+    let a = (-(va + vx) * t).exp();
+    let bv = (-(vb + vx) * t).exp();
+    let c = (-(va + vb + vx) * t).exp();
+    let x = (-vx * t).exp();
+    let br = ((1.0 - a) * (1.0 - bv) + c * (1.0 - x)).max(1e-300);
+    // ∂B/∂va = t·A·(1-Bv) - t·C·(1-X); symmetric for vb;
+    // ∂B/∂vx = t·A·(1-Bv) + t·Bv·(1-A) - t·C·(1-X) + t·C·X.
+    let dba = t * (a * (1.0 - bv) - c * (1.0 - x));
+    let dbb = t * (bv * (1.0 - a) - c * (1.0 - x));
+    let dbx = t * (a * (1.0 - bv) + bv * (1.0 - a) - c * (1.0 - x) + c * x);
+    if sat {
+        (dba / br, dbb / br, dbx / br)
+    } else {
+        (-t + dba / br, -t + dbb / br, -t + dbx / br)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::Xoshiro256ss;
+    use crate::hll::{Hll, HllConfig};
+    use crate::util::prop::Cases;
+
+    fn planted(
+        p: u8,
+        na: u64,
+        nb: u64,
+        nx: u64,
+        seed: u64,
+    ) -> (Hll, Hll) {
+        let cfg = HllConfig::new(p, 0x1717);
+        let mut rng = Xoshiro256ss::new(seed);
+        let mut a = Hll::new(cfg);
+        let mut b = Hll::new(cfg);
+        for _ in 0..nx {
+            let e = rng.next_u64();
+            a.insert(e);
+            b.insert(e);
+        }
+        for _ in 0..na - nx {
+            a.insert(rng.next_u64());
+        }
+        for _ in 0..nb - nx {
+            b.insert(rng.next_u64());
+        }
+        (a, b)
+    }
+
+    #[test]
+    fn pair_stats_partition_registers() {
+        Cases::new("pair_stats_partition", 20).run(|rng| {
+            let (a, b) = planted(
+                7,
+                1 + rng.next_below(4000),
+                1 + rng.next_below(4000),
+                0,
+                rng.next_u64(),
+            );
+            let s = pair_stats(&a, &b);
+            let total: u32 = s.c.iter().map(|v| v.iter().sum::<u32>()).sum();
+            // every register counted exactly twice for A</B> pairs and once
+            // in c^= — i.e. rows 0+1+4 sum to m, rows 2+3+4 sum to m.
+            let m = s.m as u32;
+            let a_side: u32 = s.c[0].iter().sum::<u32>()
+                + s.c[1].iter().sum::<u32>()
+                + s.c[4].iter().sum::<u32>();
+            let b_side: u32 = s.c[2].iter().sum::<u32>()
+                + s.c[3].iter().sum::<u32>()
+                + s.c[4].iter().sum::<u32>();
+            assert_eq!(a_side, m);
+            assert_eq!(b_side, m);
+            assert_eq!(total, 2 * m - s.c[4].iter().sum::<u32>());
+        });
+    }
+
+    #[test]
+    fn pair_stats_sparse_equals_dense() {
+        Cases::new("pair_stats_sparse_dense", 15).run(|rng| {
+            let (a, b) = planted(
+                8,
+                1 + rng.next_below(40),
+                1 + rng.next_below(40),
+                0,
+                rng.next_u64(),
+            );
+            assert!(!a.is_dense() && !b.is_dense());
+            let mut ad = a.clone();
+            let mut bd = b.clone();
+            ad.saturate();
+            bd.saturate();
+            assert_eq!(pair_stats(&a, &b), pair_stats(&ad, &bd));
+            assert_eq!(pair_stats(&a, &bd), pair_stats(&ad, &b));
+        });
+    }
+
+    #[test]
+    fn hist_views_match_merged_sketches() {
+        let (a, b) = planted(8, 2000, 1500, 400, 9);
+        let s = pair_stats(&a, &b);
+        assert_eq!(s.hist_a(), a.histogram());
+        assert_eq!(s.hist_b(), b.histogram());
+        let mut u = a.clone();
+        u.merge(&b);
+        assert_eq!(s.hist_union(), u.histogram());
+    }
+
+    #[test]
+    fn analytic_gradient_matches_finite_differences() {
+        let (a, b) = planted(6, 3000, 2500, 800, 4);
+        let stats = pair_stats(&a, &b);
+        let theta = [2200.0f64.ln(), 1700.0f64.ln(), 800.0f64.ln()];
+        let g = grad_log_likelihood(&theta, &stats);
+        let h = 1e-6;
+        for d in 0..3 {
+            let mut tp = theta;
+            tp[d] += h;
+            let mut tm = theta;
+            tm[d] -= h;
+            let fd = (log_likelihood(&tp, &stats)
+                - log_likelihood(&tm, &stats))
+                / (2.0 * h);
+            assert!(
+                (fd - g[d]).abs() <= 1e-4 * (1.0 + fd.abs().max(g[d].abs())),
+                "dim {d}: fd={fd} analytic={}",
+                g[d]
+            );
+        }
+    }
+
+    #[test]
+    fn solver_gradient_matches_reference_gradient() {
+        // the shared-exponential fast path must agree with the plain
+        // analytic gradient (which itself matches finite differences)
+        Cases::new("solver_grad", 20).run(|rng| {
+            let (a, b) = planted(
+                6,
+                100 + rng.next_below(4000),
+                100 + rng.next_below(4000),
+                rng.next_below(100),
+                rng.next_u64(),
+            );
+            let stats = pair_stats(&a, &b);
+            let solver = SolverStats::new(&stats);
+            let m = stats.m as f64;
+            for _ in 0..5 {
+                let theta = [
+                    1.0 + rng.next_f64() * 8.0,
+                    1.0 + rng.next_f64() * 8.0,
+                    rng.next_f64() * 8.0,
+                ];
+                let fast = solver.grad(
+                    theta[0].exp() / m,
+                    theta[1].exp() / m,
+                    theta[2].exp() / m,
+                );
+                let reference = grad_log_likelihood(&theta, &stats);
+                for d in 0..3 {
+                    assert!(
+                        (fast[d] - reference[d]).abs()
+                            <= 1e-6 * (1.0 + reference[d].abs()),
+                        "dim {d}: fast={} ref={}",
+                        fast[d],
+                        reference[d]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn mle_recovers_large_intersections() {
+        for (na, nb, nx) in [(3000, 3000, 1500u64), (5000, 5000, 4000)] {
+            let (a, b) = planted(8, na, nb, nx, na * 31 + nx);
+            let est = mle_intersect(&a, &b, &MleOptions::default());
+            let rel = (est.intersection - nx as f64).abs() / nx as f64;
+            assert!(rel < 0.25, "nx={nx} est={} rel={rel}", est.intersection);
+            let u = (na + nb - nx) as f64;
+            assert!((est.union - u).abs() / u < 0.1);
+        }
+    }
+
+    #[test]
+    fn mle_beats_inclusion_exclusion_on_average() {
+        // Fig. 8's qualitative claim at a moderate overlap.
+        let mut err_mle = 0.0;
+        let mut err_ix = 0.0;
+        let trials = 12;
+        for s in 0..trials {
+            let (a, b) = planted(8, 10_000, 10_000, 2_000, 1000 + s);
+            let stats = pair_stats(&a, &b);
+            let mle = mle_from_stats(&stats, &MleOptions::default());
+            let ix = inclusion_exclusion_from_stats(&stats);
+            err_mle += (mle.intersection - 2000.0).abs();
+            err_ix += (ix.intersection - 2000.0).abs();
+        }
+        assert!(
+            err_mle <= err_ix * 1.1,
+            "mle={err_mle} ix={err_ix} (MLE should not be worse)"
+        );
+    }
+
+    #[test]
+    fn disjoint_sets_do_not_hallucinate() {
+        let (a, b) = planted(8, 4000, 4000, 0, 77);
+        let est = mle_intersect(&a, &b, &MleOptions::default());
+        assert!(
+            est.intersection < 0.15 * 4000.0,
+            "phantom intersection {}",
+            est.intersection
+        );
+    }
+
+    #[test]
+    fn domination_detection() {
+        let cfg = HllConfig::new(8, 5);
+        // B ⊂ A with |A| >> |B| ⇒ A (possibly strictly) dominates B.
+        let mut rng = Xoshiro256ss::new(8);
+        let mut a = Hll::new(cfg);
+        let mut b = Hll::new(cfg);
+        let common: Vec<u64> = (0..5).map(|_| rng.next_u64()).collect();
+        for &e in &common {
+            a.insert(e);
+            b.insert(e);
+        }
+        for _ in 0..100_000 {
+            a.insert(rng.next_u64());
+        }
+        let s = pair_stats(&a, &b);
+        assert!(matches!(
+            domination(&s),
+            Domination::ADominatesB | Domination::AStrictlyDominatesB
+        ));
+        // and the mirror:
+        let s2 = pair_stats(&b, &a);
+        assert!(matches!(
+            domination(&s2),
+            Domination::BDominatesA | Domination::BStrictlyDominatesA
+        ));
+    }
+
+    #[test]
+    fn jaccard_bounded() {
+        Cases::new("jaccard", 10).run(|rng| {
+            let (a, b) = planted(
+                7,
+                1 + rng.next_below(5000),
+                1 + rng.next_below(5000),
+                0,
+                rng.next_u64(),
+            );
+            let est = mle_intersect(&a, &b, &MleOptions::default());
+            let j = est.jaccard();
+            assert!((0.0..=1.0).contains(&j));
+        });
+    }
+
+    #[test]
+    fn empty_side_yields_zero_intersection() {
+        let cfg = HllConfig::new(8, 5);
+        let empty = Hll::new(cfg);
+        let mut full = Hll::new(cfg);
+        for x in 0..1000u64 {
+            full.insert(x);
+        }
+        let est = mle_intersect(&empty, &full, &MleOptions::default());
+        assert_eq!(est.intersection, 0.0);
+    }
+}

@@ -1,0 +1,488 @@
+//! HyperLogLog cardinality sketches (paper §4, Algorithm 6).
+//!
+//! An `HLL(p, q, h)` sketch has `r = 2^p` registers holding values in
+//! `[0, q + 1]` where `q = 64 - p`. For a hashed 64-bit word `w`,
+//! `ξ(w)` (the top `p` bits) selects a register and `ρ(w)` (number of
+//! leading zeros of the remaining `q` bits, plus one) is max-ed into it.
+//!
+//! Two representations, as in Heule et al. 2013 / paper §4:
+//! * **sparse** — a sorted list of `(index, value)` pairs for small
+//!   cardinalities (most graph vertices have small degree);
+//! * **dense** — a flat `r`-byte register array, saturated to from sparse
+//!   once the pair list exceeds `r / 4` entries.
+//!
+//! Merging takes element-wise register maxima and requires both sketches to
+//! share `(p, hash seed)` — enforced at the type level by [`HllConfig`].
+
+mod beta;
+mod estimate;
+mod intersect;
+mod serde;
+
+pub use beta::{
+    beta_correction, eval_beta, fit_beta, BetaCoefficients, BETA_TABLE,
+};
+pub use estimate::{alpha, ertl_estimate_from_hist, Estimator};
+pub use intersect::{
+    domination, grad_log_likelihood, inclusion_exclusion, log_likelihood,
+    mle_from_stats, mle_intersect, pair_stats, Domination,
+    IntersectionEstimate, MleOptions,
+    PairStats,
+};
+
+use crate::hash::XxHash64;
+
+/// Shared sketch parameters: all sketches in a DegreeSketch instance are
+/// `HLL(p, q, h)` with `p + q = 64` and a fixed hash seed (paper §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HllConfig {
+    p: u8,
+    hasher: XxHash64,
+}
+
+impl HllConfig {
+    /// Create a config with prefix size `p` (typically 4..=16) and a hash
+    /// seed shared by every processor.
+    pub fn new(p: u8, seed: u64) -> Self {
+        assert!((4..=16).contains(&p), "p must be in 4..=16, got {p}");
+        Self {
+            p,
+            hasher: XxHash64::new(seed),
+        }
+    }
+
+    #[inline]
+    pub fn p(&self) -> u8 {
+        self.p
+    }
+
+    /// q = 64 - p: the number of suffix bits scanned for leading zeros.
+    #[inline]
+    pub fn q(&self) -> u8 {
+        64 - self.p
+    }
+
+    /// r = 2^p: the register count.
+    #[inline]
+    pub fn num_registers(&self) -> usize {
+        1usize << self.p
+    }
+
+    /// Maximum register value `kmax = q + 1` (the saturation value).
+    #[inline]
+    pub fn kmax(&self) -> u8 {
+        self.q() + 1
+    }
+
+    #[inline]
+    pub fn hasher(&self) -> &XxHash64 {
+        &self.hasher
+    }
+
+    /// Sparse→dense saturation threshold (paper Alg. 6: `|R| > r / 4`).
+    #[inline]
+    fn saturation_threshold(&self) -> usize {
+        self.num_registers() / 4
+    }
+
+    /// Decompose a hashed word into `(register index, ρ)`.
+    #[inline]
+    pub fn split_hash(&self, w: u64) -> (u32, u8) {
+        let q = self.q() as u32;
+        let j = (w >> q) as u32; // top p bits
+        let rest = w << self.p; // remaining q bits, left-aligned
+        let rho = if rest == 0 {
+            q + 1
+        } else {
+            (rest.leading_zeros() + 1).min(q + 1)
+        };
+        (j, rho as u8)
+    }
+}
+
+/// Register storage: sparse pair list or dense byte array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Registers {
+    /// Sorted by index; indices fit in u16 because p <= 16.
+    Sparse(Vec<(u16, u8)>),
+    Dense(Vec<u8>),
+}
+
+/// A single HyperLogLog sketch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hll {
+    config: HllConfig,
+    regs: Registers,
+}
+
+impl Hll {
+    /// Fresh empty sketch (sparse mode).
+    pub fn new(config: HllConfig) -> Self {
+        Self {
+            config,
+            regs: Registers::Sparse(Vec::new()),
+        }
+    }
+
+    #[inline]
+    pub fn config(&self) -> &HllConfig {
+        &self.config
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self.regs, Registers::Dense(_))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match &self.regs {
+            Registers::Sparse(v) => v.is_empty(),
+            Registers::Dense(d) => d.iter().all(|&x| x == 0),
+        }
+    }
+
+    /// INSERT(S, e): hash a vertex id and max it into its register.
+    #[inline]
+    pub fn insert(&mut self, element: u64) {
+        let w = self.config.hasher.hash_u64(element);
+        self.insert_hashed(w);
+    }
+
+    /// Insert a pre-hashed 64-bit word.
+    #[inline]
+    pub fn insert_hashed(&mut self, w: u64) {
+        let (j, rho) = self.config.split_hash(w);
+        self.insert_register(j, rho);
+    }
+
+    /// INSERT(S, j, x): max `x` into register `j`.
+    pub fn insert_register(&mut self, j: u32, x: u8) {
+        debug_assert!((j as usize) < self.config.num_registers());
+        debug_assert!(x <= self.config.kmax());
+        if x == 0 {
+            return;
+        }
+        match &mut self.regs {
+            Registers::Dense(d) => {
+                let slot = &mut d[j as usize];
+                if x > *slot {
+                    *slot = x;
+                }
+            }
+            Registers::Sparse(v) => {
+                match v.binary_search_by_key(&(j as u16), |&(i, _)| i) {
+                    Ok(pos) => {
+                        if x > v[pos].1 {
+                            v[pos].1 = x;
+                        }
+                    }
+                    Err(pos) => {
+                        v.insert(pos, (j as u16, x));
+                        if v.len() > self.config.saturation_threshold() {
+                            self.saturate();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// SATURATE(S): promote sparse storage to a dense register array.
+    pub fn saturate(&mut self) {
+        if let Registers::Sparse(v) = &self.regs {
+            let mut dense = vec![0u8; self.config.num_registers()];
+            for &(j, x) in v {
+                dense[j as usize] = x;
+            }
+            self.regs = Registers::Dense(dense);
+        }
+    }
+
+    /// MERGE: element-wise register max. Panics if configs differ (sketches
+    /// hashed with different `(p, seed)` are not comparable — paper §4).
+    pub fn merge(&mut self, other: &Hll) {
+        assert_eq!(
+            self.config, other.config,
+            "cannot merge sketches with different (p, seed)"
+        );
+        match &other.regs {
+            Registers::Sparse(v) => {
+                for &(j, x) in v {
+                    self.insert_register(j as u32, x);
+                }
+            }
+            Registers::Dense(d) => {
+                self.saturate();
+                if let Registers::Dense(mine) = &mut self.regs {
+                    for (a, &b) in mine.iter_mut().zip(d.iter()) {
+                        if b > *a {
+                            *a = b;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Register value at index `j`.
+    #[inline]
+    pub fn register(&self, j: u32) -> u8 {
+        match &self.regs {
+            Registers::Dense(d) => d[j as usize],
+            Registers::Sparse(v) => v
+                .binary_search_by_key(&(j as u16), |&(i, _)| i)
+                .map(|pos| v[pos].1)
+                .unwrap_or(0),
+        }
+    }
+
+    /// Number of nonzero registers currently stored.
+    pub fn nonzero_registers(&self) -> usize {
+        match &self.regs {
+            Registers::Sparse(v) => v.len(),
+            Registers::Dense(d) => d.iter().filter(|&&x| x != 0).count(),
+        }
+    }
+
+    /// Dense copy of the register array (allocates for sparse sketches).
+    pub fn to_dense_registers(&self) -> Vec<u8> {
+        match &self.regs {
+            Registers::Dense(d) => d.clone(),
+            Registers::Sparse(v) => {
+                let mut dense = vec![0u8; self.config.num_registers()];
+                for &(j, x) in v {
+                    dense[j as usize] = x;
+                }
+                dense
+            }
+        }
+    }
+
+    /// Borrow the dense register slice if already saturated.
+    pub fn dense_registers(&self) -> Option<&[u8]> {
+        match &self.regs {
+            Registers::Dense(d) => Some(d),
+            Registers::Sparse(_) => None,
+        }
+    }
+
+    /// Iterate `(index, value)` over nonzero registers without allocating.
+    pub fn iter_nonzero(&self) -> impl Iterator<Item = (u32, u8)> + '_ {
+        let (sparse, dense): (Option<&[(u16, u8)]>, Option<&[u8]>) =
+            match &self.regs {
+                Registers::Sparse(v) => (Some(v.as_slice()), None),
+                Registers::Dense(d) => (None, Some(d.as_slice())),
+            };
+        sparse
+            .into_iter()
+            .flatten()
+            .map(|&(j, x)| (j as u32, x))
+            .chain(
+                dense
+                    .into_iter()
+                    .flatten()
+                    .enumerate()
+                    .filter(|&(_, &x)| x != 0)
+                    .map(|(j, &x)| (j as u32, x)),
+            )
+    }
+
+    /// Histogram of register values: `hist[k] = #{j : reg_j == k}`,
+    /// length `kmax + 1`. The sufficient statistic for all estimators.
+    pub fn histogram(&self) -> Vec<u32> {
+        let mut hist = vec![0u32; self.config.kmax() as usize + 1];
+        match &self.regs {
+            Registers::Dense(d) => {
+                for &x in d {
+                    hist[x as usize] += 1;
+                }
+            }
+            Registers::Sparse(v) => {
+                hist[0] = (self.config.num_registers() - v.len()) as u32;
+                for &(_, x) in v {
+                    hist[x as usize] += 1;
+                }
+            }
+        }
+        hist
+    }
+
+    /// `|S|` — cardinality estimate with the library-default estimator
+    /// (Ertl's improved estimator; see [`Estimator`] for alternatives).
+    pub fn estimate(&self) -> f64 {
+        self.estimate_with(Estimator::ErtlImproved)
+    }
+
+    /// Cardinality estimate with an explicit estimator.
+    pub fn estimate_with(&self, estimator: Estimator) -> f64 {
+        estimate::estimate(self, estimator)
+    }
+
+    /// Approximate heap footprint in bytes (for the semi-streaming space
+    /// accounting reported by the benches).
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + match &self.regs {
+                Registers::Sparse(v) => v.capacity() * 3,
+                Registers::Dense(d) => d.capacity(),
+            }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+
+    fn cfg(p: u8) -> HllConfig {
+        HllConfig::new(p, 0xD5EE_5EED)
+    }
+
+    #[test]
+    fn split_hash_bounds() {
+        let c = cfg(8);
+        for w in [0u64, 1, u64::MAX, 0x8000_0000_0000_0000, 0x00FF] {
+            let (j, rho) = c.split_hash(w);
+            assert!((j as usize) < c.num_registers());
+            assert!(rho >= 1 && rho <= c.kmax());
+        }
+        // all-zero suffix saturates
+        let (_, rho) = c.split_hash(0xFF00_0000_0000_0000 & !0u64 << 56);
+        assert_eq!(rho, c.kmax());
+    }
+
+    #[test]
+    fn empty_sketch_estimates_zero() {
+        let s = Hll::new(cfg(8));
+        assert!(s.is_empty());
+        assert!(s.estimate() < 1e-9);
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let mut a = Hll::new(cfg(8));
+        let mut b = Hll::new(cfg(8));
+        for x in 0..100u64 {
+            a.insert(x);
+            b.insert(x);
+            b.insert(x);
+            b.insert(x);
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn saturation_threshold_promotes() {
+        let c = cfg(6); // r = 64, threshold 16
+        let mut s = Hll::new(c);
+        let mut x = 0u64;
+        while !s.is_dense() {
+            s.insert(x);
+            x += 1;
+            assert!(x < 10_000, "never saturated");
+        }
+        assert!(s.nonzero_registers() > c.saturation_threshold());
+    }
+
+    #[test]
+    fn sparse_and_dense_agree() {
+        let mut sparse = Hll::new(cfg(10));
+        let mut dense = Hll::new(cfg(10));
+        dense.saturate();
+        for x in 0..200u64 {
+            sparse.insert(x * 7919);
+            dense.insert(x * 7919);
+        }
+        assert_eq!(sparse.histogram(), dense.histogram());
+        assert_eq!(sparse.to_dense_registers(), dense.to_dense_registers());
+        assert!((sparse.estimate() - dense.estimate()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_union_insert() {
+        Cases::new("merge_union", 30).run(|rng| {
+            let c = cfg(7);
+            let na = rng.next_below(3000) as u64;
+            let nb = rng.next_below(3000) as u64;
+            let mut a = Hll::new(c);
+            let mut b = Hll::new(c);
+            let mut u = Hll::new(c);
+            for _ in 0..na {
+                let e = rng.next_u64();
+                a.insert(e);
+                u.insert(e);
+            }
+            for _ in 0..nb {
+                let e = rng.next_u64();
+                b.insert(e);
+                u.insert(e);
+            }
+            a.merge(&b);
+            assert_eq!(a.histogram(), u.histogram());
+        });
+    }
+
+    #[test]
+    fn merge_is_commutative_and_idempotent() {
+        Cases::new("merge_comm", 20).run(|rng| {
+            let c = cfg(6);
+            let mut a = Hll::new(c);
+            let mut b = Hll::new(c);
+            for _ in 0..rng.next_below(500) {
+                a.insert(rng.next_u64());
+            }
+            for _ in 0..rng.next_below(500) {
+                b.insert(rng.next_u64());
+            }
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab.histogram(), ba.histogram());
+            let mut abb = ab.clone();
+            abb.merge(&b);
+            assert_eq!(ab.histogram(), abb.histogram());
+        });
+    }
+
+    #[test]
+    fn histogram_sums_to_r() {
+        let c = cfg(9);
+        let mut s = Hll::new(c);
+        for x in 0..5000u64 {
+            s.insert(x);
+        }
+        let hist = s.histogram();
+        assert_eq!(
+            hist.iter().map(|&x| x as usize).sum::<usize>(),
+            c.num_registers()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot merge")]
+    fn merge_mismatched_configs_panics() {
+        let mut a = Hll::new(cfg(8));
+        let b = Hll::new(cfg(9));
+        a.merge(&b);
+    }
+
+    #[test]
+    fn estimate_within_error_bound() {
+        // 1.04/sqrt(r) standard error; allow 5 sigma over a few trials.
+        Cases::new("est_bound", 20).run(|rng| {
+            let c = cfg(8);
+            let n = 1 + rng.next_below(50_000);
+            let mut s = Hll::new(c);
+            for _ in 0..n {
+                s.insert(rng.next_u64());
+            }
+            let est = s.estimate();
+            let se = 1.04 / (c.num_registers() as f64).sqrt();
+            let tol = (5.0 * se * n as f64).max(3.0);
+            assert!(
+                (est - n as f64).abs() <= tol,
+                "n={n} est={est} tol={tol}"
+            );
+        });
+    }
+}

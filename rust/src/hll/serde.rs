@@ -1,0 +1,167 @@
+//! Binary (de)serialization of HLL sketches — the substrate of the
+//! "leave-behind, persistent query engine" property the paper emphasizes:
+//! an accumulated DegreeSketch is stored to disk once and re-loaded for
+//! later query sessions without another pass over the edge stream.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic  u32   0x48_4C_4C_31 ("HLL1")
+//! p      u8
+//! seed   u64
+//! mode   u8    0 = sparse, 1 = dense
+//! sparse: count u32, then count × (index u16, value u8)
+//! dense:  r × value u8
+//! ```
+
+use std::io::{self, Read, Write};
+
+use super::{Hll, HllConfig, Registers};
+
+const MAGIC: u32 = 0x484C_4C31; // "HLL1"
+
+impl Hll {
+    /// Serialize to a writer. The hash seed travels with the sketch so a
+    /// reloaded instance keeps merging/intersecting consistently.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&[self.config.p()])?;
+        w.write_all(&self.config.hasher().seed().to_le_bytes())?;
+        match &self.regs {
+            Registers::Sparse(v) => {
+                w.write_all(&[0u8])?;
+                w.write_all(&(v.len() as u32).to_le_bytes())?;
+                for &(j, x) in v {
+                    w.write_all(&j.to_le_bytes())?;
+                    w.write_all(&[x])?;
+                }
+            }
+            Registers::Dense(d) => {
+                w.write_all(&[1u8])?;
+                w.write_all(d)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Deserialize from a reader; validates magic, p and register bounds.
+    pub fn read_from<R: Read>(r: &mut R) -> io::Result<Hll> {
+        let magic = read_u32(r)?;
+        if magic != MAGIC {
+            return Err(bad(format!("bad HLL magic {magic:#x}")));
+        }
+        let p = read_u8(r)?;
+        if !(4..=16).contains(&p) {
+            return Err(bad(format!("bad p {p}")));
+        }
+        let seed = read_u64(r)?;
+        let config = HllConfig::new(p, seed);
+        let kmax = config.kmax();
+        let mode = read_u8(r)?;
+        let regs = match mode {
+            0 => {
+                let count = read_u32(r)? as usize;
+                if count > config.num_registers() {
+                    return Err(bad(format!("sparse count {count} > r")));
+                }
+                let mut v = Vec::with_capacity(count);
+                let mut prev: i32 = -1;
+                for _ in 0..count {
+                    let j = read_u16(r)?;
+                    let x = read_u8(r)?;
+                    if j as usize >= config.num_registers() {
+                        return Err(bad(format!("register index {j} out of range")));
+                    }
+                    if (j as i32) <= prev {
+                        return Err(bad("sparse indices not strictly increasing".into()));
+                    }
+                    if x == 0 || x > kmax {
+                        return Err(bad(format!("register value {x} out of range")));
+                    }
+                    prev = j as i32;
+                    v.push((j, x));
+                }
+                Registers::Sparse(v)
+            }
+            1 => {
+                let mut d = vec![0u8; config.num_registers()];
+                r.read_exact(&mut d)?;
+                if d.iter().any(|&x| x > kmax) {
+                    return Err(bad("dense register value out of range".into()));
+                }
+                Registers::Dense(d)
+            }
+            other => return Err(bad(format!("bad mode {other}"))),
+        };
+        Ok(Hll { config, regs })
+    }
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn read_u8<R: Read>(r: &mut R) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u16<R: Read>(r: &mut R) -> io::Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::hll::{Hll, HllConfig};
+    use crate::util::prop::Cases;
+
+    #[test]
+    fn round_trip_sparse_and_dense() {
+        Cases::new("hll_serde_roundtrip", 20).run(|rng| {
+            let mut s = Hll::new(HllConfig::new(8, rng.next_u64()));
+            for _ in 0..rng.next_below(2000) {
+                s.insert(rng.next_u64());
+            }
+            let mut buf = Vec::new();
+            s.write_to(&mut buf).unwrap();
+            let loaded = Hll::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(s, loaded);
+        });
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Hll::read_from(&mut &b"nonsense"[..]).is_err());
+        assert!(Hll::read_from(&mut &[][..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut s = Hll::new(HllConfig::new(8, 7));
+        for x in 0..500u64 {
+            s.insert(x);
+        }
+        let mut buf = Vec::new();
+        s.write_to(&mut buf).unwrap();
+        for cut in [1, buf.len() / 2, buf.len() - 1] {
+            assert!(
+                Hll::read_from(&mut &buf[..cut]).is_err(),
+                "cut at {cut} should fail"
+            );
+        }
+    }
+}

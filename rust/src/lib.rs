@@ -1,0 +1,29 @@
+//! # DegreeSketch
+//!
+//! A reproduction of *"DegreeSketch: Distributed Cardinality Sketches on
+//! Massive Graphs with Applications"* (Benjamin W. Priest, 2020) as a
+//! three-layer rust + JAX/Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the distributed coordinator: a YGM-like
+//!   buffered message-passing runtime ([`comm`]), the DegreeSketch
+//!   algorithms ([`coordinator`]: accumulation, neighborhood approximation,
+//!   triangle-count heavy hitters), HLL sketches ([`hll`]), graph
+//!   generators + exact baselines ([`graph`]).
+//! * **Layer 2/1 (python, build-time only)** — batched cardinality and
+//!   joint-MLE intersection estimation lowered AOT to HLO text and executed
+//!   from rust via PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
+//! reproduced tables/figures.
+
+pub mod bench_util;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod hash;
+pub mod hll;
+pub mod metrics;
+pub mod runtime;
+pub mod util;

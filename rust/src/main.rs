@@ -1,0 +1,446 @@
+//! `degreesketch` — the DegreeSketch coordinator CLI.
+//!
+//! ```text
+//! degreesketch generate   --spec rmat:18:16 --seed 1 --out g.txt
+//! degreesketch accumulate --graph g.txt --ranks 8 --p 12 --out sketch.d/
+//! degreesketch query      --sketch sketch.d/ deg 42
+//! degreesketch serve      --sketch sketch.d/ --addr 127.0.0.1:7171
+//! degreesketch anf        --graph g.txt --ranks 8 --p 8 --max-t 5 [--exact]
+//! degreesketch triangles  edge|vertex --graph g.txt --k 100 --p 12
+//!                         [--intersect mle|ix|pjrt] [--exact]
+//! degreesketch exact      --graph g.txt triangles|neighborhoods
+//! degreesketch calibrate-beta --p 8
+//! degreesketch info
+//! ```
+//!
+//! Every subcommand also honors `--config file.toml` and repeated
+//! `--set section.key=value` overrides.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use degreesketch::cli::Args;
+use degreesketch::comm::Backend;
+use degreesketch::config::Config;
+use degreesketch::coordinator::anf::{neighborhood_approximation, AnfOptions};
+use degreesketch::coordinator::sketch::{
+    accumulate_stream, AccumulateOptions,
+};
+use degreesketch::coordinator::{
+    edge_triangle_heavy_hitters, server::QueryServer,
+    vertex_triangle_heavy_hitters, IntersectBackend, QueryEngine,
+    TriangleOptions,
+};
+use degreesketch::graph::csr::Csr;
+use degreesketch::graph::gen::GraphSpec;
+use degreesketch::graph::stream::{
+    write_edge_list, EdgeStream, FileStream, MemoryStream,
+};
+use degreesketch::graph::{exact, Edge};
+use degreesketch::hll::{fit_beta, HllConfig};
+use degreesketch::runtime::{default_artifacts_dir, PjrtRuntime, PjrtService};
+use degreesketch::util::stats::mean_relative_error;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    if args.subcommand.is_empty() || args.has("help") {
+        print_usage();
+        return Ok(());
+    }
+    let mut config = match args.get("config") {
+        Some(path) => Config::load(Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(sets) = args.get("set") {
+        for spec in sets.split('\n') {
+            config.set_override(spec)?;
+        }
+    }
+    match args.subcommand.as_str() {
+        "generate" => cmd_generate(&args),
+        "accumulate" => cmd_accumulate(&args, &config),
+        "query" => cmd_query(&args),
+        "serve" => cmd_serve(&args),
+        "anf" => cmd_anf(&args, &config),
+        "triangles" => cmd_triangles(&args, &config),
+        "exact" => cmd_exact(&args),
+        "calibrate-beta" => cmd_calibrate(&args),
+        "info" => cmd_info(&args),
+        other => bail!("unknown subcommand {other:?} (try --help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "degreesketch — distributed cardinality sketches on massive graphs\n\
+         subcommands: generate accumulate query serve anf triangles exact \
+         calibrate-beta info\n\
+         see README.md for full usage"
+    );
+}
+
+/// Load the edge stream named by `--graph file` or `--spec generator`.
+fn load_edges(args: &Args) -> Result<Vec<Edge>> {
+    match (args.get("graph"), args.get("spec")) {
+        (Some(path), None) => Ok(FileStream::open(path)?.collect_edges()),
+        (None, Some(spec)) => {
+            let seed = args.get_u64("seed", 42)?;
+            let spec = GraphSpec::parse(spec)
+                .with_context(|| format!("bad --spec {spec:?}"))?;
+            Ok(spec.generate(seed))
+        }
+        _ => bail!("need exactly one of --graph <file> or --spec <generator>"),
+    }
+}
+
+fn backend_of(args: &Args, config: &Config) -> Result<Backend> {
+    match args.get("backend") {
+        Some(s) => {
+            Backend::parse(s).with_context(|| format!("bad --backend {s:?}"))
+        }
+        None => config.backend(),
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let spec_str = args.require("spec")?.to_string();
+    let seed = args.get_u64("seed", 42)?;
+    let out = args.require("out")?.to_string();
+    args.finish()?;
+    let spec = GraphSpec::parse(&spec_str)
+        .with_context(|| format!("bad --spec {spec_str:?}"))?;
+    let edges = spec.generate(seed);
+    write_edge_list(&out, &edges)?;
+    let csr = Csr::from_edges(&edges);
+    println!(
+        "wrote {} ({} vertices, {} edges, type {})",
+        out,
+        csr.num_vertices(),
+        csr.num_edges(),
+        spec.type_name()
+    );
+    Ok(())
+}
+
+fn cmd_accumulate(args: &Args, config: &Config) -> Result<()> {
+    let edges = load_edges(args)?;
+    let ranks =
+        args.get_usize("ranks", config.get_int("run.ranks", 4) as usize)?;
+    let p = args.get_u8("p", config.get_int("hll.p", 8) as u8)?;
+    let hash_seed =
+        args.get_u64("hash-seed", config.get_int("hll.seed", 0x5EED) as u64)?;
+    let out = args.require("out")?.to_string();
+    let backend = backend_of(args, config)?;
+    args.finish()?;
+
+    let stream = MemoryStream::new(edges);
+    let start = std::time::Instant::now();
+    let ds = accumulate_stream(
+        &stream,
+        ranks,
+        HllConfig::new(p, hash_seed),
+        AccumulateOptions {
+            backend,
+            partitioner: config.partitioner()?,
+        },
+    );
+    let secs = start.elapsed().as_secs_f64();
+    println!(
+        "accumulated {} vertex sketches on {} ranks in {:.3}s \
+         ({} messages, {} bytes in sketches)",
+        ds.num_vertices(),
+        ranks,
+        secs,
+        ds.accumulation_stats.messages,
+        ds.memory_bytes()
+    );
+    let engine = QueryEngine::new(ds);
+    engine.save(Path::new(&out))?;
+    println!("saved to {out}");
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let dir = args.require("sketch")?.to_string();
+    args.finish()?;
+    let engine = QueryEngine::load(Path::new(&dir))?;
+    let pos = &args.positional;
+    if pos.is_empty() {
+        bail!("usage: query --sketch dir deg <x> | tri <x> <y> | union <x..>");
+    }
+    let ids: Vec<u64> = pos[1..]
+        .iter()
+        .map(|s| s.parse::<u64>().context("bad vertex id"))
+        .collect::<Result<_>>()?;
+    match (pos[0].as_str(), ids.as_slice()) {
+        ("deg", [x]) => match engine.degree(*x) {
+            Some(d) => println!("deg({x}) ≈ {d:.2}"),
+            None => println!("deg({x}): vertex not seen"),
+        },
+        ("tri", [x, y]) => match engine.intersection(*x, *y) {
+            Some(est) => println!(
+                "T({x},{y}) ≈ {:.2}  union ≈ {:.2}  jaccard ≈ {:.4}  domination: {:?}",
+                est.intersection,
+                est.union,
+                est.jaccard(),
+                est.domination
+            ),
+            None => println!("T({x},{y}): vertex not seen"),
+        },
+        ("union", xs) if !xs.is_empty() => match engine.union_cardinality(xs) {
+            Some(u) => println!("|∪ adj| ≈ {u:.2}"),
+            None => println!("union: no vertex seen"),
+        },
+        _ => bail!("usage: query --sketch dir deg <x> | tri <x> <y> | union <x..>"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.require("sketch")?.to_string();
+    let addr = args.get_or("addr", "127.0.0.1:7171").to_string();
+    args.finish()?;
+    let engine = Arc::new(QueryEngine::load(Path::new(&dir))?);
+    let server = QueryServer::start(engine, &addr)?;
+    println!("serving DegreeSketch queries on {}", server.addr());
+    println!("protocol: DEG x | TRI x y | JACCARD x y | UNION x.. | STATS | QUIT");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_anf(args: &Args, config: &Config) -> Result<()> {
+    let edges = load_edges(args)?;
+    let ranks =
+        args.get_usize("ranks", config.get_int("run.ranks", 4) as usize)?;
+    let p = args.get_u8("p", config.get_int("hll.p", 8) as u8)?;
+    let max_t = args.get_usize("max-t", 5)?;
+    let backend = backend_of(args, config)?;
+    let want_exact = args.has("exact");
+    args.finish()?;
+
+    let stream = MemoryStream::new(edges.clone());
+    let cfg = HllConfig::new(p, config.get_int("hll.seed", 0x5EED) as u64);
+    let t0 = std::time::Instant::now();
+    let ds = accumulate_stream(
+        &stream,
+        ranks,
+        cfg,
+        AccumulateOptions {
+            backend,
+            partitioner: config.partitioner()?,
+        },
+    );
+    let accum_s = t0.elapsed().as_secs_f64();
+    let shards = stream.shard(ranks);
+    let res = neighborhood_approximation(
+        &ds,
+        &shards,
+        AnfOptions {
+            backend,
+            max_t,
+            estimator: config.estimator()?,
+            keep_layers: false,
+        },
+    );
+    println!("accumulation: {accum_s:.3}s");
+    for (t, g) in res.global.iter().enumerate() {
+        let pass_s = if t == 0 { 0.0 } else { res.pass_seconds[t - 1] };
+        println!("t={} Ñ(t)={g:.1} pass={pass_s:.3}s", t + 1);
+    }
+    if want_exact {
+        let csr = Csr::from_edges(&edges);
+        let truth = exact::neighborhood_sizes(&csr, max_t);
+        for t in 1..=max_t {
+            let pairs: Vec<(f64, f64)> = (0..csr.num_vertices() as u32)
+                .map(|v| {
+                    let tr = if t == 1 {
+                        csr.degree(v) as f64
+                    } else {
+                        truth[v as usize][t - 1] as f64
+                    };
+                    (tr, res.per_vertex[&csr.original_id(v)][t - 1])
+                })
+                .collect();
+            println!("t={t} MRE={:.4}", mean_relative_error(&pairs));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_triangles(args: &Args, config: &Config) -> Result<()> {
+    let mode = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("edge");
+    let edges = load_edges(args)?;
+    let ranks =
+        args.get_usize("ranks", config.get_int("run.ranks", 4) as usize)?;
+    let p = args.get_u8("p", config.get_int("hll.p", 12) as u8)?;
+    let k = args.get_usize("k", config.get_int("triangles.k", 100) as usize)?;
+    let backend = backend_of(args, config)?;
+    let intersect_kind = args.get_or("intersect", "mle").to_string();
+    let want_exact = args.has("exact");
+    let discard = args.has("discard-dominated")
+        || config.get_bool("triangles.discard_dominated", false);
+    args.finish()?;
+
+    // keep the PJRT service alive for the whole run
+    let mut _service_keepalive: Option<PjrtService> = None;
+    let intersect = match intersect_kind.as_str() {
+        "mle" => IntersectBackend::default(),
+        "ix" | "inclusion-exclusion" => IntersectBackend::InclusionExclusion,
+        "pjrt" => {
+            let service = PjrtService::start(&default_artifacts_dir())?;
+            let handle = Arc::new(service.handle());
+            _service_keepalive = Some(service);
+            IntersectBackend::Batched {
+                batch: 256,
+                exec: handle,
+            }
+        }
+        other => bail!("bad --intersect {other:?} (mle|ix|pjrt)"),
+    };
+
+    let stream = MemoryStream::new(edges.clone());
+    let cfg = HllConfig::new(p, config.get_int("hll.seed", 0x5EED) as u64);
+    let t0 = std::time::Instant::now();
+    let ds = Arc::new(accumulate_stream(
+        &stream,
+        ranks,
+        cfg,
+        AccumulateOptions {
+            backend,
+            partitioner: config.partitioner()?,
+        },
+    ));
+    let accum_s = t0.elapsed().as_secs_f64();
+    let shards = stream.shard(ranks);
+    let opts = TriangleOptions {
+        backend,
+        k,
+        intersect,
+        discard_dominated: discard,
+    };
+
+    println!("accumulation: {accum_s:.3}s");
+    match mode {
+        "edge" => {
+            let res = edge_triangle_heavy_hitters(&ds, &shards, &opts);
+            println!(
+                "T~ = {:.1}  ({} pairs, {} dominated, {:.3}s)",
+                res.global_estimate,
+                res.pairs_estimated,
+                res.pairs_dominated,
+                res.seconds
+            );
+            for (est, (u, v)) in res.heavy_hitters.iter().take(k.min(20)) {
+                println!("  ({u},{v})  T~ ≈ {est:.1}");
+            }
+            if want_exact {
+                let csr = Csr::from_edges(&edges);
+                println!("exact T = {}", exact::global_triangles(&csr));
+            }
+        }
+        "vertex" => {
+            let res = vertex_triangle_heavy_hitters(&ds, &shards, &opts);
+            println!(
+                "T~ = {:.1}  ({} pairs, {} dominated, {:.3}s)",
+                res.global_estimate,
+                res.pairs_estimated,
+                res.pairs_dominated,
+                res.seconds
+            );
+            for (est, v) in res.heavy_hitters.iter().take(k.min(20)) {
+                println!("  v={v}  T~ ≈ {est:.1}");
+            }
+            if want_exact {
+                let csr = Csr::from_edges(&edges);
+                println!("exact T = {}", exact::global_triangles(&csr));
+            }
+        }
+        other => bail!("triangles mode must be edge|vertex, got {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_exact(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("triangles");
+    let edges = load_edges(args)?;
+    let max_t = args.get_usize("max-t", 5)?;
+    args.finish()?;
+    let csr = Csr::from_edges(&edges);
+    match what {
+        "triangles" => {
+            println!(
+                "|V|={} |E|={} T={}",
+                csr.num_vertices(),
+                csr.num_edges(),
+                exact::global_triangles(&csr)
+            );
+        }
+        "neighborhoods" => {
+            let ns = exact::neighborhood_sizes(&csr, max_t);
+            let g = exact::global_neighborhood(&ns);
+            for (t, total) in g.iter().enumerate() {
+                println!("t={} N(t)={total}", t + 1);
+            }
+        }
+        other => {
+            bail!("exact mode must be triangles|neighborhoods, got {other:?}")
+        }
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let p = args.get_u8("p", 8)?;
+    args.finish()?;
+    let max_n = (1u64 << p) * 12;
+    let (points, trials) = if p <= 10 { (36, 10) } else { (28, 5) };
+    let c = fit_beta(p, points, trials, max_n, 0xBE7A + p as u64);
+    println!(
+        "({p}, [{}]),",
+        c.iter()
+            .map(|x| format!("{x:.9}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    println!("paste into BETA_TABLE in rust/src/hll/beta.rs");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.finish()?;
+    let dir: PathBuf = default_artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match PjrtRuntime::open(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("supported p: {:?}", rt.manifest().supported_p());
+            for e in rt.manifest().entries() {
+                println!(
+                    "  {} kind={:?} p={} r={} batch={} ({})",
+                    e.name, e.kind, e.p, e.r, e.batch, e.file
+                );
+            }
+        }
+        Err(e) => println!("artifacts unavailable: {e:#}"),
+    }
+    Ok(())
+}

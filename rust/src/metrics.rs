@@ -1,0 +1,100 @@
+//! Lightweight metrics: named counters and timers for the coordinator's
+//! observability surface (printed by the CLI with `--metrics`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A process-wide metrics registry (cheap atomic counters + wall timers).
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    timers: Mutex<BTreeMap<String, f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `delta` to a named counter.
+    pub fn count(&self, name: &str, delta: u64) {
+        let map = self.counters.lock().unwrap();
+        if let Some(c) = map.get(name) {
+            c.fetch_add(delta, Ordering::Relaxed);
+            return;
+        }
+        drop(map);
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Time a closure and record its wall seconds under `name` (summed).
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        let secs = start.elapsed().as_secs_f64();
+        *self
+            .timers
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0.0) += secs;
+        out
+    }
+
+    /// Snapshot all counters.
+    pub fn counters(&self) -> BTreeMap<String, u64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Snapshot all timers (seconds).
+    pub fn timers(&self) -> BTreeMap<String, f64> {
+        self.timers.lock().unwrap().clone()
+    }
+
+    /// Render a human-readable report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters() {
+            out.push_str(&format!("counter {k} = {v}\n"));
+        }
+        for (k, v) in self.timers() {
+            out.push_str(&format!("timer   {k} = {v:.6}s\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.count("edges", 5);
+        m.count("edges", 7);
+        m.count("other", 1);
+        assert_eq!(m.counters()["edges"], 12);
+        assert_eq!(m.counters()["other"], 1);
+    }
+
+    #[test]
+    fn timers_sum_and_return_value() {
+        let m = Metrics::new();
+        let x = m.time("work", || 42);
+        assert_eq!(x, 42);
+        m.time("work", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(m.timers()["work"] > 0.0);
+        assert!(m.report().contains("counter") || m.report().contains("timer"));
+    }
+}

@@ -1,0 +1,147 @@
+//! The artifact manifest written by `python/compile/aot.py`:
+//! one line per artifact, `name kind p q r batch file`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Kind of AOT computation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Estimate,
+    Intersect,
+    Union,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "estimate" => Some(Self::Estimate),
+            "intersect" => Some(Self::Intersect),
+            "union" => Some(Self::Union),
+            _ => None,
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub p: u8,
+    pub q: u8,
+    pub r: usize,
+    pub batch: usize,
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| {
+            format!(
+                "reading {} (run `make artifacts` first)",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 7 {
+                bail!("manifest line {}: expected 7 fields", lineno + 1);
+            }
+            let kind = ArtifactKind::parse(parts[1])
+                .with_context(|| format!("line {}: bad kind", lineno + 1))?;
+            let p: u8 = parts[2].parse().context("bad p")?;
+            let q: u8 = parts[3].parse().context("bad q")?;
+            let r: usize = parts[4].parse().context("bad r")?;
+            let batch: usize = parts[5].parse().context("bad batch")?;
+            if p as usize + q as usize != 64 {
+                bail!("line {}: p + q != 64", lineno + 1);
+            }
+            if r != 1usize << p {
+                bail!("line {}: r != 2^p", lineno + 1);
+            }
+            entries.push(ArtifactMeta {
+                name: parts[0].to_string(),
+                kind,
+                p,
+                q,
+                r,
+                batch,
+                file: parts[6].to_string(),
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn entries(&self) -> &[ArtifactMeta] {
+        &self.entries
+    }
+
+    /// The (first) artifact of `kind` compiled for prefix size `p`.
+    pub fn find(&self, kind: ArtifactKind, p: u8) -> Option<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.p == p)
+    }
+
+    /// All prefix sizes with a full (estimate+intersect+union) set.
+    pub fn supported_p(&self) -> Vec<u8> {
+        let mut ps: Vec<u8> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Estimate)
+            .map(|e| e.p)
+            .filter(|&p| {
+                self.find(ArtifactKind::Intersect, p).is_some()
+                    && self.find(ArtifactKind::Union, p).is_some()
+            })
+            .collect();
+        ps.sort_unstable();
+        ps.dedup();
+        ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+estimate_p8_b256 estimate 8 56 256 256 estimate_p8_b256.hlo.txt
+intersect_p8_b256 intersect 8 56 256 256 intersect_p8_b256.hlo.txt
+union_p8_b256 union 8 56 256 256 union_p8_b256.hlo.txt
+";
+
+    #[test]
+    fn parses_and_finds() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries().len(), 3);
+        assert!(m.find(ArtifactKind::Estimate, 8).is_some());
+        assert!(m.find(ArtifactKind::Estimate, 12).is_none());
+        assert_eq!(m.supported_p(), vec![8]);
+    }
+
+    #[test]
+    fn rejects_inconsistent_rows() {
+        assert!(Manifest::parse("x estimate 8 57 256 256 f").is_err());
+        assert!(Manifest::parse("x estimate 8 56 100 256 f").is_err());
+        assert!(Manifest::parse("x nope 8 56 256 256 f").is_err());
+        assert!(Manifest::parse("too few fields").is_err());
+    }
+}

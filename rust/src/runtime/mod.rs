@@ -1,0 +1,376 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from the rust hot path (python is never invoked at runtime).
+//!
+//! The interchange format is **HLO text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md: jax ≥ 0.5 emits 64-bit-id protos that the
+//! bundled xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! [`PjrtRuntime`] reads `artifacts/manifest.txt`, compiles each named
+//! computation on the PJRT CPU client on first use, and exposes batched
+//! executors:
+//!
+//! * [`PjrtRuntime::estimate_batch`] — `[B, R]` registers → `[B]`
+//!   cardinalities (Ertl improved estimator, same math as the native one);
+//! * [`PjrtRuntime::intersect_batch`] — register pairs → `(λa, λb, λx,
+//!   |A∪B|)` via the joint-MLE graph (Pallas Eq.-19 kernel inside);
+//! * [`PjrtIntersect`] — adapts the above to the coordinator's
+//!   [`BatchIntersect`] so Algorithms 4/5 can run `--backend pjrt`.
+
+mod manifest;
+
+pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::triangles::BatchIntersect;
+use crate::hll::{domination, pair_stats, Hll, IntersectionEstimate};
+
+/// A compiled-artifact cache over one PJRT CPU client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    // PJRT CPU executables are internally synchronized, but the xla crate
+    // wrapper makes no promises — serialize executions.
+    loaded: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    /// Open the artifacts directory (must contain `manifest.txt`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            loaded: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn meta(&self, kind: ArtifactKind, p: u8) -> Result<&ArtifactMeta> {
+        self.manifest.find(kind, p).with_context(|| {
+            format!("no {kind:?} artifact for p={p}; re-run `make artifacts`")
+        })
+    }
+
+    fn with_executable<T>(
+        &self,
+        meta: &ArtifactMeta,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<T>,
+    ) -> Result<T> {
+        let mut loaded = self.loaded.lock().unwrap();
+        if !loaded.contains_key(&meta.name) {
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", meta.name))?;
+            loaded.insert(meta.name.clone(), exe);
+        }
+        f(&loaded[&meta.name])
+    }
+
+    /// Registers of `sketch` as the i32 row the artifacts expect.
+    fn registers_i32(sketch: &Hll) -> Vec<i32> {
+        sketch
+            .to_dense_registers()
+            .into_iter()
+            .map(|x| x as i32)
+            .collect()
+    }
+
+    fn literal_rows(rows: &[Vec<i32>], r: usize) -> Result<xla::Literal> {
+        let batch = rows.len();
+        let mut flat = Vec::with_capacity(batch * r);
+        for row in rows {
+            debug_assert_eq!(row.len(), r);
+            flat.extend_from_slice(row);
+        }
+        xla::Literal::vec1(&flat)
+            .reshape(&[batch as i64, r as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    /// Batched cardinality estimation. Input sketches must share `p`.
+    /// Handles arbitrary batch sizes by padding to the artifact batch.
+    pub fn estimate_batch(&self, sketches: &[&Hll]) -> Result<Vec<f64>> {
+        if sketches.is_empty() {
+            return Ok(Vec::new());
+        }
+        let p = sketches[0].config().p();
+        let meta = self.meta(ArtifactKind::Estimate, p)?.clone();
+        let r = meta.r;
+        let mut out = Vec::with_capacity(sketches.len());
+        for chunk in sketches.chunks(meta.batch) {
+            let mut rows: Vec<Vec<i32>> =
+                chunk.iter().map(|s| Self::registers_i32(s)).collect();
+            rows.resize(meta.batch, vec![0i32; r]);
+            let lit = Self::literal_rows(&rows, r)?;
+            let result = self.with_executable(&meta, |exe| {
+                execute1(exe, &[lit])
+            })?;
+            let vals: Vec<f32> = result
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+            if vals.len() != meta.batch {
+                bail!("estimate output length {} != batch {}", vals.len(), meta.batch);
+            }
+            out.extend(vals[..chunk.len()].iter().map(|&x| x as f64));
+        }
+        Ok(out)
+    }
+
+    /// Batched joint-MLE intersection. Pairs must share `p`; domination is
+    /// classified natively (cheap) while the λ's come from the artifact.
+    pub fn intersect_batch(
+        &self,
+        pairs: &[(Hll, Hll)],
+    ) -> Result<Vec<IntersectionEstimate>> {
+        if pairs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let p = pairs[0].0.config().p();
+        let meta = self.meta(ArtifactKind::Intersect, p)?.clone();
+        let r = meta.r;
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(meta.batch) {
+            let mut rows_a: Vec<Vec<i32>> =
+                chunk.iter().map(|(a, _)| Self::registers_i32(a)).collect();
+            let mut rows_b: Vec<Vec<i32>> =
+                chunk.iter().map(|(_, b)| Self::registers_i32(b)).collect();
+            rows_a.resize(meta.batch, vec![0i32; r]);
+            rows_b.resize(meta.batch, vec![0i32; r]);
+            let lit_a = Self::literal_rows(&rows_a, r)?;
+            let lit_b = Self::literal_rows(&rows_b, r)?;
+            let result = self.with_executable(&meta, |exe| {
+                execute1(exe, &[lit_a, lit_b])
+            })?;
+            let vals: Vec<f32> = result
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+            if vals.len() != meta.batch * 4 {
+                bail!(
+                    "intersect output length {} != batch*4 {}",
+                    vals.len(),
+                    meta.batch * 4
+                );
+            }
+            for (i, (a, b)) in chunk.iter().enumerate() {
+                let lam_a = vals[i * 4] as f64;
+                let lam_b = vals[i * 4 + 1] as f64;
+                let lam_x = vals[i * 4 + 2] as f64;
+                let union = vals[i * 4 + 3] as f64;
+                let stats = pair_stats(a, b);
+                out.push(IntersectionEstimate {
+                    a_minus_b: lam_a,
+                    b_minus_a: lam_b,
+                    intersection: lam_x,
+                    union,
+                    domination: domination(&stats),
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Batched union-cardinality estimation.
+    pub fn union_batch(&self, pairs: &[(Hll, Hll)]) -> Result<Vec<f64>> {
+        if pairs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let p = pairs[0].0.config().p();
+        let meta = self.meta(ArtifactKind::Union, p)?.clone();
+        let r = meta.r;
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(meta.batch) {
+            let mut rows_a: Vec<Vec<i32>> =
+                chunk.iter().map(|(a, _)| Self::registers_i32(a)).collect();
+            let mut rows_b: Vec<Vec<i32>> =
+                chunk.iter().map(|(_, b)| Self::registers_i32(b)).collect();
+            rows_a.resize(meta.batch, vec![0i32; r]);
+            rows_b.resize(meta.batch, vec![0i32; r]);
+            let lit_a = Self::literal_rows(&rows_a, r)?;
+            let lit_b = Self::literal_rows(&rows_b, r)?;
+            let result = self.with_executable(&meta, |exe| {
+                execute1(exe, &[lit_a, lit_b])
+            })?;
+            let vals: Vec<f32> = result
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+            out.extend(vals[..chunk.len()].iter().map(|&x| x as f64));
+        }
+        Ok(out)
+    }
+}
+
+/// Execute and unwrap the 1-tuple output (aot.py lowers with
+/// `return_tuple=True`).
+fn execute1(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[xla::Literal],
+) -> Result<xla::Literal> {
+    let result = exe
+        .execute::<xla::Literal>(args)
+        .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+    lit.to_tuple1()
+        .map_err(|e| anyhow::anyhow!("to_tuple1: {e:?}"))
+}
+
+/// A device-service thread owning the (non-`Send`, `Rc`-based) PJRT
+/// client, plus a cloneable `Send + Sync` handle. This is how the
+/// coordinator's actors — which may run on many threads — share one
+/// compiled executable: requests are serialized through a channel to the
+/// service thread, mirroring how a real deployment funnels work to an
+/// accelerator queue.
+pub struct PjrtService {
+    tx: std::sync::mpsc::Sender<ServiceRequest>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+enum ServiceRequest {
+    Intersect(
+        Vec<(Hll, Hll)>,
+        std::sync::mpsc::Sender<Result<Vec<IntersectionEstimate>>>,
+    ),
+    Estimate(Vec<Hll>, std::sync::mpsc::Sender<Result<Vec<f64>>>),
+    Union(
+        Vec<(Hll, Hll)>,
+        std::sync::mpsc::Sender<Result<Vec<f64>>>,
+    ),
+    Stop,
+}
+
+impl PjrtService {
+    /// Spawn the service thread; fails fast if the artifacts are missing.
+    pub fn start(dir: &Path) -> Result<Self> {
+        // validate the manifest on the caller thread for a crisp error
+        Manifest::load(&dir.join("manifest.txt"))?;
+        let dir = dir.to_path_buf();
+        let (tx, rx) = std::sync::mpsc::channel::<ServiceRequest>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let handle = std::thread::spawn(move || {
+            let runtime = match PjrtRuntime::open(&dir) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    ServiceRequest::Intersect(pairs, resp) => {
+                        let _ = resp.send(runtime.intersect_batch(&pairs));
+                    }
+                    ServiceRequest::Estimate(sketches, resp) => {
+                        let refs: Vec<&Hll> = sketches.iter().collect();
+                        let _ = resp.send(runtime.estimate_batch(&refs));
+                    }
+                    ServiceRequest::Union(pairs, resp) => {
+                        let _ = resp.send(runtime.union_batch(&pairs));
+                    }
+                    ServiceRequest::Stop => break,
+                }
+            }
+        });
+        ready_rx.recv().context("PJRT service thread died")??;
+        Ok(Self {
+            tx,
+            handle: Some(handle),
+        })
+    }
+
+    /// A cloneable, thread-safe handle implementing [`BatchIntersect`].
+    pub fn handle(&self) -> PjrtHandle {
+        PjrtHandle {
+            tx: Mutex::new(self.tx.clone()),
+        }
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ServiceRequest::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// `Send + Sync` handle to the PJRT service thread.
+pub struct PjrtHandle {
+    tx: Mutex<std::sync::mpsc::Sender<ServiceRequest>>,
+}
+
+impl PjrtHandle {
+    pub fn intersect_batch(
+        &self,
+        pairs: Vec<(Hll, Hll)>,
+    ) -> Result<Vec<IntersectionEstimate>> {
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(ServiceRequest::Intersect(pairs, resp_tx))
+            .context("PJRT service gone")?;
+        resp_rx.recv().context("PJRT service dropped response")?
+    }
+
+    pub fn estimate_batch(&self, sketches: Vec<Hll>) -> Result<Vec<f64>> {
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(ServiceRequest::Estimate(sketches, resp_tx))
+            .context("PJRT service gone")?;
+        resp_rx.recv().context("PJRT service dropped response")?
+    }
+
+    pub fn union_batch(&self, pairs: Vec<(Hll, Hll)>) -> Result<Vec<f64>> {
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(ServiceRequest::Union(pairs, resp_tx))
+            .context("PJRT service gone")?;
+        resp_rx.recv().context("PJRT service dropped response")?
+    }
+}
+
+impl BatchIntersect for PjrtHandle {
+    fn intersect(&self, pairs: &[(Hll, Hll)]) -> Vec<IntersectionEstimate> {
+        self.intersect_batch(pairs.to_vec())
+            .expect("PJRT intersect execution failed")
+    }
+}
+
+/// Default artifacts directory: `$DEGREESKETCH_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("DEGREESKETCH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

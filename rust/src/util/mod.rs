@@ -1,0 +1,4 @@
+//! Small shared utilities: the mini property-test runner and stats helpers.
+
+pub mod prop;
+pub mod stats;

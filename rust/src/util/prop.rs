@@ -1,0 +1,75 @@
+//! Mini property-test runner (proptest is unavailable offline).
+//!
+//! [`Cases`] runs a closure over `n` seeded RNG streams. Failures print the
+//! case seed so a failing property is reproducible with
+//! `Cases::replay(name, seed)`. This deliberately has no shrinking — cases
+//! are kept small instead.
+
+use crate::hash::Xoshiro256ss;
+
+/// A batch of seeded property-test cases.
+pub struct Cases {
+    name: &'static str,
+    n: u64,
+    base_seed: u64,
+}
+
+impl Cases {
+    /// `n` cases derived from the test name (stable across runs).
+    pub fn new(name: &'static str, n: u64) -> Self {
+        let base_seed = crate::hash::xxh64(name.as_bytes(), 0x5EED);
+        Self { name, n, base_seed }
+    }
+
+    /// Override the base seed (for replaying a reported failure).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.base_seed = seed;
+        self
+    }
+
+    /// Run the property for each case; panics with the case seed on failure.
+    pub fn run<F: FnMut(&mut Xoshiro256ss)>(&self, mut property: F) {
+        for i in 0..self.n {
+            let seed = self.base_seed.wrapping_add(i);
+            let mut rng = Xoshiro256ss::new(seed);
+            let result = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| property(&mut rng)),
+            );
+            if let Err(err) = result {
+                eprintln!(
+                    "property '{}' failed at case {i} (seed {seed:#x}); \
+                     replay with Cases::new(\"{}\", 1).with_seed({seed:#x})",
+                    self.name, self.name
+                );
+                std::panic::resume_unwind(err);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        Cases::new("counter", 17).run(|_| count += 1);
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    fn seeds_are_stable() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        Cases::new("stable", 5).run(|rng| a.push(rng.next_u64()));
+        Cases::new("stable", 5).run(|rng| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        Cases::new("fails", 3).run(|_| panic!("boom"));
+    }
+}

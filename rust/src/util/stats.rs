@@ -1,0 +1,130 @@
+//! Error metrics and summary statistics shared by tests and benches.
+
+/// Relative error |T - E| / |T| (paper §5 "Experiments"). Returns the
+/// absolute estimate when the truth is zero, matching the paper's MRE
+/// convention of skipping zero-truth entries upstream.
+#[inline]
+pub fn relative_error(truth: f64, estimate: f64) -> f64 {
+    if truth == 0.0 {
+        estimate.abs()
+    } else {
+        (truth - estimate).abs() / truth.abs()
+    }
+}
+
+/// Mean relative error over (truth, estimate) pairs with nonzero truth.
+pub fn mean_relative_error(pairs: &[(f64, f64)]) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for &(t, e) in pairs {
+        if t != 0.0 {
+            sum += relative_error(t, e);
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Summary of a sample: mean / std / min / max / percentiles.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "empty sample");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| sorted[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Self {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: pct(0.5),
+            p95: pct(0.95),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Precision / recall of a predicted top-k set vs ground truth (paper §5,
+/// Figure 2's one-class-classifier framing).
+pub fn precision_recall<T: Eq + std::hash::Hash>(
+    truth: &std::collections::HashSet<T>,
+    predicted: &std::collections::HashSet<T>,
+) -> (f64, f64) {
+    let tp = predicted.intersection(truth).count() as f64;
+    let precision = if predicted.is_empty() {
+        1.0
+    } else {
+        tp / predicted.len() as f64
+    };
+    let recall = if truth.is_empty() {
+        1.0
+    } else {
+        tp / truth.len() as f64
+    };
+    (precision, recall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn relative_error_basics() {
+        assert_eq!(relative_error(100.0, 90.0), 0.1);
+        assert_eq!(relative_error(100.0, 110.0), 0.1);
+        assert_eq!(relative_error(0.0, 3.0), 3.0);
+    }
+
+    #[test]
+    fn mre_skips_zero_truth() {
+        let mre = mean_relative_error(&[(0.0, 5.0), (10.0, 11.0)]);
+        assert!((mre - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::of(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn summary_percentiles_ordered() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 99.0);
+    }
+
+    #[test]
+    fn precision_recall_basics() {
+        let truth: HashSet<u32> = [1, 2, 3, 4].into_iter().collect();
+        let pred: HashSet<u32> = [3, 4, 5].into_iter().collect();
+        let (p, r) = precision_recall(&truth, &pred);
+        assert!((p - 2.0 / 3.0).abs() < 1e-12);
+        assert!((r - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,212 @@
+//! Cross-module integration: generators → streams → accumulation → ANF →
+//! triangles → persistence, on both comm backends, checked against the
+//! exact baselines. (The PJRT leg lives in `pjrt_roundtrip.rs`.)
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use degreesketch::comm::Backend;
+use degreesketch::coordinator::anf::{neighborhood_approximation, AnfOptions};
+use degreesketch::coordinator::sketch::{
+    accumulate_stream, AccumulateOptions,
+};
+use degreesketch::coordinator::{
+    edge_triangle_heavy_hitters, vertex_triangle_heavy_hitters, QueryEngine,
+    TriangleOptions,
+};
+use degreesketch::graph::csr::Csr;
+use degreesketch::graph::exact;
+use degreesketch::graph::gen::{karate, kronecker_product, GraphSpec};
+use degreesketch::graph::kron_truth::{
+    product_global_triangles, FactorCommonNeighbors,
+};
+use degreesketch::graph::stream::{
+    write_edge_list, EdgeStream, FileStream, MemoryStream,
+};
+use degreesketch::graph::Edge;
+use degreesketch::hll::HllConfig;
+use degreesketch::util::stats::{mean_relative_error, precision_recall};
+
+#[test]
+fn kron_graph_triangle_pipeline_matches_appendix_c_truth() {
+    // karate ⊗ karate with App.-C ground truth, full Alg 1 + Alg 4 run.
+    let k = karate::edges();
+    let n = karate::NUM_VERTICES as u64;
+    let edges = kronecker_product(&k, n, &k, n);
+    let fa = FactorCommonNeighbors::new(&k);
+    let exact_global = product_global_triangles(&fa, &fa, n, &edges) as f64;
+
+    let stream = MemoryStream::new(edges);
+    let ds = Arc::new(accumulate_stream(
+        &stream,
+        6,
+        HllConfig::new(12, 77),
+        AccumulateOptions::default(),
+    ));
+    let shards = stream.shard(6);
+    let res = edge_triangle_heavy_hitters(
+        &ds,
+        &shards,
+        &TriangleOptions {
+            k: 50,
+            ..Default::default()
+        },
+    );
+    let rel = (res.global_estimate - exact_global).abs() / exact_global;
+    assert!(
+        rel < 0.25,
+        "global T̃ {} vs exact {exact_global} (rel {rel})",
+        res.global_estimate
+    );
+}
+
+#[test]
+fn file_stream_pipeline_equals_memory_pipeline() {
+    let edges = GraphSpec::parse("ws:300:6:10").unwrap().generate(4);
+    let dir = std::env::temp_dir().join("ds_e2e_file");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("g.txt");
+    write_edge_list(&path, &edges).unwrap();
+
+    let cfg = HllConfig::new(10, 5);
+    let from_file = accumulate_stream(
+        &FileStream::open(&path).unwrap(),
+        3,
+        cfg,
+        AccumulateOptions::default(),
+    );
+    let from_mem = accumulate_stream(
+        &MemoryStream::new(edges),
+        3,
+        cfg,
+        AccumulateOptions::default(),
+    );
+    assert_eq!(from_file.num_vertices(), from_mem.num_vertices());
+    for (v, h) in from_mem.iter() {
+        assert_eq!(from_file.sketch(v), Some(h));
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn full_pipeline_on_rmat_with_threaded_backend() {
+    let edges = GraphSpec::parse("rmat:11:8").unwrap().generate(9);
+    let csr = Csr::from_edges(&edges);
+    let stream = MemoryStream::new(edges);
+    let ds = accumulate_stream(
+        &stream,
+        5,
+        HllConfig::new(8, 123),
+        AccumulateOptions {
+            backend: Backend::Threaded,
+            ..Default::default()
+        },
+    );
+    let shards = stream.shard(5);
+
+    // ANF quality: MRE within a few sigma of the p=8 standard error.
+    let anf = neighborhood_approximation(
+        &ds,
+        &shards,
+        AnfOptions {
+            backend: Backend::Threaded,
+            max_t: 3,
+            ..Default::default()
+        },
+    );
+    let truth = exact::neighborhood_sizes(&csr, 3);
+    for t in 2..=3 {
+        let pairs: Vec<(f64, f64)> = (0..csr.num_vertices() as u32)
+            .map(|v| {
+                (
+                    truth[v as usize][t - 1] as f64,
+                    anf.per_vertex[&csr.original_id(v)][t - 1],
+                )
+            })
+            .collect();
+        let mre = mean_relative_error(&pairs);
+        assert!(mre < 0.2, "t={t} MRE {mre}");
+    }
+
+    // Vertex heavy hitters: reasonable top-k recovery.
+    let vres = vertex_triangle_heavy_hitters(
+        &ds.into(),
+        &shards,
+        &TriangleOptions {
+            backend: Backend::Threaded,
+            k: 30,
+            ..Default::default()
+        },
+    );
+    let vt = exact::vertex_triangles(&csr);
+    let mut ranked: Vec<(usize, u64)> = vt
+        .iter()
+        .enumerate()
+        .map(|(v, &c)| (c, csr.original_id(v as u32)))
+        .collect();
+    ranked.sort_unstable_by(|a, b| b.cmp(a));
+    let truth_top: HashSet<u64> =
+        ranked.iter().take(30).map(|&(_, v)| v).collect();
+    let pred: HashSet<u64> =
+        vres.heavy_hitters.iter().map(|&(_, v)| v).collect();
+    let (_, recall) = precision_recall(&truth_top, &pred);
+    assert!(recall >= 0.5, "vertex HH recall {recall}");
+}
+
+#[test]
+fn engine_round_trip_preserves_triangle_queries() {
+    let edges = GraphSpec::parse("ba:500:3").unwrap().generate(1);
+    let stream = MemoryStream::new(edges.clone());
+    let ds = accumulate_stream(
+        &stream,
+        4,
+        HllConfig::new(12, 9),
+        AccumulateOptions::default(),
+    );
+    let engine = QueryEngine::new(ds);
+    let sample: Vec<Edge> = edges.iter().step_by(97).copied().collect();
+    let before: Vec<f64> = sample
+        .iter()
+        .map(|&(u, v)| engine.intersection(u, v).unwrap().intersection)
+        .collect();
+
+    let dir = std::env::temp_dir().join("ds_e2e_engine");
+    let _ = std::fs::remove_dir_all(&dir);
+    engine.save(&dir).unwrap();
+    let loaded = QueryEngine::load(&dir).unwrap();
+    for (&(u, v), &b) in sample.iter().zip(&before) {
+        let after = loaded.intersection(u, v).unwrap().intersection;
+        assert!((after - b).abs() < 1e-9, "({u},{v}): {b} vs {after}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn global_estimate_is_rank_count_invariant() {
+    // Same graph, different |P|: sketches are identical (same hash seed),
+    // so the REDUCEd global estimate must match across rank counts.
+    let edges = GraphSpec::parse("er:400:1200").unwrap().generate(3);
+    let mut results = Vec::new();
+    for ranks in [1usize, 2, 7] {
+        let stream = MemoryStream::new(edges.clone());
+        let ds = Arc::new(accumulate_stream(
+            &stream,
+            ranks,
+            HllConfig::new(10, 0xF00D),
+            AccumulateOptions::default(),
+        ));
+        let shards = stream.shard(ranks);
+        let res = edge_triangle_heavy_hitters(
+            &ds,
+            &shards,
+            &TriangleOptions {
+                k: 10,
+                ..Default::default()
+            },
+        );
+        results.push(res.global_estimate);
+    }
+    for w in results.windows(2) {
+        assert!((w[0] - w[1]).abs() < 1e-6, "{results:?}");
+    }
+}

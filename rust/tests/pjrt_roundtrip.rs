@@ -1,0 +1,186 @@
+//! Integration: the full L1/L2/L3 composition — JAX/Pallas-authored HLO
+//! text artifacts loaded and executed from rust via PJRT, cross-checked
+//! against the native estimators.
+//!
+//! Requires `make artifacts` to have populated `artifacts/` (cargo runs
+//! integration tests from the crate root).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use degreesketch::comm::Backend;
+use degreesketch::coordinator::sketch::{
+    accumulate_stream, AccumulateOptions,
+};
+use degreesketch::coordinator::{
+    edge_triangle_heavy_hitters, IntersectBackend, TriangleOptions,
+};
+use degreesketch::graph::gen::karate;
+use degreesketch::graph::stream::{EdgeStream, MemoryStream};
+use degreesketch::hash::Xoshiro256ss;
+use degreesketch::hll::{mle_intersect, Hll, HllConfig, MleOptions};
+use degreesketch::runtime::{PjrtRuntime, PjrtService};
+
+fn artifacts_dir() -> &'static Path {
+    Path::new("artifacts")
+}
+
+fn skip_if_missing() -> bool {
+    if artifacts_dir().join("manifest.txt").exists() {
+        false
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        true
+    }
+}
+
+fn planted_sketches(p: u8, ns: &[u64], seed: u64) -> Vec<Hll> {
+    let cfg = HllConfig::new(p, 0xCAFE);
+    let mut rng = Xoshiro256ss::new(seed);
+    ns.iter()
+        .map(|&n| {
+            let mut s = Hll::new(cfg);
+            for _ in 0..n {
+                s.insert(rng.next_u64());
+            }
+            s
+        })
+        .collect()
+}
+
+#[test]
+fn pjrt_estimate_matches_native() {
+    if skip_if_missing() {
+        return;
+    }
+    let rt = PjrtRuntime::open(artifacts_dir()).unwrap();
+    assert!(rt.manifest().supported_p().contains(&8));
+    // 300 sketches exercises batch padding (artifact batch = 256)
+    let ns: Vec<u64> = (0..300).map(|i| 1 + (i * 37) % 20_000).collect();
+    let sketches = planted_sketches(8, &ns, 7);
+    let refs: Vec<&Hll> = sketches.iter().collect();
+    let pjrt = rt.estimate_batch(&refs).unwrap();
+    for (sk, est) in sketches.iter().zip(&pjrt) {
+        let native = sk.estimate();
+        // same math (Ertl improved), f32 vs f64 arithmetic
+        assert!(
+            (est - native).abs() <= native.abs() * 2e-3 + 1e-2,
+            "pjrt={est} native={native}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_intersect_matches_native_mle() {
+    if skip_if_missing() {
+        return;
+    }
+    let rt = PjrtRuntime::open(artifacts_dir()).unwrap();
+    let cfg = HllConfig::new(8, 0xCAFE);
+    let mut rng = Xoshiro256ss::new(99);
+    let mut pairs = Vec::new();
+    for &(na, nb, nx) in
+        &[(3000u64, 3000u64, 1500u64), (8000, 2000, 1000), (500, 500, 400)]
+    {
+        let mut a = Hll::new(cfg);
+        let mut b = Hll::new(cfg);
+        for _ in 0..nx {
+            let e = rng.next_u64();
+            a.insert(e);
+            b.insert(e);
+        }
+        for _ in 0..(na - nx) {
+            a.insert(rng.next_u64());
+        }
+        for _ in 0..(nb - nx) {
+            b.insert(rng.next_u64());
+        }
+        pairs.push((a, b));
+    }
+    let pjrt = rt.intersect_batch(&pairs).unwrap();
+    for ((a, b), est) in pairs.iter().zip(&pjrt) {
+        let native = mle_intersect(a, b, &MleOptions::default());
+        // same model + optimizer; tolerances cover f32 vs f64 and exact-
+        // vs analytic-gradient differences in the Adam trajectory
+        let rel = (est.intersection - native.intersection).abs()
+            / native.intersection.max(1.0);
+        assert!(
+            rel < 0.05,
+            "pjrt={} native={}",
+            est.intersection,
+            native.intersection
+        );
+        let urel = (est.union - native.union).abs() / native.union.max(1.0);
+        assert!(urel < 0.01, "union pjrt={} native={}", est.union, native.union);
+    }
+}
+
+#[test]
+fn pjrt_union_matches_merged_native() {
+    if skip_if_missing() {
+        return;
+    }
+    let rt = PjrtRuntime::open(artifacts_dir()).unwrap();
+    let sketches = planted_sketches(8, &[4000, 2500], 3);
+    let pairs = vec![(sketches[0].clone(), sketches[1].clone())];
+    let pjrt = rt.union_batch(&pairs).unwrap();
+    let mut merged = sketches[0].clone();
+    merged.merge(&sketches[1]);
+    let native = merged.estimate();
+    assert!(
+        (pjrt[0] - native).abs() <= native * 2e-3 + 1e-2,
+        "pjrt={} native={native}",
+        pjrt[0]
+    );
+}
+
+#[test]
+fn triangle_algorithm_runs_on_pjrt_backend() {
+    if skip_if_missing() {
+        return;
+    }
+    let edges = karate::edges();
+    let stream = MemoryStream::new(edges);
+    let ds = accumulate_stream(
+        &stream,
+        2,
+        HllConfig::new(8, 0x3177),
+        AccumulateOptions::default(),
+    );
+    let ds = Arc::new(ds);
+    let shards = stream.shard(2);
+
+    let service = PjrtService::start(artifacts_dir()).unwrap();
+    let pjrt_res = edge_triangle_heavy_hitters(
+        &ds,
+        &shards,
+        &TriangleOptions {
+            k: 10,
+            intersect: IntersectBackend::Batched {
+                batch: 32,
+                exec: Arc::new(service.handle()),
+            },
+            backend: Backend::Sequential,
+            ..Default::default()
+        },
+    );
+    let native_res = edge_triangle_heavy_hitters(
+        &ds,
+        &shards,
+        &TriangleOptions {
+            k: 10,
+            backend: Backend::Sequential,
+            ..Default::default()
+        },
+    );
+    assert_eq!(pjrt_res.pairs_estimated, native_res.pairs_estimated);
+    // estimates come from the same model; global counts must be close
+    let rel = (pjrt_res.global_estimate - native_res.global_estimate).abs()
+        / native_res.global_estimate.max(1.0);
+    assert!(
+        rel < 0.1,
+        "pjrt={} native={}",
+        pjrt_res.global_estimate,
+        native_res.global_estimate
+    );
+}

@@ -1,0 +1,180 @@
+//! Statistical checks of the paper's theorems.
+//!
+//! * **Theorem 1**: Ñ(x,t) and Ñ(t) are nearly unbiased with relative
+//!   standard deviation ≤ η_{r,n} ≈ 1.04/√r. Verified over many hash
+//!   seeds on a fixed graph.
+//! * **Theorem 2**: the vertex-local estimate error is bounded by twice
+//!   the max edge-local error (checked as: relative deviation of T̃(x)
+//!   stays within 2× the worst observed edge deviation bound).
+
+use degreesketch::coordinator::anf::{neighborhood_approximation, AnfOptions};
+use degreesketch::coordinator::sketch::{
+    accumulate_stream, AccumulateOptions,
+};
+use degreesketch::graph::csr::Csr;
+use degreesketch::graph::exact;
+use degreesketch::graph::gen::GraphSpec;
+use degreesketch::graph::stream::{EdgeStream, MemoryStream};
+use degreesketch::hll::HllConfig;
+
+/// Theorem 1, global form: over random hash seeds, the mean of Ñ(t)/N(t)
+/// is ≈ 1 and its standard deviation is ≤ η = 1.04/√r (with slack for the
+/// finite seed sample).
+#[test]
+fn thm1_global_neighborhood_unbiased_and_bounded_variance() {
+    let p = 8u8;
+    let eta = 1.04 / ((1u64 << p) as f64).sqrt(); // 0.065
+    let edges = GraphSpec::parse("ba:1500:3").unwrap().generate(5);
+    let csr = Csr::from_edges(&edges);
+    let truth = exact::neighborhood_sizes(&csr, 3);
+    let g_truth = exact::global_neighborhood(&truth);
+
+    let seeds = 40;
+    let mut ratios = Vec::with_capacity(seeds);
+    for seed in 0..seeds as u64 {
+        let stream = MemoryStream::new(edges.clone());
+        let ds = accumulate_stream(
+            &stream,
+            3,
+            HllConfig::new(p, 1000 + seed),
+            AccumulateOptions::default(),
+        );
+        let shards = stream.shard(3);
+        let anf = neighborhood_approximation(
+            &ds,
+            &shards,
+            AnfOptions {
+                max_t: 3,
+                ..Default::default()
+            },
+        );
+        ratios.push(anf.global[2] / g_truth[2] as f64);
+    }
+    let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    let var = ratios.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>()
+        / ratios.len() as f64;
+    let std = var.sqrt();
+    // near-unbiased: |mean - 1| within 4 standard errors of the mean
+    let sem = eta / (seeds as f64).sqrt();
+    assert!(
+        (mean - 1.0).abs() < 4.0 * sem + 0.01,
+        "mean ratio {mean} (sem {sem})"
+    );
+    // Ñ(t) sums n correlated-but-individually-bounded estimates; Theorem 1
+    // bounds its relative std by η as well.
+    assert!(std <= eta * 1.2, "std {std} vs eta {eta}");
+}
+
+/// Theorem 1, per-vertex form: the *distribution over seeds* of
+/// Ñ(x,t)/N(x,t) for a fixed vertex is near-unbiased with std ≤ ~η.
+#[test]
+fn thm1_per_vertex_estimates_concentrate() {
+    let p = 8u8;
+    let eta = 1.04 / 16.0;
+    let edges = GraphSpec::parse("ws:600:8:10").unwrap().generate(8);
+    let csr = Csr::from_edges(&edges);
+    let truth = exact::neighborhood_sizes(&csr, 2);
+    // pick a mid-degree vertex
+    let v = (0..csr.num_vertices() as u32)
+        .max_by_key(|&v| csr.degree(v))
+        .unwrap();
+    let id = csr.original_id(v);
+    let n_true = truth[v as usize][1] as f64;
+
+    let seeds = 60;
+    let mut ratios = Vec::new();
+    for seed in 0..seeds as u64 {
+        let stream = MemoryStream::new(edges.clone());
+        let ds = accumulate_stream(
+            &stream,
+            2,
+            HllConfig::new(p, 7000 + seed),
+            AccumulateOptions::default(),
+        );
+        let shards = stream.shard(2);
+        let anf = neighborhood_approximation(
+            &ds,
+            &shards,
+            AnfOptions {
+                max_t: 2,
+                ..Default::default()
+            },
+        );
+        ratios.push(anf.per_vertex[&id][1] / n_true);
+    }
+    let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    let std = (ratios.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>()
+        / ratios.len() as f64)
+        .sqrt();
+    assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
+    assert!(std <= eta * 1.5, "std {std} vs eta {eta}");
+}
+
+/// Theorem 2's shape: for triangle-dense graphs, the relative deviation of
+/// vertex-local estimates is within ~2× the typical edge-local deviation.
+#[test]
+fn thm2_vertex_error_bounded_by_edge_error() {
+    use degreesketch::coordinator::{
+        edge_triangle_heavy_hitters, vertex_triangle_heavy_hitters,
+        TriangleOptions,
+    };
+    use std::collections::HashMap;
+    use std::sync::Arc;
+
+    let edges = GraphSpec::parse("ws:400:10:2").unwrap().generate(2);
+    let csr = Csr::from_edges(&edges);
+    let stream = MemoryStream::new(edges.clone());
+    let ds = Arc::new(accumulate_stream(
+        &stream,
+        3,
+        HllConfig::new(12, 0x7E0),
+        AccumulateOptions::default(),
+    ));
+    let shards = stream.shard(3);
+    let k_all = edges.len();
+
+    let eres = edge_triangle_heavy_hitters(
+        &ds,
+        &shards,
+        &TriangleOptions {
+            k: k_all,
+            ..Default::default()
+        },
+    );
+    let edge_truth: HashMap<(u64, u64), usize> = exact::edge_triangles(&csr)
+        .into_iter()
+        .map(|(u, v, c)| {
+            let (a, b) = (csr.original_id(u), csr.original_id(v));
+            ((a.min(b), a.max(b)), c)
+        })
+        .collect();
+    // worst relative deviation among edges with nonzero truth
+    let mut eta_star = 0.0f64;
+    for &(est, e) in &eres.heavy_hitters {
+        let t = edge_truth[&e];
+        if t > 0 {
+            eta_star = eta_star.max((est - t as f64).abs() / t as f64);
+        }
+    }
+
+    let vres = vertex_triangle_heavy_hitters(
+        &ds,
+        &shards,
+        &TriangleOptions {
+            k: csr.num_vertices(),
+            ..Default::default()
+        },
+    );
+    let vt = exact::vertex_triangles(&csr);
+    for &(est, v) in &vres.heavy_hitters {
+        let t = vt[csr.compact_id(v).unwrap() as usize];
+        if t > 0 {
+            let dev = (est - t as f64).abs() / t as f64;
+            assert!(
+                dev <= 2.0 * eta_star + 0.05,
+                "vertex {v}: dev {dev} vs 2η* {}",
+                2.0 * eta_star
+            );
+        }
+    }
+}
