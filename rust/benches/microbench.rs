@@ -1,14 +1,29 @@
 //! Hot-path microbenchmarks — the §Perf instrumentation (EXPERIMENTS.md).
 //!
-//! Components: hash, sketch insert (sparse + dense regimes), merge,
-//! estimators, Eq. 19 pair statistics, MLE solve, inclusion-exclusion.
-//! These are the units the perf pass optimizes one at a time.
+//! Components: hash, sketch insert (sparse + dense regimes, per-sketch and
+//! arena-store layouts), dense merge (seed scalar loop vs SWAR kernel vs
+//! full `Hll::merge`), estimators (register-rescan reference vs the
+//! incremental-histogram path), Eq. 19 pair statistics, MLE solve,
+//! inclusion-exclusion, and end-to-end Algorithm-1 accumulation (arena
+//! store + batching vs the per-sketch reference path).
+//!
+//! Alongside the text table, results land in `BENCH_microbench.json`
+//! (override with `$BENCH_JSON_PATH`) so the perf trajectory is tracked
+//! across PRs.
 
-use degreesketch::bench_util::{bench_header, Bench, Table};
+use degreesketch::bench_util::{
+    bench_header, Bench, BenchResult, JsonReport, Table,
+};
+use degreesketch::comm::Backend;
+use degreesketch::coordinator::sketch::{
+    accumulate, accumulate_reference, AccumulateOptions,
+};
+use degreesketch::graph::gen::GraphSpec;
+use degreesketch::graph::stream::{EdgeStream, MemoryStream};
 use degreesketch::hash::{xxh64_u64, Xoshiro256ss};
 use degreesketch::hll::{
-    inclusion_exclusion, mle_intersect, pair_stats, Estimator, Hll,
-    HllConfig, MleOptions,
+    ertl_estimate_from_hist, inclusion_exclusion, kernels, mle_intersect,
+    pair_stats, Estimator, Hll, HllConfig, MleOptions, SketchStore,
 };
 
 fn filled(cfg: HllConfig, n: u64, rng: &mut Xoshiro256ss) -> Hll {
@@ -17,6 +32,15 @@ fn filled(cfg: HllConfig, n: u64, rng: &mut Xoshiro256ss) -> Hll {
         s.insert(rng.next_u64());
     }
     s
+}
+
+/// The seed's dense-merge inner loop, kept as the scalar baseline.
+fn scalar_merge(dst: &mut [u8], src: &[u8]) {
+    for (a, &b) in dst.iter_mut().zip(src) {
+        if b > *a {
+            *a = b;
+        }
+    }
 }
 
 fn main() {
@@ -28,6 +52,21 @@ fn main() {
     let bench = Bench::new(2, 5);
     let mut rng = Xoshiro256ss::new(1);
     let mut table = Table::new(&["component", "items/iter", "mean", "rate"]);
+    let mut report = JsonReport::new("microbench");
+
+    let row = |table: &mut Table,
+                   report: &mut JsonReport,
+                   label: &str,
+                   items: u64,
+                   r: &BenchResult| {
+        table.row(&[
+            label.into(),
+            items.to_string(),
+            format!("{:.4}s", r.mean_s),
+            format!("{:.2e}/s", r.throughput(items)),
+        ]);
+        report.record(label, items, r);
+    };
 
     // hash
     {
@@ -39,15 +78,11 @@ fn main() {
             }
             acc
         });
-        table.row(&[
-            "xxh64_u64".into(),
-            n.to_string(),
-            format!("{:.3}s", r.mean_s),
-            format!("{:.2e}/s", r.throughput(n)),
-        ]);
+        row(&mut table, &mut report, "xxh64_u64", n, &r);
     }
 
-    // insert: sparse regime (degree ~8) and dense regime (degree ~100k)
+    // insert: sparse regime (degree ~8) and dense regime (degree ~100k),
+    // per-sketch Hll vs arena SketchStore
     for (label, per_sketch, sketches) in [
         ("insert sparse (deg 8)", 8u64, 100_000u64),
         ("insert dense", 100_000, 20),
@@ -66,40 +101,163 @@ fn main() {
             }
             sum
         });
-        table.row(&[
-            label.into(),
-            total.to_string(),
-            format!("{:.3}s", r.mean_s),
-            format!("{:.2e}/s", r.throughput(total)),
-        ]);
+        row(&mut table, &mut report, label, total, &r);
+
+        let store_label = format!("store {label}");
+        let r = bench.run(|| {
+            let mut rng = Xoshiro256ss::new(3);
+            let mut store = SketchStore::new(cfg);
+            for v in 0..sketches {
+                for _ in 0..per_sketch {
+                    store.insert_element(v, rng.next_u64());
+                }
+            }
+            store.len()
+        });
+        row(&mut table, &mut report, &store_label, total, &r);
     }
 
-    // merge (dense x dense, p = 8)
+    // fused harmonic-sum kernel vs per-register exp2 (the register-direct
+    // classic-estimator statistic, used where no histogram is maintained)
+    {
+        let cfg = HllConfig::new(8, 9);
+        let s = filled(cfg, 50_000, &mut rng);
+        let regs = s.to_dense_registers();
+        let n = 200_000u64;
+        let naive = bench.run(|| {
+            let mut acc = 0.0;
+            for _ in 0..n {
+                let mut sum = 0.0;
+                for &x in std::hint::black_box(&regs) {
+                    sum += (-(x as f64)).exp2();
+                }
+                acc += sum;
+            }
+            acc
+        });
+        row(&mut table, &mut report, "harmonic p8 exp2-loop", n, &naive);
+        let fused = bench.run(|| {
+            let mut acc = 0.0;
+            for _ in 0..n {
+                let (sum, zeros) =
+                    kernels::fused_harmonic(std::hint::black_box(&regs));
+                acc += sum + zeros as f64;
+            }
+            acc
+        });
+        row(&mut table, &mut report, "harmonic p8 fused-lut", n, &fused);
+        report.record_speedup(
+            "harmonic fused vs exp2",
+            naive.mean_s,
+            fused.mean_s,
+        );
+    }
+
+    // dense merge, p = 8: seed scalar loop vs SWAR kernel vs Hll::merge
     {
         let cfg = HllConfig::new(8, 4);
         let a = filled(cfg, 5000, &mut rng);
         let b = filled(cfg, 5000, &mut rng);
+        let ra = a.to_dense_registers();
+        let rb = b.to_dense_registers();
         let n = 100_000u64;
-        let r = bench.run(|| {
+
+        // clone INSIDE each closure so every variant measures the same
+        // work: one changing merge then steady-state no-op merges
+        let scalar = bench.run(|| {
+            let mut acc = ra.clone();
+            for _ in 0..n {
+                scalar_merge(
+                    std::hint::black_box(&mut acc),
+                    std::hint::black_box(&rb),
+                );
+            }
+            acc[0]
+        });
+        row(&mut table, &mut report, "merge dense p8 scalar(seed)", n, &scalar);
+
+        let swar = bench.run(|| {
+            let mut acc = ra.clone();
+            for _ in 0..n {
+                kernels::merge_max(
+                    std::hint::black_box(&mut acc),
+                    std::hint::black_box(&rb),
+                );
+            }
+            acc[0]
+        });
+        row(&mut table, &mut report, "merge dense p8 swar", n, &swar);
+        report.record_speedup(
+            "merge dense p8 swar vs scalar",
+            scalar.mean_s,
+            swar.mean_s,
+        );
+
+        let hll = bench.run(|| {
             let mut acc = a.clone();
             for _ in 0..n {
                 acc.merge(&b);
             }
             acc.nonzero_registers()
         });
-        table.row(&[
-            "merge dense p8".into(),
-            n.to_string(),
-            format!("{:.3}s", r.mean_s),
-            format!("{:.2e}/s", r.throughput(n)),
-        ]);
+        row(&mut table, &mut report, "merge dense p8 (Hll+hist)", n, &hll);
     }
 
-    // estimators
+    // estimators: register-rescan reference vs incremental histogram
+    for p in [8u8, 12] {
+        let cfg = HllConfig::new(p, 5);
+        let s = filled(cfg, 100_000, &mut rng);
+        assert!(s.is_dense());
+        let regs = s.to_dense_registers();
+        let q = cfg.q() as usize;
+        let n = 100_000u64;
+
+        let rescan = bench.run(|| {
+            let mut acc = 0.0;
+            for _ in 0..n {
+                // the seed path: O(r) histogram rebuild per estimate
+                let mut hist = vec![0u32; q + 2];
+                for &x in std::hint::black_box(&regs) {
+                    hist[x as usize] += 1;
+                }
+                acc += ertl_estimate_from_hist(&hist, q);
+            }
+            acc
+        });
+        row(
+            &mut table,
+            &mut report,
+            &format!("estimate ertl p{p} rescan(seed)"),
+            n,
+            &rescan,
+        );
+
+        let cached = bench.run(|| {
+            let mut acc = 0.0;
+            for _ in 0..n {
+                acc += std::hint::black_box(&s)
+                    .estimate_with(Estimator::ErtlImproved);
+            }
+            acc
+        });
+        row(
+            &mut table,
+            &mut report,
+            &format!("estimate ertl p{p} incremental-hist"),
+            n,
+            &cached,
+        );
+        report.record_speedup(
+            &format!("estimate ertl p{p} incremental vs rescan"),
+            rescan.mean_s,
+            cached.mean_s,
+        );
+    }
+
+    // other estimators on the incremental path
     for (label, est) in [
         ("estimate classic", Estimator::Classic),
         ("estimate loglog-beta", Estimator::LogLogBeta),
-        ("estimate ertl", Estimator::ErtlImproved),
     ] {
         let cfg = HllConfig::new(8, 5);
         let s = filled(cfg, 20_000, &mut rng);
@@ -111,12 +269,7 @@ fn main() {
             }
             acc
         });
-        table.row(&[
-            label.into(),
-            n.to_string(),
-            format!("{:.3}s", r.mean_s),
-            format!("{:.2e}/s", r.throughput(n)),
-        ]);
+        row(&mut table, &mut report, label, n, &r);
     }
 
     // pair stats + intersections, p = 8 and p = 12
@@ -133,12 +286,7 @@ fn main() {
             }
             acc
         });
-        table.row(&[
-            format!("pair_stats p{p}"),
-            n.to_string(),
-            format!("{:.3}s", r.mean_s),
-            format!("{:.2e}/s", r.throughput(n)),
-        ]);
+        row(&mut table, &mut report, &format!("pair_stats p{p}"), n, &r);
 
         let n = if p == 8 { 2_000u64 } else { 500 };
         let r = bench.run(|| {
@@ -149,12 +297,7 @@ fn main() {
             }
             acc
         });
-        table.row(&[
-            format!("mle_intersect p{p}"),
-            n.to_string(),
-            format!("{:.3}s", r.mean_s),
-            format!("{:.2e}/s", r.throughput(n)),
-        ]);
+        row(&mut table, &mut report, &format!("mle_intersect p{p}"), n, &r);
 
         let n = if p == 8 { 20_000u64 } else { 5_000 };
         let r = bench.run(|| {
@@ -164,13 +307,60 @@ fn main() {
             }
             acc
         });
-        table.row(&[
-            format!("inclusion_exclusion p{p}"),
-            n.to_string(),
-            format!("{:.3}s", r.mean_s),
-            format!("{:.2e}/s", r.throughput(n)),
-        ]);
+        row(
+            &mut table,
+            &mut report,
+            &format!("inclusion_exclusion p{p}"),
+            n,
+            &r,
+        );
+    }
+
+    // end-to-end Algorithm 1 accumulation (sequential backend, p = 8,
+    // 8 ranks): arena store + batching vs the per-sketch reference path
+    {
+        let edges = GraphSpec::parse("rmat:14:8").unwrap().generate(7);
+        let m = edges.len() as u64;
+        let stream = MemoryStream::new(edges);
+        let cfg = HllConfig::new(8, 0xACC);
+        let opts = AccumulateOptions {
+            backend: Backend::Sequential,
+            ..Default::default()
+        };
+        let heavy = Bench::new(1, 3);
+
+        let reference = heavy.run(|| {
+            accumulate_reference(stream.shard(8), cfg, opts).num_vertices()
+        });
+        row(
+            &mut table,
+            &mut report,
+            "accumulate p8 x8 reference(seed) edges",
+            m,
+            &reference,
+        );
+
+        let store = heavy.run(|| {
+            accumulate(stream.shard(8), cfg, opts).num_vertices()
+        });
+        row(
+            &mut table,
+            &mut report,
+            "accumulate p8 x8 store+batch edges",
+            m,
+            &store,
+        );
+        report.record_speedup(
+            "accumulate store vs reference",
+            reference.mean_s,
+            store.mean_s,
+        );
     }
 
     table.print();
+    // cargo runs bench binaries with cwd = package root (rust/), so the
+    // repo-root tracked artifact is one level up
+    report
+        .write("../BENCH_microbench.json")
+        .expect("writing bench json");
 }

@@ -113,6 +113,101 @@ pub fn bench_header(id: &str, paper_ref: &str, workload: &str) {
     println!("workload: {workload}");
 }
 
+/// Machine-readable benchmark output (no serde offline: hand-rendered
+/// JSON). One entry per component; written as
+/// `{"bench": <id>, "results": [{component, items_per_iter, mean_s,
+/// rate_per_s}, ...]}` so the perf trajectory can be diffed across PRs.
+pub struct JsonReport {
+    bench_id: String,
+    entries: Vec<String>,
+}
+
+/// JSON has no inf/NaN literals; render non-finite values as null so a
+/// degenerate timing (e.g. a 0s mean on a coarse clock) can't corrupt
+/// the whole tracked artifact.
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl JsonReport {
+    pub fn new(bench_id: &str) -> Self {
+        Self {
+            bench_id: bench_id.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Record one timed component.
+    pub fn record(&mut self, component: &str, items: u64, r: &BenchResult) {
+        self.entries.push(format!(
+            "{{\"component\": \"{}\", \"items_per_iter\": {}, \
+             \"mean_s\": {}, \"rate_per_s\": {}}}",
+            json_escape(component),
+            items,
+            json_num(r.mean_s),
+            json_num(r.throughput(items))
+        ));
+    }
+
+    /// Record a before/after speedup (`base` = old mean, `new` = new mean).
+    pub fn record_speedup(&mut self, component: &str, base_s: f64, new_s: f64) {
+        self.entries.push(format!(
+            "{{\"component\": \"{}\", \"base_mean_s\": {}, \
+             \"new_mean_s\": {}, \"speedup\": {}}}",
+            json_escape(component),
+            json_num(base_s),
+            json_num(new_s),
+            json_num(base_s / new_s)
+        ));
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{{\n  \"bench\": \"{}\",\n  \"results\": [\n",
+            json_escape(&self.bench_id)
+        );
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str("    ");
+            s.push_str(e);
+            if i + 1 < self.entries.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write to `path` (or to `$BENCH_JSON_PATH` if set).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let path = std::env::var("BENCH_JSON_PATH")
+            .unwrap_or_else(|_| path.to_string());
+        std::fs::write(&path, self.render())?;
+        println!("wrote {path}");
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +225,29 @@ mod tests {
         assert!(r.mean_s > 0.0);
         assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s);
         assert!(r.throughput(1000) > 0.0);
+    }
+
+    #[test]
+    fn json_report_renders_valid_shape() {
+        let mut rep = JsonReport::new("micro \"x\"");
+        rep.record(
+            "merge",
+            100,
+            &BenchResult {
+                mean_s: 0.5,
+                min_s: 0.4,
+                max_s: 0.6,
+                iters: 3,
+            },
+        );
+        rep.record_speedup("merge", 1.0, 0.25);
+        let s = rep.render();
+        assert!(s.contains("\"bench\": \"micro \\\"x\\\"\""));
+        assert!(s.contains("\"rate_per_s\": 200"));
+        assert!(s.contains("\"speedup\": 4"));
+        // exactly one comma between the two entries, none trailing
+        assert_eq!(s.matches("},\n").count(), 1);
+        assert!(!s.contains(",\n  ]"));
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //! `Ñ(x,t) = |Dᵗ[x]|` and `Ñ(t) = Σ_x Ñ(x,t)` is REDUCEd globally
 //! (Theorem 1 gives the bias/variance guarantees).
 //!
+//! The working layers `Dᵗ⁻¹`/`Dᵗ` are arena-backed [`SketchStore`]s:
+//! cloning a layer between passes is a contiguous memcpy instead of
+//! thousands of per-sketch allocations, and when `f(y)` is the local rank
+//! the SKETCH "message" is a **borrowed register view** merged straight
+//! from `Dᵗ⁻¹`'s arena into `Dᵗ`'s — no `Hll` clone, no queue round trip.
+//! Only cross-rank sketches materialize into owned messages.
+//!
 //! Semantics note (matches the paper's construction): `D¹[x]` sketches the
 //! *adjacency set* of `x`, so `Ñ(x,1)` estimates `d(x)`; for `t ≥ 2`,
 //! `Dᵗ[x]` covers every vertex within distance `t` **including** `x`
@@ -20,7 +27,7 @@ use std::collections::HashMap;
 use crate::comm::{run_epoch, Actor, Backend, CommStats, Outbox};
 use crate::graph::stream::{EdgeStream, MemoryStream};
 use crate::graph::VertexId;
-use crate::hll::{Estimator, Hll};
+use crate::hll::{Estimator, Hll, SketchStore};
 
 use super::partition::Partitioner;
 use super::sketch::{DegreeSketch, Shard};
@@ -64,18 +71,20 @@ impl Default for AnfOptions {
 enum AnfMsg {
     /// EDGE (x, y): deliver to f(x); owner forwards its sketch to f(y).
     Edge(VertexId, VertexId),
-    /// SKETCH (y, Dᵗ⁻¹[x]): merge into Dᵗ[y] at f(y).
+    /// SKETCH (y, Dᵗ⁻¹[x]): merge into Dᵗ[y] at f(y) (cross-rank only —
+    /// rank-local forwards merge borrowed views without materializing).
     Sketch(VertexId, Hll),
 }
 
 struct AnfActor {
+    rank: usize,
     ranks: usize,
     partitioner: Partitioner,
     substream: MemoryStream,
     /// Dᵗ⁻¹ (read-only this pass).
-    prev: Shard,
+    prev: SketchStore,
     /// Dᵗ (starts as a clone of prev — Alg. 2 line 23).
-    next: Shard,
+    next: SketchStore,
 }
 
 impl Actor for AnfActor {
@@ -97,23 +106,31 @@ impl Actor for AnfActor {
         match msg {
             AnfMsg::Edge(x, y) => {
                 // forward Dᵗ⁻¹[x] to y's owner
-                if let Some(sk) = self.prev.get(&x) {
-                    out.send(
-                        self.partitioner.rank_of(y, self.ranks),
-                        AnfMsg::Sketch(y, sk.clone()),
-                    );
+                if let Some(view) = self.prev.get(x) {
+                    let dst = self.partitioner.rank_of(y, self.ranks);
+                    if dst == self.rank {
+                        // zero-copy: merge the borrowed view in place
+                        self.next.merge_ref(y, view);
+                    } else {
+                        out.send(dst, AnfMsg::Sketch(y, view.to_hll()));
+                    }
                 }
             }
             AnfMsg::Sketch(y, sk) => {
                 // Dᵗ[y] ∪̃= Dᵗ⁻¹[x]
-                if let Some(mine) = self.next.get_mut(&y) {
-                    mine.merge(&sk);
-                } else {
-                    self.next.insert(y, sk);
-                }
+                self.next.merge_hll(y, &sk);
             }
         }
     }
+}
+
+/// Rehydrate a frozen shard into a mutable arena store.
+fn store_from_shard(shard: &Shard, config: crate::hll::HllConfig) -> SketchStore {
+    let mut store = SketchStore::new(config);
+    for (v, h) in shard.iter() {
+        store.merge_hll(v, h);
+    }
+    store
 }
 
 /// **Algorithm 2** — run `max_t - 1` sketch-propagation passes over the
@@ -131,6 +148,7 @@ pub fn neighborhood_approximation(
     assert!(opts.max_t >= 1);
     let ranks = d1.num_ranks();
     let part = d1.partitioner();
+    let config = *d1.config();
 
     let mut per_vertex: HashMap<VertexId, Vec<f64>> = HashMap::new();
     let mut global = Vec::with_capacity(opts.max_t);
@@ -138,17 +156,22 @@ pub fn neighborhood_approximation(
     let mut pass_stats = Vec::new();
 
     // t = 1: estimates straight from D¹ (computation context, lines 17-19).
-    let mut layer: Vec<Shard> = d1.shards().to_vec();
+    let mut layer: Vec<SketchStore> = d1
+        .shards()
+        .iter()
+        .map(|s| store_from_shard(s, config))
+        .collect();
     record_estimates(&layer, opts.estimator, &mut per_vertex, &mut global);
 
     for _t in 2..=opts.max_t {
         let start = std::time::Instant::now();
         // Dᵗ ← Dᵗ⁻¹ (line 23), then the message-passing pass.
         let mut actors: Vec<AnfActor> = layer
-            .iter()
-            .cloned()
+            .into_iter()
             .zip(substreams.iter().cloned())
-            .map(|(prev, substream)| AnfActor {
+            .enumerate()
+            .map(|(rank, (prev, substream))| AnfActor {
+                rank,
                 ranks,
                 partitioner: part,
                 substream,
@@ -172,20 +195,20 @@ pub fn neighborhood_approximation(
 }
 
 fn record_estimates(
-    layer: &[Shard],
+    layer: &[SketchStore],
     estimator: Estimator,
     per_vertex: &mut HashMap<VertexId, Vec<f64>>,
     global: &mut Vec<f64>,
 ) {
     // Ñ(x,t) per vertex; Ñ(t) as the REDUCE sum. Vertices are visited in
     // sorted order so the floating-point sum is identical across backends
-    // (HashMap iteration order would otherwise perturb the last ulp).
+    // (hash iteration order would otherwise perturb the last ulp).
     let mut sum = 0.0;
-    for shard in layer {
-        let mut keys: Vec<VertexId> = shard.keys().copied().collect();
-        keys.sort_unstable();
-        for v in keys {
-            let est = shard[&v].estimate_with(estimator);
+    for store in layer {
+        for v in store.vertices_sorted() {
+            let est = store
+                .estimate_with(v, estimator)
+                .expect("vertex present in layer");
             per_vertex.entry(v).or_default().push(est);
             sum += est;
         }
@@ -309,5 +332,17 @@ mod tests {
                 "vertex {v} escaped its component: {ests:?}"
             );
         }
+    }
+
+    #[test]
+    fn single_rank_never_materializes_messages() {
+        // with one rank every SKETCH forward is rank-local; the pass must
+        // still be correct and carry zero cross-rank sketch traffic beyond
+        // the EDGE seeds
+        let edges = karate::edges();
+        let m = edges.len() as u64;
+        let res = run_anf(edges, 1, 10, 2, Backend::Sequential);
+        assert_eq!(res.pass_stats[0].messages, 2 * m); // EDGE only
+        assert!(res.global[1] >= res.global[0]);
     }
 }

@@ -13,7 +13,6 @@
 //! shard_<r>.bin     u32 count, then count × (u64 vertex, HLL blob)
 //! ```
 
-use std::collections::HashMap;
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -96,12 +95,11 @@ impl QueryEngine {
             let f = File::create(dir.join(format!("shard_{rank}.bin")))?;
             let mut w = BufWriter::with_capacity(1 << 20, f);
             w.write_all(&(shard.len() as u32).to_le_bytes())?;
-            // deterministic order for reproducible files
-            let mut keys: Vec<u64> = shard.keys().copied().collect();
-            keys.sort_unstable();
-            for v in keys {
+            // frozen shards already iterate in ascending vertex order, so
+            // files are reproducible without re-sorting
+            for (v, h) in shard.iter() {
                 w.write_all(&v.to_le_bytes())?;
-                shard[&v].write_to(&mut w)?;
+                h.write_to(&mut w)?;
             }
             w.flush()?;
         }
@@ -130,7 +128,8 @@ impl QueryEngine {
             let mut count_buf = [0u8; 4];
             r.read_exact(&mut count_buf)?;
             let count = u32::from_le_bytes(count_buf) as usize;
-            let mut shard = HashMap::with_capacity(count);
+            let mut entries: Vec<(u64, Hll)> = Vec::with_capacity(count);
+            let mut prev: Option<u64> = None;
             for _ in 0..count {
                 let mut vbuf = [0u8; 8];
                 r.read_exact(&mut vbuf)?;
@@ -142,9 +141,13 @@ impl QueryEngine {
                 if partitioner.rank_of(v, ranks) != rank {
                     bail!("shard {rank}: vertex {v} stored on wrong rank");
                 }
-                shard.insert(v, h);
+                if prev.is_some_and(|p| p >= v) {
+                    bail!("shard {rank}: vertex ids not strictly increasing");
+                }
+                prev = Some(v);
+                entries.push((v, h));
             }
-            shards.push(shard);
+            shards.push(Shard::from_sorted_entries(entries));
         }
         Ok(Self::new(DegreeSketch::from_parts(
             config,

@@ -9,7 +9,7 @@
 //! TRI <x> <y>          → <intersection> <union> <dominated:0|1> | NONE
 //! JACCARD <x> <y>      → <jaccard> | NONE
 //! UNION <x> [<y> ...]  → <estimate> | NONE
-//! STATS                → vertices=<n> ranks=<p> p=<p> mem=<bytes>
+//! STATS                → vertices=<n> ranks=<p> p=<p> mem=<bytes> dense=<n>
 //! QUIT                 → BYE (closes the connection)
 //! ```
 //!
@@ -177,11 +177,12 @@ fn respond(line: &str, engine: &QueryEngine) -> Response {
         "STATS" => {
             let ds = engine.sketch_data();
             Response::Line(format!(
-                "vertices={} ranks={} p={} mem={}",
+                "vertices={} ranks={} p={} mem={} dense={}",
                 ds.num_vertices(),
                 ds.num_ranks(),
                 ds.config().p(),
-                ds.memory_bytes()
+                ds.memory_bytes(),
+                ds.num_dense_sketches()
             ))
         }
         "QUIT" => Response::Bye,

@@ -7,18 +7,106 @@
 //! `(v, u)` to `f(v)`; the owner INSERTs the opposite endpoint into the
 //! vertex's sketch. One pass, `O(ε⁻² n log log n)` total space — the
 //! semi-streaming property.
+//!
+//! The hot path is arena-backed: each rank accumulates into a
+//! [`SketchStore`] (contiguous registers, pooled sparse buffers, one
+//! shared config) and batches incoming `(x, y)` messages so sparse
+//! insertions amortize into sorted-run merges. Because register max
+//! commutes, the result is bit-identical to the per-sketch reference path
+//! ([`accumulate_reference`], kept for parity tests and perf baselines).
+//! After the epoch each store freezes into an immutable [`Shard`] —
+//! vertex-sorted, contiguous, borrowable `&Hll`s — which the query
+//! engine, ANF and triangle algorithms read.
 
 use std::collections::HashMap;
 
 use crate::comm::{run_epoch, Actor, Backend, CommStats, Outbox};
 use crate::graph::stream::{EdgeStream, MemoryStream};
 use crate::graph::{Edge, VertexId};
-use crate::hll::{Estimator, Hll, HllConfig};
+use crate::hll::{Estimator, Hll, HllConfig, SketchStore};
 
 use super::partition::Partitioner;
 
-/// One rank's shard of the distributed dictionary.
-pub type Shard = HashMap<VertexId, Hll>;
+/// Messages buffered per rank before a grouped arena merge.
+const ACCUM_BATCH: usize = 4096;
+
+/// Algorithm 1's computation context, shared by the store-backed and
+/// reference actors so parity tests compare storage layouts against the
+/// exact same message stream: read σ_P, send `(u, v)` to `f(u)` and
+/// `(v, u)` to `f(v)`, dropping self-loops (paper §5 casts them away).
+fn seed_edges(
+    substream: &MemoryStream,
+    partitioner: Partitioner,
+    ranks: usize,
+    out: &mut Outbox<Edge>,
+) {
+    substream.for_each(&mut |(u, v)| {
+        if u == v {
+            return;
+        }
+        out.send(partitioner.rank_of(u, ranks), (u, v));
+        out.send(partitioner.rank_of(v, ranks), (v, u));
+    });
+}
+
+/// One rank's frozen shard: vertex-sorted sketches in one contiguous
+/// vector plus a flat id → position index.
+#[derive(Debug, Clone, Default)]
+pub struct Shard {
+    index: HashMap<VertexId, u32>,
+    entries: Vec<(VertexId, Hll)>,
+}
+
+impl Shard {
+    /// Freeze an accumulation store (sorts by vertex id).
+    pub fn from_store(store: SketchStore) -> Self {
+        Self::from_sorted_entries(store.into_sorted_hlls())
+    }
+
+    /// Build from entries already sorted by strictly increasing vertex id.
+    pub fn from_sorted_entries(entries: Vec<(VertexId, Hll)>) -> Self {
+        debug_assert!(entries.windows(2).all(|w| w[0].0 < w[1].0));
+        let index = entries
+            .iter()
+            .enumerate()
+            .map(|(i, &(v, _))| (v, i as u32))
+            .collect();
+        Self { index, entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, v: VertexId) -> Option<&Hll> {
+        let i = *self.index.get(&v)?;
+        Some(&self.entries[i as usize].1)
+    }
+
+    /// Iterate `(vertex, sketch)` in ascending vertex order.
+    pub fn iter(&self) -> impl Iterator<Item = (VertexId, &Hll)> {
+        self.entries.iter().map(|(v, h)| (*v, h))
+    }
+
+    /// Approximate heap footprint in bytes. `Hll::memory_bytes` already
+    /// counts the inline struct, which the entries vector capacity term
+    /// would double-count — subtract it per entry.
+    pub fn memory_bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|(_, h)| h.memory_bytes() - std::mem::size_of::<Hll>())
+            .sum::<usize>()
+            + self.entries.capacity()
+                * std::mem::size_of::<(VertexId, Hll)>()
+            + self.index.capacity()
+                * (std::mem::size_of::<VertexId>()
+                    + std::mem::size_of::<u32>())
+    }
+}
 
 /// The accumulated DegreeSketch `D`: a sharded map vertex → HLL.
 #[derive(Debug, Clone)]
@@ -66,6 +154,15 @@ impl DegreeSketch {
         self.shards.iter().map(|s| s.len()).sum()
     }
 
+    /// Number of sketches that have saturated to dense registers.
+    pub fn num_dense_sketches(&self) -> usize {
+        self.shards
+            .iter()
+            .flat_map(|s| s.iter())
+            .filter(|(_, h)| h.is_dense())
+            .count()
+    }
+
     /// The owning rank of a vertex (the paper's `f(x)`).
     #[inline]
     pub fn rank_of(&self, v: VertexId) -> usize {
@@ -74,7 +171,7 @@ impl DegreeSketch {
 
     /// Borrow the sketch of `v`, if it was ever seen in the stream.
     pub fn sketch(&self, v: VertexId) -> Option<&Hll> {
-        self.shards[self.rank_of(v)].get(&v)
+        self.shards[self.rank_of(v)].get(v)
     }
 
     /// `|D[x]|` — estimated degree of `x` (0 for unseen vertices).
@@ -88,9 +185,7 @@ impl DegreeSketch {
 
     /// Iterate all (vertex, sketch) pairs across shards.
     pub fn iter(&self) -> impl Iterator<Item = (VertexId, &Hll)> {
-        self.shards
-            .iter()
-            .flat_map(|s| s.iter().map(|(&v, h)| (v, h)))
+        self.shards.iter().flat_map(|s| s.iter())
     }
 
     /// Approximate heap footprint in bytes — the semi-streaming accounting
@@ -98,8 +193,7 @@ impl DegreeSketch {
     pub fn memory_bytes(&self) -> usize {
         self.shards
             .iter()
-            .flat_map(|s| s.values())
-            .map(|h| h.memory_bytes())
+            .map(|s| s.memory_bytes())
             .sum::<usize>()
             + self.shards.len() * std::mem::size_of::<Shard>()
     }
@@ -124,9 +218,10 @@ impl Default for AccumulateOptions {
 struct AccumActor {
     ranks: usize,
     partitioner: Partitioner,
-    config: HllConfig,
     substream: MemoryStream,
-    shard: Shard,
+    store: SketchStore,
+    /// Pending `(x, y)` messages, applied in grouped batches.
+    batch: Vec<(VertexId, VertexId)>,
 }
 
 impl Actor for AccumActor {
@@ -134,22 +229,19 @@ impl Actor for AccumActor {
     type Msg = Edge;
 
     fn seed(&mut self, out: &mut Outbox<Edge>) {
-        let ranks = self.ranks;
-        let part = self.partitioner;
-        self.substream.for_each(&mut |(u, v)| {
-            if u == v {
-                return; // simple graphs (paper §5 casts away self-loops)
-            }
-            out.send(part.rank_of(u, ranks), (u, v));
-            out.send(part.rank_of(v, ranks), (v, u));
-        });
+        seed_edges(&self.substream, self.partitioner, self.ranks, out);
     }
 
     fn on_message(&mut self, (x, y): Edge, _out: &mut Outbox<Edge>) {
-        self.shard
-            .entry(x)
-            .or_insert_with(|| Hll::new(self.config))
-            .insert(y);
+        self.batch.push((x, y));
+        if self.batch.len() >= ACCUM_BATCH {
+            self.store.insert_batch(&mut self.batch);
+        }
+    }
+
+    fn on_idle(&mut self, _out: &mut Outbox<Edge>) {
+        // quiescence: land the partial batch
+        self.store.insert_batch(&mut self.batch);
     }
 }
 
@@ -167,16 +259,22 @@ pub fn accumulate(
         .map(|substream| AccumActor {
             ranks,
             partitioner: opts.partitioner,
-            config,
             substream,
-            shard: Shard::new(),
+            store: SketchStore::new(config),
+            batch: Vec::new(),
         })
         .collect();
     let stats = run_epoch(opts.backend, &mut actors);
     DegreeSketch::from_parts(
         config,
         opts.partitioner,
-        actors.into_iter().map(|a| a.shard).collect(),
+        actors
+            .into_iter()
+            .map(|a| {
+                debug_assert!(a.batch.is_empty(), "batch flushed at idle");
+                Shard::from_store(a.store)
+            })
+            .collect(),
         stats,
     )
 }
@@ -191,11 +289,72 @@ pub fn accumulate_stream(
     accumulate(stream.shard(ranks), config, opts)
 }
 
+struct ReferenceActor {
+    ranks: usize,
+    partitioner: Partitioner,
+    config: HllConfig,
+    substream: MemoryStream,
+    shard: HashMap<VertexId, Hll>,
+}
+
+impl Actor for ReferenceActor {
+    type Msg = Edge;
+
+    fn seed(&mut self, out: &mut Outbox<Edge>) {
+        seed_edges(&self.substream, self.partitioner, self.ranks, out);
+    }
+
+    fn on_message(&mut self, (x, y): Edge, _out: &mut Outbox<Edge>) {
+        self.shard
+            .entry(x)
+            .or_insert_with(|| Hll::new(self.config))
+            .insert(y);
+    }
+}
+
+/// The pre-arena reference path: one heap-allocated [`Hll`] per vertex,
+/// one binary-search insert per message. Kept as the semantic baseline —
+/// parity tests assert [`accumulate`] matches it register-for-register —
+/// and as the "before" side of the accumulation microbench.
+pub fn accumulate_reference(
+    substreams: Vec<MemoryStream>,
+    config: HllConfig,
+    opts: AccumulateOptions,
+) -> DegreeSketch {
+    let ranks = substreams.len();
+    assert!(ranks > 0, "need at least one rank");
+    let mut actors: Vec<ReferenceActor> = substreams
+        .into_iter()
+        .map(|substream| ReferenceActor {
+            ranks,
+            partitioner: opts.partitioner,
+            config,
+            substream,
+            shard: HashMap::new(),
+        })
+        .collect();
+    let stats = run_epoch(opts.backend, &mut actors);
+    DegreeSketch::from_parts(
+        config,
+        opts.partitioner,
+        actors
+            .into_iter()
+            .map(|a| {
+                let mut entries: Vec<(VertexId, Hll)> =
+                    a.shard.into_iter().collect();
+                entries.sort_unstable_by_key(|&(v, _)| v);
+                Shard::from_sorted_entries(entries)
+            })
+            .collect(),
+        stats,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::csr::Csr;
-    use crate::graph::gen::karate;
+    use crate::graph::gen::{karate, GraphSpec};
 
     fn cfg() -> HllConfig {
         HllConfig::new(10, 0xACC)
@@ -253,6 +412,43 @@ mod tests {
     }
 
     #[test]
+    fn store_path_matches_reference_path() {
+        // the arena + batched path must be register-identical (including
+        // sparse/dense representation) to the per-sketch reference on
+        // both comm backends — karate plus a generated graph whose hub
+        // degrees cross the saturation threshold
+        for spec in ["karate", "ba:400:5"] {
+            let edges = if spec == "karate" {
+                karate::edges()
+            } else {
+                GraphSpec::parse(spec).unwrap().generate(11)
+            };
+            let stream = MemoryStream::new(edges);
+            let c = HllConfig::new(6, 0xBEEF); // r = 64: saturations happen
+            for backend in [Backend::Sequential, Backend::Threaded] {
+                let opts = AccumulateOptions {
+                    backend,
+                    ..Default::default()
+                };
+                let fast = accumulate(stream.shard(8), c, opts);
+                let slow = accumulate_reference(stream.shard(8), c, opts);
+                assert_eq!(
+                    fast.num_vertices(),
+                    slow.num_vertices(),
+                    "{spec} {backend:?}"
+                );
+                for (v, h) in slow.iter() {
+                    assert_eq!(
+                        Some(h),
+                        fast.sketch(v),
+                        "{spec} {backend:?} vertex {v}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn duplicate_and_self_edges_are_harmless() {
         let mut edges = karate::edges();
         edges.push((0, 0));
@@ -283,7 +479,7 @@ mod tests {
             AccumulateOptions::default(),
         );
         for (rank, shard) in ds.shards().iter().enumerate() {
-            for &v in shard.keys() {
+            for (v, _) in shard.iter() {
                 assert_eq!(ds.rank_of(v), rank);
             }
         }
@@ -300,5 +496,21 @@ mod tests {
             AccumulateOptions::default(),
         );
         assert_eq!(ds.accumulation_stats.messages, 2 * m);
+    }
+
+    #[test]
+    fn shards_iterate_sorted() {
+        let ds = accumulate_stream(
+            &MemoryStream::new(karate::edges()),
+            3,
+            cfg(),
+            AccumulateOptions::default(),
+        );
+        for shard in ds.shards() {
+            let ids: Vec<VertexId> = shard.iter().map(|(v, _)| v).collect();
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            assert_eq!(ids, sorted);
+        }
     }
 }

@@ -107,7 +107,9 @@ pub struct TriangleResult<I> {
 enum TriMsg {
     /// (x, y) delivered to f(x).
     Edge(VertexId, VertexId),
-    /// (D[x], x, y) delivered to f(y).
+    /// (D[x], x, y) delivered to f(y). Sent only when f(y) is a remote
+    /// rank — rank-local pairs borrow both sketches from the shared `D`
+    /// without cloning into a message.
     Sketch(Hll, VertexId, VertexId),
     /// (x, T̃(xy)) delivered to f(x) — Algorithm 5 only.
     Est(VertexId, f64),
@@ -132,8 +134,9 @@ struct TriActor {
     vertex_counts: HashMap<VertexId, f64>,
     pairs_estimated: u64,
     pairs_dominated: u64,
-    /// Deferred pairs for the batched backend: (x, y, D[x] copy).
-    pending: Vec<(VertexId, VertexId, Hll)>,
+    /// Deferred pairs for the batched backend: `(x, y, D[x])`, where the
+    /// sketch is `None` for rank-local pairs (fetched from `D` at flush).
+    pending: Vec<(VertexId, VertexId, Option<Hll>)>,
 }
 
 impl TriActor {
@@ -176,6 +179,24 @@ impl TriActor {
         }
     }
 
+    /// Buffer a pair for the batched backend, flushing at the batch size.
+    fn push_pending(
+        &mut self,
+        x: VertexId,
+        y: VertexId,
+        skx: Option<Hll>,
+        out: &mut Outbox<TriMsg>,
+    ) {
+        self.pending.push((x, y, skx));
+        let IntersectBackend::Batched { batch, .. } = &self.opts.intersect
+        else {
+            unreachable!()
+        };
+        if self.pending.len() >= *batch {
+            self.flush_pending(out);
+        }
+    }
+
     fn flush_pending(&mut self, out: &mut Outbox<TriMsg>) {
         if self.pending.is_empty() {
             return;
@@ -186,16 +207,25 @@ impl TriActor {
         };
         let exec = Arc::clone(exec);
         let pending = std::mem::take(&mut self.pending);
-        // assemble (D[y], D[x]) pairs; y's sketch is rank-local
+        // assemble (D[y], D[x]) pairs; y's sketch is rank-local, and so is
+        // x's when the deferred entry carries no sketch
         let pairs: Vec<(Hll, Hll)> = pending
             .iter()
-            .map(|(_, y, skx)| {
+            .map(|(x, y, skx)| {
                 let sky = self
                     .ds
                     .sketch(*y)
                     .expect("endpoint with an edge must have a sketch")
                     .clone();
-                (sky, skx.clone())
+                let skx = match skx {
+                    Some(s) => s.clone(),
+                    None => self
+                        .ds
+                        .sketch(*x)
+                        .expect("rank-local pair sketch present")
+                        .clone(),
+                };
+                (sky, skx)
             })
             .collect();
         let results = exec.intersect(&pairs);
@@ -219,31 +249,36 @@ impl Actor for TriActor {
             }
             out.send(part.rank_of(u, ranks), TriMsg::Edge(u, v));
         });
-        let _ = self.rank;
     }
 
     fn on_message(&mut self, msg: TriMsg, out: &mut Outbox<TriMsg>) {
         match msg {
             TriMsg::Edge(x, y) => {
-                // forward D[x] to f(y)
-                if let Some(sk) = self.ds.sketch(x) {
-                    out.send(
-                        self.ds.partitioner().rank_of(y, self.ranks),
-                        TriMsg::Sketch(sk.clone(), x, y),
-                    );
+                let dst = self.ds.partitioner().rank_of(y, self.ranks);
+                let Some(skx) = self.ds.sketch(x) else {
+                    return;
+                };
+                if dst == self.rank {
+                    // both sketches live in the local shard of the shared
+                    // `D`: estimate from borrowed views, no clone, no
+                    // SKETCH round trip
+                    if matches!(
+                        self.opts.intersect,
+                        IntersectBackend::Batched { .. }
+                    ) {
+                        self.push_pending(x, y, None, out);
+                    } else if let Some(sky) = self.ds.sketch(y) {
+                        let est = self.estimate_now(sky, skx);
+                        self.record(x, y, est, out);
+                    }
+                } else {
+                    // cross-rank: forward D[x] to f(y)
+                    out.send(dst, TriMsg::Sketch(skx.clone(), x, y));
                 }
             }
             TriMsg::Sketch(skx, x, y) => {
                 if matches!(self.opts.intersect, IntersectBackend::Batched { .. }) {
-                    self.pending.push((x, y, skx));
-                    let IntersectBackend::Batched { batch, .. } =
-                        &self.opts.intersect
-                    else {
-                        unreachable!()
-                    };
-                    if self.pending.len() >= *batch {
-                        self.flush_pending(out);
-                    }
+                    self.push_pending(x, y, Some(skx), out);
                 } else if let Some(sky) = self.ds.sketch(y) {
                     let est = self.estimate_now(sky, &skx);
                     self.record(x, y, est, out);

@@ -54,14 +54,26 @@ pub fn alpha(r: usize) -> f64 {
 pub const ALPHA_INF: f64 = 0.721_347_520_444_481_7;
 
 pub(super) fn estimate(sketch: &Hll, estimator: Estimator) -> f64 {
-    let hist = sketch.histogram();
     let q = sketch.config().q() as usize;
+    let p = sketch.config().p();
+    // dense sketches keep an incremental histogram, so this is O(kmax)
+    // with no register scan and no allocation
+    sketch.with_histogram(|hist| estimate_from_hist(hist, q, p, estimator))
+}
+
+/// Dispatch an estimator over a precomputed register histogram
+/// (`hist.len() == q + 2`). This is the entry point used by borrowed
+/// register views ([`crate::hll::SketchRef`]) and the arena store.
+pub fn estimate_from_hist(
+    hist: &[u32],
+    q: usize,
+    p: u8,
+    estimator: Estimator,
+) -> f64 {
     match estimator {
-        Estimator::Classic => classic_from_hist(&hist, q),
-        Estimator::LogLogBeta => {
-            beta_from_hist(&hist, q, sketch.config().p())
-        }
-        Estimator::ErtlImproved => ertl_estimate_from_hist(&hist, q),
+        Estimator::Classic => classic_from_hist(hist, q),
+        Estimator::LogLogBeta => beta_from_hist(hist, q, p),
+        Estimator::ErtlImproved => ertl_estimate_from_hist(hist, q),
     }
 }
 

@@ -1,0 +1,317 @@
+//! Word-parallel (SWAR) register kernels for the dense HLL hot paths.
+//!
+//! Dense register arrays are plain `u8` slices whose values are bounded by
+//! `kmax = 64 - p + 1 <= 61 < 128`; the high bit of every byte is
+//! therefore always clear, which admits the classic borrow-free SWAR
+//! comparison on eight registers per `u64` lane:
+//!
+//! ```text
+//! t    = ((x | 0x80..80) - y) & 0x80..80   # bit7 set per lane iff x >= y
+//! mask = (t >> 7) * 0xFF                   # expand to 0x00 / 0xFF per lane
+//! max  = (x & mask) | (y & !mask)
+//! ```
+//!
+//! On top of [`merge8`] this module provides the register-slice kernels the
+//! sketch layer and the [`super::store::SketchStore`] arena use: bulk
+//! byte-max merge (with or without incremental-histogram maintenance),
+//! chunked histogram accumulation (4 interleaved count tables to dodge
+//! store-forwarding stalls on repeated equal bytes), a fused
+//! harmonic-sum + zero-count pass, and the two-pointer sorted-pair merge
+//! shared by the sparse representations.
+
+const HI: u64 = 0x8080_8080_8080_8080;
+
+/// Byte-wise max of eight packed registers. Both operands must have every
+/// byte `< 0x80` (always true for HLL registers, where `kmax <= 61`).
+#[inline]
+pub fn merge8(x: u64, y: u64) -> u64 {
+    let t = ((x | HI).wrapping_sub(y)) & HI;
+    let mask = (t >> 7).wrapping_mul(0xFF);
+    (x & mask) | (y & !mask)
+}
+
+#[inline]
+fn load8(s: &[u8]) -> u64 {
+    u64::from_le_bytes(s.try_into().expect("8-byte chunk"))
+}
+
+/// `dst[i] = max(dst[i], src[i])`, eight registers per iteration.
+pub fn merge_max(dst: &mut [u8], src: &[u8]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let split = dst.len() / 8 * 8;
+    let (dh, dt) = dst.split_at_mut(split);
+    let (sh, st) = src.split_at(split);
+    for (dc, sc) in dh.chunks_exact_mut(8).zip(sh.chunks_exact(8)) {
+        let x = load8(dc);
+        let y = load8(sc);
+        let m = merge8(x, y);
+        if m != x {
+            dc.copy_from_slice(&m.to_le_bytes());
+        }
+    }
+    for (a, &b) in dt.iter_mut().zip(st) {
+        if b > *a {
+            *a = b;
+        }
+    }
+}
+
+/// [`merge_max`] that also maintains an incremental register histogram:
+/// for every register that grows from `a` to `b`, `hist[a] -= 1` and
+/// `hist[b] += 1`. `hist` must cover `0..=kmax`.
+pub fn merge_max_hist(dst: &mut [u8], src: &[u8], hist: &mut [u32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let split = dst.len() / 8 * 8;
+    let (dh, dt) = dst.split_at_mut(split);
+    let (sh, st) = src.split_at(split);
+    for (dc, sc) in dh.chunks_exact_mut(8).zip(sh.chunks_exact(8)) {
+        let x = load8(dc);
+        let y = load8(sc);
+        let m = merge8(x, y);
+        if m != x {
+            // touch the histogram only for lanes that actually changed
+            let mut diff = m ^ x;
+            while diff != 0 {
+                let shift = diff.trailing_zeros() & !7;
+                let old = ((x >> shift) & 0xFF) as usize;
+                let new = ((m >> shift) & 0xFF) as usize;
+                hist[old] -= 1;
+                hist[new] += 1;
+                diff &= !(0xFFu64 << shift);
+            }
+            dc.copy_from_slice(&m.to_le_bytes());
+        }
+    }
+    for (a, &b) in dt.iter_mut().zip(st) {
+        if b > *a {
+            hist[*a as usize] -= 1;
+            hist[b as usize] += 1;
+            *a = b;
+        }
+    }
+}
+
+/// Register-value histogram of a dense array: `out[k] = #{i : regs[i] == k}`
+/// with `out.len() == kmax + 1`. Accumulates into four interleaved count
+/// tables so runs of equal register values don't serialize on one counter.
+pub fn histogram(regs: &[u8], kmax: u8) -> Vec<u32> {
+    let bins = kmax as usize + 1;
+    let mut acc = vec![0u32; bins * 4];
+    let mut chunks = regs.chunks_exact(4);
+    for c in chunks.by_ref() {
+        acc[c[0] as usize] += 1;
+        acc[bins + c[1] as usize] += 1;
+        acc[2 * bins + c[2] as usize] += 1;
+        acc[3 * bins + c[3] as usize] += 1;
+    }
+    for &x in chunks.remainder() {
+        acc[x as usize] += 1;
+    }
+    let mut out = vec![0u32; bins];
+    for (k, o) in out.iter_mut().enumerate() {
+        *o = acc[k] + acc[bins + k] + acc[2 * bins + k] + acc[3 * bins + k];
+    }
+    out
+}
+
+/// Fused single pass over dense registers: returns
+/// `(Σ 2^-regs[i], #{i : regs[i] == 0})` — the sufficient statistics of the
+/// classic estimator — using an exact bit-constructed `2^-k` lookup table
+/// instead of per-register `exp2` calls.
+pub fn fused_harmonic(regs: &[u8]) -> (f64, u32) {
+    // 2^-k as IEEE-754 bits: exponent field (1023 - k), zero mantissa.
+    // Built once per process, not per call.
+    static TABLE: std::sync::OnceLock<[f64; 64]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0f64; 64];
+        for (k, v) in t.iter_mut().enumerate() {
+            *v = f64::from_bits((1023 - k as u64) << 52);
+        }
+        t
+    });
+    let mut sum = 0.0;
+    let mut zeros = 0u32;
+    for &x in regs {
+        sum += table[x as usize];
+        zeros += u32::from(x == 0);
+    }
+    (sum, zeros)
+}
+
+/// Two-pointer merge of two index-sorted `(register, value)` pair lists,
+/// taking the max value on index ties. `out` is cleared first. Both inputs
+/// must be strictly increasing in index.
+pub fn merge_sorted_pairs(
+    a: &[(u16, u8)],
+    b: &[(u16, u8)],
+    out: &mut Vec<(u16, u8)>,
+) {
+    out.clear();
+    out.reserve(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        let (ia, xa) = a[i];
+        let (ib, xb) = b[j];
+        match ia.cmp(&ib) {
+            std::cmp::Ordering::Less => {
+                out.push((ia, xa));
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push((ib, xb));
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.push((ia, xa.max(xb)));
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+
+    fn scalar_max(dst: &mut [u8], src: &[u8]) {
+        for (a, &b) in dst.iter_mut().zip(src) {
+            if b > *a {
+                *a = b;
+            }
+        }
+    }
+
+    fn scalar_hist(regs: &[u8], kmax: u8) -> Vec<u32> {
+        let mut h = vec![0u32; kmax as usize + 1];
+        for &x in regs {
+            h[x as usize] += 1;
+        }
+        h
+    }
+
+    fn random_regs(rng: &mut crate::hash::Xoshiro256ss, n: usize, kmax: u8) -> Vec<u8> {
+        (0..n)
+            .map(|_| {
+                if rng.next_below(3) == 0 {
+                    0
+                } else {
+                    rng.next_below(kmax as u64 + 1) as u8
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn merge8_matches_scalar_exhaustive_lanes() {
+        // every (a, b) pair in one lane, plus mixed neighbors
+        for a in [0u8, 1, 2, 30, 56, 57, 60, 61] {
+            for b in [0u8, 1, 2, 30, 56, 57, 60, 61] {
+                let x = u64::from_le_bytes([a, b, 0, 61, a, a, b, 1]);
+                let y = u64::from_le_bytes([b, a, 61, 0, a, b, b, 2]);
+                let m = merge8(x, y).to_le_bytes();
+                let xs = x.to_le_bytes();
+                let ys = y.to_le_bytes();
+                for i in 0..8 {
+                    assert_eq!(m[i], xs[i].max(ys[i]), "lane {i}: {xs:?} {ys:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merge_max_matches_scalar() {
+        Cases::new("swar_merge", 40).run(|rng| {
+            let kmax = 61;
+            // off-multiples-of-8 lengths exercise the remainder loop
+            let n = 1 + rng.next_below(700) as usize;
+            let a = random_regs(rng, n, kmax);
+            let b = random_regs(rng, n, kmax);
+            let mut swar = a.clone();
+            merge_max(&mut swar, &b);
+            let mut scalar = a;
+            scalar_max(&mut scalar, &b);
+            assert_eq!(swar, scalar);
+        });
+    }
+
+    #[test]
+    fn merge_max_hist_maintains_invariant() {
+        Cases::new("swar_merge_hist", 40).run(|rng| {
+            let kmax = 57u8; // p = 8
+            let n = 256;
+            let a = random_regs(rng, n, kmax);
+            let b = random_regs(rng, n, kmax);
+            let mut hist = scalar_hist(&a, kmax);
+            let mut merged = a;
+            merge_max_hist(&mut merged, &b, &mut hist);
+            let mut scalar = merged.clone();
+            scalar_max(&mut scalar, &b); // idempotent: merged is final
+            assert_eq!(merged, scalar);
+            assert_eq!(hist, scalar_hist(&merged, kmax));
+        });
+    }
+
+    #[test]
+    fn histogram_matches_scalar() {
+        Cases::new("swar_hist", 30).run(|rng| {
+            let kmax = 53u8; // p = 12
+            let n = 1 + rng.next_below(5000) as usize;
+            let regs = random_regs(rng, n, kmax);
+            assert_eq!(histogram(&regs, kmax), scalar_hist(&regs, kmax));
+        });
+    }
+
+    #[test]
+    fn fused_harmonic_matches_reference() {
+        Cases::new("swar_harmonic", 30).run(|rng| {
+            let regs = random_regs(rng, 512, 61);
+            let (sum, zeros) = fused_harmonic(&regs);
+            let want_sum: f64 =
+                regs.iter().map(|&x| (-(x as f64)).exp2()).sum();
+            let want_zeros = regs.iter().filter(|&&x| x == 0).count() as u32;
+            assert!((sum - want_sum).abs() < 1e-12 * want_sum.max(1.0));
+            assert_eq!(zeros, want_zeros);
+        });
+    }
+
+    #[test]
+    fn pow2_table_is_exact() {
+        let (sum, _) = fused_harmonic(&[0, 1, 2, 10, 61]);
+        let want = 1.0 + 0.5 + 0.25 + (2f64).powi(-10) + (2f64).powi(-61);
+        assert_eq!(sum, want);
+    }
+
+    #[test]
+    fn merge_sorted_pairs_matches_map_union() {
+        Cases::new("pair_merge", 30).run(|rng| {
+            use std::collections::BTreeMap;
+            let gen = |rng: &mut crate::hash::Xoshiro256ss| {
+                let mut m = BTreeMap::new();
+                for _ in 0..rng.next_below(60) {
+                    m.insert(
+                        rng.next_below(300) as u16,
+                        1 + rng.next_below(50) as u8,
+                    );
+                }
+                m
+            };
+            let ma = gen(rng);
+            let mb = gen(rng);
+            let a: Vec<(u16, u8)> = ma.iter().map(|(&i, &x)| (i, x)).collect();
+            let b: Vec<(u16, u8)> = mb.iter().map(|(&i, &x)| (i, x)).collect();
+            let mut got = Vec::new();
+            merge_sorted_pairs(&a, &b, &mut got);
+            let mut want = ma;
+            for (i, x) in mb {
+                let e = want.entry(i).or_insert(0);
+                *e = (*e).max(x);
+            }
+            let want: Vec<(u16, u8)> = want.into_iter().collect();
+            assert_eq!(got, want);
+        });
+    }
+}

@@ -9,26 +9,38 @@
 //! * **sparse** — a sorted list of `(index, value)` pairs for small
 //!   cardinalities (most graph vertices have small degree);
 //! * **dense** — a flat `r`-byte register array, saturated to from sparse
-//!   once the pair list exceeds `r / 4` entries.
+//!   once the pair list exceeds `r / 4` entries. Dense storage carries an
+//!   **incrementally maintained register histogram** so `estimate()` is
+//!   `O(kmax)` instead of an `O(r)` register scan, and dense merges run
+//!   through the word-parallel [`kernels`].
 //!
 //! Merging takes element-wise register maxima and requires both sketches to
 //! share `(p, hash seed)` — enforced at the type level by [`HllConfig`].
+//!
+//! For bulk, per-rank storage of many sketches (one per vertex) see
+//! [`store::SketchStore`], which keeps registers in contiguous arenas and
+//! shares one `HllConfig` across the shard.
 
 mod beta;
 mod estimate;
 mod intersect;
+pub mod kernels;
 mod serde;
+pub mod store;
 
 pub use beta::{
     beta_correction, eval_beta, fit_beta, BetaCoefficients, BETA_TABLE,
 };
-pub use estimate::{alpha, ertl_estimate_from_hist, Estimator};
+pub use estimate::{
+    alpha, ertl_estimate_from_hist, estimate_from_hist, Estimator,
+};
 pub use intersect::{
     domination, grad_log_likelihood, inclusion_exclusion, log_likelihood,
     mle_from_stats, mle_intersect, pair_stats, Domination,
     IntersectionEstimate, MleOptions,
     PairStats,
 };
+pub use store::{SketchRef, SketchStore};
 
 use crate::hash::XxHash64;
 
@@ -100,12 +112,30 @@ impl HllConfig {
     }
 }
 
-/// Register storage: sparse pair list or dense byte array.
+/// Register histogram of a sorted sparse pair list (the single source of
+/// the `hist[0] = r - len` zero-register accounting, shared by [`Hll`]
+/// and borrowed [`SketchRef`] views so their estimates stay bit-equal).
+pub(crate) fn sparse_histogram(
+    config: &HllConfig,
+    pairs: &[(u16, u8)],
+) -> Vec<u32> {
+    let mut hist = vec![0u32; config.kmax() as usize + 1];
+    hist[0] = (config.num_registers() - pairs.len()) as u32;
+    for &(_, x) in pairs {
+        hist[x as usize] += 1;
+    }
+    hist
+}
+
+/// Register storage: sparse pair list or dense byte array. Dense storage
+/// additionally carries `hist[k] = #{j : reg_j == k}` (length `kmax + 1`),
+/// kept in sync by every insert/merge so estimators never rescan `r`
+/// registers.
 #[derive(Debug, Clone, PartialEq, Eq)]
 enum Registers {
     /// Sorted by index; indices fit in u16 because p <= 16.
     Sparse(Vec<(u16, u8)>),
-    Dense(Vec<u8>),
+    Dense { regs: Vec<u8>, hist: Vec<u32> },
 }
 
 /// A single HyperLogLog sketch.
@@ -124,19 +154,64 @@ impl Hll {
         }
     }
 
+    /// Construct directly from dense parts (used by the arena store when
+    /// materializing a sketch). `hist` must be the histogram of `regs`.
+    pub(crate) fn from_dense_parts(
+        config: HllConfig,
+        regs: Vec<u8>,
+        hist: Vec<u32>,
+    ) -> Self {
+        debug_assert_eq!(regs.len(), config.num_registers());
+        debug_assert_eq!(hist.len(), config.kmax() as usize + 1);
+        Self {
+            config,
+            regs: Registers::Dense { regs, hist },
+        }
+    }
+
+    /// Construct directly from a sorted sparse pair list (used by the
+    /// arena store when materializing a sketch).
+    pub(crate) fn from_sparse_parts(
+        config: HllConfig,
+        pairs: Vec<(u16, u8)>,
+    ) -> Self {
+        Self {
+            config,
+            regs: Registers::Sparse(pairs),
+        }
+    }
+
+    /// Borrow the sorted sparse pair list if not yet saturated.
+    pub(crate) fn sparse_pairs(&self) -> Option<&[(u16, u8)]> {
+        match &self.regs {
+            Registers::Sparse(v) => Some(v),
+            Registers::Dense { .. } => None,
+        }
+    }
+
+    /// Borrow the incrementally maintained histogram if dense.
+    pub(crate) fn dense_hist(&self) -> Option<&[u32]> {
+        match &self.regs {
+            Registers::Dense { hist, .. } => Some(hist),
+            Registers::Sparse(_) => None,
+        }
+    }
+
     #[inline]
     pub fn config(&self) -> &HllConfig {
         &self.config
     }
 
     pub fn is_dense(&self) -> bool {
-        matches!(self.regs, Registers::Dense(_))
+        matches!(self.regs, Registers::Dense { .. })
     }
 
     pub fn is_empty(&self) -> bool {
         match &self.regs {
             Registers::Sparse(v) => v.is_empty(),
-            Registers::Dense(d) => d.iter().all(|&x| x == 0),
+            Registers::Dense { hist, .. } => {
+                hist[0] as usize == self.config.num_registers()
+            }
         }
     }
 
@@ -162,9 +237,11 @@ impl Hll {
             return;
         }
         match &mut self.regs {
-            Registers::Dense(d) => {
-                let slot = &mut d[j as usize];
+            Registers::Dense { regs, hist } => {
+                let slot = &mut regs[j as usize];
                 if x > *slot {
+                    hist[*slot as usize] -= 1;
+                    hist[x as usize] += 1;
                     *slot = x;
                 }
             }
@@ -186,38 +263,63 @@ impl Hll {
         }
     }
 
-    /// SATURATE(S): promote sparse storage to a dense register array.
+    /// SATURATE(S): promote sparse storage to a dense register array
+    /// (and build its histogram).
     pub fn saturate(&mut self) {
         if let Registers::Sparse(v) = &self.regs {
-            let mut dense = vec![0u8; self.config.num_registers()];
+            let r = self.config.num_registers();
+            let mut regs = vec![0u8; r];
+            let mut hist = vec![0u32; self.config.kmax() as usize + 1];
+            hist[0] = (r - v.len()) as u32;
             for &(j, x) in v {
-                dense[j as usize] = x;
+                regs[j as usize] = x;
+                hist[x as usize] += 1;
             }
-            self.regs = Registers::Dense(dense);
+            self.regs = Registers::Dense { regs, hist };
         }
     }
 
     /// MERGE: element-wise register max. Panics if configs differ (sketches
     /// hashed with different `(p, seed)` are not comparable — paper §4).
+    ///
+    /// Dense×dense runs the SWAR byte-max kernel (8 registers per step);
+    /// sparse×sparse is a linear two-pointer merge of the sorted pair
+    /// lists, saturating at most once afterwards.
     pub fn merge(&mut self, other: &Hll) {
         assert_eq!(
             self.config, other.config,
             "cannot merge sketches with different (p, seed)"
         );
         match &other.regs {
-            Registers::Sparse(v) => {
-                for &(j, x) in v {
-                    self.insert_register(j as u32, x);
+            Registers::Sparse(ov) => {
+                let needs_saturate = match &mut self.regs {
+                    Registers::Sparse(sv) => {
+                        let mut merged =
+                            Vec::with_capacity(sv.len() + ov.len());
+                        kernels::merge_sorted_pairs(sv, ov, &mut merged);
+                        *sv = merged;
+                        sv.len() > self.config.saturation_threshold()
+                    }
+                    Registers::Dense { regs, hist } => {
+                        for &(j, x) in ov {
+                            let slot = &mut regs[j as usize];
+                            if x > *slot {
+                                hist[*slot as usize] -= 1;
+                                hist[x as usize] += 1;
+                                *slot = x;
+                            }
+                        }
+                        false
+                    }
+                };
+                if needs_saturate {
+                    self.saturate();
                 }
             }
-            Registers::Dense(d) => {
+            Registers::Dense { regs: oregs, .. } => {
                 self.saturate();
-                if let Registers::Dense(mine) = &mut self.regs {
-                    for (a, &b) in mine.iter_mut().zip(d.iter()) {
-                        if b > *a {
-                            *a = b;
-                        }
-                    }
+                if let Registers::Dense { regs, hist } = &mut self.regs {
+                    kernels::merge_max_hist(regs, oregs, hist);
                 }
             }
         }
@@ -227,7 +329,7 @@ impl Hll {
     #[inline]
     pub fn register(&self, j: u32) -> u8 {
         match &self.regs {
-            Registers::Dense(d) => d[j as usize],
+            Registers::Dense { regs, .. } => regs[j as usize],
             Registers::Sparse(v) => v
                 .binary_search_by_key(&(j as u16), |&(i, _)| i)
                 .map(|pos| v[pos].1)
@@ -239,14 +341,16 @@ impl Hll {
     pub fn nonzero_registers(&self) -> usize {
         match &self.regs {
             Registers::Sparse(v) => v.len(),
-            Registers::Dense(d) => d.iter().filter(|&&x| x != 0).count(),
+            Registers::Dense { hist, .. } => {
+                self.config.num_registers() - hist[0] as usize
+            }
         }
     }
 
     /// Dense copy of the register array (allocates for sparse sketches).
     pub fn to_dense_registers(&self) -> Vec<u8> {
         match &self.regs {
-            Registers::Dense(d) => d.clone(),
+            Registers::Dense { regs, .. } => regs.clone(),
             Registers::Sparse(v) => {
                 let mut dense = vec![0u8; self.config.num_registers()];
                 for &(j, x) in v {
@@ -260,7 +364,7 @@ impl Hll {
     /// Borrow the dense register slice if already saturated.
     pub fn dense_registers(&self) -> Option<&[u8]> {
         match &self.regs {
-            Registers::Dense(d) => Some(d),
+            Registers::Dense { regs, .. } => Some(regs),
             Registers::Sparse(_) => None,
         }
     }
@@ -270,7 +374,7 @@ impl Hll {
         let (sparse, dense): (Option<&[(u16, u8)]>, Option<&[u8]>) =
             match &self.regs {
                 Registers::Sparse(v) => (Some(v.as_slice()), None),
-                Registers::Dense(d) => (None, Some(d.as_slice())),
+                Registers::Dense { regs, .. } => (None, Some(regs.as_slice())),
             };
         sparse
             .into_iter()
@@ -288,22 +392,22 @@ impl Hll {
 
     /// Histogram of register values: `hist[k] = #{j : reg_j == k}`,
     /// length `kmax + 1`. The sufficient statistic for all estimators.
+    /// For dense sketches this is a copy of the incrementally maintained
+    /// histogram; use [`Hll::with_histogram`] to avoid the allocation.
     pub fn histogram(&self) -> Vec<u32> {
-        let mut hist = vec![0u32; self.config.kmax() as usize + 1];
         match &self.regs {
-            Registers::Dense(d) => {
-                for &x in d {
-                    hist[x as usize] += 1;
-                }
-            }
-            Registers::Sparse(v) => {
-                hist[0] = (self.config.num_registers() - v.len()) as u32;
-                for &(_, x) in v {
-                    hist[x as usize] += 1;
-                }
-            }
+            Registers::Dense { hist, .. } => hist.clone(),
+            Registers::Sparse(v) => sparse_histogram(&self.config, v),
         }
-        hist
+    }
+
+    /// Run `f` on the register histogram without copying it when dense
+    /// (the `O(kmax)` estimate path).
+    pub fn with_histogram<T>(&self, f: impl FnOnce(&[u32]) -> T) -> T {
+        match &self.regs {
+            Registers::Dense { hist, .. } => f(hist),
+            Registers::Sparse(_) => f(&self.histogram()),
+        }
     }
 
     /// `|S|` — cardinality estimate with the library-default estimator
@@ -318,12 +422,19 @@ impl Hll {
     }
 
     /// Approximate heap footprint in bytes (for the semi-streaming space
-    /// accounting reported by the benches).
+    /// accounting reported by the benches). Sparse pairs are accounted at
+    /// their in-memory `size_of::<(u16, u8)>()` (4 after alignment), not
+    /// their 3 packed bytes.
     pub fn memory_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
             + match &self.regs {
-                Registers::Sparse(v) => v.capacity() * 3,
-                Registers::Dense(d) => d.capacity(),
+                Registers::Sparse(v) => {
+                    v.capacity() * std::mem::size_of::<(u16, u8)>()
+                }
+                Registers::Dense { regs, hist } => {
+                    regs.capacity()
+                        + hist.capacity() * std::mem::size_of::<u32>()
+                }
             }
     }
 }
@@ -459,6 +570,48 @@ mod tests {
     }
 
     #[test]
+    fn incremental_histogram_tracks_registers() {
+        // the dense histogram must stay identical to a recount from the
+        // register array across inserts and all merge kinds
+        Cases::new("hist_invariant", 20).run(|rng| {
+            let c = cfg(7);
+            let mut s = Hll::new(c);
+            for _ in 0..rng.next_below(4000) {
+                s.insert(rng.next_u64());
+                if rng.next_below(10) == 0 {
+                    let mut other = Hll::new(c);
+                    for _ in 0..rng.next_below(600) {
+                        other.insert(rng.next_u64());
+                    }
+                    s.merge(&other);
+                }
+            }
+            let recount = kernels::histogram(
+                &s.to_dense_registers(),
+                c.kmax(),
+            );
+            assert_eq!(s.histogram(), recount);
+        });
+    }
+
+    #[test]
+    fn sparse_merge_stays_sorted_and_deduped() {
+        let c = cfg(12); // big threshold: stays sparse
+        let mut a = Hll::new(c);
+        let mut b = Hll::new(c);
+        for x in 0..40u64 {
+            a.insert(x * 3);
+            b.insert(x * 5);
+        }
+        a.merge(&b);
+        assert!(!a.is_dense());
+        let pairs = a.sparse_pairs().unwrap();
+        for w in pairs.windows(2) {
+            assert!(w[0].0 < w[1].0, "not strictly sorted: {pairs:?}");
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "cannot merge")]
     fn merge_mismatched_configs_panics() {
         let mut a = Hll::new(cfg(8));
@@ -484,5 +637,25 @@ mod tests {
                 "n={n} est={est} tol={tol}"
             );
         });
+    }
+
+    #[test]
+    fn memory_accounting_uses_padded_pair_size() {
+        // (u16, u8) occupies 4 bytes after alignment; the old `cap * 3`
+        // accounting under-reported the semi-streaming space
+        let mut s = Hll::new(cfg(12));
+        for x in 0..100u64 {
+            s.insert(x);
+        }
+        assert!(!s.is_dense());
+        let pairs = s.sparse_pairs().unwrap();
+        let cap_bytes = s.memory_bytes() - std::mem::size_of::<Hll>();
+        assert_eq!(cap_bytes % 4, 0);
+        assert!(cap_bytes >= pairs.len() * 4);
+
+        s.saturate();
+        let dense_bytes = s.memory_bytes() - std::mem::size_of::<Hll>();
+        // registers + histogram
+        assert!(dense_bytes >= 4096 + (s.config().kmax() as usize + 1) * 4);
     }
 }

@@ -35,9 +35,9 @@ impl Hll {
                     w.write_all(&[x])?;
                 }
             }
-            Registers::Dense(d) => {
+            Registers::Dense { regs, .. } => {
                 w.write_all(&[1u8])?;
-                w.write_all(d)?;
+                w.write_all(regs)?;
             }
         }
         Ok(())
@@ -88,7 +88,9 @@ impl Hll {
                 if d.iter().any(|&x| x > kmax) {
                     return Err(bad("dense register value out of range".into()));
                 }
-                Registers::Dense(d)
+                // the histogram is derived state: rebuild rather than store
+                let hist = super::kernels::histogram(&d, kmax);
+                Registers::Dense { regs: d, hist }
             }
             other => return Err(bad(format!("bad mode {other}"))),
         };

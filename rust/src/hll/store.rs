@@ -1,0 +1,892 @@
+//! Arena-backed per-rank sketch storage — the accumulation hot path.
+//!
+//! The naive layout (`HashMap<VertexId, Hll>`) pays one heap allocation
+//! per vertex sketch, duplicates the 16-byte `HllConfig` (hash seed
+//! included) into every `Hll`, and scatters register data across the heap.
+//! [`SketchStore`] owns an entire shard's registers in contiguous memory
+//! with **one** shared config:
+//!
+//! ```text
+//! SketchStore
+//! ├── slots:  HashMap<VertexId, SlotId>       flat vertex → slot index
+//! │             SlotId::Sparse(s) | SlotId::Dense(d)
+//! ├── sparse: SparsePool                      pooled pair buffers
+//! │     slots[s]  = { class, block, len }     per-sketch metadata (8 B)
+//! │     classes[c] = slab of fixed-capacity blocks of (u16 idx, u8 val)
+//! │                  pairs, capacity 4 << c; freed blocks recycle via a
+//! │                  per-class free list (saturation returns blocks)
+//! └── dense:  DenseArena                      saturated sketches
+//!       regs  = one Vec<u8>,  r bytes per sketch, slot-major
+//!       hists = one Vec<u32>, (kmax + 1) counters per sketch, maintained
+//!               incrementally on every insert/merge so estimates are
+//!               O(kmax) with no register scan
+//! ```
+//!
+//! A sketch starts as a class-0 sparse block (4 pairs), doubles through
+//! size classes as it grows, and saturates into the dense arena once its
+//! pair count exceeds `r / 4` (the paper's Alg. 6 threshold) — exactly
+//! the same transition rule as [`Hll`], so store-backed accumulation is
+//! **bit-identical** to the per-sketch path, representation included.
+//!
+//! Reads hand out [`SketchRef`] — borrowed register views that estimate,
+//! merge, and materialize without touching the owning arena. Bulk updates
+//! go through [`SketchStore::insert_batch`], which groups `(vertex,
+//! element)` messages per vertex, pre-hashes and sorts each group, and
+//! applies it as one two-pointer merge instead of per-element
+//! binary-search + `Vec::insert`.
+
+use std::collections::HashMap;
+
+use super::estimate::estimate_from_hist;
+use super::kernels;
+use super::{Estimator, Hll, HllConfig};
+
+/// Initial sparse block capacity (pairs); class `c` holds `4 << c`.
+const BASE_CAP: usize = 4;
+
+/// Where a vertex's registers live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotId {
+    Sparse(u32),
+    Dense(u32),
+}
+
+/// Per-sparse-sketch metadata: which class slab, which block, how full.
+#[derive(Debug, Clone, Copy)]
+struct SparseSlot {
+    class: u8,
+    block: u32,
+    len: u16,
+}
+
+/// One size class: a slab of equal-capacity pair blocks plus a free list.
+#[derive(Debug, Clone)]
+struct ClassSlab {
+    cap: usize,
+    pairs: Vec<(u16, u8)>,
+    free: Vec<u32>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct SparsePool {
+    slots: Vec<SparseSlot>,
+    free_slots: Vec<u32>,
+    classes: Vec<ClassSlab>,
+}
+
+impl SparsePool {
+    fn ensure_class(&mut self, c: usize) {
+        while self.classes.len() <= c {
+            let cap = BASE_CAP << self.classes.len();
+            self.classes.push(ClassSlab {
+                cap,
+                pairs: Vec::new(),
+                free: Vec::new(),
+            });
+        }
+    }
+
+    fn alloc_block(&mut self, c: usize) -> u32 {
+        self.ensure_class(c);
+        let slab = &mut self.classes[c];
+        if let Some(b) = slab.free.pop() {
+            return b;
+        }
+        let b = (slab.pairs.len() / slab.cap) as u32;
+        slab.pairs.resize(slab.pairs.len() + slab.cap, (0, 0));
+        b
+    }
+
+    fn alloc_slot(&mut self) -> u32 {
+        let block = self.alloc_block(0);
+        let meta = SparseSlot {
+            class: 0,
+            block,
+            len: 0,
+        };
+        if let Some(s) = self.free_slots.pop() {
+            self.slots[s as usize] = meta;
+            s
+        } else {
+            self.slots.push(meta);
+            (self.slots.len() - 1) as u32
+        }
+    }
+
+    fn free_block(&mut self, meta: SparseSlot) {
+        self.classes[meta.class as usize].free.push(meta.block);
+    }
+
+    fn free_slot(&mut self, s: u32) {
+        self.free_slots.push(s);
+    }
+
+    fn pairs_of(&self, meta: SparseSlot) -> &[(u16, u8)] {
+        let slab = &self.classes[meta.class as usize];
+        let start = meta.block as usize * slab.cap;
+        &slab.pairs[start..start + meta.len as usize]
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.classes
+            .iter()
+            .map(|s| {
+                s.pairs.capacity() * std::mem::size_of::<(u16, u8)>()
+                    + s.free.capacity() * 4
+            })
+            .sum::<usize>()
+            + self.slots.capacity() * std::mem::size_of::<SparseSlot>()
+            + self.free_slots.capacity() * 4
+    }
+}
+
+/// Dense register arena: slot-major registers plus per-slot histograms.
+#[derive(Debug, Clone)]
+struct DenseArena {
+    r: usize,
+    bins: usize,
+    count: usize,
+    regs: Vec<u8>,
+    hists: Vec<u32>,
+}
+
+impl DenseArena {
+    fn new(r: usize, bins: usize) -> Self {
+        Self {
+            r,
+            bins,
+            count: 0,
+            regs: Vec::new(),
+            hists: Vec::new(),
+        }
+    }
+
+    /// Append a zeroed slot (`hist[0] = r`) and return its index.
+    fn alloc(&mut self) -> u32 {
+        let idx = self.count;
+        self.count += 1;
+        self.regs.resize(self.regs.len() + self.r, 0);
+        self.hists.resize(self.hists.len() + self.bins, 0);
+        self.hists[idx * self.bins] = self.r as u32;
+        idx as u32
+    }
+
+    /// Scatter sorted pairs into a freshly allocated slot.
+    fn scatter(&mut self, idx: u32, pairs: &[(u16, u8)]) {
+        let ro = idx as usize * self.r;
+        let ho = idx as usize * self.bins;
+        for &(j, x) in pairs {
+            self.regs[ro + j as usize] = x;
+            self.hists[ho + x as usize] += 1;
+        }
+        self.hists[ho] -= pairs.len() as u32;
+    }
+
+    #[inline]
+    fn insert(&mut self, idx: usize, j: u32, x: u8) {
+        let slot = &mut self.regs[idx * self.r + j as usize];
+        if x > *slot {
+            let ho = idx * self.bins;
+            self.hists[ho + *slot as usize] -= 1;
+            self.hists[ho + x as usize] += 1;
+            *slot = x;
+        }
+    }
+
+    /// SWAR byte-max merge of a dense register slice into slot `idx`.
+    fn merge_dense(&mut self, idx: usize, src: &[u8]) {
+        let ro = idx * self.r;
+        let ho = idx * self.bins;
+        let regs = &mut self.regs[ro..ro + self.r];
+        let hist = &mut self.hists[ho..ho + self.bins];
+        kernels::merge_max_hist(regs, src, hist);
+    }
+
+    fn regs_of(&self, idx: u32) -> &[u8] {
+        let ro = idx as usize * self.r;
+        &self.regs[ro..ro + self.r]
+    }
+
+    fn hist_of(&self, idx: u32) -> &[u32] {
+        let ho = idx as usize * self.bins;
+        &self.hists[ho..ho + self.bins]
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.regs.capacity() + self.hists.capacity() * 4
+    }
+}
+
+/// A borrowed, zero-copy view of one sketch inside a [`SketchStore`]
+/// (or materialized data elsewhere). Carries the shared config by value
+/// (`HllConfig` is `Copy`).
+#[derive(Debug, Clone, Copy)]
+pub enum SketchRef<'a> {
+    Sparse {
+        config: HllConfig,
+        pairs: &'a [(u16, u8)],
+    },
+    Dense {
+        config: HllConfig,
+        regs: &'a [u8],
+        hist: &'a [u32],
+    },
+}
+
+impl SketchRef<'_> {
+    pub fn config(&self) -> HllConfig {
+        match self {
+            Self::Sparse { config, .. } | Self::Dense { config, .. } => *config,
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, Self::Dense { .. })
+    }
+
+    pub fn nonzero_registers(&self) -> usize {
+        match self {
+            Self::Sparse { pairs, .. } => pairs.len(),
+            Self::Dense { config, hist, .. } => {
+                config.num_registers() - hist[0] as usize
+            }
+        }
+    }
+
+    /// Cardinality estimate — `O(kmax)` for dense views thanks to the
+    /// arena-maintained histogram.
+    pub fn estimate_with(&self, estimator: Estimator) -> f64 {
+        let config = self.config();
+        let q = config.q() as usize;
+        let p = config.p();
+        match self {
+            Self::Dense { hist, .. } => {
+                estimate_from_hist(hist, q, p, estimator)
+            }
+            Self::Sparse { pairs, .. } => {
+                let hist = super::sparse_histogram(&config, pairs);
+                estimate_from_hist(&hist, q, p, estimator)
+            }
+        }
+    }
+
+    pub fn estimate(&self) -> f64 {
+        self.estimate_with(Estimator::default())
+    }
+
+    /// Materialize into an owned [`Hll`] (same representation: a sparse
+    /// view yields a sparse sketch, a dense view a dense one).
+    pub fn to_hll(&self) -> Hll {
+        match self {
+            Self::Sparse { config, pairs } => {
+                Hll::from_sparse_parts(*config, pairs.to_vec())
+            }
+            Self::Dense { config, regs, hist } => {
+                Hll::from_dense_parts(*config, regs.to_vec(), hist.to_vec())
+            }
+        }
+    }
+}
+
+/// Borrow a view of an owned [`Hll`] (the compat direction: lets store
+/// code and sketch code share one merge implementation).
+pub fn view_of(h: &Hll) -> SketchRef<'_> {
+    match h.sparse_pairs() {
+        Some(pairs) => SketchRef::Sparse {
+            config: *h.config(),
+            pairs,
+        },
+        None => {
+            let config = *h.config();
+            // dense sketches always carry registers + histogram
+            let regs = h.dense_registers().expect("dense");
+            SketchRef::Dense {
+                config,
+                regs,
+                hist: h.dense_hist().expect("dense"),
+            }
+        }
+    }
+}
+
+/// One rank's shard of vertex sketches in contiguous arena storage.
+#[derive(Debug, Clone)]
+pub struct SketchStore {
+    config: HllConfig,
+    threshold: usize,
+    slots: HashMap<u64, SlotId>,
+    sparse: SparsePool,
+    dense: DenseArena,
+    /// Reused two-pointer merge output buffer.
+    scratch: Vec<(u16, u8)>,
+    /// Reused per-vertex group buffer for [`SketchStore::insert_batch`].
+    group: Vec<(u16, u8)>,
+}
+
+impl SketchStore {
+    pub fn new(config: HllConfig) -> Self {
+        let r = config.num_registers();
+        let bins = config.kmax() as usize + 1;
+        Self {
+            config,
+            threshold: config.saturation_threshold(),
+            slots: HashMap::new(),
+            sparse: SparsePool::default(),
+            dense: DenseArena::new(r, bins),
+            scratch: Vec::new(),
+            group: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &HllConfig {
+        &self.config
+    }
+
+    /// Number of vertices holding a sketch.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Number of sketches that have saturated into the dense arena.
+    pub fn dense_count(&self) -> usize {
+        self.dense.count
+    }
+
+    /// INSERT(D[v], element): hash and max into the vertex's sketch.
+    #[inline]
+    pub fn insert_element(&mut self, v: u64, element: u64) {
+        let w = self.config.hasher().hash_u64(element);
+        self.insert_hashed(v, w);
+    }
+
+    #[inline]
+    pub fn insert_hashed(&mut self, v: u64, w: u64) {
+        let (j, rho) = self.config.split_hash(w);
+        self.insert_register(v, j, rho);
+    }
+
+    pub fn insert_register(&mut self, v: u64, j: u32, x: u8) {
+        debug_assert!((j as usize) < self.config.num_registers());
+        debug_assert!(x <= self.config.kmax());
+        if x == 0 {
+            return;
+        }
+        match self.slot_or_new(v) {
+            SlotId::Dense(d) => self.dense.insert(d as usize, j, x),
+            SlotId::Sparse(s) => {
+                if let Some(new_id) = self.sparse_insert(s, j as u16, x) {
+                    self.slots.insert(v, new_id);
+                }
+            }
+        }
+    }
+
+    /// Merge a sorted, strictly-increasing, deduplicated pair run into the
+    /// vertex's sketch — one two-pointer pass instead of `len` binary
+    /// searches and `Vec::insert` shifts.
+    pub fn merge_pairs(&mut self, v: u64, pairs: &[(u16, u8)]) {
+        if pairs.is_empty() {
+            return;
+        }
+        // out-of-range values would index into the NEXT slot's histogram
+        // region of the flat arena — catch misuse before it corrupts
+        debug_assert!(pairs.iter().all(|&(j, x)| {
+            (j as usize) < self.config.num_registers()
+                && x >= 1
+                && x <= self.config.kmax()
+        }));
+        match self.slot_or_new(v) {
+            SlotId::Dense(d) => {
+                for &(j, x) in pairs {
+                    self.dense.insert(d as usize, j as u32, x);
+                }
+            }
+            SlotId::Sparse(s) => {
+                let meta = self.sparse.slots[s as usize];
+                let cap = self.sparse.classes[meta.class as usize].cap;
+                kernels::merge_sorted_pairs(
+                    self.sparse.pairs_of(meta),
+                    pairs,
+                    &mut self.scratch,
+                );
+                let merged_len = self.scratch.len();
+                if merged_len > self.threshold {
+                    let d = self.dense.alloc();
+                    self.dense.scatter(d, &self.scratch);
+                    self.sparse.free_block(meta);
+                    self.sparse.free_slot(s);
+                    self.slots.insert(v, SlotId::Dense(d));
+                } else if merged_len > cap {
+                    let mut c = meta.class as usize + 1;
+                    while (BASE_CAP << c) < merged_len {
+                        c += 1;
+                    }
+                    let nb = self.sparse.alloc_block(c);
+                    let ncap = self.sparse.classes[c].cap;
+                    let nstart = nb as usize * ncap;
+                    self.sparse.classes[c].pairs[nstart..nstart + merged_len]
+                        .copy_from_slice(&self.scratch);
+                    self.sparse.free_block(meta);
+                    self.sparse.slots[s as usize] = SparseSlot {
+                        class: c as u8,
+                        block: nb,
+                        len: merged_len as u16,
+                    };
+                } else {
+                    let slab =
+                        &mut self.sparse.classes[meta.class as usize];
+                    let start = meta.block as usize * slab.cap;
+                    slab.pairs[start..start + merged_len]
+                        .copy_from_slice(&self.scratch);
+                    self.sparse.slots[s as usize].len = merged_len as u16;
+                }
+            }
+        }
+    }
+
+    /// Merge an owned sketch into the vertex's slot.
+    pub fn merge_hll(&mut self, v: u64, other: &Hll) {
+        assert_eq!(
+            &self.config,
+            other.config(),
+            "cannot merge sketches with different (p, seed)"
+        );
+        self.merge_ref_parts(v, view_of(other));
+    }
+
+    /// Merge a borrowed view (possibly from another store) into `v`.
+    pub fn merge_ref(&mut self, v: u64, other: SketchRef<'_>) {
+        assert_eq!(
+            self.config,
+            other.config(),
+            "cannot merge sketches with different (p, seed)"
+        );
+        self.merge_ref_parts(v, other);
+    }
+
+    fn merge_ref_parts(&mut self, v: u64, other: SketchRef<'_>) {
+        match other {
+            SketchRef::Sparse { pairs, .. } => self.merge_pairs(v, pairs),
+            SketchRef::Dense { regs, .. } => self.merge_dense_slice(v, regs),
+        }
+    }
+
+    fn merge_dense_slice(&mut self, v: u64, src: &[u8]) {
+        let d = match self.slot_or_new(v) {
+            SlotId::Dense(d) => d,
+            SlotId::Sparse(s) => {
+                let d = self.saturate_slot(s);
+                self.slots.insert(v, SlotId::Dense(d));
+                d
+            }
+        };
+        self.dense.merge_dense(d as usize, src);
+    }
+
+    /// Batch-apply `(vertex, element)` insertions: sorts to group by
+    /// vertex, pre-hashes and max-dedupes each group, then lands every
+    /// group as a single sorted-run merge. Insertion order never matters
+    /// (register max commutes), so the result is identical to applying
+    /// the messages one by one. Drains `batch`.
+    pub fn insert_batch(&mut self, batch: &mut Vec<(u64, u64)>) {
+        batch.sort_unstable_by_key(|&(v, _)| v);
+        let mut group = std::mem::take(&mut self.group);
+        let mut i = 0;
+        while i < batch.len() {
+            let v = batch[i].0;
+            group.clear();
+            while i < batch.len() && batch[i].0 == v {
+                let w = self.config.hasher().hash_u64(batch[i].1);
+                let (j, rho) = self.config.split_hash(w);
+                group.push((j as u16, rho));
+                i += 1;
+            }
+            if group.len() == 1 {
+                let (j, x) = group[0];
+                self.insert_register(v, j as u32, x);
+            } else {
+                // sort by (index, value); keep the max value per index
+                // (the last element of each equal-index run)
+                group.sort_unstable();
+                let mut w = 0;
+                for k in 0..group.len() {
+                    if k + 1 < group.len() && group[k + 1].0 == group[k].0 {
+                        continue;
+                    }
+                    group[w] = group[k];
+                    w += 1;
+                }
+                group.truncate(w);
+                self.merge_pairs(v, &group);
+            }
+        }
+        batch.clear();
+        self.group = group;
+    }
+
+    /// Borrowed view of the vertex's sketch.
+    pub fn get(&self, v: u64) -> Option<SketchRef<'_>> {
+        match *self.slots.get(&v)? {
+            SlotId::Sparse(s) => {
+                let meta = self.sparse.slots[s as usize];
+                Some(SketchRef::Sparse {
+                    config: self.config,
+                    pairs: self.sparse.pairs_of(meta),
+                })
+            }
+            SlotId::Dense(d) => Some(SketchRef::Dense {
+                config: self.config,
+                regs: self.dense.regs_of(d),
+                hist: self.dense.hist_of(d),
+            }),
+        }
+    }
+
+    /// Materialize the vertex's sketch as an owned [`Hll`].
+    pub fn to_hll(&self, v: u64) -> Option<Hll> {
+        Some(self.get(v)?.to_hll())
+    }
+
+    /// `|D[v]|` — degree estimate (None if the vertex was never seen).
+    pub fn estimate_with(
+        &self,
+        v: u64,
+        estimator: Estimator,
+    ) -> Option<f64> {
+        Some(self.get(v)?.estimate_with(estimator))
+    }
+
+    /// Iterate `(vertex, view)` in arbitrary (hash) order.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, SketchRef<'_>)> + '_ {
+        self.slots
+            .keys()
+            .map(move |&v| (v, self.get(v).expect("key present")))
+    }
+
+    /// All vertex ids, sorted (for deterministic REDUCEs and saves).
+    pub fn vertices_sorted(&self) -> Vec<u64> {
+        let mut keys: Vec<u64> = self.slots.keys().copied().collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    /// Consume the store into `(vertex, Hll)` pairs sorted by vertex id.
+    pub fn into_sorted_hlls(self) -> Vec<(u64, Hll)> {
+        let keys = self.vertices_sorted();
+        keys.into_iter()
+            .map(|v| (v, self.to_hll(v).expect("key present")))
+            .collect()
+    }
+
+    /// Approximate heap footprint — the semi-streaming space accounting.
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.slots.capacity()
+                * (std::mem::size_of::<u64>()
+                    + std::mem::size_of::<SlotId>())
+            + self.sparse.memory_bytes()
+            + self.dense.memory_bytes()
+    }
+
+    fn slot_or_new(&mut self, v: u64) -> SlotId {
+        if let Some(&id) = self.slots.get(&v) {
+            return id;
+        }
+        let id = SlotId::Sparse(self.sparse.alloc_slot());
+        self.slots.insert(v, id);
+        id
+    }
+
+    /// Insert into a sparse slot; returns the new slot id on saturation.
+    fn sparse_insert(
+        &mut self,
+        s: u32,
+        j: u16,
+        x: u8,
+    ) -> Option<SlotId> {
+        let meta = self.sparse.slots[s as usize];
+        let cap = self.sparse.classes[meta.class as usize].cap;
+        let start = meta.block as usize * cap;
+        let len = meta.len as usize;
+        let search = self.sparse.classes[meta.class as usize].pairs
+            [start..start + len]
+            .binary_search_by_key(&j, |&(i, _)| i);
+        match search {
+            Ok(pos) => {
+                let p = &mut self.sparse.classes[meta.class as usize]
+                    .pairs[start + pos];
+                if x > p.1 {
+                    p.1 = x;
+                }
+                None
+            }
+            Err(pos) => {
+                let new_len = len + 1;
+                if new_len > self.threshold {
+                    let d = self.saturate_slot(s);
+                    self.dense.insert(d as usize, j as u32, x);
+                    Some(SlotId::Dense(d))
+                } else if new_len > cap {
+                    self.grow_and_insert(s, pos, j, x);
+                    None
+                } else {
+                    let slab =
+                        &mut self.sparse.classes[meta.class as usize];
+                    let abs = start + pos;
+                    slab.pairs.copy_within(abs..start + len, abs + 1);
+                    slab.pairs[abs] = (j, x);
+                    self.sparse.slots[s as usize].len = new_len as u16;
+                    None
+                }
+            }
+        }
+    }
+
+    /// Promote a sparse slot into the dense arena; frees its block and
+    /// slot, returns the dense index.
+    fn saturate_slot(&mut self, s: u32) -> u32 {
+        let meta = self.sparse.slots[s as usize];
+        let d = self.dense.alloc();
+        self.dense.scatter(d, self.sparse.pairs_of(meta));
+        self.sparse.free_block(meta);
+        self.sparse.free_slot(s);
+        d
+    }
+
+    /// Move a full block to the next size class, inserting `(j, x)` at
+    /// `pos` on the way.
+    fn grow_and_insert(&mut self, s: u32, pos: usize, j: u16, x: u8) {
+        let meta = self.sparse.slots[s as usize];
+        let len = meta.len as usize;
+        self.scratch.clear();
+        {
+            let old = self.sparse.pairs_of(meta);
+            self.scratch.extend_from_slice(&old[..pos]);
+            self.scratch.push((j, x));
+            self.scratch.extend_from_slice(&old[pos..]);
+        }
+        let c = meta.class as usize + 1;
+        let nb = self.sparse.alloc_block(c);
+        let ncap = self.sparse.classes[c].cap;
+        let nstart = nb as usize * ncap;
+        self.sparse.classes[c].pairs[nstart..nstart + len + 1]
+            .copy_from_slice(&self.scratch);
+        self.sparse.free_block(meta);
+        self.sparse.slots[s as usize] = SparseSlot {
+            class: c as u8,
+            block: nb,
+            len: (len + 1) as u16,
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+
+    fn cfg(p: u8) -> HllConfig {
+        HllConfig::new(p, 0x570E)
+    }
+
+    /// Reference model: the plain per-vertex `Hll` map the store replaces.
+    fn reference_insert(
+        map: &mut HashMap<u64, Hll>,
+        config: HllConfig,
+        v: u64,
+        e: u64,
+    ) {
+        map.entry(v).or_insert_with(|| Hll::new(config)).insert(e);
+    }
+
+    fn assert_store_matches(
+        store: &SketchStore,
+        map: &HashMap<u64, Hll>,
+    ) {
+        assert_eq!(store.len(), map.len());
+        for (&v, h) in map {
+            let got = store.to_hll(v).expect("vertex present");
+            // representation-equal, not just histogram-equal
+            assert_eq!(&got, h, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn store_matches_hll_map_bit_for_bit() {
+        Cases::new("store_parity", 15).run(|rng| {
+            let c = cfg(6); // r = 64: lots of saturations
+            let mut store = SketchStore::new(c);
+            let mut map: HashMap<u64, Hll> = HashMap::new();
+            for _ in 0..rng.next_below(6000) {
+                let v = rng.next_below(40);
+                let e = rng.next_below(2000);
+                store.insert_element(v, e);
+                reference_insert(&mut map, c, v, e);
+            }
+            assert_store_matches(&store, &map);
+        });
+    }
+
+    #[test]
+    fn batched_equals_incremental() {
+        Cases::new("store_batch", 15).run(|rng| {
+            let c = cfg(8);
+            let mut batched = SketchStore::new(c);
+            let mut incremental = SketchStore::new(c);
+            let mut batch = Vec::new();
+            for _ in 0..rng.next_below(8000) {
+                let v = rng.next_below(60);
+                let e = rng.next_u64();
+                incremental.insert_element(v, e);
+                batch.push((v, e));
+                if batch.len() >= 100 && rng.next_below(4) == 0 {
+                    batched.insert_batch(&mut batch);
+                }
+            }
+            batched.insert_batch(&mut batch);
+            assert_eq!(batched.len(), incremental.len());
+            for v in incremental.vertices_sorted() {
+                assert_eq!(
+                    batched.to_hll(v),
+                    incremental.to_hll(v),
+                    "vertex {v}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn saturation_boundary_matches_hll() {
+        let c = cfg(6); // threshold = 16
+        let mut store = SketchStore::new(c);
+        let mut h = Hll::new(c);
+        let mut e = 0u64;
+        // drive a single vertex straight through the boundary
+        while !h.is_dense() {
+            store.insert_element(7, e);
+            h.insert(e);
+            e += 1;
+        }
+        let got = store.to_hll(7).unwrap();
+        assert!(got.is_dense());
+        assert_eq!(got, h);
+        assert_eq!(store.dense_count(), 1);
+        // keep inserting after saturation
+        for e2 in e..e + 500 {
+            store.insert_element(7, e2);
+            h.insert(e2);
+        }
+        assert_eq!(store.to_hll(7).unwrap(), h);
+    }
+
+    #[test]
+    fn merge_ref_across_stores_equals_hll_merge() {
+        Cases::new("store_merge_ref", 10).run(|rng| {
+            let c = cfg(7);
+            let mut a = SketchStore::new(c);
+            let mut b = SketchStore::new(c);
+            let mut ha = Hll::new(c);
+            let mut hb = Hll::new(c);
+            for _ in 0..1 + rng.next_below(3000) {
+                let e = rng.next_u64();
+                a.insert_element(1, e);
+                ha.insert(e);
+            }
+            for _ in 0..rng.next_below(3000) {
+                let e = rng.next_u64();
+                b.insert_element(2, e);
+                hb.insert(e);
+            }
+            if let Some(view) = b.get(2) {
+                a.merge_ref(1, view);
+            }
+            ha.merge(&hb);
+            assert_eq!(a.to_hll(1).unwrap().histogram(), ha.histogram());
+            // merging into an absent vertex materializes the source
+            if let Some(view) = b.get(2) {
+                a.merge_ref(99, view);
+            }
+            assert_eq!(
+                a.to_hll(99).map(|h| h.histogram()),
+                (!hb.is_empty()).then(|| hb.histogram())
+            );
+        });
+    }
+
+    #[test]
+    fn estimates_match_hll_exactly() {
+        let c = cfg(8);
+        let mut store = SketchStore::new(c);
+        let mut h = Hll::new(c);
+        for e in 0..30_000u64 {
+            store.insert_element(3, e * 2654435761);
+            h.insert(e * 2654435761);
+        }
+        for est in [
+            Estimator::Classic,
+            Estimator::LogLogBeta,
+            Estimator::ErtlImproved,
+        ] {
+            let a = store.estimate_with(3, est).unwrap();
+            let b = h.estimate_with(est);
+            assert_eq!(a.to_bits(), b.to_bits(), "{est:?}");
+        }
+        assert_eq!(store.estimate_with(999, Estimator::default()), None);
+    }
+
+    #[test]
+    fn views_report_shape() {
+        let c = cfg(10);
+        let mut store = SketchStore::new(c);
+        store.insert_element(5, 42);
+        let view = store.get(5).unwrap();
+        assert!(!view.is_dense());
+        assert_eq!(view.nonzero_registers(), 1);
+        assert!(store.get(6).is_none());
+        assert_eq!(store.len(), 1);
+        assert!(store.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn into_sorted_hlls_is_sorted_and_complete() {
+        let c = cfg(9);
+        let mut store = SketchStore::new(c);
+        for v in [9u64, 2, 7, 100, 1] {
+            store.insert_element(v, v * 31);
+        }
+        let all = store.into_sorted_hlls();
+        let ids: Vec<u64> = all.iter().map(|&(v, _)| v).collect();
+        assert_eq!(ids, vec![1, 2, 7, 9, 100]);
+        for (_, h) in &all {
+            assert_eq!(h.nonzero_registers(), 1);
+        }
+    }
+
+    #[test]
+    fn block_recycling_bounds_slab_growth() {
+        // saturating many vertices should recycle their class-0 blocks
+        let c = cfg(4); // r = 16, threshold 4: saturates at the 5th pair
+        let mut store = SketchStore::new(c);
+        for v in 0..50u64 {
+            // deterministic saturation: fill every register directly
+            for j in 0..16u32 {
+                store.insert_register(v, j, 1);
+            }
+        }
+        assert_eq!(store.dense_count(), 50);
+        // all sparse blocks were freed back to their pools
+        let free_total: usize =
+            store.sparse.classes.iter().map(|s| s.free.len()).sum();
+        let block_total: usize = store
+            .sparse
+            .classes
+            .iter()
+            .map(|s| s.pairs.len() / s.cap)
+            .sum();
+        assert_eq!(free_total, block_total);
+    }
+}

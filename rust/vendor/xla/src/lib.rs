@@ -1,0 +1,125 @@
+//! Type-level stub of the `xla` PJRT bindings.
+//!
+//! The real XLA/PJRT shared library is not present in the offline build
+//! environment, so this crate supplies just enough API surface for
+//! `degreesketch::runtime` to compile unchanged. Every load/compile entry
+//! point returns [`Error`], so the PJRT path fails fast at runtime with a
+//! clear message while the native estimators keep working; when a real
+//! `xla` crate is swapped back in (same API), no caller changes.
+
+use std::fmt;
+
+/// Error type mirroring the bindings' debug-printable error.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "XLA/PJRT runtime is not available in this build \
+         (offline stub; native estimators remain fully functional)"
+            .to_string(),
+    ))
+}
+
+/// Stub PJRT client: construction succeeds so `info`-style commands can
+/// report the platform, but compilation/execution is unavailable.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub (no PJRT runtime linked)".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Stub HLO module proto; text parsing always fails (no parser linked).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable()
+    }
+}
+
+/// Stub computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self
+    }
+}
+
+/// Stub loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Stub host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[i32]) -> Self {
+        Self
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loaders_fail_fast_with_message() {
+        assert!(PjRtClient::cpu().is_ok());
+        let e = HloModuleProto::from_text_file("x").unwrap_err();
+        assert!(format!("{e:?}").contains("not available"));
+    }
+}
