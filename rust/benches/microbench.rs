@@ -18,6 +18,7 @@ use degreesketch::comm::Backend;
 use degreesketch::coordinator::sketch::{
     accumulate, accumulate_reference, AccumulateOptions,
 };
+use degreesketch::coordinator::QueryEngine;
 use degreesketch::graph::gen::GraphSpec;
 use degreesketch::graph::stream::{EdgeStream, MemoryStream};
 use degreesketch::hash::{xxh64_u64, Xoshiro256ss};
@@ -355,6 +356,69 @@ fn main() {
             reference.mean_s,
             store.mean_s,
         );
+    }
+
+    // engine persistence: legacy per-sketch deserialization vs O(1)
+    // snapshot map (the leave-behind query engine's startup cost)
+    {
+        let edges = GraphSpec::parse("rmat:14:8").unwrap().generate(7);
+        let stream = MemoryStream::new(edges);
+        let cfg = HllConfig::new(8, 0xACC);
+        let opts = AccumulateOptions {
+            backend: Backend::Sequential,
+            ..Default::default()
+        };
+        let ds = accumulate(stream.shard(8), cfg, opts);
+        let n = ds.num_vertices() as u64;
+        let engine = QueryEngine::new(ds);
+        let dir = std::env::temp_dir().join("ds_microbench_legacy");
+        let snap = std::env::temp_dir().join("ds_microbench.snap");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_file(&snap);
+        engine.save(&dir).expect("legacy save");
+        engine.save_snapshot(&snap).expect("snapshot save");
+        let heavy = Bench::new(1, 5);
+
+        let legacy = heavy.run(|| {
+            QueryEngine::load_legacy(&dir).unwrap().num_vertices()
+        });
+        row(
+            &mut table,
+            &mut report,
+            "engine load legacy(dir) vertices",
+            n,
+            &legacy,
+        );
+        let mapped = heavy.run(|| {
+            QueryEngine::open_snapshot(&snap).unwrap().num_vertices()
+        });
+        row(
+            &mut table,
+            &mut report,
+            "engine open snapshot(mmap) vertices",
+            n,
+            &mapped,
+        );
+        report.record_speedup(
+            "snapshot_load_vs_legacy",
+            legacy.mean_s,
+            mapped.mean_s,
+        );
+
+        // steady-state mapped query throughput (DEG over the mapped file)
+        let me = QueryEngine::open_snapshot(&snap).unwrap();
+        let q = 200_000u64;
+        let r = bench.run(|| {
+            let mut acc = 0.0;
+            for v in 0..q {
+                acc += me.degree(v % (2 * n)).unwrap_or(0.0);
+            }
+            acc
+        });
+        row(&mut table, &mut report, "mapped DEG query", q, &r);
+
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_file(&snap);
     }
 
     table.print();

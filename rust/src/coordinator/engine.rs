@@ -7,11 +7,24 @@
 //! queries that can be phrased as unions and possibly an intersection of
 //! adjacency sets" of the paper's conclusion.
 //!
-//! On-disk layout (`save_dir`):
-//! ```text
-//! meta.txt          p seed ranks partitioner-name
-//! shard_<r>.bin     u32 count, then count × (u64 vertex, HLL blob)
-//! ```
+//! Two on-disk formats:
+//!
+//! * **Snapshot** (preferred) — a single mappable file; see
+//!   [`crate::snapshot`] for the byte-level layout. `open`/`load` on a
+//!   file path maps it and serves borrowed register views directly out of
+//!   the file — O(1) startup (map + index validation, no per-sketch
+//!   deserialization) and one shared page-cache copy across processes.
+//! * **Legacy shard directory** — the PR-1 era layout, still readable
+//!   (and migratable via [`QueryEngine::migrate_legacy`]):
+//!   ```text
+//!   meta.txt          p seed ranks partitioner-name
+//!   shard_<r>.bin     u32 count, then count × (u64 vertex, HLL blob)
+//!   ```
+//!
+//! Whichever way the engine was opened, queries run over borrowed
+//! [`SketchRef`] views, so a mapped engine answers DEG / TRI / JACCARD /
+//! UNION **bit-identically** to a heap-loaded one (property-tested in
+//! `tests/snapshot.rs`).
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -21,16 +34,26 @@ use anyhow::{bail, Context, Result};
 
 use crate::comm::CommStats;
 use crate::hll::{
-    mle_intersect, Estimator, Hll, HllConfig, IntersectionEstimate,
-    MleOptions,
+    mle_intersect_ref, view_of, Estimator, Hll, HllConfig,
+    IntersectionEstimate, MleOptions, SketchRef,
+};
+use crate::snapshot::{
+    MappedSnapshot, SnapshotMode, SnapshotStats, SnapshotWriter,
 };
 
 use super::partition::Partitioner;
 use super::sketch::{DegreeSketch, Shard};
 
+/// What backs an engine: an owned in-heap `DegreeSketch` or a mapped
+/// snapshot file.
+enum EngineData {
+    Heap(DegreeSketch),
+    Mapped(MappedSnapshot),
+}
+
 /// A loaded (or freshly accumulated) DegreeSketch plus query methods.
 pub struct QueryEngine {
-    ds: DegreeSketch,
+    data: EngineData,
     mle: MleOptions,
     estimator: Estimator,
 }
@@ -38,27 +61,113 @@ pub struct QueryEngine {
 impl QueryEngine {
     pub fn new(ds: DegreeSketch) -> Self {
         Self {
-            ds,
+            data: EngineData::Heap(ds),
             mle: MleOptions::default(),
             estimator: Estimator::default(),
         }
     }
 
-    pub fn sketch_data(&self) -> &DegreeSketch {
-        &self.ds
+    /// Wrap an already-opened snapshot.
+    pub fn from_snapshot(snap: MappedSnapshot) -> Self {
+        Self {
+            data: EngineData::Mapped(snap),
+            mle: MleOptions::default(),
+            estimator: Estimator::default(),
+        }
+    }
+
+    /// The heap-resident sketch, when this engine owns one (`None` for
+    /// mapped engines, which serve straight from the file).
+    pub fn sketch_data(&self) -> Option<&DegreeSketch> {
+        match &self.data {
+            EngineData::Heap(ds) => Some(ds),
+            EngineData::Mapped(_) => None,
+        }
+    }
+
+    /// The mapped snapshot, when this engine serves from one.
+    pub fn snapshot(&self) -> Option<&MappedSnapshot> {
+        match &self.data {
+            EngineData::Mapped(s) => Some(s),
+            EngineData::Heap(_) => None,
+        }
+    }
+
+    /// Borrowed register view of `v`'s adjacency sketch.
+    pub fn view(&self, v: u64) -> Option<SketchRef<'_>> {
+        match &self.data {
+            EngineData::Heap(ds) => ds.sketch(v).map(view_of),
+            EngineData::Mapped(snap) => snap.get(v),
+        }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        match &self.data {
+            EngineData::Heap(ds) => ds.num_vertices(),
+            EngineData::Mapped(snap) => snap.num_vertices(),
+        }
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        match &self.data {
+            EngineData::Heap(ds) => ds.num_ranks(),
+            EngineData::Mapped(snap) => snap.num_ranks(),
+        }
+    }
+
+    pub fn config(&self) -> &HllConfig {
+        match &self.data {
+            EngineData::Heap(ds) => ds.config(),
+            EngineData::Mapped(snap) => snap.config(),
+        }
+    }
+
+    pub fn num_dense_sketches(&self) -> usize {
+        match &self.data {
+            EngineData::Heap(ds) => ds.num_dense_sketches(),
+            EngineData::Mapped(snap) => snap.num_dense_sketches(),
+        }
+    }
+
+    /// `"heap"` or `"mmap"` — how the sketches are backed (surfaced by
+    /// the server's `STATS` so operators can confirm page-cache sharing).
+    pub fn backing_mode(&self) -> &'static str {
+        match &self.data {
+            EngineData::Heap(_) => "heap",
+            EngineData::Mapped(snap) => snap.mode(),
+        }
+    }
+
+    /// Private heap bytes holding sketch data. Mapped engines report 0 —
+    /// their registers live in the (shared, demand-paged) file mapping,
+    /// which is what makes N processes on one snapshot cheap.
+    pub fn heap_bytes(&self) -> usize {
+        match &self.data {
+            EngineData::Heap(ds) => ds.memory_bytes(),
+            EngineData::Mapped(_) => 0,
+        }
+    }
+
+    /// Bytes of the mapped snapshot backing (0 for heap engines). Shared
+    /// address space, not private heap.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.data {
+            EngineData::Heap(_) => 0,
+            EngineData::Mapped(snap) => snap.resident_bytes(),
+        }
     }
 
     /// `|D[x]|` — degree estimate (None if x never appeared).
     pub fn degree(&self, x: u64) -> Option<f64> {
-        self.ds.sketch(x).map(|s| s.estimate_with(self.estimator))
+        self.view(x).map(|s| s.estimate_with(self.estimator))
     }
 
     /// `|D̃[x] ∩ D̃[y]|` — edge-local triangle estimate for any vertex pair
     /// (Eq. 10); also reports the union and domination status.
     pub fn intersection(&self, x: u64, y: u64) -> Option<IntersectionEstimate> {
-        let a = self.ds.sketch(x)?;
-        let b = self.ds.sketch(y)?;
-        Some(mle_intersect(a, b, &self.mle))
+        let a = self.view(x)?;
+        let b = self.view(y)?;
+        Some(mle_intersect_ref(a, b, &self.mle))
     }
 
     /// Jaccard similarity of two adjacency sets — the paper's triangle
@@ -70,28 +179,35 @@ impl QueryEngine {
     /// `|∪̃_i D[x_i]|` — cardinality of a union of adjacency sets, e.g.
     /// "how many distinct accounts are adjacent to this suspect set?".
     pub fn union_cardinality(&self, xs: &[u64]) -> Option<f64> {
-        let mut it = xs.iter().filter_map(|&x| self.ds.sketch(x));
+        let mut it = xs.iter().filter_map(|&x| self.view(x));
         let first = it.next()?;
-        let mut acc = first.clone();
+        let mut acc = first.to_hll();
         for s in it {
-            acc.merge(s);
+            acc.merge_view(s);
         }
         Some(acc.estimate_with(self.estimator))
     }
 
-    /// Persist to a directory (created if needed).
+    /// Persist in the legacy shard-directory format (created if needed).
+    /// Mapped engines are already persistent — copy the file instead.
     pub fn save(&self, dir: &Path) -> Result<()> {
+        let EngineData::Heap(ds) = &self.data else {
+            bail!(
+                "engine is snapshot-backed; the snapshot file IS the \
+                 persistent form (copy it, or accumulate anew to re-save)"
+            );
+        };
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating {}", dir.display()))?;
         let meta = format!(
             "{} {} {} {}\n",
-            self.ds.config().p(),
-            self.ds.config().hasher().seed(),
-            self.ds.num_ranks(),
-            self.ds.partitioner().name(),
+            ds.config().p(),
+            ds.config().hasher().seed(),
+            ds.num_ranks(),
+            ds.partitioner().name(),
         );
         std::fs::write(dir.join("meta.txt"), meta)?;
-        for (rank, shard) in self.ds.shards().iter().enumerate() {
+        for (rank, shard) in ds.shards().iter().enumerate() {
             let f = File::create(dir.join(format!("shard_{rank}.bin")))?;
             let mut w = BufWriter::with_capacity(1 << 20, f);
             w.write_all(&(shard.len() as u32).to_le_bytes())?;
@@ -106,8 +222,43 @@ impl QueryEngine {
         Ok(())
     }
 
-    /// Load a previously saved engine.
-    pub fn load(dir: &Path) -> Result<Self> {
+    /// Persist as a single-file snapshot (see [`crate::snapshot`]).
+    pub fn save_snapshot(&self, path: &Path) -> Result<SnapshotStats> {
+        let EngineData::Heap(ds) = &self.data else {
+            bail!("engine is already snapshot-backed ({})", self.backing_mode());
+        };
+        SnapshotWriter::write(ds, path)
+    }
+
+    /// Load from either format: a file path opens as a mapped snapshot, a
+    /// directory as a legacy shard directory.
+    pub fn load(path: &Path) -> Result<Self> {
+        if path.is_dir() {
+            Self::load_legacy(path)
+        } else {
+            Self::open_snapshot(path)
+        }
+    }
+
+    /// Map a snapshot file (`mmap` where available, heap fallback).
+    pub fn open_snapshot(path: &Path) -> Result<Self> {
+        Ok(Self::from_snapshot(MappedSnapshot::open(path)?))
+    }
+
+    /// Map a snapshot file with an explicit backing mode.
+    pub fn open_snapshot_with(path: &Path, mode: SnapshotMode) -> Result<Self> {
+        Ok(Self::from_snapshot(MappedSnapshot::open_with(path, mode)?))
+    }
+
+    /// Convert a legacy shard directory into a snapshot file without
+    /// re-accumulating — the migration helper for pre-snapshot saves.
+    pub fn migrate_legacy(dir: &Path, out: &Path) -> Result<SnapshotStats> {
+        let engine = Self::load_legacy(dir)?;
+        engine.save_snapshot(out)
+    }
+
+    /// Load a legacy shard directory into a heap engine.
+    pub fn load_legacy(dir: &Path) -> Result<Self> {
         let meta = std::fs::read_to_string(dir.join("meta.txt"))
             .with_context(|| format!("reading {}/meta.txt", dir.display()))?;
         let parts: Vec<&str> = meta.split_whitespace().collect();
@@ -183,6 +334,7 @@ mod tests {
         let d = e.degree(33).unwrap();
         assert!((d - 17.0).abs() < 2.0, "{d}");
         assert_eq!(e.degree(999), None);
+        assert_eq!(e.backing_mode(), "heap");
     }
 
     #[test]
@@ -210,14 +362,64 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         e.save(&dir).unwrap();
         let loaded = QueryEngine::load(&dir).unwrap();
-        assert_eq!(
-            loaded.sketch_data().num_vertices(),
-            e.sketch_data().num_vertices()
+        let (a, b) = (
+            loaded.sketch_data().unwrap(),
+            e.sketch_data().unwrap(),
         );
-        for (v, h) in e.sketch_data().iter() {
-            assert_eq!(loaded.sketch_data().sketch(v), Some(h), "vertex {v}");
+        assert_eq!(a.num_vertices(), b.num_vertices());
+        for (v, h) in b.iter() {
+            assert_eq!(a.sketch(v), Some(h), "vertex {v}");
         }
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn snapshot_round_trip_is_query_identical() {
+        let e = engine();
+        let path = std::env::temp_dir().join("degreesketch_engine_test.snap");
+        let _ = std::fs::remove_file(&path);
+        let stats = e.save_snapshot(&path).unwrap();
+        assert_eq!(stats.vertices as usize, e.num_vertices());
+        let mapped = QueryEngine::load(&path).unwrap();
+        assert!(mapped.sketch_data().is_none());
+        assert_eq!(mapped.num_vertices(), e.num_vertices());
+        assert_eq!(mapped.num_ranks(), e.num_ranks());
+        for v in 0..40u64 {
+            assert_eq!(
+                mapped.degree(v).map(f64::to_bits),
+                e.degree(v).map(f64::to_bits),
+                "DEG {v}"
+            );
+        }
+        let a = e.intersection(0, 33).unwrap();
+        let b = mapped.intersection(0, 33).unwrap();
+        assert_eq!(a.intersection.to_bits(), b.intersection.to_bits());
+        assert_eq!(
+            e.union_cardinality(&[0, 1, 33]).unwrap().to_bits(),
+            mapped.union_cardinality(&[0, 1, 33]).unwrap().to_bits()
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn migrate_legacy_to_snapshot() {
+        let e = engine();
+        let dir = std::env::temp_dir().join("degreesketch_engine_migrate");
+        let snap = std::env::temp_dir().join("degreesketch_engine_migrate.snap");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_file(&snap);
+        e.save(&dir).unwrap();
+        let stats = QueryEngine::migrate_legacy(&dir, &snap).unwrap();
+        assert_eq!(stats.vertices as usize, e.num_vertices());
+        let mapped = QueryEngine::load(&snap).unwrap();
+        for v in 0..34u64 {
+            assert_eq!(
+                mapped.degree(v).map(f64::to_bits),
+                e.degree(v).map(f64::to_bits)
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::remove_file(&snap).unwrap();
     }
 
     #[test]

@@ -9,16 +9,27 @@
 //! TRI <x> <y>          → <intersection> <union> <dominated:0|1> | NONE
 //! JACCARD <x> <y>      → <jaccard> | NONE
 //! UNION <x> [<y> ...]  → <estimate> | NONE
-//! STATS                → vertices=<n> ranks=<p> p=<p> mem=<bytes> dense=<n>
+//! STATS                → vertices=<n> ranks=<p> p=<p> mem=<bytes>
+//!                        dense=<n> mode=<heap|mmap> resident=<bytes>
 //! QUIT                 → BYE (closes the connection)
 //! ```
 //!
+//! `mem` is the engine's *private heap* sketch bytes and `resident` the
+//! *mapped snapshot* bytes (shared address space): a heap-loaded server
+//! reports `mem=<bytes> mode=heap resident=0`, a snapshot-backed one
+//! `mem=0 mode=mmap resident=<file len>` — so operators can confirm that
+//! N processes serving one snapshot share a single page-cache copy.
+//!
 //! Unknown commands answer `ERR <reason>`. One thread per connection; the
-//! engine is shared read-only.
+//! engine is shared read-only. Finished connection threads are reaped in
+//! the accept loop (not hoarded until shutdown), so long-lived servers
+//! hold O(live connections) handles.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 
 use anyhow::Result;
 
@@ -26,10 +37,24 @@ use crate::hll::Domination;
 
 use super::engine::QueryEngine;
 
+/// Join every finished worker, keeping only live ones.
+fn reap_finished(workers: &mut Vec<JoinHandle<()>>) {
+    let mut i = 0;
+    while i < workers.len() {
+        if workers[i].is_finished() {
+            let _ = workers.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
 /// A running server handle (listener thread spawns per-connection threads).
 pub struct QueryServer {
     addr: std::net::SocketAddr,
-    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    shutdown: Arc<AtomicBool>,
+    /// Connection threads currently tracked by the accept loop (post-reap).
+    live: Arc<AtomicUsize>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -39,12 +64,14 @@ impl QueryServer {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(AtomicUsize::new(0));
         let stop = Arc::clone(&shutdown);
+        let live_in = Arc::clone(&live);
         let handle = std::thread::spawn(move || {
-            let mut workers = Vec::new();
+            let mut workers: Vec<JoinHandle<()>> = Vec::new();
             loop {
-                if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                if stop.load(Ordering::Relaxed) {
                     break;
                 }
                 match listener.accept() {
@@ -59,20 +86,33 @@ impl QueryServer {
                     }
                     Err(_) => break,
                 }
+                // reap completed connections so the handle vector tracks
+                // live connections instead of growing for the server's
+                // whole lifetime
+                reap_finished(&mut workers);
+                live_in.store(workers.len(), Ordering::Relaxed);
             }
             for w in workers {
                 let _ = w.join();
             }
+            live_in.store(0, Ordering::Relaxed);
         });
         Ok(Self {
             addr: local,
             shutdown,
+            live,
             handle: Some(handle),
         })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// Connection-thread handles currently held by the accept loop. Stays
+    /// bounded by the number of live connections thanks to in-loop reaping.
+    pub fn live_workers(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
     }
 
     /// Stop accepting and join the listener thread.
@@ -174,17 +214,16 @@ fn respond(line: &str, engine: &QueryEngine) -> Response {
             Ok(_) => Response::Line("ERR usage: UNION <x> [<y> ...]".into()),
             Err(e) => Response::Line(format!("ERR {e}")),
         },
-        "STATS" => {
-            let ds = engine.sketch_data();
-            Response::Line(format!(
-                "vertices={} ranks={} p={} mem={} dense={}",
-                ds.num_vertices(),
-                ds.num_ranks(),
-                ds.config().p(),
-                ds.memory_bytes(),
-                ds.num_dense_sketches()
-            ))
-        }
+        "STATS" => Response::Line(format!(
+            "vertices={} ranks={} p={} mem={} dense={} mode={} resident={}",
+            engine.num_vertices(),
+            engine.num_ranks(),
+            engine.config().p(),
+            engine.heap_bytes(),
+            engine.num_dense_sketches(),
+            engine.backing_mode(),
+            engine.resident_bytes()
+        )),
         "QUIT" => Response::Bye,
         other => Response::Line(format!("ERR unknown command {other:?}")),
     }
@@ -248,9 +287,63 @@ mod tests {
         let j: f64 = resp[3].parse().unwrap();
         assert!((0.0..=1.0).contains(&j));
         assert!(resp[4].parse::<f64>().unwrap() > 20.0);
-        assert!(resp[5].starts_with("vertices=34"));
+        assert!(resp[5].starts_with("vertices=34"), "{:?}", resp[5]);
+        assert!(resp[5].contains("mode=heap"), "{:?}", resp[5]);
+        assert!(resp[5].contains("resident="), "{:?}", resp[5]);
         assert!(resp[6].starts_with("ERR"));
         assert_eq!(resp[7], "BYE");
+        server.stop();
+    }
+
+    #[test]
+    fn stats_reports_mmap_backing_for_snapshot_engines() {
+        let path = std::env::temp_dir().join("ds_server_stats.snap");
+        let _ = std::fs::remove_file(&path);
+        test_engine().save_snapshot(&path).unwrap();
+        let engine = Arc::new(QueryEngine::load(&path).unwrap());
+        let expected_mode = format!("mode={}", engine.backing_mode());
+        let server = QueryServer::start(engine, "127.0.0.1:0").unwrap();
+        let resp = ask(server.addr(), &["STATS", "QUIT"]);
+        // mmap on 64-bit unix; the heap fallback elsewhere — either way the
+        // snapshot resident size (the file length) is reported
+        assert!(resp[0].contains(&expected_mode), "{:?}", resp[0]);
+        let resident: u64 = resp[0]
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("resident="))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(resident, std::fs::metadata(&path).unwrap().len());
+        server.stop();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn finished_workers_are_reaped_in_the_accept_loop() {
+        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        for _ in 0..16 {
+            let resp = ask(addr, &["DEG 0", "QUIT"]);
+            assert!(resp[0].parse::<f64>().is_ok());
+        }
+        // every connection above is closed; after the next accept-loop
+        // tick the tracked handle count must fall back to ~0 rather than
+        // accumulating one handle per historical connection
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(5);
+        loop {
+            // poke the loop so it runs a reap pass even if idle
+            let _ = ask(addr, &["QUIT"]);
+            if server.live_workers() <= 2 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "workers never reaped: {}",
+                server.live_workers()
+            );
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
         server.stop();
     }
 

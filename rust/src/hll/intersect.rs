@@ -18,6 +18,7 @@
 //! them (`MleOptions::flag_dominated`).
 
 use super::estimate::ertl_estimate_from_hist;
+use super::store::{view_of, SketchRef};
 use super::Hll;
 
 /// Eq. 19 count statistics for a register pair.
@@ -67,6 +68,28 @@ impl PairStats {
 /// Panics if the sketches' configs differ (different `(p, seed)` sketches
 /// are not comparable).
 pub fn pair_stats(a: &Hll, b: &Hll) -> PairStats {
+    pair_stats_ref(view_of(a), view_of(b))
+}
+
+/// Nonzero `(index, value)` registers of a borrowed view, ascending.
+fn nonzero_of(v: SketchRef<'_>) -> Vec<(u32, u8)> {
+    match v {
+        SketchRef::Sparse { pairs, .. } => {
+            pairs.iter().map(|&(j, x)| (j as u32, x)).collect()
+        }
+        SketchRef::Dense { regs, .. } => regs
+            .iter()
+            .enumerate()
+            .filter(|&(_, &x)| x != 0)
+            .map(|(j, &x)| (j as u32, x))
+            .collect(),
+    }
+}
+
+/// [`pair_stats`] over borrowed register views — the zero-copy entry
+/// point used by mapped snapshots; the owned version delegates here so
+/// both paths produce identical counts.
+pub fn pair_stats_ref(a: SketchRef<'_>, b: SketchRef<'_>) -> PairStats {
     assert_eq!(
         a.config(),
         b.config(),
@@ -76,8 +99,11 @@ pub fn pair_stats(a: &Hll, b: &Hll) -> PairStats {
     let m = a.config().num_registers();
     let mut c: [Vec<u32>; 5] = std::array::from_fn(|_| vec![0u32; q + 2]);
 
-    match (a.dense_registers(), b.dense_registers()) {
-        (Some(da), Some(db)) => {
+    match (a, b) {
+        (
+            SketchRef::Dense { regs: da, .. },
+            SketchRef::Dense { regs: db, .. },
+        ) => {
             for (&ra, &rb) in da.iter().zip(db) {
                 bump(&mut c, ra, rb);
             }
@@ -86,8 +112,8 @@ pub fn pair_stats(a: &Hll, b: &Hll) -> PairStats {
             // At least one side sparse: walk the union of nonzero indices,
             // then account for the all-zero remainder in c^=[0].
             let mut nonzero = 0usize;
-            let av: Vec<(u32, u8)> = a.iter_nonzero().collect();
-            let bv: Vec<(u32, u8)> = b.iter_nonzero().collect();
+            let av: Vec<(u32, u8)> = nonzero_of(a);
+            let bv: Vec<(u32, u8)> = nonzero_of(b);
             let (mut i, mut j) = (0usize, 0usize);
             while i < av.len() || j < bv.len() {
                 let (ra, rb) = match (av.get(i), bv.get(j)) {
@@ -208,7 +234,15 @@ impl IntersectionEstimate {
 /// Inclusion-exclusion intersection estimate (paper Eq. 18), clamped at 0
 /// from below (the paper notes the raw difference can go negative).
 pub fn inclusion_exclusion(a: &Hll, b: &Hll) -> IntersectionEstimate {
-    let stats = pair_stats(a, b);
+    inclusion_exclusion_ref(view_of(a), view_of(b))
+}
+
+/// [`inclusion_exclusion`] over borrowed register views.
+pub fn inclusion_exclusion_ref(
+    a: SketchRef<'_>,
+    b: SketchRef<'_>,
+) -> IntersectionEstimate {
+    let stats = pair_stats_ref(a, b);
     inclusion_exclusion_from_stats(&stats)
 }
 
@@ -370,7 +404,17 @@ impl SolverStats {
 
 /// Joint Poisson MLE intersection estimate (Ertl 2017; paper §4.1).
 pub fn mle_intersect(a: &Hll, b: &Hll, opts: &MleOptions) -> IntersectionEstimate {
-    let stats = pair_stats(a, b);
+    mle_intersect_ref(view_of(a), view_of(b), opts)
+}
+
+/// [`mle_intersect`] over borrowed register views — used by the mapped
+/// query engine so TRI/JACCARD answers match the heap path bit for bit.
+pub fn mle_intersect_ref(
+    a: SketchRef<'_>,
+    b: SketchRef<'_>,
+    opts: &MleOptions,
+) -> IntersectionEstimate {
+    let stats = pair_stats_ref(a, b);
     mle_from_stats(&stats, opts)
 }
 

@@ -35,12 +35,13 @@ pub use estimate::{
     alpha, ertl_estimate_from_hist, estimate_from_hist, Estimator,
 };
 pub use intersect::{
-    domination, grad_log_likelihood, inclusion_exclusion, log_likelihood,
-    mle_from_stats, mle_intersect, pair_stats, Domination,
+    domination, grad_log_likelihood, inclusion_exclusion,
+    inclusion_exclusion_ref, log_likelihood, mle_from_stats, mle_intersect,
+    mle_intersect_ref, pair_stats, pair_stats_ref, Domination,
     IntersectionEstimate, MleOptions,
     PairStats,
 };
-pub use store::{SketchRef, SketchStore};
+pub use store::{view_of, SketchRef, SketchStore};
 
 use crate::hash::XxHash64;
 
@@ -93,7 +94,7 @@ impl HllConfig {
 
     /// Sparse→dense saturation threshold (paper Alg. 6: `|R| > r / 4`).
     #[inline]
-    fn saturation_threshold(&self) -> usize {
+    pub(crate) fn saturation_threshold(&self) -> usize {
         self.num_registers() / 4
     }
 
@@ -286,12 +287,20 @@ impl Hll {
     /// sparse×sparse is a linear two-pointer merge of the sorted pair
     /// lists, saturating at most once afterwards.
     pub fn merge(&mut self, other: &Hll) {
+        self.merge_view(store::view_of(other));
+    }
+
+    /// MERGE from a borrowed register view — the single implementation
+    /// behind [`Hll::merge`], also fed directly by arena stores and
+    /// mapped snapshots so every path lands identical registers.
+    pub fn merge_view(&mut self, other: store::SketchRef<'_>) {
         assert_eq!(
-            self.config, other.config,
+            self.config,
+            other.config(),
             "cannot merge sketches with different (p, seed)"
         );
-        match &other.regs {
-            Registers::Sparse(ov) => {
+        match other {
+            store::SketchRef::Sparse { pairs: ov, .. } => {
                 let needs_saturate = match &mut self.regs {
                     Registers::Sparse(sv) => {
                         let mut merged =
@@ -316,7 +325,7 @@ impl Hll {
                     self.saturate();
                 }
             }
-            Registers::Dense { regs: oregs, .. } => {
+            store::SketchRef::Dense { regs: oregs, .. } => {
                 self.saturate();
                 if let Registers::Dense { regs, hist } = &mut self.regs {
                     kernels::merge_max_hist(regs, oregs, hist);

@@ -26,4 +26,5 @@ pub mod hash;
 pub mod hll;
 pub mod metrics;
 pub mod runtime;
+pub mod snapshot;
 pub mod util;

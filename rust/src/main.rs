@@ -4,7 +4,12 @@
 //! degreesketch generate   --spec rmat:18:16 --seed 1 --out g.txt
 //! degreesketch accumulate --graph g.txt --ranks 8 --p 12 --out sketch.d/
 //! degreesketch query      --sketch sketch.d/ deg 42
-//! degreesketch serve      --sketch sketch.d/ --addr 127.0.0.1:7171
+//! degreesketch serve      --sketch sketch.d/|sketch.snap --addr 127.0.0.1:7171
+//! degreesketch snapshot   create  --sketch sketch.d/ --out sketch.snap
+//! degreesketch snapshot   create  --graph g.txt --ranks 8 --p 12 --out s.snap
+//! degreesketch snapshot   inspect --file sketch.snap [--verify]
+//! degreesketch snapshot   serve   --file sketch.snap --addr 127.0.0.1:7171
+//!                                 [--mode auto|mmap|heap] [--self-check]
 //! degreesketch anf        --graph g.txt --ranks 8 --p 8 --max-t 5 [--exact]
 //! degreesketch triangles  edge|vertex --graph g.txt --k 100 --p 12
 //!                         [--intersect mle|ix|pjrt] [--exact]
@@ -41,6 +46,7 @@ use degreesketch::graph::stream::{
 use degreesketch::graph::{exact, Edge};
 use degreesketch::hll::{fit_beta, HllConfig};
 use degreesketch::runtime::{default_artifacts_dir, PjrtRuntime, PjrtService};
+use degreesketch::snapshot::{MappedSnapshot, SnapshotMode};
 use degreesketch::util::stats::mean_relative_error;
 
 fn main() {
@@ -71,6 +77,7 @@ fn run(argv: &[String]) -> Result<()> {
         "accumulate" => cmd_accumulate(&args, &config),
         "query" => cmd_query(&args),
         "serve" => cmd_serve(&args),
+        "snapshot" => cmd_snapshot(&args, &config),
         "anf" => cmd_anf(&args, &config),
         "triangles" => cmd_triangles(&args, &config),
         "exact" => cmd_exact(&args),
@@ -83,8 +90,8 @@ fn run(argv: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "degreesketch — distributed cardinality sketches on massive graphs\n\
-         subcommands: generate accumulate query serve anf triangles exact \
-         calibrate-beta info\n\
+         subcommands: generate accumulate query serve snapshot anf \
+         triangles exact calibrate-beta info\n\
          see README.md for full usage"
     );
 }
@@ -211,11 +218,158 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7171").to_string();
     args.finish()?;
     let engine = Arc::new(QueryEngine::load(Path::new(&dir))?);
+    println!(
+        "loaded {} vertices (backing={}, heap={}B, mapped={}B)",
+        engine.num_vertices(),
+        engine.backing_mode(),
+        engine.heap_bytes(),
+        engine.resident_bytes()
+    );
     let server = QueryServer::start(engine, &addr)?;
     println!("serving DegreeSketch queries on {}", server.addr());
     println!("protocol: DEG x | TRI x y | JACCARD x y | UNION x.. | STATS | QUIT");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn parse_snapshot_mode(args: &Args) -> Result<SnapshotMode> {
+    match args.get_or("mode", "auto") {
+        "auto" => Ok(SnapshotMode::Auto),
+        "mmap" => Ok(SnapshotMode::Mmap),
+        "heap" => Ok(SnapshotMode::Heap),
+        other => bail!("bad --mode {other:?} (auto|mmap|heap)"),
+    }
+}
+
+fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("");
+    match action {
+        "create" => {
+            let out = args.require("out")?.to_string();
+            let stats = if let Some(dir) = args.get("sketch") {
+                // migrate a legacy shard directory without re-accumulating
+                let dir = dir.to_string();
+                args.finish()?;
+                QueryEngine::migrate_legacy(Path::new(&dir), Path::new(&out))?
+            } else {
+                let edges = load_edges(args)?;
+                let ranks = args
+                    .get_usize("ranks", config.get_int("run.ranks", 4) as usize)?;
+                let p = args.get_u8("p", config.get_int("hll.p", 8) as u8)?;
+                let hash_seed = args.get_u64(
+                    "hash-seed",
+                    config.get_int("hll.seed", 0x5EED) as u64,
+                )?;
+                let backend = backend_of(args, config)?;
+                args.finish()?;
+                let ds = accumulate_stream(
+                    &MemoryStream::new(edges),
+                    ranks,
+                    HllConfig::new(p, hash_seed),
+                    AccumulateOptions {
+                        backend,
+                        partitioner: config.partitioner()?,
+                    },
+                );
+                QueryEngine::new(ds).save_snapshot(Path::new(&out))?
+            };
+            println!(
+                "wrote {out}: {} bytes, {} vertices ({} dense sketches, \
+                 {} sparse pairs)",
+                stats.file_len,
+                stats.vertices,
+                stats.dense_sketches,
+                stats.sparse_pairs
+            );
+            Ok(())
+        }
+        "inspect" => {
+            let file = args.require("file")?.to_string();
+            let mode = parse_snapshot_mode(args)?;
+            let want_verify = args.has("verify");
+            args.finish()?;
+            let t0 = std::time::Instant::now();
+            let snap = MappedSnapshot::open_with(Path::new(&file), mode)?;
+            let open_s = t0.elapsed().as_secs_f64();
+            println!(
+                "{file}: v{} {} bytes mode={} open={open_s:.6}s",
+                degreesketch::snapshot::VERSION,
+                snap.resident_bytes(),
+                snap.mode()
+            );
+            println!(
+                "p={} seed={:#x} ranks={} vertices={} dense={}",
+                snap.config().p(),
+                snap.config().hasher().seed(),
+                snap.num_ranks(),
+                snap.num_vertices(),
+                snap.num_dense_sketches()
+            );
+            for (rank, s) in snap.rank_stats().iter().enumerate() {
+                println!(
+                    "  rank {rank}: vertices={} dense={} sparse_pairs={} \
+                     payload={}B",
+                    s.vertex_count, s.dense_count, s.sparse_pairs,
+                    s.payload_bytes
+                );
+            }
+            if want_verify {
+                snap.verify()?;
+                println!("payload CRCs: OK");
+            }
+            Ok(())
+        }
+        "serve" => {
+            let file = args.require("file")?.to_string();
+            let addr = args.get_or("addr", "127.0.0.1:7171").to_string();
+            let mode = parse_snapshot_mode(args)?;
+            let self_check = args.has("self-check");
+            args.finish()?;
+            let engine = Arc::new(QueryEngine::open_snapshot_with(
+                Path::new(&file),
+                mode,
+            )?);
+            println!(
+                "snapshot {} backing={} resident={}B",
+                file,
+                engine.backing_mode(),
+                engine.resident_bytes()
+            );
+            let server = QueryServer::start(engine, &addr)?;
+            println!("serving DegreeSketch queries on {}", server.addr());
+            if self_check {
+                // round-trip a client through the live server, then exit —
+                // used by CI to prove serve-from-snapshot end to end
+                use std::io::{BufRead, BufReader, Write};
+                let stream = std::net::TcpStream::connect(server.addr())?;
+                let mut w = stream.try_clone()?;
+                let mut r = BufReader::new(stream);
+                for probe in ["STATS", "DEG 0", "QUIT"] {
+                    writeln!(w, "{probe}")?;
+                    let mut resp = String::new();
+                    r.read_line(&mut resp)?;
+                    println!("self-check {probe} -> {}", resp.trim());
+                }
+                server.stop();
+                println!("self-check OK");
+                return Ok(());
+            }
+            println!(
+                "protocol: DEG x | TRI x y | JACCARD x y | UNION x.. | \
+                 STATS | QUIT"
+            );
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        other => {
+            bail!("snapshot action must be create|inspect|serve, got {other:?}")
+        }
     }
 }
 

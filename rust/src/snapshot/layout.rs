@@ -1,0 +1,296 @@
+//! Fixed-endian on-disk structures of the snapshot format: the 64-byte
+//! header, the per-rank section table, and the packed vertex→slot words.
+//! See the module docs of [`crate::snapshot`] for the full file layout.
+//!
+//! Everything is little-endian regardless of host; decode goes through
+//! `from_le_bytes` so the format is readable anywhere (the *zero-copy*
+//! typed views additionally require a little-endian host and degrade to
+//! owned decoding otherwise — see `reader.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::Partitioner;
+
+/// `"DSKSNAP1"` — DegreeSketch snapshot, format generation 1.
+pub const MAGIC: [u8; 8] = *b"DSKSNAP1";
+/// Bumped on any incompatible layout change.
+pub const VERSION: u32 = 1;
+/// Every section starts on a 64-byte boundary (cache line; also keeps the
+/// `u32` histogram and pair views aligned on any source).
+pub const ALIGN: usize = 64;
+pub const HEADER_LEN: usize = 64;
+pub const SECTION_LEN: usize = 64;
+
+/// Round `x` up to the next [`ALIGN`] boundary.
+pub fn align_up(x: usize) -> usize {
+    (x + ALIGN - 1) & !(ALIGN - 1)
+}
+
+const PART_ROUND_ROBIN: u8 = 0;
+const PART_HASHED: u8 = 1;
+
+fn partitioner_tag(p: Partitioner) -> (u8, u64) {
+    match p {
+        Partitioner::RoundRobin => (PART_ROUND_ROBIN, 0),
+        Partitioner::Hashed { seed } => (PART_HASHED, seed),
+    }
+}
+
+fn partitioner_from_tag(tag: u8, seed: u64) -> Result<Partitioner> {
+    match tag {
+        PART_ROUND_ROBIN => Ok(Partitioner::RoundRobin),
+        PART_HASHED => Ok(Partitioner::Hashed { seed }),
+        other => bail!("unknown partitioner tag {other}"),
+    }
+}
+
+/// Decoded snapshot header (bytes `[0, 64)` of the file).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub p: u8,
+    pub partitioner: Partitioner,
+    pub ranks: u32,
+    pub hash_seed: u64,
+    pub total_vertices: u64,
+    pub file_len: u64,
+}
+
+impl Header {
+    /// Encode with the given `meta_crc` (CRC-32 of header bytes `[16, 64)`
+    /// plus the whole section table).
+    pub fn encode(&self, meta_crc: u32) -> [u8; HEADER_LEN] {
+        let mut b = [0u8; HEADER_LEN];
+        b[0..8].copy_from_slice(&MAGIC);
+        b[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        b[12..16].copy_from_slice(&meta_crc.to_le_bytes());
+        let (tag, pseed) = partitioner_tag(self.partitioner);
+        b[16] = self.p;
+        b[17] = tag;
+        // b[18..20] reserved
+        b[20..24].copy_from_slice(&self.ranks.to_le_bytes());
+        b[24..32].copy_from_slice(&self.hash_seed.to_le_bytes());
+        b[32..40].copy_from_slice(&pseed.to_le_bytes());
+        b[40..48].copy_from_slice(&self.total_vertices.to_le_bytes());
+        b[48..56].copy_from_slice(&self.file_len.to_le_bytes());
+        // b[56..64] reserved
+        b
+    }
+
+    /// Decode and structurally validate; returns the stored meta CRC too
+    /// (verified by the caller, which has the section table in hand).
+    pub fn decode(b: &[u8]) -> Result<(Header, u32)> {
+        if b.len() < HEADER_LEN {
+            bail!("file too short for a snapshot header ({} bytes)", b.len());
+        }
+        if b[0..8] != MAGIC {
+            bail!("bad snapshot magic {:02x?}", &b[0..8]);
+        }
+        let version = u32::from_le_bytes(b[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported snapshot version {version} (want {VERSION})");
+        }
+        let meta_crc = u32::from_le_bytes(b[12..16].try_into().unwrap());
+        let p = b[16];
+        if !(4..=16).contains(&p) {
+            bail!("snapshot p {p} out of range 4..=16");
+        }
+        let pseed = u64::from_le_bytes(b[32..40].try_into().unwrap());
+        let partitioner = partitioner_from_tag(b[17], pseed)?;
+        let ranks = u32::from_le_bytes(b[20..24].try_into().unwrap());
+        if ranks == 0 {
+            bail!("snapshot has zero ranks");
+        }
+        Ok((
+            Header {
+                p,
+                partitioner,
+                ranks,
+                hash_seed: u64::from_le_bytes(b[24..32].try_into().unwrap()),
+                total_vertices: u64::from_le_bytes(
+                    b[40..48].try_into().unwrap(),
+                ),
+                file_len: u64::from_le_bytes(b[48..56].try_into().unwrap()),
+            },
+            meta_crc,
+        ))
+    }
+}
+
+/// One rank's entry in the section table (64 bytes each, following the
+/// header). All offsets are absolute file offsets, 64-byte aligned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RankSection {
+    pub vertex_count: u64,
+    pub dense_count: u64,
+    pub sparse_pairs: u64,
+    pub index_off: u64,
+    pub regs_off: u64,
+    pub hists_off: u64,
+    pub pairs_off: u64,
+    /// CRC-32 of the rank's payload bytes `[index_off, pairs_end)`,
+    /// inter-section padding included (it is written as zeros). Checked by
+    /// [`crate::snapshot::MappedSnapshot::verify`], not on every open.
+    pub payload_crc: u32,
+}
+
+impl RankSection {
+    pub fn encode(&self) -> [u8; SECTION_LEN] {
+        let mut b = [0u8; SECTION_LEN];
+        b[0..8].copy_from_slice(&self.vertex_count.to_le_bytes());
+        b[8..16].copy_from_slice(&self.dense_count.to_le_bytes());
+        b[16..24].copy_from_slice(&self.sparse_pairs.to_le_bytes());
+        b[24..32].copy_from_slice(&self.index_off.to_le_bytes());
+        b[32..40].copy_from_slice(&self.regs_off.to_le_bytes());
+        b[40..48].copy_from_slice(&self.hists_off.to_le_bytes());
+        b[48..56].copy_from_slice(&self.pairs_off.to_le_bytes());
+        b[56..60].copy_from_slice(&self.payload_crc.to_le_bytes());
+        b
+    }
+
+    pub fn decode(b: &[u8]) -> RankSection {
+        debug_assert!(b.len() >= SECTION_LEN);
+        RankSection {
+            vertex_count: u64::from_le_bytes(b[0..8].try_into().unwrap()),
+            dense_count: u64::from_le_bytes(b[8..16].try_into().unwrap()),
+            sparse_pairs: u64::from_le_bytes(b[16..24].try_into().unwrap()),
+            index_off: u64::from_le_bytes(b[24..32].try_into().unwrap()),
+            regs_off: u64::from_le_bytes(b[32..40].try_into().unwrap()),
+            hists_off: u64::from_le_bytes(b[40..48].try_into().unwrap()),
+            pairs_off: u64::from_le_bytes(b[48..56].try_into().unwrap()),
+            payload_crc: u32::from_le_bytes(b[56..60].try_into().unwrap()),
+        }
+    }
+}
+
+/// Slot words: bit 63 selects the representation.
+///
+/// * dense — `1 << 63 | dense_slot` (low 32 bits);
+/// * sparse — `pair_offset << 16 | len`, where `pair_offset` (47 bits)
+///   indexes the rank's pair section in 4-byte records and `len` (16 bits,
+///   ≥ 1) is the run length.
+const SLOT_DENSE: u64 = 1 << 63;
+/// Maximum encodable sparse pair offset (47 bits).
+pub const MAX_SPARSE_OFF: u64 = (1 << 47) - 1;
+
+pub fn encode_dense_slot(d: u32) -> u64 {
+    SLOT_DENSE | d as u64
+}
+
+pub fn encode_sparse_slot(pair_off: u64, len: u16) -> u64 {
+    debug_assert!(pair_off <= MAX_SPARSE_OFF);
+    (pair_off << 16) | len as u64
+}
+
+/// A decoded slot word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    Dense { slot: u32 },
+    Sparse { pair_off: u64, len: u16 },
+}
+
+pub fn decode_slot(word: u64) -> Result<Slot> {
+    if word & SLOT_DENSE != 0 {
+        let rest = word & !SLOT_DENSE;
+        if rest > u32::MAX as u64 {
+            bail!("dense slot word {word:#x} has nonzero reserved bits");
+        }
+        Ok(Slot::Dense { slot: rest as u32 })
+    } else {
+        Ok(Slot::Sparse {
+            pair_off: word >> 16,
+            len: (word & 0xFFFF) as u16,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_round_trips() {
+        for part in [Partitioner::RoundRobin, Partitioner::Hashed { seed: 99 }]
+        {
+            let h = Header {
+                p: 12,
+                partitioner: part,
+                ranks: 7,
+                hash_seed: 0xDEAD_BEEF,
+                total_vertices: 123_456,
+                file_len: 1 << 20,
+            };
+            let bytes = h.encode(0xABCD_1234);
+            let (back, crc) = Header::decode(&bytes).unwrap();
+            assert_eq!(back, h);
+            assert_eq!(crc, 0xABCD_1234);
+        }
+    }
+
+    #[test]
+    fn header_rejects_garbage() {
+        assert!(Header::decode(&[0u8; 10]).is_err());
+        let h = Header {
+            p: 8,
+            partitioner: Partitioner::RoundRobin,
+            ranks: 1,
+            hash_seed: 1,
+            total_vertices: 0,
+            file_len: 64,
+        };
+        let mut bytes = h.encode(0);
+        bytes[0] = b'X';
+        assert!(Header::decode(&bytes).is_err());
+        let mut bytes = h.encode(0);
+        bytes[8] = 99; // version
+        assert!(Header::decode(&bytes).is_err());
+        let mut bytes = h.encode(0);
+        bytes[16] = 3; // p below range
+        assert!(Header::decode(&bytes).is_err());
+        let mut bytes = h.encode(0);
+        bytes[17] = 9; // partitioner tag
+        assert!(Header::decode(&bytes).is_err());
+        let mut bytes = h.encode(0);
+        bytes[20..24].copy_from_slice(&0u32.to_le_bytes()); // ranks = 0
+        assert!(Header::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn section_round_trips() {
+        let s = RankSection {
+            vertex_count: 10,
+            dense_count: 3,
+            sparse_pairs: 21,
+            index_off: 128,
+            regs_off: 320,
+            hists_off: 1088,
+            pairs_off: 1856,
+            payload_crc: 0xFEED_F00D,
+        };
+        assert_eq!(RankSection::decode(&s.encode()), s);
+    }
+
+    #[test]
+    fn slot_words_round_trip() {
+        assert_eq!(
+            decode_slot(encode_dense_slot(7)).unwrap(),
+            Slot::Dense { slot: 7 }
+        );
+        assert_eq!(
+            decode_slot(encode_sparse_slot(1_000_000, 13)).unwrap(),
+            Slot::Sparse {
+                pair_off: 1_000_000,
+                len: 13
+            }
+        );
+        // dense word with bits set between 32 and 63 is rejected
+        assert!(decode_slot(SLOT_DENSE | (1 << 40)).is_err());
+    }
+
+    #[test]
+    fn align_up_is_monotone() {
+        assert_eq!(align_up(0), 0);
+        assert_eq!(align_up(1), 64);
+        assert_eq!(align_up(64), 64);
+        assert_eq!(align_up(65), 128);
+    }
+}

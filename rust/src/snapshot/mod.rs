@@ -1,0 +1,69 @@
+//! Zero-copy snapshot persistence — the "leave-behind query engine" as a
+//! single mappable file.
+//!
+//! PR 1 made each rank's accumulated store one contiguous dense arena;
+//! this module serializes that shape verbatim so a query server can
+//! `mmap` the file and serve borrowed register views with **O(1) load
+//! cost** (map + index validation — no per-sketch deserialization, no
+//! per-vertex allocation) and **one shared page-cache copy across every
+//! process** mapping the same snapshot. The portable fallback reads the
+//! file into an aligned heap buffer behind the same [`SnapshotSource`]
+//! trait.
+//!
+//! # File layout (version 1, all fixed little-endian, sections 64-byte
+//! aligned)
+//!
+//! ```text
+//! [0,   64)  header
+//!    [0,  8)  magic  "DSKSNAP1"
+//!    [8, 12)  version           u32  = 1
+//!    [12,16)  meta CRC          u32  CRC-32 of header[16,64) ++ table
+//!    [16]     p                 u8   HLL prefix bits (4..=16)
+//!    [17]     partitioner tag   u8   0 = round-robin, 1 = hashed
+//!    [18,20)  reserved
+//!    [20,24)  ranks             u32
+//!    [24,32)  hash seed         u64
+//!    [32,40)  partitioner seed  u64
+//!    [40,48)  total vertices    u64
+//!    [48,56)  file length       u64
+//!    [56,64)  reserved
+//! [64, 64 + 64·ranks)  section table, one 64-byte entry per rank:
+//!    vertex_count, dense_count, sparse_pairs,
+//!    index_off, regs_off, hists_off, pairs_off   (absolute, 64-aligned)
+//!    payload CRC-32 of [index_off, pairs_end)
+//! then per rank, in offset order:
+//!    index   vertex_count × u64 ids (strictly increasing)
+//!            vertex_count × u64 slot words:
+//!              bit 63 set   → dense: low 32 bits = slot in the register
+//!                             arena
+//!              bit 63 clear → sparse: bits [16,63) = offset into the pair
+//!                             section (in records), bits [0,16) = length
+//!    regs    dense_count × 2^p register bytes (slot-major)
+//!    hists   dense_count × (kmax+1) u32 register histograms
+//!    pairs   sparse_pairs × 4-byte records [idx lo, idx hi, value, 0]
+//! ```
+//!
+//! The arenas mirror [`crate::hll::SketchStore`]'s in-memory layout, so a
+//! mapped vertex resolves to exactly the [`SketchRef`] a live store would
+//! hand out — estimates, merges and intersections are bit-identical to
+//! the heap path (property-tested in `tests/snapshot.rs`).
+//!
+//! Opening validates: magic/version, meta CRC, file length, section
+//! bounds/alignment/ordering, index sortedness + rank ownership, slot
+//! ranges, and every sparse pair record. Section payload CRCs are
+//! verified by [`MappedSnapshot::verify`] (run by `snapshot inspect`),
+//! keeping `open` free of full-arena scans.
+//!
+//! [`SketchRef`]: crate::hll::SketchRef
+
+mod layout;
+mod reader;
+mod source;
+mod writer;
+
+pub use layout::{MAGIC, VERSION};
+pub use reader::{MappedSnapshot, RankStats};
+pub use source::{
+    HeapSource, SnapshotMode, SnapshotSource, SourceKind,
+};
+pub use writer::{SnapshotStats, SnapshotWriter};

@@ -1,0 +1,569 @@
+//! Open a snapshot file and serve zero-copy sketch views out of it.
+//!
+//! [`MappedSnapshot::open`] maps the file (or reads it to an aligned heap
+//! buffer), validates the header CRC and the vertex→slot index with flat
+//! word scans — **no per-sketch deserialization, no per-vertex heap
+//! allocation** — and then answers [`MappedSnapshot::get`] with borrowed
+//! [`SketchRef`] views straight into the mapped arenas, compatible with
+//! every SWAR kernel and estimator the heap path uses.
+//!
+//! Zero-copy typed views (`&[u32]` histograms, `&[(u16, u8)]` pair runs)
+//! require a little-endian host whose `(u16, u8)` ABI matches the packed
+//! 4-byte file records; both are probed at open and the affected section
+//! silently degrades to an owned decoded copy when the probe fails, so the
+//! format stays portable.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Partitioner;
+use crate::hll::{HllConfig, SketchRef};
+use crate::util::crc32::crc32;
+
+use super::layout::{
+    decode_slot, Header, RankSection, Slot, HEADER_LEN, SECTION_LEN,
+};
+use super::source::{open_source, SnapshotMode, SnapshotSource, SourceKind};
+
+/// Read a little-endian `u64` at `off` (bounds validated by the caller).
+#[inline]
+fn read_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().expect("8 bytes"))
+}
+
+/// Does the in-memory `(u16, u8)` tuple match the file's packed 4-byte
+/// `[idx_lo, idx_hi, val, pad]` record (modulo the padding byte)?
+fn pair_abi_matches() -> bool {
+    if cfg!(target_endian = "big")
+        || std::mem::size_of::<(u16, u8)>() != 4
+        || std::mem::align_of::<(u16, u8)>() != 2
+    {
+        return false;
+    }
+    let probe: (u16, u8) = (0x0102, 0x03);
+    let base = std::ptr::addr_of!(probe) as usize;
+    let o0 = std::ptr::addr_of!(probe.0) as usize - base;
+    let o1 = std::ptr::addr_of!(probe.1) as usize - base;
+    o0 == 0 && o1 == 2
+}
+
+/// Histogram section access: borrowed from the map or decoded at open.
+enum HistsView {
+    Borrowed(usize),
+    Owned(Vec<u32>),
+}
+
+/// Sparse-pair section access: borrowed from the map or decoded at open.
+enum PairsView {
+    Borrowed(usize),
+    Owned(Vec<(u16, u8)>),
+}
+
+struct RankView {
+    vertex_count: usize,
+    dense_count: usize,
+    sparse_pairs: usize,
+    ids_off: usize,
+    slots_off: usize,
+    regs_off: usize,
+    hists: HistsView,
+    pairs: PairsView,
+    payload_start: usize,
+    payload_end: usize,
+    payload_crc: u32,
+}
+
+/// Per-rank inventory line for `snapshot inspect`.
+#[derive(Debug, Clone, Copy)]
+pub struct RankStats {
+    pub vertex_count: usize,
+    pub dense_count: usize,
+    pub sparse_pairs: usize,
+    pub payload_bytes: usize,
+}
+
+/// An open, validated snapshot serving borrowed sketch views.
+pub struct MappedSnapshot {
+    source: Box<dyn SnapshotSource>,
+    config: HllConfig,
+    partitioner: Partitioner,
+    total_vertices: u64,
+    rank_views: Vec<RankView>,
+}
+
+impl MappedSnapshot {
+    /// Open with the default backing (`mmap` where available).
+    pub fn open(path: &Path) -> Result<Self> {
+        Self::open_with(path, SnapshotMode::Auto)
+    }
+
+    /// Open with an explicit backing mode.
+    pub fn open_with(path: &Path, mode: SnapshotMode) -> Result<Self> {
+        let source = open_source(path, mode)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Self::from_source(source)
+            .with_context(|| format!("validating {}", path.display()))
+    }
+
+    fn from_source(source: Box<dyn SnapshotSource>) -> Result<Self> {
+        let bytes = source.bytes();
+        let (header, stored_crc) = Header::decode(bytes)?;
+        if header.file_len != bytes.len() as u64 {
+            bail!(
+                "file length mismatch: header says {}, file has {} bytes \
+                 (truncated or appended)",
+                header.file_len,
+                bytes.len()
+            );
+        }
+        let ranks = header.ranks as usize;
+        let table_end = HEADER_LEN + ranks * SECTION_LEN;
+        if bytes.len() < table_end {
+            bail!("file too short for a {ranks}-rank section table");
+        }
+        if crc32(&bytes[16..table_end]) != stored_crc {
+            bail!("header/section-table CRC mismatch");
+        }
+
+        let config = HllConfig::new(header.p, header.hash_seed);
+        let r = config.num_registers();
+        let bins = config.kmax() as usize + 1;
+        let kmax = config.kmax();
+        let threshold = config.saturation_threshold();
+        let file_len = bytes.len() as u64;
+
+        let le_host = cfg!(target_endian = "little");
+        let pair_abi = pair_abi_matches();
+
+        let mut rank_views = Vec::with_capacity(ranks);
+        let mut prev_end = table_end as u64;
+        let mut id_total = 0u64;
+        for rank in 0..ranks {
+            let sec = RankSection::decode(
+                &bytes[HEADER_LEN + rank * SECTION_LEN..],
+            );
+            let view = validate_rank(
+                bytes, rank, ranks, &sec, prev_end, file_len, r, bins, kmax,
+                threshold, header.partitioner, le_host, pair_abi,
+            )
+            .with_context(|| format!("rank {rank}"))?;
+            id_total += sec.vertex_count;
+            prev_end = view.payload_end as u64;
+            rank_views.push(view);
+        }
+        if id_total != header.total_vertices {
+            bail!(
+                "vertex count mismatch: header says {}, sections hold {}",
+                header.total_vertices,
+                id_total
+            );
+        }
+
+        Ok(Self {
+            source,
+            config,
+            partitioner: header.partitioner,
+            total_vertices: header.total_vertices,
+            rank_views,
+        })
+    }
+
+    pub fn config(&self) -> &HllConfig {
+        &self.config
+    }
+
+    pub fn partitioner(&self) -> Partitioner {
+        self.partitioner
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        self.rank_views.len()
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.total_vertices as usize
+    }
+
+    /// Number of sketches stored dense (in the register arenas).
+    pub fn num_dense_sketches(&self) -> usize {
+        self.rank_views.iter().map(|v| v.dense_count).sum()
+    }
+
+    /// Bytes of the backing region (the whole snapshot file). Under mmap
+    /// this is shared, demand-paged address space, not private heap.
+    pub fn resident_bytes(&self) -> usize {
+        self.source.bytes().len()
+    }
+
+    /// `"mmap"` or `"heap"` — how the file is backed.
+    pub fn mode(&self) -> &'static str {
+        self.source.kind().as_str()
+    }
+
+    pub fn source_kind(&self) -> SourceKind {
+        self.source.kind()
+    }
+
+    /// Per-rank inventory (for `snapshot inspect`).
+    pub fn rank_stats(&self) -> Vec<RankStats> {
+        self.rank_views
+            .iter()
+            .map(|v| RankStats {
+                vertex_count: v.vertex_count,
+                dense_count: v.dense_count,
+                sparse_pairs: v.sparse_pairs,
+                payload_bytes: v.payload_end - v.payload_start,
+            })
+            .collect()
+    }
+
+    /// Full payload verification: recompute every rank's section CRC.
+    /// O(file size) — run by `snapshot inspect`, not on every open.
+    pub fn verify(&self) -> Result<()> {
+        let bytes = self.source.bytes();
+        for (rank, v) in self.rank_views.iter().enumerate() {
+            let got = crc32(&bytes[v.payload_start..v.payload_end]);
+            if got != v.payload_crc {
+                bail!(
+                    "rank {rank}: payload CRC mismatch \
+                     (stored {:#010x}, computed {got:#010x})",
+                    v.payload_crc
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Borrowed view of `v`'s sketch, straight out of the mapped arenas.
+    pub fn get(&self, v: u64) -> Option<SketchRef<'_>> {
+        let rank = self.partitioner.rank_of(v, self.rank_views.len());
+        let rv = &self.rank_views[rank];
+        let bytes = self.source.bytes();
+        let (mut lo, mut hi) = (0usize, rv.vertex_count);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if read_u64(bytes, rv.ids_off + 8 * mid) < v {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if lo >= rv.vertex_count || read_u64(bytes, rv.ids_off + 8 * lo) != v
+        {
+            return None;
+        }
+        self.make_ref(rv, read_u64(bytes, rv.slots_off + 8 * lo))
+    }
+
+    /// Iterate `(vertex, view)` across ranks, each rank in ascending
+    /// vertex order. Entries whose slot word fails the defensive re-check
+    /// (possible only if the backing file changed under a shared mapping)
+    /// are skipped.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, SketchRef<'_>)> + '_ {
+        self.rank_views.iter().flat_map(move |rv| {
+            let bytes = self.source.bytes();
+            (0..rv.vertex_count).filter_map(move |i| {
+                let v = read_u64(bytes, rv.ids_off + 8 * i);
+                let word = read_u64(bytes, rv.slots_off + 8 * i);
+                Some((v, self.make_ref(rv, word)?))
+            })
+        })
+    }
+
+    /// Resolve a slot word to a borrowed view.
+    ///
+    /// Every slot word was validated at open, but a `MAP_SHARED` mapping
+    /// does not freeze the underlying file — another process rewriting it
+    /// in place would change the bytes we re-read here. So the decoded
+    /// slot is re-checked against the (owned, open-time) rank metadata
+    /// before any slice is formed: a stale/corrupt word yields `None`
+    /// instead of an out-of-bounds read. (Shrinking the file under a live
+    /// mapping can still SIGBUS on page access — inherent to mmap; don't
+    /// rewrite live snapshots in place.)
+    fn make_ref<'a>(
+        &'a self,
+        rv: &'a RankView,
+        word: u64,
+    ) -> Option<SketchRef<'a>> {
+        let bytes = self.source.bytes();
+        let r = self.config.num_registers();
+        let bins = self.config.kmax() as usize + 1;
+        match decode_slot(word).ok()? {
+            Slot::Dense { slot } => {
+                let d = slot as usize;
+                if d >= rv.dense_count {
+                    return None;
+                }
+                // in bounds: regs_off + dense_count·r and hists_off +
+                // dense_count·bins·4 were checked against the (fixed)
+                // mapping length at open
+                let regs =
+                    &bytes[rv.regs_off + d * r..rv.regs_off + (d + 1) * r];
+                let hist = match &rv.hists {
+                    // SAFETY: offset/alignment validated at open (64-byte
+                    // aligned section on a ≥8-byte aligned base, LE host),
+                    // `d < dense_count` re-checked above keeps the slice
+                    // inside the open-validated region; u32 has no invalid
+                    // bit patterns; the slice borrows from `self.source`,
+                    // which outlives the return value.
+                    HistsView::Borrowed(off) => unsafe {
+                        let ptr =
+                            bytes.as_ptr().add(off + d * bins * 4) as *const u32;
+                        std::slice::from_raw_parts(ptr, bins)
+                    },
+                    HistsView::Owned(v) => &v[d * bins..(d + 1) * bins],
+                };
+                Some(SketchRef::Dense {
+                    config: self.config,
+                    regs,
+                    hist,
+                })
+            }
+            Slot::Sparse { pair_off, len } => {
+                let len = len as usize;
+                if pair_off + len as u64 > rv.sparse_pairs as u64 {
+                    return None;
+                }
+                let po = pair_off as usize;
+                let pairs = match &rv.pairs {
+                    // SAFETY: the `(u16, u8)` ABI was probed at open
+                    // (size 4, u16 at 0, u8 at 2, LE host), the section is
+                    // 2-byte aligned, `po + len <= sparse_pairs` re-checked
+                    // above keeps the slice inside the open-validated
+                    // region, and the padding byte is initialized (zero)
+                    // in the file. Lifetime is tied to `self.source`.
+                    PairsView::Borrowed(off) => unsafe {
+                        let ptr = bytes.as_ptr().add(off + 4 * po)
+                            as *const (u16, u8);
+                        std::slice::from_raw_parts(ptr, len)
+                    },
+                    PairsView::Owned(v) => &v[po..po + len],
+                };
+                Some(SketchRef::Sparse {
+                    config: self.config,
+                    pairs,
+                })
+            }
+        }
+    }
+}
+
+/// Compute `off + count * elem`, bailing on overflow or `end > limit`.
+fn region_end(
+    off: u64,
+    count: u64,
+    elem: u64,
+    limit: u64,
+    what: &str,
+) -> Result<u64> {
+    let end = count
+        .checked_mul(elem)
+        .and_then(|size| off.checked_add(size))
+        .with_context(|| format!("{what} region overflows"))?;
+    if end > limit {
+        bail!("{what} region [{off}, {end}) exceeds limit {limit}");
+    }
+    Ok(end)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn validate_rank(
+    bytes: &[u8],
+    rank: usize,
+    ranks: usize,
+    sec: &RankSection,
+    prev_end: u64,
+    file_len: u64,
+    r: usize,
+    bins: usize,
+    kmax: u8,
+    threshold: usize,
+    partitioner: Partitioner,
+    le_host: bool,
+    pair_abi: bool,
+) -> Result<RankView> {
+    for (name, off) in [
+        ("index", sec.index_off),
+        ("regs", sec.regs_off),
+        ("hists", sec.hists_off),
+        ("pairs", sec.pairs_off),
+    ] {
+        if off % super::layout::ALIGN as u64 != 0 {
+            bail!("{name} offset {off} is not 64-byte aligned");
+        }
+    }
+    if sec.index_off < prev_end {
+        bail!(
+            "index offset {} overlaps the previous section (ends {prev_end})",
+            sec.index_off
+        );
+    }
+    region_end(sec.index_off, sec.vertex_count, 16, sec.regs_off, "index")?;
+    region_end(
+        sec.regs_off,
+        sec.dense_count,
+        r as u64,
+        sec.hists_off,
+        "registers",
+    )?;
+    region_end(
+        sec.hists_off,
+        sec.dense_count,
+        bins as u64 * 4,
+        sec.pairs_off,
+        "histograms",
+    )?;
+    let pairs_end =
+        region_end(sec.pairs_off, sec.sparse_pairs, 4, file_len, "pairs")?;
+
+    let vc = sec.vertex_count as usize;
+    let dc = sec.dense_count as usize;
+    let sp = sec.sparse_pairs as usize;
+    let ids_off = sec.index_off as usize;
+    let slots_off = ids_off + 8 * vc;
+    let pairs_off = sec.pairs_off as usize;
+
+    // flat index scan: sortedness, ownership, slot ranges, pair runs —
+    // word reads only, no sketch materialization
+    let mut prev: Option<u64> = None;
+    let mut dense_seen = 0usize;
+    let mut sparse_seen = 0usize;
+    for i in 0..vc {
+        let v = read_u64(bytes, ids_off + 8 * i);
+        if prev.is_some_and(|p| p >= v) {
+            bail!("slot index not strictly increasing at position {i}");
+        }
+        prev = Some(v);
+        if partitioner.rank_of(v, ranks) != rank {
+            bail!("vertex {v} stored on the wrong rank");
+        }
+        match decode_slot(read_u64(bytes, slots_off + 8 * i))? {
+            Slot::Dense { slot } => {
+                if slot as usize >= dc {
+                    bail!("vertex {v}: dense slot {slot} >= count {dc}");
+                }
+                dense_seen += 1;
+            }
+            Slot::Sparse { pair_off, len } => {
+                let len = len as usize;
+                if len == 0 || len > threshold {
+                    bail!(
+                        "vertex {v}: sparse run length {len} outside \
+                         1..={threshold}"
+                    );
+                }
+                // bound in u64 first: a 47-bit pair_off must not truncate
+                // through a usize cast on 32-bit hosts
+                if pair_off + len as u64 > sec.sparse_pairs {
+                    bail!(
+                        "vertex {v}: pair run [{pair_off}, {}) > {sp}",
+                        pair_off + len as u64
+                    );
+                }
+                let po = pair_off as usize;
+                let mut prev_idx: i64 = -1;
+                for k in 0..len {
+                    let rec = pairs_off + 4 * (po + k);
+                    let idx =
+                        u16::from_le_bytes([bytes[rec], bytes[rec + 1]]);
+                    let val = bytes[rec + 2];
+                    if bytes[rec + 3] != 0 {
+                        bail!("vertex {v}: nonzero pair padding byte");
+                    }
+                    if idx as usize >= r {
+                        bail!("vertex {v}: register index {idx} >= {r}");
+                    }
+                    if idx as i64 <= prev_idx {
+                        bail!("vertex {v}: pair indices not increasing");
+                    }
+                    if val == 0 || val > kmax {
+                        bail!("vertex {v}: register value {val} out of range");
+                    }
+                    prev_idx = idx as i64;
+                }
+                sparse_seen += len;
+            }
+        }
+    }
+    if dense_seen != dc {
+        bail!("index references {dense_seen} dense slots, table says {dc}");
+    }
+    if sparse_seen != sp {
+        bail!("index covers {sparse_seen} sparse pairs, table says {sp}");
+    }
+
+    let hists_off = sec.hists_off as usize;
+    let base = bytes.as_ptr() as usize;
+    let hists = if le_host && (base + hists_off) % 4 == 0 {
+        HistsView::Borrowed(hists_off)
+    } else {
+        // portable fallback: one bulk decode, still no per-sketch work
+        let mut v = Vec::with_capacity(dc * bins);
+        for i in 0..dc * bins {
+            let o = hists_off + 4 * i;
+            v.push(u32::from_le_bytes(
+                bytes[o..o + 4].try_into().expect("4 bytes"),
+            ));
+        }
+        HistsView::Owned(v)
+    };
+    let pairs = if pair_abi && (base + pairs_off) % 2 == 0 {
+        PairsView::Borrowed(pairs_off)
+    } else {
+        let mut v = Vec::with_capacity(sp);
+        for i in 0..sp {
+            let o = pairs_off + 4 * i;
+            v.push((
+                u16::from_le_bytes([bytes[o], bytes[o + 1]]),
+                bytes[o + 2],
+            ));
+        }
+        PairsView::Owned(v)
+    };
+
+    Ok(RankView {
+        vertex_count: vc,
+        dense_count: dc,
+        sparse_pairs: sp,
+        ids_off,
+        slots_off,
+        regs_off: sec.regs_off as usize,
+        hists,
+        pairs,
+        payload_start: sec.index_off as usize,
+        payload_end: pairs_end as usize,
+        payload_crc: sec.payload_crc,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_abi_probe_is_consistent_with_layout() {
+        // whatever the probe reports, the fallback keeps reads correct;
+        // this just asserts the probe runs and the common LE case holds
+        let ok = pair_abi_matches();
+        if cfg!(target_endian = "little")
+            && std::mem::size_of::<(u16, u8)>() == 4
+        {
+            // rustc lays (u16, u8) out field-ordered on every tier-1
+            // target today; if this ever changes the reader silently
+            // switches to owned decoding, so the assert documents rather
+            // than gates
+            assert!(
+                ok || std::mem::align_of::<(u16, u8)>() != 2,
+                "probe disagreed with the expected tuple layout"
+            );
+        }
+    }
+
+    #[test]
+    fn read_u64_is_little_endian() {
+        let bytes = [1u8, 0, 0, 0, 0, 0, 0, 0, 0xFF];
+        assert_eq!(read_u64(&bytes, 0), 1);
+        assert_eq!(read_u64(&bytes, 1), 0xFF00_0000_0000_0000);
+    }
+}

@@ -1,0 +1,243 @@
+//! Byte sources backing an open snapshot: a read-only `mmap` region on
+//! 64-bit unix (N processes serving the same snapshot share one page-cache
+//! copy) or a heap buffer read in full (the portable fallback, also used
+//! to exercise parity in tests). Both sit behind [`SnapshotSource`] so the
+//! reader never knows which one it got.
+//!
+//! The heap buffer is backed by a `Vec<u64>` rather than `Vec<u8>` so its
+//! base pointer is 8-byte aligned — together with the format's 64-byte
+//! section alignment this makes the zero-copy `&[u32]` histogram and
+//! `&[(u16, u8)]` pair views valid on either source.
+
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+/// Which backing a source provides (surfaced in `STATS` and `inspect`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SourceKind {
+    Mmap,
+    Heap,
+}
+
+impl SourceKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Mmap => "mmap",
+            Self::Heap => "heap",
+        }
+    }
+}
+
+/// A read-only byte region holding an entire snapshot file.
+pub trait SnapshotSource: Send + Sync {
+    fn bytes(&self) -> &[u8];
+    fn kind(&self) -> SourceKind;
+}
+
+/// Whole-file heap buffer (8-byte aligned via the `u64` backing store).
+pub struct HeapSource {
+    buf: Vec<u64>,
+    len: usize,
+}
+
+impl HeapSource {
+    pub fn open(path: &Path) -> std::io::Result<Self> {
+        let mut f = File::open(path)?;
+        let len = f.metadata()?.len() as usize;
+        let mut buf = vec![0u64; len.div_ceil(8)];
+        // view the u64 backing store as bytes for the read
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len)
+        };
+        f.read_exact(dst)?;
+        Ok(Self { buf, len })
+    }
+}
+
+impl SnapshotSource for HeapSource {
+    fn bytes(&self) -> &[u8] {
+        unsafe {
+            std::slice::from_raw_parts(self.buf.as_ptr() as *const u8, self.len)
+        }
+    }
+
+    fn kind(&self) -> SourceKind {
+        SourceKind::Heap
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    // Bound directly against the platform libc (already linked by std);
+    // the `libc` crate is unavailable offline. 64-bit unix only — the
+    // `off_t` width matches `i64` there.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub const PROT_READ: c_int = 0x1;
+    pub const MAP_SHARED: c_int = 0x1;
+}
+
+/// Read-only shared file mapping. Unmapped on drop.
+#[cfg(all(unix, target_pointer_width = "64"))]
+pub struct MmapSource {
+    ptr: *const u8,
+    len: usize,
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl MmapSource {
+    pub fn open(path: &Path) -> std::io::Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        let f = File::open(path)?;
+        let len = f.metadata()?.len() as usize;
+        if len == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "cannot map an empty file",
+            ));
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_SHARED,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as usize == usize::MAX {
+            return Err(std::io::Error::last_os_error());
+        }
+        // the mapping outlives `f`: POSIX keeps it valid after close
+        Ok(Self {
+            ptr: ptr as *const u8,
+            len,
+        })
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl SnapshotSource for MmapSource {
+    fn bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    fn kind(&self) -> SourceKind {
+        SourceKind::Mmap
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Drop for MmapSource {
+    fn drop(&mut self) {
+        unsafe {
+            sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+        }
+    }
+}
+
+// SAFETY: the region is mapped PROT_READ and never handed out mutably;
+// concurrent readers from any thread are fine.
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Send for MmapSource {}
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Sync for MmapSource {}
+
+/// How [`crate::snapshot::MappedSnapshot::open_with`] should back the file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SnapshotMode {
+    /// `mmap` where supported, heap otherwise.
+    #[default]
+    Auto,
+    /// Require `mmap`; error on platforms without it.
+    Mmap,
+    /// Force the read-to-heap fallback.
+    Heap,
+}
+
+/// Open `path` with the requested backing.
+pub fn open_source(
+    path: &Path,
+    mode: SnapshotMode,
+) -> std::io::Result<Box<dyn SnapshotSource>> {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    {
+        match mode {
+            SnapshotMode::Heap => {}
+            SnapshotMode::Mmap => {
+                return Ok(Box::new(MmapSource::open(path)?));
+            }
+            SnapshotMode::Auto => match MmapSource::open(path) {
+                Ok(m) => return Ok(Box::new(m)),
+                Err(_) => {} // e.g. pseudo-filesystems: fall back to heap
+            },
+        }
+    }
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    if mode == SnapshotMode::Mmap {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "mmap is unavailable on this platform; use SnapshotMode::Auto",
+        ));
+    }
+    Ok(Box::new(HeapSource::open(path)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, data: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(name);
+        std::fs::write(&p, data).unwrap();
+        p
+    }
+
+    #[test]
+    fn heap_source_round_trips_bytes() {
+        let data: Vec<u8> = (0..777u32).map(|i| (i % 251) as u8).collect();
+        let p = tmp("ds_snapshot_heap_source", &data);
+        let s = HeapSource::open(&p).unwrap();
+        assert_eq!(s.bytes(), &data[..]);
+        assert_eq!(s.kind(), SourceKind::Heap);
+        // 8-byte aligned base
+        assert_eq!(s.bytes().as_ptr() as usize % 8, 0);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    #[test]
+    fn mmap_source_matches_heap() {
+        let data: Vec<u8> = (0..4096u32).map(|i| (i % 13) as u8).collect();
+        let p = tmp("ds_snapshot_mmap_source", &data);
+        let m = MmapSource::open(&p).unwrap();
+        let h = HeapSource::open(&p).unwrap();
+        assert_eq!(m.bytes(), h.bytes());
+        assert_eq!(m.kind(), SourceKind::Mmap);
+        // page alignment makes every 64-byte-aligned section u32-safe
+        assert_eq!(m.bytes().as_ptr() as usize % 4096, 0);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn auto_mode_opens_something() {
+        let p = tmp("ds_snapshot_auto_source", &[1, 2, 3, 4]);
+        let s = open_source(&p, SnapshotMode::Auto).unwrap();
+        assert_eq!(s.bytes(), &[1, 2, 3, 4]);
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,194 @@
+//! Serialize a frozen [`DegreeSketch`] into a single snapshot file.
+//!
+//! The writer makes one pass over each rank's vertex-sorted shard to
+//! assemble four flat arenas (index, dense registers, histograms, packed
+//! sparse pairs), then lands the whole file as a handful of large
+//! sequential writes — no per-sketch framing, so the reader can map it
+//! back without per-sketch deserialization.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::DegreeSketch;
+use crate::util::crc32::Crc32;
+
+use super::layout::{
+    align_up, encode_dense_slot, encode_sparse_slot, Header, RankSection,
+    HEADER_LEN, MAX_SPARSE_OFF, SECTION_LEN,
+};
+
+/// Summary of a written snapshot (also printed by `snapshot create`).
+#[derive(Debug, Clone, Copy)]
+pub struct SnapshotStats {
+    pub file_len: u64,
+    pub vertices: u64,
+    pub dense_sketches: u64,
+    pub sparse_pairs: u64,
+}
+
+struct RankBuf {
+    ids: Vec<u8>,
+    slots: Vec<u8>,
+    regs: Vec<u8>,
+    hists: Vec<u8>,
+    pairs: Vec<u8>,
+    vertex_count: u64,
+    dense_count: u64,
+    sparse_pairs: u64,
+}
+
+/// Writes [`DegreeSketch`]es in the snapshot format.
+pub struct SnapshotWriter;
+
+impl SnapshotWriter {
+    /// Serialize `ds` to `path` (truncating any existing file).
+    pub fn write(ds: &DegreeSketch, path: &Path) -> Result<SnapshotStats> {
+        let config = ds.config();
+        let bins = config.kmax() as usize + 1;
+
+        // pass 1: flatten each shard into its arenas
+        let mut bufs: Vec<RankBuf> = Vec::with_capacity(ds.num_ranks());
+        for (rank, shard) in ds.shards().iter().enumerate() {
+            let mut b = RankBuf {
+                ids: Vec::with_capacity(shard.len() * 8),
+                slots: Vec::with_capacity(shard.len() * 8),
+                regs: Vec::new(),
+                hists: Vec::new(),
+                pairs: Vec::new(),
+                vertex_count: shard.len() as u64,
+                dense_count: 0,
+                sparse_pairs: 0,
+            };
+            for (v, h) in shard.iter() {
+                b.ids.extend_from_slice(&v.to_le_bytes());
+                let word = match h.sparse_pairs() {
+                    Some(pairs) => {
+                        if pairs.is_empty() {
+                            bail!("rank {rank}: vertex {v} has an empty sketch");
+                        }
+                        if b.sparse_pairs > MAX_SPARSE_OFF {
+                            bail!("rank {rank}: sparse arena exceeds 2^47 pairs");
+                        }
+                        let word = encode_sparse_slot(
+                            b.sparse_pairs,
+                            pairs.len() as u16,
+                        );
+                        for &(j, x) in pairs {
+                            let [lo, hi] = j.to_le_bytes();
+                            b.pairs.extend_from_slice(&[lo, hi, x, 0]);
+                        }
+                        b.sparse_pairs += pairs.len() as u64;
+                        word
+                    }
+                    None => {
+                        if b.dense_count > u32::MAX as u64 {
+                            bail!("rank {rank}: more than 2^32 dense sketches");
+                        }
+                        let regs = h.dense_registers().expect("dense sketch");
+                        let hist = h.dense_hist().expect("dense sketch");
+                        debug_assert_eq!(hist.len(), bins);
+                        b.regs.extend_from_slice(regs);
+                        for &c in hist {
+                            b.hists.extend_from_slice(&c.to_le_bytes());
+                        }
+                        let word = encode_dense_slot(b.dense_count as u32);
+                        b.dense_count += 1;
+                        word
+                    }
+                };
+                b.slots.extend_from_slice(&word.to_le_bytes());
+            }
+            bufs.push(b);
+        }
+
+        // pass 2: lay out sections and CRC each rank payload
+        let table_end = HEADER_LEN + ds.num_ranks() * SECTION_LEN;
+        let mut pos = table_end;
+        let mut sections = Vec::with_capacity(bufs.len());
+        let mut payloads: Vec<Vec<u8>> = Vec::with_capacity(bufs.len());
+        for b in &bufs {
+            let index_off = align_up(pos);
+            let regs_off = align_up(index_off + b.ids.len() + b.slots.len());
+            let hists_off = align_up(regs_off + b.regs.len());
+            let pairs_off = align_up(hists_off + b.hists.len());
+            let pairs_end = pairs_off + b.pairs.len();
+
+            let mut payload =
+                Vec::with_capacity(pairs_end - index_off);
+            let pad_to = |payload: &mut Vec<u8>, target: usize| {
+                payload.resize(target - index_off, 0);
+            };
+            payload.extend_from_slice(&b.ids);
+            payload.extend_from_slice(&b.slots);
+            pad_to(&mut payload, regs_off);
+            payload.extend_from_slice(&b.regs);
+            pad_to(&mut payload, hists_off);
+            payload.extend_from_slice(&b.hists);
+            pad_to(&mut payload, pairs_off);
+            payload.extend_from_slice(&b.pairs);
+            let mut crc = Crc32::new();
+            crc.update(&payload);
+
+            sections.push(RankSection {
+                vertex_count: b.vertex_count,
+                dense_count: b.dense_count,
+                sparse_pairs: b.sparse_pairs,
+                index_off: index_off as u64,
+                regs_off: regs_off as u64,
+                hists_off: hists_off as u64,
+                pairs_off: pairs_off as u64,
+                payload_crc: crc.finish(),
+            });
+            payloads.push(payload);
+            pos = pairs_end;
+        }
+        let file_len = pos as u64;
+
+        let header = Header {
+            p: config.p(),
+            partitioner: ds.partitioner(),
+            ranks: ds.num_ranks() as u32,
+            hash_seed: config.hasher().seed(),
+            total_vertices: ds.num_vertices() as u64,
+            file_len,
+        };
+        // meta CRC covers header bytes [16, 64) plus the section table
+        let provisional = header.encode(0);
+        let mut meta = Crc32::new();
+        meta.update(&provisional[16..]);
+        let table: Vec<[u8; SECTION_LEN]> =
+            sections.iter().map(|s| s.encode()).collect();
+        for t in &table {
+            meta.update(t);
+        }
+        let header_bytes = header.encode(meta.finish());
+
+        // pass 3: sequential write — header, table, rank payloads
+        let f = File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::with_capacity(1 << 20, f);
+        w.write_all(&header_bytes)?;
+        for t in &table {
+            w.write_all(t)?;
+        }
+        let mut written = table_end;
+        for (s, payload) in sections.iter().zip(&payloads) {
+            let gap = s.index_off as usize - written;
+            w.write_all(&vec![0u8; gap])?;
+            w.write_all(payload)?;
+            written = s.index_off as usize + payload.len();
+        }
+        debug_assert_eq!(written as u64, file_len);
+        w.flush()?;
+
+        Ok(SnapshotStats {
+            file_len,
+            vertices: header.total_vertices,
+            dense_sketches: sections.iter().map(|s| s.dense_count).sum(),
+            sparse_pairs: sections.iter().map(|s| s.sparse_pairs).sum(),
+        })
+    }
+}

@@ -1,4 +1,6 @@
-//! Small shared utilities: the mini property-test runner and stats helpers.
+//! Small shared utilities: the mini property-test runner, stats helpers,
+//! and the CRC-32 used by the snapshot format.
 
+pub mod crc32;
 pub mod prop;
 pub mod stats;

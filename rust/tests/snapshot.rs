@@ -1,0 +1,315 @@
+//! Snapshot subsystem integration tests: mapped-vs-heap query parity
+//! (bit-identical, on both comm backends and both byte sources) and
+//! robustness of `open` against truncation and corruption.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use degreesketch::comm::Backend;
+use degreesketch::coordinator::sketch::{
+    accumulate_stream, AccumulateOptions, DegreeSketch,
+};
+use degreesketch::coordinator::{server::QueryServer, QueryEngine};
+use degreesketch::graph::gen::{karate, GraphSpec};
+use degreesketch::graph::stream::MemoryStream;
+use degreesketch::hll::HllConfig;
+use degreesketch::snapshot::{MappedSnapshot, SnapshotMode};
+use degreesketch::util::prop::Cases;
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ds_snap_test_{name}"))
+}
+
+fn accumulate(
+    edges: &[(u64, u64)],
+    ranks: usize,
+    p: u8,
+    backend: Backend,
+) -> DegreeSketch {
+    accumulate_stream(
+        &MemoryStream::new(edges.to_vec()),
+        ranks,
+        HllConfig::new(p, 0x5A4D),
+        AccumulateOptions {
+            backend,
+            ..Default::default()
+        },
+    )
+}
+
+/// Assert every query class answers bit-identically on two engines.
+fn assert_query_parity(
+    heap: &QueryEngine,
+    other: &QueryEngine,
+    vertices: &[u64],
+    label: &str,
+) {
+    assert_eq!(heap.num_vertices(), other.num_vertices(), "{label}");
+    assert_eq!(heap.num_ranks(), other.num_ranks(), "{label}");
+    assert_eq!(
+        heap.num_dense_sketches(),
+        other.num_dense_sketches(),
+        "{label}"
+    );
+    for &v in vertices {
+        assert_eq!(
+            heap.degree(v).map(f64::to_bits),
+            other.degree(v).map(f64::to_bits),
+            "{label}: DEG {v}"
+        );
+    }
+    for pair in vertices.windows(2) {
+        let (x, y) = (pair[0], pair[1]);
+        let a = heap.intersection(x, y);
+        let b = other.intersection(x, y);
+        match (a, b) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(
+                    a.intersection.to_bits(),
+                    b.intersection.to_bits(),
+                    "{label}: TRI {x} {y}"
+                );
+                assert_eq!(
+                    a.union.to_bits(),
+                    b.union.to_bits(),
+                    "{label}: TRI union {x} {y}"
+                );
+                assert_eq!(a.domination, b.domination, "{label}: dom {x} {y}");
+                assert_eq!(
+                    heap.jaccard(x, y).map(f64::to_bits),
+                    other.jaccard(x, y).map(f64::to_bits),
+                    "{label}: JACCARD {x} {y}"
+                );
+            }
+            (a, b) => panic!("{label}: TRI {x} {y} mismatch {a:?} vs {b:?}"),
+        }
+    }
+    for triple in vertices.chunks(3) {
+        assert_eq!(
+            heap.union_cardinality(triple).map(f64::to_bits),
+            other.union_cardinality(triple).map(f64::to_bits),
+            "{label}: UNION {triple:?}"
+        );
+    }
+}
+
+#[test]
+fn mapped_engine_matches_heap_engine_on_random_graphs() {
+    // the acceptance property: a mapped engine answers DEG / TRI /
+    // JACCARD / UNION bit-identically to the heap engine, for sketches
+    // accumulated on both comm backends, served from both byte sources
+    Cases::new("snapshot_parity", 6).run(|rng| {
+        let n = 30 + rng.next_below(120);
+        let m = 2 * n + rng.next_below(4 * n);
+        let spec = format!("er:{n}:{m}");
+        let edges = GraphSpec::parse(&spec).unwrap().generate(rng.next_u64());
+        let p = [6u8, 8, 12][rng.next_below(3) as usize]; // p=6 saturates
+        let ranks = 1 + rng.next_below(5) as usize;
+        let vertices: Vec<u64> = (0..n + 2).collect();
+
+        for backend in [Backend::Sequential, Backend::Threaded] {
+            let ds = accumulate(&edges, ranks, p, backend);
+            let heap = QueryEngine::new(ds);
+            let path = tmp_path(&format!("parity_{n}_{m}_{p}_{backend:?}"));
+            let _ = std::fs::remove_file(&path);
+            heap.save_snapshot(&path).unwrap();
+
+            for mode in [SnapshotMode::Auto, SnapshotMode::Heap] {
+                let mapped = QueryEngine::from_snapshot(
+                    MappedSnapshot::open_with(&path, mode).unwrap(),
+                );
+                assert_query_parity(
+                    &heap,
+                    &mapped,
+                    &vertices,
+                    &format!("{spec} p={p} {backend:?} {mode:?}"),
+                );
+            }
+            std::fs::remove_file(&path).unwrap();
+        }
+    });
+}
+
+#[test]
+fn legacy_and_snapshot_loads_agree() {
+    let edges = GraphSpec::parse("ba:300:4").unwrap().generate(9);
+    let ds = accumulate(&edges, 3, 10, Backend::Sequential);
+    let engine = QueryEngine::new(ds);
+
+    let dir = tmp_path("legacy_dir");
+    let snap = tmp_path("legacy_migrated.snap");
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_file(&snap);
+    engine.save(&dir).unwrap();
+    QueryEngine::migrate_legacy(&dir, &snap).unwrap();
+
+    let from_legacy = QueryEngine::load(&dir).unwrap();
+    let from_snap = QueryEngine::load(&snap).unwrap();
+    assert_eq!(from_legacy.backing_mode(), "heap");
+    assert!(from_snap.sketch_data().is_none(), "snapshot load must map");
+    let vertices: Vec<u64> = (0..40).collect();
+    assert_query_parity(&from_legacy, &from_snap, &vertices, "migrated");
+    std::fs::remove_dir_all(&dir).unwrap();
+    std::fs::remove_file(&snap).unwrap();
+}
+
+/// Build a small valid snapshot and return its bytes. A 200-leaf star at
+/// p = 6 puts a saturated (dense) hub *and* sparse leaves on rank 0, so
+/// the corruption tests below always have both representations to attack.
+fn valid_snapshot(name: &str) -> (PathBuf, Vec<u8>) {
+    let edges: Vec<(u64, u64)> = (1..=200u64).map(|v| (0, v)).collect();
+    let ds = accumulate(&edges, 2, 6, Backend::Sequential);
+    let hub = ds.sketch(0).expect("hub sketch");
+    assert!(hub.is_dense(), "star hub must saturate at p=6");
+    let path = tmp_path(name);
+    let _ = std::fs::remove_file(&path);
+    QueryEngine::new(ds).save_snapshot(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    (path, bytes)
+}
+
+fn open_mutated(
+    path: &PathBuf,
+    bytes: &[u8],
+    mutate: impl FnOnce(&mut Vec<u8>),
+) -> anyhow::Result<MappedSnapshot> {
+    let mut copy = bytes.to_vec();
+    mutate(&mut copy);
+    std::fs::write(path, &copy).unwrap();
+    MappedSnapshot::open(path)
+}
+
+#[test]
+fn open_rejects_truncation_and_corruption() {
+    let (path, bytes) = valid_snapshot("corrupt.snap");
+    // pristine copy loads
+    assert!(MappedSnapshot::open(&path).is_ok());
+
+    // truncations at every interesting boundary fail cleanly
+    for cut in [0, 1, 8, 63, 64, 100, bytes.len() / 2, bytes.len() - 1] {
+        let err = open_mutated(&path, &bytes, |b| b.truncate(cut));
+        assert!(err.is_err(), "truncation at {cut} must fail");
+    }
+    // appended garbage is also a length mismatch
+    assert!(open_mutated(&path, &bytes, |b| b.push(0)).is_err());
+
+    // bad magic
+    assert!(open_mutated(&path, &bytes, |b| b[0] = b'X').is_err());
+    // unsupported version
+    assert!(open_mutated(&path, &bytes, |b| b[8] = 99).is_err());
+    // p out of range (bytes[16] is p)
+    assert!(open_mutated(&path, &bytes, |b| b[16] = 2).is_err());
+    // mismatched p within range (6 → 12): meta CRC catches the tamper
+    assert!(open_mutated(&path, &bytes, |b| b[16] ^= 0b1010).is_err());
+    // mismatched hash seed: meta CRC catches the tamper
+    assert!(open_mutated(&path, &bytes, |b| b[24] ^= 0xFF).is_err());
+    // corrupted CRC field itself
+    assert!(open_mutated(&path, &bytes, |b| b[12] ^= 0xFF).is_err());
+    // corrupted section table (vertex count of rank 0)
+    assert!(open_mutated(&path, &bytes, |b| b[64] ^= 0xFF).is_err());
+
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn open_rejects_unsorted_slot_index() {
+    let (path, bytes) = valid_snapshot("unsorted.snap");
+    // rank 0's index offset lives at table + 24; swap its first two ids.
+    // the meta CRC does not cover payloads, so this exercises the index
+    // scan itself
+    let index_off =
+        u64::from_le_bytes(bytes[88..96].try_into().unwrap()) as usize;
+    let vc = u64::from_le_bytes(bytes[64..72].try_into().unwrap()) as usize;
+    assert!(vc >= 2, "karate shard should hold several vertices");
+    let err = open_mutated(&path, &bytes, |b| {
+        let (a, bb) = (index_off, index_off + 8);
+        for k in 0..8 {
+            b.swap(a + k, bb + k);
+        }
+    });
+    let msg = format!("{:#}", err.err().expect("unsorted index must fail"));
+    assert!(
+        msg.contains("strictly increasing") || msg.contains("wrong rank"),
+        "unexpected error: {msg}"
+    );
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn open_rejects_bad_sparse_pairs_and_verify_catches_arena_damage() {
+    let (path, bytes) = valid_snapshot("payload.snap");
+    let sec = |field: usize| -> usize {
+        u64::from_le_bytes(
+            bytes[64 + field..64 + field + 8].try_into().unwrap(),
+        ) as usize
+    };
+    let (sparse_pairs, regs_off, pairs_off) = (sec(16), sec(32), sec(48));
+    let dense_count = sec(8);
+
+    if sparse_pairs > 0 {
+        // out-of-range register value in a sparse pair record
+        assert!(
+            open_mutated(&path, &bytes, |b| b[pairs_off + 2] = 0xFF).is_err(),
+            "bad sparse value must fail open"
+        );
+        // nonzero padding byte
+        assert!(
+            open_mutated(&path, &bytes, |b| b[pairs_off + 3] = 1).is_err(),
+            "nonzero pair padding must fail open"
+        );
+    }
+    if dense_count > 0 {
+        // register-arena damage is not scanned at open (O(1) promise)…
+        let snap = open_mutated(&path, &bytes, |b| b[regs_off] ^= 0x3F);
+        let snap = snap.expect("arena damage is caught by verify, not open");
+        // …but full verification flags it
+        assert!(snap.verify().is_err(), "verify must catch arena damage");
+    }
+    // and verify passes on the pristine file
+    std::fs::write(&path, &bytes).unwrap();
+    MappedSnapshot::open(&path).unwrap().verify().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn snapshot_server_round_trip() {
+    let ds = accumulate(&karate::edges(), 2, 12, Backend::Sequential);
+    let heap = Arc::new(QueryEngine::new(ds));
+    let path = tmp_path("server.snap");
+    let _ = std::fs::remove_file(&path);
+    heap.save_snapshot(&path).unwrap();
+    let mapped = Arc::new(QueryEngine::load(&path).unwrap());
+    let expected_mode = format!("mode={}", mapped.backing_mode());
+
+    let hs = QueryServer::start(Arc::clone(&heap), "127.0.0.1:0").unwrap();
+    let ms = QueryServer::start(Arc::clone(&mapped), "127.0.0.1:0").unwrap();
+
+    let ask = |addr: std::net::SocketAddr, lines: &[&str]| -> Vec<String> {
+        use std::io::{BufRead, BufReader, Write};
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        lines
+            .iter()
+            .map(|l| {
+                writeln!(w, "{l}").unwrap();
+                let mut resp = String::new();
+                r.read_line(&mut resp).unwrap();
+                resp.trim().to_string()
+            })
+            .collect()
+    };
+
+    let queries =
+        ["DEG 33", "TRI 0 33", "JACCARD 0 1", "UNION 0 33 5", "DEG 999"];
+    let a = ask(hs.addr(), &queries);
+    let b = ask(ms.addr(), &queries);
+    assert_eq!(a, b, "snapshot-served answers must match heap-served");
+
+    let stats = ask(ms.addr(), &["STATS"]);
+    assert!(stats[0].contains(&expected_mode), "{stats:?}");
+    hs.stop();
+    ms.stop();
+    std::fs::remove_file(&path).unwrap();
+}
