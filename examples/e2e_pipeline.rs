@@ -89,6 +89,32 @@ fn run_graph(spec_str: &str) -> anyhow::Result<(usize, f64)> {
         ds.memory_bytes() as f64 / 1024.0
     );
 
+    // ---- distributed-memory leg: the same epoch on forked worker
+    // processes over Unix-socket frames must agree sketch-for-sketch
+    let t0 = Instant::now();
+    let ds_proc = accumulate_stream(
+        &stream,
+        RANKS,
+        HllConfig::new(8, 0xE2E),
+        AccumulateOptions {
+            backend: Backend::Process,
+            ..Default::default()
+        },
+    );
+    let proc_s = t0.elapsed().as_secs_f64();
+    let mismatches = ds
+        .iter()
+        .filter(|&(v, h)| ds_proc.sketch(v) != Some(h))
+        .count();
+    assert_eq!(mismatches, 0, "process backend must match threaded exactly");
+    println!(
+        "accumulate (process backend, {RANKS} workers): {:.3}s, \
+         {} wire frames / {:.1} KiB shipped, sketches bit-identical",
+        proc_s,
+        ds_proc.accumulation_stats.flushes,
+        ds_proc.accumulation_stats.bytes as f64 / 1024.0
+    );
+
     // ---- Algorithm 2: neighborhoods vs exact BFS -------------------
     let shards = stream.shard(RANKS);
     let max_t = 5;

@@ -95,5 +95,32 @@ fn main() -> anyhow::Result<()> {
             g / csr.num_vertices() as f64
         );
     }
+
+    // Distributed-memory cross-check: the same accumulation on forked
+    // worker processes (messages ride Unix-socket frames instead of
+    // in-memory channels) must produce bit-identical sketches.
+    let ds_proc = accumulate_stream(
+        &stream,
+        ranks,
+        HllConfig::new(8, 0x50C1A1),
+        AccumulateOptions {
+            backend: Backend::Process,
+            ..Default::default()
+        },
+    );
+    let mismatches = ds
+        .iter()
+        .filter(|&(v, h)| ds_proc.sketch(v) != Some(h))
+        .count();
+    println!(
+        "\nprocess backend ({} worker processes): {} profiles, \
+         {} sketch mismatches vs threaded, {} frames / {} bytes on the wire",
+        ranks,
+        ds_proc.num_vertices(),
+        mismatches,
+        ds_proc.accumulation_stats.flushes,
+        ds_proc.accumulation_stats.bytes
+    );
+    assert_eq!(mismatches, 0, "backends must agree exactly");
     Ok(())
 }

@@ -421,6 +421,128 @@ fn main() {
         let _ = std::fs::remove_file(&snap);
     }
 
+    // comm plane, layer 1: wire-codec throughput for the heaviest frame
+    // shape (FAN messages carrying dense p=8 sketches) and the cheapest
+    // (16-byte accumulation edges)
+    {
+        use degreesketch::comm::codec::{
+            decode_frame, decode_msgs, encode_msg_frame,
+        };
+        use degreesketch::coordinator::anf::AnfMsg;
+
+        let n_msgs = 1_000u64;
+        let edge_msgs: Vec<(u64, u64)> = (0..n_msgs)
+            .map(|i| (i, i.wrapping_mul(0x9E37_79B9)))
+            .collect();
+        let mut sketch = Hll::new(HllConfig::new(8, 0xFA4));
+        for i in 0..5_000u64 {
+            sketch.insert(i); // dense regime
+        }
+        let fan_msgs: Vec<AnfMsg> = (0..n_msgs)
+            .map(|i| AnfMsg::Fan(sketch.clone(), vec![i, i + 1, i + 2]))
+            .collect();
+
+        let (mut scratch, mut wire) = (Vec::new(), Vec::new());
+        let iters = 200u64;
+        let r = bench.run(|| {
+            let mut total = 0usize;
+            for _ in 0..iters {
+                wire.clear();
+                encode_msg_frame(0, 1, &edge_msgs, &mut scratch, &mut wire);
+                total += wire.len();
+            }
+            total
+        });
+        row(
+            &mut table,
+            &mut report,
+            "comm_codec encode edge frame msgs",
+            iters * n_msgs,
+            &r,
+        );
+        let r = bench.run(|| {
+            let mut total = 0u64;
+            for _ in 0..iters {
+                let mut input = wire.as_slice();
+                let frame = decode_frame(&mut input).unwrap();
+                let msgs: Vec<(u64, u64)> = decode_msgs(&frame).unwrap();
+                total += msgs.len() as u64;
+            }
+            total
+        });
+        row(
+            &mut table,
+            &mut report,
+            "comm_codec decode edge frame msgs",
+            iters * n_msgs,
+            &r,
+        );
+
+        let fan_iters = 4u64;
+        let r = bench.run(|| {
+            let mut total = 0usize;
+            for _ in 0..fan_iters {
+                wire.clear();
+                encode_msg_frame(0, 1, &fan_msgs, &mut scratch, &mut wire);
+                total += wire.len();
+            }
+            total
+        });
+        row(
+            &mut table,
+            &mut report,
+            "comm_codec encode fan(p8 dense) frame msgs",
+            fan_iters * n_msgs,
+            &r,
+        );
+        let r = bench.run(|| {
+            let mut total = 0u64;
+            for _ in 0..fan_iters {
+                let mut input = wire.as_slice();
+                let frame = decode_frame(&mut input).unwrap();
+                let msgs: Vec<AnfMsg> = decode_msgs(&frame).unwrap();
+                total += msgs.len() as u64;
+            }
+            total
+        });
+        row(
+            &mut table,
+            &mut report,
+            "comm_codec decode fan(p8 dense) frame msgs",
+            fan_iters * n_msgs,
+            &r,
+        );
+    }
+
+    // comm plane, layer 2: one full Algorithm-1 epoch per backend —
+    // in-process queues vs threads+channels vs forked processes over
+    // Unix-socket frames (fork + serialize + state return included)
+    {
+        let edges = GraphSpec::parse("rmat:13:8").unwrap().generate(7);
+        let m = edges.len() as u64;
+        let stream = MemoryStream::new(edges);
+        let cfg = HllConfig::new(8, 0xACC);
+        let heavy = Bench::new(1, 3);
+        for backend in
+            [Backend::Sequential, Backend::Threaded, Backend::Process]
+        {
+            let opts = AccumulateOptions {
+                backend,
+                ..Default::default()
+            };
+            let r = heavy.run(|| {
+                accumulate(stream.shard(4), cfg, opts).num_vertices()
+            });
+            row(
+                &mut table,
+                &mut report,
+                &format!("comm_backend_epoch accumulate x4 {}", backend.name()),
+                m,
+                &r,
+            );
+        }
+    }
+
     table.print();
     // cargo runs bench binaries with cwd = package root (rust/), so the
     // repo-root tracked artifact is one level up

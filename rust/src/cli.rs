@@ -20,7 +20,7 @@ pub struct Args {
 /// Flags that take no value.
 const BOOL_FLAGS: &[&str] = &[
     "exact", "metrics", "help", "discard-dominated", "write", "quiet",
-    "verify", "self-check",
+    "verify", "self-check", "fixed-flush",
 ];
 
 impl Args {

@@ -1,42 +1,111 @@
-//! A YGM-like asynchronous communication substrate, simulated in-process.
+//! A YGM-like asynchronous communication substrate, in three layers.
 //!
 //! The paper (§2) assumes each processor `P` has buffered send/receive
 //! queues `S[P]`, `R[P]` and alternates between **Send**, **Receive** and
 //! **Computation contexts**, with YGM (Priest et al. 2019) managing
-//! buffering and context switching opaquely. This module provides the same
-//! surface for `|P|` *logical ranks* inside one process:
+//! buffering and context switching opaquely. This module provides that
+//! surface for `|P|` logical ranks as an explicit three-layer stack:
+//!
+//! 1. **Codec** ([`codec`]) — [`WireMsg`] gives every coordinator message
+//!    a little-endian wire format; batches travel in CRC'd,
+//!    length-prefixed frames whose header carries the channel's
+//!    cumulative message counter (the termination token).
+//! 2. **Transport** ([`transport`], plus the three schedulers) — how a
+//!    flushed batch reaches its destination rank:
+//!    [`run_sequential`] moves it between in-process queues
+//!    (deterministic round-robin, the semantic reference for everything
+//!    else); [`run_threaded`] sends it over an in-memory channel to one
+//!    OS thread per rank; [`run_process`] encodes it onto a Unix-domain
+//!    socket between **forked worker processes** — true
+//!    distributed-memory execution, one writer/reader per peer.
+//! 3. **Policy** ([`FlushPolicy`], in [`outbox`]) — when a batch flushes:
+//!    per-destination thresholds that grow under pressure and shrink when
+//!    drains lag, or pin fixed for deterministic benches.
+//!
+//! The per-actor surface is unchanged from the paper's listings:
 //!
 //! * [`Actor`] — one per rank: a `seed` computation context (reads the
 //!   rank's substream σ_P and pushes initial messages), an `on_message`
 //!   receive context, and an `on_idle` hook invoked at global quiescence
-//!   (used e.g. to flush partially filled PJRT batches).
+//!   (used e.g. to flush partially filled FAN/PJRT batches).
+//! * [`WireActor`] — an [`Actor`] whose post-epoch state can cross a
+//!   process boundary; required by the process backend, which runs the
+//!   epoch in forked workers and ships final states back to the driver.
 //! * [`Outbox`] — per-destination buffered sends (YGM's send queues).
-//! * Two schedulers with identical semantics:
-//!   [`run_sequential`] — deterministic round-robin used by tests and
-//!   accuracy experiments; [`run_threaded`] — one OS thread per rank with
-//!   quiescence detection, used by the scaling figures (4–6).
+//!
+//! All three schedulers implement identical epoch semantics
+//! (seed → message storm → idle rounds → quiescence); merges commute, so
+//! results agree across backends — the sequential backend stays
+//! bit-deterministic and anchors every parity test.
 //!
 //! REDUCE (global sums / top-k heap merges) happens **between** runs, on
 //! the actor states the schedulers hand back — matching the paper's
 //! "REDUCE operations occur between passes over σ".
 
+pub mod codec;
 mod outbox;
+mod process;
 mod sequential;
 mod threaded;
+pub(crate) mod transport;
 
-pub use outbox::Outbox;
+pub use codec::{WireError, WireMsg};
+pub use outbox::{FlushPolicy, Outbox};
+pub use process::run_process;
 pub use sequential::run_sequential;
 pub use threaded::run_threaded;
 
-/// Statistics of one communication epoch.
+/// Per-destination-rank traffic counters (inbound view: what arrived at
+/// that rank), letting benches see ownership skew.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RankStats {
+    /// Application messages delivered to this rank.
+    pub messages: u64,
+    /// Batch payload bytes shipped to this rank (encoded frame bytes on
+    /// the process backend; a `size_of::<Msg>()`-based estimate on the
+    /// in-memory backends, which never serialize).
+    pub bytes: u64,
+    /// Batches (channel sends / frames) delivered to this rank.
+    pub flushes: u64,
+}
+
+/// Statistics of one communication epoch.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct CommStats {
+    /// Which scheduler ran the epoch.
+    pub mode: Backend,
     /// Application messages delivered.
     pub messages: u64,
-    /// Number of batch flushes (channel sends / queue transfers).
+    /// Number of batch flushes (channel sends / queue transfers / frames).
     pub flushes: u64,
+    /// Batch payload bytes moved (see [`RankStats::bytes`] for units).
+    pub bytes: u64,
     /// Global idle rounds executed before quiescence.
     pub idle_rounds: u64,
+    /// Per-destination-rank breakdown (indexed by rank).
+    pub per_rank: Vec<RankStats>,
+}
+
+impl CommStats {
+    pub(crate) fn new(mode: Backend, ranks: usize) -> Self {
+        Self {
+            mode,
+            per_rank: vec![RankStats::default(); ranks],
+            ..Self::default()
+        }
+    }
+}
+
+/// Best-effort stringification of a caught panic payload (shared by the
+/// threaded and process backends' panic-propagation paths).
+pub(crate) fn describe_panic(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// A logical processor: per-rank state plus the three contexts of the
@@ -55,14 +124,32 @@ pub trait Actor: Send {
     fn on_idle(&mut self, _out: &mut Outbox<Self::Msg>) {}
 }
 
+/// An [`Actor`] whose post-epoch state has a wire format. The process
+/// backend runs each rank in a forked worker; at Stop the worker calls
+/// `write_state` and the driver applies the bytes to its own (pre-epoch)
+/// copy of the actor with `read_state` — so only the *result* fields
+/// need encoding, inputs are inherited through the fork.
+pub trait WireActor: Actor {
+    /// Serialize the fields an epoch mutates (stores, heaps, counters).
+    fn write_state(&self, buf: &mut Vec<u8>);
+
+    /// Overwrite those fields from `input` (produced by `write_state` on
+    /// the worker's copy of `self`, so decode context is available).
+    fn read_state(&mut self, input: &mut &[u8]) -> Result<(), WireError>;
+}
+
 /// Scheduler selection for an epoch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Backend {
     /// Deterministic single-threaded round-robin.
     #[default]
     Sequential,
-    /// One OS thread per rank.
+    /// One OS thread per rank, in-memory channels.
     Threaded,
+    /// One forked worker process per rank, Unix-domain sockets — the
+    /// distributed-memory mode (requires [`WireActor`]s; see
+    /// [`run_epoch_wire`]).
+    Process,
 }
 
 impl Backend {
@@ -70,25 +157,73 @@ impl Backend {
         match s {
             "seq" | "sequential" => Some(Self::Sequential),
             "threads" | "threaded" => Some(Self::Threaded),
+            "proc" | "procs" | "process" => Some(Self::Process),
             _ => None,
+        }
+    }
+
+    /// Stable lowercase name (config values, server `STATS` output).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sequential => "sequential",
+            Self::Threaded => "threaded",
+            Self::Process => "process",
         }
     }
 }
 
 /// Run one epoch (seed → message storm → idle rounds → quiescence) on the
-/// chosen backend. Actors are mutated in place; stats are returned.
+/// chosen backend with the default flush policy. Actors are mutated in
+/// place; stats are returned.
+///
+/// Panics on [`Backend::Process`]: crossing a process boundary needs
+/// [`WireActor`] — use [`run_epoch_wire`].
 pub fn run_epoch<A: Actor + 'static>(
     backend: Backend,
     actors: &mut Vec<A>,
+) -> CommStats {
+    run_epoch_with(backend, actors, FlushPolicy::default())
+}
+
+/// [`run_epoch`] with an explicit flush policy (in-memory backends only).
+pub fn run_epoch_with<A: Actor + 'static>(
+    backend: Backend,
+    actors: &mut Vec<A>,
+    policy: FlushPolicy,
 ) -> CommStats {
     match backend {
         Backend::Sequential => run_sequential(actors),
         Backend::Threaded => {
             let owned = std::mem::take(actors);
-            let (mut back, stats) = run_threaded(owned);
+            let (mut back, stats) = run_threaded(owned, policy);
             std::mem::swap(actors, &mut back);
             stats
         }
+        Backend::Process => panic!(
+            "the process backend needs wire-capable actors: \
+             call run_epoch_wire with a WireActor"
+        ),
+    }
+}
+
+/// Run one epoch on any backend, including [`Backend::Process`].
+pub fn run_epoch_wire<A>(
+    backend: Backend,
+    actors: &mut Vec<A>,
+    policy: FlushPolicy,
+) -> CommStats
+where
+    A: WireActor + 'static,
+    A::Msg: WireMsg,
+{
+    match backend {
+        Backend::Process => {
+            let owned = std::mem::take(actors);
+            let (mut back, stats) = run_process(owned, policy);
+            std::mem::swap(actors, &mut back);
+            stats
+        }
+        other => run_epoch_with(other, actors, policy),
     }
 }
 
@@ -138,8 +273,12 @@ mod tests {
             let mut actors = ring(5, 100);
             let stats = run_epoch(backend, &mut actors);
             assert_eq!(stats.messages, 100, "{backend:?}");
+            assert_eq!(stats.mode, backend);
             let total: u64 = actors.iter().map(|a| a.received).sum();
             assert_eq!(total, 100, "{backend:?}");
+            // per-rank deliveries must sum to the total
+            let per: u64 = stats.per_rank.iter().map(|r| r.messages).sum();
+            assert_eq!(per, stats.messages, "{backend:?}");
         }
     }
 
@@ -240,5 +379,44 @@ mod tests {
             actors.into_iter().map(|a| a.got).collect::<Vec<_>>()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn flood_completes_under_tiny_adaptive_thresholds() {
+        // an aggressive policy (eager flush after 2 messages, growth and
+        // shrink both active) must not change delivery semantics
+        let policy = FlushPolicy {
+            threshold: 2,
+            adaptive: true,
+            min: 1,
+            max: 8,
+        };
+        let mut actors: Vec<Flood> = (0..4)
+            .map(|rank| Flood {
+                rank,
+                ranks: 4,
+                got: Vec::new(),
+            })
+            .collect();
+        let stats = run_epoch_with(Backend::Threaded, &mut actors, policy);
+        assert_eq!(stats.messages, 48);
+        let total: usize = actors.iter().map(|a| a.got.len()).sum();
+        assert_eq!(total, 48);
+    }
+
+    #[test]
+    fn backend_parse_and_names() {
+        for (s, b) in [
+            ("sequential", Backend::Sequential),
+            ("seq", Backend::Sequential),
+            ("threaded", Backend::Threaded),
+            ("threads", Backend::Threaded),
+            ("process", Backend::Process),
+            ("proc", Backend::Process),
+        ] {
+            assert_eq!(Backend::parse(s), Some(b));
+        }
+        assert_eq!(Backend::parse("mpi"), None);
+        assert_eq!(Backend::Process.name(), "process");
     }
 }

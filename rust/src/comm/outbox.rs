@@ -1,23 +1,102 @@
-//! Per-destination buffered send queues — the `S[P]` of the paper.
+//! Per-destination buffered send queues — the `S[P]` of the paper — plus
+//! **layer 3 of the comm plane: the flush policy**.
+//!
+//! Each destination has its own flush threshold, seeded from a
+//! [`FlushPolicy`] and (when `adaptive` is on) steered per destination by
+//! observed traffic:
+//!
+//! * **grow under pressure** — every time a destination's buffer crosses
+//!   its threshold between drains (an *eager* flush), the threshold
+//!   doubles (capped at `policy.max`): heavy lanes amortize framing and
+//!   channel overhead over bigger batches;
+//! * **shrink when drains lag** — when a *forced* drain (end of context,
+//!   idle round, scheduler timeout) finds a buffer sitting below half its
+//!   threshold, the threshold halves (floored at `policy.min`): the lane
+//!   never reaches its threshold, so waiting for it only adds latency.
+//!
+//! Thresholds only move at drain points, when the affected buffer is
+//! empty, so the `len == threshold` crossing detection in [`Outbox::send`]
+//! stays exact. Pin the policy (`adaptive = false`, or
+//! [`FlushPolicy::pinned`]) for deterministic flush counts in benches.
+
+/// Flush-threshold policy for one epoch (layer 3 of the comm plane).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlushPolicy {
+    /// Initial per-destination threshold (messages buffered before an
+    /// eager flush).
+    pub threshold: usize,
+    /// Adapt thresholds per destination (see module docs). When `false`
+    /// the threshold is pinned — the deterministic-bench escape hatch.
+    pub adaptive: bool,
+    /// Lower bound an adaptive threshold can shrink to.
+    pub min: usize,
+    /// Upper bound an adaptive threshold can grow to.
+    pub max: usize,
+}
+
+impl Default for FlushPolicy {
+    fn default() -> Self {
+        Self {
+            threshold: 1024,
+            adaptive: true,
+            min: 64,
+            max: 16384,
+        }
+    }
+}
+
+impl FlushPolicy {
+    /// A fixed threshold: no adaptation, ever.
+    pub fn pinned(threshold: usize) -> Self {
+        Self {
+            threshold,
+            adaptive: false,
+            min: threshold,
+            max: threshold,
+        }
+    }
+
+    /// Start at `threshold` with adaptation on (default bounds, clamped
+    /// so `min <= threshold <= max`).
+    pub fn adaptive(threshold: usize) -> Self {
+        let d = Self::default();
+        Self {
+            threshold,
+            adaptive: true,
+            min: d.min.min(threshold),
+            max: d.max.max(threshold),
+        }
+    }
+
+    /// The sequential scheduler's policy: buffers are drained after every
+    /// context, so eager flushing (and adaptation) is pointless — and
+    /// keeping it off keeps the backend bit-deterministic.
+    pub(crate) fn unbounded() -> Self {
+        Self::pinned(usize::MAX)
+    }
+}
 
 /// Buffered sends from one rank. The scheduler drains it after each
-/// context runs; the threaded backend additionally flushes buffers that
-/// exceed [`Outbox::flush_threshold`] mid-context to bound memory.
+/// context runs; eager backends additionally flush buffers that cross
+/// their per-destination threshold mid-context to bound memory.
 pub struct Outbox<M> {
     bufs: Vec<Vec<M>>,
     sent: u64,
-    flush_threshold: usize,
-    /// Destinations whose buffer crossed the threshold (threaded backend
-    /// drains these eagerly).
+    policy: FlushPolicy,
+    /// Live per-destination thresholds (start at `policy.threshold`).
+    thresholds: Vec<usize>,
+    /// Destinations whose buffer crossed the threshold (eager backends
+    /// drain these mid-context).
     hot: Vec<usize>,
 }
 
 impl<M> Outbox<M> {
-    pub(crate) fn new(ranks: usize, flush_threshold: usize) -> Self {
+    pub(crate) fn new(ranks: usize, policy: FlushPolicy) -> Self {
         Self {
             bufs: (0..ranks).map(|_| Vec::new()).collect(),
             sent: 0,
-            flush_threshold,
+            policy,
+            thresholds: vec![policy.threshold; ranks],
             hot: Vec::new(),
         }
     }
@@ -33,7 +112,7 @@ impl<M> Outbox<M> {
         let buf = &mut self.bufs[to];
         buf.push(msg);
         self.sent += 1;
-        if buf.len() == self.flush_threshold {
+        if buf.len() == self.thresholds[to] {
             self.hot.push(to);
         }
     }
@@ -43,22 +122,45 @@ impl<M> Outbox<M> {
         self.sent
     }
 
+    /// The live flush threshold for `to` (moves when adaptive).
+    pub fn threshold_of(&self, to: usize) -> usize {
+        self.thresholds[to]
+    }
+
     pub(crate) fn take_hot(&mut self) -> Vec<usize> {
         std::mem::take(&mut self.hot)
     }
 
-    pub(crate) fn take_buf(&mut self, to: usize) -> Vec<M> {
-        std::mem::take(&mut self.bufs[to])
+    /// Take `to`'s buffer for an *eager* (threshold-crossing) flush and
+    /// apply the pressure rule: the lane is hot, so grow its threshold.
+    pub(crate) fn take_buf_eager(&mut self, to: usize) -> Vec<M> {
+        let buf = std::mem::take(&mut self.bufs[to]);
+        if self.policy.adaptive && !buf.is_empty() {
+            let t = &mut self.thresholds[to];
+            *t = t.saturating_mul(2).min(self.policy.max);
+        }
+        buf
     }
 
-    /// Drain all buffers as `(destination, batch)` pairs.
+    /// Drain all buffers as `(destination, batch)` pairs — a *forced*
+    /// drain (end of context / idle round / timeout). Lanes that never
+    /// reached half their threshold get it halved: their drains lag their
+    /// sends, so a smaller batch ships sooner next time.
     pub(crate) fn drain_all(&mut self) -> Vec<(usize, Vec<M>)> {
         self.hot.clear();
+        let adaptive = self.policy.adaptive;
+        let min = self.policy.min;
+        let thresholds = &mut self.thresholds;
         self.bufs
             .iter_mut()
             .enumerate()
             .filter(|(_, b)| !b.is_empty())
-            .map(|(to, b)| (to, std::mem::take(b)))
+            .map(|(to, b)| {
+                if adaptive && b.len() < thresholds[to] / 2 {
+                    thresholds[to] = (thresholds[to] / 2).max(min);
+                }
+                (to, std::mem::take(b))
+            })
             .collect()
     }
 
@@ -74,7 +176,7 @@ mod tests {
 
     #[test]
     fn buffers_per_destination() {
-        let mut out: Outbox<u32> = Outbox::new(3, 1024);
+        let mut out: Outbox<u32> = Outbox::new(3, FlushPolicy::default());
         out.send(0, 1);
         out.send(2, 2);
         out.send(2, 3);
@@ -88,11 +190,94 @@ mod tests {
 
     #[test]
     fn hot_marks_threshold_crossing() {
-        let mut out: Outbox<u32> = Outbox::new(2, 3);
+        let mut out: Outbox<u32> = Outbox::new(2, FlushPolicy::pinned(3));
         for i in 0..3 {
             out.send(1, i);
         }
         assert_eq!(out.take_hot(), vec![1]);
-        assert_eq!(out.take_buf(1).len(), 3);
+        assert_eq!(out.take_buf_eager(1).len(), 3);
+        // pinned: no growth
+        assert_eq!(out.threshold_of(1), 3);
+    }
+
+    #[test]
+    fn pressure_grows_only_the_hot_lane() {
+        let policy = FlushPolicy {
+            threshold: 4,
+            adaptive: true,
+            min: 2,
+            max: 64,
+        };
+        let mut out: Outbox<u32> = Outbox::new(3, policy);
+        for round in 0..3 {
+            for i in 0..out.threshold_of(1) {
+                out.send(1, i as u32);
+            }
+            assert_eq!(out.take_hot(), vec![1], "round {round}");
+            out.take_buf_eager(1);
+        }
+        assert_eq!(out.threshold_of(1), 32); // 4 → 8 → 16 → 32
+        assert_eq!(out.threshold_of(0), 4);
+        assert_eq!(out.threshold_of(2), 4);
+    }
+
+    #[test]
+    fn growth_caps_at_policy_max() {
+        let policy = FlushPolicy {
+            threshold: 4,
+            adaptive: true,
+            min: 2,
+            max: 8,
+        };
+        let mut out: Outbox<u32> = Outbox::new(1, policy);
+        for _ in 0..5 {
+            let t = out.threshold_of(0);
+            for i in 0..t {
+                out.send(0, i as u32);
+            }
+            out.take_hot();
+            out.take_buf_eager(0);
+        }
+        assert_eq!(out.threshold_of(0), 8);
+    }
+
+    #[test]
+    fn lagging_drains_shrink_toward_min() {
+        let policy = FlushPolicy {
+            threshold: 16,
+            adaptive: true,
+            min: 4,
+            max: 64,
+        };
+        let mut out: Outbox<u32> = Outbox::new(2, policy);
+        // destination 0 trickles (1 message per forced drain): shrink
+        for _ in 0..4 {
+            out.send(0, 9);
+            out.drain_all();
+        }
+        assert_eq!(out.threshold_of(0), 4); // 16 → 8 → 4 → 4 (floored)
+        // destination 1 drains at >= half threshold: stable
+        for _ in 0..3 {
+            for i in 0..10 {
+                out.send(1, i);
+            }
+            out.drain_all();
+        }
+        assert_eq!(out.threshold_of(1), 16);
+    }
+
+    #[test]
+    fn adaptation_off_pins_thresholds() {
+        let mut out: Outbox<u32> = Outbox::new(1, FlushPolicy::pinned(4));
+        for _ in 0..3 {
+            for i in 0..4 {
+                out.send(0, i);
+            }
+            out.take_hot();
+            out.take_buf_eager(0);
+            out.send(0, 0);
+            out.drain_all();
+        }
+        assert_eq!(out.threshold_of(0), 4);
     }
 }

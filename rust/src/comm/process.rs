@@ -1,0 +1,1061 @@
+//! Process backend: one **forked worker process per rank** over
+//! Unix-domain sockets — the repo's first genuinely distributed-memory
+//! execution mode.
+//!
+//! Topology: a full mesh of `socketpair`s (one writer/reader per peer)
+//! created *before* forking, plus one control socketpair per worker to
+//! the driver (the parent process). Workers inherit their actor — and
+//! every epoch input it holds — through fork's copy-on-write memory;
+//! only the *result* state crosses a process boundary, via
+//! [`WireActor::write_state`] on Stop.
+//!
+//! Message batches travel as CRC'd frames ([`super::codec`]) whose
+//! header token is the channel's **cumulative message count**; each
+//! receiver checks the token against its own per-channel delivery
+//! counter, so a lost or reordered frame is detected immediately, and
+//! the same counters drive termination.
+//!
+//! Termination (the counter-based protocol, two-wave variant): the
+//! driver polls every worker with PROBE frames; each worker replies with
+//! its monotone `(sent, delivered)` totals. When `Σsent == Σdelivered`
+//! for **two consecutive waves with unchanged totals**, there was a real
+//! instant between the waves at which every channel was empty and every
+//! worker idle — no message existed anywhere, so none can ever be sent
+//! again without driver action. The driver then runs a global idle round
+//! (IDLE → `on_idle` → flush → ack), re-probes to quiescence, and stops
+//! once an idle round produces no new sends — the exact epoch semantics
+//! of the sequential and threaded schedulers.
+//!
+//! All sockets on the worker side are non-blocking with explicit pending
+//! read/write buffers: a worker never blocks on a write while a peer is
+//! blocked writing to *it*, which rules out the classic all-to-all
+//! buffer-deadlock.
+//!
+//! Failure containment: a worker that panics (or hits a protocol error)
+//! exits with a distinctive status; the driver sees EOF on its control
+//! socket, reaps the child, and panics with the rank and status attached
+//! — mirroring the threaded backend's panic propagation.
+
+#![allow(clippy::type_complexity)]
+
+use super::outbox::FlushPolicy;
+use super::{CommStats, WireActor, WireMsg};
+
+/// Frame kinds on the wire (peer mesh and control channels).
+mod kind {
+    /// Peer → peer: a batch of application messages.
+    pub const MSGS: u8 = 0;
+    /// Driver → worker: report your counters (token = wave id).
+    pub const PROBE: u8 = 1;
+    /// Worker → driver: `[sent, delivered]` (token echoes the wave id).
+    pub const REPORT: u8 = 2;
+    /// Driver → worker: run `on_idle`, flush, then report.
+    pub const IDLE: u8 = 3;
+    /// Driver → worker: serialize state and exit.
+    pub const STOP: u8 = 4;
+    /// Worker → driver: final `[delivered, bytes_in, frames_in, sent]`
+    /// followed by the actor state bytes.
+    pub const STATE: u8 = 5;
+}
+
+/// Worker exit codes (parent turns nonzero ones into panics).
+const EXIT_PANIC: i32 = 101;
+const EXIT_PROTOCOL: i32 = 102;
+
+/// Run one epoch with one forked worker process per rank; returns the
+/// actors (result state decoded back into them) and stats. Panics if a
+/// worker dies, mirroring the threaded backend's panic propagation.
+#[cfg(unix)]
+pub fn run_process<A>(actors: Vec<A>, policy: FlushPolicy) -> (Vec<A>, CommStats)
+where
+    A: WireActor + 'static,
+    A::Msg: WireMsg,
+{
+    unix::run(actors, policy)
+}
+
+#[cfg(not(unix))]
+pub fn run_process<A>(_actors: Vec<A>, _policy: FlushPolicy) -> (Vec<A>, CommStats)
+where
+    A: WireActor + 'static,
+    A::Msg: WireMsg,
+{
+    panic!("the process backend requires a unix platform (fork + socketpair)")
+}
+
+#[cfg(unix)]
+mod unix {
+    use std::collections::VecDeque;
+    use std::io::{ErrorKind, Read, Write};
+    use std::os::unix::net::UnixStream;
+    use std::time::{Duration, Instant};
+
+    use super::{kind, EXIT_PANIC, EXIT_PROTOCOL};
+    use crate::comm::codec::{
+        decode_frame, decode_msgs, encode_frame_into, encode_msg_frame,
+        frame_len, get_u64, put_u64, WireMsg, FRAME_HEADER_LEN,
+    };
+    use crate::comm::outbox::FlushPolicy;
+    use crate::comm::transport::{flush_outbox, Transport};
+    use crate::comm::{Backend, CommStats, Outbox, RankStats, WireActor};
+
+    mod sys {
+        extern "C" {
+            pub fn fork() -> i32;
+            pub fn waitpid(pid: i32, status: *mut i32, options: i32) -> i32;
+            pub fn _exit(code: i32) -> !;
+            pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        }
+    }
+
+    /// Fork-safe stderr: a raw `write(2)`, bypassing Rust's stderr lock
+    /// (another parent thread may have held it at fork time).
+    fn raw_stderr(msg: &str) {
+        let line = format!("{msg}\n");
+        let bytes = line.as_bytes();
+        let mut off = 0usize;
+        while off < bytes.len() {
+            let n = unsafe {
+                sys::write(2, bytes[off..].as_ptr(), bytes.len() - off)
+            };
+            if n <= 0 {
+                break;
+            }
+            off += n as usize;
+        }
+    }
+
+    const WNOHANG: i32 = 1;
+
+    /// How long the driver waits for a single control frame before
+    /// declaring a worker wedged. Generous: CI machines stall.
+    const CTRL_DEADLINE: Duration = Duration::from_secs(120);
+
+    // -----------------------------------------------------------------
+    // Buffered non-blocking framed connection (worker side)
+    // -----------------------------------------------------------------
+
+    struct Conn {
+        stream: UnixStream,
+        /// Inbound bytes; frames are parsed from `rpos`.
+        rbuf: Vec<u8>,
+        rpos: usize,
+        /// Encoded frames not yet fully written (front is in flight).
+        wqueue: VecDeque<Vec<u8>>,
+        /// Bytes of the front frame already written.
+        wpos: usize,
+    }
+
+    impl Conn {
+        fn new(stream: UnixStream) -> Result<Self, String> {
+            stream
+                .set_nonblocking(true)
+                .map_err(|e| format!("set_nonblocking: {e}"))?;
+            Ok(Self {
+                stream,
+                rbuf: Vec::new(),
+                rpos: 0,
+                wqueue: VecDeque::new(),
+                wpos: 0,
+            })
+        }
+
+        /// Pull whatever the socket has into `rbuf` without blocking.
+        /// `Ok(true)` if any bytes arrived.
+        fn fill(&mut self, what: &str) -> Result<bool, String> {
+            let mut tmp = [0u8; 1 << 16];
+            let mut progressed = false;
+            loop {
+                match self.stream.read(&mut tmp) {
+                    Ok(0) => return Err(format!("{what}: peer closed")),
+                    Ok(n) => {
+                        self.rbuf.extend_from_slice(&tmp[..n]);
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(format!("{what}: read: {e}")),
+                }
+            }
+            Ok(progressed)
+        }
+
+        /// Complete frame bytes at the parse cursor, if any.
+        fn next_frame_bytes(&self, what: &str) -> Result<Option<usize>, String> {
+            let avail = &self.rbuf[self.rpos..];
+            match frame_len(avail).map_err(|e| format!("{what}: {e}"))? {
+                Some(total) if avail.len() >= total => Ok(Some(total)),
+                _ => Ok(None),
+            }
+        }
+
+        fn compact(&mut self) {
+            if self.rpos == self.rbuf.len() {
+                self.rbuf.clear();
+                self.rpos = 0;
+            } else if self.rpos > (1 << 16) {
+                self.rbuf.drain(..self.rpos);
+                self.rpos = 0;
+            }
+        }
+
+        fn queue_frame(&mut self, frame: Vec<u8>) {
+            self.wqueue.push_back(frame);
+        }
+
+        /// Write as much queued data as the socket accepts right now.
+        /// `Ok(true)` if any bytes moved.
+        fn pump_write(&mut self, what: &str) -> Result<bool, String> {
+            let mut progressed = false;
+            while let Some(front) = self.wqueue.front() {
+                match self.stream.write(&front[self.wpos..]) {
+                    Ok(0) => return Err(format!("{what}: write returned 0")),
+                    Ok(n) => {
+                        progressed = true;
+                        self.wpos += n;
+                        if self.wpos == front.len() {
+                            self.wqueue.pop_front();
+                            self.wpos = 0;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(format!("{what}: write: {e}")),
+                }
+            }
+            Ok(progressed)
+        }
+
+        /// Block (politely) until every queued frame is on the wire.
+        fn drain_writes(&mut self, what: &str) -> Result<(), String> {
+            while !self.wqueue.is_empty() {
+                if !self.pump_write(what)? {
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+            }
+            Ok(())
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Worker-side transport over the peer mesh
+    // -----------------------------------------------------------------
+
+    struct PeerConn {
+        conn: Conn,
+        /// `"peer <rank>"`, precomputed for error paths.
+        label: String,
+        /// Cumulative messages sent on this channel — the token stamped
+        /// into each outbound MSGS frame.
+        sent_seq: u64,
+        /// Cumulative messages received; each inbound token must equal
+        /// `recv_seq + batch len` (FIFO channel, no loss, no reorder).
+        recv_seq: u64,
+    }
+
+    struct SocketTransport<M> {
+        rank: usize,
+        peers: Vec<Option<PeerConn>>,
+        /// Rank-local batches (never serialized).
+        selfq: VecDeque<Vec<M>>,
+        /// Total messages queued (self lanes included) — the worker's
+        /// `sent` counter for the termination protocol.
+        sent: u64,
+        scratch: Vec<u8>,
+        /// First I/O error hit inside `ship` (surfaced by `check`).
+        io_error: Option<String>,
+    }
+
+    impl<M: WireMsg> SocketTransport<M> {
+        fn check(&mut self) -> Result<(), String> {
+            match self.io_error.take() {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        }
+
+        fn pump_all(&mut self) -> Result<bool, String> {
+            let mut progressed = false;
+            for peer in self.peers.iter_mut().flatten() {
+                progressed |= peer.conn.pump_write(&peer.label)?;
+            }
+            Ok(progressed)
+        }
+
+        /// Read and decode every complete inbound frame from `p`.
+        /// Returns `(batch, frame bytes)` pairs in arrival order.
+        fn read_frames(
+            &mut self,
+            p: usize,
+        ) -> Result<Vec<(Vec<M>, u64)>, String> {
+            let peer = self.peers[p].as_mut().expect("no self/missing peer");
+            let what = peer.label.as_str();
+            peer.conn.fill(what)?;
+            let mut out = Vec::new();
+            while let Some(total) = peer.conn.next_frame_bytes(what)? {
+                let mut input = &peer.conn.rbuf[peer.conn.rpos..][..total];
+                let frame = decode_frame(&mut input)
+                    .map_err(|e| format!("{what}: {e}"))?;
+                if frame.kind != kind::MSGS {
+                    return Err(format!(
+                        "{what}: unexpected frame kind {}",
+                        frame.kind
+                    ));
+                }
+                let msgs: Vec<M> =
+                    decode_msgs(&frame).map_err(|e| format!("{what}: {e}"))?;
+                let expect = peer.recv_seq + msgs.len() as u64;
+                if frame.token != expect {
+                    return Err(format!(
+                        "{what}: termination token mismatch \
+                         (expected {expect}, got {})",
+                        frame.token
+                    ));
+                }
+                peer.recv_seq = expect;
+                peer.conn.rpos += total;
+                out.push((msgs, total as u64));
+            }
+            peer.conn.compact();
+            Ok(out)
+        }
+    }
+
+    impl<M: WireMsg> Transport<M> for SocketTransport<M> {
+        fn note_queued(&mut self, n: u64) {
+            self.sent += n;
+        }
+
+        fn ship(&mut self, to: usize, batch: Vec<M>) {
+            if to == self.rank {
+                self.selfq.push_back(batch);
+                return;
+            }
+            let peer = self.peers[to].as_mut().expect("missing peer");
+            peer.sent_seq += batch.len() as u64;
+            let mut frame =
+                Vec::with_capacity(FRAME_HEADER_LEN + 16 * batch.len());
+            encode_msg_frame(
+                kind::MSGS,
+                peer.sent_seq,
+                &batch,
+                &mut self.scratch,
+                &mut frame,
+            );
+            peer.conn.queue_frame(frame);
+            if let Err(e) = peer.conn.pump_write(&peer.label) {
+                if self.io_error.is_none() {
+                    self.io_error = Some(e);
+                }
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Worker main loop
+    // -----------------------------------------------------------------
+
+    fn worker_main<A>(
+        rank: usize,
+        mut actor: A,
+        peer_streams: Vec<Option<UnixStream>>,
+        ctrl_stream: UnixStream,
+        policy: FlushPolicy,
+    ) -> Result<(), String>
+    where
+        A: WireActor,
+        A::Msg: WireMsg,
+    {
+        let ranks = peer_streams.len();
+        let mut peers: Vec<Option<PeerConn>> = Vec::with_capacity(ranks);
+        for (p, s) in peer_streams.into_iter().enumerate() {
+            peers.push(match s {
+                Some(stream) => Some(PeerConn {
+                    conn: Conn::new(stream)
+                        .map_err(|e| format!("peer {p}: {e}"))?,
+                    label: format!("peer {p}"),
+                    sent_seq: 0,
+                    recv_seq: 0,
+                }),
+                None => None,
+            });
+        }
+        let mut ctrl = Conn::new(ctrl_stream).map_err(|e| format!("ctrl: {e}"))?;
+
+        let mut tp: SocketTransport<A::Msg> = SocketTransport {
+            rank,
+            peers,
+            selfq: VecDeque::new(),
+            sent: 0,
+            scratch: Vec::new(),
+            io_error: None,
+        };
+        let mut outbox: Outbox<A::Msg> = Outbox::new(ranks, policy);
+        let mut sent_base = 0u64;
+        let mut delivered = 0u64;
+        let mut frames_in = 0u64;
+        let mut bytes_in = 0u64;
+
+        // Seed context.
+        actor.seed(&mut outbox);
+        flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+        tp.check()?;
+
+        let mut stop = false;
+        while !stop {
+            let mut progressed = false;
+
+            // 1. keep partially written frames moving
+            progressed |= tp.pump_all()?;
+
+            // 2. rank-local batches
+            while let Some(batch) = tp.selfq.pop_front() {
+                progressed = true;
+                let n = batch.len() as u64;
+                for msg in batch {
+                    actor.on_message(msg, &mut outbox);
+                    flush_outbox(&mut outbox, &mut sent_base, &mut tp, false);
+                }
+                delivered += n;
+                frames_in += 1;
+                flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+                tp.check()?;
+            }
+
+            // 3. inbound peer frames
+            for p in 0..ranks {
+                if p == rank {
+                    continue;
+                }
+                for (msgs, nbytes) in tp.read_frames(p)? {
+                    progressed = true;
+                    let n = msgs.len() as u64;
+                    for msg in msgs {
+                        actor.on_message(msg, &mut outbox);
+                        flush_outbox(
+                            &mut outbox,
+                            &mut sent_base,
+                            &mut tp,
+                            false,
+                        );
+                    }
+                    delivered += n;
+                    frames_in += 1;
+                    bytes_in += nbytes;
+                    flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+                    tp.check()?;
+                }
+            }
+
+            // 4. control frames from the driver
+            ctrl.fill("ctrl")?;
+            while let Some(total) = ctrl.next_frame_bytes("ctrl")? {
+                progressed = true;
+                let (fkind, ftoken) = {
+                    let mut input = &ctrl.rbuf[ctrl.rpos..][..total];
+                    let frame = decode_frame(&mut input)
+                        .map_err(|e| format!("ctrl: {e}"))?;
+                    (frame.kind, frame.token)
+                };
+                ctrl.rpos += total;
+                match fkind {
+                    kind::PROBE => {
+                        queue_report(&mut ctrl, ftoken, tp.sent, delivered);
+                    }
+                    kind::IDLE => {
+                        actor.on_idle(&mut outbox);
+                        flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+                        tp.check()?;
+                        queue_report(&mut ctrl, ftoken, tp.sent, delivered);
+                    }
+                    kind::STOP => {
+                        stop = true;
+                        break;
+                    }
+                    other => {
+                        return Err(format!("ctrl: unexpected frame kind {other}"))
+                    }
+                }
+            }
+            ctrl.compact();
+            progressed |= ctrl.pump_write("ctrl")?;
+
+            if !progressed {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        }
+
+        // Final state: inbound stats record + serialized actor state.
+        let mut payload = Vec::new();
+        put_u64(&mut payload, delivered);
+        put_u64(&mut payload, bytes_in);
+        put_u64(&mut payload, frames_in);
+        put_u64(&mut payload, tp.sent);
+        actor.write_state(&mut payload);
+        let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+        encode_frame_into(kind::STATE, 0, 0, &payload, &mut frame);
+        ctrl.queue_frame(frame);
+        ctrl.drain_writes("ctrl")?;
+        Ok(())
+    }
+
+    fn queue_report(ctrl: &mut Conn, wave: u64, sent: u64, delivered: u64) {
+        let mut payload = Vec::with_capacity(16);
+        put_u64(&mut payload, sent);
+        put_u64(&mut payload, delivered);
+        let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + 16);
+        encode_frame_into(kind::REPORT, 0, wave, &payload, &mut frame);
+        ctrl.queue_frame(frame);
+    }
+
+    // -----------------------------------------------------------------
+    // Driver (parent) side
+    // -----------------------------------------------------------------
+
+    /// Blocking framed reader over one worker's control socket.
+    struct DriverCtrl {
+        rank: usize,
+        pid: i32,
+        stream: UnixStream,
+        rbuf: Vec<u8>,
+        rpos: usize,
+    }
+
+    impl DriverCtrl {
+        fn send(&mut self, k: u8, token: u64) {
+            let mut frame = Vec::with_capacity(FRAME_HEADER_LEN);
+            encode_frame_into(k, 0, token, &[], &mut frame);
+            if let Err(e) = self.stream.write_all(&frame) {
+                self.fail(&format!("control write: {e}"));
+            }
+        }
+
+        /// Read the next control frame (blocking); returns
+        /// `(kind, token, payload)`. Every [`CTRL_DEADLINE`] of silence
+        /// the worker's liveness is checked: a dead child aborts the
+        /// epoch, a live one (legitimately deep in a long context — e.g.
+        /// a huge seed that runs before the ctrl loop starts) extends
+        /// the wait, matching the other backends' no-watchdog semantics.
+        fn recv(&mut self) -> (u8, u64, Vec<u8>) {
+            let mut deadline = Instant::now() + CTRL_DEADLINE;
+            loop {
+                let avail = &self.rbuf[self.rpos..];
+                if let Some(total) = frame_len(avail)
+                    .unwrap_or_else(|e| self.fail(&format!("{e}")))
+                {
+                    if avail.len() >= total {
+                        let mut input = &self.rbuf[self.rpos..][..total];
+                        let frame = decode_frame(&mut input)
+                            .unwrap_or_else(|e| self.fail(&format!("{e}")));
+                        let out =
+                            (frame.kind, frame.token, frame.payload.to_vec());
+                        self.rpos += total;
+                        if self.rpos == self.rbuf.len() {
+                            self.rbuf.clear();
+                            self.rpos = 0;
+                        }
+                        return out;
+                    }
+                }
+                let mut tmp = [0u8; 1 << 16];
+                match self.stream.read(&mut tmp) {
+                    Ok(0) => self.fail("exited mid-epoch"),
+                    Ok(n) => self.rbuf.extend_from_slice(&tmp[..n]),
+                    Err(e)
+                        if e.kind() == ErrorKind::WouldBlock
+                            || e.kind() == ErrorKind::TimedOut =>
+                    {
+                        if Instant::now() > deadline {
+                            let mut status: i32 = 0;
+                            let reaped = unsafe {
+                                sys::waitpid(self.pid, &mut status, WNOHANG)
+                            };
+                            if reaped == self.pid {
+                                panic!(
+                                    "process epoch aborted: worker rank {} \
+                                     exited mid-epoch ({})",
+                                    self.rank,
+                                    decode_status(status)
+                                );
+                            }
+                            // alive, just busy in a long actor context
+                            deadline = Instant::now() + CTRL_DEADLINE;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => self.fail(&format!("control read: {e}")),
+                }
+            }
+        }
+
+        /// Abort the epoch: reap what we can and panic with context.
+        fn fail(&self, msg: &str) -> ! {
+            let mut status: i32 = 0;
+            let code = unsafe {
+                if sys::waitpid(self.pid, &mut status, WNOHANG) == self.pid {
+                    Some(decode_status(status))
+                } else {
+                    None
+                }
+            };
+            match code {
+                Some(c) => panic!(
+                    "process epoch aborted: worker rank {} {msg} \
+                     (exit status: {c})",
+                    self.rank
+                ),
+                None => panic!(
+                    "process epoch aborted: worker rank {} {msg}",
+                    self.rank
+                ),
+            }
+        }
+    }
+
+    /// Human-readable wait status.
+    fn decode_status(status: i32) -> String {
+        if status & 0x7f == 0 {
+            let code = (status >> 8) & 0xff;
+            match code {
+                c if c == EXIT_PANIC => {
+                    format!("exit {c} — actor panicked (see worker stderr)")
+                }
+                c if c == EXIT_PROTOCOL => {
+                    format!("exit {c} — comm protocol error (see worker stderr)")
+                }
+                c => format!("exit {c}"),
+            }
+        } else {
+            format!("signal {}", status & 0x7f)
+        }
+    }
+
+    /// One probe wave: returns global `(sent, delivered)`.
+    fn probe_wave(ctrls: &mut [DriverCtrl], wave: u64) -> (u64, u64) {
+        for c in ctrls.iter_mut() {
+            c.send(kind::PROBE, wave);
+        }
+        collect_reports(ctrls, wave)
+    }
+
+    /// Collect one REPORT per worker for `wave`; sums `(sent, delivered)`.
+    fn collect_reports(ctrls: &mut [DriverCtrl], wave: u64) -> (u64, u64) {
+        let (mut s, mut d) = (0u64, 0u64);
+        for c in ctrls.iter_mut() {
+            loop {
+                let (k, token, payload) = c.recv();
+                if k != kind::REPORT {
+                    c.fail(&format!("sent unexpected control frame kind {k}"));
+                }
+                if token != wave {
+                    // stale report from an earlier wave; skip it
+                    continue;
+                }
+                let mut input = payload.as_slice();
+                let sent = get_u64(&mut input)
+                    .unwrap_or_else(|e| c.fail(&format!("bad report: {e}")));
+                let delivered = get_u64(&mut input)
+                    .unwrap_or_else(|e| c.fail(&format!("bad report: {e}")));
+                s += sent;
+                d += delivered;
+                break;
+            }
+        }
+        (s, d)
+    }
+
+    /// Probe until two consecutive waves report identical, balanced
+    /// totals (see module docs for why that implies global quiescence).
+    fn wait_quiescent(ctrls: &mut [DriverCtrl], wave: &mut u64) -> u64 {
+        let mut prev: Option<(u64, u64)> = None;
+        loop {
+            *wave += 1;
+            let (s, d) = probe_wave(ctrls, *wave);
+            if s == d && prev == Some((s, d)) {
+                return s;
+            }
+            prev = Some((s, d));
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    pub(super) fn run<A>(
+        mut actors: Vec<A>,
+        policy: FlushPolicy,
+    ) -> (Vec<A>, CommStats)
+    where
+        A: WireActor + 'static,
+        A::Msg: WireMsg,
+    {
+        let ranks = actors.len();
+        assert!(ranks > 0);
+
+        // Full mesh of socketpairs: mesh[i][j] is i's end of the (i, j)
+        // channel. Created before forking so both sides inherit them.
+        let mut mesh: Vec<Vec<Option<UnixStream>>> = (0..ranks)
+            .map(|_| (0..ranks).map(|_| None).collect())
+            .collect();
+        for i in 0..ranks {
+            for j in (i + 1)..ranks {
+                let (a, b) = UnixStream::pair().expect("socketpair");
+                mesh[i][j] = Some(a);
+                mesh[j][i] = Some(b);
+            }
+        }
+        let mut ctrl_parent: Vec<Option<UnixStream>> = Vec::new();
+        let mut ctrl_child: Vec<Option<UnixStream>> = Vec::new();
+        for _ in 0..ranks {
+            let (p, c) = UnixStream::pair().expect("ctrl socketpair");
+            ctrl_parent.push(Some(p));
+            ctrl_child.push(Some(c));
+        }
+
+        let mut pids: Vec<i32> = Vec::with_capacity(ranks);
+        for rank in 0..ranks {
+            // flush inherited stdio so children can't replay buffered
+            // output on their own descriptors
+            let _ = std::io::stdout().flush();
+            let _ = std::io::stderr().flush();
+            let pid = unsafe { sys::fork() };
+            assert!(pid >= 0, "fork failed");
+            if pid == 0 {
+                // ---- child: becomes worker `rank`, never returns ----
+                let code = child_entry(
+                    rank,
+                    &mut actors,
+                    &mut mesh,
+                    &mut ctrl_parent,
+                    &mut ctrl_child,
+                    policy,
+                );
+                unsafe { sys::_exit(code) }
+            }
+            pids.push(pid);
+        }
+
+        // Parent: close the worker-side control descriptors, but KEEP the
+        // mesh descriptors open until every worker is reaped. A worker
+        // that processes Stop exits (closing its fds) while a slower peer
+        // may still poll its mesh sockets before reading its own Stop;
+        // with the parent holding a copy of every mesh end, that poll
+        // sees WouldBlock instead of a spurious EOF.
+        ctrl_child.clear();
+        let mut ctrls: Vec<DriverCtrl> = ctrl_parent
+            .into_iter()
+            .enumerate()
+            .map(|(rank, s)| {
+                let stream = s.expect("parent ctrl end");
+                stream
+                    .set_read_timeout(Some(Duration::from_millis(20)))
+                    .expect("ctrl read timeout");
+                DriverCtrl {
+                    rank,
+                    pid: pids[rank],
+                    stream,
+                    rbuf: Vec::new(),
+                    rpos: 0,
+                }
+            })
+            .collect();
+
+        // Quiescence → idle rounds → Stop (same schedule as threaded).
+        let mut wave = 0u64;
+        let mut idle_rounds = 0u64;
+        loop {
+            let sent_before = wait_quiescent(&mut ctrls, &mut wave);
+            idle_rounds += 1;
+            wave += 1;
+            for c in ctrls.iter_mut() {
+                c.send(kind::IDLE, wave);
+            }
+            collect_reports(&mut ctrls, wave);
+            let sent_after = wait_quiescent(&mut ctrls, &mut wave);
+            if sent_after == sent_before {
+                break;
+            }
+        }
+        for c in ctrls.iter_mut() {
+            c.send(kind::STOP, 0);
+        }
+
+        // Collect final states, decode them into our actor copies.
+        let mut stats = CommStats::new(Backend::Process, ranks);
+        stats.idle_rounds = idle_rounds;
+        for c in ctrls.iter_mut() {
+            let (k, _token, payload) = c.recv();
+            if k != kind::STATE {
+                c.fail(&format!("sent frame kind {k} instead of state"));
+            }
+            let mut input = payload.as_slice();
+            let err = |e: crate::comm::WireError| -> String {
+                format!("bad state frame: {e}")
+            };
+            let delivered =
+                get_u64(&mut input).unwrap_or_else(|e| c.fail(&err(e)));
+            let bytes_in =
+                get_u64(&mut input).unwrap_or_else(|e| c.fail(&err(e)));
+            let frames_in =
+                get_u64(&mut input).unwrap_or_else(|e| c.fail(&err(e)));
+            let _sent = get_u64(&mut input).unwrap_or_else(|e| c.fail(&err(e)));
+            stats.messages += delivered;
+            stats.bytes += bytes_in;
+            stats.flushes += frames_in;
+            stats.per_rank[c.rank] = RankStats {
+                messages: delivered,
+                bytes: bytes_in,
+                flushes: frames_in,
+            };
+            if let Err(e) = actors[c.rank].read_state(&mut input) {
+                c.fail(&format!("state decode failed: {e}"));
+            }
+            if !input.is_empty() {
+                c.fail(&format!(
+                    "left {} trailing state bytes",
+                    input.len()
+                ));
+            }
+        }
+
+        // Reap every worker; nonzero exits become panics. Only now may
+        // the parent's mesh copies close (see the comment at fork time).
+        for (rank, pid) in pids.iter().enumerate() {
+            let mut status: i32 = 0;
+            let got = unsafe { sys::waitpid(*pid, &mut status, 0) };
+            assert_eq!(got, *pid, "waitpid failed for rank {rank}");
+            if status != 0 {
+                panic!(
+                    "process epoch aborted: worker rank {rank} {}",
+                    decode_status(status)
+                );
+            }
+        }
+        drop(mesh);
+        (actors, stats)
+    }
+
+    /// Child-side setup: keep only this rank's descriptors and actor,
+    /// run the worker loop, translate the outcome into an exit code.
+    fn child_entry<A>(
+        rank: usize,
+        actors: &mut Vec<A>,
+        mesh: &mut [Vec<Option<UnixStream>>],
+        ctrl_parent: &mut [Option<UnixStream>],
+        ctrl_child: &mut [Option<UnixStream>],
+        policy: FlushPolicy,
+    ) -> i32
+    where
+        A: WireActor,
+        A::Msg: WireMsg,
+    {
+        // Close everything that isn't ours: other workers' mesh rows and
+        // every control end except our child side.
+        for (i, row) in mesh.iter_mut().enumerate() {
+            if i != rank {
+                for s in row.iter_mut() {
+                    *s = None;
+                }
+            }
+        }
+        let peers: Vec<Option<UnixStream>> =
+            mesh[rank].iter_mut().map(Option::take).collect();
+        for s in ctrl_parent.iter_mut() {
+            *s = None;
+        }
+        let ctrl = ctrl_child[rank].take().expect("child ctrl end");
+        for s in ctrl_child.iter_mut() {
+            *s = None;
+        }
+        let actor = actors.swap_remove(rank);
+
+        // the default panic hook prints through Rust's (lock-guarded)
+        // stderr — swap in a silent hook and report via raw write(2)
+        std::panic::set_hook(Box::new(|_| {}));
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || worker_main(rank, actor, peers, ctrl, policy),
+        ));
+        match outcome {
+            Ok(Ok(())) => 0,
+            Ok(Err(msg)) => {
+                raw_stderr(&format!("degreesketch worker rank {rank}: {msg}"));
+                EXIT_PROTOCOL
+            }
+            Err(payload) => {
+                raw_stderr(&format!(
+                    "degreesketch worker rank {rank} panicked: {}",
+                    crate::comm::describe_panic(payload.as_ref())
+                ));
+                EXIT_PANIC
+            }
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::super::codec::{
+        get_u64, get_u8, put_u64, put_u8, WireError, WireMsg,
+    };
+    use super::super::{
+        run_epoch_wire, Actor, Backend, FlushPolicy, Outbox, WireActor,
+    };
+
+    /// Token ring with wire-capable state.
+    struct Ring {
+        rank: usize,
+        ranks: usize,
+        hops: u64,
+        received: u64,
+    }
+
+    impl Actor for Ring {
+        type Msg = (u64, u64); // (remaining, payload) — reuses the Edge codec
+
+        fn seed(&mut self, out: &mut Outbox<(u64, u64)>) {
+            if self.rank == 0 {
+                out.send((self.rank + 1) % self.ranks, (self.hops, 7));
+            }
+        }
+
+        fn on_message(&mut self, (remaining, v): (u64, u64), out: &mut Outbox<(u64, u64)>) {
+            self.received += 1;
+            if remaining > 1 {
+                out.send((self.rank + 1) % self.ranks, (remaining - 1, v));
+            }
+        }
+    }
+
+    impl WireActor for Ring {
+        fn write_state(&self, buf: &mut Vec<u8>) {
+            put_u64(buf, self.received);
+        }
+
+        fn read_state(&mut self, input: &mut &[u8]) -> Result<(), WireError> {
+            self.received = get_u64(input)?;
+            Ok(())
+        }
+    }
+
+    fn ring(ranks: usize, hops: u64) -> Vec<Ring> {
+        (0..ranks)
+            .map(|rank| Ring {
+                rank,
+                ranks,
+                hops,
+                received: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ring_token_crosses_process_boundaries() {
+        let mut actors = ring(4, 64);
+        let stats =
+            run_epoch_wire(Backend::Process, &mut actors, FlushPolicy::default());
+        assert_eq!(stats.mode, Backend::Process);
+        assert_eq!(stats.messages, 64);
+        let total: u64 = actors.iter().map(|a| a.received).sum();
+        assert_eq!(total, 64);
+        let per: u64 = stats.per_rank.iter().map(|r| r.messages).sum();
+        assert_eq!(per, 64);
+        // every hop crossed a real socket: bytes moved
+        assert!(stats.bytes > 0, "{stats:?}");
+    }
+
+    #[test]
+    fn single_rank_process_epoch_works() {
+        let mut actors = ring(1, 5);
+        let stats =
+            run_epoch_wire(Backend::Process, &mut actors, FlushPolicy::default());
+        assert_eq!(stats.messages, 5);
+        assert_eq!(actors[0].received, 5);
+    }
+
+    /// All-to-all flood with per-actor message logs and idle-round work,
+    /// exercising self lanes, fan-out chains and `on_idle` across
+    /// processes.
+    struct Flood {
+        rank: usize,
+        ranks: usize,
+        got: Vec<u64>,
+        idle_sent: bool,
+    }
+
+    impl Actor for Flood {
+        type Msg = (u64, u64); // (depth, value)
+
+        fn seed(&mut self, out: &mut Outbox<(u64, u64)>) {
+            for to in 0..self.ranks {
+                out.send(to, (2, (self.rank * 1000 + to) as u64));
+            }
+        }
+
+        fn on_message(&mut self, (depth, val): (u64, u64), out: &mut Outbox<(u64, u64)>) {
+            self.got.push(val);
+            if depth > 0 {
+                out.send((self.rank + 1) % self.ranks, (depth - 1, val + 1));
+            }
+        }
+
+        fn on_idle(&mut self, out: &mut Outbox<(u64, u64)>) {
+            if !self.idle_sent {
+                self.idle_sent = true;
+                out.send((self.rank + 1) % self.ranks, (0, 999_000));
+            }
+        }
+    }
+
+    impl WireActor for Flood {
+        fn write_state(&self, buf: &mut Vec<u8>) {
+            put_u8(buf, u8::from(self.idle_sent));
+            put_u64(buf, self.got.len() as u64);
+            for &v in &self.got {
+                put_u64(buf, v);
+            }
+        }
+
+        fn read_state(&mut self, input: &mut &[u8]) -> Result<(), WireError> {
+            self.idle_sent = get_u8(input)? != 0;
+            let n = get_u64(input)?;
+            self.got = (0..n)
+                .map(|_| get_u64(input))
+                .collect::<Result<_, _>>()?;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn flood_with_idle_work_matches_sequential_totals() {
+        let mk = || -> Vec<Flood> {
+            (0..4)
+                .map(|rank| Flood {
+                    rank,
+                    ranks: 4,
+                    got: Vec::new(),
+                    idle_sent: false,
+                })
+                .collect()
+        };
+        let mut seq = mk();
+        let seq_stats = super::super::run_sequential(&mut seq);
+        let mut proc = mk();
+        let proc_stats = run_epoch_wire(
+            Backend::Process,
+            &mut proc,
+            FlushPolicy {
+                threshold: 3, // tiny: force many frames + adaptation
+                adaptive: true,
+                min: 1,
+                max: 64,
+            },
+        );
+        assert_eq!(proc_stats.messages, seq_stats.messages);
+        assert!(proc_stats.idle_rounds >= 2);
+        for (s, p) in seq.iter().zip(&proc) {
+            let mut a = s.got.clone();
+            let mut b = p.got.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "rank {} delivery sets differ", s.rank);
+        }
+    }
+}

@@ -1,28 +1,58 @@
 //! Deterministic single-threaded scheduler: round-robin over ranks,
 //! mirroring the paper's pseudocode structure (drain `R[P]` per rank, loop
 //! to quiescence, then idle rounds).
+//!
+//! Batches move through a [`Transport`] like every other backend, but the
+//! transport is a plain in-process queue set and the flush policy is
+//! pinned unbounded (whole-context batches): delivery order — hence every
+//! floating-point reduction downstream — is a pure function of the input,
+//! which is what makes this backend the bit-deterministic anchor for the
+//! parity tests.
 
 use std::collections::VecDeque;
 
-use super::{Actor, CommStats, Outbox};
+use super::outbox::FlushPolicy;
+use super::transport::{batch_bytes_estimate, flush_outbox, Transport};
+use super::{Actor, Backend, CommStats, Outbox};
+
+/// The sequential transport: per-rank `VecDeque` receive queues.
+struct QueueTransport<'a, M> {
+    queues: &'a mut [VecDeque<M>],
+    stats: &'a mut CommStats,
+}
+
+impl<M> Transport<M> for QueueTransport<'_, M> {
+    fn note_queued(&mut self, _n: u64) {}
+
+    fn ship(&mut self, to: usize, batch: Vec<M>) {
+        let bytes = batch_bytes_estimate::<M>(batch.len());
+        self.stats.flushes += 1;
+        self.stats.bytes += bytes;
+        let pr = &mut self.stats.per_rank[to];
+        pr.flushes += 1;
+        pr.bytes += bytes;
+        self.queues[to].extend(batch);
+    }
+}
 
 /// Run one epoch deterministically. Used by accuracy experiments and as
-/// the semantic reference for the threaded backend.
+/// the semantic reference for the threaded and process backends.
 pub fn run_sequential<A: Actor>(actors: &mut [A]) -> CommStats {
     let ranks = actors.len();
     assert!(ranks > 0);
-    let mut stats = CommStats::default();
+    let mut stats = CommStats::new(Backend::Sequential, ranks);
     let mut queues: Vec<VecDeque<A::Msg>> =
         (0..ranks).map(|_| VecDeque::new()).collect();
 
-    // large threshold: sequential delivery needs no mid-context flushing
-    let mut outbox: Outbox<A::Msg> = Outbox::new(ranks, usize::MAX);
+    // unbounded threshold: sequential delivery needs no mid-context
+    // flushing, and a pinned policy keeps the schedule deterministic
+    let mut outbox: Outbox<A::Msg> = Outbox::new(ranks, FlushPolicy::unbounded());
+    let mut sent_base = 0u64;
 
     // Computation context (σ_P read) for every rank.
-    for (rank, actor) in actors.iter_mut().enumerate() {
-        let _ = rank;
+    for actor in actors.iter_mut() {
         actor.seed(&mut outbox);
-        drain(&mut outbox, &mut queues, &mut stats);
+        drain(&mut outbox, &mut sent_base, &mut queues, &mut stats);
     }
 
     loop {
@@ -34,8 +64,9 @@ pub fn run_sequential<A: Actor>(actors: &mut [A]) -> CommStats {
                 while let Some(msg) = queues[rank].pop_front() {
                     actors[rank].on_message(msg, &mut outbox);
                     stats.messages += 1;
+                    stats.per_rank[rank].messages += 1;
                     progressed = true;
-                    drain(&mut outbox, &mut queues, &mut stats);
+                    drain(&mut outbox, &mut sent_base, &mut queues, &mut stats);
                 }
             }
         }
@@ -44,7 +75,7 @@ pub fn run_sequential<A: Actor>(actors: &mut [A]) -> CommStats {
         let before = outbox.total_sent();
         for actor in actors.iter_mut() {
             actor.on_idle(&mut outbox);
-            drain(&mut outbox, &mut queues, &mut stats);
+            drain(&mut outbox, &mut sent_base, &mut queues, &mut stats);
         }
         if outbox.total_sent() == before {
             break;
@@ -55,11 +86,10 @@ pub fn run_sequential<A: Actor>(actors: &mut [A]) -> CommStats {
 
 fn drain<M>(
     outbox: &mut Outbox<M>,
+    sent_base: &mut u64,
     queues: &mut [VecDeque<M>],
     stats: &mut CommStats,
 ) {
-    for (to, batch) in outbox.drain_all() {
-        stats.flushes += 1;
-        queues[to].extend(batch);
-    }
+    let mut transport = QueueTransport { queues, stats };
+    flush_outbox(outbox, sent_base, &mut transport, true);
 }

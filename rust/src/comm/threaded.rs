@@ -9,13 +9,21 @@
 //! blocking. The driver waits for `outstanding == 0`, then runs global
 //! idle rounds (each rank's `on_idle` counts as a context) until an idle
 //! round sends nothing, then broadcasts Stop.
+//!
+//! Actor panics abort the epoch instead of deadlocking it: each worker
+//! runs its contexts under `catch_unwind`; the first panic is recorded in
+//! the shared state, the driver stops waiting on `outstanding` (which a
+//! dead worker can never drain), tears the epoch down, and re-raises the
+//! panic with the originating rank attached.
 
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use super::{Actor, CommStats, Outbox};
+use super::outbox::FlushPolicy;
+use super::transport::{batch_bytes_estimate, flush_outbox, Transport};
+use super::{describe_panic, Actor, Backend, CommStats, Outbox, RankStats};
 
 enum Packet<M> {
     Batch(Vec<M>),
@@ -23,17 +31,72 @@ enum Packet<M> {
     Stop,
 }
 
+#[derive(Default)]
+struct RankCounters {
+    messages: AtomicU64,
+    bytes: AtomicU64,
+    flushes: AtomicU64,
+}
+
 struct Shared {
     outstanding: AtomicI64,
     delivered: AtomicU64,
     flushes: AtomicU64,
+    bytes: AtomicU64,
+    per_rank: Vec<RankCounters>,
+    panicked: AtomicBool,
+    panic_note: Mutex<Option<String>>,
 }
 
-/// Messages buffered per destination before an eager flush.
-const FLUSH_THRESHOLD: usize = 1024;
+impl Shared {
+    fn record_panic(&self, note: String) {
+        let mut slot = self.panic_note.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(note);
+        }
+        drop(slot);
+        self.panicked.store(true, Ordering::SeqCst);
+    }
+}
+
+/// The threaded transport: one mpsc sender per destination rank, with
+/// quiescence accounting against the shared `outstanding` counter.
+struct ChannelTransport<'a, M> {
+    senders: &'a [Sender<Packet<M>>],
+    shared: &'a Shared,
+}
+
+impl<M> Transport<M> for ChannelTransport<'_, M> {
+    fn note_queued(&mut self, n: u64) {
+        // account newly queued messages in `outstanding` *before* they
+        // move, so they are never invisible to the termination detector
+        self.shared.outstanding.fetch_add(n as i64, Ordering::AcqRel);
+    }
+
+    fn ship(&mut self, to: usize, batch: Vec<M>) {
+        let bytes = batch_bytes_estimate::<M>(batch.len());
+        self.shared.flushes.fetch_add(1, Ordering::Relaxed);
+        self.shared.bytes.fetch_add(bytes, Ordering::Relaxed);
+        let pr = &self.shared.per_rank[to];
+        pr.flushes.fetch_add(1, Ordering::Relaxed);
+        pr.bytes.fetch_add(bytes, Ordering::Relaxed);
+        if self.senders[to].send(Packet::Batch(batch)).is_err() {
+            // a receiver only disappears when its worker exited early —
+            // i.e. a panic is tearing the epoch down; record it (the
+            // originating worker may not have published its note yet)
+            // and let the driver abort
+            self.shared
+                .record_panic(format!("rank {to} receiver gone mid-epoch"));
+        }
+    }
+}
 
 /// Run one epoch on one thread per rank; returns the actors and stats.
-pub fn run_threaded<A: Actor + 'static>(actors: Vec<A>) -> (Vec<A>, CommStats) {
+/// Panics (after tearing the epoch down) if any actor context panicked.
+pub fn run_threaded<A: Actor + 'static>(
+    actors: Vec<A>,
+    policy: FlushPolicy,
+) -> (Vec<A>, CommStats) {
     let ranks = actors.len();
     assert!(ranks > 0);
     let shared = Arc::new(Shared {
@@ -41,6 +104,10 @@ pub fn run_threaded<A: Actor + 'static>(actors: Vec<A>) -> (Vec<A>, CommStats) {
         outstanding: AtomicI64::new(ranks as i64),
         delivered: AtomicU64::new(0),
         flushes: AtomicU64::new(0),
+        bytes: AtomicU64::new(0),
+        per_rank: (0..ranks).map(|_| RankCounters::default()).collect(),
+        panicked: AtomicBool::new(false),
+        panic_note: Mutex::new(None),
     });
 
     let mut senders: Vec<Sender<Packet<A::Msg>>> = Vec::with_capacity(ranks);
@@ -52,127 +119,200 @@ pub fn run_threaded<A: Actor + 'static>(actors: Vec<A>) -> (Vec<A>, CommStats) {
     }
 
     let mut handles = Vec::with_capacity(ranks);
-    for (rank, (mut actor, rx)) in
-        actors.into_iter().zip(receivers).enumerate().map(|(r, p)| (r, p))
-    {
+    for (rank, (actor, rx)) in actors.into_iter().zip(receivers).enumerate() {
         let senders = senders.clone();
         let shared = Arc::clone(&shared);
         handles.push(std::thread::spawn(move || {
-            let _ = rank;
-            let mut outbox: Outbox<A::Msg> = Outbox::new(ranks, FLUSH_THRESHOLD);
-            let mut sent_base = 0u64;
-
-            // Seed context.
-            actor.seed(&mut outbox);
-            flush(&mut outbox, &mut sent_base, &senders, &shared, true);
-            shared.outstanding.fetch_sub(1, Ordering::AcqRel);
-
-            loop {
-                match rx.recv_timeout(Duration::from_micros(200)) {
-                    Ok(Packet::Batch(batch)) => {
-                        let n = batch.len() as i64;
-                        for msg in batch {
-                            actor.on_message(msg, &mut outbox);
-                            flush(&mut outbox, &mut sent_base, &senders, &shared, false);
-                        }
-                        shared.delivered.fetch_add(n as u64, Ordering::Relaxed);
-                        // flush before acknowledging, so our sends are
-                        // visible in `outstanding` before the decrement
-                        flush(&mut outbox, &mut sent_base, &senders, &shared, true);
-                        shared.outstanding.fetch_sub(n, Ordering::AcqRel);
-                    }
-                    Ok(Packet::IdleProbe) => {
-                        actor.on_idle(&mut outbox);
-                        flush(&mut outbox, &mut sent_base, &senders, &shared, true);
-                        shared.outstanding.fetch_sub(1, Ordering::AcqRel);
-                    }
-                    Ok(Packet::Stop) => break,
-                    Err(RecvTimeoutError::Timeout) => {
-                        flush(&mut outbox, &mut sent_base, &senders, &shared, true);
-                    }
-                    Err(RecvTimeoutError::Disconnected) => break,
+            let outcome = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    worker_loop(rank, actor, rx, &senders, &shared, policy)
+                }),
+            );
+            match outcome {
+                Ok(actor) => Some(actor),
+                Err(payload) => {
+                    shared.record_panic(format!(
+                        "rank {rank} panicked: {}",
+                        describe_panic(payload.as_ref())
+                    ));
+                    None
                 }
             }
-            actor
         }));
     }
 
     // Driver: wait for quiescence, run idle rounds, stop.
     let mut idle_rounds = 0u64;
     loop {
-        wait_quiescent(&shared);
+        if !wait_quiescent(&shared) {
+            break;
+        }
         idle_rounds += 1;
         let before = shared.delivered.load(Ordering::SeqCst);
-        let outstanding_before = shared.outstanding.load(Ordering::SeqCst);
-        debug_assert_eq!(outstanding_before, 0);
         shared
             .outstanding
             .fetch_add(ranks as i64, Ordering::AcqRel);
         for tx in &senders {
-            tx.send(Packet::IdleProbe).expect("worker alive");
+            // a closed channel means that worker already panicked; the
+            // abort path below handles it
+            let _ = tx.send(Packet::IdleProbe);
         }
-        wait_quiescent(&shared);
+        if !wait_quiescent(&shared) {
+            break;
+        }
         if shared.delivered.load(Ordering::SeqCst) == before {
             break;
         }
     }
     for tx in &senders {
-        tx.send(Packet::Stop).expect("worker alive");
+        let _ = tx.send(Packet::Stop);
     }
-    let actors: Vec<A> = handles
-        .into_iter()
-        .map(|h| h.join().expect("worker panicked"))
-        .collect();
+    let mut back: Vec<A> = Vec::with_capacity(ranks);
+    for h in handles {
+        match h.join() {
+            Ok(Some(actor)) => back.push(actor),
+            Ok(None) => {}                // panic recorded by the worker
+            Err(payload) => shared.record_panic(format!(
+                "worker thread died outside catch_unwind: {}",
+                describe_panic(payload.as_ref())
+            )),
+        }
+    }
+    if shared.panicked.load(Ordering::SeqCst) {
+        let note = shared
+            .panic_note
+            .lock()
+            .unwrap()
+            .take()
+            .unwrap_or_else(|| "actor panicked".into());
+        panic!("threaded epoch aborted: {note}");
+    }
 
-    let stats = CommStats {
+    let mut stats = CommStats {
+        mode: Backend::Threaded,
         messages: shared.delivered.load(Ordering::SeqCst),
         flushes: shared.flushes.load(Ordering::SeqCst),
+        bytes: shared.bytes.load(Ordering::SeqCst),
         idle_rounds,
+        per_rank: Vec::with_capacity(ranks),
     };
-    (actors, stats)
+    for rc in &shared.per_rank {
+        stats.per_rank.push(RankStats {
+            messages: rc.messages.load(Ordering::SeqCst),
+            bytes: rc.bytes.load(Ordering::SeqCst),
+            flushes: rc.flushes.load(Ordering::SeqCst),
+        });
+    }
+    (back, stats)
 }
 
-/// Move outbox contents into channels. `force`: flush everything;
-/// otherwise only buffers that crossed the threshold.
-fn flush<M>(
-    outbox: &mut Outbox<M>,
-    sent_base: &mut u64,
-    senders: &[Sender<Packet<M>>],
+/// One rank's receive loop: runs the three actor contexts, flushing the
+/// outbox through the channel transport.
+fn worker_loop<A: Actor>(
+    rank: usize,
+    mut actor: A,
+    rx: Receiver<Packet<A::Msg>>,
+    senders: &[Sender<Packet<A::Msg>>],
     shared: &Shared,
-    force: bool,
-) {
-    // account newly queued messages in `outstanding` *before* moving them
-    let queued = outbox.total_sent();
-    if queued > *sent_base {
-        shared
-            .outstanding
-            .fetch_add((queued - *sent_base) as i64, Ordering::AcqRel);
-        *sent_base = queued;
-    }
-    if force {
-        for (to, batch) in outbox.drain_all() {
-            shared.flushes.fetch_add(1, Ordering::Relaxed);
-            senders[to].send(Packet::Batch(batch)).expect("receiver alive");
-        }
-    } else {
-        for to in outbox.take_hot() {
-            let batch = outbox.take_buf(to);
-            if !batch.is_empty() {
-                shared.flushes.fetch_add(1, Ordering::Relaxed);
-                senders[to].send(Packet::Batch(batch)).expect("receiver alive");
+    policy: FlushPolicy,
+) -> A {
+    let mut outbox: Outbox<A::Msg> = Outbox::new(senders.len(), policy);
+    let mut sent_base = 0u64;
+    let mut transport = ChannelTransport { senders, shared };
+
+    // Seed context.
+    actor.seed(&mut outbox);
+    flush_outbox(&mut outbox, &mut sent_base, &mut transport, true);
+    shared.outstanding.fetch_sub(1, Ordering::AcqRel);
+
+    loop {
+        match rx.recv_timeout(Duration::from_micros(200)) {
+            Ok(Packet::Batch(batch)) => {
+                let n = batch.len() as i64;
+                for msg in batch {
+                    actor.on_message(msg, &mut outbox);
+                    flush_outbox(&mut outbox, &mut sent_base, &mut transport, false);
+                }
+                shared.delivered.fetch_add(n as u64, Ordering::Relaxed);
+                shared.per_rank[rank]
+                    .messages
+                    .fetch_add(n as u64, Ordering::Relaxed);
+                // flush before acknowledging, so our sends are visible in
+                // `outstanding` before the decrement
+                flush_outbox(&mut outbox, &mut sent_base, &mut transport, true);
+                shared.outstanding.fetch_sub(n, Ordering::AcqRel);
             }
+            Ok(Packet::IdleProbe) => {
+                actor.on_idle(&mut outbox);
+                flush_outbox(&mut outbox, &mut sent_base, &mut transport, true);
+                shared.outstanding.fetch_sub(1, Ordering::AcqRel);
+            }
+            Ok(Packet::Stop) => break,
+            Err(RecvTimeoutError::Timeout) => {
+                flush_outbox(&mut outbox, &mut sent_base, &mut transport, true);
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
         }
     }
+    actor
 }
 
-fn wait_quiescent(shared: &Shared) {
+fn wait_quiescent(shared: &Shared) -> bool {
     let mut spins = 0u32;
-    while shared.outstanding.load(Ordering::SeqCst) != 0 {
+    loop {
+        if shared.panicked.load(Ordering::SeqCst) {
+            return false;
+        }
+        if shared.outstanding.load(Ordering::SeqCst) == 0 {
+            return true;
+        }
         spins += 1;
         if spins < 64 {
             std::hint::spin_loop();
         } else {
             std::thread::sleep(Duration::from_micros(100));
         }
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Detonates on its first delivered message.
+    struct Bomb {
+        rank: usize,
+    }
+
+    impl Actor for Bomb {
+        type Msg = u64;
+
+        fn seed(&mut self, out: &mut Outbox<u64>) {
+            if self.rank == 0 {
+                out.send(1, 7);
+            }
+        }
+
+        fn on_message(&mut self, _m: u64, _out: &mut Outbox<u64>) {
+            panic!("bomb actor detonated");
+        }
+    }
+
+    #[test]
+    fn actor_panic_propagates_instead_of_deadlocking() {
+        // regression: a panicking actor used to leave `outstanding`
+        // nonzero forever, deadlocking the driver's quiescence wait
+        let actors: Vec<Bomb> = (0..3).map(|rank| Bomb { rank }).collect();
+        let result = std::panic::catch_unwind(|| {
+            run_threaded(actors, FlushPolicy::default())
+        });
+        let payload = result.expect_err("worker panic must reach the driver");
+        let note = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(note.contains("bomb actor detonated"), "{note}");
+        assert!(note.contains("rank 1"), "{note}");
     }
 }

@@ -1,0 +1,103 @@
+//! **Layer 2 of the comm plane: the transport trait.**
+//!
+//! A [`Transport`] is where a flushed batch goes: the sequential
+//! scheduler's in-process queues, the threaded scheduler's in-memory
+//! channels, or the process backend's framed Unix-domain sockets. The
+//! schedulers never move batches themselves — every [`Outbox`] flush
+//! (eager threshold crossings and forced drains alike) funnels through
+//! [`flush_outbox`], which applies the outbox's flush policy and hands
+//! each `(destination, batch)` pair to the transport.
+//!
+//! Quiescence accounting contract: [`Transport::note_queued`] is called
+//! with the number of newly queued messages *before* any of them ship, so
+//! a backend's outstanding-message counter can never observe a message
+//! "in a channel" that it hasn't first seen "queued" — the invariant the
+//! threaded backend's termination detector (and the process backend's
+//! token accounting) are built on.
+
+use super::outbox::Outbox;
+
+/// Destination of flushed batches for one rank (one instance per worker).
+pub(crate) trait Transport<M> {
+    /// Account `n` newly queued messages. Runs before the batches holding
+    /// them are shipped (see module docs).
+    fn note_queued(&mut self, n: u64);
+
+    /// Ship one batch toward `to`'s receive queue.
+    fn ship(&mut self, to: usize, batch: Vec<M>);
+}
+
+/// Move outbox contents into the transport. `force`: drain everything;
+/// otherwise only buffers that crossed their per-destination threshold.
+/// `sent_base` is the caller-held cursor into `outbox.total_sent()` (what
+/// `note_queued` has already accounted).
+pub(crate) fn flush_outbox<M, T: Transport<M>>(
+    outbox: &mut Outbox<M>,
+    sent_base: &mut u64,
+    transport: &mut T,
+    force: bool,
+) {
+    let queued = outbox.total_sent();
+    if queued > *sent_base {
+        transport.note_queued(queued - *sent_base);
+        *sent_base = queued;
+    }
+    if force {
+        for (to, batch) in outbox.drain_all() {
+            transport.ship(to, batch);
+        }
+    } else {
+        for to in outbox.take_hot() {
+            let batch = outbox.take_buf_eager(to);
+            if !batch.is_empty() {
+                transport.ship(to, batch);
+            }
+        }
+    }
+}
+
+/// Estimated payload bytes of an in-memory batch (the in-memory backends
+/// never serialize, so `CommStats::bytes` uses this size-of estimate).
+#[inline]
+pub(crate) fn batch_bytes_estimate<M>(len: usize) -> u64 {
+    (len * std::mem::size_of::<M>()) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::FlushPolicy;
+
+    #[derive(Default)]
+    struct Recorder {
+        queued: u64,
+        shipped: Vec<(usize, Vec<u32>)>,
+    }
+
+    impl Transport<u32> for Recorder {
+        fn note_queued(&mut self, n: u64) {
+            self.queued += n;
+        }
+
+        fn ship(&mut self, to: usize, batch: Vec<u32>) {
+            self.shipped.push((to, batch));
+        }
+    }
+
+    #[test]
+    fn queued_accounting_precedes_shipping() {
+        let mut outbox: Outbox<u32> = Outbox::new(2, FlushPolicy::pinned(2));
+        let mut t = Recorder::default();
+        let mut base = 0u64;
+        outbox.send(1, 10);
+        outbox.send(1, 11); // crosses threshold
+        outbox.send(0, 12);
+        flush_outbox(&mut outbox, &mut base, &mut t, false);
+        assert_eq!(t.queued, 3, "all queued messages accounted");
+        assert_eq!(t.shipped, vec![(1, vec![10, 11])], "only the hot lane");
+        flush_outbox(&mut outbox, &mut base, &mut t, true);
+        assert_eq!(t.queued, 3, "no double accounting");
+        assert_eq!(t.shipped.len(), 2);
+        assert_eq!(t.shipped[1], (0, vec![12]));
+    }
+}

@@ -10,7 +10,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::comm::Backend;
+use crate::comm::{Backend, FlushPolicy};
 use crate::coordinator::Partitioner;
 use crate::hll::Estimator;
 
@@ -162,6 +162,23 @@ impl Config {
         let s = self.get_str("hll.estimator", "ertl");
         Estimator::parse(s).with_context(|| format!("bad hll.estimator {s:?}"))
     }
+
+    /// Comm-plane flush policy: `comm.flush_threshold` seeds the
+    /// per-destination thresholds; `comm.adaptive_flush = false` pins
+    /// them (the deterministic-bench escape hatch).
+    pub fn flush_policy(&self) -> Result<FlushPolicy> {
+        let default = FlushPolicy::default();
+        let threshold =
+            self.get_int("comm.flush_threshold", default.threshold as i64);
+        if threshold <= 0 {
+            bail!("comm.flush_threshold must be positive, got {threshold}");
+        }
+        Ok(if self.get_bool("comm.adaptive_flush", default.adaptive) {
+            FlushPolicy::adaptive(threshold as usize)
+        } else {
+            FlushPolicy::pinned(threshold as usize)
+        })
+    }
 }
 
 #[cfg(test)]
@@ -184,6 +201,10 @@ estimator = "beta"
 k = 100
 discard_dominated = true
 lr = 0.35
+
+[comm]
+flush_threshold = 512
+adaptive_flush = false
 "#;
 
     #[test]
@@ -207,6 +228,27 @@ lr = 0.35
         let c = Config::parse("").unwrap();
         assert_eq!(c.get_int("run.ranks", 4), 4);
         assert_eq!(c.backend().unwrap(), Backend::Sequential);
+        assert_eq!(c.flush_policy().unwrap(), FlushPolicy::default());
+    }
+
+    #[test]
+    fn comm_section_builds_flush_policy() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let p = c.flush_policy().unwrap();
+        assert_eq!(p, FlushPolicy::pinned(512));
+        let mut c2 = Config::parse(SAMPLE).unwrap();
+        c2.set_override("comm.adaptive_flush=true").unwrap();
+        assert!(c2.flush_policy().unwrap().adaptive);
+        assert_eq!(c2.flush_policy().unwrap().threshold, 512);
+        c2.set_override("comm.flush_threshold=0").unwrap();
+        assert!(c2.flush_policy().is_err());
+    }
+
+    #[test]
+    fn backend_process_parses_from_config() {
+        let mut c = Config::parse("").unwrap();
+        c.set_override("run.backend=\"process\"").unwrap();
+        assert_eq!(c.backend().unwrap(), Backend::Process);
     }
 
     #[test]

@@ -27,7 +27,14 @@
 
 use std::collections::HashMap;
 
-use crate::comm::{run_epoch, Actor, Backend, CommStats, Outbox};
+use crate::comm::codec::{
+    decode_hll, encode_hll_into, get_u32, get_u64, get_u8, put_u32, put_u64,
+    put_u8,
+};
+use crate::comm::{
+    codec, run_epoch_wire, Actor, Backend, CommStats, FlushPolicy, Outbox,
+    WireActor, WireError, WireMsg,
+};
 use crate::graph::stream::{EdgeStream, MemoryStream};
 use crate::graph::VertexId;
 use crate::hll::{Estimator, Hll, SketchStore};
@@ -58,6 +65,8 @@ pub struct AnfOptions {
     /// Keep all `Dᵗ` layers? (The paper notes they can be stored for later
     /// use; we keep only the live layer unless asked.)
     pub keep_layers: bool,
+    /// Comm-plane flush policy (ignored by the sequential backend).
+    pub flush: FlushPolicy,
 }
 
 impl Default for AnfOptions {
@@ -67,6 +76,7 @@ impl Default for AnfOptions {
             max_t: 5,
             estimator: Estimator::default(),
             keep_layers: false,
+            flush: FlushPolicy::default(),
         }
     }
 }
@@ -74,7 +84,10 @@ impl Default for AnfOptions {
 /// Cross-rank EDGE targets buffered per destination before a FAN flush.
 const ANF_FAN_BATCH: usize = 1024;
 
-enum AnfMsg {
+/// Algorithm 2's message alphabet (public so the comm-plane property
+/// tests can round-trip it through the wire codec).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnfMsg {
     /// EDGE (x, y): deliver to f(x); owner forwards its sketch to f(y).
     Edge(VertexId, VertexId),
     /// FAN (Dᵗ⁻¹[x], targets): merge the carried sketch into every
@@ -83,6 +96,45 @@ enum AnfMsg {
     /// by source vertex, so `x`'s registers ship once per flush however
     /// many of its neighbors live on the destination.
     Fan(Hll, Vec<VertexId>),
+}
+
+const ANF_TAG_EDGE: u8 = 0;
+const ANF_TAG_FAN: u8 = 1;
+
+impl WireMsg for AnfMsg {
+    fn encode_into(&self, buf: &mut Vec<u8>) {
+        match self {
+            AnfMsg::Edge(x, y) => {
+                put_u8(buf, ANF_TAG_EDGE);
+                put_u64(buf, *x);
+                put_u64(buf, *y);
+            }
+            AnfMsg::Fan(sketch, targets) => {
+                put_u8(buf, ANF_TAG_FAN);
+                encode_hll_into(sketch, buf);
+                put_u32(buf, targets.len() as u32);
+                for &t in targets {
+                    put_u64(buf, t);
+                }
+            }
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self, WireError> {
+        match get_u8(input)? {
+            ANF_TAG_EDGE => Ok(AnfMsg::Edge(get_u64(input)?, get_u64(input)?)),
+            ANF_TAG_FAN => {
+                let sketch = decode_hll(input)?;
+                let n = get_u32(input)? as usize;
+                let mut targets = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    targets.push(get_u64(input)?);
+                }
+                Ok(AnfMsg::Fan(sketch, targets))
+            }
+            other => Err(WireError::Invalid(format!("bad AnfMsg tag {other}"))),
+        }
+    }
 }
 
 struct AnfActor {
@@ -177,6 +229,19 @@ impl Actor for AnfActor {
     }
 }
 
+impl WireActor for AnfActor {
+    fn write_state(&self, buf: &mut Vec<u8>) {
+        // the pass only mutates Dᵗ; on_idle drained the fan buffers
+        debug_assert!(self.fwd.iter().all(Vec::is_empty));
+        codec::encode_store_into(&self.next, buf);
+    }
+
+    fn read_state(&mut self, input: &mut &[u8]) -> Result<(), WireError> {
+        self.next = codec::decode_store(*self.next.config(), input)?;
+        Ok(())
+    }
+}
+
 /// Rehydrate a frozen shard into a mutable arena store.
 fn store_from_shard(shard: &Shard, config: crate::hll::HllConfig) -> SketchStore {
     let mut store = SketchStore::new(config);
@@ -233,7 +298,7 @@ pub fn neighborhood_approximation(
                 fwd: vec![Vec::new(); ranks],
             })
             .collect();
-        let stats = run_epoch(opts.backend, &mut actors);
+        let stats = run_epoch_wire(opts.backend, &mut actors, opts.flush);
         layer = actors.into_iter().map(|a| a.next).collect();
         pass_seconds.push(start.elapsed().as_secs_f64());
         pass_stats.push(stats);
@@ -351,11 +416,15 @@ mod tests {
     fn backends_agree_exactly_on_anf() {
         let edges = GraphSpec::parse("er:200:600").unwrap().generate(3);
         let a = run_anf(edges.clone(), 4, 8, 3, Backend::Sequential);
-        let b = run_anf(edges, 4, 8, 3, Backend::Threaded);
-        // merges commute, so sketches (hence estimates) match exactly
+        let b = run_anf(edges.clone(), 4, 8, 3, Backend::Threaded);
+        let c = run_anf(edges, 4, 8, 3, Backend::Process);
+        // merges commute, so sketches (hence estimates) match exactly —
+        // even when every cross-rank sketch rode a socket frame
         assert_eq!(a.global, b.global);
+        assert_eq!(a.global, c.global);
         for (v, ests) in &a.per_vertex {
             assert_eq!(ests, &b.per_vertex[v], "vertex {v}");
+            assert_eq!(ests, &c.per_vertex[v], "process vertex {v}");
         }
     }
 

@@ -138,6 +138,25 @@ impl QueryEngine {
         }
     }
 
+    /// Comm statistics of the epoch that accumulated this engine's
+    /// sketch, when it was accumulated in this process: comm backend
+    /// (`sequential`/`threaded`/`process`) plus per-rank message, byte
+    /// and flush counts. `None` for mapped or disk-loaded engines, whose
+    /// accumulation happened elsewhere.
+    pub fn accumulation_stats(&self) -> Option<&CommStats> {
+        match &self.data {
+            // a real epoch always records per-rank counters (one entry
+            // per rank, even for an empty stream); disk-load paths leave
+            // the default stats with an empty per_rank vector
+            EngineData::Heap(ds)
+                if !ds.accumulation_stats.per_rank.is_empty() =>
+            {
+                Some(&ds.accumulation_stats)
+            }
+            _ => None,
+        }
+    }
+
     /// Private heap bytes holding sketch data. Mapped engines report 0 —
     /// their registers live in the (shared, demand-paged) file mapping,
     /// which is what makes N processes on one snapshot cheap.

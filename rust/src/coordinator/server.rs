@@ -11,6 +11,8 @@
 //! UNION <x> [<y> ...]  → <estimate> | NONE
 //! STATS                → vertices=<n> ranks=<p> p=<p> mem=<bytes>
 //!                        dense=<n> mode=<heap|mmap> resident=<bytes>
+//!                        comm=<sequential|threaded|process|none>
+//!                        [rank<i>=<msgs>/<bytes>/<flushes> ...]
 //! QUIT                 → BYE (closes the connection)
 //! ```
 //!
@@ -19,6 +21,12 @@
 //! reports `mem=<bytes> mode=heap resident=0`, a snapshot-backed one
 //! `mem=0 mode=mmap resident=<file len>` — so operators can confirm that
 //! N processes serving one snapshot share a single page-cache copy.
+//!
+//! `comm` names the comm backend that accumulated the sketch, and each
+//! `rank<i>` field reports that rank's inbound accumulation traffic
+//! (messages/bytes/flushes), so operators can spot partition skew from a
+//! live server. Engines loaded from disk report `comm=none` — their
+//! accumulation happened in another process.
 //!
 //! Unknown commands answer `ERR <reason>`. One thread per connection; the
 //! engine is shared read-only. Finished connection threads are reaped in
@@ -214,16 +222,31 @@ fn respond(line: &str, engine: &QueryEngine) -> Response {
             Ok(_) => Response::Line("ERR usage: UNION <x> [<y> ...]".into()),
             Err(e) => Response::Line(format!("ERR {e}")),
         },
-        "STATS" => Response::Line(format!(
-            "vertices={} ranks={} p={} mem={} dense={} mode={} resident={}",
-            engine.num_vertices(),
-            engine.num_ranks(),
-            engine.config().p(),
-            engine.heap_bytes(),
-            engine.num_dense_sketches(),
-            engine.backing_mode(),
-            engine.resident_bytes()
-        )),
+        "STATS" => {
+            let mut line = format!(
+                "vertices={} ranks={} p={} mem={} dense={} mode={} resident={}",
+                engine.num_vertices(),
+                engine.num_ranks(),
+                engine.config().p(),
+                engine.heap_bytes(),
+                engine.num_dense_sketches(),
+                engine.backing_mode(),
+                engine.resident_bytes()
+            );
+            match engine.accumulation_stats() {
+                Some(cs) => {
+                    line.push_str(&format!(" comm={}", cs.mode.name()));
+                    for (r, pr) in cs.per_rank.iter().enumerate() {
+                        line.push_str(&format!(
+                            " rank{r}={}/{}/{}",
+                            pr.messages, pr.bytes, pr.flushes
+                        ));
+                    }
+                }
+                None => line.push_str(" comm=none"),
+            }
+            Response::Line(line)
+        }
         "QUIT" => Response::Bye,
         other => Response::Line(format!("ERR unknown command {other:?}")),
     }
@@ -290,6 +313,11 @@ mod tests {
         assert!(resp[5].starts_with("vertices=34"), "{:?}", resp[5]);
         assert!(resp[5].contains("mode=heap"), "{:?}", resp[5]);
         assert!(resp[5].contains("resident="), "{:?}", resp[5]);
+        // accumulated in-process on 2 sequential ranks: comm backend and
+        // both ranks' message/byte/flush counters are reported
+        assert!(resp[5].contains("comm=sequential"), "{:?}", resp[5]);
+        assert!(resp[5].contains("rank0="), "{:?}", resp[5]);
+        assert!(resp[5].contains("rank1="), "{:?}", resp[5]);
         assert!(resp[6].starts_with("ERR"));
         assert_eq!(resp[7], "BYE");
         server.stop();
@@ -307,6 +335,8 @@ mod tests {
         // mmap on 64-bit unix; the heap fallback elsewhere — either way the
         // snapshot resident size (the file length) is reported
         assert!(resp[0].contains(&expected_mode), "{:?}", resp[0]);
+        // loaded engines weren't accumulated here: no comm stats to report
+        assert!(resp[0].contains("comm=none"), "{:?}", resp[0]);
         let resident: u64 = resp[0]
             .split_whitespace()
             .find_map(|t| t.strip_prefix("resident="))

@@ -20,7 +20,10 @@
 
 use std::collections::HashMap;
 
-use crate::comm::{run_epoch, Actor, Backend, CommStats, Outbox};
+use crate::comm::{
+    codec, run_epoch_with, run_epoch_wire, Actor, Backend, CommStats,
+    FlushPolicy, Outbox, WireActor, WireError,
+};
 use crate::graph::stream::{EdgeStream, MemoryStream};
 use crate::graph::{Edge, VertexId};
 use crate::hll::{Estimator, Hll, HllConfig, SketchStore};
@@ -204,6 +207,8 @@ impl DegreeSketch {
 pub struct AccumulateOptions {
     pub backend: Backend,
     pub partitioner: Partitioner,
+    /// Comm-plane flush policy (ignored by the sequential backend).
+    pub flush: FlushPolicy,
 }
 
 impl Default for AccumulateOptions {
@@ -211,6 +216,7 @@ impl Default for AccumulateOptions {
         Self {
             backend: Backend::Sequential,
             partitioner: Partitioner::RoundRobin,
+            flush: FlushPolicy::default(),
         }
     }
 }
@@ -245,6 +251,20 @@ impl Actor for AccumActor {
     }
 }
 
+impl WireActor for AccumActor {
+    fn write_state(&self, buf: &mut Vec<u8>) {
+        // on_idle has always landed the partial batch by Stop time
+        debug_assert!(self.batch.is_empty(), "batch flushed at idle");
+        codec::encode_store_into(&self.store, buf);
+    }
+
+    fn read_state(&mut self, input: &mut &[u8]) -> Result<(), WireError> {
+        self.store = codec::decode_store(*self.store.config(), input)?;
+        self.batch.clear();
+        Ok(())
+    }
+}
+
 /// **Algorithm 1**: accumulate a DegreeSketch over `ranks` processors from
 /// pre-sharded substreams (one per rank; see [`EdgeStream::shard`]).
 pub fn accumulate(
@@ -264,7 +284,7 @@ pub fn accumulate(
             batch: Vec::new(),
         })
         .collect();
-    let stats = run_epoch(opts.backend, &mut actors);
+    let stats = run_epoch_wire(opts.backend, &mut actors, opts.flush);
     DegreeSketch::from_parts(
         config,
         opts.partitioner,
@@ -315,7 +335,8 @@ impl Actor for ReferenceActor {
 /// The pre-arena reference path: one heap-allocated [`Hll`] per vertex,
 /// one binary-search insert per message. Kept as the semantic baseline —
 /// parity tests assert [`accumulate`] matches it register-for-register —
-/// and as the "before" side of the accumulation microbench.
+/// and as the "before" side of the accumulation microbench. In-memory
+/// backends only (it has no wire-state codec).
 pub fn accumulate_reference(
     substreams: Vec<MemoryStream>,
     config: HllConfig,
@@ -333,7 +354,7 @@ pub fn accumulate_reference(
             shard: HashMap::new(),
         })
         .collect();
-    let stats = run_epoch(opts.backend, &mut actors);
+    let stats = run_epoch_with(opts.backend, &mut actors, opts.flush);
     DegreeSketch::from_parts(
         config,
         opts.partitioner,
@@ -400,15 +421,31 @@ mod tests {
                 ..Default::default()
             },
         );
+        let prc = accumulate_stream(
+            &stream,
+            3,
+            cfg(),
+            AccumulateOptions {
+                backend: Backend::Process,
+                ..Default::default()
+            },
+        );
         // sketches are order-insensitive: shards must match exactly
         for (v, h) in seq.iter() {
             assert_eq!(Some(h), thr.sketch(v), "vertex {v}");
+            assert_eq!(Some(h), prc.sketch(v), "process vertex {v}");
         }
         assert_eq!(seq.num_vertices(), thr.num_vertices());
+        assert_eq!(seq.num_vertices(), prc.num_vertices());
         assert_eq!(
             seq.accumulation_stats.messages,
             thr.accumulation_stats.messages
         );
+        assert_eq!(
+            seq.accumulation_stats.messages,
+            prc.accumulation_stats.messages
+        );
+        assert_eq!(prc.accumulation_stats.mode, Backend::Process);
     }
 
     #[test]

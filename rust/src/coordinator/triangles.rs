@@ -22,7 +22,14 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::comm::{run_epoch, Actor, Backend, CommStats, Outbox};
+use crate::comm::codec::{
+    decode_hll, encode_hll_into, get_f64, get_u32, get_u64, get_u8, put_f64,
+    put_u32, put_u64, put_u8,
+};
+use crate::comm::{
+    run_epoch_wire, Actor, Backend, CommStats, FlushPolicy, Outbox,
+    WireActor, WireError, WireMsg,
+};
 use crate::graph::stream::{EdgeStream, MemoryStream};
 use crate::graph::{canonical, Edge, VertexId};
 use crate::hll::{
@@ -80,6 +87,8 @@ pub struct TriangleOptions {
     /// other (their estimates are unreliable). Off by default, as in the
     /// paper's main algorithms; the fig7 bench ablates it.
     pub discard_dominated: bool,
+    /// Comm-plane flush policy (ignored by the sequential backend).
+    pub flush: FlushPolicy,
 }
 
 impl Default for TriangleOptions {
@@ -89,6 +98,7 @@ impl Default for TriangleOptions {
             k: 100,
             intersect: IntersectBackend::default(),
             discard_dominated: false,
+            flush: FlushPolicy::default(),
         }
     }
 }
@@ -112,7 +122,10 @@ pub struct TriangleResult<I> {
 /// Cross-rank EDGE forwards buffered per destination before a FAN flush.
 const TRI_FAN_BATCH: usize = 1024;
 
-enum TriMsg {
+/// Algorithms 3–5's message alphabet (public so the comm-plane property
+/// tests can round-trip it through the wire codec).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TriMsg {
     /// (x, y) delivered to f(x).
     Edge(VertexId, VertexId),
     /// (D[x], x, targets) delivered to f(y). Sent only when f(y) is a
@@ -123,6 +136,56 @@ enum TriMsg {
     Fan(Hll, VertexId, Vec<VertexId>),
     /// (x, T̃(xy)) delivered to f(x) — Algorithm 5 only.
     Est(VertexId, f64),
+}
+
+const TRI_TAG_EDGE: u8 = 0;
+const TRI_TAG_FAN: u8 = 1;
+const TRI_TAG_EST: u8 = 2;
+
+impl WireMsg for TriMsg {
+    fn encode_into(&self, buf: &mut Vec<u8>) {
+        match self {
+            TriMsg::Edge(x, y) => {
+                put_u8(buf, TRI_TAG_EDGE);
+                put_u64(buf, *x);
+                put_u64(buf, *y);
+            }
+            TriMsg::Fan(sketch, x, targets) => {
+                put_u8(buf, TRI_TAG_FAN);
+                encode_hll_into(sketch, buf);
+                put_u64(buf, *x);
+                put_u32(buf, targets.len() as u32);
+                for &t in targets {
+                    put_u64(buf, t);
+                }
+            }
+            TriMsg::Est(x, t_xy) => {
+                put_u8(buf, TRI_TAG_EST);
+                put_u64(buf, *x);
+                put_f64(buf, *t_xy);
+            }
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self, WireError> {
+        match get_u8(input)? {
+            TRI_TAG_EDGE => {
+                Ok(TriMsg::Edge(get_u64(input)?, get_u64(input)?))
+            }
+            TRI_TAG_FAN => {
+                let sketch = decode_hll(input)?;
+                let x = get_u64(input)?;
+                let n = get_u32(input)? as usize;
+                let mut targets = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    targets.push(get_u64(input)?);
+                }
+                Ok(TriMsg::Fan(sketch, x, targets))
+            }
+            TRI_TAG_EST => Ok(TriMsg::Est(get_u64(input)?, get_f64(input)?)),
+            other => Err(WireError::Invalid(format!("bad TriMsg tag {other}"))),
+        }
+    }
 }
 
 #[derive(Clone, Copy, PartialEq, Eq)]
@@ -360,6 +423,58 @@ impl Actor for TriActor {
     }
 }
 
+impl WireActor for TriActor {
+    fn write_state(&self, buf: &mut Vec<u8>) {
+        // on_idle drained every deferred buffer before Stop
+        debug_assert!(self.pending.is_empty());
+        debug_assert!(self.fwd.iter().all(Vec::is_empty));
+        put_f64(buf, self.tri_sum);
+        put_u64(buf, self.pairs_estimated);
+        put_u64(buf, self.pairs_dominated);
+        let heap = self.edge_heap.clone().into_sorted_vec();
+        put_u32(buf, heap.len() as u32);
+        for (score, (u, v)) in heap {
+            put_f64(buf, score);
+            put_u64(buf, u);
+            put_u64(buf, v);
+        }
+        let mut counts: Vec<(VertexId, f64)> = self
+            .vertex_counts
+            .iter()
+            .map(|(&v, &c)| (v, c))
+            .collect();
+        counts.sort_unstable_by_key(|&(v, _)| v);
+        put_u32(buf, counts.len() as u32);
+        for (v, c) in counts {
+            put_u64(buf, v);
+            put_f64(buf, c);
+        }
+    }
+
+    fn read_state(&mut self, input: &mut &[u8]) -> Result<(), WireError> {
+        self.tri_sum = get_f64(input)?;
+        self.pairs_estimated = get_u64(input)?;
+        self.pairs_dominated = get_u64(input)?;
+        let n = get_u32(input)? as usize;
+        let mut heap = TopK::new(self.opts.k);
+        for _ in 0..n {
+            let score = get_f64(input)?;
+            let u = get_u64(input)?;
+            let v = get_u64(input)?;
+            heap.insert(score, (u, v));
+        }
+        self.edge_heap = heap;
+        let m = get_u32(input)? as usize;
+        let mut counts = HashMap::with_capacity(m.min(1 << 20));
+        for _ in 0..m {
+            let v = get_u64(input)?;
+            counts.insert(v, get_f64(input)?);
+        }
+        self.vertex_counts = counts;
+        Ok(())
+    }
+}
+
 fn run_chassis(
     ds: &Arc<DegreeSketch>,
     substreams: &[MemoryStream],
@@ -367,6 +482,12 @@ fn run_chassis(
     mode: Mode,
 ) -> (Vec<TriActor>, CommStats, f64) {
     assert_eq!(substreams.len(), ds.num_ranks());
+    assert!(
+        !(opts.backend == Backend::Process
+            && matches!(opts.intersect, IntersectBackend::Batched { .. })),
+        "a batched intersect executor (PJRT service) cannot be shared \
+         across forked workers; use the mle/ix backends with --backend process"
+    );
     let start = std::time::Instant::now();
     let mut actors: Vec<TriActor> = substreams
         .iter()
@@ -388,7 +509,7 @@ fn run_chassis(
             fwd: vec![Vec::new(); ds.num_ranks()],
         })
         .collect();
-    let comm = run_epoch(opts.backend, &mut actors);
+    let comm = run_epoch_wire(opts.backend, &mut actors, opts.flush);
     let seconds = start.elapsed().as_secs_f64();
     (actors, comm, seconds)
 }
@@ -571,14 +692,19 @@ mod tests {
         let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(2);
         let (ds_a, sh_a) = setup(&edges, 3, 10, Backend::Sequential);
         let (ds_b, sh_b) = setup(&edges, 3, 10, Backend::Threaded);
-        let opts = TriangleOptions {
+        let (ds_c, sh_c) = setup(&edges, 3, 10, Backend::Process);
+        let mk = |backend| TriangleOptions {
+            backend,
             k: 20,
             ..Default::default()
         };
-        let a = edge_triangle_heavy_hitters(&ds_a, &sh_a, &opts);
-        let b = edge_triangle_heavy_hitters(&ds_b, &sh_b, &opts);
+        let a = edge_triangle_heavy_hitters(&ds_a, &sh_a, &mk(Backend::Sequential));
+        let b = edge_triangle_heavy_hitters(&ds_b, &sh_b, &mk(Backend::Threaded));
+        let c = edge_triangle_heavy_hitters(&ds_c, &sh_c, &mk(Backend::Process));
         assert!((a.global_estimate - b.global_estimate).abs() < 1e-9);
+        assert!((a.global_estimate - c.global_estimate).abs() < 1e-9);
         assert_eq!(a.heavy_hitters.len(), b.heavy_hitters.len());
+        assert_eq!(a.heavy_hitters.len(), c.heavy_hitters.len());
         // same estimates per returned edge (identical sketches both ways)
         let to_map = |r: &TriangleResult<Edge>| -> HashMap<Edge, u64> {
             r.heavy_hitters
@@ -587,6 +713,7 @@ mod tests {
                 .collect()
         };
         assert_eq!(to_map(&a), to_map(&b));
+        assert_eq!(to_map(&a), to_map(&c));
     }
 
     #[test]

@@ -3,6 +3,8 @@
 //! ```text
 //! degreesketch generate   --spec rmat:18:16 --seed 1 --out g.txt
 //! degreesketch accumulate --graph g.txt --ranks 8 --p 12 --out sketch.d/
+//!                         [--backend sequential|threaded|process]
+//!                         [--flush-threshold N] [--fixed-flush]
 //! degreesketch query      --sketch sketch.d/ deg 42
 //! degreesketch serve      --sketch sketch.d/|sketch.snap --addr 127.0.0.1:7171
 //! degreesketch snapshot   create  --sketch sketch.d/ --out sketch.snap
@@ -19,7 +21,11 @@
 //! ```
 //!
 //! Every subcommand also honors `--config file.toml` and repeated
-//! `--set section.key=value` overrides.
+//! `--set section.key=value` overrides. Epoch-running subcommands
+//! (`accumulate`, `anf`, `triangles`, `snapshot create --graph`) accept
+//! `--backend sequential|threaded|process` (process = forked workers
+//! over Unix sockets), `--flush-threshold N` and `--fixed-flush` (pin
+//! the adaptive per-destination flush thresholds).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -27,7 +33,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use degreesketch::cli::Args;
-use degreesketch::comm::Backend;
+use degreesketch::comm::{Backend, FlushPolicy};
 use degreesketch::config::Config;
 use degreesketch::coordinator::anf::{neighborhood_approximation, AnfOptions};
 use degreesketch::coordinator::sketch::{
@@ -119,6 +125,29 @@ fn backend_of(args: &Args, config: &Config) -> Result<Backend> {
     }
 }
 
+/// Comm-plane flush policy: `comm.*` config keys overridden by
+/// `--flush-threshold N` and pinned fixed by `--fixed-flush`.
+fn flush_policy_of(args: &Args, config: &Config) -> Result<FlushPolicy> {
+    let mut policy = config.flush_policy()?;
+    if let Some(raw) = args.get("flush-threshold") {
+        let t: usize = raw
+            .parse()
+            .with_context(|| format!("bad --flush-threshold {raw:?}"))?;
+        if t == 0 {
+            bail!("--flush-threshold must be positive");
+        }
+        policy = if policy.adaptive {
+            FlushPolicy::adaptive(t)
+        } else {
+            FlushPolicy::pinned(t)
+        };
+    }
+    if args.has("fixed-flush") {
+        policy = FlushPolicy::pinned(policy.threshold);
+    }
+    Ok(policy)
+}
+
 fn cmd_generate(args: &Args) -> Result<()> {
     let spec_str = args.require("spec")?.to_string();
     let seed = args.get_u64("seed", 42)?;
@@ -148,6 +177,7 @@ fn cmd_accumulate(args: &Args, config: &Config) -> Result<()> {
         args.get_u64("hash-seed", config.get_int("hll.seed", 0x5EED) as u64)?;
     let out = args.require("out")?.to_string();
     let backend = backend_of(args, config)?;
+    let flush = flush_policy_of(args, config)?;
     args.finish()?;
 
     let stream = MemoryStream::new(edges);
@@ -159,14 +189,16 @@ fn cmd_accumulate(args: &Args, config: &Config) -> Result<()> {
         AccumulateOptions {
             backend,
             partitioner: config.partitioner()?,
+            flush,
         },
     );
     let secs = start.elapsed().as_secs_f64();
     println!(
-        "accumulated {} vertex sketches on {} ranks in {:.3}s \
+        "accumulated {} vertex sketches on {} ranks ({}) in {:.3}s \
          ({} messages, {} bytes in sketches)",
         ds.num_vertices(),
         ranks,
+        backend.name(),
         secs,
         ds.accumulation_stats.messages,
         ds.memory_bytes()
@@ -266,6 +298,7 @@ fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
                     config.get_int("hll.seed", 0x5EED) as u64,
                 )?;
                 let backend = backend_of(args, config)?;
+                let flush = flush_policy_of(args, config)?;
                 args.finish()?;
                 let ds = accumulate_stream(
                     &MemoryStream::new(edges),
@@ -274,6 +307,7 @@ fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
                     AccumulateOptions {
                         backend,
                         partitioner: config.partitioner()?,
+                        flush,
                     },
                 );
                 QueryEngine::new(ds).save_snapshot(Path::new(&out))?
@@ -380,6 +414,7 @@ fn cmd_anf(args: &Args, config: &Config) -> Result<()> {
     let p = args.get_u8("p", config.get_int("hll.p", 8) as u8)?;
     let max_t = args.get_usize("max-t", 5)?;
     let backend = backend_of(args, config)?;
+    let flush = flush_policy_of(args, config)?;
     let want_exact = args.has("exact");
     args.finish()?;
 
@@ -393,6 +428,7 @@ fn cmd_anf(args: &Args, config: &Config) -> Result<()> {
         AccumulateOptions {
             backend,
             partitioner: config.partitioner()?,
+            flush,
         },
     );
     let accum_s = t0.elapsed().as_secs_f64();
@@ -405,6 +441,7 @@ fn cmd_anf(args: &Args, config: &Config) -> Result<()> {
             max_t,
             estimator: config.estimator()?,
             keep_layers: false,
+            flush,
         },
     );
     println!("accumulation: {accum_s:.3}s");
@@ -444,11 +481,18 @@ fn cmd_triangles(args: &Args, config: &Config) -> Result<()> {
     let p = args.get_u8("p", config.get_int("hll.p", 12) as u8)?;
     let k = args.get_usize("k", config.get_int("triangles.k", 100) as usize)?;
     let backend = backend_of(args, config)?;
+    let flush = flush_policy_of(args, config)?;
     let intersect_kind = args.get_or("intersect", "mle").to_string();
     let want_exact = args.has("exact");
     let discard = args.has("discard-dominated")
         || config.get_bool("triangles.discard_dominated", false);
     args.finish()?;
+    if backend == Backend::Process && intersect_kind == "pjrt" {
+        bail!(
+            "--intersect pjrt cannot run on --backend process (the PJRT \
+             service cannot be shared across forked workers); use mle or ix"
+        );
+    }
 
     // keep the PJRT service alive for the whole run
     let mut _service_keepalive: Option<PjrtService> = None;
@@ -477,6 +521,7 @@ fn cmd_triangles(args: &Args, config: &Config) -> Result<()> {
         AccumulateOptions {
             backend,
             partitioner: config.partitioner()?,
+            flush,
         },
     ));
     let accum_s = t0.elapsed().as_secs_f64();
@@ -486,6 +531,7 @@ fn cmd_triangles(args: &Args, config: &Config) -> Result<()> {
         k,
         intersect,
         discard_dominated: discard,
+        flush,
     };
 
     println!("accumulation: {accum_s:.3}s");

@@ -1,0 +1,277 @@
+//! Comm-plane integration tests: wire-codec round-trips for all three
+//! coordinator message enums (with corrupt/truncated-frame rejection,
+//! mirroring `tests/snapshot.rs` style) and the headline cross-backend
+//! equivalence — sequential, threaded and **process** (forked workers
+//! over Unix sockets) must produce identical DEG / ANF / triangle
+//! answers on a generated graph.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use degreesketch::comm::codec::{
+    decode_frame, decode_msgs, encode_msg_frame,
+};
+use degreesketch::comm::{Backend, WireMsg};
+use degreesketch::coordinator::anf::{
+    neighborhood_approximation, AnfMsg, AnfOptions,
+};
+use degreesketch::coordinator::sketch::{
+    accumulate_stream, AccumulateOptions, DegreeSketch,
+};
+use degreesketch::coordinator::triangles::TriMsg;
+use degreesketch::coordinator::{
+    edge_triangle_heavy_hitters, vertex_triangle_heavy_hitters,
+    TriangleOptions,
+};
+use degreesketch::graph::gen::GraphSpec;
+use degreesketch::graph::stream::{EdgeStream, MemoryStream};
+use degreesketch::graph::Edge;
+use degreesketch::hash::Xoshiro256ss;
+use degreesketch::hll::{Hll, HllConfig};
+
+fn random_hll(rng: &mut Xoshiro256ss, p: u8) -> Hll {
+    let mut h = Hll::new(HllConfig::new(p, rng.next_u64()));
+    for _ in 0..rng.next_below(1500) {
+        h.insert(rng.next_u64());
+    }
+    h
+}
+
+fn random_anf_msg(rng: &mut Xoshiro256ss) -> AnfMsg {
+    if rng.next_below(2) == 0 {
+        AnfMsg::Edge(rng.next_u64(), rng.next_u64())
+    } else {
+        let targets = (0..rng.next_below(20)).map(|_| rng.next_u64()).collect();
+        AnfMsg::Fan(random_hll(rng, 8), targets)
+    }
+}
+
+fn random_tri_msg(rng: &mut Xoshiro256ss) -> TriMsg {
+    match rng.next_below(3) {
+        0 => TriMsg::Edge(rng.next_u64(), rng.next_u64()),
+        1 => {
+            let targets =
+                (0..rng.next_below(20)).map(|_| rng.next_u64()).collect();
+            TriMsg::Fan(random_hll(rng, 10), rng.next_u64(), targets)
+        }
+        _ => TriMsg::Est(rng.next_u64(), f64::from_bits(rng.next_u64() >> 12)),
+    }
+}
+
+fn round_trip_frames<M: WireMsg + PartialEq + std::fmt::Debug>(
+    label: &str,
+    make: impl Fn(&mut Xoshiro256ss) -> M,
+) {
+    let mut rng = Xoshiro256ss::new(0x0C0DEC);
+    for case in 0..40 {
+        let msgs: Vec<M> =
+            (0..rng.next_below(30) + 1).map(|_| make(&mut rng)).collect();
+        let token = rng.next_u64();
+        let (mut scratch, mut wire) = (Vec::new(), Vec::new());
+        encode_msg_frame(0, token, &msgs, &mut scratch, &mut wire);
+        let mut input = wire.as_slice();
+        let frame = decode_frame(&mut input)
+            .unwrap_or_else(|e| panic!("{label} case {case}: {e}"));
+        assert!(input.is_empty(), "{label} case {case}: trailing bytes");
+        assert_eq!(frame.token, token, "{label} case {case}");
+        let back: Vec<M> = decode_msgs(&frame)
+            .unwrap_or_else(|e| panic!("{label} case {case}: {e}"));
+        assert_eq!(back, msgs, "{label} case {case}");
+    }
+}
+
+#[test]
+fn anf_messages_round_trip_through_frames() {
+    round_trip_frames("AnfMsg", random_anf_msg);
+}
+
+#[test]
+fn tri_messages_round_trip_through_frames() {
+    round_trip_frames("TriMsg", random_tri_msg);
+}
+
+#[test]
+fn edge_messages_round_trip_through_frames() {
+    round_trip_frames("Edge", |rng| (rng.next_u64(), rng.next_u64()));
+}
+
+#[test]
+fn corrupt_frames_never_decode() {
+    // every single-byte corruption of an encoded frame must be rejected
+    // (CRC over header + payload), for each message alphabet
+    let mut rng = Xoshiro256ss::new(77);
+    let msgs: Vec<AnfMsg> = (0..6).map(|_| random_anf_msg(&mut rng)).collect();
+    let (mut scratch, mut wire) = (Vec::new(), Vec::new());
+    encode_msg_frame(0, 1234, &msgs, &mut scratch, &mut wire);
+    // sample positions (full sweep is covered in the codec unit tests)
+    for i in (0..wire.len()).step_by(7) {
+        let mut bad = wire.clone();
+        bad[i] ^= 0x20;
+        let mut input = bad.as_slice();
+        let outcome = decode_frame(&mut input)
+            .and_then(|f| decode_msgs::<AnfMsg>(&f).map(|_| ()));
+        assert!(outcome.is_err(), "corrupt byte {i} accepted");
+    }
+    // and every truncation
+    for cut in 0..wire.len() {
+        let mut input = &wire[..cut];
+        assert!(decode_frame(&mut input).is_err(), "cut {cut} accepted");
+    }
+    // trailing payload bytes after the declared count are rejected too
+    let tri: Vec<TriMsg> = (0..3).map(|_| random_tri_msg(&mut rng)).collect();
+    let mut payload = Vec::new();
+    for m in &tri {
+        m.encode_into(&mut payload);
+    }
+    payload.push(0xAB);
+    let mut framed = Vec::new();
+    degreesketch::comm::codec::encode_frame_into(
+        0,
+        tri.len() as u32,
+        9,
+        &payload,
+        &mut framed,
+    );
+    let mut input = framed.as_slice();
+    let frame = decode_frame(&mut input).unwrap();
+    assert!(decode_msgs::<TriMsg>(&frame).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Cross-backend equivalence (the PR's acceptance bar)
+// ---------------------------------------------------------------------
+
+struct Answers {
+    ds: DegreeSketch,
+    anf_global: Vec<f64>,
+    anf_per_vertex: HashMap<u64, Vec<f64>>,
+    tri_global: f64,
+    tri_pairs: u64,
+    edge_hh: Vec<(f64, Edge)>,
+    vertex_hh: Vec<(f64, u64)>,
+}
+
+fn run_all(edges: &[Edge], backend: Backend) -> Answers {
+    let ranks = 4;
+    let stream = MemoryStream::new(edges.to_vec());
+    let cfg = HllConfig::new(8, 0xB0B);
+    let ds = accumulate_stream(
+        &stream,
+        ranks,
+        cfg,
+        AccumulateOptions {
+            backend,
+            ..Default::default()
+        },
+    );
+    let shards = stream.shard(ranks);
+    let anf = neighborhood_approximation(
+        &ds,
+        &shards,
+        AnfOptions {
+            backend,
+            max_t: 3,
+            ..Default::default()
+        },
+    );
+    let ds = Arc::new(ds);
+    let tri_opts = TriangleOptions {
+        backend,
+        // k exceeds |V| so heavy-hitter membership is "has a nonzero
+        // count" — no tie-broken cutoff to perturb across backends
+        k: 2000,
+        ..Default::default()
+    };
+    let e = edge_triangle_heavy_hitters(&ds, &shards, &tri_opts);
+    let v = vertex_triangle_heavy_hitters(&ds, &shards, &tri_opts);
+    Answers {
+        ds: Arc::try_unwrap(ds).ok().expect("sole owner"),
+        anf_global: anf.global,
+        anf_per_vertex: anf.per_vertex,
+        tri_global: e.global_estimate,
+        tri_pairs: e.pairs_estimated,
+        edge_hh: e.heavy_hitters,
+        vertex_hh: v.heavy_hitters,
+    }
+}
+
+#[test]
+fn sequential_threaded_and_process_answers_agree() {
+    let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
+    let seq = run_all(&edges, Backend::Sequential);
+    let thr = run_all(&edges, Backend::Threaded);
+    let prc = run_all(&edges, Backend::Process);
+
+    for other in [&thr, &prc] {
+        // DEG: sketches (hence every degree estimate) bit-identical
+        assert_eq!(seq.ds.num_vertices(), other.ds.num_vertices());
+        for (v, h) in seq.ds.iter() {
+            assert_eq!(Some(h), other.ds.sketch(v), "sketch {v}");
+        }
+        // ANF: estimates recorded in sorted vertex order — exact match
+        assert_eq!(seq.anf_global, other.anf_global);
+        for (v, ests) in &seq.anf_per_vertex {
+            assert_eq!(ests, &other.anf_per_vertex[v], "anf vertex {v}");
+        }
+        // Triangles: every pair's estimate is a pure function of two
+        // sketches, so the edge heavy-hitter map matches exactly
+        assert_eq!(seq.tri_pairs, other.tri_pairs);
+        assert!((seq.tri_global - other.tri_global).abs() < 1e-9);
+        let edge_map = |a: &Answers| -> HashMap<Edge, u64> {
+            a.edge_hh.iter().map(|&(s, e)| (e, s.to_bits())).collect()
+        };
+        assert_eq!(edge_map(&seq), edge_map(other));
+        // Vertex accumulators are float sums in arrival order: same
+        // members, values equal up to re-association
+        let vertex_map = |a: &Answers| -> HashMap<u64, f64> {
+            a.vertex_hh.iter().map(|&(s, v)| (v, s)).collect()
+        };
+        let (a, b) = (vertex_map(&seq), vertex_map(other));
+        assert_eq!(a.len(), b.len());
+        for (v, s) in &a {
+            let t = b.get(v).unwrap_or_else(|| panic!("vertex {v} missing"));
+            assert!(
+                (s - t).abs() <= 1e-6 * s.abs().max(1.0),
+                "vertex {v}: {s} vs {t}"
+            );
+        }
+    }
+
+    // the process run really crossed process boundaries
+    assert_eq!(prc.ds.accumulation_stats.mode, Backend::Process);
+    assert!(prc.ds.accumulation_stats.bytes > 0);
+    let per: u64 = prc
+        .ds
+        .accumulation_stats
+        .per_rank
+        .iter()
+        .map(|r| r.messages)
+        .sum();
+    assert_eq!(per, prc.ds.accumulation_stats.messages);
+}
+
+#[test]
+fn process_backend_stats_are_consistent_on_skewed_graphs() {
+    // a hub-heavy graph: per-rank counters must expose the skew and sum
+    // to the totals
+    let edges = GraphSpec::parse("ba:500:5").unwrap().generate(3);
+    let stream = MemoryStream::new(edges);
+    let ds = accumulate_stream(
+        &stream,
+        4,
+        HllConfig::new(8, 0x5EED),
+        AccumulateOptions {
+            backend: Backend::Process,
+            ..Default::default()
+        },
+    );
+    let cs = &ds.accumulation_stats;
+    assert_eq!(cs.per_rank.len(), 4);
+    let msgs: u64 = cs.per_rank.iter().map(|r| r.messages).sum();
+    let flushes: u64 = cs.per_rank.iter().map(|r| r.flushes).sum();
+    let bytes: u64 = cs.per_rank.iter().map(|r| r.bytes).sum();
+    assert_eq!(msgs, cs.messages);
+    assert_eq!(flushes, cs.flushes);
+    assert_eq!(bytes, cs.bytes);
+    assert!(cs.per_rank.iter().all(|r| r.messages > 0));
+}
