@@ -19,6 +19,7 @@
 //! byte is validated, and the frame CRC (computed over header *and*
 //! payload) rejects corruption before any message reaches an actor.
 
+use super::outbox::FlushPolicy;
 use crate::hll::{kernels, Hll, HllConfig, SketchRef, SketchStore};
 use crate::util::crc32::Crc32;
 
@@ -200,9 +201,102 @@ pub fn encode_sketch_ref_into(view: SketchRef<'_>, buf: &mut Vec<u8>) {
     }
 }
 
-/// Decode a sketch, validating every field; the dense histogram is
-/// rebuilt (derived state, as in snapshot load and `hll::serde`).
-pub fn decode_hll(input: &mut &[u8]) -> Result<Hll, WireError> {
+/// Does the in-memory `(u16, u8)` tuple match the packed 4-byte
+/// `[idx_lo, idx_hi, val, pad]` record on the wire (modulo the padding
+/// byte)? Shared with the snapshot reader — the wire pair encoding *is*
+/// the snapshot pair encoding, so one probe gates both zero-copy casts.
+pub(crate) fn pair_abi_matches() -> bool {
+    if cfg!(target_endian = "big")
+        || std::mem::size_of::<(u16, u8)>() != 4
+        || std::mem::align_of::<(u16, u8)>() != 2
+    {
+        return false;
+    }
+    let probe: (u16, u8) = (0x0102, 0x03);
+    let base = std::ptr::addr_of!(probe) as usize;
+    let o0 = std::ptr::addr_of!(probe.0) as usize - base;
+    let o1 = std::ptr::addr_of!(probe.1) as usize - base;
+    o0 == 0 && o1 == 2
+}
+
+/// A validated sparse pair run: borrowed straight from the receive
+/// buffer when the host's `(u16, u8)` ABI matches the packed record and
+/// the bytes land 2-aligned, otherwise decoded to an owned copy (the
+/// portable fallback, same policy as the snapshot reader).
+#[derive(Debug, Clone)]
+pub enum PairRun<'a> {
+    Borrowed(&'a [(u16, u8)]),
+    Owned(Vec<(u16, u8)>),
+}
+
+impl PairRun<'_> {
+    pub fn as_slice(&self) -> &[(u16, u8)] {
+        match self {
+            PairRun::Borrowed(p) => p,
+            PairRun::Owned(p) => p,
+        }
+    }
+}
+
+/// A decoded carried-HLL payload served as a **borrowed view into the
+/// receive buffer**: dense registers are always a borrowed byte slice,
+/// sparse pairs borrow when the LE/ABI cast gate passes (see
+/// [`PairRun`]). Merging a `SketchView` into a [`SketchStore`] touches
+/// no intermediate `Hll` — the allocation-free cross-rank merge path
+/// used by [`decode_store`] for seed/state payloads.
+#[derive(Debug, Clone)]
+pub enum SketchView<'a> {
+    Sparse {
+        config: HllConfig,
+        pairs: PairRun<'a>,
+    },
+    Dense {
+        config: HllConfig,
+        regs: &'a [u8],
+    },
+}
+
+impl SketchView<'_> {
+    pub fn config(&self) -> HllConfig {
+        match self {
+            SketchView::Sparse { config, .. }
+            | SketchView::Dense { config, .. } => *config,
+        }
+    }
+
+    /// Merge this view into `store[v]` — no owned `Hll`, no histogram
+    /// rebuild (the store's arenas maintain their own).
+    pub fn merge_into(&self, store: &mut SketchStore, v: u64) {
+        match self {
+            SketchView::Sparse { pairs, .. } => {
+                store.merge_pairs(v, pairs.as_slice())
+            }
+            SketchView::Dense { regs, .. } => store.merge_dense_regs(v, regs),
+        }
+    }
+
+    /// Materialize an owned sketch (the dense histogram is rebuilt —
+    /// derived state, never shipped).
+    pub fn to_hll(&self) -> Hll {
+        match self {
+            SketchView::Sparse { config, pairs } => {
+                Hll::from_sparse_parts(*config, pairs.as_slice().to_vec())
+            }
+            SketchView::Dense { config, regs } => {
+                let hist = kernels::histogram(regs, config.kmax());
+                Hll::from_dense_parts(*config, regs.to_vec(), hist)
+            }
+        }
+    }
+}
+
+/// Decode a sketch as a borrowed [`SketchView`], validating every
+/// field. This is the zero-copy FAN/state decode path: the returned
+/// view aliases `input`'s buffer (pair runs fall back to an owned copy
+/// only when the ABI/alignment gate fails).
+pub fn decode_sketch_view<'a>(
+    input: &mut &'a [u8],
+) -> Result<SketchView<'a>, WireError> {
     let tag = get_u8(input)?;
     let p = get_u8(input)?;
     if !(4..=16).contains(&p) {
@@ -224,7 +318,6 @@ pub fn decode_hll(input: &mut &[u8]) -> Result<Hll, WireError> {
                 )));
             }
             let recs = take(input, count * 4)?;
-            let mut pairs: Vec<(u16, u8)> = Vec::with_capacity(count);
             let mut prev: i32 = -1;
             for rec in recs.chunks_exact(4) {
                 let j = u16::from_le_bytes([rec[0], rec[1]]);
@@ -239,23 +332,54 @@ pub fn decode_hll(input: &mut &[u8]) -> Result<Hll, WireError> {
                     return Err(invalid("pair indices not strictly increasing"));
                 }
                 if x == 0 || x > kmax {
-                    return Err(invalid(format!("register value {x} out of range")));
+                    return Err(invalid(format!(
+                        "register value {x} out of range"
+                    )));
                 }
                 prev = j as i32;
-                pairs.push((j, x));
             }
-            Ok(Hll::from_sparse_parts(config, pairs))
+            let pairs = if pair_abi_matches() && recs.as_ptr() as usize % 2 == 0
+            {
+                // SAFETY: the `(u16, u8)` ABI was probed (size 4, u16 at
+                // offset 0, u8 at offset 2, LE host), the pointer is
+                // 2-aligned, `recs` holds exactly `count * 4` validated
+                // bytes, and the padding byte of every record is zero.
+                // The slice borrows from `input`'s buffer, which outlives
+                // the returned view by construction.
+                PairRun::Borrowed(unsafe {
+                    std::slice::from_raw_parts(
+                        recs.as_ptr() as *const (u16, u8),
+                        count,
+                    )
+                })
+            } else {
+                PairRun::Owned(
+                    recs.chunks_exact(4)
+                        .map(|rec| {
+                            (u16::from_le_bytes([rec[0], rec[1]]), rec[2])
+                        })
+                        .collect(),
+                )
+            };
+            Ok(SketchView::Sparse { config, pairs })
         }
         HLL_DENSE => {
-            let regs = take(input, r)?.to_vec();
+            let regs = take(input, r)?;
             if regs.iter().any(|&x| x > kmax) {
                 return Err(invalid("dense register value out of range"));
             }
-            let hist = kernels::histogram(&regs, kmax);
-            Ok(Hll::from_dense_parts(config, regs, hist))
+            Ok(SketchView::Dense { config, regs })
         }
         other => Err(invalid(format!("bad sketch tag {other}"))),
     }
+}
+
+/// Decode a sketch to an owned [`Hll`], validating every field; the
+/// dense histogram is rebuilt (derived state, as in snapshot load and
+/// `hll::serde`). One validation implementation: this is
+/// [`decode_sketch_view`] + materialize.
+pub fn decode_hll(input: &mut &[u8]) -> Result<Hll, WireError> {
+    Ok(decode_sketch_view(input)?.to_hll())
 }
 
 // ---------------------------------------------------------------------------
@@ -280,7 +404,9 @@ pub fn encode_store_into(store: &SketchStore, buf: &mut Vec<u8>) {
 
 /// Decode a [`SketchStore`] produced by [`encode_store_into`]. Every
 /// sketch must carry the expected `config`; vertex ids must be strictly
-/// increasing.
+/// increasing. Each sketch is decoded as a borrowed [`SketchView`] and
+/// merged straight from the input buffer into the store's arenas — the
+/// rebuild allocates nothing per sketch beyond the arenas themselves.
 pub fn decode_store(
     config: HllConfig,
     input: &mut &[u8],
@@ -294,15 +420,85 @@ pub fn decode_store(
             return Err(invalid("store vertices not strictly increasing"));
         }
         prev = Some(v);
-        let h = decode_hll(input)?;
-        if h.config() != &config {
+        let view = decode_sketch_view(input)?;
+        if view.config() != config {
             return Err(invalid(format!(
                 "store sketch config mismatch for vertex {v}"
             )));
         }
-        store.merge_hll(v, &h);
+        view.merge_into(&mut store, v);
     }
     Ok(store)
+}
+
+// ---------------------------------------------------------------------------
+// seed_state leg: epoch-input codecs (policy, config, edge partitions)
+// ---------------------------------------------------------------------------
+
+/// Encode a [`FlushPolicy`] (rides in every SEED frame so remote
+/// workers run the driver's flush policy instead of a default).
+pub fn encode_policy_into(policy: &FlushPolicy, buf: &mut Vec<u8>) {
+    put_u64(buf, policy.threshold as u64);
+    put_u8(buf, u8::from(policy.adaptive));
+    put_u64(buf, policy.min as u64);
+    put_u64(buf, policy.max as u64);
+}
+
+/// Decode a [`FlushPolicy`] produced by [`encode_policy_into`].
+pub fn decode_policy(input: &mut &[u8]) -> Result<FlushPolicy, WireError> {
+    let threshold = get_u64(input)? as usize;
+    let adaptive = match get_u8(input)? {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(invalid(format!("bad policy adaptive byte {other}")))
+        }
+    };
+    let min = get_u64(input)? as usize;
+    let max = get_u64(input)? as usize;
+    Ok(FlushPolicy {
+        threshold,
+        adaptive,
+        min,
+        max,
+    })
+}
+
+/// Encode the shared `(p, seed)` sketch config.
+pub fn encode_config_into(config: &HllConfig, buf: &mut Vec<u8>) {
+    put_u8(buf, config.p());
+    put_u64(buf, config.hasher().seed());
+}
+
+/// Decode a config written by [`encode_config_into`] (validates `p`).
+pub fn decode_config(input: &mut &[u8]) -> Result<HllConfig, WireError> {
+    let p = get_u8(input)?;
+    if !(4..=16).contains(&p) {
+        return Err(invalid(format!("config p {p} out of range")));
+    }
+    let seed = get_u64(input)?;
+    Ok(HllConfig::new(p, seed))
+}
+
+/// Encode an edge partition (a rank's substream σ_P).
+pub fn encode_edges_into(edges: &[(u64, u64)], buf: &mut Vec<u8>) {
+    put_u64(buf, edges.len() as u64);
+    for &(u, v) in edges {
+        put_u64(buf, u);
+        put_u64(buf, v);
+    }
+}
+
+/// Decode an edge partition written by [`encode_edges_into`].
+pub fn decode_edges(input: &mut &[u8]) -> Result<Vec<(u64, u64)>, WireError> {
+    let n = get_u64(input)? as usize;
+    // cap the pre-allocation: `n` is attacker-controlled until the
+    // loop actually yields that many edges
+    let mut edges = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        edges.push((get_u64(input)?, get_u64(input)?));
+    }
+    Ok(edges)
 }
 
 // ---------------------------------------------------------------------------
@@ -338,6 +534,31 @@ pub struct Frame<'a> {
     pub payload: &'a [u8],
 }
 
+/// Header (including the CRC, which covers header bytes `[0..24)` ++
+/// payload) for a frame whose payload will be written separately —
+/// multi-megabyte payloads (SEED frames carrying whole stores) ship as
+/// header-then-payload without being copied into one buffer first.
+pub fn encode_frame_header(
+    kind: u8,
+    count: u32,
+    token: u64,
+    payload: &[u8],
+) -> [u8; FRAME_HEADER_LEN] {
+    assert!(payload.len() <= MAX_FRAME_PAYLOAD, "oversized frame");
+    let mut head = [0u8; FRAME_HEADER_LEN];
+    head[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    head[4] = kind;
+    // [5..8) pad stays zero
+    head[8..12].copy_from_slice(&count.to_le_bytes());
+    head[12..16].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    head[16..24].copy_from_slice(&token.to_le_bytes());
+    let mut crc = Crc32::new();
+    crc.update(&head[..24]);
+    crc.update(payload);
+    head[24..28].copy_from_slice(&crc.finish().to_le_bytes());
+    head
+}
+
 /// Append one framed payload to `out`.
 pub fn encode_frame_into(
     kind: u8,
@@ -346,18 +567,8 @@ pub fn encode_frame_into(
     payload: &[u8],
     out: &mut Vec<u8>,
 ) {
-    assert!(payload.len() <= MAX_FRAME_PAYLOAD, "oversized frame");
-    let start = out.len();
-    put_u32(out, FRAME_MAGIC);
-    put_u8(out, kind);
-    out.extend_from_slice(&[0u8; 3]);
-    put_u32(out, count);
-    put_u32(out, payload.len() as u32);
-    put_u64(out, token);
-    let mut crc = Crc32::new();
-    crc.update(&out[start..start + 24]);
-    crc.update(payload);
-    put_u32(out, crc.finish());
+    let head = encode_frame_header(kind, count, token, payload);
+    out.extend_from_slice(&head);
     out.extend_from_slice(payload);
 }
 
@@ -573,6 +784,97 @@ mod tests {
         }
         assert_eq!(frame_len(&wire).unwrap(), Some(wire.len()));
         assert!(frame_len(b"XXXXmore bytes follow here..1234567890").is_err());
+    }
+
+    #[test]
+    fn sketch_view_decode_matches_owned_decode() {
+        // the borrowed view path must be observationally identical to
+        // the owned decode, aligned or not
+        Cases::new("codec_view_parity", 30).run(|rng| {
+            let p = 6 + (rng.next_below(7) as u8);
+            let h = random_hll(rng, p);
+            let mut buf = vec![0u8; rng.next_below(2) as usize]; // 0/1 pad
+            let pad = buf.len();
+            encode_hll_into(&h, &mut buf);
+
+            let mut owned_in = &buf[pad..];
+            let owned = decode_hll(&mut owned_in).unwrap();
+            assert_eq!(owned, h);
+
+            let mut view_in = &buf[pad..];
+            let view = decode_sketch_view(&mut view_in).unwrap();
+            assert!(view_in.is_empty());
+            assert_eq!(view.config(), *h.config());
+            assert_eq!(view.to_hll(), h, "pad={pad}");
+
+            // merging the view into a store equals merging the sketch
+            let mut a = SketchStore::new(*h.config());
+            let mut b = SketchStore::new(*h.config());
+            view.merge_into(&mut a, 7);
+            b.merge_hll(7, &h);
+            assert_eq!(a.to_hll(7), b.to_hll(7));
+        });
+    }
+
+    #[test]
+    fn sketch_view_borrows_when_aligned() {
+        // on a matching-ABI LE host, 2-aligned sparse records must come
+        // back borrowed; the 1-byte-shifted decode must still be correct
+        if !pair_abi_matches() {
+            return; // exotic host: owned fallback everywhere, covered above
+        }
+        let config = HllConfig::new(10, 0xA11);
+        let mut h = Hll::new(config);
+        for i in 0..20u64 {
+            h.insert(i.wrapping_mul(0x9E3779B97F4A7C15));
+        }
+        assert!(!h.is_dense());
+        for pad in [0usize, 1] {
+            let mut buf = vec![0u8; pad];
+            encode_hll_into(&h, &mut buf);
+            let mut input = &buf[pad..];
+            let view = decode_sketch_view(&mut input).unwrap();
+            let SketchView::Sparse { pairs, .. } = &view else {
+                panic!("sparse sketch must decode sparse");
+            };
+            // records start at pad + tag(1) + p(1) + seed(8) + count(4)
+            let rec_off = pad + 14;
+            let aligned = (buf[rec_off..].as_ptr() as usize) % 2 == 0;
+            match pairs {
+                PairRun::Borrowed(_) => assert!(aligned, "pad={pad}"),
+                PairRun::Owned(_) => assert!(!aligned, "pad={pad}"),
+            }
+            assert_eq!(view.to_hll(), h, "pad={pad}");
+        }
+    }
+
+    #[test]
+    fn policy_config_and_edges_round_trip() {
+        let policy = FlushPolicy {
+            threshold: 513,
+            adaptive: true,
+            min: 3,
+            max: 9999,
+        };
+        let mut buf = Vec::new();
+        encode_policy_into(&policy, &mut buf);
+        let config = HllConfig::new(11, 0xFACE);
+        encode_config_into(&config, &mut buf);
+        let edges = vec![(1u64, 2u64), (3, 4), (u64::MAX, 0)];
+        encode_edges_into(&edges, &mut buf);
+        let mut input = buf.as_slice();
+        assert_eq!(decode_policy(&mut input).unwrap(), policy);
+        assert_eq!(decode_config(&mut input).unwrap(), config);
+        assert_eq!(decode_edges(&mut input).unwrap(), edges);
+        assert!(input.is_empty());
+        // truncations reject
+        for cut in 0..buf.len() {
+            let mut short = &buf[..cut];
+            let outcome = decode_policy(&mut short)
+                .and_then(|_| decode_config(&mut short))
+                .and_then(|_| decode_edges(&mut short).map(|_| ()));
+            assert!(outcome.is_err(), "cut {cut} accepted");
+        }
     }
 
     #[test]

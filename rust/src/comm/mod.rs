@@ -1,4 +1,5 @@
-//! A YGM-like asynchronous communication substrate, in three layers.
+//! A YGM-like asynchronous communication substrate: three layers, four
+//! backends.
 //!
 //! The paper (§2) assumes each processor `P` has buffered send/receive
 //! queues `S[P]`, `R[P]` and alternates between **Send**, **Receive** and
@@ -9,18 +10,72 @@
 //! 1. **Codec** ([`codec`]) — [`WireMsg`] gives every coordinator message
 //!    a little-endian wire format; batches travel in CRC'd,
 //!    length-prefixed frames whose header carries the channel's
-//!    cumulative message counter (the termination token).
-//! 2. **Transport** ([`transport`], plus the three schedulers) — how a
+//!    cumulative message counter (the termination token). Epoch *inputs*
+//!    have codecs too (the **seed_state leg**: flush policy, `(p, seed)`
+//!    config, edge partitions, whole sketch stores), so an actor can be
+//!    constructed on a remote worker from bytes alone.
+//! 2. **Transport** ([`transport`], plus the four schedulers) — how a
 //!    flushed batch reaches its destination rank:
-//!    [`run_sequential`] moves it between in-process queues
-//!    (deterministic round-robin, the semantic reference for everything
-//!    else); [`run_threaded`] sends it over an in-memory channel to one
-//!    OS thread per rank; [`run_process`] encodes it onto a Unix-domain
-//!    socket between **forked worker processes** — true
-//!    distributed-memory execution, one writer/reader per peer.
+//!    * [`run_sequential`] moves it between in-process queues
+//!      (deterministic round-robin, the semantic reference and parity
+//!      anchor for everything else);
+//!    * [`run_threaded`] sends it over an in-memory channel to one OS
+//!      thread per rank;
+//!    * [`run_process`] frames it onto a Unix-domain socket between
+//!      **forked worker processes** on one host;
+//!    * [`tcp`] frames it onto a `TcpStream` between **independent
+//!      worker processes on any hosts** — the genuinely multi-host mode.
+//!
+//!    The two socket backends share one implementation of framing,
+//!    pending-write queues, token validation and termination
+//!    (`socket`, parameterized over the stream type); there is no
+//!    second copy of that loop.
 //! 3. **Policy** ([`FlushPolicy`], in [`outbox`]) — when a batch flushes:
 //!    per-destination thresholds that grow under pressure and shrink when
-//!    drains lag, or pin fixed for deterministic benches.
+//!    drains lag, pinnable for deterministic benches, and **warm-started**
+//!    across epochs ([`FlushPolicy::seeds_from_stats`]: epoch N+1's
+//!    thresholds start from what epoch N's [`CommStats`] observed).
+//!
+//! # The tcp fabric: rendezvous handshake
+//!
+//! The tcp backend bootstraps a mesh through a driver-side registrar
+//! (`rendezvous`), with a per-step deadline and a clear error naming the
+//! unreachable rank at every stage:
+//!
+//! ```text
+//! worker            registrar (driver)            worker's peers
+//!   |---- JOIN(rank) --->|
+//!   |<--- WELCOME(map) --|        map: rank → host:port (from --hosts)
+//!   |  bind listener at map[rank] (port 0 → ephemeral)
+//!   |---- BOUND(addr) -->|
+//!   |<--- MESH(final) ---|        sent only after ALL ranks are bound
+//!   |  dial every higher rank ----- HELLO(rank) ----->|
+//!   |  accept one conn from every lower rank          |
+//!   |---- MESHED ------->|
+//!   |<--- SEED ----------|        per epoch: actor kind + policy +
+//!   |        ... epoch: MSGS / PROBE / IDLE / STOP / STATE ...
+//!   |<--- SHUTDOWN ------|        fabric closed; worker exits
+//! ```
+//!
+//! Dial-high/accept-low makes mesh formation deterministic (exactly one
+//! connection per unordered rank pair, no thundering herd), and because
+//! MESH is only broadcast after every BOUND, every dial lands on a bound
+//! listener. The JOIN connection stays open as the worker's control
+//! channel for its whole service life; the mesh persists across epochs,
+//! with per-channel token counters reset at each SEED.
+//!
+//! # The seed_state wire format
+//!
+//! Every epoch starts with one SEED frame per worker (both socket
+//! backends — the process backend no longer relies on fork copy-on-write
+//! for actor inputs). Its payload:
+//!
+//! ```text
+//! [u8 kind_len][kind bytes]      FabricActor::KIND (worker-side dispatch)
+//! [FlushPolicy]                  threshold u64, adaptive u8, min/max u64
+//! [u32 n][n × u64]               per-destination warm-start seeds
+//! [actor seed bytes]             FabricActor::write_seed / read_seed
+//! ```
 //!
 //! The per-actor surface is unchanged from the paper's listings:
 //!
@@ -28,12 +83,16 @@
 //!   rank's substream σ_P and pushes initial messages), an `on_message`
 //!   receive context, and an `on_idle` hook invoked at global quiescence
 //!   (used e.g. to flush partially filled FAN/PJRT batches).
-//! * [`WireActor`] — an [`Actor`] whose post-epoch state can cross a
-//!   process boundary; required by the process backend, which runs the
-//!   epoch in forked workers and ships final states back to the driver.
+//! * [`WireActor`] — an [`Actor`] whose post-epoch *result* state can
+//!   cross a process boundary (STATE frames back to the driver).
+//! * [`FabricActor`] — a [`WireActor`] whose epoch *inputs* can cross
+//!   too: `write_seed`/`read_seed` construct the worker-side actor from
+//!   a SEED frame, and `KIND` names the actor on the wire so a generic
+//!   tcp worker can dispatch to the right epoch loop. Required by both
+//!   socket backends.
 //! * [`Outbox`] — per-destination buffered sends (YGM's send queues).
 //!
-//! All three schedulers implement identical epoch semantics
+//! All four schedulers implement identical epoch semantics
 //! (seed → message storm → idle rounds → quiescence); merges commute, so
 //! results agree across backends — the sequential backend stays
 //! bit-deterministic and anchors every parity test.
@@ -45,7 +104,10 @@
 pub mod codec;
 mod outbox;
 mod process;
+pub(crate) mod rendezvous;
 mod sequential;
+pub(crate) mod socket;
+pub mod tcp;
 mod threaded;
 pub(crate) mod transport;
 
@@ -138,6 +200,27 @@ pub trait WireActor: Actor {
     fn read_state(&mut self, input: &mut &[u8]) -> Result<(), WireError>;
 }
 
+/// A [`WireActor`] whose epoch **inputs** have a wire format too: the
+/// socket backends (process and tcp) send each worker one SEED frame —
+/// `write_seed` on the driver's actor, `read_seed` on the worker — so
+/// edge partitions, configs and store seeds travel over the wire
+/// instead of riding fork copy-on-write. `KIND` names the actor kind on
+/// the wire; a tcp worker process uses it to dispatch a SEED frame to
+/// the right generic epoch loop (see [`tcp::WorkerDispatch`]).
+pub trait FabricActor: WireActor {
+    /// Stable wire name of this actor kind (dispatch key; ≤ 255 bytes).
+    const KIND: &'static str;
+
+    /// Serialize everything `read_seed` needs to reconstruct this actor
+    /// in its pre-epoch state on a remote worker.
+    fn write_seed(&self, buf: &mut Vec<u8>);
+
+    /// Construct a worker-side actor from `write_seed` bytes.
+    fn read_seed(input: &mut &[u8]) -> Result<Self, WireError>
+    where
+        Self: Sized;
+}
+
 /// Scheduler selection for an epoch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Backend {
@@ -147,9 +230,15 @@ pub enum Backend {
     /// One OS thread per rank, in-memory channels.
     Threaded,
     /// One forked worker process per rank, Unix-domain sockets — the
-    /// distributed-memory mode (requires [`WireActor`]s; see
-    /// [`run_epoch_wire`]).
+    /// single-host distributed-memory mode (requires [`FabricActor`]s;
+    /// see [`run_epoch_wire`]).
     Process,
+    /// One independent worker process per rank over TCP — the
+    /// multi-host mode. Workers are launched separately (the
+    /// `degreesketch worker` subcommand or [`tcp::run_worker`]) and
+    /// meet the driver through the rendezvous registrar configured via
+    /// [`tcp::configure_driver`]. Requires [`FabricActor`]s.
+    Tcp,
 }
 
 impl Backend {
@@ -158,6 +247,7 @@ impl Backend {
             "seq" | "sequential" => Some(Self::Sequential),
             "threads" | "threaded" => Some(Self::Threaded),
             "proc" | "procs" | "process" => Some(Self::Process),
+            "tcp" => Some(Self::Tcp),
             _ => None,
         }
     }
@@ -168,6 +258,7 @@ impl Backend {
             Self::Sequential => "sequential",
             Self::Threaded => "threaded",
             Self::Process => "process",
+            Self::Tcp => "tcp",
         }
     }
 }
@@ -176,8 +267,9 @@ impl Backend {
 /// chosen backend with the default flush policy. Actors are mutated in
 /// place; stats are returned.
 ///
-/// Panics on [`Backend::Process`]: crossing a process boundary needs
-/// [`WireActor`] — use [`run_epoch_wire`].
+/// Panics on the socket backends ([`Backend::Process`]/[`Backend::Tcp`]):
+/// crossing a process boundary needs [`FabricActor`] — use
+/// [`run_epoch_wire`].
 pub fn run_epoch<A: Actor + 'static>(
     backend: Backend,
     actors: &mut Vec<A>,
@@ -195,35 +287,61 @@ pub fn run_epoch_with<A: Actor + 'static>(
         Backend::Sequential => run_sequential(actors),
         Backend::Threaded => {
             let owned = std::mem::take(actors);
-            let (mut back, stats) = run_threaded(owned, policy);
+            let (mut back, stats) = run_threaded(owned, policy, &[]);
             std::mem::swap(actors, &mut back);
             stats
         }
-        Backend::Process => panic!(
-            "the process backend needs wire-capable actors: \
-             call run_epoch_wire with a WireActor"
+        Backend::Process | Backend::Tcp => panic!(
+            "the socket backends need wire-capable actors: \
+             call run_epoch_wire with a FabricActor"
         ),
     }
 }
 
-/// Run one epoch on any backend, including [`Backend::Process`].
+/// Run one epoch on any backend, including the socket backends.
 pub fn run_epoch_wire<A>(
     backend: Backend,
     actors: &mut Vec<A>,
     policy: FlushPolicy,
 ) -> CommStats
 where
-    A: WireActor + 'static,
+    A: FabricActor + 'static,
+    A::Msg: WireMsg,
+{
+    run_epoch_wire_seeded(backend, actors, policy, &[])
+}
+
+/// [`run_epoch_wire`] with per-destination warm-start threshold seeds
+/// (usually from the previous epoch's
+/// [`FlushPolicy::seeds_from_stats`]; an empty slice means none). The
+/// socket backends ship the seeds to their workers inside the SEED
+/// frame; the sequential backend ignores them (it never flushes
+/// eagerly).
+pub fn run_epoch_wire_seeded<A>(
+    backend: Backend,
+    actors: &mut Vec<A>,
+    policy: FlushPolicy,
+    seeds: &[usize],
+) -> CommStats
+where
+    A: FabricActor + 'static,
     A::Msg: WireMsg,
 {
     match backend {
-        Backend::Process => {
+        Backend::Sequential => run_sequential(actors),
+        Backend::Threaded => {
             let owned = std::mem::take(actors);
-            let (mut back, stats) = run_process(owned, policy);
+            let (mut back, stats) = run_threaded(owned, policy, seeds);
             std::mem::swap(actors, &mut back);
             stats
         }
-        other => run_epoch_with(other, actors, policy),
+        Backend::Process => {
+            let owned = std::mem::take(actors);
+            let (mut back, stats) = run_process(owned, policy, seeds);
+            std::mem::swap(actors, &mut back);
+            stats
+        }
+        Backend::Tcp => tcp::run_global(actors, policy, seeds),
     }
 }
 
@@ -413,10 +531,12 @@ mod tests {
             ("threads", Backend::Threaded),
             ("process", Backend::Process),
             ("proc", Backend::Process),
+            ("tcp", Backend::Tcp),
         ] {
             assert_eq!(Backend::parse(s), Some(b));
         }
         assert_eq!(Backend::parse("mpi"), None);
         assert_eq!(Backend::Process.name(), "process");
+        assert_eq!(Backend::Tcp.name(), "tcp");
     }
 }

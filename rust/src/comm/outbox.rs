@@ -74,6 +74,30 @@ impl FlushPolicy {
     pub(crate) fn unbounded() -> Self {
         Self::pinned(usize::MAX)
     }
+
+    /// **Warm start**: derive per-destination threshold seeds for the
+    /// next epoch from a finished epoch's [`CommStats`] — the observed
+    /// mean batch size toward each rank (messages/flushes, bounded to
+    /// `[min, max]`). Epoch N+1's outboxes start from what epoch N
+    /// learned instead of re-learning from `threshold` (destinations
+    /// with no recorded traffic keep the default). Only meaningful for
+    /// adaptive policies; [`Outbox::with_seeds`] ignores seeds when the
+    /// policy is pinned.
+    pub fn seeds_from_stats(&self, stats: &super::CommStats) -> Vec<usize> {
+        stats
+            .per_rank
+            .iter()
+            .map(|r| {
+                if r.flushes == 0 {
+                    self.threshold
+                } else {
+                    (r.messages.div_ceil(r.flushes) as usize)
+                        .max(self.min)
+                        .min(self.max)
+                }
+            })
+            .collect()
+    }
 }
 
 /// Buffered sends from one rank. The scheduler drains it after each
@@ -99,6 +123,24 @@ impl<M> Outbox<M> {
             thresholds: vec![policy.threshold; ranks],
             hot: Vec::new(),
         }
+    }
+
+    /// [`Outbox::new`] with warm-start threshold seeds (one per
+    /// destination, from [`FlushPolicy::seeds_from_stats`]). Seeds are
+    /// applied only when the policy is adaptive and the vector matches
+    /// the rank count; they are bounded to `[policy.min, policy.max]`.
+    pub(crate) fn with_seeds(
+        ranks: usize,
+        policy: FlushPolicy,
+        seeds: &[usize],
+    ) -> Self {
+        let mut out = Self::new(ranks, policy);
+        if policy.adaptive && seeds.len() == ranks {
+            for (t, &s) in out.thresholds.iter_mut().zip(seeds) {
+                *t = s.max(policy.min).min(policy.max);
+            }
+        }
+        out
     }
 
     /// Number of ranks addressable from this outbox.
@@ -264,6 +306,52 @@ mod tests {
             out.drain_all();
         }
         assert_eq!(out.threshold_of(1), 16);
+    }
+
+    #[test]
+    fn warm_start_seeds_thresholds_within_bounds() {
+        use crate::comm::{Backend, CommStats, RankStats};
+        let policy = FlushPolicy {
+            threshold: 16,
+            adaptive: true,
+            min: 4,
+            max: 64,
+        };
+        let mut stats = CommStats::new(Backend::Threaded, 4);
+        stats.per_rank[0] = RankStats {
+            messages: 1000,
+            bytes: 0,
+            flushes: 10,
+        }; // mean 100 → capped at 64
+        stats.per_rank[1] = RankStats {
+            messages: 7,
+            bytes: 0,
+            flushes: 6,
+        }; // mean 2 → floored at 4
+        stats.per_rank[2] = RankStats {
+            messages: 90,
+            bytes: 0,
+            flushes: 9,
+        }; // mean 10
+           // rank 3: no traffic → default threshold
+        let seeds = policy.seeds_from_stats(&stats);
+        assert_eq!(seeds, vec![64, 4, 10, 16]);
+
+        let out: Outbox<u32> = Outbox::with_seeds(4, policy, &seeds);
+        for (d, want) in [(0, 64), (1, 4), (2, 10), (3, 16)] {
+            assert_eq!(out.threshold_of(d), want, "dest {d}");
+        }
+        // pinned policies ignore seeds entirely
+        let pinned: Outbox<u32> =
+            Outbox::with_seeds(4, FlushPolicy::pinned(8), &seeds);
+        for d in 0..4 {
+            assert_eq!(pinned.threshold_of(d), 8);
+        }
+        // a mismatched seed vector is ignored, not misapplied
+        let mismatched: Outbox<u32> = Outbox::with_seeds(4, policy, &[1, 2]);
+        for d in 0..4 {
+            assert_eq!(mismatched.threshold_of(d), 16);
+        }
     }
 
     #[test]

@@ -1,83 +1,64 @@
 //! Process backend: one **forked worker process per rank** over
-//! Unix-domain sockets — the repo's first genuinely distributed-memory
-//! execution mode.
+//! Unix-domain sockets — single-host distributed-memory execution.
 //!
 //! Topology: a full mesh of `socketpair`s (one writer/reader per peer)
 //! created *before* forking, plus one control socketpair per worker to
-//! the driver (the parent process). Workers inherit their actor — and
-//! every epoch input it holds — through fork's copy-on-write memory;
-//! only the *result* state crosses a process boundary, via
-//! [`WireActor::write_state`] on Stop.
+//! the driver (the parent process). Since the seed_state leg landed,
+//! **nothing rides fork copy-on-write**: the parent ships each worker a
+//! SEED frame carrying the actor kind, flush policy, warm-start seeds
+//! and the [`FabricActor::write_seed`] bytes; the worker reconstructs
+//! its actor with [`FabricActor::read_seed`] — exactly the protocol the
+//! tcp backend speaks to remote hosts. Only the *result* state comes
+//! back, via `write_state` in the STATE frame.
 //!
-//! Message batches travel as CRC'd frames ([`super::codec`]) whose
-//! header token is the channel's **cumulative message count**; each
-//! receiver checks the token against its own per-channel delivery
-//! counter, so a lost or reordered frame is detected immediately, and
-//! the same counters drive termination.
-//!
-//! Termination (the counter-based protocol, two-wave variant): the
-//! driver polls every worker with PROBE frames; each worker replies with
-//! its monotone `(sent, delivered)` totals. When `Σsent == Σdelivered`
-//! for **two consecutive waves with unchanged totals**, there was a real
-//! instant between the waves at which every channel was empty and every
-//! worker idle — no message existed anywhere, so none can ever be sent
-//! again without driver action. The driver then runs a global idle round
-//! (IDLE → `on_idle` → flush → ack), re-probes to quiescence, and stops
-//! once an idle round produces no new sends — the exact epoch semantics
-//! of the sequential and threaded schedulers.
-//!
-//! All sockets on the worker side are non-blocking with explicit pending
-//! read/write buffers: a worker never blocks on a write while a peer is
-//! blocked writing to *it*, which rules out the classic all-to-all
-//! buffer-deadlock.
+//! The framing, pending-write queues, per-channel token validation and
+//! two-wave counter termination all live in `super::socket` — one
+//! socket-generic implementation shared verbatim with the tcp backend
+//! (see that module's docs for the protocol); this file only contributes
+//! what is fork-specific: descriptor plumbing, child exit codes, and a
+//! `waitpid`-based `Liveness` so a silent-but-alive child re-arms the
+//! driver's control deadline instead of aborting the epoch.
 //!
 //! Failure containment: a worker that panics (or hits a protocol error)
-//! exits with a distinctive status; the driver sees EOF on its control
-//! socket, reaps the child, and panics with the rank and status attached
-//! — mirroring the threaded backend's panic propagation.
+//! exits with a distinctive status; the driver sees the control channel
+//! close (or the deadline expire on a reaped child), and panics with the
+//! rank and status attached — mirroring the threaded backend's panic
+//! propagation.
 
 #![allow(clippy::type_complexity)]
 
 use super::outbox::FlushPolicy;
-use super::{CommStats, WireActor, WireMsg};
-
-/// Frame kinds on the wire (peer mesh and control channels).
-mod kind {
-    /// Peer → peer: a batch of application messages.
-    pub const MSGS: u8 = 0;
-    /// Driver → worker: report your counters (token = wave id).
-    pub const PROBE: u8 = 1;
-    /// Worker → driver: `[sent, delivered]` (token echoes the wave id).
-    pub const REPORT: u8 = 2;
-    /// Driver → worker: run `on_idle`, flush, then report.
-    pub const IDLE: u8 = 3;
-    /// Driver → worker: serialize state and exit.
-    pub const STOP: u8 = 4;
-    /// Worker → driver: final `[delivered, bytes_in, frames_in, sent]`
-    /// followed by the actor state bytes.
-    pub const STATE: u8 = 5;
-}
+use super::{CommStats, FabricActor, WireMsg};
 
 /// Worker exit codes (parent turns nonzero ones into panics).
 const EXIT_PANIC: i32 = 101;
 const EXIT_PROTOCOL: i32 = 102;
 
 /// Run one epoch with one forked worker process per rank; returns the
-/// actors (result state decoded back into them) and stats. Panics if a
-/// worker dies, mirroring the threaded backend's panic propagation.
+/// actors (result state decoded back into them) and stats. `seeds`
+/// warm-starts per-destination flush thresholds (empty = none). Panics
+/// if a worker dies, mirroring the threaded backend's panic propagation.
 #[cfg(unix)]
-pub fn run_process<A>(actors: Vec<A>, policy: FlushPolicy) -> (Vec<A>, CommStats)
+pub fn run_process<A>(
+    actors: Vec<A>,
+    policy: FlushPolicy,
+    seeds: &[usize],
+) -> (Vec<A>, CommStats)
 where
-    A: WireActor + 'static,
+    A: FabricActor + 'static,
     A::Msg: WireMsg,
 {
-    unix::run(actors, policy)
+    unix::run(actors, policy, seeds)
 }
 
 #[cfg(not(unix))]
-pub fn run_process<A>(_actors: Vec<A>, _policy: FlushPolicy) -> (Vec<A>, CommStats)
+pub fn run_process<A>(
+    _actors: Vec<A>,
+    _policy: FlushPolicy,
+    _seeds: &[usize],
+) -> (Vec<A>, CommStats)
 where
-    A: WireActor + 'static,
+    A: FabricActor + 'static,
     A::Msg: WireMsg,
 {
     panic!("the process backend requires a unix platform (fork + socketpair)")
@@ -85,19 +66,15 @@ where
 
 #[cfg(unix)]
 mod unix {
-    use std::collections::VecDeque;
-    use std::io::{ErrorKind, Read, Write};
+    use std::io::Write;
     use std::os::unix::net::UnixStream;
-    use std::time::{Duration, Instant};
 
-    use super::{kind, EXIT_PANIC, EXIT_PROTOCOL};
-    use crate::comm::codec::{
-        decode_frame, decode_msgs, encode_frame_into, encode_msg_frame,
-        frame_len, get_u64, put_u64, WireMsg, FRAME_HEADER_LEN,
-    };
+    use super::{EXIT_PANIC, EXIT_PROTOCOL};
     use crate::comm::outbox::FlushPolicy;
-    use crate::comm::transport::{flush_outbox, Transport};
-    use crate::comm::{Backend, CommStats, Outbox, RankStats, WireActor};
+    use crate::comm::socket::{
+        self, kind, Conn, DriverCtrl, Liveness, PeerConn, CTRL_DEADLINE,
+    };
+    use crate::comm::{Backend, CommStats, FabricActor, WireMsg};
 
     mod sys {
         extern "C" {
@@ -127,491 +104,6 @@ mod unix {
 
     const WNOHANG: i32 = 1;
 
-    /// How long the driver waits for a single control frame before
-    /// declaring a worker wedged. Generous: CI machines stall.
-    const CTRL_DEADLINE: Duration = Duration::from_secs(120);
-
-    // -----------------------------------------------------------------
-    // Buffered non-blocking framed connection (worker side)
-    // -----------------------------------------------------------------
-
-    struct Conn {
-        stream: UnixStream,
-        /// Inbound bytes; frames are parsed from `rpos`.
-        rbuf: Vec<u8>,
-        rpos: usize,
-        /// Encoded frames not yet fully written (front is in flight).
-        wqueue: VecDeque<Vec<u8>>,
-        /// Bytes of the front frame already written.
-        wpos: usize,
-    }
-
-    impl Conn {
-        fn new(stream: UnixStream) -> Result<Self, String> {
-            stream
-                .set_nonblocking(true)
-                .map_err(|e| format!("set_nonblocking: {e}"))?;
-            Ok(Self {
-                stream,
-                rbuf: Vec::new(),
-                rpos: 0,
-                wqueue: VecDeque::new(),
-                wpos: 0,
-            })
-        }
-
-        /// Pull whatever the socket has into `rbuf` without blocking.
-        /// `Ok(true)` if any bytes arrived.
-        fn fill(&mut self, what: &str) -> Result<bool, String> {
-            let mut tmp = [0u8; 1 << 16];
-            let mut progressed = false;
-            loop {
-                match self.stream.read(&mut tmp) {
-                    Ok(0) => return Err(format!("{what}: peer closed")),
-                    Ok(n) => {
-                        self.rbuf.extend_from_slice(&tmp[..n]);
-                        progressed = true;
-                    }
-                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                    Err(e) => return Err(format!("{what}: read: {e}")),
-                }
-            }
-            Ok(progressed)
-        }
-
-        /// Complete frame bytes at the parse cursor, if any.
-        fn next_frame_bytes(&self, what: &str) -> Result<Option<usize>, String> {
-            let avail = &self.rbuf[self.rpos..];
-            match frame_len(avail).map_err(|e| format!("{what}: {e}"))? {
-                Some(total) if avail.len() >= total => Ok(Some(total)),
-                _ => Ok(None),
-            }
-        }
-
-        fn compact(&mut self) {
-            if self.rpos == self.rbuf.len() {
-                self.rbuf.clear();
-                self.rpos = 0;
-            } else if self.rpos > (1 << 16) {
-                self.rbuf.drain(..self.rpos);
-                self.rpos = 0;
-            }
-        }
-
-        fn queue_frame(&mut self, frame: Vec<u8>) {
-            self.wqueue.push_back(frame);
-        }
-
-        /// Write as much queued data as the socket accepts right now.
-        /// `Ok(true)` if any bytes moved.
-        fn pump_write(&mut self, what: &str) -> Result<bool, String> {
-            let mut progressed = false;
-            while let Some(front) = self.wqueue.front() {
-                match self.stream.write(&front[self.wpos..]) {
-                    Ok(0) => return Err(format!("{what}: write returned 0")),
-                    Ok(n) => {
-                        progressed = true;
-                        self.wpos += n;
-                        if self.wpos == front.len() {
-                            self.wqueue.pop_front();
-                            self.wpos = 0;
-                        }
-                    }
-                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                    Err(e) => return Err(format!("{what}: write: {e}")),
-                }
-            }
-            Ok(progressed)
-        }
-
-        /// Block (politely) until every queued frame is on the wire.
-        fn drain_writes(&mut self, what: &str) -> Result<(), String> {
-            while !self.wqueue.is_empty() {
-                if !self.pump_write(what)? {
-                    std::thread::sleep(Duration::from_micros(100));
-                }
-            }
-            Ok(())
-        }
-    }
-
-    // -----------------------------------------------------------------
-    // Worker-side transport over the peer mesh
-    // -----------------------------------------------------------------
-
-    struct PeerConn {
-        conn: Conn,
-        /// `"peer <rank>"`, precomputed for error paths.
-        label: String,
-        /// Cumulative messages sent on this channel — the token stamped
-        /// into each outbound MSGS frame.
-        sent_seq: u64,
-        /// Cumulative messages received; each inbound token must equal
-        /// `recv_seq + batch len` (FIFO channel, no loss, no reorder).
-        recv_seq: u64,
-    }
-
-    struct SocketTransport<M> {
-        rank: usize,
-        peers: Vec<Option<PeerConn>>,
-        /// Rank-local batches (never serialized).
-        selfq: VecDeque<Vec<M>>,
-        /// Total messages queued (self lanes included) — the worker's
-        /// `sent` counter for the termination protocol.
-        sent: u64,
-        scratch: Vec<u8>,
-        /// First I/O error hit inside `ship` (surfaced by `check`).
-        io_error: Option<String>,
-    }
-
-    impl<M: WireMsg> SocketTransport<M> {
-        fn check(&mut self) -> Result<(), String> {
-            match self.io_error.take() {
-                Some(e) => Err(e),
-                None => Ok(()),
-            }
-        }
-
-        fn pump_all(&mut self) -> Result<bool, String> {
-            let mut progressed = false;
-            for peer in self.peers.iter_mut().flatten() {
-                progressed |= peer.conn.pump_write(&peer.label)?;
-            }
-            Ok(progressed)
-        }
-
-        /// Read and decode every complete inbound frame from `p`.
-        /// Returns `(batch, frame bytes)` pairs in arrival order.
-        fn read_frames(
-            &mut self,
-            p: usize,
-        ) -> Result<Vec<(Vec<M>, u64)>, String> {
-            let peer = self.peers[p].as_mut().expect("no self/missing peer");
-            let what = peer.label.as_str();
-            peer.conn.fill(what)?;
-            let mut out = Vec::new();
-            while let Some(total) = peer.conn.next_frame_bytes(what)? {
-                let mut input = &peer.conn.rbuf[peer.conn.rpos..][..total];
-                let frame = decode_frame(&mut input)
-                    .map_err(|e| format!("{what}: {e}"))?;
-                if frame.kind != kind::MSGS {
-                    return Err(format!(
-                        "{what}: unexpected frame kind {}",
-                        frame.kind
-                    ));
-                }
-                let msgs: Vec<M> =
-                    decode_msgs(&frame).map_err(|e| format!("{what}: {e}"))?;
-                let expect = peer.recv_seq + msgs.len() as u64;
-                if frame.token != expect {
-                    return Err(format!(
-                        "{what}: termination token mismatch \
-                         (expected {expect}, got {})",
-                        frame.token
-                    ));
-                }
-                peer.recv_seq = expect;
-                peer.conn.rpos += total;
-                out.push((msgs, total as u64));
-            }
-            peer.conn.compact();
-            Ok(out)
-        }
-    }
-
-    impl<M: WireMsg> Transport<M> for SocketTransport<M> {
-        fn note_queued(&mut self, n: u64) {
-            self.sent += n;
-        }
-
-        fn ship(&mut self, to: usize, batch: Vec<M>) {
-            if to == self.rank {
-                self.selfq.push_back(batch);
-                return;
-            }
-            let peer = self.peers[to].as_mut().expect("missing peer");
-            peer.sent_seq += batch.len() as u64;
-            let mut frame =
-                Vec::with_capacity(FRAME_HEADER_LEN + 16 * batch.len());
-            encode_msg_frame(
-                kind::MSGS,
-                peer.sent_seq,
-                &batch,
-                &mut self.scratch,
-                &mut frame,
-            );
-            peer.conn.queue_frame(frame);
-            if let Err(e) = peer.conn.pump_write(&peer.label) {
-                if self.io_error.is_none() {
-                    self.io_error = Some(e);
-                }
-            }
-        }
-    }
-
-    // -----------------------------------------------------------------
-    // Worker main loop
-    // -----------------------------------------------------------------
-
-    fn worker_main<A>(
-        rank: usize,
-        mut actor: A,
-        peer_streams: Vec<Option<UnixStream>>,
-        ctrl_stream: UnixStream,
-        policy: FlushPolicy,
-    ) -> Result<(), String>
-    where
-        A: WireActor,
-        A::Msg: WireMsg,
-    {
-        let ranks = peer_streams.len();
-        let mut peers: Vec<Option<PeerConn>> = Vec::with_capacity(ranks);
-        for (p, s) in peer_streams.into_iter().enumerate() {
-            peers.push(match s {
-                Some(stream) => Some(PeerConn {
-                    conn: Conn::new(stream)
-                        .map_err(|e| format!("peer {p}: {e}"))?,
-                    label: format!("peer {p}"),
-                    sent_seq: 0,
-                    recv_seq: 0,
-                }),
-                None => None,
-            });
-        }
-        let mut ctrl = Conn::new(ctrl_stream).map_err(|e| format!("ctrl: {e}"))?;
-
-        let mut tp: SocketTransport<A::Msg> = SocketTransport {
-            rank,
-            peers,
-            selfq: VecDeque::new(),
-            sent: 0,
-            scratch: Vec::new(),
-            io_error: None,
-        };
-        let mut outbox: Outbox<A::Msg> = Outbox::new(ranks, policy);
-        let mut sent_base = 0u64;
-        let mut delivered = 0u64;
-        let mut frames_in = 0u64;
-        let mut bytes_in = 0u64;
-
-        // Seed context.
-        actor.seed(&mut outbox);
-        flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
-        tp.check()?;
-
-        let mut stop = false;
-        while !stop {
-            let mut progressed = false;
-
-            // 1. keep partially written frames moving
-            progressed |= tp.pump_all()?;
-
-            // 2. rank-local batches
-            while let Some(batch) = tp.selfq.pop_front() {
-                progressed = true;
-                let n = batch.len() as u64;
-                for msg in batch {
-                    actor.on_message(msg, &mut outbox);
-                    flush_outbox(&mut outbox, &mut sent_base, &mut tp, false);
-                }
-                delivered += n;
-                frames_in += 1;
-                flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
-                tp.check()?;
-            }
-
-            // 3. inbound peer frames
-            for p in 0..ranks {
-                if p == rank {
-                    continue;
-                }
-                for (msgs, nbytes) in tp.read_frames(p)? {
-                    progressed = true;
-                    let n = msgs.len() as u64;
-                    for msg in msgs {
-                        actor.on_message(msg, &mut outbox);
-                        flush_outbox(
-                            &mut outbox,
-                            &mut sent_base,
-                            &mut tp,
-                            false,
-                        );
-                    }
-                    delivered += n;
-                    frames_in += 1;
-                    bytes_in += nbytes;
-                    flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
-                    tp.check()?;
-                }
-            }
-
-            // 4. control frames from the driver
-            ctrl.fill("ctrl")?;
-            while let Some(total) = ctrl.next_frame_bytes("ctrl")? {
-                progressed = true;
-                let (fkind, ftoken) = {
-                    let mut input = &ctrl.rbuf[ctrl.rpos..][..total];
-                    let frame = decode_frame(&mut input)
-                        .map_err(|e| format!("ctrl: {e}"))?;
-                    (frame.kind, frame.token)
-                };
-                ctrl.rpos += total;
-                match fkind {
-                    kind::PROBE => {
-                        queue_report(&mut ctrl, ftoken, tp.sent, delivered);
-                    }
-                    kind::IDLE => {
-                        actor.on_idle(&mut outbox);
-                        flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
-                        tp.check()?;
-                        queue_report(&mut ctrl, ftoken, tp.sent, delivered);
-                    }
-                    kind::STOP => {
-                        stop = true;
-                        break;
-                    }
-                    other => {
-                        return Err(format!("ctrl: unexpected frame kind {other}"))
-                    }
-                }
-            }
-            ctrl.compact();
-            progressed |= ctrl.pump_write("ctrl")?;
-
-            if !progressed {
-                std::thread::sleep(Duration::from_micros(100));
-            }
-        }
-
-        // Final state: inbound stats record + serialized actor state.
-        let mut payload = Vec::new();
-        put_u64(&mut payload, delivered);
-        put_u64(&mut payload, bytes_in);
-        put_u64(&mut payload, frames_in);
-        put_u64(&mut payload, tp.sent);
-        actor.write_state(&mut payload);
-        let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
-        encode_frame_into(kind::STATE, 0, 0, &payload, &mut frame);
-        ctrl.queue_frame(frame);
-        ctrl.drain_writes("ctrl")?;
-        Ok(())
-    }
-
-    fn queue_report(ctrl: &mut Conn, wave: u64, sent: u64, delivered: u64) {
-        let mut payload = Vec::with_capacity(16);
-        put_u64(&mut payload, sent);
-        put_u64(&mut payload, delivered);
-        let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + 16);
-        encode_frame_into(kind::REPORT, 0, wave, &payload, &mut frame);
-        ctrl.queue_frame(frame);
-    }
-
-    // -----------------------------------------------------------------
-    // Driver (parent) side
-    // -----------------------------------------------------------------
-
-    /// Blocking framed reader over one worker's control socket.
-    struct DriverCtrl {
-        rank: usize,
-        pid: i32,
-        stream: UnixStream,
-        rbuf: Vec<u8>,
-        rpos: usize,
-    }
-
-    impl DriverCtrl {
-        fn send(&mut self, k: u8, token: u64) {
-            let mut frame = Vec::with_capacity(FRAME_HEADER_LEN);
-            encode_frame_into(k, 0, token, &[], &mut frame);
-            if let Err(e) = self.stream.write_all(&frame) {
-                self.fail(&format!("control write: {e}"));
-            }
-        }
-
-        /// Read the next control frame (blocking); returns
-        /// `(kind, token, payload)`. Every [`CTRL_DEADLINE`] of silence
-        /// the worker's liveness is checked: a dead child aborts the
-        /// epoch, a live one (legitimately deep in a long context — e.g.
-        /// a huge seed that runs before the ctrl loop starts) extends
-        /// the wait, matching the other backends' no-watchdog semantics.
-        fn recv(&mut self) -> (u8, u64, Vec<u8>) {
-            let mut deadline = Instant::now() + CTRL_DEADLINE;
-            loop {
-                let avail = &self.rbuf[self.rpos..];
-                if let Some(total) = frame_len(avail)
-                    .unwrap_or_else(|e| self.fail(&format!("{e}")))
-                {
-                    if avail.len() >= total {
-                        let mut input = &self.rbuf[self.rpos..][..total];
-                        let frame = decode_frame(&mut input)
-                            .unwrap_or_else(|e| self.fail(&format!("{e}")));
-                        let out =
-                            (frame.kind, frame.token, frame.payload.to_vec());
-                        self.rpos += total;
-                        if self.rpos == self.rbuf.len() {
-                            self.rbuf.clear();
-                            self.rpos = 0;
-                        }
-                        return out;
-                    }
-                }
-                let mut tmp = [0u8; 1 << 16];
-                match self.stream.read(&mut tmp) {
-                    Ok(0) => self.fail("exited mid-epoch"),
-                    Ok(n) => self.rbuf.extend_from_slice(&tmp[..n]),
-                    Err(e)
-                        if e.kind() == ErrorKind::WouldBlock
-                            || e.kind() == ErrorKind::TimedOut =>
-                    {
-                        if Instant::now() > deadline {
-                            let mut status: i32 = 0;
-                            let reaped = unsafe {
-                                sys::waitpid(self.pid, &mut status, WNOHANG)
-                            };
-                            if reaped == self.pid {
-                                panic!(
-                                    "process epoch aborted: worker rank {} \
-                                     exited mid-epoch ({})",
-                                    self.rank,
-                                    decode_status(status)
-                                );
-                            }
-                            // alive, just busy in a long actor context
-                            deadline = Instant::now() + CTRL_DEADLINE;
-                        }
-                    }
-                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
-                    Err(e) => self.fail(&format!("control read: {e}")),
-                }
-            }
-        }
-
-        /// Abort the epoch: reap what we can and panic with context.
-        fn fail(&self, msg: &str) -> ! {
-            let mut status: i32 = 0;
-            let code = unsafe {
-                if sys::waitpid(self.pid, &mut status, WNOHANG) == self.pid {
-                    Some(decode_status(status))
-                } else {
-                    None
-                }
-            };
-            match code {
-                Some(c) => panic!(
-                    "process epoch aborted: worker rank {} {msg} \
-                     (exit status: {c})",
-                    self.rank
-                ),
-                None => panic!(
-                    "process epoch aborted: worker rank {} {msg}",
-                    self.rank
-                ),
-            }
-        }
-    }
-
     /// Human-readable wait status.
     fn decode_status(status: i32) -> String {
         if status & 0x7f == 0 {
@@ -630,61 +122,52 @@ mod unix {
         }
     }
 
-    /// One probe wave: returns global `(sent, delivered)`.
-    fn probe_wave(ctrls: &mut [DriverCtrl], wave: u64) -> (u64, u64) {
-        for c in ctrls.iter_mut() {
-            c.send(kind::PROBE, wave);
-        }
-        collect_reports(ctrls, wave)
+    /// The process backend's control-deadline policy: a silent child is
+    /// checked with `waitpid` — alive (legitimately deep in a long actor
+    /// context, e.g. a huge seed) re-arms the wait, matching the other
+    /// backends' no-watchdog semantics; a reaped child aborts with its
+    /// exit status attached.
+    struct PidLiveness {
+        pid: i32,
     }
 
-    /// Collect one REPORT per worker for `wave`; sums `(sent, delivered)`.
-    fn collect_reports(ctrls: &mut [DriverCtrl], wave: u64) -> (u64, u64) {
-        let (mut s, mut d) = (0u64, 0u64);
-        for c in ctrls.iter_mut() {
-            loop {
-                let (k, token, payload) = c.recv();
-                if k != kind::REPORT {
-                    c.fail(&format!("sent unexpected control frame kind {k}"));
-                }
-                if token != wave {
-                    // stale report from an earlier wave; skip it
-                    continue;
-                }
-                let mut input = payload.as_slice();
-                let sent = get_u64(&mut input)
-                    .unwrap_or_else(|e| c.fail(&format!("bad report: {e}")));
-                let delivered = get_u64(&mut input)
-                    .unwrap_or_else(|e| c.fail(&format!("bad report: {e}")));
-                s += sent;
-                d += delivered;
-                break;
+    impl Liveness for PidLiveness {
+        fn still_alive(&mut self) -> Result<bool, String> {
+            let mut status: i32 = 0;
+            let reaped =
+                unsafe { sys::waitpid(self.pid, &mut status, WNOHANG) };
+            if reaped == self.pid {
+                Err(format!("exited mid-epoch ({})", decode_status(status)))
+            } else {
+                Ok(true)
             }
         }
-        (s, d)
     }
 
-    /// Probe until two consecutive waves report identical, balanced
-    /// totals (see module docs for why that implies global quiescence).
-    fn wait_quiescent(ctrls: &mut [DriverCtrl], wave: &mut u64) -> u64 {
-        let mut prev: Option<(u64, u64)> = None;
-        loop {
-            *wave += 1;
-            let (s, d) = probe_wave(ctrls, *wave);
-            if s == d && prev == Some((s, d)) {
-                return s;
+    /// Abort the epoch: reap whatever children already exited (their
+    /// statuses usually explain the failure) and panic with context.
+    fn abort(pids: &[i32], msg: &str) -> ! {
+        let mut notes = String::new();
+        for (rank, &pid) in pids.iter().enumerate() {
+            let mut status: i32 = 0;
+            let reaped = unsafe { sys::waitpid(pid, &mut status, WNOHANG) };
+            if reaped == pid && status != 0 {
+                notes.push_str(&format!(
+                    "; rank {rank}: {}",
+                    decode_status(status)
+                ));
             }
-            prev = Some((s, d));
-            std::thread::sleep(Duration::from_micros(200));
         }
+        panic!("process epoch aborted: {msg}{notes}");
     }
 
     pub(super) fn run<A>(
         mut actors: Vec<A>,
         policy: FlushPolicy,
+        seeds: &[usize],
     ) -> (Vec<A>, CommStats)
     where
-        A: WireActor + 'static,
+        A: FabricActor + 'static,
         A::Msg: WireMsg,
     {
         let ranks = actors.len();
@@ -720,13 +203,11 @@ mod unix {
             assert!(pid >= 0, "fork failed");
             if pid == 0 {
                 // ---- child: becomes worker `rank`, never returns ----
-                let code = child_entry(
+                let code = child_entry::<A>(
                     rank,
-                    &mut actors,
                     &mut mesh,
                     &mut ctrl_parent,
                     &mut ctrl_child,
-                    policy,
                 );
                 unsafe { sys::_exit(code) }
             }
@@ -735,84 +216,47 @@ mod unix {
 
         // Parent: close the worker-side control descriptors, but KEEP the
         // mesh descriptors open until every worker is reaped. A worker
-        // that processes Stop exits (closing its fds) while a slower peer
-        // may still poll its mesh sockets before reading its own Stop;
-        // with the parent holding a copy of every mesh end, that poll
-        // sees WouldBlock instead of a spurious EOF.
+        // that processes Stop finishes its epoch (closing its fds on
+        // exit) while a slower peer may still poll its mesh sockets
+        // before reading its own Stop; with the parent holding a copy of
+        // every mesh end, that poll sees WouldBlock instead of a spurious
+        // EOF.
         ctrl_child.clear();
-        let mut ctrls: Vec<DriverCtrl> = ctrl_parent
+        let mut ctrls: Vec<DriverCtrl<UnixStream, PidLiveness>> = ctrl_parent
             .into_iter()
             .enumerate()
             .map(|(rank, s)| {
-                let stream = s.expect("parent ctrl end");
-                stream
-                    .set_read_timeout(Some(Duration::from_millis(20)))
-                    .expect("ctrl read timeout");
-                DriverCtrl {
-                    rank,
-                    pid: pids[rank],
-                    stream,
-                    rbuf: Vec::new(),
-                    rpos: 0,
-                }
+                DriverCtrl::new(
+                    s.expect("parent ctrl end"),
+                    format!("worker rank {rank}"),
+                    PidLiveness { pid: pids[rank] },
+                )
+                .expect("ctrl setup")
             })
             .collect();
 
-        // Quiescence → idle rounds → Stop (same schedule as threaded).
-        let mut wave = 0u64;
-        let mut idle_rounds = 0u64;
-        loop {
-            let sent_before = wait_quiescent(&mut ctrls, &mut wave);
-            idle_rounds += 1;
-            wave += 1;
-            for c in ctrls.iter_mut() {
-                c.send(kind::IDLE, wave);
+        // Ship every worker its epoch inputs over the wire — no actor
+        // state is read through fork copy-on-write.
+        for (rank, c) in ctrls.iter_mut().enumerate() {
+            let payload = socket::encode_seed(&actors[rank], policy, seeds);
+            if let Err(e) = c.send_payload(kind::SEED, 0, &payload) {
+                abort(&pids, &e);
             }
-            collect_reports(&mut ctrls, wave);
-            let sent_after = wait_quiescent(&mut ctrls, &mut wave);
-            if sent_after == sent_before {
-                break;
-            }
-        }
-        for c in ctrls.iter_mut() {
-            c.send(kind::STOP, 0);
         }
 
-        // Collect final states, decode them into our actor copies.
+        // Quiescence → idle rounds → Stop (same schedule as threaded),
+        // then collect final states into our actor copies.
+        let idle_rounds = match socket::drive_to_stop(&mut ctrls) {
+            Ok(n) => n,
+            Err(e) => abort(&pids, &e),
+        };
         let mut stats = CommStats::new(Backend::Process, ranks);
         stats.idle_rounds = idle_rounds;
-        for c in ctrls.iter_mut() {
-            let (k, _token, payload) = c.recv();
-            if k != kind::STATE {
-                c.fail(&format!("sent frame kind {k} instead of state"));
-            }
-            let mut input = payload.as_slice();
-            let err = |e: crate::comm::WireError| -> String {
-                format!("bad state frame: {e}")
-            };
-            let delivered =
-                get_u64(&mut input).unwrap_or_else(|e| c.fail(&err(e)));
-            let bytes_in =
-                get_u64(&mut input).unwrap_or_else(|e| c.fail(&err(e)));
-            let frames_in =
-                get_u64(&mut input).unwrap_or_else(|e| c.fail(&err(e)));
-            let _sent = get_u64(&mut input).unwrap_or_else(|e| c.fail(&err(e)));
-            stats.messages += delivered;
-            stats.bytes += bytes_in;
-            stats.flushes += frames_in;
-            stats.per_rank[c.rank] = RankStats {
-                messages: delivered,
-                bytes: bytes_in,
-                flushes: frames_in,
-            };
-            if let Err(e) = actors[c.rank].read_state(&mut input) {
-                c.fail(&format!("state decode failed: {e}"));
-            }
-            if !input.is_empty() {
-                c.fail(&format!(
-                    "left {} trailing state bytes",
-                    input.len()
-                ));
+        for (rank, c) in ctrls.iter_mut().enumerate() {
+            if let Err(e) =
+                socket::collect_state(c, &mut actors[rank], &mut stats, rank)
+            {
+                abort(&pids, &e);
             }
         }
 
@@ -833,18 +277,18 @@ mod unix {
         (actors, stats)
     }
 
-    /// Child-side setup: keep only this rank's descriptors and actor,
-    /// run the worker loop, translate the outcome into an exit code.
+    /// Child-side setup: keep only this rank's descriptors, run the
+    /// shared worker loop, translate the outcome into an exit code. The
+    /// child never touches the parent's actors — its actor arrives in
+    /// the SEED frame.
     fn child_entry<A>(
         rank: usize,
-        actors: &mut Vec<A>,
         mesh: &mut [Vec<Option<UnixStream>>],
         ctrl_parent: &mut [Option<UnixStream>],
         ctrl_child: &mut [Option<UnixStream>],
-        policy: FlushPolicy,
     ) -> i32
     where
-        A: WireActor,
+        A: FabricActor,
         A::Msg: WireMsg,
     {
         // Close everything that isn't ours: other workers' mesh rows and
@@ -856,7 +300,7 @@ mod unix {
                 }
             }
         }
-        let peers: Vec<Option<UnixStream>> =
+        let peer_streams: Vec<Option<UnixStream>> =
             mesh[rank].iter_mut().map(Option::take).collect();
         for s in ctrl_parent.iter_mut() {
             *s = None;
@@ -865,13 +309,12 @@ mod unix {
         for s in ctrl_child.iter_mut() {
             *s = None;
         }
-        let actor = actors.swap_remove(rank);
 
         // the default panic hook prints through Rust's (lock-guarded)
         // stderr — swap in a silent hook and report via raw write(2)
         std::panic::set_hook(Box::new(|_| {}));
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-            || worker_main(rank, actor, peers, ctrl, policy),
+            || child_main::<A>(rank, peer_streams, ctrl),
         ));
         match outcome {
             Ok(Ok(())) => 0,
@@ -888,6 +331,49 @@ mod unix {
             }
         }
     }
+
+    /// Child main: wrap the inherited descriptors, wait for the SEED
+    /// frame, run the shared socket-generic epoch loop.
+    fn child_main<A>(
+        rank: usize,
+        peer_streams: Vec<Option<UnixStream>>,
+        ctrl_stream: UnixStream,
+    ) -> Result<(), String>
+    where
+        A: FabricActor,
+        A::Msg: WireMsg,
+    {
+        let mut peers: Vec<Option<PeerConn<UnixStream>>> = Vec::new();
+        for (p, s) in peer_streams.into_iter().enumerate() {
+            peers.push(match s {
+                Some(stream) => Some(PeerConn::new(
+                    Conn::new(stream).map_err(|e| format!("peer {p}: {e}"))?,
+                    p,
+                )),
+                None => None,
+            });
+        }
+        let mut ctrl =
+            Conn::new(ctrl_stream).map_err(|e| format!("ctrl: {e}"))?;
+
+        let (k, _token, payload) =
+            socket::next_ctrl_frame(&mut ctrl, Some(CTRL_DEADLINE))?
+                .ok_or_else(|| "ctrl: closed before seed".to_string())?;
+        if k != kind::SEED {
+            return Err(format!("ctrl: expected seed frame, got kind {k}"));
+        }
+        let (head, actor_seed) = socket::split_seed(&payload)?;
+        if head.actor_kind != A::KIND {
+            return Err(format!(
+                "ctrl: seed names actor kind {:?}, this worker runs {:?}",
+                head.actor_kind,
+                A::KIND
+            ));
+        }
+        socket::worker_epoch::<A, UnixStream>(
+            rank, &head, actor_seed, &mut ctrl, &mut peers,
+        )
+    }
 }
 
 #[cfg(all(test, unix))]
@@ -896,10 +382,11 @@ mod tests {
         get_u64, get_u8, put_u64, put_u8, WireError, WireMsg,
     };
     use super::super::{
-        run_epoch_wire, Actor, Backend, FlushPolicy, Outbox, WireActor,
+        run_epoch_wire, run_epoch_wire_seeded, Actor, Backend, FabricActor,
+        FlushPolicy, Outbox, WireActor,
     };
 
-    /// Token ring with wire-capable state.
+    /// Token ring with wire-capable state and inputs.
     struct Ring {
         rank: usize,
         ranks: usize,
@@ -932,6 +419,26 @@ mod tests {
         fn read_state(&mut self, input: &mut &[u8]) -> Result<(), WireError> {
             self.received = get_u64(input)?;
             Ok(())
+        }
+    }
+
+    impl FabricActor for Ring {
+        const KIND: &'static str = "test-ring";
+
+        fn write_seed(&self, buf: &mut Vec<u8>) {
+            put_u64(buf, self.rank as u64);
+            put_u64(buf, self.ranks as u64);
+            put_u64(buf, self.hops);
+            put_u64(buf, self.received);
+        }
+
+        fn read_seed(input: &mut &[u8]) -> Result<Self, WireError> {
+            Ok(Self {
+                rank: get_u64(input)? as usize,
+                ranks: get_u64(input)? as usize,
+                hops: get_u64(input)?,
+                received: get_u64(input)?,
+            })
         }
     }
 
@@ -968,6 +475,27 @@ mod tests {
             run_epoch_wire(Backend::Process, &mut actors, FlushPolicy::default());
         assert_eq!(stats.messages, 5);
         assert_eq!(actors[0].received, 5);
+    }
+
+    #[test]
+    fn warm_start_seeds_ship_with_the_epoch() {
+        // per-destination threshold seeds ride the SEED frame; semantics
+        // must be unchanged whatever the thresholds start at
+        let mut actors = ring(3, 40);
+        let stats = run_epoch_wire_seeded(
+            Backend::Process,
+            &mut actors,
+            FlushPolicy {
+                threshold: 8,
+                adaptive: true,
+                min: 1,
+                max: 64,
+            },
+            &[1, 2, 64],
+        );
+        assert_eq!(stats.messages, 40);
+        let total: u64 = actors.iter().map(|a| a.received).sum();
+        assert_eq!(total, 40);
     }
 
     /// All-to-all flood with per-actor message logs and idle-round work,
@@ -1020,6 +548,31 @@ mod tests {
                 .map(|_| get_u64(input))
                 .collect::<Result<_, _>>()?;
             Ok(())
+        }
+    }
+
+    impl FabricActor for Flood {
+        const KIND: &'static str = "test-flood";
+
+        fn write_seed(&self, buf: &mut Vec<u8>) {
+            put_u64(buf, self.rank as u64);
+            put_u64(buf, self.ranks as u64);
+            // pre-epoch delivery log + idle flag travel too, so a seeded
+            // worker starts from exactly the driver's actor state
+            self.write_state(buf);
+        }
+
+        fn read_seed(input: &mut &[u8]) -> Result<Self, WireError> {
+            let rank = get_u64(input)? as usize;
+            let ranks = get_u64(input)? as usize;
+            let mut actor = Self {
+                rank,
+                ranks,
+                got: Vec::new(),
+                idle_sent: false,
+            };
+            actor.read_state(input)?;
+            Ok(actor)
         }
     }
 

@@ -1,0 +1,465 @@
+//! **TCP rank rendezvous** — how independent worker processes on any
+//! hosts become a fully connected fabric.
+//!
+//! The driver runs a *registrar*: a `TcpListener` every worker dials.
+//! Each worker announces its rank (JOIN), the registrar hands back the
+//! full `rank → host:port` map (WELCOME), each worker binds its mesh
+//! listener at its own map entry (port `0` binds ephemeral; the actual
+//! address is reported back in BOUND), and only once **every** rank is
+//! bound does the registrar broadcast the final map (MESH). Workers
+//! then form the mesh deterministically — **dial every higher rank,
+//! accept one connection from every lower rank** — so exactly one
+//! connection exists per unordered rank pair and every dial lands on an
+//! already-bound listener (no thundering herd, no accept/dial races).
+//! A HELLO frame on each mesh connection identifies the dialer's rank.
+//!
+//! Every step runs under a deadline; failures produce an error naming
+//! the step and the unreachable rank(s) instead of hanging. The JOIN
+//! connection stays open afterwards as the worker's control channel
+//! (SEED / PROBE / IDLE / STOP / STATE / SHUTDOWN frames).
+//!
+//! This module is bootstrap-only: once [`driver_rendezvous`] /
+//! [`worker_join`] return, all traffic is the socket-generic protocol
+//! of [`super::socket`], byte-identical to the process backend's.
+
+#![allow(clippy::type_complexity)]
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use super::codec::{
+    encode_frame_into, get_u32, get_u64, put_u32, put_u64, take,
+};
+use super::socket::{kind, Conn, DeadlineOnly, DriverCtrl, PeerConn};
+
+/// A driver-side control channel to one tcp worker.
+pub(crate) type TcpCtrl = DriverCtrl<TcpStream, DeadlineOnly>;
+
+/// Hard cap on fabric size (sanity guard on wire-decoded maps).
+const MAX_RANKS: usize = 4096;
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(input: &mut &[u8]) -> Result<String, String> {
+    let n = get_u32(input).map_err(|e| format!("bad host map: {e}"))? as usize;
+    let bytes =
+        take(input, n).map_err(|e| format!("bad host map: {e}"))?;
+    String::from_utf8(bytes.to_vec())
+        .map_err(|_| "bad host map: non-utf8 address".to_string())
+}
+
+/// Encode a `rank → address` map (WELCOME / MESH payloads).
+fn encode_map(addrs: &[String]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, addrs.len() as u64);
+    for a in addrs {
+        put_str(&mut out, a);
+    }
+    out
+}
+
+fn decode_map(input: &mut &[u8]) -> Result<Vec<String>, String> {
+    let n = get_u64(input).map_err(|e| format!("bad host map: {e}"))? as usize;
+    if n == 0 || n > MAX_RANKS {
+        return Err(format!("bad host map: {n} ranks"));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(get_str(input)?);
+    }
+    Ok(out)
+}
+
+/// Time left before `limit` (zero once expired — the next blocking read
+/// then reports its step-specific timeout immediately).
+fn time_left(limit: Instant) -> Duration {
+    limit
+        .checked_duration_since(Instant::now())
+        .unwrap_or(Duration::ZERO)
+}
+
+/// Dial `addr`, retrying until `limit` (the far side may not be up yet
+/// — rendezvous tolerates any launch order). Each attempt uses a short
+/// connect timeout so an unreachable host fails the *step* deadline,
+/// not the OS's multi-minute SYN schedule.
+fn dial_retry(
+    addr: &str,
+    limit: Instant,
+    what: &str,
+) -> Result<TcpStream, String> {
+    let target = addr
+        .to_socket_addrs()
+        .map_err(|e| format!("dialing {what}: resolving {addr:?}: {e}"))?
+        .next()
+        .ok_or_else(|| {
+            format!("dialing {what}: {addr:?} resolves to no address")
+        })?;
+    let mut last_err = String::new();
+    loop {
+        let left = time_left(limit);
+        if left.is_zero() {
+            return Err(format!(
+                "dialing {what}: unreachable before the deadline \
+                 (last error: {last_err})"
+            ));
+        }
+        let attempt = left.min(Duration::from_secs(2));
+        match TcpStream::connect_timeout(
+            &target,
+            attempt.max(Duration::from_millis(10)),
+        ) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last_err = e.to_string();
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Ranks still missing from a partially joined fabric, for error text.
+fn missing_ranks(ctrls: &[Option<TcpCtrl>]) -> String {
+    let missing: Vec<String> = ctrls
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.is_none())
+        .map(|(r, _)| r.to_string())
+        .collect();
+    missing.join(", ")
+}
+
+// ---------------------------------------------------------------------
+// Driver side
+// ---------------------------------------------------------------------
+
+/// Run the registrar: accept one JOIN per rank, hand out the map, wait
+/// for every listener to bind, broadcast the final map, wait for the
+/// mesh to complete. Returns one control channel per rank (index =
+/// rank). `hosts[r]` is the address rank `r` must bind its mesh
+/// listener at (`host:0` binds an ephemeral port, reported back and
+/// folded into the final map).
+pub(crate) fn driver_rendezvous(
+    listener: TcpListener,
+    hosts: &[String],
+    deadline: Duration,
+) -> Result<Vec<TcpCtrl>, String> {
+    let ranks = hosts.len();
+    if ranks == 0 || ranks > MAX_RANKS {
+        return Err(format!("tcp fabric needs 1..={MAX_RANKS} hosts, got {ranks}"));
+    }
+    let local = listener
+        .local_addr()
+        .map_err(|e| format!("registrar local_addr: {e}"))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("registrar set_nonblocking: {e}"))?;
+    let limit = Instant::now() + deadline;
+
+    // Step 1: JOIN from every rank.
+    let mut slots: Vec<Option<TcpCtrl>> = (0..ranks).map(|_| None).collect();
+    let mut joined = 0usize;
+    while joined < ranks {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let _ = stream.set_nodelay(true);
+                stream.set_nonblocking(false).map_err(|e| {
+                    format!("rendezvous: accepted socket setup: {e}")
+                })?;
+                let mut c = DriverCtrl::new(
+                    stream,
+                    format!("worker at {peer}"),
+                    DeadlineOnly,
+                )?;
+                let (k, token, _payload) = c
+                    .recv(time_left(limit))
+                    .map_err(|e| format!("rendezvous: waiting for JOIN: {e}"))?;
+                if k != kind::JOIN {
+                    return Err(format!(
+                        "rendezvous: {} sent frame kind {k} instead of JOIN",
+                        c.desc
+                    ));
+                }
+                let rank = token as usize;
+                if rank >= ranks {
+                    return Err(format!(
+                        "rendezvous: {} joined as rank {rank}, but the \
+                         fabric has only {ranks} ranks",
+                        c.desc
+                    ));
+                }
+                if slots[rank].is_some() {
+                    return Err(format!(
+                        "rendezvous: rank {rank} joined twice \
+                         (second join from {peer})"
+                    ));
+                }
+                c.desc = format!("worker rank {rank} ({peer})");
+                slots[rank] = Some(c);
+                joined += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() > limit {
+                    return Err(format!(
+                        "rendezvous on {local}: timed out after {deadline:?} \
+                         waiting for JOIN from rank(s) [{}] \
+                         ({joined}/{ranks} joined)",
+                        missing_ranks(&slots)
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                return Err(format!("rendezvous accept on {local}: {e}"))
+            }
+        }
+    }
+    let mut ctrls: Vec<TcpCtrl> =
+        slots.into_iter().map(|c| c.expect("all joined")).collect();
+
+    // Step 2: WELCOME (the requested map) to every rank.
+    let requested = encode_map(hosts);
+    for c in ctrls.iter_mut() {
+        c.send_payload(kind::WELCOME, ranks as u64, &requested)?;
+    }
+
+    // Step 3: collect BOUND (actual listener addresses — resolves any
+    // `:0` ephemeral binds) from every rank.
+    let mut final_map: Vec<String> = hosts.to_vec();
+    for (rank, c) in ctrls.iter_mut().enumerate() {
+        let (k, _token, payload) = c.recv(time_left(limit)).map_err(|e| {
+            format!("rendezvous: waiting for BOUND from rank {rank}: {e}")
+        })?;
+        if k != kind::BOUND {
+            return Err(format!(
+                "rendezvous: {} sent frame kind {k} instead of BOUND",
+                c.desc
+            ));
+        }
+        let mut input = payload.as_slice();
+        final_map[rank] = get_str(&mut input)?;
+    }
+
+    // Step 4: every listener is bound — broadcast the final map; the
+    // workers now dial the mesh.
+    let finalized = encode_map(&final_map);
+    for c in ctrls.iter_mut() {
+        c.send_payload(kind::MESH, 0, &finalized)?;
+    }
+
+    // Step 5: wait for every rank to report its mesh complete.
+    for rank in 0..ranks {
+        let c = &mut ctrls[rank];
+        let (k, _token, _payload) = c.recv(time_left(limit)).map_err(|e| {
+            format!("rendezvous: waiting for MESHED from rank {rank}: {e}")
+        })?;
+        if k != kind::MESHED {
+            return Err(format!(
+                "rendezvous: {} sent frame kind {k} instead of MESHED",
+                c.desc
+            ));
+        }
+    }
+    Ok(ctrls)
+}
+
+// ---------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------
+
+/// Join a fabric as `rank`: dial the registrar at `connect`, complete
+/// the handshake, and return the control channel plus the full peer
+/// mesh (index = peer rank; `None` at `rank` itself).
+pub(crate) fn worker_join(
+    connect: &str,
+    rank: usize,
+    deadline: Duration,
+) -> Result<(Conn<TcpStream>, Vec<Option<PeerConn<TcpStream>>>), String> {
+    let limit = Instant::now() + deadline;
+
+    // JOIN.
+    let stream =
+        dial_retry(connect, limit, &format!("registrar at {connect}"))?;
+    let _ = stream.set_nodelay(true);
+    let mut ctrl = DriverCtrl::new(
+        stream,
+        format!("registrar at {connect}"),
+        DeadlineOnly,
+    )?;
+    ctrl.send(kind::JOIN, rank as u64)?;
+
+    // WELCOME: the requested rank → address map.
+    let (k, _token, payload) = ctrl
+        .recv(time_left(limit))
+        .map_err(|e| format!("rendezvous: waiting for WELCOME: {e}"))?;
+    if k != kind::WELCOME {
+        return Err(format!(
+            "rendezvous: registrar sent frame kind {k} instead of WELCOME"
+        ));
+    }
+    let mut input = payload.as_slice();
+    let map = decode_map(&mut input)?;
+    let ranks = map.len();
+    if rank >= ranks {
+        return Err(format!(
+            "rendezvous: this worker is rank {rank}, but the fabric has \
+             only {ranks} ranks"
+        ));
+    }
+
+    // Bind the mesh listener at our own entry; report the actual
+    // address (resolves `:0`).
+    let listener = TcpListener::bind(&map[rank]).map_err(|e| {
+        format!("rendezvous: binding mesh listener at {:?}: {e}", map[rank])
+    })?;
+    let actual = listener
+        .local_addr()
+        .map_err(|e| format!("mesh listener local_addr: {e}"))?
+        .to_string();
+    let mut bound = Vec::new();
+    put_str(&mut bound, &actual);
+    ctrl.send_payload(kind::BOUND, rank as u64, &bound)?;
+
+    // MESH: the final map — every listener is now bound.
+    let (k, _token, payload) = ctrl
+        .recv(time_left(limit))
+        .map_err(|e| format!("rendezvous: waiting for MESH: {e}"))?;
+    if k != kind::MESH {
+        return Err(format!(
+            "rendezvous: registrar sent frame kind {k} instead of MESH"
+        ));
+    }
+    let mut input = payload.as_slice();
+    let final_map = decode_map(&mut input)?;
+    if final_map.len() != ranks {
+        return Err("rendezvous: MESH map size changed".to_string());
+    }
+
+    // Mesh formation: dial every higher rank...
+    let mut peers: Vec<Option<PeerConn<TcpStream>>> =
+        (0..ranks).map(|_| None).collect();
+    for j in (rank + 1)..ranks {
+        let mut s = dial_retry(
+            &final_map[j],
+            limit,
+            &format!("peer rank {j} at {}", final_map[j]),
+        )?;
+        let _ = s.set_nodelay(true);
+        let mut hello = Vec::new();
+        encode_frame_into(kind::HELLO, 0, rank as u64, &[], &mut hello);
+        s.write_all(&hello)
+            .map_err(|e| format!("mesh HELLO to rank {j}: {e}"))?;
+        peers[j] = Some(PeerConn::new(
+            Conn::new(s).map_err(|e| format!("peer {j}: {e}"))?,
+            j,
+        ));
+    }
+
+    // ...and accept one connection from every lower rank.
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("mesh listener set_nonblocking: {e}"))?;
+    let mut seen = vec![false; rank];
+    let mut accepted = 0usize;
+    while accepted < rank {
+        match listener.accept() {
+            Ok((stream, peer_addr)) => {
+                let _ = stream.set_nodelay(true);
+                stream.set_nonblocking(false).map_err(|e| {
+                    format!("mesh accepted socket setup: {e}")
+                })?;
+                let mut link = DriverCtrl::new(
+                    stream,
+                    format!("inbound mesh connection from {peer_addr}"),
+                    DeadlineOnly,
+                )?;
+                let (k, token, _payload) =
+                    link.recv(time_left(limit)).map_err(|e| {
+                        format!("rendezvous: waiting for mesh HELLO: {e}")
+                    })?;
+                if k != kind::HELLO {
+                    return Err(format!(
+                        "rendezvous: {} sent frame kind {k} instead of HELLO",
+                        link.desc
+                    ));
+                }
+                let j = token as usize;
+                if j >= rank {
+                    return Err(format!(
+                        "rendezvous: mesh HELLO claims rank {j}; rank {rank} \
+                         only accepts from lower ranks"
+                    ));
+                }
+                if seen[j] {
+                    return Err(format!(
+                        "rendezvous: rank {j} dialed the mesh twice"
+                    ));
+                }
+                seen[j] = true;
+                // carry any bytes the HELLO read over-pulled into the
+                // peer connection — nothing on the wire is dropped
+                let (stream, leftover) = link.into_parts();
+                peers[j] = Some(PeerConn::new(
+                    Conn::with_leftover(stream, leftover)
+                        .map_err(|e| format!("peer {j}: {e}"))?,
+                    j,
+                ));
+                accepted += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() > limit {
+                    let missing: Vec<String> = seen
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| !**s)
+                        .map(|(j, _)| j.to_string())
+                        .collect();
+                    return Err(format!(
+                        "rendezvous: timed out waiting for mesh dial from \
+                         rank(s) [{}]",
+                        missing.join(", ")
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(format!("mesh accept: {e}")),
+        }
+    }
+
+    // Mesh complete; the JOIN connection becomes the epoch control
+    // channel (any over-read bytes ride along).
+    ctrl.send(kind::MESHED, rank as u64)?;
+    let (stream, leftover) = ctrl.into_parts();
+    let ctrl_conn = Conn::with_leftover(stream, leftover)
+        .map_err(|e| format!("ctrl: {e}"))?;
+    Ok((ctrl_conn, peers))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_map_round_trips() {
+        let map = vec![
+            "127.0.0.1:7001".to_string(),
+            "10.0.0.2:0".to_string(),
+            "workerhost:9999".to_string(),
+        ];
+        let wire = encode_map(&map);
+        let mut input = wire.as_slice();
+        assert_eq!(decode_map(&mut input).unwrap(), map);
+        assert!(input.is_empty());
+        // truncations reject
+        for cut in 0..wire.len() {
+            let mut short = &wire[..cut];
+            assert!(decode_map(&mut short).is_err(), "cut {cut}");
+        }
+        // zero ranks reject
+        let empty = encode_map(&[]);
+        assert!(decode_map(&mut empty.as_slice()).is_err());
+    }
+}

@@ -1,0 +1,994 @@
+//! **Socket-generic framed worker loop** — the one implementation of
+//! buffered non-blocking framed IO, per-channel token validation, SEED
+//! shipping, and the two-wave counter termination protocol that both
+//! socket backends run on. [`super::process`] instantiates it over
+//! `UnixStream`s between forked workers; [`super::tcp`] instantiates the
+//! exact same code over `TcpStream`s between hosts. There is no second
+//! copy of the framing or termination logic anywhere.
+//!
+//! Split of responsibilities:
+//!
+//! * [`Conn`] — one buffered non-blocking framed connection: inbound
+//!   byte buffer with a frame-parse cursor, outbound pending-write queue
+//!   (a worker never blocks on a write while a peer is blocked writing to
+//!   *it* — the classic all-to-all deadlock cannot form).
+//! * [`PeerConn`] — a mesh connection plus the channel's cumulative
+//!   send/receive message counters (the termination tokens stamped into
+//!   and validated against every MSGS frame).
+//! * [`SocketTransport`] — the [`Transport`] a worker's outbox flushes
+//!   into: rank-local batches short-circuit through an in-process queue,
+//!   remote batches are framed and queued on the peer connection.
+//! * [`worker_epoch`] — the worker side of one epoch: decode the actor
+//!   from its SEED payload ([`FabricActor::read_seed`] — inputs arrive
+//!   over the wire, never through fork copy-on-write), run the message
+//!   loop to Stop, ship the result state back in a STATE frame.
+//! * [`DriverCtrl`] + [`drive_to_stop`] + [`collect_state`] — the driver
+//!   side: blocking framed control channels with per-step deadlines (a
+//!   [`Liveness`] hook decides whether an expired deadline re-arms — the
+//!   process backend checks `waitpid`, the tcp backend fails fast with a
+//!   clear timeout), probe waves to quiescence, idle rounds, Stop, and
+//!   result-state collection.
+//!
+//! Termination (two-wave counter protocol): the driver polls every
+//! worker with PROBE frames; each worker replies with its monotone
+//! `(sent, delivered)` totals. When `Σsent == Σdelivered` for two
+//! consecutive waves with unchanged totals, there was a real instant
+//! between the waves at which every channel was empty and every worker
+//! idle — no message existed anywhere, so none can ever be sent again
+//! without driver action. The driver then runs a global idle round
+//! (IDLE → `on_idle` → flush → ack), re-probes to quiescence, and stops
+//! once an idle round produces no new sends — the exact epoch semantics
+//! of the sequential and threaded schedulers.
+
+#![allow(clippy::type_complexity)]
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::time::{Duration, Instant};
+
+use super::codec::{
+    decode_frame, decode_msgs, decode_policy, encode_frame_into,
+    encode_msg_frame, encode_policy_into, frame_len, get_u32, get_u64,
+    put_u32, put_u64, put_u8, WireError, WireMsg, FRAME_HEADER_LEN,
+};
+use super::outbox::FlushPolicy;
+use super::transport::{flush_outbox, Transport};
+use super::{CommStats, FabricActor, Outbox, RankStats, WireActor};
+
+/// Frame kinds on the wire (mesh, control, and rendezvous channels).
+pub(crate) mod kind {
+    /// Peer → peer: a batch of application messages.
+    pub const MSGS: u8 = 0;
+    /// Driver → worker: report your counters (token = wave id).
+    pub const PROBE: u8 = 1;
+    /// Worker → driver: `[sent, delivered]` (token echoes the wave id).
+    pub const REPORT: u8 = 2;
+    /// Driver → worker: run `on_idle`, flush, then report.
+    pub const IDLE: u8 = 3;
+    /// Driver → worker: serialize state and finish the epoch.
+    pub const STOP: u8 = 4;
+    /// Worker → driver: final `[delivered, bytes_in, frames_in, sent]`
+    /// followed by the actor state bytes.
+    pub const STATE: u8 = 5;
+    /// Driver → worker: epoch inputs — actor kind, flush policy,
+    /// warm-start seeds, and the [`FabricActor::write_seed`] bytes.
+    pub const SEED: u8 = 6;
+    /// Worker → registrar: "I am rank `token`" (tcp rendezvous step 1).
+    pub const JOIN: u8 = 7;
+    /// Registrar → worker: the full `rank → host:port` map.
+    pub const WELCOME: u8 = 8;
+    /// Worker → registrar: "listener bound at <payload addr>".
+    pub const BOUND: u8 = 9;
+    /// Registrar → worker: final map — go form the mesh.
+    pub const MESH: u8 = 10;
+    /// Dialing worker → accepting worker: "I am rank `token`".
+    pub const HELLO: u8 = 11;
+    /// Worker → registrar: mesh complete, ready for epochs.
+    pub const MESHED: u8 = 12;
+    /// Driver → worker: no more epochs, exit cleanly.
+    pub const SHUTDOWN: u8 = 13;
+}
+
+/// How long a blocked control-channel read may go silent before the
+/// driver consults its [`Liveness`] hook. Generous: CI machines stall.
+pub(crate) const CTRL_DEADLINE: Duration = Duration::from_secs(120);
+
+/// The stream capabilities the socket loop needs — implemented by
+/// `UnixStream` (process backend) and `TcpStream` (tcp backend).
+pub(crate) trait SocketLike: Read + Write + Send {
+    fn set_nonblocking_mode(&self, nonblocking: bool) -> std::io::Result<()>;
+    fn set_read_timeout_opt(
+        &self,
+        timeout: Option<Duration>,
+    ) -> std::io::Result<()>;
+    fn set_write_timeout_opt(
+        &self,
+        timeout: Option<Duration>,
+    ) -> std::io::Result<()>;
+}
+
+#[cfg(unix)]
+impl SocketLike for std::os::unix::net::UnixStream {
+    fn set_nonblocking_mode(&self, nonblocking: bool) -> std::io::Result<()> {
+        self.set_nonblocking(nonblocking)
+    }
+
+    fn set_read_timeout_opt(
+        &self,
+        timeout: Option<Duration>,
+    ) -> std::io::Result<()> {
+        self.set_read_timeout(timeout)
+    }
+
+    fn set_write_timeout_opt(
+        &self,
+        timeout: Option<Duration>,
+    ) -> std::io::Result<()> {
+        self.set_write_timeout(timeout)
+    }
+}
+
+impl SocketLike for std::net::TcpStream {
+    fn set_nonblocking_mode(&self, nonblocking: bool) -> std::io::Result<()> {
+        self.set_nonblocking(nonblocking)
+    }
+
+    fn set_read_timeout_opt(
+        &self,
+        timeout: Option<Duration>,
+    ) -> std::io::Result<()> {
+        self.set_read_timeout(timeout)
+    }
+
+    fn set_write_timeout_opt(
+        &self,
+        timeout: Option<Duration>,
+    ) -> std::io::Result<()> {
+        self.set_write_timeout(timeout)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Buffered non-blocking framed connection (worker side)
+// ---------------------------------------------------------------------
+
+/// Outcome of one [`Conn::fill`]: did bytes arrive, and did the stream
+/// reach end-of-file? (EOF is not always an error — a tcp worker idling
+/// between epochs treats a cleanly closed control channel as shutdown.)
+pub(crate) struct FillOutcome {
+    pub progressed: bool,
+    pub eof: bool,
+}
+
+pub(crate) struct Conn<S> {
+    stream: S,
+    /// Inbound bytes; frames are parsed from `rpos`.
+    rbuf: Vec<u8>,
+    rpos: usize,
+    /// Encoded frames not yet fully written (front is in flight).
+    wqueue: VecDeque<Vec<u8>>,
+    /// Bytes of the front frame already written.
+    wpos: usize,
+}
+
+impl<S: SocketLike> Conn<S> {
+    pub fn new(stream: S) -> Result<Self, String> {
+        Self::with_leftover(stream, Vec::new())
+    }
+
+    /// Wrap a stream that a blocking rendezvous reader already pulled
+    /// `leftover` unparsed bytes from (they stay at the front of the
+    /// inbound buffer — nothing on the wire is ever dropped).
+    pub fn with_leftover(stream: S, leftover: Vec<u8>) -> Result<Self, String> {
+        stream
+            .set_nonblocking_mode(true)
+            .map_err(|e| format!("set_nonblocking: {e}"))?;
+        Ok(Self {
+            stream,
+            rbuf: leftover,
+            rpos: 0,
+            wqueue: VecDeque::new(),
+            wpos: 0,
+        })
+    }
+
+    /// Unparsed inbound bytes (used to re-check buffers are empty at
+    /// epoch boundaries).
+    pub fn pending_read_bytes(&self) -> usize {
+        self.rbuf.len() - self.rpos
+    }
+
+    /// Pull whatever the socket has into the inbound buffer without
+    /// blocking.
+    pub fn fill(&mut self, what: &str) -> Result<FillOutcome, String> {
+        let mut tmp = [0u8; 1 << 16];
+        let mut out = FillOutcome {
+            progressed: false,
+            eof: false,
+        };
+        loop {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    out.eof = true;
+                    return Ok(out);
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&tmp[..n]);
+                    out.progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                // a 20ms read timeout surfaces as TimedOut on some
+                // platforms even in nonblocking mode; treat it as "no
+                // bytes right now"
+                Err(e) if e.kind() == ErrorKind::TimedOut => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(format!("{what}: read: {e}")),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total length of the complete frame at the parse cursor, if any.
+    pub fn next_frame_bytes(
+        &self,
+        what: &str,
+    ) -> Result<Option<usize>, String> {
+        let avail = &self.rbuf[self.rpos..];
+        match frame_len(avail).map_err(|e| format!("{what}: {e}"))? {
+            Some(total) if avail.len() >= total => Ok(Some(total)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Bytes of the frame at the cursor (caller got `total` from
+    /// [`Conn::next_frame_bytes`]).
+    pub fn frame_at_cursor(&self, total: usize) -> &[u8] {
+        &self.rbuf[self.rpos..self.rpos + total]
+    }
+
+    /// Advance the parse cursor past a consumed frame.
+    pub fn consume(&mut self, total: usize) {
+        self.rpos += total;
+    }
+
+    pub fn compact(&mut self) {
+        if self.rpos == self.rbuf.len() {
+            self.rbuf.clear();
+            self.rpos = 0;
+        } else if self.rpos > (1 << 16) {
+            self.rbuf.drain(..self.rpos);
+            self.rpos = 0;
+        }
+    }
+
+    pub fn queue_frame(&mut self, frame: Vec<u8>) {
+        self.wqueue.push_back(frame);
+    }
+
+    /// Write as much queued data as the socket accepts right now.
+    /// `Ok(true)` if any bytes moved.
+    pub fn pump_write(&mut self, what: &str) -> Result<bool, String> {
+        let mut progressed = false;
+        while let Some(front) = self.wqueue.front() {
+            match self.stream.write(&front[self.wpos..]) {
+                Ok(0) => return Err(format!("{what}: write returned 0")),
+                Ok(n) => {
+                    progressed = true;
+                    self.wpos += n;
+                    if self.wpos == front.len() {
+                        self.wqueue.pop_front();
+                        self.wpos = 0;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::TimedOut => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(format!("{what}: write: {e}")),
+            }
+        }
+        Ok(progressed)
+    }
+
+    /// Block (politely) until every queued frame is on the wire.
+    pub fn drain_writes(&mut self, what: &str) -> Result<(), String> {
+        while !self.wqueue.is_empty() {
+            if !self.pump_write(what)? {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Poll `ctrl` until one complete control frame is available and return
+/// its `(kind, token, payload)`. `Ok(None)` means the peer closed the
+/// channel cleanly (no partial frame pending) — end of the worker's
+/// service life. `deadline: None` waits indefinitely (a live driver
+/// decides the worker's lifetime; its death surfaces as EOF).
+pub(crate) fn next_ctrl_frame<S: SocketLike>(
+    ctrl: &mut Conn<S>,
+    deadline: Option<Duration>,
+) -> Result<Option<(u8, u64, Vec<u8>)>, String> {
+    let limit = deadline.map(|d| Instant::now() + d);
+    loop {
+        if let Some(total) = ctrl.next_frame_bytes("ctrl")? {
+            let decoded = {
+                let mut input = ctrl.frame_at_cursor(total);
+                let frame = decode_frame(&mut input)
+                    .map_err(|e| format!("ctrl: {e}"))?;
+                (frame.kind, frame.token, frame.payload.to_vec())
+            };
+            ctrl.consume(total);
+            ctrl.compact();
+            return Ok(Some(decoded));
+        }
+        let outcome = ctrl.fill("ctrl")?;
+        if outcome.eof {
+            if ctrl.pending_read_bytes() == 0 {
+                return Ok(None);
+            }
+            return Err("ctrl: peer closed mid-frame".into());
+        }
+        if !outcome.progressed {
+            if let Some(l) = limit {
+                if Instant::now() > l {
+                    return Err(format!(
+                        "ctrl: no frame within {deadline:?}"
+                    ));
+                }
+            }
+            // deadline-bounded waits (a SEED the driver is about to
+            // send) poll tightly; open-ended waits (a tcp worker parked
+            // between epochs, possibly for minutes) back off so an idle
+            // fleet isn't spinning syscalls
+            std::thread::sleep(if deadline.is_some() {
+                Duration::from_millis(1)
+            } else {
+                Duration::from_millis(20)
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Mesh peer connections + the worker-side transport
+// ---------------------------------------------------------------------
+
+pub(crate) struct PeerConn<S> {
+    pub conn: Conn<S>,
+    /// `"peer <rank>"`, precomputed for error paths.
+    label: String,
+    /// Cumulative messages sent on this channel this epoch — the token
+    /// stamped into each outbound MSGS frame.
+    sent_seq: u64,
+    /// Cumulative messages received this epoch; each inbound token must
+    /// equal `recv_seq + batch len` (FIFO channel, no loss, no reorder).
+    recv_seq: u64,
+}
+
+impl<S: SocketLike> PeerConn<S> {
+    pub fn new(conn: Conn<S>, peer_rank: usize) -> Self {
+        Self {
+            conn,
+            label: format!("peer {peer_rank}"),
+            sent_seq: 0,
+            recv_seq: 0,
+        }
+    }
+
+    /// Reset the per-epoch token counters (mesh connections persist
+    /// across epochs on the tcp backend).
+    fn reset_epoch(&mut self) {
+        self.sent_seq = 0;
+        self.recv_seq = 0;
+        debug_assert_eq!(
+            self.conn.pending_read_bytes(),
+            0,
+            "mesh channel must be drained at an epoch boundary"
+        );
+    }
+}
+
+/// The worker-side [`Transport`]: rank-local batches short-circuit
+/// through `selfq`, remote batches are framed onto the peer mesh.
+struct SocketTransport<'a, S, M> {
+    rank: usize,
+    peers: &'a mut [Option<PeerConn<S>>],
+    /// Rank-local batches (never serialized).
+    selfq: VecDeque<Vec<M>>,
+    /// Total messages queued (self lanes included) — the worker's
+    /// `sent` counter for the termination protocol.
+    sent: u64,
+    scratch: Vec<u8>,
+    /// First I/O error hit inside `ship` (surfaced by `check`).
+    io_error: Option<String>,
+}
+
+impl<S: SocketLike, M: WireMsg> SocketTransport<'_, S, M> {
+    fn check(&mut self) -> Result<(), String> {
+        match self.io_error.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn pump_all(&mut self) -> Result<bool, String> {
+        let mut progressed = false;
+        for peer in self.peers.iter_mut().flatten() {
+            progressed |= peer.conn.pump_write(&peer.label)?;
+        }
+        Ok(progressed)
+    }
+
+    /// Read and decode every complete inbound frame from `p`.
+    /// Returns `(batch, frame bytes)` pairs in arrival order.
+    fn read_frames(&mut self, p: usize) -> Result<Vec<(Vec<M>, u64)>, String> {
+        let peer = self.peers[p].as_mut().expect("no self/missing peer");
+        let what = peer.label.as_str();
+        let outcome = peer.conn.fill(what)?;
+        if outcome.eof {
+            return Err(format!("{what}: peer closed"));
+        }
+        let mut out = Vec::new();
+        while let Some(total) = peer.conn.next_frame_bytes(what)? {
+            let mut input = peer.conn.frame_at_cursor(total);
+            let frame =
+                decode_frame(&mut input).map_err(|e| format!("{what}: {e}"))?;
+            if frame.kind != kind::MSGS {
+                return Err(format!(
+                    "{what}: unexpected frame kind {}",
+                    frame.kind
+                ));
+            }
+            let msgs: Vec<M> =
+                decode_msgs(&frame).map_err(|e| format!("{what}: {e}"))?;
+            let expect = peer.recv_seq + msgs.len() as u64;
+            if frame.token != expect {
+                return Err(format!(
+                    "{what}: termination token mismatch \
+                     (expected {expect}, got {})",
+                    frame.token
+                ));
+            }
+            peer.recv_seq = expect;
+            peer.conn.consume(total);
+            out.push((msgs, total as u64));
+        }
+        peer.conn.compact();
+        Ok(out)
+    }
+}
+
+impl<S: SocketLike, M: WireMsg> Transport<M> for SocketTransport<'_, S, M> {
+    fn note_queued(&mut self, n: u64) {
+        self.sent += n;
+    }
+
+    fn ship(&mut self, to: usize, batch: Vec<M>) {
+        if to == self.rank {
+            self.selfq.push_back(batch);
+            return;
+        }
+        let peer = self.peers[to].as_mut().expect("missing peer");
+        peer.sent_seq += batch.len() as u64;
+        let mut frame =
+            Vec::with_capacity(FRAME_HEADER_LEN + 16 * batch.len());
+        encode_msg_frame(
+            kind::MSGS,
+            peer.sent_seq,
+            &batch,
+            &mut self.scratch,
+            &mut frame,
+        );
+        peer.conn.queue_frame(frame);
+        if let Err(e) = peer.conn.pump_write(&peer.label) {
+            if self.io_error.is_none() {
+                self.io_error = Some(e);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SEED payloads
+// ---------------------------------------------------------------------
+
+/// The non-actor half of a SEED frame: which actor kind to construct,
+/// and the outbox flush policy (+ per-destination warm-start seeds) the
+/// worker's epoch runs under — everything a remote worker needs that
+/// used to ride fork copy-on-write.
+pub(crate) struct SeedHead {
+    pub actor_kind: String,
+    pub policy: FlushPolicy,
+    pub seeds: Vec<usize>,
+}
+
+/// Encode a full SEED payload for one worker.
+pub(crate) fn encode_seed<A: FabricActor>(
+    actor: &A,
+    policy: FlushPolicy,
+    seeds: &[usize],
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    let kind_bytes = A::KIND.as_bytes();
+    assert!(kind_bytes.len() <= u8::MAX as usize, "actor kind too long");
+    put_u8(&mut out, kind_bytes.len() as u8);
+    out.extend_from_slice(kind_bytes);
+    encode_policy_into(&policy, &mut out);
+    put_u32(&mut out, seeds.len() as u32);
+    for &s in seeds {
+        put_u64(&mut out, s as u64);
+    }
+    actor.write_seed(&mut out);
+    out
+}
+
+/// Split a SEED payload into its head and the actor-seed remainder.
+pub(crate) fn split_seed(payload: &[u8]) -> Result<(SeedHead, &[u8]), String> {
+    let err = |e: WireError| format!("bad seed frame: {e}");
+    let mut input = payload;
+    let kind_len = super::codec::get_u8(&mut input).map_err(err)? as usize;
+    let kind_bytes = super::codec::take(&mut input, kind_len).map_err(err)?;
+    let actor_kind = std::str::from_utf8(kind_bytes)
+        .map_err(|_| "bad seed frame: non-utf8 actor kind".to_string())?
+        .to_string();
+    let policy = decode_policy(&mut input).map_err(err)?;
+    let n = get_u32(&mut input).map_err(err)? as usize;
+    let mut seeds = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        seeds.push(get_u64(&mut input).map_err(err)? as usize);
+    }
+    Ok((
+        SeedHead {
+            actor_kind,
+            policy,
+            seeds,
+        },
+        input,
+    ))
+}
+
+// ---------------------------------------------------------------------
+// Worker epoch loop
+// ---------------------------------------------------------------------
+
+/// Run one epoch on the worker side of a socket backend: construct the
+/// actor from its wire seed, run seed → message storm → idle rounds →
+/// Stop under driver control, and ship the result state back.
+pub(crate) fn worker_epoch<A, S>(
+    rank: usize,
+    head: &SeedHead,
+    actor_seed: &[u8],
+    ctrl: &mut Conn<S>,
+    peers: &mut [Option<PeerConn<S>>],
+) -> Result<(), String>
+where
+    A: FabricActor,
+    A::Msg: WireMsg,
+    S: SocketLike,
+{
+    let ranks = peers.len();
+    let mut input = actor_seed;
+    let mut actor = A::read_seed(&mut input)
+        .map_err(|e| format!("seed decode for {:?}: {e}", A::KIND))?;
+    if !input.is_empty() {
+        return Err(format!(
+            "seed for {:?} left {} trailing bytes",
+            A::KIND,
+            input.len()
+        ));
+    }
+    for peer in peers.iter_mut().flatten() {
+        peer.reset_epoch();
+    }
+
+    let mut tp: SocketTransport<'_, S, A::Msg> = SocketTransport {
+        rank,
+        peers,
+        selfq: VecDeque::new(),
+        sent: 0,
+        scratch: Vec::new(),
+        io_error: None,
+    };
+    let mut outbox: Outbox<A::Msg> =
+        Outbox::with_seeds(ranks, head.policy, &head.seeds);
+    let mut sent_base = 0u64;
+    let mut delivered = 0u64;
+    let mut frames_in = 0u64;
+    let mut bytes_in = 0u64;
+
+    // Seed context.
+    actor.seed(&mut outbox);
+    flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+    tp.check()?;
+
+    let mut stop = false;
+    while !stop {
+        let mut progressed = false;
+
+        // 1. keep partially written frames moving
+        progressed |= tp.pump_all()?;
+
+        // 2. rank-local batches
+        while let Some(batch) = tp.selfq.pop_front() {
+            progressed = true;
+            let n = batch.len() as u64;
+            for msg in batch {
+                actor.on_message(msg, &mut outbox);
+                flush_outbox(&mut outbox, &mut sent_base, &mut tp, false);
+            }
+            delivered += n;
+            frames_in += 1;
+            flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+            tp.check()?;
+        }
+
+        // 3. inbound peer frames
+        for p in 0..ranks {
+            if p == rank {
+                continue;
+            }
+            for (msgs, nbytes) in tp.read_frames(p)? {
+                progressed = true;
+                let n = msgs.len() as u64;
+                for msg in msgs {
+                    actor.on_message(msg, &mut outbox);
+                    flush_outbox(&mut outbox, &mut sent_base, &mut tp, false);
+                }
+                delivered += n;
+                frames_in += 1;
+                bytes_in += nbytes;
+                flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+                tp.check()?;
+            }
+        }
+
+        // 4. control frames from the driver
+        let ctrl_fill = ctrl.fill("ctrl")?;
+        if ctrl_fill.eof {
+            return Err("ctrl: driver closed mid-epoch".into());
+        }
+        while let Some(total) = ctrl.next_frame_bytes("ctrl")? {
+            progressed = true;
+            let (fkind, ftoken) = {
+                let mut input = ctrl.frame_at_cursor(total);
+                let frame = decode_frame(&mut input)
+                    .map_err(|e| format!("ctrl: {e}"))?;
+                (frame.kind, frame.token)
+            };
+            ctrl.consume(total);
+            match fkind {
+                kind::PROBE => {
+                    queue_report(ctrl, ftoken, tp.sent, delivered);
+                }
+                kind::IDLE => {
+                    actor.on_idle(&mut outbox);
+                    flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+                    tp.check()?;
+                    queue_report(ctrl, ftoken, tp.sent, delivered);
+                }
+                kind::STOP => {
+                    stop = true;
+                    break;
+                }
+                other => {
+                    return Err(format!("ctrl: unexpected frame kind {other}"))
+                }
+            }
+        }
+        ctrl.compact();
+        progressed |= ctrl.pump_write("ctrl")?;
+
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+
+    // Final state: inbound stats record + serialized actor state.
+    let mut payload = Vec::new();
+    put_u64(&mut payload, delivered);
+    put_u64(&mut payload, bytes_in);
+    put_u64(&mut payload, frames_in);
+    put_u64(&mut payload, tp.sent);
+    actor.write_state(&mut payload);
+    let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    encode_frame_into(kind::STATE, 0, 0, &payload, &mut frame);
+    ctrl.queue_frame(frame);
+    ctrl.drain_writes("ctrl")
+}
+
+fn queue_report<S: SocketLike>(
+    ctrl: &mut Conn<S>,
+    wave: u64,
+    sent: u64,
+    delivered: u64,
+) {
+    let mut payload = Vec::with_capacity(16);
+    put_u64(&mut payload, sent);
+    put_u64(&mut payload, delivered);
+    let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + 16);
+    encode_frame_into(kind::REPORT, 0, wave, &payload, &mut frame);
+    ctrl.queue_frame(frame);
+}
+
+// ---------------------------------------------------------------------
+// Driver side
+// ---------------------------------------------------------------------
+
+/// What the driver does when a control read hits its deadline with no
+/// frame. `Ok(true)`: the worker was verified alive (e.g. `waitpid`
+/// says the child is running a long context) — re-arm and keep waiting.
+/// `Ok(false)`: liveness cannot be verified — treat the deadline as
+/// fatal. `Err`: the worker is known dead; the message describes how.
+pub(crate) trait Liveness {
+    fn still_alive(&mut self) -> Result<bool, String>;
+}
+
+/// The tcp backend's liveness: a remote worker cannot be probed beyond
+/// its socket, so an expired deadline is a clear, immediate error.
+pub(crate) struct DeadlineOnly;
+
+impl Liveness for DeadlineOnly {
+    fn still_alive(&mut self) -> Result<bool, String> {
+        Ok(false)
+    }
+}
+
+/// Blocking framed reader/writer over one worker's control channel.
+pub(crate) struct DriverCtrl<S, L> {
+    pub desc: String,
+    stream: S,
+    liveness: L,
+    rbuf: Vec<u8>,
+    rpos: usize,
+}
+
+impl<S: SocketLike, L: Liveness> DriverCtrl<S, L> {
+    pub fn new(stream: S, desc: String, liveness: L) -> Result<Self, String> {
+        stream
+            .set_read_timeout_opt(Some(Duration::from_millis(20)))
+            .map_err(|e| format!("{desc}: set_read_timeout: {e}"))?;
+        // writes are deadline-bounded too: a worker that stops draining
+        // (wedged host, black-holed network) must surface as an error,
+        // not hang the driver inside a multi-megabyte SEED write_all —
+        // the same no-hang contract every recv in this module keeps.
+        // A slow-but-draining worker is fine: each write syscall that
+        // moves bytes restarts the clock.
+        stream
+            .set_write_timeout_opt(Some(CTRL_DEADLINE))
+            .map_err(|e| format!("{desc}: set_write_timeout: {e}"))?;
+        Ok(Self {
+            desc,
+            stream,
+            liveness,
+            rbuf: Vec::new(),
+            rpos: 0,
+        })
+    }
+
+    /// Take the stream (plus any already-buffered unparsed bytes) back
+    /// out — used when a rendezvous control link becomes a worker's
+    /// nonblocking [`Conn`].
+    pub fn into_parts(mut self) -> (S, Vec<u8>) {
+        let leftover = self.rbuf.split_off(self.rpos);
+        (self.stream, leftover)
+    }
+
+    pub fn send(&mut self, k: u8, token: u64) -> Result<(), String> {
+        self.send_payload(k, token, &[])
+    }
+
+    pub fn send_payload(
+        &mut self,
+        k: u8,
+        token: u64,
+        payload: &[u8],
+    ) -> Result<(), String> {
+        // header then payload, no concatenation: SEED payloads carry
+        // whole stores/shards, and copying them into a second buffer
+        // would transiently double the driver's per-rank seed memory
+        let head = super::codec::encode_frame_header(k, 0, token, payload);
+        self.stream
+            .write_all(&head)
+            .and_then(|()| self.stream.write_all(payload))
+            .map_err(|e| format!("{}: control write: {e}", self.desc))
+    }
+
+    /// Read the next control frame (blocking); returns
+    /// `(kind, token, payload)`. Every `deadline` of silence the
+    /// [`Liveness`] hook decides: re-arm (worker verified alive) or fail
+    /// with a clear error naming the worker.
+    pub fn recv(
+        &mut self,
+        deadline: Duration,
+    ) -> Result<(u8, u64, Vec<u8>), String> {
+        let mut limit = Instant::now() + deadline;
+        loop {
+            let avail = &self.rbuf[self.rpos..];
+            if let Some(total) =
+                frame_len(avail).map_err(|e| format!("{}: {e}", self.desc))?
+            {
+                if avail.len() >= total {
+                    let mut input = &self.rbuf[self.rpos..][..total];
+                    let frame = decode_frame(&mut input)
+                        .map_err(|e| format!("{}: {e}", self.desc))?;
+                    let out = (frame.kind, frame.token, frame.payload.to_vec());
+                    self.rpos += total;
+                    if self.rpos == self.rbuf.len() {
+                        self.rbuf.clear();
+                        self.rpos = 0;
+                    }
+                    return Ok(out);
+                }
+            }
+            let mut tmp = [0u8; 1 << 16];
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    return Err(format!(
+                        "{}: control channel closed mid-protocol",
+                        self.desc
+                    ))
+                }
+                Ok(n) => self.rbuf.extend_from_slice(&tmp[..n]),
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock
+                        || e.kind() == ErrorKind::TimedOut =>
+                {
+                    if Instant::now() > limit {
+                        match self.liveness.still_alive() {
+                            Ok(true) => limit = Instant::now() + deadline,
+                            Ok(false) => {
+                                return Err(format!(
+                                    "{}: no control frame within {:?}",
+                                    self.desc, deadline
+                                ))
+                            }
+                            Err(msg) => {
+                                return Err(format!("{}: {msg}", self.desc))
+                            }
+                        }
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    return Err(format!("{}: control read: {e}", self.desc))
+                }
+            }
+        }
+    }
+}
+
+/// One probe wave: returns global `(sent, delivered)`.
+fn probe_wave<S: SocketLike, L: Liveness>(
+    ctrls: &mut [DriverCtrl<S, L>],
+    wave: u64,
+) -> Result<(u64, u64), String> {
+    for c in ctrls.iter_mut() {
+        c.send(kind::PROBE, wave)?;
+    }
+    collect_reports(ctrls, wave)
+}
+
+/// Collect one REPORT per worker for `wave`; sums `(sent, delivered)`.
+pub(crate) fn collect_reports<S: SocketLike, L: Liveness>(
+    ctrls: &mut [DriverCtrl<S, L>],
+    wave: u64,
+) -> Result<(u64, u64), String> {
+    let (mut s, mut d) = (0u64, 0u64);
+    for c in ctrls.iter_mut() {
+        loop {
+            let (k, token, payload) = c.recv(CTRL_DEADLINE)?;
+            if k != kind::REPORT {
+                return Err(format!(
+                    "{}: sent unexpected control frame kind {k}",
+                    c.desc
+                ));
+            }
+            if token != wave {
+                // stale report from an earlier wave; skip it
+                continue;
+            }
+            let mut input = payload.as_slice();
+            let err =
+                |e: WireError| format!("{}: bad report: {e}", c.desc);
+            let sent = get_u64(&mut input).map_err(err)?;
+            let delivered = get_u64(&mut input).map_err(err)?;
+            s += sent;
+            d += delivered;
+            break;
+        }
+    }
+    Ok((s, d))
+}
+
+/// Probe until two consecutive waves report identical, balanced totals
+/// (see module docs for why that implies global quiescence).
+fn wait_quiescent<S: SocketLike, L: Liveness>(
+    ctrls: &mut [DriverCtrl<S, L>],
+    wave: &mut u64,
+) -> Result<u64, String> {
+    let mut prev: Option<(u64, u64)> = None;
+    loop {
+        *wave += 1;
+        let (s, d) = probe_wave(ctrls, *wave)?;
+        if s == d && prev == Some((s, d)) {
+            return Ok(s);
+        }
+        prev = Some((s, d));
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+/// Drive an already-seeded epoch to completion: quiescence → idle
+/// rounds → re-quiescence, then broadcast Stop. Returns the number of
+/// idle rounds executed (same schedule as the in-memory backends).
+pub(crate) fn drive_to_stop<S: SocketLike, L: Liveness>(
+    ctrls: &mut [DriverCtrl<S, L>],
+) -> Result<u64, String> {
+    let mut wave = 0u64;
+    let mut idle_rounds = 0u64;
+    loop {
+        let sent_before = wait_quiescent(ctrls, &mut wave)?;
+        idle_rounds += 1;
+        wave += 1;
+        for c in ctrls.iter_mut() {
+            c.send(kind::IDLE, wave)?;
+        }
+        collect_reports(ctrls, wave)?;
+        let sent_after = wait_quiescent(ctrls, &mut wave)?;
+        if sent_after == sent_before {
+            break;
+        }
+    }
+    for c in ctrls.iter_mut() {
+        c.send(kind::STOP, 0)?;
+    }
+    Ok(idle_rounds)
+}
+
+/// Receive one worker's STATE frame: fold its traffic counters into
+/// `stats` and decode the result state into the driver's actor copy.
+pub(crate) fn collect_state<A, S, L>(
+    ctrl: &mut DriverCtrl<S, L>,
+    actor: &mut A,
+    stats: &mut CommStats,
+    rank: usize,
+) -> Result<(), String>
+where
+    A: WireActor,
+    S: SocketLike,
+    L: Liveness,
+{
+    let (k, _token, payload) = ctrl.recv(CTRL_DEADLINE)?;
+    if k != kind::STATE {
+        return Err(format!(
+            "{}: sent frame kind {k} instead of state",
+            ctrl.desc
+        ));
+    }
+    let mut input = payload.as_slice();
+    let err = |e: WireError| format!("{}: bad state frame: {e}", ctrl.desc);
+    let delivered = get_u64(&mut input).map_err(err)?;
+    let bytes_in = get_u64(&mut input).map_err(err)?;
+    let frames_in = get_u64(&mut input).map_err(err)?;
+    let _sent = get_u64(&mut input).map_err(err)?;
+    stats.messages += delivered;
+    stats.bytes += bytes_in;
+    stats.flushes += frames_in;
+    stats.per_rank[rank] = RankStats {
+        messages: delivered,
+        bytes: bytes_in,
+        flushes: frames_in,
+    };
+    actor
+        .read_state(&mut input)
+        .map_err(|e| format!("{}: state decode failed: {e}", ctrl.desc))?;
+    if !input.is_empty() {
+        return Err(format!(
+            "{}: left {} trailing state bytes",
+            ctrl.desc,
+            input.len()
+        ));
+    }
+    Ok(())
+}

@@ -1,0 +1,376 @@
+//! **TCP backend: the multi-host fabric.** One independent worker
+//! process per rank (launched separately — `degreesketch worker` or
+//! [`run_worker`] in a thread), meshed by the rendezvous handshake
+//! (`super::rendezvous`), running the same socket-generic epoch loop as
+//! the process backend (`super::socket`) over `TcpStream`s.
+//!
+//! A [`TcpFabric`] is the driver's handle: control channels to every
+//! rank, kept open across epochs (the mesh persists too; per-channel
+//! token counters reset at each SEED). Each epoch ships every worker a
+//! SEED frame — actor kind, flush policy, warm-start seeds, and the
+//! [`FabricActor::write_seed`] bytes — so **all actor inputs travel
+//! over the wire**; nothing is inherited from the driver process.
+//! Workers dispatch the SEED's actor kind through a [`WorkerDispatch`]
+//! (a registry of `FabricActor` kinds built by the launcher, e.g.
+//! `coordinator::worker_dispatch()`), which is what lets one generic
+//! `worker` process serve accumulation, ANF passes and triangle epochs
+//! back to back.
+//!
+//! [`Backend::Tcp`](super::Backend::Tcp) routes through a process-global
+//! fabric ([`configure_driver`] → first epoch performs the rendezvous →
+//! [`shutdown_driver`] sends every worker SHUTDOWN). Tests and embedders
+//! that want isolation can hold explicit [`TcpFabric`]s instead.
+//!
+//! Trust model: the fabric authenticates nothing — it is meant for
+//! hosts you control on a network you trust (same stance as MPI/YGM
+//! launchers). CRC'd frames catch corruption, not adversaries.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::outbox::FlushPolicy;
+use super::rendezvous::{self, TcpCtrl};
+use super::socket::{self, kind, Conn, PeerConn, SeedHead};
+use super::{Backend, CommStats, FabricActor, WireMsg};
+
+/// Default per-step rendezvous / control deadline.
+pub const DEFAULT_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Parse a `--hosts` spec: comma-separated `rank=host:port` entries that
+/// must cover exactly ranks `0..ranks-1`. `host:0` lets the worker bind
+/// an ephemeral port (reported back during rendezvous).
+pub fn parse_hosts(spec: &str, ranks: usize) -> Result<Vec<String>, String> {
+    let mut hosts: Vec<Option<String>> = vec![None; ranks];
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let Some((rank_s, addr)) = entry.split_once('=') else {
+            return Err(format!(
+                "bad --hosts entry {entry:?} (want rank=host:port)"
+            ));
+        };
+        let rank: usize = rank_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad --hosts rank in {entry:?}"))?;
+        if rank >= ranks {
+            return Err(format!(
+                "--hosts names rank {rank}, but the run has {ranks} ranks"
+            ));
+        }
+        if hosts[rank].is_some() {
+            return Err(format!("--hosts names rank {rank} twice"));
+        }
+        let addr = addr.trim();
+        if !addr.contains(':') {
+            return Err(format!(
+                "bad --hosts address {addr:?} (want host:port)"
+            ));
+        }
+        hosts[rank] = Some(addr.to_string());
+    }
+    hosts
+        .into_iter()
+        .enumerate()
+        .map(|(r, h)| {
+            h.ok_or_else(|| format!("--hosts is missing rank {r}"))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Driver side
+// ---------------------------------------------------------------------
+
+/// A connected multi-host fabric: the driver's control channel to every
+/// worker rank. Epochs run back to back over the same mesh.
+pub struct TcpFabric {
+    ctrls: Vec<TcpCtrl>,
+}
+
+impl TcpFabric {
+    /// Bind-side entry: run the rendezvous on an already-bound registrar
+    /// listener. `hosts[r]` is where rank `r` must bind its mesh
+    /// listener. Fails (rather than hangs) with a step-and-rank-specific
+    /// error if any worker is unreachable within `deadline`.
+    pub fn rendezvous(
+        listener: TcpListener,
+        hosts: Vec<String>,
+        deadline: Duration,
+    ) -> Result<Self, String> {
+        let ctrls = rendezvous::driver_rendezvous(listener, &hosts, deadline)?;
+        Ok(Self { ctrls })
+    }
+
+    /// Number of worker ranks in the fabric.
+    pub fn ranks(&self) -> usize {
+        self.ctrls.len()
+    }
+
+    /// Run one epoch: SEED every worker with its actor's wire inputs,
+    /// drive quiescence → idle rounds → Stop, and decode every STATE
+    /// back into the driver-side actors. Bit-compatible with the other
+    /// backends (merges commute; parity is test-enforced).
+    pub fn run_epoch<A>(
+        &mut self,
+        actors: &mut [A],
+        policy: FlushPolicy,
+        seeds: &[usize],
+    ) -> Result<CommStats, String>
+    where
+        A: FabricActor,
+        A::Msg: WireMsg,
+    {
+        let ranks = self.ctrls.len();
+        if actors.len() != ranks {
+            return Err(format!(
+                "epoch has {} actors but the fabric has {ranks} workers \
+                 (ranks and --hosts must agree)",
+                actors.len()
+            ));
+        }
+        for (rank, c) in self.ctrls.iter_mut().enumerate() {
+            let payload = socket::encode_seed(&actors[rank], policy, seeds);
+            c.send_payload(kind::SEED, 0, &payload)?;
+        }
+        let idle_rounds = socket::drive_to_stop(&mut self.ctrls)?;
+        let mut stats = CommStats::new(Backend::Tcp, ranks);
+        stats.idle_rounds = idle_rounds;
+        for (rank, c) in self.ctrls.iter_mut().enumerate() {
+            socket::collect_state(c, &mut actors[rank], &mut stats, rank)?;
+        }
+        Ok(stats)
+    }
+
+    /// Tell every worker the fabric is done; workers exit cleanly.
+    pub fn shutdown(mut self) {
+        for c in self.ctrls.iter_mut() {
+            let _ = c.send(kind::SHUTDOWN, 0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The process-global fabric behind Backend::Tcp
+// ---------------------------------------------------------------------
+
+struct Global {
+    pending: Option<(TcpListener, Vec<String>)>,
+    fabric: Option<TcpFabric>,
+}
+
+static GLOBAL: Mutex<Global> = Mutex::new(Global {
+    pending: None,
+    fabric: None,
+});
+
+/// Lock the global fabric, surviving poisoning: an epoch panic unwinds
+/// through `run_global` with the guard live, and the cleanup paths
+/// ([`shutdown_driver`] especially) must still work afterwards — the
+/// state itself stays consistent because `run_global` tears the failed
+/// fabric down before panicking.
+fn global_lock() -> std::sync::MutexGuard<'static, Global> {
+    GLOBAL.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Arm the global fabric used by `Backend::Tcp` epochs: the registrar
+/// listener (already bound, so the caller can print/advertise its
+/// address) and the rank → mesh-address map. The rendezvous itself runs
+/// lazily on the first epoch. Replaces any previous configuration.
+pub fn configure_driver(listener: TcpListener, hosts: Vec<String>) {
+    let mut g = global_lock();
+    if let Some(f) = g.fabric.take() {
+        f.shutdown();
+    }
+    g.pending = Some((listener, hosts));
+}
+
+/// Shut the global fabric down (workers receive SHUTDOWN and exit).
+/// No-op when nothing is configured. Call when the driver is done —
+/// statics never drop, so this is the only clean-exit path for workers.
+pub fn shutdown_driver() {
+    let mut g = global_lock();
+    g.pending = None;
+    if let Some(f) = g.fabric.take() {
+        f.shutdown();
+    }
+}
+
+/// Run one epoch on the global fabric (the `Backend::Tcp` arm of
+/// `run_epoch_wire`). Panics on configuration or fabric errors,
+/// mirroring the other backends' abort behavior; a failed epoch tears
+/// the fabric down (workers see EOF and exit).
+pub(crate) fn run_global<A>(
+    actors: &mut [A],
+    policy: FlushPolicy,
+    seeds: &[usize],
+) -> CommStats
+where
+    A: FabricActor,
+    A::Msg: WireMsg,
+{
+    let mut g = global_lock();
+    if g.fabric.is_none() {
+        let (listener, hosts) = g.pending.take().unwrap_or_else(|| {
+            panic!(
+                "Backend::Tcp has no fabric configured: call \
+                 comm::tcp::configure_driver(listener, hosts) first \
+                 (CLI: --backend tcp --listen <addr> --hosts <map>)"
+            )
+        });
+        match TcpFabric::rendezvous(listener, hosts, DEFAULT_DEADLINE) {
+            Ok(f) => g.fabric = Some(f),
+            Err(e) => panic!("tcp fabric rendezvous failed: {e}"),
+        }
+    }
+    let fabric = g.fabric.as_mut().expect("fabric present");
+    match fabric.run_epoch(actors, policy, seeds) {
+        Ok(stats) => stats,
+        Err(e) => {
+            // a half-run epoch leaves workers in an unknown state: drop
+            // the fabric so they exit instead of wedging
+            g.fabric = None;
+            panic!("tcp epoch aborted: {e}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------
+
+type Handler = Box<
+    dyn Fn(
+            usize,
+            &SeedHead,
+            &[u8],
+            &mut Conn<TcpStream>,
+            &mut [Option<PeerConn<TcpStream>>],
+        ) -> Result<(), String>
+        + Send,
+>;
+
+/// A registry mapping [`FabricActor::KIND`] strings to their generic
+/// epoch loops — how one worker process serves any actor kind the
+/// driver sends. Build one with the kinds your deployment runs (the
+/// coordinator exposes `worker_dispatch()` with the standard three) and
+/// hand it to [`run_worker`].
+#[derive(Default)]
+pub struct WorkerDispatch {
+    handlers: Vec<(String, Handler)>,
+}
+
+impl WorkerDispatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register actor kind `A` (builder-style).
+    pub fn register<A>(mut self) -> Self
+    where
+        A: FabricActor + 'static,
+        A::Msg: WireMsg,
+    {
+        assert!(
+            !self.handlers.iter().any(|(k, _)| k == A::KIND),
+            "actor kind {:?} registered twice",
+            A::KIND
+        );
+        let handler: Handler = Box::new(
+            |rank: usize,
+             head: &SeedHead,
+             seed: &[u8],
+             ctrl: &mut Conn<TcpStream>,
+             peers: &mut [Option<PeerConn<TcpStream>>]| {
+                socket::worker_epoch::<A, TcpStream>(
+                    rank, head, seed, ctrl, peers,
+                )
+            },
+        );
+        self.handlers.push((A::KIND.to_string(), handler));
+        self
+    }
+
+    fn find(&self, kind_name: &str) -> Option<&Handler> {
+        self.handlers
+            .iter()
+            .find(|(k, _)| k == kind_name)
+            .map(|(_, h)| h)
+    }
+}
+
+/// Serve one rank of a tcp fabric: join via the registrar at `connect`,
+/// form the mesh, then run epochs as SEED frames arrive until the
+/// driver sends SHUTDOWN (or closes the control channel between
+/// epochs). `deadline` bounds every rendezvous step.
+pub fn run_worker(
+    dispatch: WorkerDispatch,
+    connect: &str,
+    rank: usize,
+    deadline: Duration,
+) -> Result<(), String> {
+    let (mut ctrl, mut peers) =
+        rendezvous::worker_join(connect, rank, deadline)?;
+    loop {
+        match socket::next_ctrl_frame(&mut ctrl, None)? {
+            // driver gone between epochs: treat as shutdown (its work,
+            // if any, completed — mid-epoch EOF errors inside the loop)
+            None => return Ok(()),
+            Some((kind::SHUTDOWN, _, _)) => return Ok(()),
+            Some((kind::SEED, _, payload)) => {
+                let (head, actor_seed) = socket::split_seed(&payload)?;
+                let handler =
+                    dispatch.find(&head.actor_kind).ok_or_else(|| {
+                        format!(
+                            "no handler registered for actor kind {:?} \
+                             (this worker serves: [{}])",
+                            head.actor_kind,
+                            dispatch
+                                .handlers
+                                .iter()
+                                .map(|(k, _)| k.as_str())
+                                .collect::<Vec<_>>()
+                                .join(", ")
+                        )
+                    })?;
+                handler(rank, &head, actor_seed, &mut ctrl, &mut peers)?;
+            }
+            Some((k, ..)) => {
+                return Err(format!(
+                    "ctrl: unexpected frame kind {k} between epochs"
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_hosts_accepts_full_maps_in_any_order() {
+        let hosts =
+            parse_hosts("2=127.0.0.1:9, 0=a:1,1=b:0", 3).unwrap();
+        assert_eq!(hosts, vec!["a:1", "b:0", "127.0.0.1:9"]);
+    }
+
+    #[test]
+    fn parse_hosts_rejects_gaps_dups_and_garbage() {
+        assert!(parse_hosts("0=a:1", 2).is_err()); // missing rank 1
+        assert!(parse_hosts("0=a:1,0=b:2", 1).is_err()); // dup
+        assert!(parse_hosts("0=a:1,5=b:2", 2).is_err()); // out of range
+        assert!(parse_hosts("nope", 1).is_err()); // no '='
+        assert!(parse_hosts("0=noport", 1).is_err()); // no ':'
+        assert!(parse_hosts("x=a:1", 1).is_err()); // bad rank
+    }
+
+    #[test]
+    fn dispatch_rejects_unknown_kinds() {
+        let d = WorkerDispatch::new();
+        assert!(d.find("deg-accum").is_none());
+    }
+}

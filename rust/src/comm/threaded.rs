@@ -93,12 +93,16 @@ impl<M> Transport<M> for ChannelTransport<'_, M> {
 
 /// Run one epoch on one thread per rank; returns the actors and stats.
 /// Panics (after tearing the epoch down) if any actor context panicked.
+/// `seeds` warm-starts the per-destination flush thresholds (empty =
+/// start from `policy.threshold`; see `FlushPolicy::seeds_from_stats`).
 pub fn run_threaded<A: Actor + 'static>(
     actors: Vec<A>,
     policy: FlushPolicy,
+    seeds: &[usize],
 ) -> (Vec<A>, CommStats) {
     let ranks = actors.len();
     assert!(ranks > 0);
+    let seeds: Arc<Vec<usize>> = Arc::new(seeds.to_vec());
     let shared = Arc::new(Shared {
         // one "context token" per rank for the seed phase
         outstanding: AtomicI64::new(ranks as i64),
@@ -122,10 +126,13 @@ pub fn run_threaded<A: Actor + 'static>(
     for (rank, (actor, rx)) in actors.into_iter().zip(receivers).enumerate() {
         let senders = senders.clone();
         let shared = Arc::clone(&shared);
+        let seeds = Arc::clone(&seeds);
         handles.push(std::thread::spawn(move || {
             let outcome = std::panic::catch_unwind(
                 std::panic::AssertUnwindSafe(|| {
-                    worker_loop(rank, actor, rx, &senders, &shared, policy)
+                    worker_loop(
+                        rank, actor, rx, &senders, &shared, policy, &seeds,
+                    )
                 }),
             );
             match outcome {
@@ -215,8 +222,10 @@ fn worker_loop<A: Actor>(
     senders: &[Sender<Packet<A::Msg>>],
     shared: &Shared,
     policy: FlushPolicy,
+    seeds: &[usize],
 ) -> A {
-    let mut outbox: Outbox<A::Msg> = Outbox::new(senders.len(), policy);
+    let mut outbox: Outbox<A::Msg> =
+        Outbox::with_seeds(senders.len(), policy, seeds);
     let mut sent_base = 0u64;
     let mut transport = ChannelTransport { senders, shared };
 
@@ -305,7 +314,7 @@ mod tests {
         // nonzero forever, deadlocking the driver's quiescence wait
         let actors: Vec<Bomb> = (0..3).map(|rank| Bomb { rank }).collect();
         let result = std::panic::catch_unwind(|| {
-            run_threaded(actors, FlushPolicy::default())
+            run_threaded(actors, FlushPolicy::default(), &[])
         });
         let payload = result.expect_err("worker panic must reach the driver");
         let note = payload

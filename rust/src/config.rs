@@ -165,7 +165,9 @@ impl Config {
 
     /// Comm-plane flush policy: `comm.flush_threshold` seeds the
     /// per-destination thresholds; `comm.adaptive_flush = false` pins
-    /// them (the deterministic-bench escape hatch).
+    /// them (the deterministic-bench escape hatch). The tcp fabric also
+    /// reads `comm.listen` (registrar address) and `comm.hosts`
+    /// (`"0=host:port,1=host:port,..."`) when `run.backend = "tcp"`.
     pub fn flush_policy(&self) -> Result<FlushPolicy> {
         let default = FlushPolicy::default();
         let threshold =
@@ -249,6 +251,22 @@ adaptive_flush = false
         let mut c = Config::parse("").unwrap();
         c.set_override("run.backend=\"process\"").unwrap();
         assert_eq!(c.backend().unwrap(), Backend::Process);
+    }
+
+    #[test]
+    fn backend_tcp_and_fabric_keys_parse_from_config() {
+        let mut c = Config::parse("").unwrap();
+        c.set_override("run.backend=\"tcp\"").unwrap();
+        c.set_override("comm.listen=\"127.0.0.1:7300\"").unwrap();
+        c.set_override("comm.hosts=\"0=127.0.0.1:7301,1=127.0.0.1:7302\"")
+            .unwrap();
+        assert_eq!(c.backend().unwrap(), Backend::Tcp);
+        assert_eq!(c.get_str("comm.listen", ""), "127.0.0.1:7300");
+        assert_eq!(
+            crate::comm::tcp::parse_hosts(c.get_str("comm.hosts", ""), 2)
+                .unwrap(),
+            vec!["127.0.0.1:7301", "127.0.0.1:7302"]
+        );
     }
 
     #[test]

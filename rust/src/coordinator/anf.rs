@@ -32,8 +32,8 @@ use crate::comm::codec::{
     put_u8,
 };
 use crate::comm::{
-    codec, run_epoch_wire, Actor, Backend, CommStats, FlushPolicy, Outbox,
-    WireActor, WireError, WireMsg,
+    codec, run_epoch_wire_seeded, Actor, Backend, CommStats, FabricActor,
+    FlushPolicy, Outbox, WireActor, WireError, WireMsg,
 };
 use crate::graph::stream::{EdgeStream, MemoryStream};
 use crate::graph::VertexId;
@@ -242,6 +242,53 @@ impl WireActor for AnfActor {
     }
 }
 
+/// seed_state leg: one ANF pass's inputs are the rank/partition
+/// context, this rank's substream, and the previous layer `Dᵗ⁻¹`
+/// (shipped once — the worker clones it into `Dᵗ`, exactly as the
+/// driver-side constructor does).
+impl FabricActor for AnfActor {
+    const KIND: &'static str = "anf-pass";
+
+    fn write_seed(&self, buf: &mut Vec<u8>) {
+        codec::put_u64(buf, self.rank as u64);
+        codec::put_u64(buf, self.ranks as u64);
+        self.partitioner.encode_into(buf);
+        codec::encode_config_into(self.prev.config(), buf);
+        codec::encode_edges_into(self.substream.edges(), buf);
+        codec::encode_store_into(&self.prev, buf);
+    }
+
+    fn read_seed(input: &mut &[u8]) -> Result<Self, WireError> {
+        let rank = codec::get_u64(input)? as usize;
+        let ranks = codec::get_u64(input)? as usize;
+        if ranks == 0 || rank >= ranks {
+            return Err(WireError::Invalid(format!(
+                "seed rank {rank} outside 0..{ranks}"
+            )));
+        }
+        let partitioner = super::Partitioner::decode(input)?;
+        let config = codec::decode_config(input)?;
+        let edges = codec::decode_edges(input)?;
+        let prev = codec::decode_store(config, input)?;
+        Ok(Self {
+            rank,
+            ranks,
+            partitioner,
+            substream: MemoryStream::new(edges),
+            next: prev.clone(),
+            prev,
+            fwd: vec![Vec::new(); ranks],
+        })
+    }
+}
+
+/// Register Algorithm 2's actor kind on a tcp worker dispatch.
+pub(crate) fn register_fabric(
+    dispatch: crate::comm::tcp::WorkerDispatch,
+) -> crate::comm::tcp::WorkerDispatch {
+    dispatch.register::<AnfActor>()
+}
+
 /// Rehydrate a frozen shard into a mutable arena store.
 fn store_from_shard(shard: &Shard, config: crate::hll::HllConfig) -> SketchStore {
     let mut store = SketchStore::new(config);
@@ -281,6 +328,11 @@ pub fn neighborhood_approximation(
         .collect();
     record_estimates(&layer, opts.estimator, &mut per_vertex, &mut global);
 
+    // Flush-policy warm start: pass t+1's per-destination thresholds
+    // are seeded from pass t's observed CommStats instead of re-learning
+    // from the default every pass (empty = no seeds yet; the sequential
+    // backend ignores them, so bit-determinism is unaffected).
+    let mut flush_seeds: Vec<usize> = Vec::new();
     for _t in 2..=opts.max_t {
         let start = std::time::Instant::now();
         // Dᵗ ← Dᵗ⁻¹ (line 23), then the message-passing pass.
@@ -298,9 +350,17 @@ pub fn neighborhood_approximation(
                 fwd: vec![Vec::new(); ranks],
             })
             .collect();
-        let stats = run_epoch_wire(opts.backend, &mut actors, opts.flush);
+        let stats = run_epoch_wire_seeded(
+            opts.backend,
+            &mut actors,
+            opts.flush,
+            &flush_seeds,
+        );
         layer = actors.into_iter().map(|a| a.next).collect();
         pass_seconds.push(start.elapsed().as_secs_f64());
+        if opts.flush.adaptive {
+            flush_seeds = opts.flush.seeds_from_stats(&stats);
+        }
         pass_stats.push(stats);
         record_estimates(&layer, opts.estimator, &mut per_vertex, &mut global);
     }
@@ -425,6 +485,50 @@ mod tests {
         for (v, ests) in &a.per_vertex {
             assert_eq!(ests, &b.per_vertex[v], "vertex {v}");
             assert_eq!(ests, &c.per_vertex[v], "process vertex {v}");
+        }
+    }
+
+    #[test]
+    fn warm_started_passes_match_sequential_exactly() {
+        // aggressive adaptive thresholds make pass 2+ start from pass 1's
+        // learned per-destination seeds; semantics must be unchanged
+        let edges = GraphSpec::parse("ba:300:4").unwrap().generate(9);
+        let run = |backend: Backend| {
+            let stream = MemoryStream::new(edges.clone());
+            let cfg = HllConfig::new(8, 0x3A2F);
+            let flush = FlushPolicy {
+                threshold: 4,
+                adaptive: true,
+                min: 2,
+                max: 256,
+            };
+            let ds = accumulate_stream(
+                &stream,
+                4,
+                cfg,
+                AccumulateOptions {
+                    backend,
+                    flush,
+                    ..Default::default()
+                },
+            );
+            let shards = stream.shard(4);
+            neighborhood_approximation(
+                &ds,
+                &shards,
+                AnfOptions {
+                    backend,
+                    max_t: 4,
+                    flush,
+                    ..Default::default()
+                },
+            )
+        };
+        let seq = run(Backend::Sequential);
+        let thr = run(Backend::Threaded);
+        assert_eq!(seq.global, thr.global);
+        for (v, ests) in &seq.per_vertex {
+            assert_eq!(ests, &thr.per_vertex[v], "vertex {v}");
         }
     }
 

@@ -31,3 +31,15 @@ pub use triangles::{
     edge_triangle_heavy_hitters, vertex_triangle_heavy_hitters,
     IntersectBackend, TriangleOptions, TriangleResult,
 };
+
+/// The standard tcp-worker dispatch: every coordinator actor kind a
+/// fabric driver can send — Algorithm 1 accumulation (`deg-accum`),
+/// Algorithm 2 ANF passes (`anf-pass`), and the Algorithm 3–5 triangle
+/// chassis (`tri-chassis`). Hand it to [`crate::comm::tcp::run_worker`]
+/// (the `degreesketch worker` subcommand does exactly this).
+pub fn worker_dispatch() -> crate::comm::tcp::WorkerDispatch {
+    let dispatch = crate::comm::tcp::WorkerDispatch::new();
+    let dispatch = sketch::register_fabric(dispatch);
+    let dispatch = anf::register_fabric(dispatch);
+    triangles::register_fabric(dispatch)
+}

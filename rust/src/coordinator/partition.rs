@@ -5,6 +5,8 @@
 //! round-robin assignment in its experiments (§5 "Hardware"). We provide
 //! that plus a seeded hash partition for skew resistance.
 
+use crate::comm::codec::{get_u64, get_u8, put_u64, put_u8};
+use crate::comm::{WireError, WireMsg};
 use crate::hash::xxh64_u64;
 
 /// A cheap, cloneable vertex→rank mapping shared by every processor.
@@ -60,9 +62,47 @@ impl Partitioner {
     }
 }
 
+/// Wire format for the seed_state leg: every epoch seed carries the
+/// partition `f` so a remote worker routes identically to the driver.
+impl WireMsg for Partitioner {
+    fn encode_into(&self, buf: &mut Vec<u8>) {
+        match *self {
+            Self::RoundRobin => put_u8(buf, 0),
+            Self::Hashed { seed } => {
+                put_u8(buf, 1);
+                put_u64(buf, seed);
+            }
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self, WireError> {
+        match get_u8(input)? {
+            0 => Ok(Self::RoundRobin),
+            1 => Ok(Self::Hashed {
+                seed: get_u64(input)?,
+            }),
+            other => Err(WireError::Invalid(format!(
+                "bad partitioner tag {other}"
+            ))),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn wire_round_trips() {
+        for p in [Partitioner::RoundRobin, Partitioner::Hashed { seed: 42 }] {
+            let mut buf = Vec::new();
+            p.encode_into(&mut buf);
+            let mut input = buf.as_slice();
+            assert_eq!(Partitioner::decode(&mut input).unwrap(), p);
+            assert!(input.is_empty());
+        }
+        assert!(Partitioner::decode(&mut [9u8].as_slice()).is_err());
+    }
 
     #[test]
     fn round_robin_covers_all_ranks() {

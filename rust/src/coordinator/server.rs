@@ -11,7 +11,7 @@
 //! UNION <x> [<y> ...]  → <estimate> | NONE
 //! STATS                → vertices=<n> ranks=<p> p=<p> mem=<bytes>
 //!                        dense=<n> mode=<heap|mmap> resident=<bytes>
-//!                        comm=<sequential|threaded|process|none>
+//!                        comm=<sequential|threaded|process|tcp|none>
 //!                        [rank<i>=<msgs>/<bytes>/<flushes> ...]
 //! QUIT                 → BYE (closes the connection)
 //! ```

@@ -22,7 +22,7 @@ use std::collections::HashMap;
 
 use crate::comm::{
     codec, run_epoch_with, run_epoch_wire, Actor, Backend, CommStats,
-    FlushPolicy, Outbox, WireActor, WireError,
+    FabricActor, FlushPolicy, Outbox, WireActor, WireError, WireMsg,
 };
 use crate::graph::stream::{EdgeStream, MemoryStream};
 use crate::graph::{Edge, VertexId};
@@ -263,6 +263,45 @@ impl WireActor for AccumActor {
         self.batch.clear();
         Ok(())
     }
+}
+
+/// seed_state leg: Algorithm 1's epoch inputs are the rank count, the
+/// partition `f`, the shared sketch config, and this rank's edge
+/// substream σ_P — everything a remote worker needs to run `seed` and
+/// accumulate, with no fork copy-on-write involved.
+impl FabricActor for AccumActor {
+    const KIND: &'static str = "deg-accum";
+
+    fn write_seed(&self, buf: &mut Vec<u8>) {
+        codec::put_u64(buf, self.ranks as u64);
+        self.partitioner.encode_into(buf);
+        codec::encode_config_into(self.store.config(), buf);
+        codec::encode_edges_into(self.substream.edges(), buf);
+    }
+
+    fn read_seed(input: &mut &[u8]) -> Result<Self, WireError> {
+        let ranks = codec::get_u64(input)? as usize;
+        if ranks == 0 {
+            return Err(WireError::Invalid("seed with zero ranks".into()));
+        }
+        let partitioner = Partitioner::decode(input)?;
+        let config = codec::decode_config(input)?;
+        let edges = codec::decode_edges(input)?;
+        Ok(Self {
+            ranks,
+            partitioner,
+            substream: MemoryStream::new(edges),
+            store: SketchStore::new(config),
+            batch: Vec::new(),
+        })
+    }
+}
+
+/// Register Algorithm 1's actor kind on a tcp worker dispatch.
+pub(crate) fn register_fabric(
+    dispatch: crate::comm::tcp::WorkerDispatch,
+) -> crate::comm::tcp::WorkerDispatch {
+    dispatch.register::<AccumActor>()
 }
 
 /// **Algorithm 1**: accumulate a DegreeSketch over `ranks` processors from

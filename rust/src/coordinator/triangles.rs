@@ -23,12 +23,12 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::comm::codec::{
-    decode_hll, encode_hll_into, get_f64, get_u32, get_u64, get_u8, put_f64,
-    put_u32, put_u64, put_u8,
+    self, decode_hll, encode_hll_into, get_f64, get_u32, get_u64, get_u8,
+    put_f64, put_u32, put_u64, put_u8,
 };
 use crate::comm::{
-    run_epoch_wire, Actor, Backend, CommStats, FlushPolicy, Outbox,
-    WireActor, WireError, WireMsg,
+    run_epoch_wire, Actor, Backend, CommStats, FabricActor, FlushPolicy,
+    Outbox, WireActor, WireError, WireMsg,
 };
 use crate::graph::stream::{EdgeStream, MemoryStream};
 use crate::graph::{canonical, Edge, VertexId};
@@ -475,6 +475,142 @@ impl WireActor for TriActor {
     }
 }
 
+/// seed_state leg: a triangle epoch's inputs are the chassis context
+/// (mode, k, intersect estimator, discard flag), the partition/config,
+/// **this rank's shard of `D`** (the only shard the chassis ever reads
+/// locally — EDGE arrives at `f(x)`, FAN targets live at `f(y)`), and
+/// the rank's substream. The batched (PJRT) estimator holds a live
+/// service handle and cannot cross a process boundary; `run_chassis`
+/// rejects that combination up front.
+impl FabricActor for TriActor {
+    const KIND: &'static str = "tri-chassis";
+
+    fn write_seed(&self, buf: &mut Vec<u8>) {
+        put_u64(buf, self.rank as u64);
+        put_u64(buf, self.ranks as u64);
+        put_u8(buf, matches!(self.mode, Mode::VertexHH) as u8);
+        put_u64(buf, self.opts.k as u64);
+        put_u8(buf, u8::from(self.opts.discard_dominated));
+        match &self.opts.intersect {
+            IntersectBackend::Mle(o) => {
+                put_u8(buf, 0);
+                put_u64(buf, o.iterations as u64);
+                put_f64(buf, o.lr_initial);
+                put_f64(buf, o.lr_final);
+                put_f64(buf, o.tolerance);
+            }
+            IntersectBackend::InclusionExclusion => put_u8(buf, 1),
+            IntersectBackend::Batched { .. } => unreachable!(
+                "run_chassis rejects batched intersect on socket backends"
+            ),
+        }
+        self.ds.partitioner().encode_into(buf);
+        codec::encode_config_into(self.ds.config(), buf);
+        let shard = &self.ds.shards()[self.rank];
+        put_u64(buf, shard.len() as u64);
+        for (v, h) in shard.iter() {
+            put_u64(buf, v);
+            encode_hll_into(h, buf);
+        }
+        codec::encode_edges_into(self.substream.edges(), buf);
+    }
+
+    fn read_seed(input: &mut &[u8]) -> Result<Self, WireError> {
+        let rank = get_u64(input)? as usize;
+        let ranks = get_u64(input)? as usize;
+        if ranks == 0 || rank >= ranks {
+            return Err(WireError::Invalid(format!(
+                "seed rank {rank} outside 0..{ranks}"
+            )));
+        }
+        let mode = if get_u8(input)? != 0 {
+            Mode::VertexHH
+        } else {
+            Mode::EdgeHH
+        };
+        let k = get_u64(input)? as usize;
+        let discard_dominated = get_u8(input)? != 0;
+        let intersect = match get_u8(input)? {
+            0 => IntersectBackend::Mle(MleOptions {
+                iterations: get_u64(input)? as usize,
+                lr_initial: get_f64(input)?,
+                lr_final: get_f64(input)?,
+                tolerance: get_f64(input)?,
+            }),
+            1 => IntersectBackend::InclusionExclusion,
+            other => {
+                return Err(WireError::Invalid(format!(
+                    "bad intersect tag {other}"
+                )))
+            }
+        };
+        let partitioner = super::Partitioner::decode(input)?;
+        let config = codec::decode_config(input)?;
+        let n = get_u64(input)? as usize;
+        let mut entries: Vec<(VertexId, Hll)> =
+            Vec::with_capacity(n.min(1 << 20));
+        let mut prev: Option<VertexId> = None;
+        for _ in 0..n {
+            let v = get_u64(input)?;
+            if prev.is_some_and(|p| p >= v) {
+                return Err(WireError::Invalid(
+                    "shard vertices not strictly increasing".into(),
+                ));
+            }
+            prev = Some(v);
+            let h = decode_hll(input)?;
+            if h.config() != &config {
+                return Err(WireError::Invalid(format!(
+                    "shard sketch config mismatch for vertex {v}"
+                )));
+            }
+            entries.push((v, h));
+        }
+        let edges = codec::decode_edges(input)?;
+        // Rebuild a DegreeSketch holding only this rank's shard — the
+        // only one the chassis reads (see the impl docs above).
+        let mut shards = vec![super::sketch::Shard::default(); ranks];
+        shards[rank] = super::sketch::Shard::from_sorted_entries(entries);
+        let ds = Arc::new(DegreeSketch::from_parts(
+            config,
+            partitioner,
+            shards,
+            CommStats::default(),
+        ));
+        Ok(Self {
+            rank,
+            ranks,
+            mode,
+            ds,
+            substream: MemoryStream::new(edges),
+            opts: TriangleOptions {
+                // the worker's comm backend/flush policy come from the
+                // SEED head, not from TriangleOptions; only the chassis
+                // knobs matter here
+                backend: Backend::Sequential,
+                k,
+                intersect,
+                discard_dominated,
+                flush: FlushPolicy::default(),
+            },
+            tri_sum: 0.0,
+            edge_heap: TopK::new(k),
+            vertex_counts: HashMap::new(),
+            pairs_estimated: 0,
+            pairs_dominated: 0,
+            pending: Vec::new(),
+            fwd: vec![Vec::new(); ranks],
+        })
+    }
+}
+
+/// Register Algorithms 3–5's actor kind on a tcp worker dispatch.
+pub(crate) fn register_fabric(
+    dispatch: crate::comm::tcp::WorkerDispatch,
+) -> crate::comm::tcp::WorkerDispatch {
+    dispatch.register::<TriActor>()
+}
+
 fn run_chassis(
     ds: &Arc<DegreeSketch>,
     substreams: &[MemoryStream],
@@ -483,10 +619,11 @@ fn run_chassis(
 ) -> (Vec<TriActor>, CommStats, f64) {
     assert_eq!(substreams.len(), ds.num_ranks());
     assert!(
-        !(opts.backend == Backend::Process
+        !(matches!(opts.backend, Backend::Process | Backend::Tcp)
             && matches!(opts.intersect, IntersectBackend::Batched { .. })),
         "a batched intersect executor (PJRT service) cannot be shared \
-         across forked workers; use the mle/ix backends with --backend process"
+         across worker processes; use the mle/ix backends with the \
+         process/tcp backends"
     );
     let start = std::time::Instant::now();
     let mut actors: Vec<TriActor> = substreams

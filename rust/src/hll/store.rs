@@ -475,6 +475,15 @@ impl SketchStore {
         }
     }
 
+    /// Merge a raw dense register slice into `v`'s sketch — the
+    /// histogram-free entry point for wire decodes (`comm::codec`'s
+    /// `SketchView` payloads carry registers only; the arena maintains
+    /// its own histograms), saving the owned-`Hll` round trip.
+    pub(crate) fn merge_dense_regs(&mut self, v: u64, src: &[u8]) {
+        debug_assert_eq!(src.len(), self.config.num_registers());
+        self.merge_dense_slice(v, src);
+    }
+
     fn merge_dense_slice(&mut self, v: u64, src: &[u8]) {
         let d = match self.slot_or_new(v) {
             SlotId::Dense(d) => d,

@@ -3,8 +3,11 @@
 //! ```text
 //! degreesketch generate   --spec rmat:18:16 --seed 1 --out g.txt
 //! degreesketch accumulate --graph g.txt --ranks 8 --p 12 --out sketch.d/
-//!                         [--backend sequential|threaded|process]
+//!                         [--backend sequential|threaded|process|tcp]
 //!                         [--flush-threshold N] [--fixed-flush]
+//!                         [--listen addr --hosts 0=h:p,1=h:p,...]
+//! degreesketch worker     --connect driverhost:port --rank 0
+//!                         [--deadline-secs 60]
 //! degreesketch query      --sketch sketch.d/ deg 42
 //! degreesketch serve      --sketch sketch.d/|sketch.snap --addr 127.0.0.1:7171
 //! degreesketch snapshot   create  --sketch sketch.d/ --out sketch.snap
@@ -23,9 +26,13 @@
 //! Every subcommand also honors `--config file.toml` and repeated
 //! `--set section.key=value` overrides. Epoch-running subcommands
 //! (`accumulate`, `anf`, `triangles`, `snapshot create --graph`) accept
-//! `--backend sequential|threaded|process` (process = forked workers
-//! over Unix sockets), `--flush-threshold N` and `--fixed-flush` (pin
-//! the adaptive per-destination flush thresholds).
+//! `--backend sequential|threaded|process|tcp` (process = forked
+//! workers over Unix sockets; tcp = independent worker processes over a
+//! rendezvous'd TCP mesh — launch one `degreesketch worker` per rank,
+//! then run the driver with `--listen` naming its registrar address and
+//! `--hosts` the rank → mesh-listener map, or set `comm.listen` /
+//! `comm.hosts` in the config), `--flush-threshold N` and
+//! `--fixed-flush` (pin the adaptive per-destination flush thresholds).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -78,9 +85,10 @@ fn run(argv: &[String]) -> Result<()> {
             config.set_override(spec)?;
         }
     }
-    match args.subcommand.as_str() {
+    let result = match args.subcommand.as_str() {
         "generate" => cmd_generate(&args),
         "accumulate" => cmd_accumulate(&args, &config),
+        "worker" => cmd_worker(&args),
         "query" => cmd_query(&args),
         "serve" => cmd_serve(&args),
         "snapshot" => cmd_snapshot(&args, &config),
@@ -90,13 +98,17 @@ fn run(argv: &[String]) -> Result<()> {
         "calibrate-beta" => cmd_calibrate(&args),
         "info" => cmd_info(&args),
         other => bail!("unknown subcommand {other:?} (try --help)"),
-    }
+    };
+    // success or failure, release any tcp fabric so remote workers exit
+    // cleanly instead of waiting on a dead driver
+    degreesketch::comm::tcp::shutdown_driver();
+    result
 }
 
 fn print_usage() {
     println!(
         "degreesketch — distributed cardinality sketches on massive graphs\n\
-         subcommands: generate accumulate query serve snapshot anf \
+         subcommands: generate accumulate worker query serve snapshot anf \
          triangles exact calibrate-beta info\n\
          see README.md for full usage"
     );
@@ -123,6 +135,76 @@ fn backend_of(args: &Args, config: &Config) -> Result<Backend> {
         }
         None => config.backend(),
     }
+}
+
+/// Arm the tcp fabric when the chosen backend is `tcp`: bind the
+/// registrar at `--listen` (or `comm.listen`), parse the rank →
+/// mesh-address map from `--hosts` (or `comm.hosts`), and hand both to
+/// the comm plane. The rendezvous itself runs on the first epoch, so
+/// workers may be launched before or after the driver.
+fn setup_comm_backend(
+    args: &Args,
+    config: &Config,
+    backend: Backend,
+    ranks: usize,
+) -> Result<()> {
+    let listen = args.get("listen").map(str::to_string);
+    let hosts_spec = args.get("hosts").map(str::to_string);
+    if backend != Backend::Tcp {
+        if listen.is_some() || hosts_spec.is_some() {
+            bail!("--listen/--hosts only apply to --backend tcp");
+        }
+        return Ok(());
+    }
+    let listen = listen
+        .unwrap_or_else(|| config.get_str("comm.listen", "").to_string());
+    if listen.is_empty() {
+        bail!(
+            "--backend tcp needs a registrar address: --listen host:port \
+             (or comm.listen in the config)"
+        );
+    }
+    let hosts_spec = hosts_spec
+        .unwrap_or_else(|| config.get_str("comm.hosts", "").to_string());
+    if hosts_spec.is_empty() {
+        bail!(
+            "--backend tcp needs the worker map: \
+             --hosts 0=host:port,1=host:port,... (or comm.hosts)"
+        );
+    }
+    let hosts = degreesketch::comm::tcp::parse_hosts(&hosts_spec, ranks)
+        .map_err(anyhow::Error::msg)?;
+    let listener = std::net::TcpListener::bind(&listen)
+        .with_context(|| format!("binding tcp registrar at {listen:?}"))?;
+    println!(
+        "tcp fabric: registrar on {} awaiting {ranks} workers",
+        listener.local_addr()?
+    );
+    degreesketch::comm::tcp::configure_driver(listener, hosts);
+    Ok(())
+}
+
+/// The `worker` subcommand: serve one rank of a tcp fabric until the
+/// driver shuts it down.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let connect = args.require("connect")?.to_string();
+    let rank = args.get_usize("rank", usize::MAX)?;
+    if rank == usize::MAX {
+        bail!("worker needs --rank N (its rank in the fabric)");
+    }
+    let deadline =
+        std::time::Duration::from_secs(args.get_u64("deadline-secs", 60)?);
+    args.finish()?;
+    eprintln!("worker rank {rank}: joining fabric via {connect}");
+    degreesketch::comm::tcp::run_worker(
+        degreesketch::coordinator::worker_dispatch(),
+        &connect,
+        rank,
+        deadline,
+    )
+    .map_err(anyhow::Error::msg)?;
+    eprintln!("worker rank {rank}: fabric shut down, exiting");
+    Ok(())
 }
 
 /// Comm-plane flush policy: `comm.*` config keys overridden by
@@ -178,6 +260,7 @@ fn cmd_accumulate(args: &Args, config: &Config) -> Result<()> {
     let out = args.require("out")?.to_string();
     let backend = backend_of(args, config)?;
     let flush = flush_policy_of(args, config)?;
+    setup_comm_backend(args, config, backend, ranks)?;
     args.finish()?;
 
     let stream = MemoryStream::new(edges);
@@ -299,6 +382,7 @@ fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
                 )?;
                 let backend = backend_of(args, config)?;
                 let flush = flush_policy_of(args, config)?;
+                setup_comm_backend(args, config, backend, ranks)?;
                 args.finish()?;
                 let ds = accumulate_stream(
                     &MemoryStream::new(edges),
@@ -415,6 +499,7 @@ fn cmd_anf(args: &Args, config: &Config) -> Result<()> {
     let max_t = args.get_usize("max-t", 5)?;
     let backend = backend_of(args, config)?;
     let flush = flush_policy_of(args, config)?;
+    setup_comm_backend(args, config, backend, ranks)?;
     let want_exact = args.has("exact");
     args.finish()?;
 
@@ -486,11 +571,16 @@ fn cmd_triangles(args: &Args, config: &Config) -> Result<()> {
     let want_exact = args.has("exact");
     let discard = args.has("discard-dominated")
         || config.get_bool("triangles.discard_dominated", false);
+    setup_comm_backend(args, config, backend, ranks)?;
     args.finish()?;
-    if backend == Backend::Process && intersect_kind == "pjrt" {
+    if matches!(backend, Backend::Process | Backend::Tcp)
+        && intersect_kind == "pjrt"
+    {
         bail!(
-            "--intersect pjrt cannot run on --backend process (the PJRT \
-             service cannot be shared across forked workers); use mle or ix"
+            "--intersect pjrt cannot run on --backend {} (the PJRT \
+             service cannot be shared across worker processes); \
+             use mle or ix",
+            backend.name()
         );
     }
 

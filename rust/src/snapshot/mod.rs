@@ -64,6 +64,6 @@ mod writer;
 pub use layout::{MAGIC, VERSION};
 pub use reader::{MappedSnapshot, RankStats};
 pub use source::{
-    HeapSource, SnapshotMode, SnapshotSource, SourceKind,
+    AccessPattern, HeapSource, SnapshotMode, SnapshotSource, SourceKind,
 };
 pub use writer::{SnapshotStats, SnapshotWriter};

@@ -17,6 +17,9 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+// the wire pair encoding IS the snapshot pair encoding: one shared
+// LE/ABI probe gates both zero-copy casts
+use crate::comm::codec::pair_abi_matches;
 use crate::coordinator::Partitioner;
 use crate::hll::{HllConfig, SketchRef};
 use crate::util::crc32::crc32;
@@ -24,28 +27,14 @@ use crate::util::crc32::crc32;
 use super::layout::{
     decode_slot, Header, RankSection, Slot, HEADER_LEN, SECTION_LEN,
 };
-use super::source::{open_source, SnapshotMode, SnapshotSource, SourceKind};
+use super::source::{
+    open_source, AccessPattern, SnapshotMode, SnapshotSource, SourceKind,
+};
 
 /// Read a little-endian `u64` at `off` (bounds validated by the caller).
 #[inline]
 fn read_u64(bytes: &[u8], off: usize) -> u64 {
     u64::from_le_bytes(bytes[off..off + 8].try_into().expect("8 bytes"))
-}
-
-/// Does the in-memory `(u16, u8)` tuple match the file's packed 4-byte
-/// `[idx_lo, idx_hi, val, pad]` record (modulo the padding byte)?
-fn pair_abi_matches() -> bool {
-    if cfg!(target_endian = "big")
-        || std::mem::size_of::<(u16, u8)>() != 4
-        || std::mem::align_of::<(u16, u8)>() != 2
-    {
-        return false;
-    }
-    let probe: (u16, u8) = (0x0102, 0x03);
-    let base = std::ptr::addr_of!(probe) as usize;
-    let o0 = std::ptr::addr_of!(probe.0) as usize - base;
-    let o1 = std::ptr::addr_of!(probe.1) as usize - base;
-    o0 == 0 && o1 == 2
 }
 
 /// Histogram section access: borrowed from the map or decoded at open.
@@ -107,6 +96,9 @@ impl MappedSnapshot {
     }
 
     fn from_source(source: Box<dyn SnapshotSource>) -> Result<Self> {
+        // open-time validation is one front-to-back scan: let readahead
+        // run hot, then drop to the point-query pattern for serving
+        source.advise(AccessPattern::Sequential);
         let bytes = source.bytes();
         let (header, stored_crc) = Header::decode(bytes)?;
         if header.file_len != bytes.len() as u64 {
@@ -160,6 +152,9 @@ impl MappedSnapshot {
             );
         }
 
+        // serving is binary-searched point lookups: readahead past the
+        // probed page is wasted IO under memory pressure
+        source.advise(AccessPattern::Random);
         Ok(Self {
             source,
             config,
@@ -221,18 +216,25 @@ impl MappedSnapshot {
     /// Full payload verification: recompute every rank's section CRC.
     /// O(file size) — run by `snapshot inspect`, not on every open.
     pub fn verify(&self) -> Result<()> {
-        let bytes = self.source.bytes();
-        for (rank, v) in self.rank_views.iter().enumerate() {
-            let got = crc32(&bytes[v.payload_start..v.payload_end]);
-            if got != v.payload_crc {
-                bail!(
-                    "rank {rank}: payload CRC mismatch \
-                     (stored {:#010x}, computed {got:#010x})",
-                    v.payload_crc
-                );
+        // a full-file CRC sweep is the sequential-scan case; restore the
+        // point-query hint afterwards whatever the outcome
+        self.source.advise(AccessPattern::Sequential);
+        let outcome = (|| {
+            let bytes = self.source.bytes();
+            for (rank, v) in self.rank_views.iter().enumerate() {
+                let got = crc32(&bytes[v.payload_start..v.payload_end]);
+                if got != v.payload_crc {
+                    bail!(
+                        "rank {rank}: payload CRC mismatch \
+                         (stored {:#010x}, computed {got:#010x})",
+                        v.payload_crc
+                    );
+                }
             }
-        }
-        Ok(())
+            Ok(())
+        })();
+        self.source.advise(AccessPattern::Random);
+        outcome
     }
 
     /// Borrowed view of `v`'s sketch, straight out of the mapped arenas.

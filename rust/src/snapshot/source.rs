@@ -29,10 +29,27 @@ impl SourceKind {
     }
 }
 
+/// Expected access pattern for an open snapshot, forwarded to the
+/// kernel as an `madvise(2)` hint where the backing supports it:
+/// point-query serving wants `MADV_RANDOM` (no wasted readahead on a
+/// binary-searched index), full-file scans (`verify()`, open-time
+/// validation) want `MADV_SEQUENTIAL` (aggressive readahead, early
+/// reclaim). Purely advisory — correctness never depends on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessPattern {
+    Normal,
+    Random,
+    Sequential,
+}
+
 /// A read-only byte region holding an entire snapshot file.
 pub trait SnapshotSource: Send + Sync {
     fn bytes(&self) -> &[u8];
     fn kind(&self) -> SourceKind;
+
+    /// Hint the expected access pattern. Default: no-op (heap buffers
+    /// and platforms without `madvise` have nothing to tune).
+    fn advise(&self, _pattern: AccessPattern) {}
 }
 
 /// Whole-file heap buffer (8-byte aligned via the `u64` backing store).
@@ -84,10 +101,15 @@ mod sys {
             offset: i64,
         ) -> *mut c_void;
         pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
     }
 
     pub const PROT_READ: c_int = 0x1;
     pub const MAP_SHARED: c_int = 0x1;
+    // advice values shared by Linux and the BSD/darwin family
+    pub const MADV_NORMAL: c_int = 0;
+    pub const MADV_RANDOM: c_int = 1;
+    pub const MADV_SEQUENTIAL: c_int = 2;
 }
 
 /// Read-only shared file mapping. Unmapped on drop.
@@ -138,6 +160,24 @@ impl SnapshotSource for MmapSource {
 
     fn kind(&self) -> SourceKind {
         SourceKind::Mmap
+    }
+
+    /// `madvise(2)` the whole mapping. Failures are ignored — the hint
+    /// is best-effort by contract, and a mapping that rejects advice
+    /// (e.g. an exotic filesystem) still reads correctly.
+    fn advise(&self, pattern: AccessPattern) {
+        let advice = match pattern {
+            AccessPattern::Normal => sys::MADV_NORMAL,
+            AccessPattern::Random => sys::MADV_RANDOM,
+            AccessPattern::Sequential => sys::MADV_SEQUENTIAL,
+        };
+        unsafe {
+            sys::madvise(
+                self.ptr as *mut std::os::raw::c_void,
+                self.len,
+                advice,
+            );
+        }
     }
 }
 
@@ -230,6 +270,31 @@ mod tests {
         assert_eq!(m.kind(), SourceKind::Mmap);
         // page alignment makes every 64-byte-aligned section u32-safe
         assert_eq!(m.bytes().as_ptr() as usize % 4096, 0);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn advise_is_safe_on_every_source_and_pattern() {
+        let data: Vec<u8> = (0..8192u32).map(|i| (i % 7) as u8).collect();
+        let p = tmp("ds_snapshot_advise_source", &data);
+        let sources: Vec<Box<dyn SnapshotSource>> = {
+            let mut v: Vec<Box<dyn SnapshotSource>> =
+                vec![Box::new(HeapSource::open(&p).unwrap())];
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            v.push(Box::new(MmapSource::open(&p).unwrap()));
+            v
+        };
+        for s in &sources {
+            for pattern in [
+                AccessPattern::Sequential,
+                AccessPattern::Random,
+                AccessPattern::Normal,
+            ] {
+                s.advise(pattern); // advisory: must never fail or corrupt
+            }
+            assert_eq!(s.bytes(), &data[..]);
+        }
+        drop(sources);
         std::fs::remove_file(&p).unwrap();
     }
 

@@ -1,17 +1,26 @@
 //! Comm-plane integration tests: wire-codec round-trips for all three
 //! coordinator message enums (with corrupt/truncated-frame rejection,
 //! mirroring `tests/snapshot.rs` style) and the headline cross-backend
-//! equivalence — sequential, threaded and **process** (forked workers
-//! over Unix sockets) must produce identical DEG / ANF / triangle
-//! answers on a generated graph.
+//! equivalence — sequential, threaded, **process** (forked workers over
+//! Unix sockets) and **tcp** (independent worker processes meshed by
+//! rendezvous; exercised here with in-process worker threads over real
+//! localhost sockets) must produce identical DEG / ANF / triangle
+//! answers on a generated graph. Plus fabric failure modes: corrupt and
+//! truncated frames over a real TCP socket are rejected, and a
+//! rendezvous with an unreachable rank fails fast with a clear error
+//! instead of hanging.
 
 use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
 
 use degreesketch::comm::codec::{
-    decode_frame, decode_msgs, encode_msg_frame,
+    decode_frame, decode_msgs, encode_msg_frame, FRAME_HEADER_LEN,
 };
+use degreesketch::comm::tcp::{self, TcpFabric, WorkerDispatch};
 use degreesketch::comm::{Backend, WireMsg};
+use degreesketch::coordinator::worker_dispatch;
 use degreesketch::coordinator::anf::{
     neighborhood_approximation, AnfMsg, AnfOptions,
 };
@@ -195,6 +204,44 @@ fn run_all(edges: &[Edge], backend: Backend) -> Answers {
     }
 }
 
+/// The equivalence bar shared by every backend pairing: DEG sketches
+/// bit-identical, ANF estimates exact, triangle edge heavy hitters
+/// bit-identical, vertex heavy hitters equal up to float re-association.
+fn assert_answers_match(seq: &Answers, other: &Answers) {
+    // DEG: sketches (hence every degree estimate) bit-identical
+    assert_eq!(seq.ds.num_vertices(), other.ds.num_vertices());
+    for (v, h) in seq.ds.iter() {
+        assert_eq!(Some(h), other.ds.sketch(v), "sketch {v}");
+    }
+    // ANF: estimates recorded in sorted vertex order — exact match
+    assert_eq!(seq.anf_global, other.anf_global);
+    for (v, ests) in &seq.anf_per_vertex {
+        assert_eq!(ests, &other.anf_per_vertex[v], "anf vertex {v}");
+    }
+    // Triangles: every pair's estimate is a pure function of two
+    // sketches, so the edge heavy-hitter map matches exactly
+    assert_eq!(seq.tri_pairs, other.tri_pairs);
+    assert!((seq.tri_global - other.tri_global).abs() < 1e-9);
+    let edge_map = |a: &Answers| -> HashMap<Edge, u64> {
+        a.edge_hh.iter().map(|&(s, e)| (e, s.to_bits())).collect()
+    };
+    assert_eq!(edge_map(seq), edge_map(other));
+    // Vertex accumulators are float sums in arrival order: same
+    // members, values equal up to re-association
+    let vertex_map = |a: &Answers| -> HashMap<u64, f64> {
+        a.vertex_hh.iter().map(|&(s, v)| (v, s)).collect()
+    };
+    let (a, b) = (vertex_map(seq), vertex_map(other));
+    assert_eq!(a.len(), b.len());
+    for (v, s) in &a {
+        let t = b.get(v).unwrap_or_else(|| panic!("vertex {v} missing"));
+        assert!(
+            (s - t).abs() <= 1e-6 * s.abs().max(1.0),
+            "vertex {v}: {s} vs {t}"
+        );
+    }
+}
+
 #[test]
 fn sequential_threaded_and_process_answers_agree() {
     let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
@@ -202,40 +249,8 @@ fn sequential_threaded_and_process_answers_agree() {
     let thr = run_all(&edges, Backend::Threaded);
     let prc = run_all(&edges, Backend::Process);
 
-    for other in [&thr, &prc] {
-        // DEG: sketches (hence every degree estimate) bit-identical
-        assert_eq!(seq.ds.num_vertices(), other.ds.num_vertices());
-        for (v, h) in seq.ds.iter() {
-            assert_eq!(Some(h), other.ds.sketch(v), "sketch {v}");
-        }
-        // ANF: estimates recorded in sorted vertex order — exact match
-        assert_eq!(seq.anf_global, other.anf_global);
-        for (v, ests) in &seq.anf_per_vertex {
-            assert_eq!(ests, &other.anf_per_vertex[v], "anf vertex {v}");
-        }
-        // Triangles: every pair's estimate is a pure function of two
-        // sketches, so the edge heavy-hitter map matches exactly
-        assert_eq!(seq.tri_pairs, other.tri_pairs);
-        assert!((seq.tri_global - other.tri_global).abs() < 1e-9);
-        let edge_map = |a: &Answers| -> HashMap<Edge, u64> {
-            a.edge_hh.iter().map(|&(s, e)| (e, s.to_bits())).collect()
-        };
-        assert_eq!(edge_map(&seq), edge_map(other));
-        // Vertex accumulators are float sums in arrival order: same
-        // members, values equal up to re-association
-        let vertex_map = |a: &Answers| -> HashMap<u64, f64> {
-            a.vertex_hh.iter().map(|&(s, v)| (v, s)).collect()
-        };
-        let (a, b) = (vertex_map(&seq), vertex_map(other));
-        assert_eq!(a.len(), b.len());
-        for (v, s) in &a {
-            let t = b.get(v).unwrap_or_else(|| panic!("vertex {v} missing"));
-            assert!(
-                (s - t).abs() <= 1e-6 * s.abs().max(1.0),
-                "vertex {v}: {s} vs {t}"
-            );
-        }
-    }
+    assert_answers_match(&seq, &thr);
+    assert_answers_match(&seq, &prc);
 
     // the process run really crossed process boundaries
     assert_eq!(prc.ds.accumulation_stats.mode, Backend::Process);
@@ -248,6 +263,146 @@ fn sequential_threaded_and_process_answers_agree() {
         .map(|r| r.messages)
         .sum();
     assert_eq!(per, prc.ds.accumulation_stats.messages);
+}
+
+// ---------------------------------------------------------------------
+// The tcp fabric (the multi-host mode, exercised over real localhost
+// sockets with worker threads standing in for worker processes)
+// ---------------------------------------------------------------------
+
+#[test]
+fn tcp_fabric_answers_match_sequential_end_to_end() {
+    let ranks = 4;
+    let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
+
+    // registrar on an ephemeral port; workers bind ephemeral mesh
+    // listeners (rendezvous folds the real addresses into the map)
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let registrar = listener.local_addr().unwrap().to_string();
+    tcp::configure_driver(listener, vec!["127.0.0.1:0".to_string(); ranks]);
+    let workers: Vec<_> = (0..ranks)
+        .map(|rank| {
+            let registrar = registrar.clone();
+            std::thread::spawn(move || {
+                tcp::run_worker(
+                    worker_dispatch(),
+                    &registrar,
+                    rank,
+                    Duration::from_secs(120),
+                )
+            })
+        })
+        .collect();
+
+    // five epochs back to back over one fabric: accumulate, two ANF
+    // passes, edge-HH and vertex-HH triangle chassis — all inputs
+    // shipped via seed_state codecs (no shared memory with the driver)
+    let seq = run_all(&edges, Backend::Sequential);
+    let tcp_ans = run_all(&edges, Backend::Tcp);
+    tcp::shutdown_driver();
+    for w in workers {
+        w.join().expect("worker thread").expect("worker ran clean");
+    }
+
+    assert_answers_match(&seq, &tcp_ans);
+
+    // the tcp run really crossed sockets
+    assert_eq!(tcp_ans.ds.accumulation_stats.mode, Backend::Tcp);
+    assert!(tcp_ans.ds.accumulation_stats.bytes > 0);
+    let per: u64 = tcp_ans
+        .ds
+        .accumulation_stats
+        .per_rank
+        .iter()
+        .map(|r| r.messages)
+        .sum();
+    assert_eq!(per, tcp_ans.ds.accumulation_stats.messages);
+}
+
+#[test]
+fn rendezvous_fails_fast_when_ranks_never_join() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let registrar = listener.local_addr().unwrap().to_string();
+    // rank 0 joins; ranks 1 and 2 never appear
+    let joined = std::thread::spawn({
+        let registrar = registrar.clone();
+        move || {
+            tcp::run_worker(
+                WorkerDispatch::new(),
+                &registrar,
+                0,
+                Duration::from_secs(30),
+            )
+        }
+    });
+    let err = TcpFabric::rendezvous(
+        listener,
+        vec!["127.0.0.1:0".to_string(); 3],
+        Duration::from_secs(2),
+    )
+    .err()
+    .expect("rendezvous with missing ranks must fail, not hang");
+    assert!(err.contains("waiting for JOIN"), "{err}");
+    assert!(err.contains("1, 2"), "{err}");
+    // the rank that did join sees the registrar hang up and errors out
+    // (instead of waiting forever on a WELCOME that never comes)
+    assert!(joined.join().expect("worker thread").is_err());
+}
+
+#[test]
+fn corrupt_and_truncated_frames_are_rejected_over_real_tcp() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let msgs: Vec<(u64, u64)> = (0..9).map(|i| (i, i * 7)).collect();
+    let (mut scratch, mut wire) = (Vec::new(), Vec::new());
+    encode_msg_frame(0, 9, &msgs, &mut scratch, &mut wire);
+    assert!(wire.len() > FRAME_HEADER_LEN + 4);
+
+    let payload = wire.clone();
+    let writer = std::thread::spawn(move || {
+        use std::io::Write;
+        // 1: intact frame
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&payload).unwrap();
+        drop(s);
+        // 2: one payload byte flipped in transit
+        let mut bad = payload.clone();
+        bad[FRAME_HEADER_LEN + 3] ^= 0x10;
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&bad).unwrap();
+        drop(s);
+        // 3: sender dies mid-frame
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&payload[..payload.len() / 2]).unwrap();
+    });
+    let read_conn = |l: &TcpListener| -> Vec<u8> {
+        use std::io::Read;
+        let (mut s, _) = l.accept().unwrap();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        buf
+    };
+
+    let good = read_conn(&listener);
+    let mut input = good.as_slice();
+    let frame = decode_frame(&mut input).unwrap();
+    assert_eq!(decode_msgs::<(u64, u64)>(&frame).unwrap(), msgs);
+    assert!(input.is_empty());
+
+    let flipped = read_conn(&listener);
+    let mut input = flipped.as_slice();
+    let outcome = decode_frame(&mut input)
+        .and_then(|f| decode_msgs::<(u64, u64)>(&f).map(|_| ()));
+    assert!(outcome.is_err(), "flipped byte over tcp accepted");
+
+    let truncated = read_conn(&listener);
+    assert!(truncated.len() < wire.len());
+    let mut input = truncated.as_slice();
+    assert!(
+        decode_frame(&mut input).is_err(),
+        "mid-frame EOF over tcp accepted"
+    );
+    writer.join().unwrap();
 }
 
 #[test]
