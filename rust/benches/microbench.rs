@@ -541,6 +541,31 @@ fn main() {
                 &r,
             );
         }
+        // the checkpoint tax: the same epoch on the process backend with
+        // chunked seeding + a barrier every 4 chunks (idle rounds, state
+        // freeze, inline record shipping) — what fault tolerance costs
+        // when nothing fails
+        {
+            let opts = AccumulateOptions {
+                backend: Backend::Process,
+                fault: degreesketch::comm::FaultPolicy {
+                    ckpt_every_chunks: 4,
+                    chunk: 2048,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let r = heavy.run(|| {
+                accumulate(stream.shard(4), cfg, opts).num_vertices()
+            });
+            row(
+                &mut table,
+                &mut report,
+                "comm_backend_epoch accumulate x4 process+ckpt",
+                m,
+                &r,
+            );
+        }
     }
 
     table.print();

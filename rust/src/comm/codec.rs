@@ -519,16 +519,27 @@ pub const MAX_FRAME_PAYLOAD: usize = 1 << 30;
 /// ```text
 /// [0..4)   magic   "DSKF"
 /// [4]      kind    transport-defined discriminator
-/// [5..8)   pad     must be zero
+/// [5]      pad     must be zero
+/// [6..8)   gen     epoch qualifier: the recovery generation the frame
+///                  was sent in. Non-resilient epochs always stamp 0.
+///                  After a checkpoint rollback, stale frames from an
+///                  older generation are identified (and discarded) by
+///                  this field instead of colliding with the resumed
+///                  channel's token sequence.
 /// [8..12)  count   messages in the payload (0 for raw frames)
 /// [12..16) len     payload bytes
 /// [16..24) token   cumulative per-channel message counter — the
-///                  termination token the quiescence protocol reads
+///                  termination token the quiescence protocol reads.
+///                  Token arithmetic is defined **wrapping** mod 2^64:
+///                  validation compares `recv_seq.wrapping_add(count)`,
+///                  so an arbitrarily long (resumable) epoch crossing the
+///                  counter boundary stays consistent.
 /// [24..28) crc     CRC-32 over header bytes [0..24) ++ payload
 /// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Frame<'a> {
     pub kind: u8,
+    pub gen: u16,
     pub count: u32,
     pub token: u64,
     pub payload: &'a [u8],
@@ -544,11 +555,25 @@ pub fn encode_frame_header(
     token: u64,
     payload: &[u8],
 ) -> [u8; FRAME_HEADER_LEN] {
+    encode_frame_header_gen(kind, 0, count, token, payload)
+}
+
+/// [`encode_frame_header`] with an explicit generation qualifier (see the
+/// [`Frame`] header docs). Control and rendezvous frames stamp 0; MSGS
+/// frames on a resilient epoch stamp the current recovery generation.
+pub fn encode_frame_header_gen(
+    kind: u8,
+    gen: u16,
+    count: u32,
+    token: u64,
+    payload: &[u8],
+) -> [u8; FRAME_HEADER_LEN] {
     assert!(payload.len() <= MAX_FRAME_PAYLOAD, "oversized frame");
     let mut head = [0u8; FRAME_HEADER_LEN];
     head[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
     head[4] = kind;
-    // [5..8) pad stays zero
+    // [5] pad stays zero
+    head[6..8].copy_from_slice(&gen.to_le_bytes());
     head[8..12].copy_from_slice(&count.to_le_bytes());
     head[12..16].copy_from_slice(&(payload.len() as u32).to_le_bytes());
     head[16..24].copy_from_slice(&token.to_le_bytes());
@@ -568,6 +593,20 @@ pub fn encode_frame_into(
     out: &mut Vec<u8>,
 ) {
     let head = encode_frame_header(kind, count, token, payload);
+    out.extend_from_slice(&head);
+    out.extend_from_slice(payload);
+}
+
+/// [`encode_frame_into`] with an explicit generation qualifier.
+pub fn encode_frame_into_gen(
+    kind: u8,
+    gen: u16,
+    count: u32,
+    token: u64,
+    payload: &[u8],
+    out: &mut Vec<u8>,
+) {
+    let head = encode_frame_header_gen(kind, gen, count, token, payload);
     out.extend_from_slice(&head);
     out.extend_from_slice(payload);
 }
@@ -598,10 +637,11 @@ pub fn decode_frame<'a>(input: &mut &'a [u8]) -> Result<Frame<'a>, WireError> {
         return Err(WireError::Truncated);
     }
     let head = &input[..FRAME_HEADER_LEN];
-    if head[5..8] != [0, 0, 0] {
+    if head[5] != 0 {
         return Err(invalid("nonzero header pad"));
     }
     let kind = head[4];
+    let gen = u16::from_le_bytes([head[6], head[7]]);
     let count = u32::from_le_bytes([head[8], head[9], head[10], head[11]]);
     let token = u64::from_le_bytes([
         head[16], head[17], head[18], head[19], head[20], head[21], head[22],
@@ -619,6 +659,7 @@ pub fn decode_frame<'a>(input: &mut &'a [u8]) -> Result<Frame<'a>, WireError> {
     *input = &input[total..];
     Ok(Frame {
         kind,
+        gen,
         count,
         token,
         payload,
@@ -635,11 +676,23 @@ pub fn encode_msg_frame<M: WireMsg>(
     scratch: &mut Vec<u8>,
     out: &mut Vec<u8>,
 ) {
+    encode_msg_frame_gen(kind, 0, token, msgs, scratch, out);
+}
+
+/// [`encode_msg_frame`] stamping an explicit generation qualifier.
+pub fn encode_msg_frame_gen<M: WireMsg>(
+    kind: u8,
+    gen: u16,
+    token: u64,
+    msgs: &[M],
+    scratch: &mut Vec<u8>,
+    out: &mut Vec<u8>,
+) {
     scratch.clear();
     for m in msgs {
         m.encode_into(scratch);
     }
-    encode_frame_into(kind, msgs.len() as u32, token, scratch, out);
+    encode_frame_into_gen(kind, gen, msgs.len() as u32, token, scratch, out);
 }
 
 /// Decode the `count` messages carried by a frame's payload. The payload
@@ -875,6 +928,23 @@ mod tests {
                 .and_then(|_| decode_edges(&mut short).map(|_| ()));
             assert!(outcome.is_err(), "cut {cut} accepted");
         }
+    }
+
+    #[test]
+    fn generation_qualifier_round_trips_and_is_zero_for_legacy() {
+        let (mut scratch, mut wire) = (Vec::new(), Vec::new());
+        encode_msg_frame(0, 5, &[(1u64, 2u64)], &mut scratch, &mut wire);
+        let mut input = wire.as_slice();
+        assert_eq!(decode_frame(&mut input).unwrap().gen, 0);
+        let mut wire2 = Vec::new();
+        encode_msg_frame_gen(0, 7, 5, &[(1u64, 2u64)], &mut scratch, &mut wire2);
+        let mut input = wire2.as_slice();
+        let f = decode_frame(&mut input).unwrap();
+        assert_eq!((f.gen, f.token, f.count), (7, 5, 1));
+        // the gen field is covered by the frame CRC
+        let mut bad = wire2.clone();
+        bad[6] ^= 1;
+        assert!(decode_frame(&mut bad.as_slice()).is_err());
     }
 
     #[test]

@@ -74,8 +74,55 @@
 //! [u8 kind_len][kind bytes]      FabricActor::KIND (worker-side dispatch)
 //! [FlushPolicy]                  threshold u64, adaptive u8, min/max u64
 //! [u32 n][n × u64]               per-destination warm-start seeds
+//! [u8 resilient][u64 chunk]      checkpointed-epoch spec (0/ignored when
+//! [u64 epoch][u64 gen]           fault tolerance is off)
+//! [u8 resume_tag][resume]        0 none · 1 inline checkpoint record
+//!                                (u64 len + bytes) · 2 worker-local file
 //! [actor seed bytes]             FabricActor::write_seed / read_seed
 //! ```
+//!
+//! # Fault-tolerant (checkpointed) epochs
+//!
+//! With a [`FaultPolicy`] that enables checkpointing, the socket backends
+//! run the epoch **resiliently**: the seed context is chunked (the driver
+//! issues STEP frames, each worker replays `chunk` input units of its
+//! substream via [`FabricActor::seed_range`]), and between chunks the
+//! driver drives the storm to a true quiescent barrier (probe waves +
+//! idle rounds). At the configured cadence (`comm.checkpoint_interval`
+//! chunks and/or `comm.checkpoint_secs` seconds) it broadcasts a CKPT
+//! frame; every rank freezes its actor (`write_state`), input frontier
+//! and per-channel cumulative tokens into a CRC'd
+//! [`crate::snapshot::CheckpointRecord`] — a local file on the tcp
+//! backend (`worker --ckpt-dir`), an inline ack payload on the process
+//! backend — and the driver records the consistent checkpoint frontier.
+//!
+//! When a rank dies mid-storm, recovery is a **global rollback to the
+//! last barrier** (no message existed in any channel at that instant, so
+//! the barrier is a consistent cut by construction):
+//!
+//! * **tcp** — the driver sends PAUSE to the survivors (they park,
+//!   draining writes), accepts a replacement `degreesketch worker
+//!   --connect … --rank R --resume <ckpt>` JOIN on the still-open
+//!   registrar, hands it the mesh map (the replacement dials every
+//!   survivor — an *incremental re-mesh*, survivors accept on their
+//!   retained mesh listeners), re-SEEDs only the replacement, then
+//!   broadcasts RESTORE: every rank rolls back to its own record
+//!   (survivors from an in-memory copy, the replacement from its file),
+//!   resets channel tokens to the barrier's values, and the chunk loop
+//!   resumes from the recorded frontier. Stale pre-failure frames are
+//!   identified by the frame header's generation qualifier and
+//!   discarded.
+//! * **process** — the driver holds every rank's latest record (CKPT
+//!   acks carry them inline), SIGKILLs the remaining forks and re-forks
+//!   the whole fleet over fresh socketpairs, re-seeding each worker with
+//!   its record — the same resume path, minus the network.
+//!
+//! Replayed work re-converges bit-identically because sketch merges
+//! commute; the kill-resume suites in `tests/comm_backends.rs` assert
+//! DEG/ANF sketches and triangle heavy hitters match an undisturbed
+//! sequential run exactly. Failures outside the resilient window
+//! (rendezvous, post-STOP state collection) abort with a clear error as
+//! before; `comm.max_respawns` caps recovery generations.
 //!
 //! The per-actor surface is unchanged from the paper's listings:
 //!
@@ -113,7 +160,7 @@ pub(crate) mod transport;
 
 pub use codec::{WireError, WireMsg};
 pub use outbox::{FlushPolicy, Outbox};
-pub use process::run_process;
+pub use process::{run_process, run_process_full};
 pub use sequential::run_sequential;
 pub use threaded::run_threaded;
 
@@ -144,6 +191,10 @@ pub struct CommStats {
     pub bytes: u64,
     /// Global idle rounds executed before quiescence.
     pub idle_rounds: u64,
+    /// Checkpoint barriers completed (resilient socket epochs only).
+    pub checkpoints: u64,
+    /// Recovery generations executed (rank deaths survived via rollback).
+    pub restores: u64,
     /// Per-destination-rank breakdown (indexed by rank).
     pub per_rank: Vec<RankStats>,
 }
@@ -156,6 +207,82 @@ impl CommStats {
             ..Self::default()
         }
     }
+}
+
+/// Fault-tolerance policy for one socket-backend epoch: checkpoint
+/// cadence, liveness limits, and the recovery budget. The default
+/// disables checkpointing entirely — epochs behave exactly as before
+/// (a dead worker aborts with a clear error).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPolicy {
+    /// Checkpoint every N seed chunks (0 disables the chunk trigger).
+    /// Any nonzero checkpoint trigger makes the epoch resilient:
+    /// chunked seeding, checkpoint barriers, rollback recovery.
+    pub ckpt_every_chunks: u64,
+    /// Also checkpoint when this many seconds have elapsed since the
+    /// last barrier (0 disables the time trigger).
+    pub ckpt_secs: u64,
+    /// Seed input units (edges) per STEP chunk in resilient epochs.
+    pub chunk: u64,
+    /// How many times a `Liveness` hook may re-arm an expired control
+    /// deadline before the worker is declared dead (`comm.liveness_rearms`;
+    /// the fix for the previously unbounded re-arm loop).
+    pub rearm_cap: u32,
+    /// Maximum recovery generations per epoch before giving up.
+    pub max_respawns: u32,
+    /// Optional fault injection (tests / chaos drills): see [`Chaos`].
+    pub chaos: Option<Chaos>,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        Self {
+            ckpt_every_chunks: 0,
+            ckpt_secs: 0,
+            chunk: 4096,
+            rearm_cap: 10,
+            max_respawns: 2,
+            chaos: None,
+        }
+    }
+}
+
+impl FaultPolicy {
+    /// Is checkpointed (resilient) execution enabled?
+    pub fn resilient(&self) -> bool {
+        self.ckpt_every_chunks > 0 || self.ckpt_secs > 0
+    }
+
+    /// Enable checkpointing every `chunks` seed chunks (the
+    /// `--checkpoint N` shape).
+    pub fn checkpoint_every(chunks: u64) -> Self {
+        Self {
+            ckpt_every_chunks: chunks,
+            ..Self::default()
+        }
+    }
+}
+
+/// Deterministic fault injection for the kill-resume test suites (and
+/// chaos drills): the named rank abruptly dies — the fork `_exit`s, the
+/// tcp worker drops every socket — once it has delivered
+/// `after_delivered` messages in fabric epoch `epoch`, but only in
+/// recovery generation `generation` (0 = the undisturbed first run, so a
+/// respawned worker does not re-die). On the process backend the chaos
+/// rides [`FaultPolicy::chaos`]; on tcp it is worker-side
+/// (`tcp::WorkerOptions::chaos`), since real worker processes die on
+/// their own hosts, not at the driver's hand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chaos {
+    /// Which rank dies.
+    pub rank: usize,
+    /// Fabric epoch the death happens in (process backend epochs are
+    /// always epoch 1; tcp fabrics number epochs 1, 2, … per driver run).
+    pub epoch: u64,
+    /// Die after this many delivered messages within that epoch.
+    pub after_delivered: u64,
+    /// Only inject in this recovery generation.
+    pub generation: u64,
 }
 
 /// Best-effort stringification of a caught panic payload (shared by the
@@ -219,6 +346,33 @@ pub trait FabricActor: WireActor {
     fn read_seed(input: &mut &[u8]) -> Result<Self, WireError>
     where
         Self: Sized;
+
+    /// Number of replayable seed input units (edges of the rank's
+    /// substream) for checkpointed epochs. Actors without a divisible
+    /// input report 1: the whole seed context is a single unit, so they
+    /// can only checkpoint at storm barriers, never mid-seed.
+    fn input_len(&self) -> usize {
+        1
+    }
+
+    /// Run the seed context for input units `[start, end)` — the
+    /// chunked, restartable form of [`Actor::seed`] that resilient
+    /// epochs drive via STEP frames (and replay from a checkpoint's
+    /// recorded frontier). The default serves the monolithic case.
+    ///
+    /// Requirement for resilient epochs: seeding `[0, a)` then `[a, b)`
+    /// must push exactly the messages seeding `[0, b)` would, and
+    /// [`Actor::on_idle`] must be drain-only (safe to invoke at every
+    /// checkpoint barrier) — true of all coordinator actors.
+    fn seed_range(
+        &mut self,
+        start: usize,
+        end: usize,
+        out: &mut Outbox<Self::Msg>,
+    ) {
+        debug_assert_eq!((start, end), (0, 1), "monolithic seed range");
+        self.seed(out);
+    }
 }
 
 /// Scheduler selection for an epoch.
@@ -327,6 +481,26 @@ where
     A: FabricActor + 'static,
     A::Msg: WireMsg,
 {
+    run_epoch_wire_full(backend, actors, policy, seeds, FaultPolicy::default())
+}
+
+/// [`run_epoch_wire_seeded`] with an explicit [`FaultPolicy`]: when the
+/// policy enables checkpointing, the socket backends run the epoch
+/// resiliently (chunked seed, checkpoint barriers, rollback recovery on
+/// worker death — see the module docs). The in-memory backends ignore
+/// the policy: a thread panic already propagates cleanly, and their
+/// state never leaves the process.
+pub fn run_epoch_wire_full<A>(
+    backend: Backend,
+    actors: &mut Vec<A>,
+    policy: FlushPolicy,
+    seeds: &[usize],
+    fault: FaultPolicy,
+) -> CommStats
+where
+    A: FabricActor + 'static,
+    A::Msg: WireMsg,
+{
     match backend {
         Backend::Sequential => run_sequential(actors),
         Backend::Threaded => {
@@ -337,11 +511,12 @@ where
         }
         Backend::Process => {
             let owned = std::mem::take(actors);
-            let (mut back, stats) = run_process(owned, policy, seeds);
+            let (mut back, stats) =
+                process::run_process_full(owned, policy, seeds, fault);
             std::mem::swap(actors, &mut back);
             stats
         }
-        Backend::Tcp => tcp::run_global(actors, policy, seeds),
+        Backend::Tcp => tcp::run_global(actors, policy, seeds, fault),
     }
 }
 

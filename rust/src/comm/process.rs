@@ -5,40 +5,47 @@
 //! created *before* forking, plus one control socketpair per worker to
 //! the driver (the parent process). Since the seed_state leg landed,
 //! **nothing rides fork copy-on-write**: the parent ships each worker a
-//! SEED frame carrying the actor kind, flush policy, warm-start seeds
-//! and the [`FabricActor::write_seed`] bytes; the worker reconstructs
-//! its actor with [`FabricActor::read_seed`] — exactly the protocol the
-//! tcp backend speaks to remote hosts. Only the *result* state comes
-//! back, via `write_state` in the STATE frame.
+//! SEED frame carrying the actor kind, flush policy, warm-start seeds,
+//! epoch spec and the [`FabricActor::write_seed`] bytes; the worker
+//! reconstructs its actor with [`FabricActor::read_seed`] — exactly the
+//! protocol the tcp backend speaks to remote hosts. Only the *result*
+//! state comes back, via `write_state` in the STATE frame.
 //!
-//! The framing, pending-write queues, per-channel token validation and
-//! two-wave counter termination all live in `super::socket` — one
-//! socket-generic implementation shared verbatim with the tcp backend
-//! (see that module's docs for the protocol); this file only contributes
-//! what is fork-specific: descriptor plumbing, child exit codes, and a
-//! `waitpid`-based `Liveness` so a silent-but-alive child re-arms the
-//! driver's control deadline instead of aborting the epoch.
+//! The framing, pending-write queues, per-channel token validation,
+//! two-wave counter termination and the checkpoint leg all live in
+//! `super::socket` — one socket-generic implementation shared verbatim
+//! with the tcp backend (see that module's docs for the protocol); this
+//! file only contributes what is fork-specific: descriptor plumbing,
+//! child exit codes, a `waitpid`-based `Liveness` (re-arms capped via
+//! `comm.liveness_rearms`), and the **re-fork resume path**: with a
+//! checkpointing [`FaultPolicy`], CKPT acks carry each rank's barrier
+//! record back to the driver inline; when a worker dies mid-epoch the
+//! driver SIGKILLs the remaining forks and re-forks the whole fleet
+//! over fresh socketpairs, re-seeding every worker with its record —
+//! the same rollback-to-barrier semantics as the tcp backend's
+//! respawn/resume, minus the network.
 //!
 //! Failure containment: a worker that panics (or hits a protocol error)
 //! exits with a distinctive status; the driver sees the control channel
-//! close (or the deadline expire on a reaped child), and panics with the
-//! rank and status attached — mirroring the threaded backend's panic
-//! propagation.
+//! close (or the deadline expire on a reaped child), and — when fault
+//! tolerance is off — panics with the rank and status attached,
+//! mirroring the threaded backend's panic propagation.
 
 #![allow(clippy::type_complexity)]
 
 use super::outbox::FlushPolicy;
-use super::{CommStats, FabricActor, WireMsg};
+use super::{CommStats, FabricActor, FaultPolicy, WireMsg};
 
 /// Worker exit codes (parent turns nonzero ones into panics).
 const EXIT_PANIC: i32 = 101;
 const EXIT_PROTOCOL: i32 = 102;
+/// Injected-chaos death (mimics SIGKILL's 128+9 shell convention).
+const EXIT_CHAOS: i32 = 137;
 
 /// Run one epoch with one forked worker process per rank; returns the
 /// actors (result state decoded back into them) and stats. `seeds`
 /// warm-starts per-destination flush thresholds (empty = none). Panics
 /// if a worker dies, mirroring the threaded backend's panic propagation.
-#[cfg(unix)]
 pub fn run_process<A>(
     actors: Vec<A>,
     policy: FlushPolicy,
@@ -48,14 +55,33 @@ where
     A: FabricActor + 'static,
     A::Msg: WireMsg,
 {
-    unix::run(actors, policy, seeds)
+    run_process_full(actors, policy, seeds, FaultPolicy::default())
+}
+
+/// [`run_process`] with an explicit [`FaultPolicy`]: when checkpointing
+/// is enabled, a dead worker triggers a re-fork of the whole fleet from
+/// the last fabric-wide checkpoint barrier instead of a panic (up to
+/// `max_respawns` recovery generations).
+#[cfg(unix)]
+pub fn run_process_full<A>(
+    actors: Vec<A>,
+    policy: FlushPolicy,
+    seeds: &[usize],
+    fault: FaultPolicy,
+) -> (Vec<A>, CommStats)
+where
+    A: FabricActor + 'static,
+    A::Msg: WireMsg,
+{
+    unix::run(actors, policy, seeds, fault)
 }
 
 #[cfg(not(unix))]
-pub fn run_process<A>(
+pub fn run_process_full<A>(
     _actors: Vec<A>,
     _policy: FlushPolicy,
     _seeds: &[usize],
+    _fault: FaultPolicy,
 ) -> (Vec<A>, CommStats)
 where
     A: FabricActor + 'static,
@@ -69,17 +95,21 @@ mod unix {
     use std::io::Write;
     use std::os::unix::net::UnixStream;
 
-    use super::{EXIT_PANIC, EXIT_PROTOCOL};
+    use super::{EXIT_CHAOS, EXIT_PANIC, EXIT_PROTOCOL};
     use crate::comm::outbox::FlushPolicy;
     use crate::comm::socket::{
-        self, kind, Conn, DriverCtrl, Liveness, PeerConn, CTRL_DEADLINE,
+        self, kind, CkptPlan, Conn, DriverCtrl, EpochSpec, FabricHooks,
+        Liveness, PeerConn, RankError, ResumeSrc, CHAOS_ABORT, CTRL_DEADLINE,
     };
-    use crate::comm::{Backend, CommStats, FabricActor, WireMsg};
+    use crate::comm::{
+        Backend, Chaos, CommStats, FabricActor, FaultPolicy, WireMsg,
+    };
 
     mod sys {
         extern "C" {
             pub fn fork() -> i32;
             pub fn waitpid(pid: i32, status: *mut i32, options: i32) -> i32;
+            pub fn kill(pid: i32, sig: i32) -> i32;
             pub fn _exit(code: i32) -> !;
             pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
         }
@@ -103,6 +133,7 @@ mod unix {
     }
 
     const WNOHANG: i32 = 1;
+    const SIGKILL: i32 = 9;
 
     /// Human-readable wait status.
     fn decode_status(status: i32) -> String {
@@ -115,6 +146,9 @@ mod unix {
                 c if c == EXIT_PROTOCOL => {
                     format!("exit {c} — comm protocol error (see worker stderr)")
                 }
+                c if c == EXIT_CHAOS => {
+                    format!("exit {c} — injected chaos fault")
+                }
                 c => format!("exit {c}"),
             }
         } else {
@@ -124,9 +158,9 @@ mod unix {
 
     /// The process backend's control-deadline policy: a silent child is
     /// checked with `waitpid` — alive (legitimately deep in a long actor
-    /// context, e.g. a huge seed) re-arms the wait, matching the other
-    /// backends' no-watchdog semantics; a reaped child aborts with its
-    /// exit status attached.
+    /// context, e.g. a huge seed) re-arms the wait (capped by
+    /// `comm.liveness_rearms`); a reaped child aborts with its exit
+    /// status attached.
     struct PidLiveness {
         pid: i32,
     }
@@ -144,27 +178,82 @@ mod unix {
         }
     }
 
-    /// Abort the epoch: reap whatever children already exited (their
-    /// statuses usually explain the failure) and panic with context.
-    fn abort(pids: &[i32], msg: &str) -> ! {
+    /// SIGKILL and reap every still-running child; collect any
+    /// informative exit statuses for the error message. Children that
+    /// were already reaped (waitpid reports ECHILD) are skipped — their
+    /// PIDs may have been recycled by the kernel and must never be
+    /// signalled again.
+    fn kill_and_reap(pids: &[i32]) -> String {
         let mut notes = String::new();
         for (rank, &pid) in pids.iter().enumerate() {
             let mut status: i32 = 0;
             let reaped = unsafe { sys::waitpid(pid, &mut status, WNOHANG) };
-            if reaped == pid && status != 0 {
-                notes.push_str(&format!(
-                    "; rank {rank}: {}",
-                    decode_status(status)
-                ));
+            if reaped == pid {
+                if status != 0 {
+                    notes.push_str(&format!(
+                        "; rank {rank}: {}",
+                        decode_status(status)
+                    ));
+                }
+                continue;
+            }
+            if reaped < 0 {
+                // already reaped elsewhere: the pid is no longer ours
+                continue;
+            }
+            unsafe {
+                sys::kill(pid, SIGKILL);
+                sys::waitpid(pid, &mut status, 0);
             }
         }
-        panic!("process epoch aborted: {msg}{notes}");
+        notes
+    }
+
+    /// The process backend's [`FabricHooks`]: checkpoint records travel
+    /// back to the driver inline (CKPT_ACK payload); there is no
+    /// worker-side file and no incremental re-mesh — a dead rank means
+    /// the driver re-forks the whole fleet.
+    struct ProcHooks;
+
+    impl FabricHooks<UnixStream> for ProcHooks {
+        fn store_checkpoint(
+            &mut self,
+            _epoch: u64,
+            _barrier: u64,
+            record: &[u8],
+        ) -> Result<Vec<u8>, String> {
+            Ok(record.to_vec())
+        }
+
+        fn commit_checkpoint(&mut self, _epoch: u64, _barrier: u64) {}
+
+        fn load_resume(
+            &mut self,
+            _epoch: u64,
+            _barrier: u64,
+        ) -> Result<Vec<u8>, String> {
+            Err("process workers resume from driver-held records shipped \
+                 inline in the SEED, never from files"
+                .to_string())
+        }
+
+        fn accept_replacement(
+            &mut self,
+            _failed: usize,
+            _gen: u64,
+            _deadline: std::time::Duration,
+        ) -> Result<Conn<UnixStream>, String> {
+            Err("process workers are respawned whole by the driver; no \
+                 incremental re-mesh exists"
+                .to_string())
+        }
     }
 
     pub(super) fn run<A>(
         mut actors: Vec<A>,
         policy: FlushPolicy,
         seeds: &[usize],
+        fault: FaultPolicy,
     ) -> (Vec<A>, CommStats)
     where
         A: FabricActor + 'static,
@@ -172,6 +261,71 @@ mod unix {
     {
         let ranks = actors.len();
         assert!(ranks > 0);
+        let plan = CkptPlan::from_fault(&fault);
+        let mut gen = 0u64;
+        let mut checkpoints = 0u64;
+        let mut restores = 0u64;
+        // Latest fully-acknowledged barrier records, one per rank (the
+        // CKPT acks carry them inline). Updated all-or-nothing, so a
+        // re-fork always resumes a consistent fabric-wide barrier.
+        let mut records: Vec<Option<Vec<u8>>> = vec![None; ranks];
+        loop {
+            let chaos = fault.chaos.filter(|c| c.generation == gen);
+            let outcome = attempt(
+                &mut actors,
+                policy,
+                seeds,
+                plan.as_ref(),
+                gen,
+                &mut checkpoints,
+                &mut records,
+                chaos,
+                fault.rearm_cap,
+            );
+            match outcome {
+                Ok(mut stats) => {
+                    stats.checkpoints = checkpoints;
+                    stats.restores = restores;
+                    return (actors, stats);
+                }
+                Err(e) => {
+                    let recoverable = plan.is_some()
+                        && gen < fault.max_respawns as u64;
+                    if !recoverable {
+                        panic!("process epoch aborted: {}", e.msg);
+                    }
+                    gen += 1;
+                    restores += 1;
+                    eprintln!(
+                        "process epoch: worker rank {} died ({}); \
+                         re-forking the fleet from checkpoint barrier \
+                         {checkpoints} (generation {gen})",
+                        e.rank, e.msg
+                    );
+                }
+            }
+        }
+    }
+
+    /// One forked-fleet attempt at the epoch (generation `gen`): mesh,
+    /// fork, seed (resuming `records` when `gen > 0`), drive, collect.
+    /// Any failure kills and reaps the fleet and names the rank.
+    fn attempt<A>(
+        actors: &mut [A],
+        policy: FlushPolicy,
+        seeds: &[usize],
+        plan: Option<&CkptPlan>,
+        gen: u64,
+        checkpoints: &mut u64,
+        records: &mut [Option<Vec<u8>>],
+        chaos: Option<Chaos>,
+        rearm_cap: u32,
+    ) -> Result<CommStats, RankError>
+    where
+        A: FabricActor + 'static,
+        A::Msg: WireMsg,
+    {
+        let ranks = actors.len();
 
         // Full mesh of socketpairs: mesh[i][j] is i's end of the (i, j)
         // channel. Created before forking so both sides inherit them.
@@ -208,6 +362,7 @@ mod unix {
                     &mut mesh,
                     &mut ctrl_parent,
                     &mut ctrl_child,
+                    chaos,
                 );
                 unsafe { sys::_exit(code) }
             }
@@ -232,23 +387,72 @@ mod unix {
                     PidLiveness { pid: pids[rank] },
                 )
                 .expect("ctrl setup")
+                .with_rearm_cap(rearm_cap)
             })
             .collect();
 
         // Ship every worker its epoch inputs over the wire — no actor
-        // state is read through fork copy-on-write.
+        // state is read through fork copy-on-write. Generation > 0
+        // resumes the fabric-wide barrier from the driver-held records.
+        let resume_barrier = if gen > 0 { *checkpoints } else { 0 };
         for (rank, c) in ctrls.iter_mut().enumerate() {
-            let payload = socket::encode_seed(&actors[rank], policy, seeds);
+            let resume = if gen > 0 && resume_barrier > 0 {
+                match &records[rank] {
+                    Some(bytes) => ResumeSrc::Inline(bytes.clone()),
+                    None => ResumeSrc::None,
+                }
+            } else {
+                ResumeSrc::None
+            };
+            let spec = EpochSpec {
+                resilient: plan.is_some(),
+                chunk: plan.map_or(0, |p| p.chunk),
+                epoch: 1,
+                gen,
+                resume_barrier: match &resume {
+                    ResumeSrc::None => 0,
+                    _ => resume_barrier,
+                },
+                resume,
+            };
+            let payload =
+                socket::encode_seed(&actors[rank], policy, seeds, &spec);
             if let Err(e) = c.send_payload(kind::SEED, 0, &payload) {
-                abort(&pids, &e);
+                let notes = kill_and_reap(&pids);
+                return Err(RankError::new(rank, format!("{e}{notes}")));
             }
         }
 
-        // Quiescence → idle rounds → Stop (same schedule as threaded),
-        // then collect final states into our actor copies.
-        let idle_rounds = match socket::drive_to_stop(&mut ctrls) {
+        // Quiescence → (checkpoints) → idle rounds → Stop (same schedule
+        // as threaded), then collect final states into our actor copies.
+        let drive = match plan {
+            Some(p) => {
+                let mut wave = 0u64;
+                socket::drive_resilient(
+                    &mut ctrls,
+                    p,
+                    &mut wave,
+                    1,
+                    gen,
+                    checkpoints,
+                    &mut |acks: Vec<Vec<u8>>| {
+                        for (r, bytes) in acks.into_iter().enumerate() {
+                            records[r] = Some(bytes);
+                        }
+                    },
+                )
+            }
+            None => socket::drive_to_stop(&mut ctrls),
+        };
+        let idle_rounds = match drive {
             Ok(n) => n,
-            Err(e) => abort(&pids, &e),
+            Err(e) => {
+                let notes = kill_and_reap(&pids);
+                return Err(RankError::new(
+                    e.rank,
+                    format!("{}{notes}", e.msg),
+                ));
+            }
         };
         let mut stats = CommStats::new(Backend::Process, ranks);
         stats.idle_rounds = idle_rounds;
@@ -256,25 +460,30 @@ mod unix {
             if let Err(e) =
                 socket::collect_state(c, &mut actors[rank], &mut stats, rank)
             {
-                abort(&pids, &e);
+                let notes = kill_and_reap(&pids);
+                return Err(RankError::new(rank, format!("{e}{notes}")));
             }
         }
 
-        // Reap every worker; nonzero exits become panics. Only now may
+        // Reap every worker; nonzero exits become errors. Only now may
         // the parent's mesh copies close (see the comment at fork time).
         for (rank, pid) in pids.iter().enumerate() {
             let mut status: i32 = 0;
             let got = unsafe { sys::waitpid(*pid, &mut status, 0) };
             assert_eq!(got, *pid, "waitpid failed for rank {rank}");
             if status != 0 {
-                panic!(
-                    "process epoch aborted: worker rank {rank} {}",
-                    decode_status(status)
-                );
+                let notes = kill_and_reap(&pids);
+                return Err(RankError::new(
+                    rank,
+                    format!(
+                        "worker rank {rank} {}{notes}",
+                        decode_status(status)
+                    ),
+                ));
             }
         }
         drop(mesh);
-        (actors, stats)
+        Ok(stats)
     }
 
     /// Child-side setup: keep only this rank's descriptors, run the
@@ -286,6 +495,7 @@ mod unix {
         mesh: &mut [Vec<Option<UnixStream>>],
         ctrl_parent: &mut [Option<UnixStream>],
         ctrl_child: &mut [Option<UnixStream>],
+        chaos: Option<Chaos>,
     ) -> i32
     where
         A: FabricActor,
@@ -314,10 +524,15 @@ mod unix {
         // stderr — swap in a silent hook and report via raw write(2)
         std::panic::set_hook(Box::new(|_| {}));
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-            || child_main::<A>(rank, peer_streams, ctrl),
+            || child_main::<A>(rank, peer_streams, ctrl, chaos),
         ));
         match outcome {
             Ok(Ok(())) => 0,
+            Ok(Err(msg)) if msg == CHAOS_ABORT => {
+                // die abruptly, SIGKILL-style: no state frame, no
+                // farewell — the driver must recover from checkpoints
+                EXIT_CHAOS
+            }
             Ok(Err(msg)) => {
                 raw_stderr(&format!("degreesketch worker rank {rank}: {msg}"));
                 EXIT_PROTOCOL
@@ -338,6 +553,7 @@ mod unix {
         rank: usize,
         peer_streams: Vec<Option<UnixStream>>,
         ctrl_stream: UnixStream,
+        chaos: Option<Chaos>,
     ) -> Result<(), String>
     where
         A: FabricActor,
@@ -370,8 +586,10 @@ mod unix {
                 A::KIND
             ));
         }
+        let mut hooks = ProcHooks;
         socket::worker_epoch::<A, UnixStream>(
-            rank, &head, actor_seed, &mut ctrl, &mut peers,
+            rank, &head, actor_seed, &mut ctrl, &mut peers, &mut hooks,
+            chaos,
         )
     }
 }
@@ -382,8 +600,9 @@ mod tests {
         get_u64, get_u8, put_u64, put_u8, WireError, WireMsg,
     };
     use super::super::{
-        run_epoch_wire, run_epoch_wire_seeded, Actor, Backend, FabricActor,
-        FlushPolicy, Outbox, WireActor,
+        run_epoch_wire, run_epoch_wire_full, run_epoch_wire_seeded, Actor,
+        Backend, Chaos, FabricActor, FaultPolicy, FlushPolicy, Outbox,
+        WireActor,
     };
 
     /// Token ring with wire-capable state and inputs.
@@ -475,6 +694,57 @@ mod tests {
             run_epoch_wire(Backend::Process, &mut actors, FlushPolicy::default());
         assert_eq!(stats.messages, 5);
         assert_eq!(actors[0].received, 5);
+    }
+
+    #[test]
+    fn resilient_ring_without_faults_matches_plain() {
+        // checkpointing on, nobody dies: the chunked-seed path must be
+        // observationally identical to the plain epoch
+        let mut plain = ring(3, 40);
+        let plain_stats = run_epoch_wire(
+            Backend::Process,
+            &mut plain,
+            FlushPolicy::default(),
+        );
+        let mut resil = ring(3, 40);
+        let resil_stats = run_epoch_wire_full(
+            Backend::Process,
+            &mut resil,
+            FlushPolicy::default(),
+            &[],
+            FaultPolicy::checkpoint_every(1),
+        );
+        assert_eq!(plain_stats.messages, resil_stats.messages);
+        assert_eq!(resil_stats.restores, 0);
+        for (p, r) in plain.iter().zip(&resil) {
+            assert_eq!(p.received, r.received);
+        }
+    }
+
+    #[test]
+    fn chaos_killed_ring_worker_recovers_via_refork() {
+        // rank 1 dies after 5 deliveries; the fleet re-forks from the
+        // rollback target and the ring completes with correct totals
+        let fault = FaultPolicy {
+            chaos: Some(Chaos {
+                rank: 1,
+                epoch: 1,
+                after_delivered: 5,
+                generation: 0,
+            }),
+            ..FaultPolicy::checkpoint_every(1)
+        };
+        let mut actors = ring(3, 30);
+        let stats = run_epoch_wire_full(
+            Backend::Process,
+            &mut actors,
+            FlushPolicy::default(),
+            &[],
+            fault,
+        );
+        assert_eq!(stats.restores, 1, "{stats:?}");
+        let total: u64 = actors.iter().map(|a| a.received).sum();
+        assert_eq!(total, 30);
     }
 
     #[test]

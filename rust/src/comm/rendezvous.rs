@@ -1,5 +1,6 @@
 //! **TCP rank rendezvous** — how independent worker processes on any
-//! hosts become a fully connected fabric.
+//! hosts become a fully connected fabric, and how a respawned worker
+//! re-joins a running one.
 //!
 //! The driver runs a *registrar*: a `TcpListener` every worker dials.
 //! Each worker announces its rank (JOIN), the registrar hands back the
@@ -13,10 +14,25 @@
 //! already-bound listener (no thundering herd, no accept/dial races).
 //! A HELLO frame on each mesh connection identifies the dialer's rank.
 //!
-//! Every step runs under a deadline; failures produce an error naming
-//! the step and the unreachable rank(s) instead of hanging. The JOIN
-//! connection stays open afterwards as the worker's control channel
-//! (SEED / PROBE / IDLE / STOP / STATE / SHUTDOWN frames).
+//! A **duplicate JOIN** — two workers claiming the same rank, exactly
+//! what a botched respawn produces — no longer aborts the whole
+//! rendezvous: the stale claimer is sent a REJECT frame naming the
+//! conflict and its connection is dropped; the fabric keeps forming
+//! around the rank that joined first. The same policy guards the
+//! respawn path ([`accept_respawn_join`]).
+//!
+//! **Respawn re-join** (fabric fault tolerance): the registrar listener
+//! stays open for the fabric's life. A replacement worker launched with
+//! `--resume` dials it and sends JOIN like any worker; the driver —
+//! which is mid-recovery and knows exactly which rank died — answers
+//! with MESH (the final map, token = recovery generation) instead of
+//! WELCOME. The replacement then performs an *incremental re-mesh*: it
+//! dials **every** survivor (each parked survivor accepts one
+//! connection on its retained mesh listener and validates the HELLO's
+//! rank + generation), binds a fresh ephemeral mesh listener of its own
+//! (reported in MESHED so a later recovery can reach it), and awaits its
+//! SEED. Every step is deadline-bounded with errors naming the
+//! unreachable rank(s) instead of hanging.
 //!
 //! This module is bootstrap-only: once [`driver_rendezvous`] /
 //! [`worker_join`] return, all traffic is the socket-generic protocol
@@ -44,7 +60,7 @@ fn put_str(buf: &mut Vec<u8>, s: &str) {
     buf.extend_from_slice(s.as_bytes());
 }
 
-fn get_str(input: &mut &[u8]) -> Result<String, String> {
+pub(crate) fn get_str(input: &mut &[u8]) -> Result<String, String> {
     let n = get_u32(input).map_err(|e| format!("bad host map: {e}"))? as usize;
     let bytes =
         take(input, n).map_err(|e| format!("bad host map: {e}"))?;
@@ -53,7 +69,7 @@ fn get_str(input: &mut &[u8]) -> Result<String, String> {
 }
 
 /// Encode a `rank → address` map (WELCOME / MESH payloads).
-fn encode_map(addrs: &[String]) -> Vec<u8> {
+pub(crate) fn encode_map(addrs: &[String]) -> Vec<u8> {
     let mut out = Vec::new();
     put_u64(&mut out, addrs.len() as u64);
     for a in addrs {
@@ -132,24 +148,104 @@ fn missing_ranks(ctrls: &[Option<TcpCtrl>]) -> String {
     missing.join(", ")
 }
 
+/// Refuse a join: send a REJECT frame naming the reason, then drop the
+/// connection (best-effort — the claimer may already be gone).
+fn reject_join(mut ctrl: TcpCtrl, reason: &str) {
+    let _ = ctrl.send_payload(kind::REJECT, 0, reason.as_bytes());
+}
+
 // ---------------------------------------------------------------------
 // Driver side
 // ---------------------------------------------------------------------
 
+/// Accept one JOIN on the (nonblocking) registrar listener and slot it
+/// into `slots`. Duplicate or out-of-range rank claims are REJECTed
+/// with a named error and the rendezvous continues — a stale or botched
+/// respawn must not take the fabric down. `Ok(true)` when a new rank
+/// was admitted, `Ok(false)` when nothing was pending or a claimer was
+/// rejected.
+pub(crate) fn accept_one_join(
+    listener: &TcpListener,
+    slots: &mut [Option<TcpCtrl>],
+    limit: Instant,
+) -> Result<bool, String> {
+    let ranks = slots.len();
+    match listener.accept() {
+        Ok((stream, peer)) => {
+            let _ = stream.set_nodelay(true);
+            stream.set_nonblocking(false).map_err(|e| {
+                format!("rendezvous: accepted socket setup: {e}")
+            })?;
+            let mut c = DriverCtrl::new(
+                stream,
+                format!("worker at {peer}"),
+                DeadlineOnly,
+            )?;
+            let (k, token, _payload) = c
+                .recv(time_left(limit))
+                .map_err(|e| format!("rendezvous: waiting for JOIN: {e}"))?;
+            if k != kind::JOIN {
+                return Err(format!(
+                    "rendezvous: {} sent frame kind {k} instead of JOIN",
+                    c.desc
+                ));
+            }
+            let rank = token as usize;
+            if rank >= ranks {
+                eprintln!(
+                    "rendezvous: rejecting {peer}: claimed rank {rank}, \
+                     but the fabric has only {ranks} ranks"
+                );
+                reject_join(
+                    c,
+                    &format!(
+                        "rank {rank} is out of range: this fabric has \
+                         {ranks} ranks"
+                    ),
+                );
+                return Ok(false);
+            }
+            if slots[rank].is_some() {
+                eprintln!(
+                    "rendezvous: rejecting duplicate JOIN for rank {rank} \
+                     from {peer} (the rank is already connected)"
+                );
+                reject_join(
+                    c,
+                    &format!(
+                        "rank {rank} already joined this fabric — \
+                         duplicate JOIN rejected (stale respawn?)"
+                    ),
+                );
+                return Ok(false);
+            }
+            c.desc = format!("worker rank {rank} ({peer})");
+            slots[rank] = Some(c);
+            Ok(true)
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(false),
+        Err(e) => Err(format!("rendezvous accept: {e}")),
+    }
+}
+
 /// Run the registrar: accept one JOIN per rank, hand out the map, wait
 /// for every listener to bind, broadcast the final map, wait for the
 /// mesh to complete. Returns one control channel per rank (index =
-/// rank). `hosts[r]` is the address rank `r` must bind its mesh
-/// listener at (`host:0` binds an ephemeral port, reported back and
-/// folded into the final map).
+/// rank) plus the **final** mesh map (every `:0` entry resolved to the
+/// actually bound address — recovery needs it to re-mesh a
+/// replacement). `hosts[r]` is the address rank `r` must bind its mesh
+/// listener at. The listener is only borrowed: it stays open for the
+/// fabric's life so respawned workers can re-join.
 pub(crate) fn driver_rendezvous(
-    listener: TcpListener,
+    listener: &TcpListener,
     hosts: &[String],
     deadline: Duration,
-) -> Result<Vec<TcpCtrl>, String> {
+) -> Result<(Vec<TcpCtrl>, Vec<String>), String> {
     let ranks = hosts.len();
     if ranks == 0 || ranks > MAX_RANKS {
-        return Err(format!("tcp fabric needs 1..={MAX_RANKS} hosts, got {ranks}"));
+        return Err(format!(
+            "tcp fabric needs 1..={MAX_RANKS} hosts, got {ranks}"
+        ));
     }
     let local = listener
         .local_addr()
@@ -163,58 +259,18 @@ pub(crate) fn driver_rendezvous(
     let mut slots: Vec<Option<TcpCtrl>> = (0..ranks).map(|_| None).collect();
     let mut joined = 0usize;
     while joined < ranks {
-        match listener.accept() {
-            Ok((stream, peer)) => {
-                let _ = stream.set_nodelay(true);
-                stream.set_nonblocking(false).map_err(|e| {
-                    format!("rendezvous: accepted socket setup: {e}")
-                })?;
-                let mut c = DriverCtrl::new(
-                    stream,
-                    format!("worker at {peer}"),
-                    DeadlineOnly,
-                )?;
-                let (k, token, _payload) = c
-                    .recv(time_left(limit))
-                    .map_err(|e| format!("rendezvous: waiting for JOIN: {e}"))?;
-                if k != kind::JOIN {
-                    return Err(format!(
-                        "rendezvous: {} sent frame kind {k} instead of JOIN",
-                        c.desc
-                    ));
-                }
-                let rank = token as usize;
-                if rank >= ranks {
-                    return Err(format!(
-                        "rendezvous: {} joined as rank {rank}, but the \
-                         fabric has only {ranks} ranks",
-                        c.desc
-                    ));
-                }
-                if slots[rank].is_some() {
-                    return Err(format!(
-                        "rendezvous: rank {rank} joined twice \
-                         (second join from {peer})"
-                    ));
-                }
-                c.desc = format!("worker rank {rank} ({peer})");
-                slots[rank] = Some(c);
-                joined += 1;
+        if accept_one_join(listener, &mut slots, limit)? {
+            joined += 1;
+        } else {
+            if Instant::now() > limit {
+                return Err(format!(
+                    "rendezvous on {local}: timed out after {deadline:?} \
+                     waiting for JOIN from rank(s) [{}] \
+                     ({joined}/{ranks} joined)",
+                    missing_ranks(&slots)
+                ));
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                if Instant::now() > limit {
-                    return Err(format!(
-                        "rendezvous on {local}: timed out after {deadline:?} \
-                         waiting for JOIN from rank(s) [{}] \
-                         ({joined}/{ranks} joined)",
-                        missing_ranks(&slots)
-                    ));
-                }
-                std::thread::sleep(Duration::from_millis(5));
-            }
-            Err(e) => {
-                return Err(format!("rendezvous accept on {local}: {e}"))
-            }
+            std::thread::sleep(Duration::from_millis(5));
         }
     }
     let mut ctrls: Vec<TcpCtrl> =
@@ -263,21 +319,187 @@ pub(crate) fn driver_rendezvous(
             ));
         }
     }
-    Ok(ctrls)
+    Ok((ctrls, final_map))
+}
+
+/// Recovery: accept the replacement worker's JOIN for `expected` on the
+/// retained registrar listener. JOINs claiming any other rank are
+/// REJECTed (they are stale or misconfigured — the fabric knows exactly
+/// which rank died) and the wait continues until `deadline`.
+pub(crate) fn accept_respawn_join(
+    listener: &TcpListener,
+    expected: usize,
+    deadline: Duration,
+) -> Result<TcpCtrl, String> {
+    let limit = Instant::now() + deadline;
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let _ = stream.set_nodelay(true);
+                stream.set_nonblocking(false).map_err(|e| {
+                    format!("respawn accept: socket setup: {e}")
+                })?;
+                let mut c = DriverCtrl::new(
+                    stream,
+                    format!("respawned worker at {peer}"),
+                    DeadlineOnly,
+                )?;
+                let (k, token, _payload) =
+                    c.recv(time_left(limit)).map_err(|e| {
+                        format!("respawn: waiting for JOIN: {e}")
+                    })?;
+                if k != kind::JOIN {
+                    return Err(format!(
+                        "respawn: {} sent frame kind {k} instead of JOIN",
+                        c.desc
+                    ));
+                }
+                let rank = token as usize;
+                if rank != expected {
+                    eprintln!(
+                        "respawn: rejecting JOIN from {peer}: claimed rank \
+                         {rank}, but rank {expected} is being replaced"
+                    );
+                    reject_join(
+                        c,
+                        &format!(
+                            "rank {rank} is alive — only rank {expected} \
+                             is being replaced"
+                        ),
+                    );
+                    continue;
+                }
+                c.desc = format!("respawned worker rank {rank} ({peer})");
+                return Ok(c);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() > limit {
+                    return Err(format!(
+                        "respawn: no replacement for rank {expected} joined \
+                         within {deadline:?}"
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(format!("respawn accept: {e}")),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
 // Worker side
 // ---------------------------------------------------------------------
 
+/// Everything a joined worker holds for its service life: the epoch
+/// control channel, the peer mesh (index = peer rank; `None` at the
+/// worker's own rank), and the retained mesh listener (used to accept a
+/// replacement's re-mesh dial during recovery; `None` only if binding a
+/// fresh one failed during a respawn join).
+pub(crate) struct JoinedWorker {
+    pub ctrl: Conn<TcpStream>,
+    pub peers: Vec<Option<PeerConn<TcpStream>>>,
+    pub listener: Option<TcpListener>,
+}
+
+/// Accept one mesh connection on `listener` and validate its HELLO
+/// frame: dialer rank `expect_rank`, generation `expect_gen` (bootstrap
+/// dials carry an empty payload = generation 0). Returns the connection
+/// with any over-read bytes preserved.
+pub(crate) fn accept_hello(
+    listener: &TcpListener,
+    expect_rank: usize,
+    expect_gen: u64,
+    deadline: Duration,
+) -> Result<Conn<TcpStream>, String> {
+    let limit = Instant::now() + deadline;
+    loop {
+        match listener.accept() {
+            Ok((stream, peer_addr)) => {
+                let _ = stream.set_nodelay(true);
+                stream.set_nonblocking(false).map_err(|e| {
+                    format!("mesh accepted socket setup: {e}")
+                })?;
+                let mut link = DriverCtrl::new(
+                    stream,
+                    format!("inbound mesh connection from {peer_addr}"),
+                    DeadlineOnly,
+                )?;
+                let (k, token, payload) =
+                    link.recv(time_left(limit)).map_err(|e| {
+                        format!("rendezvous: waiting for mesh HELLO: {e}")
+                    })?;
+                if k != kind::HELLO {
+                    return Err(format!(
+                        "rendezvous: {} sent frame kind {k} instead of HELLO",
+                        link.desc
+                    ));
+                }
+                let j = token as usize;
+                let gen = if payload.is_empty() {
+                    0
+                } else {
+                    let mut input = payload.as_slice();
+                    get_u64(&mut input)
+                        .map_err(|e| format!("bad mesh HELLO payload: {e}"))?
+                };
+                if j != expect_rank || gen != expect_gen {
+                    return Err(format!(
+                        "rendezvous: mesh HELLO claims rank {j} generation \
+                         {gen}; expected rank {expect_rank} generation \
+                         {expect_gen}"
+                    ));
+                }
+                // carry any bytes the HELLO read over-pulled into the
+                // peer connection — nothing on the wire is ever dropped
+                let (stream, leftover) = link.into_parts();
+                return Conn::with_leftover(stream, leftover)
+                    .map_err(|e| format!("peer {j}: {e}"));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() > limit {
+                    return Err(format!(
+                        "rendezvous: timed out waiting for mesh dial from \
+                         rank {expect_rank}"
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(format!("mesh accept: {e}")),
+        }
+    }
+}
+
+/// Dial `addr` and send a HELLO announcing `rank` (and, for re-mesh
+/// dials, the recovery generation).
+fn dial_hello(
+    addr: &str,
+    rank: usize,
+    gen: u64,
+    limit: Instant,
+    what: &str,
+) -> Result<TcpStream, String> {
+    let mut s = dial_retry(addr, limit, what)?;
+    let _ = s.set_nodelay(true);
+    let mut payload = Vec::new();
+    if gen > 0 {
+        put_u64(&mut payload, gen);
+    }
+    let mut hello = Vec::new();
+    encode_frame_into(kind::HELLO, 0, rank as u64, &payload, &mut hello);
+    s.write_all(&hello)
+        .map_err(|e| format!("mesh HELLO to {what}: {e}"))?;
+    Ok(s)
+}
+
 /// Join a fabric as `rank`: dial the registrar at `connect`, complete
-/// the handshake, and return the control channel plus the full peer
-/// mesh (index = peer rank; `None` at `rank` itself).
+/// the handshake (bootstrap WELCOME flow, or the MESH respawn flow when
+/// the driver is mid-recovery), and return the control channel, the
+/// full peer mesh, and the retained mesh listener.
 pub(crate) fn worker_join(
     connect: &str,
     rank: usize,
     deadline: Duration,
-) -> Result<(Conn<TcpStream>, Vec<Option<PeerConn<TcpStream>>>), String> {
+) -> Result<JoinedWorker, String> {
     let limit = Instant::now() + deadline;
 
     // JOIN.
@@ -291,16 +513,38 @@ pub(crate) fn worker_join(
     )?;
     ctrl.send(kind::JOIN, rank as u64)?;
 
-    // WELCOME: the requested rank → address map.
-    let (k, _token, payload) = ctrl
+    // The registrar's answer decides the flavor: WELCOME = bootstrap,
+    // MESH = respawn re-join, REJECT = refused.
+    let (k, token, payload) = ctrl
         .recv(time_left(limit))
         .map_err(|e| format!("rendezvous: waiting for WELCOME: {e}"))?;
-    if k != kind::WELCOME {
-        return Err(format!(
-            "rendezvous: registrar sent frame kind {k} instead of WELCOME"
-        ));
+    match k {
+        kind::WELCOME => {
+            bootstrap_join(ctrl, rank, payload, limit)
+        }
+        kind::MESH => {
+            respawn_join(ctrl, rank, token, payload, limit)
+        }
+        kind::REJECT => Err(format!(
+            "rendezvous: registrar rejected this worker: {}",
+            String::from_utf8_lossy(&payload)
+        )),
+        other => Err(format!(
+            "rendezvous: registrar sent frame kind {other} instead of \
+             WELCOME/MESH"
+        )),
     }
-    let mut input = payload.as_slice();
+}
+
+/// The bootstrap flow: bind at the assigned entry, report BOUND, await
+/// the final map, dial-high/accept-low.
+fn bootstrap_join(
+    mut ctrl: TcpCtrl,
+    rank: usize,
+    welcome_payload: Vec<u8>,
+    limit: Instant,
+) -> Result<JoinedWorker, String> {
+    let mut input = welcome_payload.as_slice();
     let map = decode_map(&mut input)?;
     let ranks = map.len();
     if rank >= ranks {
@@ -342,27 +586,24 @@ pub(crate) fn worker_join(
     let mut peers: Vec<Option<PeerConn<TcpStream>>> =
         (0..ranks).map(|_| None).collect();
     for j in (rank + 1)..ranks {
-        let mut s = dial_retry(
+        let s = dial_hello(
             &final_map[j],
+            rank,
+            0,
             limit,
             &format!("peer rank {j} at {}", final_map[j]),
         )?;
-        let _ = s.set_nodelay(true);
-        let mut hello = Vec::new();
-        encode_frame_into(kind::HELLO, 0, rank as u64, &[], &mut hello);
-        s.write_all(&hello)
-            .map_err(|e| format!("mesh HELLO to rank {j}: {e}"))?;
         peers[j] = Some(PeerConn::new(
             Conn::new(s).map_err(|e| format!("peer {j}: {e}"))?,
             j,
         ));
     }
 
-    // ...and accept one connection from every lower rank.
+    // ...and accept one connection from every lower rank. Dials can
+    // land in any order, so accept whoever arrives and slot by HELLO.
     listener
         .set_nonblocking(true)
         .map_err(|e| format!("mesh listener set_nonblocking: {e}"))?;
-    let mut seen = vec![false; rank];
     let mut accepted = 0usize;
     while accepted < rank {
         match listener.accept() {
@@ -393,12 +634,11 @@ pub(crate) fn worker_join(
                          only accepts from lower ranks"
                     ));
                 }
-                if seen[j] {
+                if peers[j].is_some() {
                     return Err(format!(
                         "rendezvous: rank {j} dialed the mesh twice"
                     ));
                 }
-                seen[j] = true;
                 // carry any bytes the HELLO read over-pulled into the
                 // peer connection — nothing on the wire is dropped
                 let (stream, leftover) = link.into_parts();
@@ -411,11 +651,9 @@ pub(crate) fn worker_join(
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 if Instant::now() > limit {
-                    let missing: Vec<String> = seen
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, s)| !**s)
-                        .map(|(j, _)| j.to_string())
+                    let missing: Vec<String> = (0..rank)
+                        .filter(|j| peers[*j].is_none())
+                        .map(|j| j.to_string())
                         .collect();
                     return Err(format!(
                         "rendezvous: timed out waiting for mesh dial from \
@@ -435,7 +673,92 @@ pub(crate) fn worker_join(
     let (stream, leftover) = ctrl.into_parts();
     let ctrl_conn = Conn::with_leftover(stream, leftover)
         .map_err(|e| format!("ctrl: {e}"))?;
-    Ok((ctrl_conn, peers))
+    Ok(JoinedWorker {
+        ctrl: ctrl_conn,
+        peers,
+        listener: Some(listener),
+    })
+}
+
+/// The respawn flow: the driver answered JOIN with MESH(final map,
+/// token = recovery generation). Dial every survivor with a
+/// generation-stamped HELLO, bind a fresh ephemeral mesh listener for
+/// future recoveries, report MESHED with its address.
+fn respawn_join(
+    mut ctrl: TcpCtrl,
+    rank: usize,
+    gen: u64,
+    mesh_payload: Vec<u8>,
+    limit: Instant,
+) -> Result<JoinedWorker, String> {
+    let mut input = mesh_payload.as_slice();
+    let final_map = decode_map(&mut input)?;
+    let ranks = final_map.len();
+    if rank >= ranks {
+        return Err(format!(
+            "rendezvous: this worker is rank {rank}, but the fabric has \
+             only {ranks} ranks"
+        ));
+    }
+    if gen == 0 {
+        return Err(
+            "rendezvous: respawn MESH carries generation 0".to_string()
+        );
+    }
+
+    // Dial every survivor (they are parked, each accepting exactly one
+    // generation-validated connection).
+    let mut peers: Vec<Option<PeerConn<TcpStream>>> =
+        (0..ranks).map(|_| None).collect();
+    for (j, addr) in final_map.iter().enumerate() {
+        if j == rank {
+            continue;
+        }
+        let s = dial_hello(
+            addr,
+            rank,
+            gen,
+            limit,
+            &format!("surviving peer rank {j} at {addr}"),
+        )?;
+        peers[j] = Some(PeerConn::new(
+            Conn::new(s).map_err(|e| format!("peer {j}: {e}"))?,
+            j,
+        ));
+    }
+
+    // A fresh ephemeral mesh listener on the same interface as our map
+    // entry, so a *later* recovery's replacement can dial us too.
+    let host = final_map[rank]
+        .rsplit_once(':')
+        .map(|(h, _)| h.to_string())
+        .unwrap_or_else(|| "127.0.0.1".to_string());
+    let listener = match TcpListener::bind(format!("{host}:0")) {
+        Ok(l) => {
+            l.set_nonblocking(true)
+                .map_err(|e| format!("mesh listener set_nonblocking: {e}"))?;
+            Some(l)
+        }
+        Err(_) => None, // degraded: this rank cannot host future re-meshes
+    };
+    let actual = match &listener {
+        Some(l) => l
+            .local_addr()
+            .map_err(|e| format!("mesh listener local_addr: {e}"))?
+            .to_string(),
+        None => String::new(),
+    };
+    let mut meshed = Vec::new();
+    put_str(&mut meshed, &actual);
+    ctrl.send_payload(kind::MESHED, gen, &meshed)?;
+    let (stream, leftover) = ctrl.into_parts();
+    let ctrl_conn = Conn::with_leftover(stream, leftover)
+        .map_err(|e| format!("ctrl: {e}"))?;
+    Ok(JoinedWorker {
+        ctrl: ctrl_conn,
+        peers,
+        listener,
+    })
 }
 
 #[cfg(test)]
@@ -461,5 +784,122 @@ mod tests {
         // zero ranks reject
         let empty = encode_map(&[]);
         assert!(decode_map(&mut empty.as_slice()).is_err());
+    }
+
+    /// Raw client: dial, send JOIN(rank), return the first reply frame.
+    fn raw_join(addr: std::net::SocketAddr, rank: u64) -> (u8, Vec<u8>) {
+        use std::io::Read;
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut frame = Vec::new();
+        encode_frame_into(kind::JOIN, 0, rank, &[], &mut frame);
+        s.write_all(&frame).unwrap();
+        let mut buf = Vec::new();
+        let mut tmp = [0u8; 4096];
+        loop {
+            match s.read(&mut tmp) {
+                Ok(0) => break,
+                Ok(n) => {
+                    buf.extend_from_slice(&tmp[..n]);
+                    let mut input = buf.as_slice();
+                    if let Ok(f) =
+                        super::super::codec::decode_frame(&mut input)
+                    {
+                        return (f.kind, f.payload.to_vec());
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        panic!("no reply frame from registrar");
+    }
+
+    #[test]
+    fn duplicate_join_is_rejected_without_aborting_the_rendezvous() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let limit = Instant::now() + Duration::from_secs(10);
+        let mut slots: Vec<Option<TcpCtrl>> = vec![None, None];
+
+        // first claimer of rank 0 is admitted
+        let t0 = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut frame = Vec::new();
+            encode_frame_into(kind::JOIN, 0, 0, &[], &mut frame);
+            s.write_all(&frame).unwrap();
+            s // keep the socket open
+        });
+        let mut admitted = false;
+        for _ in 0..500 {
+            if accept_one_join(&listener, &mut slots, limit).unwrap() {
+                admitted = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(admitted);
+        assert!(slots[0].is_some());
+        let _held = t0.join().unwrap();
+
+        // a second claimer of rank 0 (a botched respawn) is REJECTed by
+        // name — and the already-admitted rank is untouched
+        let dup = std::thread::spawn(move || raw_join(addr, 0));
+        for _ in 0..500 {
+            // returns false: the duplicate was rejected, not admitted
+            if accept_one_join(&listener, &mut slots, limit).unwrap() {
+                panic!("duplicate JOIN was admitted");
+            }
+            if dup.is_finished() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let (k, payload) = dup.join().unwrap();
+        assert_eq!(k, kind::REJECT);
+        let reason = String::from_utf8_lossy(&payload);
+        assert!(reason.contains("already joined"), "{reason}");
+        assert!(slots[0].is_some(), "original rank must stay connected");
+
+        // an out-of-range claim is rejected the same way
+        let oob = std::thread::spawn(move || raw_join(addr, 7));
+        for _ in 0..500 {
+            if accept_one_join(&listener, &mut slots, limit).unwrap() {
+                panic!("out-of-range JOIN was admitted");
+            }
+            if oob.is_finished() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let (k, payload) = oob.join().unwrap();
+        assert_eq!(k, kind::REJECT);
+        assert!(
+            String::from_utf8_lossy(&payload).contains("out of range")
+        );
+    }
+
+    #[test]
+    fn worker_join_surfaces_a_reject_cleanly() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, peer) = listener.accept().unwrap();
+            let mut c = DriverCtrl::new(
+                stream,
+                format!("worker at {peer}"),
+                DeadlineOnly,
+            )
+            .unwrap();
+            let (k, token, _p) = c.recv(Duration::from_secs(10)).unwrap();
+            assert_eq!(k, kind::JOIN);
+            assert_eq!(token, 3);
+            reject_join(c, "rank 3 already joined this fabric");
+        });
+        let err = worker_join(&addr, 3, Duration::from_secs(10))
+            .err()
+            .expect("rejected join must error");
+        assert!(err.contains("rejected"), "{err}");
+        assert!(err.contains("already joined"), "{err}");
+        server.join().unwrap();
     }
 }

@@ -1,10 +1,11 @@
 //! **Socket-generic framed worker loop** — the one implementation of
 //! buffered non-blocking framed IO, per-channel token validation, SEED
-//! shipping, and the two-wave counter termination protocol that both
-//! socket backends run on. [`super::process`] instantiates it over
-//! `UnixStream`s between forked workers; [`super::tcp`] instantiates the
-//! exact same code over `TcpStream`s between hosts. There is no second
-//! copy of the framing or termination logic anywhere.
+//! shipping, the two-wave counter termination protocol, and the
+//! checkpoint/restore leg that both socket backends run on.
+//! [`super::process`] instantiates it over `UnixStream`s between forked
+//! workers; [`super::tcp`] instantiates the exact same code over
+//! `TcpStream`s between hosts. There is no second copy of the framing or
+//! termination logic anywhere.
 //!
 //! Split of responsibilities:
 //!
@@ -14,33 +15,71 @@
 //!   *it* — the classic all-to-all deadlock cannot form).
 //! * [`PeerConn`] — a mesh connection plus the channel's cumulative
 //!   send/receive message counters (the termination tokens stamped into
-//!   and validated against every MSGS frame).
+//!   and validated against every MSGS frame — **wrapping** mod 2^64, so
+//!   arbitrarily long resumable epochs stay consistent) and a `failed`
+//!   marker: on a resilient epoch a dead peer parks the channel instead
+//!   of aborting the worker.
 //! * [`SocketTransport`] — the [`Transport`] a worker's outbox flushes
 //!   into: rank-local batches short-circuit through an in-process queue,
-//!   remote batches are framed and queued on the peer connection.
+//!   remote batches are framed (stamped with the current recovery
+//!   *generation*) and queued on the peer connection.
 //! * [`worker_epoch`] — the worker side of one epoch: decode the actor
 //!   from its SEED payload ([`FabricActor::read_seed`] — inputs arrive
-//!   over the wire, never through fork copy-on-write), run the message
-//!   loop to Stop, ship the result state back in a STATE frame.
-//! * [`DriverCtrl`] + [`drive_to_stop`] + [`collect_state`] — the driver
-//!   side: blocking framed control channels with per-step deadlines (a
-//!   [`Liveness`] hook decides whether an expired deadline re-arms — the
-//!   process backend checks `waitpid`, the tcp backend fails fast with a
-//!   clear timeout), probe waves to quiescence, idle rounds, Stop, and
-//!   result-state collection.
+//!   over the wire, never through fork copy-on-write), optionally overlay
+//!   a checkpoint record (resume), run the message loop to Stop under
+//!   driver control, and ship the result state back in a STATE frame.
+//! * [`DriverCtrl`] + [`drive_to_stop`] / [`drive_resilient`] +
+//!   [`collect_state`] — the driver side: blocking framed control
+//!   channels with per-step deadlines (a [`Liveness`] hook decides
+//!   whether an expired deadline re-arms — the process backend checks
+//!   `waitpid`, the tcp backend fails fast; re-arms are **capped** so a
+//!   half-dead peer cannot hang the driver forever), probe waves to
+//!   quiescence, idle rounds, Stop, and result-state collection.
 //!
-//! Termination (two-wave counter protocol): the driver polls every
-//! worker with PROBE frames; each worker replies with its monotone
-//! `(sent, delivered)` totals. When `Σsent == Σdelivered` for two
-//! consecutive waves with unchanged totals, there was a real instant
-//! between the waves at which every channel was empty and every worker
-//! idle — no message existed anywhere, so none can ever be sent again
-//! without driver action. The driver then runs a global idle round
-//! (IDLE → `on_idle` → flush → ack), re-probes to quiescence, and stops
-//! once an idle round produces no new sends — the exact epoch semantics
-//! of the sequential and threaded schedulers.
+//! # Termination (two-wave counter protocol)
+//!
+//! The driver polls every worker with PROBE frames; each worker replies
+//! with its monotone `(sent, delivered)` totals. When `Σsent ==
+//! Σdelivered` for two consecutive waves with unchanged totals, there was
+//! a real instant between the waves at which every channel was empty and
+//! every worker idle — no message existed anywhere, so none can ever be
+//! sent again without driver action. The driver then runs a global idle
+//! round (IDLE → `on_idle` → flush → ack), re-probes to quiescence, and
+//! stops once an idle round produces no new sends — the exact epoch
+//! semantics of the sequential and threaded schedulers.
+//!
+//! # Checkpointed (resilient) epochs
+//!
+//! When the SEED spec marks the epoch resilient, the seed context is not
+//! run up front: the driver feeds it in chunks (STEP frames →
+//! [`FabricActor::seed_range`] → STEP_ACK with the remaining unit
+//! count); chunk `k+1`'s seeding overlaps chunk `k`'s message storm. At
+//! the checkpoint cadence the driver first drives idle rounds to
+//! stability (draining every partial fan/batch buffer — a **true
+//! barrier**: no message in any channel, every `sent_seq(i→j)` equal to
+//! the matching `recv_seq(j←i)`),
+//! then broadcasts CKPT; each worker freezes actor state + input
+//! frontier + channel tokens into a [`CheckpointRecord`] through its
+//! [`FabricHooks`] (file on tcp, inline ack payload on the process
+//! backend) and keeps an in-memory copy as its rollback target.
+//!
+//! Recovery rolls **every** rank back to that barrier: survivors receive
+//! PAUSE (drain writes so only whole frames are on the wire, drop the
+//! dead peer's connection, accept the replacement's re-mesh dial via
+//! [`FabricHooks::accept_replacement`]), then RESTORE (reload the
+//! rollback record, reset channel tokens to the barrier's values, bump
+//! the recovery generation). Frames from the abandoned generation that
+//! are still buffered in a surviving channel are identified by the frame
+//! header's generation qualifier and discarded — they can never collide
+//! with the resumed token sequence. The replacement is constructed from
+//! a fresh SEED whose resume leg names its predecessor's record; the
+//! storm then replays from the recorded frontier and re-converges
+//! bit-identically because sketch merges commute.
+//!
+//! [`CheckpointRecord`]: crate::snapshot::CheckpointRecord
 
 #![allow(clippy::type_complexity)]
+#![allow(clippy::too_many_arguments)]
 
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
@@ -48,12 +87,13 @@ use std::time::{Duration, Instant};
 
 use super::codec::{
     decode_frame, decode_msgs, decode_policy, encode_frame_into,
-    encode_msg_frame, encode_policy_into, frame_len, get_u32, get_u64,
+    encode_msg_frame_gen, encode_policy_into, frame_len, get_u32, get_u64,
     put_u32, put_u64, put_u8, WireError, WireMsg, FRAME_HEADER_LEN,
 };
 use super::outbox::FlushPolicy;
 use super::transport::{flush_outbox, Transport};
-use super::{CommStats, FabricActor, Outbox, RankStats, WireActor};
+use super::{Chaos, CommStats, FabricActor, Outbox, RankStats, WireActor};
+use crate::snapshot::checkpoint::CheckpointRecord;
 
 /// Frame kinds on the wire (mesh, control, and rendezvous channels).
 pub(crate) mod kind {
@@ -71,7 +111,8 @@ pub(crate) mod kind {
     /// followed by the actor state bytes.
     pub const STATE: u8 = 5;
     /// Driver → worker: epoch inputs — actor kind, flush policy,
-    /// warm-start seeds, and the [`FabricActor::write_seed`] bytes.
+    /// warm-start seeds, epoch spec (+ resume leg), and the
+    /// [`FabricActor::write_seed`] bytes.
     pub const SEED: u8 = 6;
     /// Worker → registrar: "I am rank `token`" (tcp rendezvous step 1).
     pub const JOIN: u8 = 7;
@@ -79,19 +120,63 @@ pub(crate) mod kind {
     pub const WELCOME: u8 = 8;
     /// Worker → registrar: "listener bound at <payload addr>".
     pub const BOUND: u8 = 9;
-    /// Registrar → worker: final map — go form the mesh.
+    /// Registrar → worker: final map — go form the mesh. Also sent to a
+    /// respawned worker (token = recovery generation) so it can dial the
+    /// survivors directly (incremental re-mesh).
     pub const MESH: u8 = 10;
-    /// Dialing worker → accepting worker: "I am rank `token`".
+    /// Dialing worker → accepting worker: "I am rank `token`". A
+    /// re-mesh dial carries the recovery generation as a u64 payload.
     pub const HELLO: u8 = 11;
-    /// Worker → registrar: mesh complete, ready for epochs.
+    /// Worker → registrar: mesh complete, ready for epochs. A respawned
+    /// worker's MESHED carries its (new) mesh listener address.
     pub const MESHED: u8 = 12;
     /// Driver → worker: no more epochs, exit cleanly.
     pub const SHUTDOWN: u8 = 13;
+    /// Driver → worker (resilient epochs): seed the next `n` input
+    /// units (payload `[u64 n]`, token = wave id).
+    pub const STEP: u8 = 14;
+    /// Worker → driver: chunk done, `[u64 remaining]` units left.
+    pub const STEP_ACK: u8 = 15;
+    /// Driver → worker: freeze a checkpoint record (payload
+    /// `[u64 epoch, u64 gen, u64 barrier]`, token = wave id).
+    pub const CKPT: u8 = 16;
+    /// Worker → driver: checkpoint stored; payload is the record itself
+    /// (process backend) or the file path (tcp backend).
+    pub const CKPT_ACK: u8 = 17;
+    /// Driver → survivor: a rank died — park (payload
+    /// `[u64 dead_rank, u64 gen, u64 restore_barrier]`, token = gen).
+    pub const PAUSE: u8 = 18;
+    /// Survivor → driver: parked, writes drained.
+    pub const PAUSE_ACK: u8 = 19;
+    /// Driver → worker: roll back to the last barrier and resume.
+    pub const RESTORE: u8 = 20;
+    /// Worker → driver: rollback applied, storm may resume.
+    pub const RESTORED: u8 = 21;
+    /// Survivor → driver: the replacement's re-mesh dial was accepted.
+    pub const REMESHED: u8 = 22;
+    /// Registrar → worker: join refused (payload = reason) — e.g. a
+    /// duplicate claim on an already-connected rank.
+    pub const REJECT: u8 = 23;
+    /// Driver → worker: barrier `token` was acknowledged by **all**
+    /// ranks — promote it to the rollback target. Until the commit, a
+    /// stored barrier stays pending: a rank that died mid-barrier may
+    /// have skipped it, so recovery names the exact barrier to restore.
+    pub const CKPT_COMMIT: u8 = 24;
 }
 
 /// How long a blocked control-channel read may go silent before the
 /// driver consults its [`Liveness`] hook. Generous: CI machines stall.
 pub(crate) const CTRL_DEADLINE: Duration = Duration::from_secs(120);
+
+/// Default cap on consecutive [`Liveness`] re-arms of an expired control
+/// deadline (`comm.liveness_rearms`): a peer that is nominally alive but
+/// never produces a frame is declared dead after this many extensions
+/// instead of hanging the driver forever.
+pub(crate) const DEFAULT_REARM_CAP: u32 = 10;
+
+/// Worker-side error message used by injected chaos faults (the process
+/// backend maps it to an abrupt `_exit`, mimicking SIGKILL).
+pub(crate) const CHAOS_ABORT: &str = "chaos: injected fault — dying mid-epoch";
 
 /// The stream capabilities the socket loop needs — implemented by
 /// `UnixStream` (process backend) and `TcpStream` (tcp backend).
@@ -298,6 +383,46 @@ impl<S: SocketLike> Conn<S> {
         }
         Ok(())
     }
+
+    /// Park the write side at a frame boundary: finish the partially
+    /// written front frame (if any), then drop every remaining queued
+    /// frame. Used when pausing for recovery — the dropped frames are
+    /// post-barrier traffic that the rollback regenerates, and pushing
+    /// only the bounded front remainder (instead of the whole queue,
+    /// which `pump_write` would greedily keep feeding) cannot deadlock
+    /// against a peer that has already parked and stopped reading.
+    pub fn park_writes_at_frame_boundary(
+        &mut self,
+        what: &str,
+    ) -> Result<(), String> {
+        if self.wpos > 0 {
+            if let Some(front) = self.wqueue.front() {
+                while self.wpos < front.len() {
+                    match self.stream.write(&front[self.wpos..]) {
+                        Ok(0) => {
+                            return Err(format!(
+                                "{what}: write returned 0"
+                            ))
+                        }
+                        Ok(n) => self.wpos += n,
+                        Err(e)
+                            if e.kind() == ErrorKind::WouldBlock
+                                || e.kind() == ErrorKind::TimedOut =>
+                        {
+                            std::thread::sleep(Duration::from_micros(100));
+                        }
+                        Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                        Err(e) => {
+                            return Err(format!("{what}: write: {e}"))
+                        }
+                    }
+                }
+            }
+        }
+        self.wqueue.clear();
+        self.wpos = 0;
+        Ok(())
+    }
 }
 
 /// Poll `ctrl` until one complete control frame is available and return
@@ -358,12 +483,16 @@ pub(crate) struct PeerConn<S> {
     pub conn: Conn<S>,
     /// `"peer <rank>"`, precomputed for error paths.
     label: String,
-    /// Cumulative messages sent on this channel this epoch — the token
-    /// stamped into each outbound MSGS frame.
+    /// Cumulative messages sent on this channel this epoch (wrapping
+    /// mod 2^64) — the token stamped into each outbound MSGS frame.
     sent_seq: u64,
     /// Cumulative messages received this epoch; each inbound token must
-    /// equal `recv_seq + batch len` (FIFO channel, no loss, no reorder).
+    /// equal `recv_seq.wrapping_add(batch len)` (FIFO channel, no loss,
+    /// no reorder, wraparound-safe).
     recv_seq: u64,
+    /// Set when the peer died mid-epoch on a resilient run: the channel
+    /// parks (reads skip, sends drop) until recovery replaces it.
+    failed: Option<String>,
 }
 
 impl<S: SocketLike> PeerConn<S> {
@@ -373,14 +502,16 @@ impl<S: SocketLike> PeerConn<S> {
             label: format!("peer {peer_rank}"),
             sent_seq: 0,
             recv_seq: 0,
+            failed: None,
         }
     }
 
     /// Reset the per-epoch token counters (mesh connections persist
-    /// across epochs on the tcp backend).
-    fn reset_epoch(&mut self) {
-        self.sent_seq = 0;
-        self.recv_seq = 0;
+    /// across epochs on the tcp backend). A resumed epoch re-bases them
+    /// at the checkpoint barrier's recorded values.
+    fn reset_epoch(&mut self, sent_seq: u64, recv_seq: u64) {
+        self.sent_seq = sent_seq;
+        self.recv_seq = recv_seq;
         debug_assert_eq!(
             self.conn.pending_read_bytes(),
             0,
@@ -402,6 +533,11 @@ struct SocketTransport<'a, S, M> {
     scratch: Vec<u8>,
     /// First I/O error hit inside `ship` (surfaced by `check`).
     io_error: Option<String>,
+    /// Recovery generation stamped into outbound MSGS frames.
+    gen: u16,
+    /// Resilient epoch: peer failures park the channel instead of
+    /// aborting, and stale-generation frames are discarded.
+    resilient: bool,
 }
 
 impl<S: SocketLike, M: WireMsg> SocketTransport<'_, S, M> {
@@ -414,40 +550,91 @@ impl<S: SocketLike, M: WireMsg> SocketTransport<'_, S, M> {
 
     fn pump_all(&mut self) -> Result<bool, String> {
         let mut progressed = false;
+        let resilient = self.resilient;
         for peer in self.peers.iter_mut().flatten() {
-            progressed |= peer.conn.pump_write(&peer.label)?;
+            if peer.failed.is_some() {
+                continue;
+            }
+            match peer.conn.pump_write(&peer.label) {
+                Ok(p) => progressed |= p,
+                Err(e) if resilient => peer.failed = Some(e),
+                Err(e) => return Err(e),
+            }
         }
         Ok(progressed)
     }
 
     /// Read and decode every complete inbound frame from `p`.
-    /// Returns `(batch, frame bytes)` pairs in arrival order.
+    /// Returns `(batch, frame bytes)` pairs in arrival order. On a
+    /// resilient epoch a dead peer parks its channel (empty result);
+    /// frames stamped with an older recovery generation are discarded.
     fn read_frames(&mut self, p: usize) -> Result<Vec<(Vec<M>, u64)>, String> {
-        let peer = self.peers[p].as_mut().expect("no self/missing peer");
-        let what = peer.label.as_str();
-        let outcome = peer.conn.fill(what)?;
-        if outcome.eof {
-            return Err(format!("{what}: peer closed"));
+        let resilient = self.resilient;
+        let my_gen = self.gen;
+        let Some(peer) = self.peers[p].as_mut() else {
+            // the slot is empty only while recovery is replacing it
+            return Ok(Vec::new());
+        };
+        if peer.failed.is_some() {
+            return Ok(Vec::new());
         }
+        let outcome = match peer.conn.fill(&peer.label) {
+            Ok(o) => o,
+            Err(e) if resilient => {
+                peer.failed = Some(e);
+                return Ok(Vec::new());
+            }
+            Err(e) => return Err(e),
+        };
+        if outcome.eof {
+            let msg = format!("{}: peer closed", peer.label);
+            if resilient {
+                peer.failed = Some(msg);
+                return Ok(Vec::new());
+            }
+            return Err(msg);
+        }
+        let what = peer.label.as_str();
         let mut out = Vec::new();
         while let Some(total) = peer.conn.next_frame_bytes(what)? {
-            let mut input = peer.conn.frame_at_cursor(total);
-            let frame =
-                decode_frame(&mut input).map_err(|e| format!("{what}: {e}"))?;
-            if frame.kind != kind::MSGS {
+            let (fgen, ftoken, msgs) = {
+                let mut input = peer.conn.frame_at_cursor(total);
+                let frame = decode_frame(&mut input)
+                    .map_err(|e| format!("{what}: {e}"))?;
+                if frame.kind != kind::MSGS {
+                    return Err(format!(
+                        "{what}: unexpected frame kind {}",
+                        frame.kind
+                    ));
+                }
+                if frame.gen != my_gen {
+                    (frame.gen, frame.token, None)
+                } else {
+                    let msgs: Vec<M> = decode_msgs(&frame)
+                        .map_err(|e| format!("{what}: {e}"))?;
+                    (frame.gen, frame.token, Some(msgs))
+                }
+            };
+            let Some(msgs) = msgs else {
+                if fgen < my_gen {
+                    // a whole frame from an abandoned incarnation —
+                    // fully written before its sender rolled back (it
+                    // may even straggle into the NEXT epoch over a
+                    // persistent mesh connection); discard without
+                    // touching the current token sequence
+                    peer.conn.consume(total);
+                    continue;
+                }
                 return Err(format!(
-                    "{what}: unexpected frame kind {}",
-                    frame.kind
+                    "{what}: frame generation {fgen} is ahead of this \
+                     worker's recovery generation {my_gen}"
                 ));
-            }
-            let msgs: Vec<M> =
-                decode_msgs(&frame).map_err(|e| format!("{what}: {e}"))?;
-            let expect = peer.recv_seq + msgs.len() as u64;
-            if frame.token != expect {
+            };
+            let expect = peer.recv_seq.wrapping_add(msgs.len() as u64);
+            if ftoken != expect {
                 return Err(format!(
                     "{what}: termination token mismatch \
-                     (expected {expect}, got {})",
-                    frame.token
+                     (expected {expect}, got {ftoken})"
                 ));
             }
             peer.recv_seq = expect;
@@ -456,6 +643,87 @@ impl<S: SocketLike, M: WireMsg> SocketTransport<'_, S, M> {
         }
         peer.conn.compact();
         Ok(out)
+    }
+
+    /// Park every live peer channel at a frame boundary (see
+    /// [`Conn::park_writes_at_frame_boundary`]): each stream toward a
+    /// survivor ends on a whole frame, so the peer's parser stays
+    /// aligned across the rollback; the dropped queue contents are
+    /// regenerated from the barrier. Reads are filled once per peer so
+    /// a pair of mutually parking ranks keeps making progress.
+    fn park_live_writes(&mut self) -> Result<(), String> {
+        for peer in self.peers.iter_mut().flatten() {
+            if peer.failed.is_some() {
+                continue;
+            }
+            match peer.conn.fill(&peer.label) {
+                Ok(o) => {
+                    if o.eof {
+                        peer.failed =
+                            Some(format!("{}: peer closed", peer.label));
+                        continue;
+                    }
+                }
+                Err(e) => {
+                    peer.failed = Some(e);
+                    continue;
+                }
+            }
+            if let Err(e) =
+                peer.conn.park_writes_at_frame_boundary(&peer.label)
+            {
+                peer.failed = Some(e);
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop a dead peer's connection (its queued writes and buffered
+    /// reads die with it).
+    fn drop_peer(&mut self, p: usize) {
+        self.peers[p] = None;
+    }
+
+    /// Install the replacement connection for a recovered rank.
+    fn install_peer(&mut self, p: usize, peer: PeerConn<S>) {
+        self.peers[p] = Some(peer);
+    }
+
+    /// Roll the transport back to a checkpoint barrier: new generation,
+    /// restored totals and per-channel tokens, cleared self lanes.
+    fn restore(&mut self, gen: u64, sent_total: u64, channels: &[(u64, u64)]) {
+        self.gen = (gen & 0xFFFF) as u16;
+        self.sent = sent_total;
+        self.selfq.clear();
+        self.io_error = None;
+        for (p, peer) in self.peers.iter_mut().enumerate() {
+            if let Some(peer) = peer {
+                peer.sent_seq = channels[p].0;
+                peer.recv_seq = channels[p].1;
+            }
+        }
+    }
+
+    /// Current per-peer `(sent_seq, recv_seq)` token vector (self and
+    /// empty slots report `(0, 0)`).
+    fn channel_tokens(&self) -> Vec<(u64, u64)> {
+        self.peers
+            .iter()
+            .map(|p| {
+                p.as_ref().map_or((0, 0), |pc| (pc.sent_seq, pc.recv_seq))
+            })
+            .collect()
+    }
+
+    /// Lowest-ranked peer whose channel has parked as failed, if any —
+    /// reported to the driver in every REPORT frame so a dead *link*
+    /// between two alive workers (connection reset with both processes
+    /// healthy) is attributed and recovered instead of leaving the
+    /// driver waiting forever on totals that can no longer balance.
+    fn first_failed_peer(&self) -> Option<usize> {
+        self.peers.iter().position(|p| {
+            p.as_ref().is_some_and(|pc| pc.failed.is_some())
+        })
     }
 }
 
@@ -469,12 +737,22 @@ impl<S: SocketLike, M: WireMsg> Transport<M> for SocketTransport<'_, S, M> {
             self.selfq.push_back(batch);
             return;
         }
-        let peer = self.peers[to].as_mut().expect("missing peer");
-        peer.sent_seq += batch.len() as u64;
+        let resilient = self.resilient;
+        let gen = self.gen;
+        let Some(peer) = self.peers[to].as_mut() else {
+            return;
+        };
+        if peer.failed.is_some() {
+            // the rank is dead: recovery rolls the epoch back to the
+            // last barrier, where this batch is regenerated — drop it
+            return;
+        }
+        peer.sent_seq = peer.sent_seq.wrapping_add(batch.len() as u64);
         let mut frame =
             Vec::with_capacity(FRAME_HEADER_LEN + 16 * batch.len());
-        encode_msg_frame(
+        encode_msg_frame_gen(
             kind::MSGS,
+            gen,
             peer.sent_seq,
             &batch,
             &mut self.scratch,
@@ -482,7 +760,9 @@ impl<S: SocketLike, M: WireMsg> Transport<M> for SocketTransport<'_, S, M> {
         );
         peer.conn.queue_frame(frame);
         if let Err(e) = peer.conn.pump_write(&peer.label) {
-            if self.io_error.is_none() {
+            if resilient {
+                peer.failed = Some(e);
+            } else if self.io_error.is_none() {
                 self.io_error = Some(e);
             }
         }
@@ -493,14 +773,63 @@ impl<S: SocketLike, M: WireMsg> Transport<M> for SocketTransport<'_, S, M> {
 // SEED payloads
 // ---------------------------------------------------------------------
 
+/// Where a resumed worker's checkpoint record comes from.
+#[derive(Debug, Clone)]
+pub(crate) enum ResumeSrc {
+    /// Fresh epoch start (or recovery with no barrier yet: replay from
+    /// the top).
+    None,
+    /// The record rides inside the SEED payload (process backend — the
+    /// driver holds every rank's latest record).
+    Inline(Vec<u8>),
+    /// The worker loads the record itself (tcp `--resume <file>`).
+    File,
+}
+
+/// The per-epoch execution spec carried by every SEED frame.
+#[derive(Debug, Clone)]
+pub(crate) struct EpochSpec {
+    /// Checkpointed execution: chunked seed, barriers, rollback.
+    pub resilient: bool,
+    /// Seed units per STEP chunk (informational; STEP frames carry the
+    /// live value).
+    pub chunk: u64,
+    /// Fabric epoch id (resume validation).
+    pub epoch: u64,
+    /// Recovery generation this SEED belongs to.
+    pub gen: u64,
+    /// The barrier the resume record must come from (0 when `resume`
+    /// is [`ResumeSrc::None`]).
+    pub resume_barrier: u64,
+    /// Resume leg.
+    pub resume: ResumeSrc,
+}
+
+impl EpochSpec {
+    /// A plain, non-resilient epoch (the pre-fault-tolerance behavior).
+    #[cfg(test)]
+    pub(crate) fn plain() -> Self {
+        Self {
+            resilient: false,
+            chunk: 0,
+            epoch: 1,
+            gen: 0,
+            resume_barrier: 0,
+            resume: ResumeSrc::None,
+        }
+    }
+}
+
 /// The non-actor half of a SEED frame: which actor kind to construct,
-/// and the outbox flush policy (+ per-destination warm-start seeds) the
-/// worker's epoch runs under — everything a remote worker needs that
-/// used to ride fork copy-on-write.
+/// the outbox flush policy (+ per-destination warm-start seeds) the
+/// worker's epoch runs under, and the epoch spec (checkpointing +
+/// resume) — everything a remote worker needs that used to ride fork
+/// copy-on-write.
 pub(crate) struct SeedHead {
     pub actor_kind: String,
     pub policy: FlushPolicy,
     pub seeds: Vec<usize>,
+    pub spec: EpochSpec,
 }
 
 /// Encode a full SEED payload for one worker.
@@ -508,6 +837,7 @@ pub(crate) fn encode_seed<A: FabricActor>(
     actor: &A,
     policy: FlushPolicy,
     seeds: &[usize],
+    spec: &EpochSpec,
 ) -> Vec<u8> {
     let mut out = Vec::new();
     let kind_bytes = A::KIND.as_bytes();
@@ -518,6 +848,20 @@ pub(crate) fn encode_seed<A: FabricActor>(
     put_u32(&mut out, seeds.len() as u32);
     for &s in seeds {
         put_u64(&mut out, s as u64);
+    }
+    put_u8(&mut out, u8::from(spec.resilient));
+    put_u64(&mut out, spec.chunk);
+    put_u64(&mut out, spec.epoch);
+    put_u64(&mut out, spec.gen);
+    put_u64(&mut out, spec.resume_barrier);
+    match &spec.resume {
+        ResumeSrc::None => put_u8(&mut out, 0),
+        ResumeSrc::Inline(bytes) => {
+            put_u8(&mut out, 1);
+            put_u64(&mut out, bytes.len() as u64);
+            out.extend_from_slice(bytes);
+        }
+        ResumeSrc::File => put_u8(&mut out, 2),
     }
     actor.write_seed(&mut out);
     out
@@ -538,29 +882,173 @@ pub(crate) fn split_seed(payload: &[u8]) -> Result<(SeedHead, &[u8]), String> {
     for _ in 0..n {
         seeds.push(get_u64(&mut input).map_err(err)? as usize);
     }
+    let resilient = match super::codec::get_u8(&mut input).map_err(err)? {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(format!("bad seed frame: resilient byte {other}"))
+        }
+    };
+    let chunk = get_u64(&mut input).map_err(err)?;
+    let epoch = get_u64(&mut input).map_err(err)?;
+    let gen = get_u64(&mut input).map_err(err)?;
+    let resume_barrier = get_u64(&mut input).map_err(err)?;
+    let resume = match super::codec::get_u8(&mut input).map_err(err)? {
+        0 => ResumeSrc::None,
+        1 => {
+            let len = get_u64(&mut input).map_err(err)? as usize;
+            let bytes = super::codec::take(&mut input, len).map_err(err)?;
+            ResumeSrc::Inline(bytes.to_vec())
+        }
+        2 => ResumeSrc::File,
+        other => return Err(format!("bad seed frame: resume tag {other}")),
+    };
     Ok((
         SeedHead {
             actor_kind,
             policy,
             seeds,
+            spec: EpochSpec {
+                resilient,
+                chunk,
+                epoch,
+                gen,
+                resume_barrier,
+                resume,
+            },
         },
         input,
     ))
 }
 
 // ---------------------------------------------------------------------
+// Worker-side backend hooks (checkpoint storage + re-mesh accept)
+// ---------------------------------------------------------------------
+
+/// What the socket-generic worker loop delegates to its backend: where
+/// checkpoint records live, and how the replacement of a dead rank is
+/// re-meshed in. The tcp backend writes files and accepts re-mesh dials
+/// on its retained listener; the process backend ships records to the
+/// driver inline and is respawned whole, so its hooks never accept.
+pub(crate) trait FabricHooks<S> {
+    /// Persist one checkpoint record taken at barrier `barrier` of
+    /// `epoch`; returns the CKPT_ACK payload (the record itself inline,
+    /// or the file path it was written to).
+    fn store_checkpoint(
+        &mut self,
+        epoch: u64,
+        barrier: u64,
+        record: &[u8],
+    ) -> Result<Vec<u8>, String>;
+
+    /// Barrier `barrier` was acknowledged fabric-wide: earlier barriers
+    /// can never be restore targets again (best-effort cleanup hook).
+    fn commit_checkpoint(&mut self, epoch: u64, barrier: u64);
+
+    /// Produce the resume record for barrier `barrier` when the SEED
+    /// names [`ResumeSrc::File`].
+    fn load_resume(&mut self, epoch: u64, barrier: u64)
+        -> Result<Vec<u8>, String>;
+
+    /// Accept the respawned rank `failed`'s re-mesh dial (HELLO carrying
+    /// generation `gen`) and return the new connection.
+    fn accept_replacement(
+        &mut self,
+        failed: usize,
+        gen: u64,
+        deadline: Duration,
+    ) -> Result<Conn<S>, String>;
+}
+
+// ---------------------------------------------------------------------
 // Worker epoch loop
 // ---------------------------------------------------------------------
 
+/// Freeze the actor + counters into a checkpoint record.
+fn snapshot_record<A: FabricActor>(
+    actor: &A,
+    rank: usize,
+    ranks: usize,
+    epoch: u64,
+    generation: u64,
+    barrier: u64,
+    pos: u64,
+    sent: u64,
+    delivered: u64,
+    frames_in: u64,
+    bytes_in: u64,
+    channels: Vec<(u64, u64)>,
+) -> CheckpointRecord {
+    let mut state = Vec::new();
+    actor.write_state(&mut state);
+    CheckpointRecord {
+        epoch,
+        generation,
+        barrier,
+        rank: rank as u32,
+        ranks: ranks as u32,
+        pos,
+        sent_total: sent,
+        delivered_total: delivered,
+        frames_in,
+        bytes_in,
+        kind: A::KIND.to_string(),
+        channels,
+        state,
+    }
+}
+
+/// Validate a resume record against this worker's identity, epoch, and
+/// the barrier recovery named.
+fn validate_record<A: FabricActor>(
+    rec: &CheckpointRecord,
+    rank: usize,
+    ranks: usize,
+    spec: &EpochSpec,
+) -> Result<(), String> {
+    if rec.kind != A::KIND {
+        return Err(format!(
+            "resume record is for actor kind {:?}, this epoch runs {:?}",
+            rec.kind,
+            A::KIND
+        ));
+    }
+    if rec.rank as usize != rank || rec.ranks as usize != ranks {
+        return Err(format!(
+            "resume record is for rank {}/{} but this worker is rank \
+             {rank}/{ranks}",
+            rec.rank, rec.ranks
+        ));
+    }
+    if rec.epoch != spec.epoch {
+        return Err(format!(
+            "resume record is from fabric epoch {}, this epoch is {}",
+            rec.epoch, spec.epoch
+        ));
+    }
+    if rec.barrier != spec.resume_barrier {
+        return Err(format!(
+            "resume record is from barrier {}, but recovery restores \
+             barrier {}",
+            rec.barrier, spec.resume_barrier
+        ));
+    }
+    Ok(())
+}
+
 /// Run one epoch on the worker side of a socket backend: construct the
-/// actor from its wire seed, run seed → message storm → idle rounds →
-/// Stop under driver control, and ship the result state back.
+/// actor from its wire seed (overlaying a checkpoint record when
+/// resuming), run seed → message storm → idle rounds → Stop under driver
+/// control, and ship the result state back. Resilient epochs additionally
+/// serve STEP / CKPT / PAUSE / RESTORE frames (see module docs).
 pub(crate) fn worker_epoch<A, S>(
     rank: usize,
     head: &SeedHead,
     actor_seed: &[u8],
     ctrl: &mut Conn<S>,
     peers: &mut [Option<PeerConn<S>>],
+    hooks: &mut dyn FabricHooks<S>,
+    chaos: Option<Chaos>,
 ) -> Result<(), String>
 where
     A: FabricActor,
@@ -568,6 +1056,7 @@ where
     S: SocketLike,
 {
     let ranks = peers.len();
+    let spec = &head.spec;
     let mut input = actor_seed;
     let mut actor = A::read_seed(&mut input)
         .map_err(|e| format!("seed decode for {:?}: {e}", A::KIND))?;
@@ -578,29 +1067,108 @@ where
             input.len()
         ));
     }
-    for peer in peers.iter_mut().flatten() {
-        peer.reset_epoch();
+    let input_len = actor.input_len() as u64;
+
+    // Resume overlay (respawned tcp worker / re-forked process worker).
+    let mut gen: u64 = spec.gen;
+    let mut pos: u64 = 0;
+    let mut delivered = 0u64;
+    let mut frames_in = 0u64;
+    let mut bytes_in = 0u64;
+    let mut sent_restore = 0u64;
+    let mut chan_tokens: Vec<(u64, u64)> = vec![(0, 0); ranks];
+    // The rollback targets: the last fabric-committed barrier record,
+    // and the pending (stored-but-uncommitted) one. Recovery names the
+    // exact barrier to restore, which is always one of these.
+    let mut committed: Option<(u64, Vec<u8>)> = None;
+    let mut pending: Option<(u64, Vec<u8>)> = None;
+    let resume_bytes: Option<Vec<u8>> = match &spec.resume {
+        ResumeSrc::None => None,
+        ResumeSrc::Inline(bytes) => Some(bytes.clone()),
+        ResumeSrc::File => {
+            Some(hooks.load_resume(spec.epoch, spec.resume_barrier)?)
+        }
+    };
+    if let Some(bytes) = resume_bytes {
+        let rec = CheckpointRecord::decode(&bytes)?;
+        validate_record::<A>(&rec, rank, ranks, spec)?;
+        let mut st = rec.state.as_slice();
+        actor
+            .read_state(&mut st)
+            .map_err(|e| format!("resume state decode: {e}"))?;
+        if !st.is_empty() {
+            return Err(format!(
+                "resume record left {} trailing state bytes",
+                st.len()
+            ));
+        }
+        pos = rec.pos;
+        sent_restore = rec.sent_total;
+        delivered = rec.delivered_total;
+        frames_in = rec.frames_in;
+        bytes_in = rec.bytes_in;
+        chan_tokens.clone_from(&rec.channels);
+        committed = Some((rec.barrier, bytes));
+    }
+    for (p, peer) in peers.iter_mut().enumerate() {
+        if let Some(peer) = peer {
+            peer.reset_epoch(chan_tokens[p].0, chan_tokens[p].1);
+        }
     }
 
     let mut tp: SocketTransport<'_, S, A::Msg> = SocketTransport {
         rank,
         peers,
         selfq: VecDeque::new(),
-        sent: 0,
+        sent: sent_restore,
         scratch: Vec::new(),
         io_error: None,
+        gen: (gen & 0xFFFF) as u16,
+        resilient: spec.resilient,
     };
     let mut outbox: Outbox<A::Msg> =
         Outbox::with_seeds(ranks, head.policy, &head.seeds);
     let mut sent_base = 0u64;
-    let mut delivered = 0u64;
-    let mut frames_in = 0u64;
-    let mut bytes_in = 0u64;
 
-    // Seed context.
-    actor.seed(&mut outbox);
-    flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
-    tp.check()?;
+    if spec.resilient {
+        if committed.is_none() {
+            // checkpoint zero: until the first barrier, recovery rolls
+            // back to the pristine pre-seed state (full replay)
+            committed = Some((
+                0,
+                snapshot_record(
+                    &actor,
+                    rank,
+                    ranks,
+                    spec.epoch,
+                    gen,
+                    0,
+                    0,
+                    0,
+                    0,
+                    0,
+                    0,
+                    vec![(0, 0); ranks],
+                )
+                .encode(),
+            ));
+        }
+    } else {
+        // Plain epoch: the whole seed context runs up front, exactly as
+        // before fault tolerance existed.
+        actor.seed(&mut outbox);
+        flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+        tp.check()?;
+    }
+
+    let chaos_hit = |delivered: u64, gen: u64| -> bool {
+        chaos.is_some_and(|c| {
+            c.rank == rank
+                && c.epoch == spec.epoch
+                && c.generation == gen
+                && delivered >= c.after_delivered
+        })
+    };
 
     let mut stop = false;
     while !stop {
@@ -621,6 +1189,9 @@ where
             frames_in += 1;
             flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
             tp.check()?;
+            if chaos_hit(delivered, gen) {
+                return Err(CHAOS_ABORT.to_string());
+            }
         }
 
         // 3. inbound peer frames
@@ -640,6 +1211,9 @@ where
                 bytes_in += nbytes;
                 flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
                 tp.check()?;
+                if chaos_hit(delivered, gen) {
+                    return Err(CHAOS_ABORT.to_string());
+                }
             }
         }
 
@@ -650,22 +1224,251 @@ where
         }
         while let Some(total) = ctrl.next_frame_bytes("ctrl")? {
             progressed = true;
-            let (fkind, ftoken) = {
+            let (fkind, ftoken, fpayload) = {
                 let mut input = ctrl.frame_at_cursor(total);
                 let frame = decode_frame(&mut input)
                     .map_err(|e| format!("ctrl: {e}"))?;
-                (frame.kind, frame.token)
+                (frame.kind, frame.token, frame.payload.to_vec())
             };
             ctrl.consume(total);
             match fkind {
                 kind::PROBE => {
-                    queue_report(ctrl, ftoken, tp.sent, delivered);
+                    queue_report(
+                        ctrl,
+                        ftoken,
+                        tp.sent,
+                        delivered,
+                        tp.first_failed_peer(),
+                    );
                 }
                 kind::IDLE => {
                     actor.on_idle(&mut outbox);
                     flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
                     tp.check()?;
-                    queue_report(ctrl, ftoken, tp.sent, delivered);
+                    queue_report(
+                        ctrl,
+                        ftoken,
+                        tp.sent,
+                        delivered,
+                        tp.first_failed_peer(),
+                    );
+                }
+                kind::STEP => {
+                    if !spec.resilient {
+                        return Err(
+                            "ctrl: STEP on a non-resilient epoch".into()
+                        );
+                    }
+                    let mut pin = fpayload.as_slice();
+                    let n = get_u64(&mut pin)
+                        .map_err(|e| format!("ctrl: bad step frame: {e}"))?;
+                    let end = pos.saturating_add(n.max(1)).min(input_len);
+                    if end > pos {
+                        actor.seed_range(
+                            pos as usize,
+                            end as usize,
+                            &mut outbox,
+                        );
+                        pos = end;
+                        flush_outbox(
+                            &mut outbox,
+                            &mut sent_base,
+                            &mut tp,
+                            true,
+                        );
+                        tp.check()?;
+                    }
+                    let mut payload = Vec::with_capacity(8);
+                    put_u64(&mut payload, input_len - pos);
+                    let mut frame =
+                        Vec::with_capacity(FRAME_HEADER_LEN + 8);
+                    encode_frame_into(
+                        kind::STEP_ACK,
+                        0,
+                        ftoken,
+                        &payload,
+                        &mut frame,
+                    );
+                    ctrl.queue_frame(frame);
+                }
+                kind::CKPT => {
+                    if !spec.resilient {
+                        return Err(
+                            "ctrl: CKPT on a non-resilient epoch".into()
+                        );
+                    }
+                    let mut pin = fpayload.as_slice();
+                    let perr =
+                        |e: WireError| format!("ctrl: bad ckpt frame: {e}");
+                    let cepoch = get_u64(&mut pin).map_err(perr)?;
+                    let cgen = get_u64(&mut pin).map_err(perr)?;
+                    let barrier = get_u64(&mut pin).map_err(perr)?;
+                    if cepoch != spec.epoch || cgen != gen {
+                        return Err(format!(
+                            "ctrl: checkpoint for epoch {cepoch} gen {cgen}, \
+                             but this worker is at epoch {} gen {gen}",
+                            spec.epoch
+                        ));
+                    }
+                    let rec = snapshot_record(
+                        &actor,
+                        rank,
+                        ranks,
+                        spec.epoch,
+                        gen,
+                        barrier,
+                        pos,
+                        tp.sent,
+                        delivered,
+                        frames_in,
+                        bytes_in,
+                        tp.channel_tokens(),
+                    );
+                    let bytes = rec.encode();
+                    let ack =
+                        hooks.store_checkpoint(spec.epoch, barrier, &bytes)?;
+                    pending = Some((barrier, bytes));
+                    let mut frame = Vec::with_capacity(
+                        FRAME_HEADER_LEN + ack.len(),
+                    );
+                    encode_frame_into(
+                        kind::CKPT_ACK,
+                        0,
+                        ftoken,
+                        &ack,
+                        &mut frame,
+                    );
+                    ctrl.queue_frame(frame);
+                }
+                kind::CKPT_COMMIT => {
+                    if !spec.resilient {
+                        return Err(
+                            "ctrl: CKPT_COMMIT on a non-resilient epoch"
+                                .into(),
+                        );
+                    }
+                    match pending.take() {
+                        Some((b, bytes)) if b == ftoken => {
+                            committed = Some((b, bytes));
+                            hooks.commit_checkpoint(spec.epoch, b);
+                        }
+                        other => {
+                            return Err(format!(
+                                "ctrl: CKPT_COMMIT for barrier {ftoken}, \
+                                 but the pending barrier is {:?}",
+                                other.map(|(b, _)| b)
+                            ));
+                        }
+                    }
+                }
+                kind::PAUSE => {
+                    if !spec.resilient {
+                        return Err(
+                            "ctrl: PAUSE on a non-resilient epoch".into()
+                        );
+                    }
+                    let mut pin = fpayload.as_slice();
+                    let perr =
+                        |e: WireError| format!("ctrl: bad pause frame: {e}");
+                    let dead = get_u64(&mut pin).map_err(perr)? as usize;
+                    let pgen = get_u64(&mut pin).map_err(perr)?;
+                    let rbarrier = get_u64(&mut pin).map_err(perr)?;
+                    if pgen != gen + 1 {
+                        return Err(format!(
+                            "ctrl: PAUSE for generation {pgen}, this worker \
+                             is at generation {gen}"
+                        ));
+                    }
+                    if dead >= ranks || dead == rank {
+                        return Err(format!(
+                            "ctrl: PAUSE names rank {dead} dead, but this \
+                             is rank {rank} of {ranks}"
+                        ));
+                    }
+                    // park: whole frames only toward every survivor,
+                    // then hand the dead channel over to recovery
+                    tp.park_live_writes()?;
+                    tp.drop_peer(dead);
+                    queue_ack(ctrl, kind::PAUSE_ACK, pgen);
+                    ctrl.drain_writes("ctrl")?;
+                    // incremental re-mesh: the replacement dials us
+                    let conn = hooks.accept_replacement(
+                        dead,
+                        pgen,
+                        CTRL_DEADLINE,
+                    )?;
+                    tp.install_peer(dead, PeerConn::new(conn, dead));
+                    queue_ack(ctrl, kind::REMESHED, pgen);
+                    ctrl.drain_writes("ctrl")?;
+                    // wait for the global rollback order
+                    let (rk, rtoken, _rp) =
+                        next_ctrl_frame(ctrl, Some(CTRL_DEADLINE))?
+                            .ok_or_else(|| {
+                                "ctrl: driver closed during recovery"
+                                    .to_string()
+                            })?;
+                    if rk != kind::RESTORE || rtoken != pgen {
+                        return Err(format!(
+                            "ctrl: expected RESTORE gen {pgen}, got kind \
+                             {rk} token {rtoken}"
+                        ));
+                    }
+                    // roll back to the barrier recovery named: it is the
+                    // last one the driver saw acknowledged by ALL ranks,
+                    // so it is either our committed record or — when the
+                    // failure raced the commit broadcast — our pending one
+                    let rec_bytes: Vec<u8> = match (&pending, &committed) {
+                        (Some((b, bytes)), _) if *b == rbarrier => {
+                            bytes.clone()
+                        }
+                        (_, Some((b, bytes))) if *b == rbarrier => {
+                            bytes.clone()
+                        }
+                        _ => {
+                            return Err(format!(
+                                "ctrl: recovery restores barrier {rbarrier}, \
+                                 but this worker holds pending {:?} / \
+                                 committed {:?}",
+                                pending.as_ref().map(|(b, _)| *b),
+                                committed.as_ref().map(|(b, _)| *b)
+                            ));
+                        }
+                    };
+                    let rec = CheckpointRecord::decode(&rec_bytes)?;
+                    let mut st = rec.state.as_slice();
+                    actor
+                        .read_state(&mut st)
+                        .map_err(|e| format!("rollback state decode: {e}"))?;
+                    if !st.is_empty() {
+                        return Err(format!(
+                            "rollback record left {} trailing state bytes",
+                            st.len()
+                        ));
+                    }
+                    pos = rec.pos;
+                    delivered = rec.delivered_total;
+                    frames_in = rec.frames_in;
+                    bytes_in = rec.bytes_in;
+                    gen = pgen;
+                    tp.restore(pgen, rec.sent_total, &rec.channels);
+                    outbox =
+                        Outbox::with_seeds(ranks, head.policy, &head.seeds);
+                    sent_base = 0;
+                    committed = Some((rbarrier, rec_bytes));
+                    pending = None;
+                    queue_ack(ctrl, kind::RESTORED, pgen);
+                }
+                kind::RESTORE => {
+                    // a replacement constructed at this generation: its
+                    // resume overlay already IS the barrier state —
+                    // nothing to roll back, just confirm
+                    if ftoken != gen {
+                        return Err(format!(
+                            "ctrl: RESTORE for generation {ftoken}, this \
+                             worker is at generation {gen}"
+                        ));
+                    }
+                    queue_ack(ctrl, kind::RESTORED, ftoken);
                 }
                 kind::STOP => {
                     stop = true;
@@ -697,17 +1500,28 @@ where
     ctrl.drain_writes("ctrl")
 }
 
+/// REPORT payload: `[sent, delivered, failed_peer]` — `failed_peer` is
+/// `u64::MAX` when every mesh channel is healthy, else the lowest rank
+/// whose channel parked as failed.
 fn queue_report<S: SocketLike>(
     ctrl: &mut Conn<S>,
     wave: u64,
     sent: u64,
     delivered: u64,
+    failed_peer: Option<usize>,
 ) {
-    let mut payload = Vec::with_capacity(16);
+    let mut payload = Vec::with_capacity(24);
     put_u64(&mut payload, sent);
     put_u64(&mut payload, delivered);
-    let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + 16);
+    put_u64(&mut payload, failed_peer.map_or(u64::MAX, |p| p as u64));
+    let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + 24);
     encode_frame_into(kind::REPORT, 0, wave, &payload, &mut frame);
+    ctrl.queue_frame(frame);
+}
+
+fn queue_ack<S: SocketLike>(ctrl: &mut Conn<S>, k: u8, token: u64) {
+    let mut frame = Vec::with_capacity(FRAME_HEADER_LEN);
+    encode_frame_into(k, 0, token, &[], &mut frame);
     ctrl.queue_frame(frame);
 }
 
@@ -715,9 +1529,30 @@ fn queue_report<S: SocketLike>(
 // Driver side
 // ---------------------------------------------------------------------
 
+/// A driver-side failure attributed to one worker rank — what the
+/// recovery paths dispatch on.
+#[derive(Debug, Clone)]
+pub(crate) struct RankError {
+    pub rank: usize,
+    pub msg: String,
+}
+
+impl RankError {
+    pub(crate) fn new(rank: usize, msg: String) -> Self {
+        Self { rank, msg }
+    }
+}
+
+impl std::fmt::Display for RankError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
 /// What the driver does when a control read hits its deadline with no
 /// frame. `Ok(true)`: the worker was verified alive (e.g. `waitpid`
-/// says the child is running a long context) — re-arm and keep waiting.
+/// says the child is running a long context) — re-arm and keep waiting
+/// (re-arms are capped; see [`DriverCtrl::with_rearm_cap`]).
 /// `Ok(false)`: liveness cannot be verified — treat the deadline as
 /// fatal. `Err`: the worker is known dead; the message describes how.
 pub(crate) trait Liveness {
@@ -741,6 +1576,10 @@ pub(crate) struct DriverCtrl<S, L> {
     liveness: L,
     rbuf: Vec<u8>,
     rpos: usize,
+    /// Hard cap on consecutive liveness re-arms within one `recv` — a
+    /// hook that keeps re-arming (alive-but-wedged child) used to hang
+    /// the driver forever; now it fails with a clear error.
+    rearm_cap: u32,
 }
 
 impl<S: SocketLike, L: Liveness> DriverCtrl<S, L> {
@@ -763,7 +1602,14 @@ impl<S: SocketLike, L: Liveness> DriverCtrl<S, L> {
             liveness,
             rbuf: Vec::new(),
             rpos: 0,
+            rearm_cap: DEFAULT_REARM_CAP,
         })
+    }
+
+    /// Override the consecutive-re-arm cap (`comm.liveness_rearms`).
+    pub fn with_rearm_cap(mut self, cap: u32) -> Self {
+        self.rearm_cap = cap.max(1);
+        self
     }
 
     /// Take the stream (plus any already-buffered unparsed bytes) back
@@ -796,13 +1642,14 @@ impl<S: SocketLike, L: Liveness> DriverCtrl<S, L> {
 
     /// Read the next control frame (blocking); returns
     /// `(kind, token, payload)`. Every `deadline` of silence the
-    /// [`Liveness`] hook decides: re-arm (worker verified alive) or fail
-    /// with a clear error naming the worker.
+    /// [`Liveness`] hook decides: re-arm (worker verified alive, up to
+    /// the re-arm cap) or fail with a clear error naming the worker.
     pub fn recv(
         &mut self,
         deadline: Duration,
     ) -> Result<(u8, u64, Vec<u8>), String> {
         let mut limit = Instant::now() + deadline;
+        let mut rearms = 0u32;
         loop {
             let avail = &self.rbuf[self.rpos..];
             if let Some(total) =
@@ -836,7 +1683,20 @@ impl<S: SocketLike, L: Liveness> DriverCtrl<S, L> {
                 {
                     if Instant::now() > limit {
                         match self.liveness.still_alive() {
-                            Ok(true) => limit = Instant::now() + deadline,
+                            Ok(true) => {
+                                rearms += 1;
+                                if rearms >= self.rearm_cap {
+                                    return Err(format!(
+                                        "{}: liveness re-arm cap hit — the \
+                                         worker is nominally alive but sent \
+                                         no control frame through {} waits \
+                                         of {:?}; declaring it dead \
+                                         (comm.liveness_rearms caps re-arms)",
+                                        self.desc, rearms, deadline
+                                    ));
+                                }
+                                limit = Instant::now() + deadline;
+                            }
                             Ok(false) => {
                                 return Err(format!(
                                     "{}: no control frame within {:?}",
@@ -858,45 +1718,88 @@ impl<S: SocketLike, L: Liveness> DriverCtrl<S, L> {
     }
 }
 
+/// Receive control frames from `c` until one matches `(want, token)`,
+/// skipping stale acknowledgements from waves the driver abandoned
+/// during a recovery. Any non-acknowledgement kind is a protocol error.
+pub(crate) fn recv_matching<S: SocketLike, L: Liveness>(
+    c: &mut DriverCtrl<S, L>,
+    want: u8,
+    token: u64,
+) -> Result<Vec<u8>, String> {
+    const SKIPPABLE: &[u8] = &[
+        kind::REPORT,
+        kind::STEP_ACK,
+        kind::CKPT_ACK,
+        kind::PAUSE_ACK,
+        kind::REMESHED,
+        kind::RESTORED,
+    ];
+    loop {
+        let (k, t, payload) = c.recv(CTRL_DEADLINE)?;
+        if k == want && t == token {
+            return Ok(payload);
+        }
+        if SKIPPABLE.contains(&k) {
+            continue;
+        }
+        return Err(format!(
+            "{}: sent unexpected control frame kind {k} (wanted kind \
+             {want}, token {token})",
+            c.desc
+        ));
+    }
+}
+
 /// One probe wave: returns global `(sent, delivered)`.
 fn probe_wave<S: SocketLike, L: Liveness>(
     ctrls: &mut [DriverCtrl<S, L>],
     wave: u64,
-) -> Result<(u64, u64), String> {
-    for c in ctrls.iter_mut() {
-        c.send(kind::PROBE, wave)?;
+) -> Result<(u64, u64), RankError> {
+    for (r, c) in ctrls.iter_mut().enumerate() {
+        c.send(kind::PROBE, wave)
+            .map_err(|e| RankError::new(r, e))?;
     }
     collect_reports(ctrls, wave)
 }
 
 /// Collect one REPORT per worker for `wave`; sums `(sent, delivered)`.
+/// A report naming a failed mesh channel attributes the failure to the
+/// *peer* rank — a dead link between two alive workers would otherwise
+/// leave the totals unbalanced forever (dropped sends are counted but
+/// never delivered), hanging quiescence detection with no error.
 pub(crate) fn collect_reports<S: SocketLike, L: Liveness>(
     ctrls: &mut [DriverCtrl<S, L>],
     wave: u64,
-) -> Result<(u64, u64), String> {
+) -> Result<(u64, u64), RankError> {
+    let ranks = ctrls.len();
     let (mut s, mut d) = (0u64, 0u64);
-    for c in ctrls.iter_mut() {
-        loop {
-            let (k, token, payload) = c.recv(CTRL_DEADLINE)?;
-            if k != kind::REPORT {
-                return Err(format!(
-                    "{}: sent unexpected control frame kind {k}",
-                    c.desc
-                ));
-            }
-            if token != wave {
-                // stale report from an earlier wave; skip it
-                continue;
-            }
-            let mut input = payload.as_slice();
-            let err =
-                |e: WireError| format!("{}: bad report: {e}", c.desc);
-            let sent = get_u64(&mut input).map_err(err)?;
-            let delivered = get_u64(&mut input).map_err(err)?;
-            s += sent;
-            d += delivered;
-            break;
+    for (r, c) in ctrls.iter_mut().enumerate() {
+        let payload = recv_matching(c, kind::REPORT, wave)
+            .map_err(|e| RankError::new(r, e))?;
+        let desc = c.desc.clone();
+        let mut input = payload.as_slice();
+        let err = |e: WireError| {
+            RankError::new(r, format!("{desc}: bad report: {e}"))
+        };
+        let sent = get_u64(&mut input).map_err(err)?;
+        let delivered = get_u64(&mut input).map_err(err)?;
+        let failed_peer = get_u64(&mut input).map_err(err)?;
+        if failed_peer != u64::MAX {
+            let msg = format!(
+                "{desc}: reports its mesh channel to rank {failed_peer} \
+                 as failed (peer dead or link reset)"
+            );
+            // attribute to the named peer when it is a valid rank,
+            // otherwise to the (corrupt) reporter itself
+            let rank = if (failed_peer as usize) < ranks {
+                failed_peer as usize
+            } else {
+                r
+            };
+            return Err(RankError::new(rank, msg));
         }
+        s += sent;
+        d += delivered;
     }
     Ok((s, d))
 }
@@ -906,7 +1809,7 @@ pub(crate) fn collect_reports<S: SocketLike, L: Liveness>(
 fn wait_quiescent<S: SocketLike, L: Liveness>(
     ctrls: &mut [DriverCtrl<S, L>],
     wave: &mut u64,
-) -> Result<u64, String> {
+) -> Result<u64, RankError> {
     let mut prev: Option<(u64, u64)> = None;
     loop {
         *wave += 1;
@@ -919,29 +1822,159 @@ fn wait_quiescent<S: SocketLike, L: Liveness>(
     }
 }
 
-/// Drive an already-seeded epoch to completion: quiescence → idle
-/// rounds → re-quiescence, then broadcast Stop. Returns the number of
-/// idle rounds executed (same schedule as the in-memory backends).
-pub(crate) fn drive_to_stop<S: SocketLike, L: Liveness>(
+/// Idle rounds to stability: quiescence → IDLE → re-quiescence until an
+/// idle round produces no new sends. Returns the number of idle rounds.
+/// Also how a checkpoint barrier is reached mid-storm — every partial
+/// fan/batch buffer drains through `on_idle` before the records freeze.
+fn run_idle_rounds<S: SocketLike, L: Liveness>(
     ctrls: &mut [DriverCtrl<S, L>],
-) -> Result<u64, String> {
-    let mut wave = 0u64;
+    wave: &mut u64,
+) -> Result<u64, RankError> {
     let mut idle_rounds = 0u64;
     loop {
-        let sent_before = wait_quiescent(ctrls, &mut wave)?;
+        let sent_before = wait_quiescent(ctrls, wave)?;
         idle_rounds += 1;
-        wave += 1;
-        for c in ctrls.iter_mut() {
-            c.send(kind::IDLE, wave)?;
+        *wave += 1;
+        for (r, c) in ctrls.iter_mut().enumerate() {
+            c.send(kind::IDLE, *wave)
+                .map_err(|e| RankError::new(r, e))?;
         }
-        collect_reports(ctrls, wave)?;
-        let sent_after = wait_quiescent(ctrls, &mut wave)?;
+        collect_reports(ctrls, *wave)?;
+        let sent_after = wait_quiescent(ctrls, wave)?;
         if sent_after == sent_before {
-            break;
+            return Ok(idle_rounds);
         }
     }
-    for c in ctrls.iter_mut() {
-        c.send(kind::STOP, 0)?;
+}
+
+/// Drive an already-seeded plain (non-resilient) epoch to completion:
+/// quiescence → idle rounds → re-quiescence, then broadcast Stop.
+/// Returns the number of idle rounds executed (same schedule as the
+/// in-memory backends).
+pub(crate) fn drive_to_stop<S: SocketLike, L: Liveness>(
+    ctrls: &mut [DriverCtrl<S, L>],
+) -> Result<u64, RankError> {
+    let mut wave = 0u64;
+    let idle_rounds = run_idle_rounds(ctrls, &mut wave)?;
+    for (r, c) in ctrls.iter_mut().enumerate() {
+        c.send(kind::STOP, 0).map_err(|e| RankError::new(r, e))?;
+    }
+    Ok(idle_rounds)
+}
+
+/// Checkpoint cadence for one resilient epoch (driver side).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct CkptPlan {
+    /// Seed input units per STEP chunk.
+    pub chunk: u64,
+    /// Checkpoint every N chunks (0 = chunk trigger off).
+    pub every_chunks: u64,
+    /// Checkpoint when this many seconds passed since the last barrier
+    /// (0 = time trigger off).
+    pub secs: u64,
+}
+
+impl CkptPlan {
+    /// `None` when the policy does not enable checkpointing.
+    pub(crate) fn from_fault(f: &super::FaultPolicy) -> Option<Self> {
+        if !f.resilient() {
+            return None;
+        }
+        Some(Self {
+            chunk: f.chunk.max(1),
+            every_chunks: f.ckpt_every_chunks,
+            secs: f.ckpt_secs,
+        })
+    }
+}
+
+/// Drive a resilient (chunked, checkpointed) epoch: STEP waves with
+/// quiescence between chunks, checkpoint barriers at the plan's cadence
+/// (each preceded by idle rounds so the barrier is truly drained), final
+/// idle rounds, then Stop. `on_ckpt` receives every rank's CKPT_ACK
+/// payload after each completed barrier. Returns the idle-round count.
+/// A failure is attributed to its rank so the backend can run recovery
+/// and re-enter this function (workers keep their frontier; replayed
+/// STEP waves are cheap no-ops for exhausted ranks).
+pub(crate) fn drive_resilient<S: SocketLike, L: Liveness>(
+    ctrls: &mut [DriverCtrl<S, L>],
+    plan: &CkptPlan,
+    wave: &mut u64,
+    epoch: u64,
+    gen: u64,
+    checkpoints: &mut u64,
+    on_ckpt: &mut dyn FnMut(Vec<Vec<u8>>),
+) -> Result<u64, RankError> {
+    let mut last_ckpt = Instant::now();
+    let mut chunks = 0u64;
+    loop {
+        *wave += 1;
+        let step_wave = *wave;
+        let mut step = Vec::with_capacity(8);
+        put_u64(&mut step, plan.chunk);
+        for (r, c) in ctrls.iter_mut().enumerate() {
+            c.send_payload(kind::STEP, step_wave, &step)
+                .map_err(|e| RankError::new(r, e))?;
+        }
+        let mut remaining = 0u64;
+        for (r, c) in ctrls.iter_mut().enumerate() {
+            let ack = recv_matching(c, kind::STEP_ACK, step_wave)
+                .map_err(|e| RankError::new(r, e))?;
+            let desc = c.desc.clone();
+            let mut input = ack.as_slice();
+            remaining += get_u64(&mut input).map_err(|e| {
+                RankError::new(r, format!("{desc}: bad step ack: {e}"))
+            })?;
+        }
+        // no per-chunk quiescence: chunk k+1's seeding overlaps chunk
+        // k's message storm. The storm only needs to settle where
+        // correctness demands it — at checkpoint barriers and after the
+        // final chunk — and run_idle_rounds below establishes exactly
+        // that (probe waves to stability) when those points arrive.
+        chunks += 1;
+        if remaining == 0 {
+            break;
+        }
+        let due = (plan.every_chunks > 0 && chunks % plan.every_chunks == 0)
+            || (plan.secs > 0
+                && last_ckpt.elapsed().as_secs() >= plan.secs);
+        if due {
+            // reach a true barrier first: idle rounds drain every
+            // partial fan/batch buffer, so write_state sees a settled
+            // actor and every channel token pair agrees
+            run_idle_rounds(ctrls, wave)?;
+            *wave += 1;
+            let ckpt_wave = *wave;
+            let barrier = *checkpoints + 1;
+            let mut cp = Vec::with_capacity(24);
+            put_u64(&mut cp, epoch);
+            put_u64(&mut cp, gen);
+            put_u64(&mut cp, barrier);
+            for (r, c) in ctrls.iter_mut().enumerate() {
+                c.send_payload(kind::CKPT, ckpt_wave, &cp)
+                    .map_err(|e| RankError::new(r, e))?;
+            }
+            let mut acks = Vec::with_capacity(ctrls.len());
+            for (r, c) in ctrls.iter_mut().enumerate() {
+                acks.push(
+                    recv_matching(c, kind::CKPT_ACK, ckpt_wave)
+                        .map_err(|e| RankError::new(r, e))?,
+                );
+            }
+            // every rank stored barrier `barrier` — it is now the
+            // fabric's restore target even if a commit send fails below
+            *checkpoints = barrier;
+            on_ckpt(acks);
+            for (r, c) in ctrls.iter_mut().enumerate() {
+                c.send(kind::CKPT_COMMIT, barrier)
+                    .map_err(|e| RankError::new(r, e))?;
+            }
+            last_ckpt = Instant::now();
+        }
+    }
+    let idle_rounds = run_idle_rounds(ctrls, wave)?;
+    for (r, c) in ctrls.iter_mut().enumerate() {
+        c.send(kind::STOP, 0).map_err(|e| RankError::new(r, e))?;
     }
     Ok(idle_rounds)
 }
@@ -991,4 +2024,261 @@ where
         ));
     }
     Ok(())
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn channel_tokens_survive_u64_wraparound() {
+        // a resumable epoch can push the cumulative per-channel counter
+        // across the fixed-width boundary; validation must follow the
+        // wrap instead of rejecting the frame
+        let (a, b) = UnixStream::pair().unwrap();
+        let mut tx = Conn::new(a).unwrap();
+        let start = u64::MAX - 2;
+        let mut scratch = Vec::new();
+        let mut sent_seq = start;
+        for i in 0..3u64 {
+            let batch: Vec<(u64, u64)> = vec![(i, i), (i, i + 1)];
+            sent_seq = sent_seq.wrapping_add(batch.len() as u64);
+            let mut frame = Vec::new();
+            encode_msg_frame_gen(
+                kind::MSGS,
+                0,
+                sent_seq,
+                &batch,
+                &mut scratch,
+                &mut frame,
+            );
+            tx.queue_frame(frame);
+        }
+        tx.drain_writes("tx").unwrap();
+
+        let mut rx = PeerConn::new(Conn::new(b).unwrap(), 0);
+        rx.recv_seq = start; // resumed mid-epoch near the boundary
+        let mut peers: Vec<Option<PeerConn<UnixStream>>> =
+            vec![Some(rx), None];
+        let mut tp: SocketTransport<'_, UnixStream, (u64, u64)> =
+            SocketTransport {
+                rank: 1,
+                peers: &mut peers,
+                selfq: VecDeque::new(),
+                sent: 0,
+                scratch: Vec::new(),
+                io_error: None,
+                gen: 0,
+                resilient: false,
+            };
+        let mut got = 0usize;
+        for _ in 0..200 {
+            for (msgs, _) in tp.read_frames(0).unwrap() {
+                got += msgs.len();
+            }
+            if got == 6 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(got, 6, "all batches must decode across the wrap");
+        assert_eq!(
+            tp.peers[0].as_ref().unwrap().recv_seq,
+            start.wrapping_add(6)
+        );
+    }
+
+    #[test]
+    fn stale_generation_frames_are_discarded_and_future_ones_rejected() {
+        // stale frames (older incarnation — a rollback happened, or a
+        // straggler from a recovered epoch on a persistent mesh
+        // connection) are silently discarded in every mode; a frame
+        // claiming a FUTURE incarnation is a protocol error
+        for resilient in [true, false] {
+            let (a, b) = UnixStream::pair().unwrap();
+            let mut tx = Conn::new(a).unwrap();
+            let mut scratch = Vec::new();
+            // one stale gen-0 frame, then a current gen-1 frame whose
+            // token continues the resumed sequence
+            let mut f0 = Vec::new();
+            encode_msg_frame_gen(
+                kind::MSGS,
+                0,
+                9,
+                &[(7u64, 7u64)],
+                &mut scratch,
+                &mut f0,
+            );
+            let mut f1 = Vec::new();
+            encode_msg_frame_gen(
+                kind::MSGS,
+                1,
+                1,
+                &[(8u64, 9u64)],
+                &mut scratch,
+                &mut f1,
+            );
+            tx.queue_frame(f0);
+            tx.queue_frame(f1);
+            tx.drain_writes("tx").unwrap();
+
+            let mut peers: Vec<Option<PeerConn<UnixStream>>> =
+                vec![Some(PeerConn::new(Conn::new(b).unwrap(), 0)), None];
+            let mut tp: SocketTransport<'_, UnixStream, (u64, u64)> =
+                SocketTransport {
+                    rank: 1,
+                    peers: &mut peers,
+                    selfq: VecDeque::new(),
+                    sent: 0,
+                    scratch: Vec::new(),
+                    io_error: None,
+                    gen: 1,
+                    resilient,
+                };
+            std::thread::sleep(Duration::from_millis(10));
+            let mut got: Vec<(u64, u64)> = Vec::new();
+            for _ in 0..200 {
+                for (msgs, _) in tp.read_frames(0).unwrap() {
+                    got.extend(msgs);
+                }
+                if !got.is_empty() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            assert_eq!(
+                got,
+                vec![(8, 9)],
+                "resilient={resilient}: stale frame dropped, current kept"
+            );
+
+            // a future-generation frame is rejected by name
+            let mut f2 = Vec::new();
+            encode_msg_frame_gen(
+                kind::MSGS,
+                5,
+                2,
+                &[(1u64, 1u64)],
+                &mut scratch,
+                &mut f2,
+            );
+            tx.queue_frame(f2);
+            tx.drain_writes("tx").unwrap();
+            std::thread::sleep(Duration::from_millis(10));
+            let mut outcome = Ok(());
+            for _ in 0..200 {
+                match tp.read_frames(0) {
+                    Ok(v) if v.is_empty() => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Ok(_) => panic!("future generation accepted"),
+                    Err(e) => {
+                        outcome = Err(e);
+                        break;
+                    }
+                }
+            }
+            let err = outcome.expect_err("future generation must error");
+            assert!(err.contains("generation"), "{err}");
+        }
+    }
+
+    struct AlwaysAlive;
+
+    impl Liveness for AlwaysAlive {
+        fn still_alive(&mut self) -> Result<bool, String> {
+            Ok(true)
+        }
+    }
+
+    #[test]
+    fn liveness_rearm_cap_bounds_a_half_dead_peer() {
+        // a hook that keeps verifying the peer alive used to re-arm the
+        // deadline forever; the cap turns it into a bounded, named error
+        let (a, _keep_open) = UnixStream::pair().unwrap();
+        let mut ctrl =
+            DriverCtrl::new(a, "worker rank 0".into(), AlwaysAlive)
+                .unwrap()
+                .with_rearm_cap(3);
+        let start = Instant::now();
+        let err = ctrl.recv(Duration::from_millis(10)).unwrap_err();
+        assert!(err.contains("re-arm cap"), "{err}");
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "capped recv must return promptly"
+        );
+    }
+
+    #[test]
+    fn seed_head_round_trips_with_epoch_spec_and_resume() {
+        struct Nop;
+        impl super::super::Actor for Nop {
+            type Msg = (u64, u64);
+            fn seed(&mut self, _out: &mut Outbox<(u64, u64)>) {}
+            fn on_message(
+                &mut self,
+                _msg: (u64, u64),
+                _out: &mut Outbox<(u64, u64)>,
+            ) {
+            }
+        }
+        impl WireActor for Nop {
+            fn write_state(&self, _buf: &mut Vec<u8>) {}
+            fn read_state(
+                &mut self,
+                _input: &mut &[u8],
+            ) -> Result<(), WireError> {
+                Ok(())
+            }
+        }
+        impl FabricActor for Nop {
+            const KIND: &'static str = "nop";
+            fn write_seed(&self, buf: &mut Vec<u8>) {
+                buf.extend_from_slice(b"tail");
+            }
+            fn read_seed(_input: &mut &[u8]) -> Result<Self, WireError> {
+                Ok(Nop)
+            }
+        }
+        let spec = EpochSpec {
+            resilient: true,
+            chunk: 77,
+            epoch: 5,
+            gen: 2,
+            resume_barrier: 3,
+            resume: ResumeSrc::Inline(vec![1, 2, 3, 4]),
+        };
+        let payload =
+            encode_seed(&Nop, FlushPolicy::default(), &[9, 8], &spec);
+        let (head, rest) = split_seed(&payload).unwrap();
+        assert_eq!(head.actor_kind, "nop");
+        assert_eq!(head.seeds, vec![9, 8]);
+        assert!(head.spec.resilient);
+        assert_eq!(head.spec.chunk, 77);
+        assert_eq!(head.spec.epoch, 5);
+        assert_eq!(head.spec.gen, 2);
+        assert_eq!(head.spec.resume_barrier, 3);
+        match &head.spec.resume {
+            ResumeSrc::Inline(b) => assert_eq!(b, &vec![1, 2, 3, 4]),
+            other => panic!("wrong resume source {other:?}"),
+        }
+        assert_eq!(rest, b"tail");
+        // the File and None tags round-trip too
+        for resume in [ResumeSrc::None, ResumeSrc::File] {
+            let spec = EpochSpec {
+                resume,
+                ..EpochSpec::plain()
+            };
+            let payload =
+                encode_seed(&Nop, FlushPolicy::default(), &[], &spec);
+            let (head, rest) = split_seed(&payload).unwrap();
+            assert!(!head.spec.resilient);
+            assert_eq!(rest, b"tail");
+        }
+        // truncations reject
+        for cut in 0..payload.len().saturating_sub(4) {
+            assert!(split_seed(&payload[..cut]).is_err(), "cut {cut}");
+        }
+    }
 }

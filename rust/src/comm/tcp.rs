@@ -6,15 +6,31 @@
 //!
 //! A [`TcpFabric`] is the driver's handle: control channels to every
 //! rank, kept open across epochs (the mesh persists too; per-channel
-//! token counters reset at each SEED). Each epoch ships every worker a
-//! SEED frame — actor kind, flush policy, warm-start seeds, and the
-//! [`FabricActor::write_seed`] bytes — so **all actor inputs travel
+//! token counters reset at each SEED), plus the **retained registrar
+//! listener and final mesh map** — the two things recovery needs to
+//! re-admit a respawned rank. Each epoch ships every worker a SEED
+//! frame — actor kind, flush policy, warm-start seeds, epoch spec, and
+//! the [`FabricActor::write_seed`] bytes — so **all actor inputs travel
 //! over the wire**; nothing is inherited from the driver process.
 //! Workers dispatch the SEED's actor kind through a [`WorkerDispatch`]
 //! (a registry of `FabricActor` kinds built by the launcher, e.g.
 //! `coordinator::worker_dispatch()`), which is what lets one generic
 //! `worker` process serve accumulation, ANF passes and triangle epochs
 //! back to back.
+//!
+//! # Fault tolerance
+//!
+//! With a checkpointing [`FaultPolicy`], [`TcpFabric::run_epoch_full`]
+//! runs the epoch resiliently (see `comm` module docs). When a rank
+//! dies the driver pauses the survivors, accepts a replacement
+//! `degreesketch worker --connect … --rank R --resume <ckpt-dir>` JOIN
+//! on the registrar, re-meshes it incrementally (the replacement dials
+//! every survivor), re-SEEDs only the replacement with a resume spec
+//! naming the exact barrier to restore, broadcasts RESTORE, and the
+//! epoch continues from the checkpoint frontier — DEG/ANF sketches and
+//! triangle heavy hitters come out bit-identical to an undisturbed run
+//! (test-enforced). Workers write their barrier records under
+//! [`WorkerOptions::ckpt_dir`].
 //!
 //! [`Backend::Tcp`](super::Backend::Tcp) routes through a process-global
 //! fabric ([`configure_driver`] → first epoch performs the rendezvous →
@@ -26,16 +42,28 @@
 //! launchers). CRC'd frames catch corruption, not adversaries.
 
 use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use super::codec::put_u64;
 use super::outbox::FlushPolicy;
 use super::rendezvous::{self, TcpCtrl};
-use super::socket::{self, kind, Conn, PeerConn, SeedHead};
-use super::{Backend, CommStats, FabricActor, WireMsg};
+use super::socket::{
+    self, kind, CkptPlan, Conn, EpochSpec, FabricHooks, PeerConn, ResumeSrc,
+    SeedHead,
+};
+use super::{Backend, Chaos, CommStats, FabricActor, FaultPolicy, WireMsg};
+use crate::snapshot::checkpoint::{checkpoint_file_name, write_record_bytes};
 
 /// Default per-step rendezvous / control deadline.
 pub const DEFAULT_DEADLINE: Duration = Duration::from_secs(60);
+
+/// How long the driver waits for a replacement worker to JOIN during a
+/// recovery. Shorter than the survivors' parked-accept deadline
+/// (`CTRL_DEADLINE`) so the driver gives up first, with the clearer
+/// error.
+const RESPAWN_JOIN_DEADLINE: Duration = Duration::from_secs(100);
 
 /// Parse a `--hosts` spec: comma-separated `rank=host:port` entries that
 /// must cover exactly ranks `0..ranks-1`. `host:0` lets the worker bind
@@ -86,23 +114,42 @@ pub fn parse_hosts(spec: &str, ranks: usize) -> Result<Vec<String>, String> {
 // ---------------------------------------------------------------------
 
 /// A connected multi-host fabric: the driver's control channel to every
-/// worker rank. Epochs run back to back over the same mesh.
+/// worker rank, the retained registrar listener (respawn JOINs), and
+/// the final mesh map (respawn re-mesh). Epochs run back to back over
+/// the same mesh.
 pub struct TcpFabric {
     ctrls: Vec<TcpCtrl>,
+    listener: TcpListener,
+    final_map: Vec<String>,
+    epoch: u64,
+    /// Fabric-lifetime recovery incarnation: bumped on every rollback
+    /// and **never reset at epoch boundaries**, so a stale frame that
+    /// straggles across an epoch boundary on a persistent mesh
+    /// connection can never alias a live generation.
+    incarnation: u64,
 }
 
 impl TcpFabric {
     /// Bind-side entry: run the rendezvous on an already-bound registrar
     /// listener. `hosts[r]` is where rank `r` must bind its mesh
     /// listener. Fails (rather than hangs) with a step-and-rank-specific
-    /// error if any worker is unreachable within `deadline`.
+    /// error if any worker is unreachable within `deadline`. The
+    /// listener is kept for the fabric's life so respawned workers can
+    /// re-join after a failure.
     pub fn rendezvous(
         listener: TcpListener,
         hosts: Vec<String>,
         deadline: Duration,
     ) -> Result<Self, String> {
-        let ctrls = rendezvous::driver_rendezvous(listener, &hosts, deadline)?;
-        Ok(Self { ctrls })
+        let (ctrls, final_map) =
+            rendezvous::driver_rendezvous(&listener, &hosts, deadline)?;
+        Ok(Self {
+            ctrls,
+            listener,
+            final_map,
+            epoch: 0,
+            incarnation: 0,
+        })
     }
 
     /// Number of worker ranks in the fabric.
@@ -110,15 +157,34 @@ impl TcpFabric {
         self.ctrls.len()
     }
 
-    /// Run one epoch: SEED every worker with its actor's wire inputs,
-    /// drive quiescence → idle rounds → Stop, and decode every STATE
-    /// back into the driver-side actors. Bit-compatible with the other
-    /// backends (merges commute; parity is test-enforced).
+    /// Run one epoch with the default (non-resilient) fault policy.
     pub fn run_epoch<A>(
         &mut self,
         actors: &mut [A],
         policy: FlushPolicy,
         seeds: &[usize],
+    ) -> Result<CommStats, String>
+    where
+        A: FabricActor,
+        A::Msg: WireMsg,
+    {
+        self.run_epoch_full(actors, policy, seeds, FaultPolicy::default())
+    }
+
+    /// Run one epoch: SEED every worker with its actor's wire inputs,
+    /// drive quiescence → idle rounds → Stop, and decode every STATE
+    /// back into the driver-side actors. Bit-compatible with the other
+    /// backends (merges commute; parity is test-enforced). With a
+    /// checkpointing `fault` policy the epoch is resilient: a dead rank
+    /// is replaced by a respawned `--resume` worker and the epoch rolls
+    /// back to the last fabric-wide checkpoint barrier instead of
+    /// aborting.
+    pub fn run_epoch_full<A>(
+        &mut self,
+        actors: &mut [A],
+        policy: FlushPolicy,
+        seeds: &[usize],
+        fault: FaultPolicy,
     ) -> Result<CommStats, String>
     where
         A: FabricActor,
@@ -132,17 +198,186 @@ impl TcpFabric {
                 actors.len()
             ));
         }
+        self.epoch += 1;
+        let plan = CkptPlan::from_fault(&fault);
+        let spec = EpochSpec {
+            resilient: plan.is_some(),
+            chunk: fault.chunk.max(1),
+            epoch: self.epoch,
+            gen: self.incarnation,
+            resume_barrier: 0,
+            resume: ResumeSrc::None,
+        };
         for (rank, c) in self.ctrls.iter_mut().enumerate() {
-            let payload = socket::encode_seed(&actors[rank], policy, seeds);
+            let payload =
+                socket::encode_seed(&actors[rank], policy, seeds, &spec);
             c.send_payload(kind::SEED, 0, &payload)?;
         }
-        let idle_rounds = socket::drive_to_stop(&mut self.ctrls)?;
+        let mut wave = 0u64;
+        let mut gen = self.incarnation;
+        let mut checkpoints = 0u64;
+        let mut restores = 0u64;
+        let idle_rounds = loop {
+            let res = match &plan {
+                Some(p) => socket::drive_resilient(
+                    &mut self.ctrls,
+                    p,
+                    &mut wave,
+                    self.epoch,
+                    gen,
+                    &mut checkpoints,
+                    // tcp checkpoint acks carry worker-local file paths;
+                    // the driver only needs the barrier bookkeeping
+                    &mut |_acks| {},
+                ),
+                None => socket::drive_to_stop(&mut self.ctrls),
+            };
+            match res {
+                Ok(n) => break n,
+                Err(e) => {
+                    let recoverable = plan.is_some()
+                        && restores < fault.max_respawns as u64;
+                    if !recoverable {
+                        return Err(format!(
+                            "worker rank {} failed mid-epoch: {}",
+                            e.rank, e.msg
+                        ));
+                    }
+                    gen += 1;
+                    self.incarnation = gen;
+                    restores += 1;
+                    eprintln!(
+                        "tcp fabric: worker rank {} died mid-epoch ({}); \
+                         pausing survivors and awaiting a respawned \
+                         worker --resume (generation {gen}, restoring \
+                         barrier {checkpoints})",
+                        e.rank, e.msg
+                    );
+                    self.recover(
+                        e.rank,
+                        gen,
+                        checkpoints,
+                        &actors[e.rank],
+                        policy,
+                        seeds,
+                        &fault,
+                    )?;
+                    eprintln!(
+                        "tcp fabric: rank {} resumed from checkpoint \
+                         barrier {checkpoints}; epoch continues",
+                        e.rank
+                    );
+                }
+            }
+        };
         let mut stats = CommStats::new(Backend::Tcp, ranks);
         stats.idle_rounds = idle_rounds;
+        stats.checkpoints = checkpoints;
+        stats.restores = restores;
         for (rank, c) in self.ctrls.iter_mut().enumerate() {
             socket::collect_state(c, &mut actors[rank], &mut stats, rank)?;
         }
         Ok(stats)
+    }
+
+    /// Recovery after `dead` died: pause the survivors, admit the
+    /// respawned worker, re-mesh it incrementally, re-seed it with a
+    /// resume spec for `barrier`, then order the fabric-wide rollback.
+    fn recover<A>(
+        &mut self,
+        dead: usize,
+        gen: u64,
+        barrier: u64,
+        dead_actor: &A,
+        policy: FlushPolicy,
+        seeds: &[usize],
+        fault: &FaultPolicy,
+    ) -> Result<(), String>
+    where
+        A: FabricActor,
+        A::Msg: WireMsg,
+    {
+        let ranks = self.ctrls.len();
+        // 1. PAUSE every survivor; collect their acks (drained writes).
+        let mut pp = Vec::with_capacity(24);
+        put_u64(&mut pp, dead as u64);
+        put_u64(&mut pp, gen);
+        put_u64(&mut pp, barrier);
+        for (r, c) in self.ctrls.iter_mut().enumerate() {
+            if r == dead {
+                continue;
+            }
+            c.send_payload(kind::PAUSE, gen, &pp)
+                .map_err(|e| format!("pausing rank {r}: {e}"))?;
+        }
+        for (r, c) in self.ctrls.iter_mut().enumerate() {
+            if r == dead {
+                continue;
+            }
+            socket::recv_matching(c, kind::PAUSE_ACK, gen)
+                .map_err(|e| format!("pausing rank {r}: {e}"))?;
+        }
+        // 2. Admit the replacement's JOIN on the retained registrar.
+        let new_ctrl = rendezvous::accept_respawn_join(
+            &self.listener,
+            dead,
+            RESPAWN_JOIN_DEADLINE,
+        )?;
+        self.ctrls[dead] = new_ctrl;
+        // 3. Hand it the mesh map; it dials every parked survivor.
+        let map_payload = rendezvous::encode_map(&self.final_map);
+        self.ctrls[dead]
+            .send_payload(kind::MESH, gen, &map_payload)
+            .map_err(|e| format!("re-meshing rank {dead}: {e}"))?;
+        for (r, c) in self.ctrls.iter_mut().enumerate() {
+            if r == dead {
+                continue;
+            }
+            socket::recv_matching(c, kind::REMESHED, gen)
+                .map_err(|e| format!("re-meshing rank {r}: {e}"))?;
+        }
+        let meshed =
+            socket::recv_matching(&mut self.ctrls[dead], kind::MESHED, gen)
+                .map_err(|e| format!("re-meshing rank {dead}: {e}"))?;
+        {
+            // fold the replacement's fresh mesh listener into the map so
+            // a later recovery can dial it too
+            let mut input = meshed.as_slice();
+            if let Ok(addr) = rendezvous::get_str(&mut input) {
+                if !addr.is_empty() {
+                    self.final_map[dead] = addr;
+                }
+            }
+        }
+        // 4. Re-seed only the replacement, resuming the named barrier
+        //    from its local checkpoint file (barrier 0 = no barrier was
+        //    completed yet: clean replay from the top of the epoch).
+        let spec = EpochSpec {
+            resilient: true,
+            chunk: fault.chunk.max(1),
+            epoch: self.epoch,
+            gen,
+            resume_barrier: barrier,
+            resume: if barrier > 0 {
+                ResumeSrc::File
+            } else {
+                ResumeSrc::None
+            },
+        };
+        let payload = socket::encode_seed(dead_actor, policy, seeds, &spec);
+        self.ctrls[dead]
+            .send_payload(kind::SEED, 0, &payload)
+            .map_err(|e| format!("re-seeding rank {dead}: {e}"))?;
+        // 5. Fabric-wide rollback to the named barrier.
+        for (r, c) in self.ctrls.iter_mut().enumerate() {
+            c.send(kind::RESTORE, gen)
+                .map_err(|e| format!("restoring rank {r}: {e}"))?;
+        }
+        for (r, c) in self.ctrls.iter_mut().enumerate() {
+            socket::recv_matching(c, kind::RESTORED, gen)
+                .map_err(|e| format!("restoring rank {r}: {e}"))?;
+        }
+        Ok(())
     }
 
     /// Tell every worker the fabric is done; workers exit cleanly.
@@ -200,13 +435,14 @@ pub fn shutdown_driver() {
 }
 
 /// Run one epoch on the global fabric (the `Backend::Tcp` arm of
-/// `run_epoch_wire`). Panics on configuration or fabric errors,
+/// `run_epoch_wire_full`). Panics on configuration or fabric errors,
 /// mirroring the other backends' abort behavior; a failed epoch tears
 /// the fabric down (workers see EOF and exit).
 pub(crate) fn run_global<A>(
     actors: &mut [A],
     policy: FlushPolicy,
     seeds: &[usize],
+    fault: FaultPolicy,
 ) -> CommStats
 where
     A: FabricActor,
@@ -227,7 +463,7 @@ where
         }
     }
     let fabric = g.fabric.as_mut().expect("fabric present");
-    match fabric.run_epoch(actors, policy, seeds) {
+    match fabric.run_epoch_full(actors, policy, seeds, fault) {
         Ok(stats) => stats,
         Err(e) => {
             // a half-run epoch leaves workers in an unknown state: drop
@@ -242,6 +478,133 @@ where
 // Worker side
 // ---------------------------------------------------------------------
 
+/// Worker-side knobs: rendezvous deadline, where checkpoint records
+/// live, an optional resume source for a respawned rank, and optional
+/// fault injection for the kill-resume suites.
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Per-step rendezvous deadline.
+    pub deadline: Duration,
+    /// Directory for this rank's checkpoint records (`--ckpt-dir`).
+    pub ckpt_dir: PathBuf,
+    /// Resume source for a respawned worker (`--resume`): either the
+    /// checkpoint *directory* (the barrier-exact file is picked from
+    /// the SEED's resume spec) or one specific record file.
+    pub resume: Option<PathBuf>,
+    /// Deterministic fault injection (see [`Chaos`]).
+    pub chaos: Option<Chaos>,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        Self {
+            deadline: DEFAULT_DEADLINE,
+            ckpt_dir: std::env::temp_dir().join("degreesketch-ckpt"),
+            resume: None,
+            chaos: None,
+        }
+    }
+}
+
+/// The tcp backend's [`FabricHooks`]: barrier records are files under
+/// the worker's checkpoint dir; re-mesh dials are accepted on the
+/// retained mesh listener.
+pub(crate) struct TcpHooks<'a> {
+    rank: usize,
+    listener: Option<&'a TcpListener>,
+    ckpt_dir: &'a Path,
+    resume: &'a mut Option<PathBuf>,
+}
+
+impl TcpHooks<'_> {
+    /// Best-effort removal of this rank's records from other epochs —
+    /// they can never be resume targets again once a new epoch starts
+    /// checkpointing, and a long-lived fabric (one epoch per ANF pass)
+    /// would otherwise grow its checkpoint dir without bound.
+    fn sweep_other_epochs(&self, epoch: u64) {
+        let Ok(entries) = std::fs::read_dir(self.ckpt_dir) else {
+            return;
+        };
+        let keep_prefix = format!("ckpt-e{epoch}-");
+        let my_suffix = format!("-r{}.dsc", self.rank);
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if name.starts_with("ckpt-e")
+                && name.ends_with(&my_suffix)
+                && !name.starts_with(&keep_prefix)
+            {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+}
+
+impl FabricHooks<TcpStream> for TcpHooks<'_> {
+    fn store_checkpoint(
+        &mut self,
+        epoch: u64,
+        barrier: u64,
+        record: &[u8],
+    ) -> Result<Vec<u8>, String> {
+        if barrier == 1 {
+            // first barrier of a new epoch: prior epochs' records are
+            // dead weight from here on
+            self.sweep_other_epochs(epoch);
+        }
+        let path = self
+            .ckpt_dir
+            .join(checkpoint_file_name(epoch, barrier, self.rank));
+        write_record_bytes(&path, record)?;
+        Ok(path.display().to_string().into_bytes())
+    }
+
+    fn commit_checkpoint(&mut self, epoch: u64, barrier: u64) {
+        // barriers before the committed one can never be restore
+        // targets again — best-effort cleanup keeps the dir bounded
+        for old in barrier.saturating_sub(2)..barrier {
+            let path = self
+                .ckpt_dir
+                .join(checkpoint_file_name(epoch, old, self.rank));
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    fn load_resume(
+        &mut self,
+        epoch: u64,
+        barrier: u64,
+    ) -> Result<Vec<u8>, String> {
+        let src = self.resume.take().ok_or_else(|| {
+            "the SEED asks this worker to resume a checkpoint, but no \
+             --resume path was given"
+                .to_string()
+        })?;
+        let path = if src.is_dir() {
+            src.join(checkpoint_file_name(epoch, barrier, self.rank))
+        } else {
+            src
+        };
+        std::fs::read(&path).map_err(|e| {
+            format!("reading resume checkpoint {}: {e}", path.display())
+        })
+    }
+
+    fn accept_replacement(
+        &mut self,
+        failed: usize,
+        gen: u64,
+        deadline: Duration,
+    ) -> Result<Conn<TcpStream>, String> {
+        let listener = self.listener.ok_or_else(|| {
+            "this worker has no mesh listener; it cannot accept a \
+             replacement's re-mesh dial"
+                .to_string()
+        })?;
+        rendezvous::accept_hello(listener, failed, gen, deadline)
+    }
+}
+
 type Handler = Box<
     dyn Fn(
             usize,
@@ -249,6 +612,8 @@ type Handler = Box<
             &[u8],
             &mut Conn<TcpStream>,
             &mut [Option<PeerConn<TcpStream>>],
+            &mut TcpHooks<'_>,
+            Option<Chaos>,
         ) -> Result<(), String>
         + Send,
 >;
@@ -284,9 +649,11 @@ impl WorkerDispatch {
              head: &SeedHead,
              seed: &[u8],
              ctrl: &mut Conn<TcpStream>,
-             peers: &mut [Option<PeerConn<TcpStream>>]| {
+             peers: &mut [Option<PeerConn<TcpStream>>],
+             hooks: &mut TcpHooks<'_>,
+             chaos: Option<Chaos>| {
                 socket::worker_epoch::<A, TcpStream>(
-                    rank, head, seed, ctrl, peers,
+                    rank, head, seed, ctrl, peers, hooks, chaos,
                 )
             },
         );
@@ -302,18 +669,40 @@ impl WorkerDispatch {
     }
 }
 
-/// Serve one rank of a tcp fabric: join via the registrar at `connect`,
-/// form the mesh, then run epochs as SEED frames arrive until the
-/// driver sends SHUTDOWN (or closes the control channel between
-/// epochs). `deadline` bounds every rendezvous step.
+/// Serve one rank of a tcp fabric with default worker options.
 pub fn run_worker(
     dispatch: WorkerDispatch,
     connect: &str,
     rank: usize,
     deadline: Duration,
 ) -> Result<(), String> {
-    let (mut ctrl, mut peers) =
-        rendezvous::worker_join(connect, rank, deadline)?;
+    run_worker_opts(
+        dispatch,
+        connect,
+        rank,
+        WorkerOptions {
+            deadline,
+            ..WorkerOptions::default()
+        },
+    )
+}
+
+/// Serve one rank of a tcp fabric: join via the registrar at `connect`
+/// (bootstrap, or the respawn re-join when the driver is mid-recovery
+/// and `opts.resume` names the predecessor's checkpoints), form the
+/// mesh, then run epochs as SEED frames arrive until the driver sends
+/// SHUTDOWN (or closes the control channel between epochs).
+pub fn run_worker_opts(
+    dispatch: WorkerDispatch,
+    connect: &str,
+    rank: usize,
+    opts: WorkerOptions,
+) -> Result<(), String> {
+    let joined = rendezvous::worker_join(connect, rank, opts.deadline)?;
+    let mut ctrl = joined.ctrl;
+    let mut peers = joined.peers;
+    let listener = joined.listener;
+    let mut resume = opts.resume;
     loop {
         match socket::next_ctrl_frame(&mut ctrl, None)? {
             // driver gone between epochs: treat as shutdown (its work,
@@ -336,7 +725,21 @@ pub fn run_worker(
                                 .join(", ")
                         )
                     })?;
-                handler(rank, &head, actor_seed, &mut ctrl, &mut peers)?;
+                let mut hooks = TcpHooks {
+                    rank,
+                    listener: listener.as_ref(),
+                    ckpt_dir: &opts.ckpt_dir,
+                    resume: &mut resume,
+                };
+                handler(
+                    rank,
+                    &head,
+                    actor_seed,
+                    &mut ctrl,
+                    &mut peers,
+                    &mut hooks,
+                    opts.chaos,
+                )?;
             }
             Some((k, ..)) => {
                 return Err(format!(

@@ -10,7 +10,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::comm::{Backend, FlushPolicy};
+use crate::comm::{Backend, FaultPolicy, FlushPolicy};
 use crate::coordinator::Partitioner;
 use crate::hll::Estimator;
 
@@ -181,6 +181,54 @@ impl Config {
             FlushPolicy::pinned(threshold as usize)
         })
     }
+
+    /// Fault-tolerance policy for socket-backend epochs:
+    /// `comm.checkpoint_interval` (checkpoint every N seed chunks; 0 =
+    /// off), `comm.checkpoint_secs` (time trigger; 0 = off),
+    /// `comm.checkpoint_chunk` (edges per seed chunk),
+    /// `comm.liveness_rearms` (cap on control-deadline re-arms before a
+    /// silent worker is declared dead) and `comm.max_respawns` (recovery
+    /// generations per epoch).
+    pub fn fault_policy(&self) -> Result<FaultPolicy> {
+        let d = FaultPolicy::default();
+        let every = self
+            .get_int("comm.checkpoint_interval", d.ckpt_every_chunks as i64);
+        let secs = self.get_int("comm.checkpoint_secs", d.ckpt_secs as i64);
+        let chunk = self.get_int("comm.checkpoint_chunk", d.chunk as i64);
+        let rearms =
+            self.get_int("comm.liveness_rearms", d.rearm_cap as i64);
+        let respawns =
+            self.get_int("comm.max_respawns", d.max_respawns as i64);
+        if every < 0 || secs < 0 {
+            bail!(
+                "comm.checkpoint_interval and comm.checkpoint_secs must \
+                 be >= 0"
+            );
+        }
+        if chunk <= 0 {
+            bail!("comm.checkpoint_chunk must be positive, got {chunk}");
+        }
+        if rearms <= 0 || rearms > u32::MAX as i64 {
+            bail!(
+                "comm.liveness_rearms must be in 1..={}, got {rearms}",
+                u32::MAX
+            );
+        }
+        if respawns < 0 || respawns > u32::MAX as i64 {
+            bail!(
+                "comm.max_respawns must be in 0..={}, got {respawns}",
+                u32::MAX
+            );
+        }
+        Ok(FaultPolicy {
+            ckpt_every_chunks: every as u64,
+            ckpt_secs: secs as u64,
+            chunk: chunk as u64,
+            rearm_cap: rearms as u32,
+            max_respawns: respawns as u32,
+            chaos: None,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -244,6 +292,32 @@ adaptive_flush = false
         assert_eq!(c2.flush_policy().unwrap().threshold, 512);
         c2.set_override("comm.flush_threshold=0").unwrap();
         assert!(c2.flush_policy().is_err());
+    }
+
+    #[test]
+    fn fault_policy_keys_parse_and_validate() {
+        let c = Config::parse("").unwrap();
+        let d = c.fault_policy().unwrap();
+        assert_eq!(d, FaultPolicy::default());
+        assert!(!d.resilient());
+
+        let mut c2 = Config::parse("").unwrap();
+        c2.set_override("comm.checkpoint_interval=3").unwrap();
+        c2.set_override("comm.checkpoint_chunk=128").unwrap();
+        c2.set_override("comm.liveness_rearms=4").unwrap();
+        c2.set_override("comm.max_respawns=1").unwrap();
+        let f = c2.fault_policy().unwrap();
+        assert!(f.resilient());
+        assert_eq!(f.ckpt_every_chunks, 3);
+        assert_eq!(f.chunk, 128);
+        assert_eq!(f.rearm_cap, 4);
+        assert_eq!(f.max_respawns, 1);
+
+        c2.set_override("comm.checkpoint_chunk=0").unwrap();
+        assert!(c2.fault_policy().is_err());
+        let mut c3 = Config::parse("").unwrap();
+        c3.set_override("comm.liveness_rearms=0").unwrap();
+        assert!(c3.fault_policy().is_err());
     }
 
     #[test]

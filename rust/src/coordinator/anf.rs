@@ -32,8 +32,8 @@ use crate::comm::codec::{
     put_u8,
 };
 use crate::comm::{
-    codec, run_epoch_wire_seeded, Actor, Backend, CommStats, FabricActor,
-    FlushPolicy, Outbox, WireActor, WireError, WireMsg,
+    codec, run_epoch_wire_full, Actor, Backend, CommStats, FabricActor,
+    FaultPolicy, FlushPolicy, Outbox, WireActor, WireError, WireMsg,
 };
 use crate::graph::stream::{EdgeStream, MemoryStream};
 use crate::graph::VertexId;
@@ -67,6 +67,9 @@ pub struct AnfOptions {
     pub keep_layers: bool,
     /// Comm-plane flush policy (ignored by the sequential backend).
     pub flush: FlushPolicy,
+    /// Fault-tolerance policy (socket backends): each pass becomes a
+    /// checkpointed epoch that survives worker death. Default: off.
+    pub fault: FaultPolicy,
 }
 
 impl Default for AnfOptions {
@@ -77,6 +80,7 @@ impl Default for AnfOptions {
             estimator: Estimator::default(),
             keep_layers: false,
             flush: FlushPolicy::default(),
+            fault: FaultPolicy::default(),
         }
     }
 }
@@ -238,6 +242,12 @@ impl WireActor for AnfActor {
 
     fn read_state(&mut self, input: &mut &[u8]) -> Result<(), WireError> {
         self.next = codec::decode_store(*self.next.config(), input)?;
+        // read_state must land the actor exactly in the written state:
+        // a checkpoint rollback applies it to a mid-epoch actor whose
+        // fan buffers may hold post-barrier forwards
+        for buf in &mut self.fwd {
+            buf.clear();
+        }
         Ok(())
     }
 }
@@ -279,6 +289,27 @@ impl FabricActor for AnfActor {
             prev,
             fwd: vec![Vec::new(); ranks],
         })
+    }
+
+    fn input_len(&self) -> usize {
+        self.substream.edges().len()
+    }
+
+    fn seed_range(
+        &mut self,
+        start: usize,
+        end: usize,
+        out: &mut Outbox<AnfMsg>,
+    ) {
+        let ranks = self.ranks;
+        let part = self.partitioner;
+        for &(u, v) in &self.substream.edges()[start..end] {
+            if u == v {
+                continue;
+            }
+            out.send(part.rank_of(u, ranks), AnfMsg::Edge(u, v));
+            out.send(part.rank_of(v, ranks), AnfMsg::Edge(v, u));
+        }
     }
 }
 
@@ -350,11 +381,12 @@ pub fn neighborhood_approximation(
                 fwd: vec![Vec::new(); ranks],
             })
             .collect();
-        let stats = run_epoch_wire_seeded(
+        let stats = run_epoch_wire_full(
             opts.backend,
             &mut actors,
             opts.flush,
             &flush_seeds,
+            opts.fault,
         );
         layer = actors.into_iter().map(|a| a.next).collect();
         pass_seconds.push(start.elapsed().as_secs_f64());

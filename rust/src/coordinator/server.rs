@@ -12,6 +12,7 @@
 //! STATS                → vertices=<n> ranks=<p> p=<p> mem=<bytes>
 //!                        dense=<n> mode=<heap|mmap> resident=<bytes>
 //!                        comm=<sequential|threaded|process|tcp|none>
+//!                        [ckpts=<n> restores=<n>]
 //!                        [rank<i>=<msgs>/<bytes>/<flushes> ...]
 //! QUIT                 → BYE (closes the connection)
 //! ```
@@ -235,7 +236,12 @@ fn respond(line: &str, engine: &QueryEngine) -> Response {
             );
             match engine.accumulation_stats() {
                 Some(cs) => {
-                    line.push_str(&format!(" comm={}", cs.mode.name()));
+                    line.push_str(&format!(
+                        " comm={} ckpts={} restores={}",
+                        cs.mode.name(),
+                        cs.checkpoints,
+                        cs.restores
+                    ));
                     for (r, pr) in cs.per_rank.iter().enumerate() {
                         line.push_str(&format!(
                             " rank{r}={}/{}/{}",

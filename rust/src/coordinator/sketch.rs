@@ -21,8 +21,9 @@
 use std::collections::HashMap;
 
 use crate::comm::{
-    codec, run_epoch_with, run_epoch_wire, Actor, Backend, CommStats,
-    FabricActor, FlushPolicy, Outbox, WireActor, WireError, WireMsg,
+    codec, run_epoch_with, run_epoch_wire_full, Actor, Backend, CommStats,
+    FabricActor, FaultPolicy, FlushPolicy, Outbox, WireActor, WireError,
+    WireMsg,
 };
 use crate::graph::stream::{EdgeStream, MemoryStream};
 use crate::graph::{Edge, VertexId};
@@ -209,6 +210,9 @@ pub struct AccumulateOptions {
     pub partitioner: Partitioner,
     /// Comm-plane flush policy (ignored by the sequential backend).
     pub flush: FlushPolicy,
+    /// Fault-tolerance policy (socket backends): checkpointed epochs
+    /// survive worker death via rollback + respawn. Default: off.
+    pub fault: FaultPolicy,
 }
 
 impl Default for AccumulateOptions {
@@ -217,6 +221,7 @@ impl Default for AccumulateOptions {
             backend: Backend::Sequential,
             partitioner: Partitioner::RoundRobin,
             flush: FlushPolicy::default(),
+            fault: FaultPolicy::default(),
         }
     }
 }
@@ -268,7 +273,10 @@ impl WireActor for AccumActor {
 /// seed_state leg: Algorithm 1's epoch inputs are the rank count, the
 /// partition `f`, the shared sketch config, and this rank's edge
 /// substream σ_P — everything a remote worker needs to run `seed` and
-/// accumulate, with no fork copy-on-write involved.
+/// accumulate, with no fork copy-on-write involved. The substream is
+/// also the checkpointable input: `seed_range` replays edge windows, so
+/// resilient epochs can chunk the seed context and resume from a
+/// checkpoint frontier.
 impl FabricActor for AccumActor {
     const KIND: &'static str = "deg-accum";
 
@@ -294,6 +302,22 @@ impl FabricActor for AccumActor {
             store: SketchStore::new(config),
             batch: Vec::new(),
         })
+    }
+
+    fn input_len(&self) -> usize {
+        self.substream.edges().len()
+    }
+
+    fn seed_range(&mut self, start: usize, end: usize, out: &mut Outbox<Edge>) {
+        let ranks = self.ranks;
+        let part = self.partitioner;
+        for &(u, v) in &self.substream.edges()[start..end] {
+            if u == v {
+                continue;
+            }
+            out.send(part.rank_of(u, ranks), (u, v));
+            out.send(part.rank_of(v, ranks), (v, u));
+        }
     }
 }
 
@@ -323,7 +347,13 @@ pub fn accumulate(
             batch: Vec::new(),
         })
         .collect();
-    let stats = run_epoch_wire(opts.backend, &mut actors, opts.flush);
+    let stats = run_epoch_wire_full(
+        opts.backend,
+        &mut actors,
+        opts.flush,
+        &[],
+        opts.fault,
+    );
     DegreeSketch::from_parts(
         config,
         opts.partitioner,

@@ -27,8 +27,8 @@ use crate::comm::codec::{
     put_f64, put_u32, put_u64, put_u8,
 };
 use crate::comm::{
-    run_epoch_wire, Actor, Backend, CommStats, FabricActor, FlushPolicy,
-    Outbox, WireActor, WireError, WireMsg,
+    run_epoch_wire_full, Actor, Backend, CommStats, FabricActor, FaultPolicy,
+    FlushPolicy, Outbox, WireActor, WireError, WireMsg,
 };
 use crate::graph::stream::{EdgeStream, MemoryStream};
 use crate::graph::{canonical, Edge, VertexId};
@@ -89,6 +89,9 @@ pub struct TriangleOptions {
     pub discard_dominated: bool,
     /// Comm-plane flush policy (ignored by the sequential backend).
     pub flush: FlushPolicy,
+    /// Fault-tolerance policy (socket backends): the chassis epoch is
+    /// checkpointed and survives worker death. Default: off.
+    pub fault: FaultPolicy,
 }
 
 impl Default for TriangleOptions {
@@ -99,6 +102,7 @@ impl Default for TriangleOptions {
             intersect: IntersectBackend::default(),
             discard_dominated: false,
             flush: FlushPolicy::default(),
+            fault: FaultPolicy::default(),
         }
     }
 }
@@ -471,6 +475,13 @@ impl WireActor for TriActor {
             counts.insert(v, get_f64(input)?);
         }
         self.vertex_counts = counts;
+        // read_state must land the actor exactly in the written state:
+        // a checkpoint rollback applies it to a mid-epoch actor whose
+        // deferred buffers may hold post-barrier work
+        self.pending.clear();
+        for buf in &mut self.fwd {
+            buf.clear();
+        }
         Ok(())
     }
 }
@@ -584,14 +595,15 @@ impl FabricActor for TriActor {
             ds,
             substream: MemoryStream::new(edges),
             opts: TriangleOptions {
-                // the worker's comm backend/flush policy come from the
-                // SEED head, not from TriangleOptions; only the chassis
-                // knobs matter here
+                // the worker's comm backend/flush/fault policies come
+                // from the SEED head, not from TriangleOptions; only the
+                // chassis knobs matter here
                 backend: Backend::Sequential,
                 k,
                 intersect,
                 discard_dominated,
                 flush: FlushPolicy::default(),
+                fault: FaultPolicy::default(),
             },
             tri_sum: 0.0,
             edge_heap: TopK::new(k),
@@ -601,6 +613,26 @@ impl FabricActor for TriActor {
             pending: Vec::new(),
             fwd: vec![Vec::new(); ranks],
         })
+    }
+
+    fn input_len(&self) -> usize {
+        self.substream.edges().len()
+    }
+
+    fn seed_range(
+        &mut self,
+        start: usize,
+        end: usize,
+        out: &mut Outbox<TriMsg>,
+    ) {
+        let ranks = self.ranks;
+        let part = self.ds.partitioner();
+        for &(u, v) in &self.substream.edges()[start..end] {
+            if u == v {
+                continue;
+            }
+            out.send(part.rank_of(u, ranks), TriMsg::Edge(u, v));
+        }
     }
 }
 
@@ -646,7 +678,13 @@ fn run_chassis(
             fwd: vec![Vec::new(); ds.num_ranks()],
         })
         .collect();
-    let comm = run_epoch_wire(opts.backend, &mut actors, opts.flush);
+    let comm = run_epoch_wire_full(
+        opts.backend,
+        &mut actors,
+        opts.flush,
+        &[],
+        opts.fault,
+    );
     let seconds = start.elapsed().as_secs_f64();
     (actors, comm, seconds)
 }

@@ -6,8 +6,11 @@
 //!                         [--backend sequential|threaded|process|tcp]
 //!                         [--flush-threshold N] [--fixed-flush]
 //!                         [--listen addr --hosts 0=h:p,1=h:p,...]
+//!                         [--checkpoint N] [--checkpoint-secs M]
+//!                         [--checkpoint-chunk E]
 //! degreesketch worker     --connect driverhost:port --rank 0
-//!                         [--deadline-secs 60]
+//!                         [--deadline-secs 60] [--ckpt-dir DIR]
+//!                         [--resume DIR|FILE]
 //! degreesketch query      --sketch sketch.d/ deg 42
 //! degreesketch serve      --sketch sketch.d/|sketch.snap --addr 127.0.0.1:7171
 //! degreesketch snapshot   create  --sketch sketch.d/ --out sketch.snap
@@ -32,7 +35,12 @@
 //! then run the driver with `--listen` naming its registrar address and
 //! `--hosts` the rank → mesh-listener map, or set `comm.listen` /
 //! `comm.hosts` in the config), `--flush-threshold N` and
-//! `--fixed-flush` (pin the adaptive per-destination flush thresholds).
+//! `--fixed-flush` (pin the adaptive per-destination flush thresholds),
+//! plus the fault-tolerance knobs `--checkpoint N` /
+//! `--checkpoint-secs M` / `--checkpoint-chunk E` (checkpointed epochs
+//! on the socket backends: a SIGKILLed worker can be respawned with
+//! `worker --resume <ckpt-dir>` and the epoch resumes from the last
+//! barrier instead of aborting — see `comm.checkpoint_*` config keys).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -40,7 +48,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use degreesketch::cli::Args;
-use degreesketch::comm::{Backend, FlushPolicy};
+use degreesketch::comm::{Backend, FaultPolicy, FlushPolicy};
 use degreesketch::config::Config;
 use degreesketch::coordinator::anf::{neighborhood_approximation, AnfOptions};
 use degreesketch::coordinator::sketch::{
@@ -185,7 +193,10 @@ fn setup_comm_backend(
 }
 
 /// The `worker` subcommand: serve one rank of a tcp fabric until the
-/// driver shuts it down.
+/// driver shuts it down. `--ckpt-dir` is where resilient epochs write
+/// this rank's checkpoint records; a respawned replacement passes
+/// `--resume` with its predecessor's checkpoint dir (or one record
+/// file) to resume the interrupted epoch.
 fn cmd_worker(args: &Args) -> Result<()> {
     let connect = args.require("connect")?.to_string();
     let rank = args.get_usize("rank", usize::MAX)?;
@@ -194,13 +205,23 @@ fn cmd_worker(args: &Args) -> Result<()> {
     }
     let deadline =
         std::time::Duration::from_secs(args.get_u64("deadline-secs", 60)?);
+    let mut opts = degreesketch::comm::tcp::WorkerOptions {
+        deadline,
+        ..Default::default()
+    };
+    if let Some(dir) = args.get("ckpt-dir") {
+        opts.ckpt_dir = PathBuf::from(dir);
+    }
+    if let Some(src) = args.get("resume") {
+        opts.resume = Some(PathBuf::from(src));
+    }
     args.finish()?;
     eprintln!("worker rank {rank}: joining fabric via {connect}");
-    degreesketch::comm::tcp::run_worker(
+    degreesketch::comm::tcp::run_worker_opts(
         degreesketch::coordinator::worker_dispatch(),
         &connect,
         rank,
-        deadline,
+        opts,
     )
     .map_err(anyhow::Error::msg)?;
     eprintln!("worker rank {rank}: fabric shut down, exiting");
@@ -228,6 +249,34 @@ fn flush_policy_of(args: &Args, config: &Config) -> Result<FlushPolicy> {
         policy = FlushPolicy::pinned(policy.threshold);
     }
     Ok(policy)
+}
+
+/// Fault-tolerance policy: `comm.*` config keys overridden by
+/// `--checkpoint N` (checkpoint every N seed chunks — any nonzero value
+/// makes the socket-backend epoch resilient), `--checkpoint-secs M` and
+/// `--checkpoint-chunk E` (edges per seed chunk).
+fn fault_policy_of(args: &Args, config: &Config) -> Result<FaultPolicy> {
+    let mut fault = config.fault_policy()?;
+    if let Some(raw) = args.get("checkpoint") {
+        fault.ckpt_every_chunks = raw
+            .parse()
+            .with_context(|| format!("bad --checkpoint {raw:?}"))?;
+    }
+    if let Some(raw) = args.get("checkpoint-secs") {
+        fault.ckpt_secs = raw
+            .parse()
+            .with_context(|| format!("bad --checkpoint-secs {raw:?}"))?;
+    }
+    if let Some(raw) = args.get("checkpoint-chunk") {
+        let chunk: u64 = raw
+            .parse()
+            .with_context(|| format!("bad --checkpoint-chunk {raw:?}"))?;
+        if chunk == 0 {
+            bail!("--checkpoint-chunk must be positive");
+        }
+        fault.chunk = chunk;
+    }
+    Ok(fault)
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -260,6 +309,7 @@ fn cmd_accumulate(args: &Args, config: &Config) -> Result<()> {
     let out = args.require("out")?.to_string();
     let backend = backend_of(args, config)?;
     let flush = flush_policy_of(args, config)?;
+    let fault = fault_policy_of(args, config)?;
     setup_comm_backend(args, config, backend, ranks)?;
     args.finish()?;
 
@@ -273,18 +323,21 @@ fn cmd_accumulate(args: &Args, config: &Config) -> Result<()> {
             backend,
             partitioner: config.partitioner()?,
             flush,
+            fault,
         },
     );
     let secs = start.elapsed().as_secs_f64();
     println!(
         "accumulated {} vertex sketches on {} ranks ({}) in {:.3}s \
-         ({} messages, {} bytes in sketches)",
+         ({} messages, {} bytes in sketches, {} checkpoints, {} restores)",
         ds.num_vertices(),
         ranks,
         backend.name(),
         secs,
         ds.accumulation_stats.messages,
-        ds.memory_bytes()
+        ds.memory_bytes(),
+        ds.accumulation_stats.checkpoints,
+        ds.accumulation_stats.restores
     );
     let engine = QueryEngine::new(ds);
     engine.save(Path::new(&out))?;
@@ -382,6 +435,7 @@ fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
                 )?;
                 let backend = backend_of(args, config)?;
                 let flush = flush_policy_of(args, config)?;
+                let fault = fault_policy_of(args, config)?;
                 setup_comm_backend(args, config, backend, ranks)?;
                 args.finish()?;
                 let ds = accumulate_stream(
@@ -392,6 +446,7 @@ fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
                         backend,
                         partitioner: config.partitioner()?,
                         flush,
+                        fault,
                     },
                 );
                 QueryEngine::new(ds).save_snapshot(Path::new(&out))?
@@ -499,6 +554,7 @@ fn cmd_anf(args: &Args, config: &Config) -> Result<()> {
     let max_t = args.get_usize("max-t", 5)?;
     let backend = backend_of(args, config)?;
     let flush = flush_policy_of(args, config)?;
+    let fault = fault_policy_of(args, config)?;
     setup_comm_backend(args, config, backend, ranks)?;
     let want_exact = args.has("exact");
     args.finish()?;
@@ -514,6 +570,7 @@ fn cmd_anf(args: &Args, config: &Config) -> Result<()> {
             backend,
             partitioner: config.partitioner()?,
             flush,
+            fault,
         },
     );
     let accum_s = t0.elapsed().as_secs_f64();
@@ -527,6 +584,7 @@ fn cmd_anf(args: &Args, config: &Config) -> Result<()> {
             estimator: config.estimator()?,
             keep_layers: false,
             flush,
+            fault,
         },
     );
     println!("accumulation: {accum_s:.3}s");
@@ -567,6 +625,7 @@ fn cmd_triangles(args: &Args, config: &Config) -> Result<()> {
     let k = args.get_usize("k", config.get_int("triangles.k", 100) as usize)?;
     let backend = backend_of(args, config)?;
     let flush = flush_policy_of(args, config)?;
+    let fault = fault_policy_of(args, config)?;
     let intersect_kind = args.get_or("intersect", "mle").to_string();
     let want_exact = args.has("exact");
     let discard = args.has("discard-dominated")
@@ -612,6 +671,7 @@ fn cmd_triangles(args: &Args, config: &Config) -> Result<()> {
             backend,
             partitioner: config.partitioner()?,
             flush,
+            fault,
         },
     ));
     let accum_s = t0.elapsed().as_secs_f64();
@@ -622,6 +682,7 @@ fn cmd_triangles(args: &Args, config: &Config) -> Result<()> {
         intersect,
         discard_dominated: discard,
         flush,
+        fault,
     };
 
     println!("accumulation: {accum_s:.3}s");

@@ -1,0 +1,361 @@
+//! **Epoch checkpoint records** — the unit of fabric fault tolerance.
+//!
+//! A resilient (checkpointed) socket epoch periodically freezes each
+//! rank's mid-epoch actor state at a driver-coordinated quiescent
+//! barrier (see `comm::socket` module docs). The frozen record is this
+//! module's format: a CRC'd, little-endian, self-describing blob that
+//! works both as a **file** (`degreesketch worker --ckpt-dir …`, resumed
+//! with `--resume <file>`) and as an **inline payload** (the process
+//! backend ships records back to the driver inside CKPT acks and re-seeds
+//! respawned forks from driver-held copies).
+//!
+//! # Record layout (version 1, all little-endian)
+//!
+//! ```text
+//! [0,  8)  magic   "DSKCKPT1"
+//! [8, 12)  version u32 = 1
+//! [12,20)  epoch   u64   fabric epoch id the barrier belongs to
+//! [20,28)  generation u64  recovery generation the record was taken in
+//! [28,36)  barrier u64   barrier sequence number within the epoch
+//! [36,40)  rank    u32
+//! [40,44)  ranks   u32
+//! [44,52)  pos     u64   seed input units (edges) already consumed
+//! [52,60)  sent    u64   cumulative messages queued by this rank
+//! [60,68)  delivered u64 cumulative messages delivered to this rank
+//! [68,76)  frames_in u64 inbound frames observed (stats continuity)
+//! [76,84)  bytes_in  u64 inbound frame bytes observed
+//! [84]     kind_len  u8, then the FabricActor::KIND bytes
+//! then     ranks × (u64 sent_seq, u64 recv_seq)   per-peer channel tokens
+//! then     u64 state_len, then the WireActor::write_state bytes
+//! [last 4] CRC-32 over every preceding byte
+//! ```
+//!
+//! The channel token vector is recorded at a **drained barrier** (global
+//! quiescence: every `sent_seq(i→j)` equals the matching `recv_seq(j←i)`),
+//! which is exactly what lets every rank restore its own vector
+//! independently and still agree with every peer. Decoding validates
+//! magic, version, lengths and the trailing CRC; corruption and
+//! truncation are rejected with a named error, mirroring the snapshot
+//! reader's stance.
+
+use std::path::Path;
+
+use crate::comm::codec::{put_u32, put_u64, WireError};
+use crate::util::crc32::Crc32;
+
+/// `"DSKCKPT1"`.
+pub const CKPT_MAGIC: [u8; 8] = *b"DSKCKPT1";
+/// Current record format version.
+pub const CKPT_VERSION: u32 = 1;
+
+/// One rank's frozen mid-epoch state at a checkpoint barrier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointRecord {
+    /// Fabric epoch id (resume rejects records from another epoch).
+    pub epoch: u64,
+    /// Recovery generation the record was taken in (0 = undisturbed).
+    pub generation: u64,
+    /// Barrier sequence number within the epoch (1, 2, …; 0 is the
+    /// implicit pre-seed "checkpoint zero"). Recovery restores every
+    /// rank to the **same** barrier — the last one whose records the
+    /// driver saw acknowledged by all ranks — so a rank that died
+    /// mid-barrier can never mix barrier states across the fabric.
+    pub barrier: u64,
+    pub rank: u32,
+    pub ranks: u32,
+    /// Seed input units (edges) consumed before the barrier.
+    pub pos: u64,
+    /// Cumulative messages this rank had queued at the barrier.
+    pub sent_total: u64,
+    /// Cumulative messages delivered to this rank at the barrier.
+    pub delivered_total: u64,
+    /// Inbound frame count at the barrier (stats continuity on resume).
+    pub frames_in: u64,
+    /// Inbound frame bytes at the barrier.
+    pub bytes_in: u64,
+    /// `FabricActor::KIND` of the checkpointed actor.
+    pub kind: String,
+    /// Per-peer `(sent_seq, recv_seq)` cumulative channel tokens
+    /// (index = peer rank; the self entry is always `(0, 0)`).
+    pub channels: Vec<(u64, u64)>,
+    /// `WireActor::write_state` bytes at the barrier.
+    pub state: Vec<u8>,
+}
+
+// Decoding rides the comm plane's little-endian primitives (one codec
+// for every byte-order-sensitive read in the crate); only the error
+// type is adapted to this module's String errors.
+fn fail(e: WireError) -> String {
+    format!("checkpoint record: {e}")
+}
+
+fn get<'a>(input: &mut &'a [u8], n: usize) -> Result<&'a [u8], String> {
+    crate::comm::codec::take(input, n).map_err(fail)
+}
+
+fn get_u32(input: &mut &[u8]) -> Result<u32, String> {
+    crate::comm::codec::get_u32(input).map_err(fail)
+}
+
+fn get_u64(input: &mut &[u8]) -> Result<u64, String> {
+    crate::comm::codec::get_u64(input).map_err(fail)
+}
+
+impl CheckpointRecord {
+    /// Serialize the record (magic + fields + trailing CRC).
+    pub fn encode(&self) -> Vec<u8> {
+        assert!(self.kind.len() <= u8::MAX as usize, "actor kind too long");
+        assert_eq!(
+            self.channels.len(),
+            self.ranks as usize,
+            "one channel token pair per rank"
+        );
+        let mut out = Vec::with_capacity(
+            96 + self.kind.len() + 16 * self.channels.len() + self.state.len(),
+        );
+        out.extend_from_slice(&CKPT_MAGIC);
+        put_u32(&mut out, CKPT_VERSION);
+        put_u64(&mut out, self.epoch);
+        put_u64(&mut out, self.generation);
+        put_u64(&mut out, self.barrier);
+        put_u32(&mut out, self.rank);
+        put_u32(&mut out, self.ranks);
+        put_u64(&mut out, self.pos);
+        put_u64(&mut out, self.sent_total);
+        put_u64(&mut out, self.delivered_total);
+        put_u64(&mut out, self.frames_in);
+        put_u64(&mut out, self.bytes_in);
+        out.push(self.kind.len() as u8);
+        out.extend_from_slice(self.kind.as_bytes());
+        for &(s, r) in &self.channels {
+            put_u64(&mut out, s);
+            put_u64(&mut out, r);
+        }
+        put_u64(&mut out, self.state.len() as u64);
+        out.extend_from_slice(&self.state);
+        let mut crc = Crc32::new();
+        crc.update(&out);
+        let digest = crc.finish();
+        out.extend_from_slice(&digest.to_le_bytes());
+        out
+    }
+
+    /// Decode (and CRC-check) a record produced by [`Self::encode`].
+    pub fn decode(bytes: &[u8]) -> Result<Self, String> {
+        if bytes.len() < 8 + 4 + 4 {
+            return Err("checkpoint record truncated".to_string());
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 4);
+        let stored = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
+        let mut crc = Crc32::new();
+        crc.update(body);
+        let actual = crc.finish();
+        if stored != actual {
+            return Err(format!(
+                "checkpoint record crc mismatch: stored {stored:#010x}, \
+                 actual {actual:#010x}"
+            ));
+        }
+        let mut input = body;
+        let magic = get(&mut input, 8)?;
+        if magic != CKPT_MAGIC {
+            return Err(format!("bad checkpoint magic {magic:02x?}"));
+        }
+        let version = get_u32(&mut input)?;
+        if version != CKPT_VERSION {
+            return Err(format!(
+                "unsupported checkpoint version {version} (expected \
+                 {CKPT_VERSION})"
+            ));
+        }
+        let epoch = get_u64(&mut input)?;
+        let generation = get_u64(&mut input)?;
+        let barrier = get_u64(&mut input)?;
+        let rank = get_u32(&mut input)?;
+        let ranks = get_u32(&mut input)?;
+        if ranks == 0 || rank >= ranks {
+            return Err(format!(
+                "checkpoint rank {rank} outside 0..{ranks}"
+            ));
+        }
+        if ranks as usize > 1 << 16 {
+            return Err(format!("checkpoint names {ranks} ranks"));
+        }
+        let pos = get_u64(&mut input)?;
+        let sent_total = get_u64(&mut input)?;
+        let delivered_total = get_u64(&mut input)?;
+        let frames_in = get_u64(&mut input)?;
+        let bytes_in = get_u64(&mut input)?;
+        let kind_len = get(&mut input, 1)?[0] as usize;
+        let kind_bytes = get(&mut input, kind_len)?;
+        let kind = std::str::from_utf8(kind_bytes)
+            .map_err(|_| "non-utf8 checkpoint actor kind".to_string())?
+            .to_string();
+        let mut channels = Vec::with_capacity(ranks as usize);
+        for _ in 0..ranks {
+            let s = get_u64(&mut input)?;
+            let r = get_u64(&mut input)?;
+            channels.push((s, r));
+        }
+        let state_len = get_u64(&mut input)? as usize;
+        if state_len != input.len() {
+            return Err(format!(
+                "checkpoint state length {state_len} does not match the \
+                 {} remaining bytes",
+                input.len()
+            ));
+        }
+        let state = input.to_vec();
+        Ok(Self {
+            epoch,
+            generation,
+            barrier,
+            rank,
+            ranks,
+            pos,
+            sent_total,
+            delivered_total,
+            frames_in,
+            bytes_in,
+            kind,
+            channels,
+            state,
+        })
+    }
+
+    /// Write the record to `path` atomically (temp file + rename), so a
+    /// rank killed mid-checkpoint leaves the previous record intact.
+    pub fn write_file(&self, path: &Path) -> Result<(), String> {
+        write_record_bytes(path, &self.encode())
+    }
+
+    /// Read and decode a record written by [`Self::write_file`].
+    pub fn read_file(path: &Path) -> Result<Self, String> {
+        let bytes = std::fs::read(path).map_err(|e| {
+            format!("reading checkpoint {}: {e}", path.display())
+        })?;
+        Self::decode(&bytes)
+            .map_err(|e| format!("checkpoint {}: {e}", path.display()))
+    }
+}
+
+/// Write already-encoded record bytes atomically (temp file + rename),
+/// creating the checkpoint directory if needed.
+pub fn write_record_bytes(path: &Path, bytes: &[u8]) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| {
+                format!("creating checkpoint dir {}: {e}", dir.display())
+            })?;
+        }
+    }
+    let tmp = path.with_extension("dsc.tmp");
+    std::fs::write(&tmp, bytes).map_err(|e| {
+        format!("writing checkpoint {}: {e}", tmp.display())
+    })?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        format!(
+            "publishing checkpoint {} -> {}: {e}",
+            tmp.display(),
+            path.display()
+        )
+    })
+}
+
+/// Canonical checkpoint file name for one rank's record at one barrier
+/// of one fabric epoch. Barriers get distinct files so a recovery can
+/// name the exact barrier every rank must restore to (a rank killed
+/// mid-barrier may have written barrier `b` while the fabric restores
+/// to `b - 1`).
+pub fn checkpoint_file_name(epoch: u64, barrier: u64, rank: usize) -> String {
+    format!("ckpt-e{epoch}-b{barrier}-r{rank}.dsc")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CheckpointRecord {
+        CheckpointRecord {
+            epoch: 3,
+            generation: 1,
+            barrier: 6,
+            rank: 2,
+            ranks: 4,
+            pos: 12_345,
+            sent_total: 777,
+            delivered_total: 654,
+            frames_in: 40,
+            bytes_in: 9_876,
+            kind: "deg-accum".to_string(),
+            channels: vec![(0, 0), (10, 11), (0, 0), (12, 13)],
+            state: (0..200u32).map(|i| (i * 7) as u8).collect(),
+        }
+    }
+
+    #[test]
+    fn record_round_trips() {
+        let rec = sample();
+        let wire = rec.encode();
+        assert_eq!(CheckpointRecord::decode(&wire).unwrap(), rec);
+    }
+
+    #[test]
+    fn any_single_byte_corruption_is_rejected() {
+        let wire = sample().encode();
+        for i in 0..wire.len() {
+            let mut bad = wire.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                CheckpointRecord::decode(&bad).is_err(),
+                "corrupt byte {i} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let wire = sample().encode();
+        for cut in 0..wire.len() {
+            assert!(
+                CheckpointRecord::decode(&wire[..cut]).is_err(),
+                "truncation at {cut} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn file_round_trip_and_missing_file_error() {
+        let dir = std::env::temp_dir().join("degreesketch_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(checkpoint_file_name(3, 6, 2));
+        let rec = sample();
+        rec.write_file(&path).unwrap();
+        assert_eq!(CheckpointRecord::read_file(&path).unwrap(), rec);
+        // overwrite is atomic-replace: a second write wins cleanly
+        let mut rec2 = sample();
+        rec2.pos = 99;
+        rec2.write_file(&path).unwrap();
+        assert_eq!(CheckpointRecord::read_file(&path).unwrap().pos, 99);
+        std::fs::remove_file(&path).unwrap();
+        assert!(CheckpointRecord::read_file(&path).is_err());
+    }
+
+    #[test]
+    fn rank_and_version_sanity_checks() {
+        let mut rec = sample();
+        rec.rank = 9; // >= ranks
+        let wire = rec.encode();
+        assert!(CheckpointRecord::decode(&wire).is_err());
+        // a wrong version is rejected even with a valid CRC
+        let mut wire = sample().encode();
+        wire[8] = 9;
+        let body_len = wire.len() - 4;
+        let mut crc = Crc32::new();
+        crc.update(&wire[..body_len]);
+        let digest = crc.finish().to_le_bytes();
+        let n = wire.len();
+        wire[n - 4..].copy_from_slice(&digest);
+        assert!(CheckpointRecord::decode(&wire).is_err());
+    }
+}

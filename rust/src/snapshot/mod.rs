@@ -54,13 +54,20 @@
 //! verified by [`MappedSnapshot::verify`] (run by `snapshot inspect`),
 //! keeping `open` free of full-arena scans.
 //!
+//! The sibling [`checkpoint`] module carries the *mid-epoch* variant of
+//! persistence: per-rank, per-barrier [`CheckpointRecord`]s that the
+//! comm plane's fault-tolerant epochs freeze at quiescent barriers and
+//! resume from after a worker death (see `comm::socket`).
+//!
 //! [`SketchRef`]: crate::hll::SketchRef
 
+pub mod checkpoint;
 mod layout;
 mod reader;
 mod source;
 mod writer;
 
+pub use checkpoint::CheckpointRecord;
 pub use layout::{MAGIC, VERSION};
 pub use reader::{MappedSnapshot, RankStats};
 pub use source::{

@@ -18,8 +18,8 @@ use std::time::Duration;
 use degreesketch::comm::codec::{
     decode_frame, decode_msgs, encode_msg_frame, FRAME_HEADER_LEN,
 };
-use degreesketch::comm::tcp::{self, TcpFabric, WorkerDispatch};
-use degreesketch::comm::{Backend, WireMsg};
+use degreesketch::comm::tcp::{self, TcpFabric, WorkerDispatch, WorkerOptions};
+use degreesketch::comm::{Backend, Chaos, FaultPolicy, WireMsg};
 use degreesketch::coordinator::worker_dispatch;
 use degreesketch::coordinator::anf::{
     neighborhood_approximation, AnfMsg, AnfOptions,
@@ -161,6 +161,10 @@ struct Answers {
 }
 
 fn run_all(edges: &[Edge], backend: Backend) -> Answers {
+    run_all_fault(edges, backend, FaultPolicy::default())
+}
+
+fn run_all_fault(edges: &[Edge], backend: Backend, fault: FaultPolicy) -> Answers {
     let ranks = 4;
     let stream = MemoryStream::new(edges.to_vec());
     let cfg = HllConfig::new(8, 0xB0B);
@@ -170,6 +174,7 @@ fn run_all(edges: &[Edge], backend: Backend) -> Answers {
         cfg,
         AccumulateOptions {
             backend,
+            fault,
             ..Default::default()
         },
     );
@@ -180,6 +185,7 @@ fn run_all(edges: &[Edge], backend: Backend) -> Answers {
         AnfOptions {
             backend,
             max_t: 3,
+            fault,
             ..Default::default()
         },
     );
@@ -189,6 +195,7 @@ fn run_all(edges: &[Edge], backend: Backend) -> Answers {
         // k exceeds |V| so heavy-hitter membership is "has a nonzero
         // count" — no tie-broken cutoff to perturb across backends
         k: 2000,
+        fault,
         ..Default::default()
     };
     let e = edge_triangle_heavy_hitters(&ds, &shards, &tri_opts);
@@ -270,8 +277,15 @@ fn sequential_threaded_and_process_answers_agree() {
 // sockets with worker threads standing in for worker processes)
 // ---------------------------------------------------------------------
 
+/// `Backend::Tcp` routes through a process-global fabric, so tests that
+/// configure it must not interleave.
+static GLOBAL_FABRIC_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 #[test]
 fn tcp_fabric_answers_match_sequential_end_to_end() {
+    let _guard = GLOBAL_FABRIC_LOCK
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
     let ranks = 4;
     let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
 
@@ -403,6 +417,252 @@ fn corrupt_and_truncated_frames_are_rejected_over_real_tcp() {
         "mid-frame EOF over tcp accepted"
     );
     writer.join().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Fault tolerance: kill a worker mid-epoch, resume from checkpoint,
+// demand bit-identical answers (the PR's acceptance bar)
+// ---------------------------------------------------------------------
+
+#[test]
+fn process_kill_resume_accumulation_is_bit_identical_to_sequential() {
+    // kill rank r at randomized points mid-accumulation — both before
+    // the first barrier (scratch replay) and after (checkpoint resume)
+    let edges = GraphSpec::parse("ws:300:6:5").unwrap().generate(11);
+    let stream = MemoryStream::new(edges);
+    let cfg = HllConfig::new(8, 0xFA11);
+    let seq = accumulate_stream(
+        &stream,
+        4,
+        cfg,
+        AccumulateOptions {
+            backend: Backend::Sequential,
+            ..Default::default()
+        },
+    );
+    let mut rng = Xoshiro256ss::new(0xD1E);
+    for trial in 0..3u64 {
+        let after = 20 + rng.next_below(200);
+        let fault = FaultPolicy {
+            ckpt_every_chunks: 2,
+            chunk: 64,
+            chaos: Some(Chaos {
+                rank: 1 + (trial as usize % 3),
+                epoch: 1,
+                after_delivered: after,
+                generation: 0,
+            }),
+            ..FaultPolicy::default()
+        };
+        let killed = accumulate_stream(
+            &stream,
+            4,
+            cfg,
+            AccumulateOptions {
+                backend: Backend::Process,
+                fault,
+                ..Default::default()
+            },
+        );
+        assert_eq!(
+            killed.accumulation_stats.restores, 1,
+            "trial {trial}: the injected death must trigger recovery"
+        );
+        assert_eq!(seq.num_vertices(), killed.num_vertices());
+        for (v, h) in seq.iter() {
+            assert_eq!(
+                Some(h),
+                killed.sketch(v),
+                "trial {trial} (after {after}): sketch {v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn process_kill_resume_full_pipeline_matches_sequential() {
+    // rank 1 dies once in EVERY process epoch (accumulation, each ANF
+    // pass, both triangle chassis runs — process epochs are each epoch
+    // 1 of their own fleet); DEG/ANF/heavy-hitter answers must still be
+    // bit-identical to an undisturbed sequential run
+    let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
+    let seq = run_all(&edges, Backend::Sequential);
+    for after in [25u64, 160] {
+        let fault = FaultPolicy {
+            ckpt_every_chunks: 1,
+            chunk: 48,
+            chaos: Some(Chaos {
+                rank: 1,
+                epoch: 1,
+                after_delivered: after,
+                generation: 0,
+            }),
+            ..FaultPolicy::default()
+        };
+        let prc = run_all_fault(&edges, Backend::Process, fault);
+        assert_answers_match(&seq, &prc);
+        assert_eq!(
+            prc.ds.accumulation_stats.restores, 1,
+            "after {after}: accumulation must have recovered once"
+        );
+    }
+}
+
+#[test]
+fn resilient_epochs_without_faults_stay_bit_identical() {
+    // checkpointing on, nobody dies: chunked seeding + barriers must
+    // not perturb any answer
+    let edges = GraphSpec::parse("er:200:600").unwrap().generate(3);
+    let seq = run_all(&edges, Backend::Sequential);
+    let fault = FaultPolicy {
+        ckpt_every_chunks: 2,
+        chunk: 64,
+        ..FaultPolicy::default()
+    };
+    let prc = run_all_fault(&edges, Backend::Process, fault);
+    assert_answers_match(&seq, &prc);
+    assert_eq!(prc.ds.accumulation_stats.restores, 0);
+    assert!(
+        prc.ds.accumulation_stats.checkpoints >= 1,
+        "{:?}",
+        prc.ds.accumulation_stats
+    );
+}
+
+#[test]
+fn tcp_kill_resume_with_respawned_worker_is_bit_identical() {
+    // The acceptance bar: a TCP epoch with one worker killed
+    // mid-accumulation, respawned with --resume (its predecessor's
+    // checkpoint dir), produces bit-identical DEG/ANF sketches and
+    // triangle heavy hitters to an undisturbed sequential run.
+    let _guard = GLOBAL_FABRIC_LOCK
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    let ranks = 4;
+    let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
+    let seq = run_all(&edges, Backend::Sequential);
+
+    let ckpt_root = std::env::temp_dir()
+        .join(format!("degreesketch_tcp_kill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_root);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let registrar = listener.local_addr().unwrap().to_string();
+    tcp::configure_driver(listener, vec!["127.0.0.1:0".to_string(); ranks]);
+
+    let mut workers = Vec::new();
+    for rank in 0..ranks {
+        let registrar = registrar.clone();
+        let dir = ckpt_root.join(format!("r{rank}"));
+        // rank 2 abruptly drops every socket mid-accumulation — the
+        // thread-world equivalent of SIGKILL
+        let chaos = (rank == 2).then_some(Chaos {
+            rank: 2,
+            epoch: 1,
+            after_delivered: 80,
+            generation: 0,
+        });
+        workers.push(std::thread::spawn(move || {
+            tcp::run_worker_opts(
+                worker_dispatch(),
+                &registrar,
+                rank,
+                WorkerOptions {
+                    deadline: Duration::from_secs(120),
+                    ckpt_dir: dir,
+                    resume: None,
+                    chaos,
+                },
+            )
+        }));
+    }
+    // the respawner: once the victim dies, relaunch rank 2 with
+    // --resume pointing at its predecessor's checkpoint dir
+    let victim = workers.remove(2);
+    let respawner = {
+        let registrar = registrar.clone();
+        let dir = ckpt_root.join("r2");
+        std::thread::spawn(move || {
+            let died = victim.join().expect("victim thread");
+            assert!(
+                died.is_err(),
+                "the chaos victim must die mid-epoch, got {died:?}"
+            );
+            tcp::run_worker_opts(
+                worker_dispatch(),
+                &registrar,
+                2,
+                WorkerOptions {
+                    deadline: Duration::from_secs(120),
+                    ckpt_dir: dir.clone(),
+                    resume: Some(dir),
+                    chaos: None,
+                },
+            )
+        })
+    };
+
+    let fault = FaultPolicy {
+        ckpt_every_chunks: 1,
+        chunk: 32,
+        ..FaultPolicy::default()
+    };
+    let tcp_ans = run_all_fault(&edges, Backend::Tcp, fault);
+    tcp::shutdown_driver();
+    for w in workers {
+        w.join().expect("worker thread").expect("worker ran clean");
+    }
+    respawner
+        .join()
+        .expect("respawner thread")
+        .expect("replacement worker ran clean");
+
+    assert_answers_match(&seq, &tcp_ans);
+    assert_eq!(
+        tcp_ans.ds.accumulation_stats.restores, 1,
+        "{:?}",
+        tcp_ans.ds.accumulation_stats
+    );
+    assert!(tcp_ans.ds.accumulation_stats.checkpoints >= 1);
+    let _ = std::fs::remove_dir_all(&ckpt_root);
+}
+
+#[test]
+fn checkpoint_records_reject_corruption_and_truncation() {
+    // mirrors the snapshot suite's corruption stance, through the
+    // public API the worker resume path uses
+    use degreesketch::snapshot::CheckpointRecord;
+    let rec = CheckpointRecord {
+        epoch: 1,
+        generation: 0,
+        barrier: 2,
+        rank: 0,
+        ranks: 2,
+        pos: 5,
+        sent_total: 10,
+        delivered_total: 10,
+        frames_in: 1,
+        bytes_in: 100,
+        kind: "deg-accum".to_string(),
+        channels: vec![(3, 3), (0, 0)],
+        state: vec![1, 2, 3, 4, 5],
+    };
+    let wire = rec.encode();
+    assert_eq!(CheckpointRecord::decode(&wire).unwrap(), rec);
+    for i in (0..wire.len()).step_by(3) {
+        let mut bad = wire.clone();
+        bad[i] ^= 0x08;
+        assert!(
+            CheckpointRecord::decode(&bad).is_err(),
+            "corrupt byte {i} accepted"
+        );
+    }
+    for cut in 0..wire.len() {
+        assert!(
+            CheckpointRecord::decode(&wire[..cut]).is_err(),
+            "truncation at {cut} accepted"
+        );
+    }
 }
 
 #[test]
