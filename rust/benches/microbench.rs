@@ -523,6 +523,7 @@ fn main() {
         let stream = MemoryStream::new(edges);
         let cfg = HllConfig::new(8, 0xACC);
         let heavy = Bench::new(1, 3);
+        let mut plain_process_mean = 0.0;
         for backend in
             [Backend::Sequential, Backend::Threaded, Backend::Process]
         {
@@ -533,6 +534,9 @@ fn main() {
             let r = heavy.run(|| {
                 accumulate(stream.shard(4), cfg, opts).num_vertices()
             });
+            if backend == Backend::Process {
+                plain_process_mean = r.mean_s;
+            }
             row(
                 &mut table,
                 &mut report,
@@ -565,6 +569,43 @@ fn main() {
                 m,
                 &r,
             );
+        }
+        // the chaos tax: the same epoch with the ChaosTransport
+        // interposer engaged on every mesh stream (a seeded roll per
+        // frame, delay rate ~1‰ so essentially nothing fires) and the
+        // heartbeat plane on — what the robustness plumbing costs when
+        // nothing fails. `chaos_overhead` records the slowdown factor:
+        // base = interposer-on mean, new = plain process mean.
+        {
+            let opts = AccumulateOptions {
+                backend: Backend::Process,
+                fault: degreesketch::comm::FaultPolicy {
+                    hb_interval_ms: 5,
+                    hb_timeout_ms: 5000,
+                    chaos: Some(degreesketch::comm::Chaos {
+                        net: degreesketch::comm::NetChaos {
+                            seed: 0xBE7C_4405,
+                            delay_per_mille: 1,
+                            delay_polls: 1,
+                            ..Default::default()
+                        },
+                        ..Default::default()
+                    }),
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let r = heavy.run(|| {
+                accumulate(stream.shard(4), cfg, opts).num_vertices()
+            });
+            row(
+                &mut table,
+                &mut report,
+                "comm_backend_epoch accumulate x4 process+chaos-interposer",
+                m,
+                &r,
+            );
+            report.record_speedup("chaos_overhead", r.mean_s, plain_process_mean);
         }
     }
 

@@ -80,6 +80,18 @@ impl Args {
         Ok(self.get_u64(name, default as u64)? as usize)
     }
 
+    /// Like [`Args::get_u64`] but distinguishes "absent" from a default,
+    /// for flags that override a config key only when present.
+    pub fn get_u64_opt(&self, name: &str) -> Result<Option<u64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .with_context(|| format!("--{name}: bad number {v:?}")),
+        }
+    }
+
     pub fn get_u8(&self, name: &str, default: u8) -> Result<u8> {
         let v = self.get_u64(name, default as u64)?;
         if v > 255 {

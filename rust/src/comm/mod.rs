@@ -76,6 +76,8 @@
 //! [u32 n][n × u64]               per-destination warm-start seeds
 //! [u8 resilient][u64 chunk]      checkpointed-epoch spec (0/ignored when
 //! [u64 epoch][u64 gen]           fault tolerance is off)
+//! [u64 hb_interval_ms]           heartbeat cadence (0 = heartbeats off)
+//! [u64 hb_timeout_ms]            peer-staleness threshold (0 = off)
 //! [u8 resume_tag][resume]        0 none · 1 inline checkpoint record
 //!                                (u64 len + bytes) · 2 worker-local file
 //! [actor seed bytes]             FabricActor::write_seed / read_seed
@@ -96,33 +98,91 @@
 //! backend (`worker --ckpt-dir`), an inline ack payload on the process
 //! backend — and the driver records the consistent checkpoint frontier.
 //!
-//! When a rank dies mid-storm, recovery is a **global rollback to the
-//! last barrier** (no message existed in any channel at that instant, so
-//! the barrier is a consistent cut by construction):
+//! # Failure model: detection, chaos injection, batched recovery
 //!
-//! * **tcp** — the driver sends PAUSE to the survivors (they park,
-//!   draining writes), accepts a replacement `degreesketch worker
-//!   --connect … --rank R --resume <ckpt>` JOIN on the still-open
-//!   registrar, hands it the mesh map (the replacement dials every
-//!   survivor — an *incremental re-mesh*, survivors accept on their
-//!   retained mesh listeners), re-SEEDs only the replacement, then
+//! **Failure detection — the heartbeat plane.** Quiescence probes only
+//! attribute a failure when the driver happens to be probing; between
+//! probes a dead link could idle undetected. With
+//! `comm.hb_interval_ms > 0`, workers stamp lightweight HB frames onto
+//! mesh channels that have gone quiet for an interval, and every mesh
+//! read refreshes a per-peer last-activity clock. A peer silent beyond
+//! `comm.hb_timeout_ms` is declared stale: on a resilient epoch the
+//! channel parks and the staleness is reported to the driver in the next
+//! REPORT frame (whose payload carries `[sent, delivered, failed_peer,
+//! stale_ms]`); on a plain epoch it aborts with a heartbeat error. The
+//! driver then distinguishes three cases: a **dead rank** (its control
+//! channel is closed or its `Liveness` hook reaps it), a **dead link**
+//! (a worker reports `failed_peer = P` but P's control channel still
+//! answers), and a **wedged-but-alive child** (control silent past the
+//! deadline, but liveness re-arms keep verifying the process exists —
+//! capped by `comm.liveness_rearms`). HB frames carry no token and do
+//! not touch the channel's cumulative counters; stragglers at epoch
+//! boundaries are drained harmlessly.
+//!
+//! **Chaos injection.** Every recovery path can be exercised
+//! reproducibly via [`Chaos`]: deterministic rank kills (`rank`,
+//! `rank2` for concurrent double-kills, `on_pause` for a death landing
+//! mid-recovery) plus a seeded network-fault plane ([`NetChaos`]) that
+//! wraps each mesh stream in a `ChaosTransport` interposer. The
+//! interposer parses the byte stream at frame granularity and — driven
+//! only by `xxh64(seed, channel, frame#)`, never by wall-clock — drops,
+//! duplicates, corrupts, delays, or half-open-stalls whole frames, and
+//! can partition the links of a rank set (`partition_mask`). Replay a
+//! failure by re-running with the logged seed: same seed ⇒ same faults
+//! on the same frames of the same channels. Lossy faults surface as
+//! CRC/token protocol errors at the receiver and funnel into the same
+//! rollback recovery as a crash, so a soak run still converges
+//! bit-identically to the sequential answer.
+//!
+//! When ranks die mid-storm, recovery is a **global rollback to the
+//! last barrier** (no message existed in any channel at that instant, so
+//! the barrier is a consistent cut by construction). Recovery is
+//! *batched*: the driver sweeps every control channel after the first
+//! failure and recovers the whole dead set in one cycle:
+//!
+//! * **tcp** — the batched state machine is PAUSE-set → re-mesh-set →
+//!   RESTORE. The driver broadcasts PAUSE naming the full dead set
+//!   (payload `[n, dead…, gen, barrier]`); survivors park their writes
+//!   at frame boundaries, drop every dead channel, and ack. The driver
+//!   then admits one replacement JOIN per dead rank on the still-open
+//!   registrar (in arrival order), handing each the mesh map plus the
+//!   list of not-yet-joined replacements: a replacement dials every
+//!   already-live rank (survivors and earlier replacements) and accepts
+//!   HELLOs from later ones, so each re-meshed pair gets exactly one
+//!   connection. Survivors accept the whole set of replacement dials
+//!   before REMESHED. The driver re-SEEDs only the replacements, then
 //!   broadcasts RESTORE: every rank rolls back to its own record
-//!   (survivors from an in-memory copy, the replacement from its file),
+//!   (survivors from an in-memory copy, replacements from their files),
 //!   resets channel tokens to the barrier's values, and the chunk loop
-//!   resumes from the recorded frontier. Stale pre-failure frames are
-//!   identified by the frame header's generation qualifier and
-//!   discarded.
+//!   resumes. Stale pre-failure frames are identified by the header's
+//!   generation qualifier and discarded. A death arriving **mid-
+//!   recovery** folds into the in-flight batch: the driver bumps the
+//!   generation and re-broadcasts PAUSE with the enlarged set;
+//!   survivors waiting for replacement dials poll their control channel
+//!   and restart the accept loop on the superseding PAUSE instead of
+//!   aborting the fabric.
 //! * **process** — the driver holds every rank's latest record (CKPT
 //!   acks carry them inline), SIGKILLs the remaining forks and re-forks
 //!   the whole fleet over fresh socketpairs, re-seeding each worker with
-//!   its record — the same resume path, minus the network.
+//!   its record. Fleet re-fork is inherently batched: any number of
+//!   concurrent deaths recover in a single re-fork generation.
+//!
+//! **Seed-replay howto.** A chaos failure in CI prints its seed
+//! (`chaos soak seed = 0x…`). To replay locally, construct the same
+//! policy — `Chaos { net: NetChaos { seed, drop_per_mille, … }, .. }`
+//! via `FaultPolicy::chaos` (process) or `tcp::WorkerOptions::chaos`
+//! (tcp) — and re-run the epoch; fault sites depend only on the seed and
+//! the deterministic frame sequence, so the failure reproduces exactly.
 //!
 //! Replayed work re-converges bit-identically because sketch merges
 //! commute; the kill-resume suites in `tests/comm_backends.rs` assert
 //! DEG/ANF sketches and triangle heavy hitters match an undisturbed
 //! sequential run exactly. Failures outside the resilient window
 //! (rendezvous, post-STOP state collection) abort with a clear error as
-//! before; `comm.max_respawns` caps recovery generations.
+//! before; `comm.max_respawns` caps recovery generations. All dial
+//! paths (rendezvous joins, respawn admission, re-mesh HELLOs) retry
+//! with capped exponential backoff plus deterministic jitter
+//! (`comm.dial_backoff_base_ms` / `comm.dial_backoff_cap_ms`).
 //!
 //! The per-actor surface is unchanged from the paper's listings:
 //!
@@ -151,9 +211,9 @@
 pub mod codec;
 mod outbox;
 mod process;
-pub(crate) mod rendezvous;
+pub mod rendezvous;
 mod sequential;
-pub(crate) mod socket;
+pub mod socket;
 pub mod tcp;
 mod threaded;
 pub(crate) mod transport;
@@ -230,6 +290,16 @@ pub struct FaultPolicy {
     pub rearm_cap: u32,
     /// Maximum recovery generations per epoch before giving up.
     pub max_respawns: u32,
+    /// Mesh heartbeat cadence in milliseconds (`comm.hb_interval_ms`):
+    /// a channel idle this long gets an HB frame so the peer's liveness
+    /// clock keeps ticking. 0 disables the heartbeat plane.
+    pub hb_interval_ms: u64,
+    /// Peer-staleness threshold in milliseconds (`comm.hb_timeout_ms`):
+    /// a peer silent this long is declared stale — its channel parks
+    /// (resilient epochs) or the worker aborts (plain epochs). 0
+    /// disables staleness detection. Must comfortably exceed
+    /// `hb_interval_ms` when both are set.
+    pub hb_timeout_ms: u64,
     /// Optional fault injection (tests / chaos drills): see [`Chaos`].
     pub chaos: Option<Chaos>,
 }
@@ -242,6 +312,8 @@ impl Default for FaultPolicy {
             chunk: 4096,
             rearm_cap: 10,
             max_respawns: 2,
+            hb_interval_ms: 0,
+            hb_timeout_ms: 0,
             chaos: None,
         }
     }
@@ -263,18 +335,28 @@ impl FaultPolicy {
     }
 }
 
-/// Deterministic fault injection for the kill-resume test suites (and
-/// chaos drills): the named rank abruptly dies — the fork `_exit`s, the
-/// tcp worker drops every socket — once it has delivered
-/// `after_delivered` messages in fabric epoch `epoch`, but only in
-/// recovery generation `generation` (0 = the undisturbed first run, so a
-/// respawned worker does not re-die). On the process backend the chaos
-/// rides [`FaultPolicy::chaos`]; on tcp it is worker-side
-/// (`tcp::WorkerOptions::chaos`), since real worker processes die on
-/// their own hosts, not at the driver's hand.
+/// Deterministic fault injection for the kill-resume and chaos-soak
+/// suites. Three planes, all seed/count-driven (never wall-clock):
+///
+/// * **Kill** — rank `rank` (and optionally `rank2`, for a concurrent
+///   double-kill) abruptly dies — the fork `_exit`s, the tcp worker
+///   drops every socket — once it has delivered `after_delivered`
+///   messages in fabric epoch `epoch`, but only in recovery generation
+///   `generation` (so a respawned worker does not re-die). `rank =
+///   usize::MAX` (the default) disables the kill plane.
+/// * **Mid-recovery kill** — with `on_pause`, the victim instead dies
+///   the moment a PAUSE for some *other* rank's recovery reaches it:
+///   the deterministic way to land a death inside an in-flight recovery
+///   batch and exercise the fold-in path.
+/// * **Network** — `net` wraps every mesh stream in a seeded
+///   `ChaosTransport` interposer (see [`NetChaos`]).
+///
+/// On the process backend the chaos rides [`FaultPolicy::chaos`]; on
+/// tcp it is worker-side (`tcp::WorkerOptions::chaos`), since real
+/// worker processes die on their own hosts, not at the driver's hand.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Chaos {
-    /// Which rank dies.
+    /// Which rank dies (`usize::MAX` = kill plane off).
     pub rank: usize,
     /// Fabric epoch the death happens in (process backend epochs are
     /// always epoch 1; tcp fabrics number epochs 1, 2, … per driver run).
@@ -283,6 +365,101 @@ pub struct Chaos {
     pub after_delivered: u64,
     /// Only inject in this recovery generation.
     pub generation: u64,
+    /// Second concurrent victim (`usize::MAX` = none): both ranks die by
+    /// the same delivered-count trigger, so the driver sees overlapping
+    /// failures and must recover the set in one batched cycle.
+    pub rank2: usize,
+    /// Die on receipt of a PAUSE frame instead of by delivered count —
+    /// a death landing mid-recovery, folded into the in-flight batch.
+    pub on_pause: bool,
+    /// Seeded frame-granular network faults (see [`NetChaos`]).
+    pub net: NetChaos,
+}
+
+impl Default for Chaos {
+    fn default() -> Self {
+        Self {
+            rank: usize::MAX,
+            epoch: 0,
+            after_delivered: 0,
+            generation: 0,
+            rank2: usize::MAX,
+            on_pause: false,
+            net: NetChaos::default(),
+        }
+    }
+}
+
+impl Chaos {
+    /// The classic single-rank kill (the PR-5 shape): `rank` dies in
+    /// `epoch` after `after_delivered` deliveries, generation 0 only.
+    pub fn kill(rank: usize, epoch: u64, after_delivered: u64) -> Self {
+        Self {
+            rank,
+            epoch,
+            after_delivered,
+            ..Self::default()
+        }
+    }
+
+    /// Kill restricted to recovery generation `generation`.
+    pub fn kill_at_gen(
+        rank: usize,
+        epoch: u64,
+        after_delivered: u64,
+        generation: u64,
+    ) -> Self {
+        Self {
+            generation,
+            ..Self::kill(rank, epoch, after_delivered)
+        }
+    }
+}
+
+/// Seeded, deterministic network-fault plane applied per mesh channel by
+/// the `ChaosTransport` interposer (`comm::socket`). Fault sites are a
+/// pure function of `(seed, channel, frame index)` — log the seed and
+/// any failure replays exactly. Rates are per-mille per frame and drawn
+/// from one roll, so at most one fault fires per frame; `fault_budget`
+/// caps how many lossy faults (drop/dup/corrupt) a single channel may
+/// inject, bounding the number of recovery cycles a soak can trigger.
+/// `seed = 0` disables the plane entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct NetChaos {
+    /// Master seed (0 = off). Channel seeds derive from it.
+    pub seed: u64,
+    /// Drop the whole frame (receiver sees a token gap → recovery).
+    pub drop_per_mille: u16,
+    /// Deliver the frame twice (token overrun → recovery).
+    pub dup_per_mille: u16,
+    /// Flip one payload/header byte (CRC rejection → recovery).
+    pub corrupt_per_mille: u16,
+    /// Withhold the frame — and everything behind it, preserving FIFO
+    /// order — for `delay_polls` read polls (pure latency; no recovery).
+    pub delay_per_mille: u16,
+    /// Poll count a delayed frame is withheld for (default ~0 = 1 poll).
+    pub delay_polls: u16,
+    /// Lossy-fault budget per channel (0 = unlimited).
+    pub fault_budget: u16,
+    /// Rank-set partition: a bitmask of ranks (bit r = rank r) whose
+    /// mesh links go half-open — reads stall forever — after
+    /// `stall_after_frames` frames. Heartbeat staleness is what detects
+    /// this; without the HB plane it surfaces at the control deadline.
+    pub partition_mask: u64,
+    /// Frames a partitioned link delivers before going half-open.
+    pub stall_after_frames: u64,
+}
+
+impl NetChaos {
+    /// Is any network fault configured?
+    pub fn active(&self) -> bool {
+        self.seed != 0
+            && (self.drop_per_mille > 0
+                || self.dup_per_mille > 0
+                || self.corrupt_per_mille > 0
+                || self.delay_per_mille > 0
+                || self.partition_mask != 0)
+    }
 }
 
 /// Best-effort stringification of a caught panic payload (shared by the

@@ -23,7 +23,14 @@
 //! driver SIGKILLs the remaining forks and re-forks the whole fleet
 //! over fresh socketpairs, re-seeding every worker with its record —
 //! the same rollback-to-barrier semantics as the tcp backend's
-//! respawn/resume, minus the network.
+//! respawn/resume, minus the network. The re-fork is inherently
+//! *batched*: any number of concurrently dead ranks (including deaths
+//! landing while the teardown is in flight) recover in one rollback,
+//! the process-backend shape of the tcp fabric's rank-set recovery.
+//! Worker mesh channels run through the seeded `ChaosTransport`
+//! interposer when [`Chaos::net`](super::Chaos) is armed, gated to a
+//! single recovery generation so injected faults cannot re-kill the
+//! recovery of themselves.
 //!
 //! Failure containment: a worker that panics (or hits a protocol error)
 //! exits with a distinctive status; the driver sees the control channel
@@ -98,12 +105,18 @@ mod unix {
     use super::{EXIT_CHAOS, EXIT_PANIC, EXIT_PROTOCOL};
     use crate::comm::outbox::FlushPolicy;
     use crate::comm::socket::{
-        self, kind, CkptPlan, Conn, DriverCtrl, EpochSpec, FabricHooks,
-        Liveness, PeerConn, RankError, ResumeSrc, CHAOS_ABORT, CTRL_DEADLINE,
+        self, kind, ChaosTransport, CkptPlan, Conn, DriverCtrl, EpochSpec,
+        FabricHooks, Liveness, PeerConn, RankError, ResumeSrc, CHAOS_ABORT,
+        CTRL_DEADLINE,
     };
     use crate::comm::{
-        Backend, Chaos, CommStats, FabricActor, FaultPolicy, WireMsg,
+        Backend, Chaos, CommStats, FabricActor, FaultPolicy, NetChaos,
+        WireMsg,
     };
+
+    /// Every worker-side stream is wrapped in the chaos interposer — a
+    /// transparent pass-through unless [`Chaos::net`] is armed.
+    type ProcStream = ChaosTransport<UnixStream>;
 
     mod sys {
         extern "C" {
@@ -215,7 +228,7 @@ mod unix {
     /// the driver re-forks the whole fleet.
     struct ProcHooks;
 
-    impl FabricHooks<UnixStream> for ProcHooks {
+    impl FabricHooks<ProcStream> for ProcHooks {
         fn store_checkpoint(
             &mut self,
             _epoch: u64,
@@ -237,12 +250,12 @@ mod unix {
                 .to_string())
         }
 
-        fn accept_replacement(
+        fn try_accept_replacement(
             &mut self,
-            _failed: usize,
+            _remaining: &[usize],
             _gen: u64,
-            _deadline: std::time::Duration,
-        ) -> Result<Conn<UnixStream>, String> {
+            _slice: std::time::Duration,
+        ) -> Result<Option<(usize, Conn<ProcStream>)>, String> {
             Err("process workers are respawned whole by the driver; no \
                  incremental re-mesh exists"
                 .to_string())
@@ -270,6 +283,9 @@ mod unix {
         // re-fork always resumes a consistent fabric-wide barrier.
         let mut records: Vec<Option<Vec<u8>>> = vec![None; ranks];
         loop {
+            // chaos is generation-gated: a recovered fleet re-forks with
+            // clean channels, so injected faults cannot re-kill the
+            // recovery of themselves
             let chaos = fault.chaos.filter(|c| c.generation == gen);
             let outcome = attempt(
                 &mut actors,
@@ -280,7 +296,7 @@ mod unix {
                 &mut checkpoints,
                 &mut records,
                 chaos,
-                fault.rearm_cap,
+                &fault,
             );
             match outcome {
                 Ok(mut stats) => {
@@ -310,6 +326,7 @@ mod unix {
     /// One forked-fleet attempt at the epoch (generation `gen`): mesh,
     /// fork, seed (resuming `records` when `gen > 0`), drive, collect.
     /// Any failure kills and reaps the fleet and names the rank.
+    #[allow(clippy::too_many_arguments)]
     fn attempt<A>(
         actors: &mut [A],
         policy: FlushPolicy,
@@ -319,7 +336,7 @@ mod unix {
         checkpoints: &mut u64,
         records: &mut [Option<Vec<u8>>],
         chaos: Option<Chaos>,
-        rearm_cap: u32,
+        fault: &FaultPolicy,
     ) -> Result<CommStats, RankError>
     where
         A: FabricActor + 'static,
@@ -387,7 +404,7 @@ mod unix {
                     PidLiveness { pid: pids[rank] },
                 )
                 .expect("ctrl setup")
-                .with_rearm_cap(rearm_cap)
+                .with_rearm_cap(fault.rearm_cap)
             })
             .collect();
 
@@ -413,6 +430,8 @@ mod unix {
                     ResumeSrc::None => 0,
                     _ => resume_barrier,
                 },
+                hb_interval_ms: fault.hb_interval_ms,
+                hb_timeout_ms: fault.hb_timeout_ms,
                 resume,
             };
             let payload =
@@ -559,18 +578,32 @@ mod unix {
         A: FabricActor,
         A::Msg: WireMsg,
     {
-        let mut peers: Vec<Option<PeerConn<UnixStream>>> = Vec::new();
+        // Mesh channels run through the chaos interposer (a transparent
+        // pass-through unless net chaos is armed for this generation);
+        // the control channel always stays clean — faulting it would
+        // fault the recovery protocol itself.
+        let net = chaos.map(|c| c.net).filter(NetChaos::active);
+        let mut peers: Vec<Option<PeerConn<ProcStream>>> = Vec::new();
         for (p, s) in peer_streams.into_iter().enumerate() {
             peers.push(match s {
-                Some(stream) => Some(PeerConn::new(
-                    Conn::new(stream).map_err(|e| format!("peer {p}: {e}"))?,
-                    p,
-                )),
+                Some(stream) => {
+                    let wrapped = match net {
+                        Some(n) => {
+                            ChaosTransport::with_faults(stream, n, rank, p)
+                        }
+                        None => ChaosTransport::clean(stream),
+                    };
+                    Some(PeerConn::new(
+                        Conn::new(wrapped)
+                            .map_err(|e| format!("peer {p}: {e}"))?,
+                        p,
+                    ))
+                }
                 None => None,
             });
         }
-        let mut ctrl =
-            Conn::new(ctrl_stream).map_err(|e| format!("ctrl: {e}"))?;
+        let mut ctrl = Conn::new(ChaosTransport::clean(ctrl_stream))
+            .map_err(|e| format!("ctrl: {e}"))?;
 
         let (k, _token, payload) =
             socket::next_ctrl_frame(&mut ctrl, Some(CTRL_DEADLINE))?
@@ -587,7 +620,7 @@ mod unix {
             ));
         }
         let mut hooks = ProcHooks;
-        socket::worker_epoch::<A, UnixStream>(
+        socket::worker_epoch::<A, ProcStream>(
             rank, &head, actor_seed, &mut ctrl, &mut peers, &mut hooks,
             chaos,
         )
@@ -726,12 +759,7 @@ mod tests {
         // rank 1 dies after 5 deliveries; the fleet re-forks from the
         // rollback target and the ring completes with correct totals
         let fault = FaultPolicy {
-            chaos: Some(Chaos {
-                rank: 1,
-                epoch: 1,
-                after_delivered: 5,
-                generation: 0,
-            }),
+            chaos: Some(Chaos::kill(1, 1, 5)),
             ..FaultPolicy::checkpoint_every(1)
         };
         let mut actors = ring(3, 30);

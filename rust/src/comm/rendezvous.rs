@@ -19,7 +19,11 @@
 //! rendezvous: the stale claimer is sent a REJECT frame naming the
 //! conflict and its connection is dropped; the fabric keeps forming
 //! around the rank that joined first. The same policy guards the
-//! respawn path ([`accept_respawn_join`]).
+//! respawn path ([`poll_respawn_join`]).
+//!
+//! Every dial in this module ([`dial_retry`]) retries with capped
+//! exponential backoff plus deterministic jitter — see
+//! [`set_dial_backoff`] for the schedule knobs.
 //!
 //! **Respawn re-join** (fabric fault tolerance): the registrar listener
 //! stays open for the fabric's life. A replacement worker launched with
@@ -42,12 +46,14 @@
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use super::codec::{
     encode_frame_into, get_u32, get_u64, put_u32, put_u64, take,
 };
 use super::socket::{kind, Conn, DeadlineOnly, DriverCtrl, PeerConn};
+use crate::hash::xxh64;
 
 /// A driver-side control channel to one tcp worker.
 pub(crate) type TcpCtrl = DriverCtrl<TcpStream, DeadlineOnly>;
@@ -98,10 +104,29 @@ fn time_left(limit: Instant) -> Duration {
         .unwrap_or(Duration::ZERO)
 }
 
+/// Backoff schedule for every dial path (registrar joins, mesh dials,
+/// re-mesh HELLOs). Process-wide because dialing happens on worker
+/// threads that have no config handle; set once at startup from
+/// `comm.dial_backoff_base_ms` / `comm.dial_backoff_cap_ms`.
+static DIAL_BACKOFF_BASE_MS: AtomicU64 = AtomicU64::new(25);
+static DIAL_BACKOFF_CAP_MS: AtomicU64 = AtomicU64::new(2000);
+
+/// Configure the dial backoff schedule: attempt `n` sleeps
+/// `min(base · 2ⁿ⁻¹, cap)` plus deterministic jitter. Zero values are
+/// clamped to sane minimums.
+pub fn set_dial_backoff(base_ms: u64, cap_ms: u64) {
+    let base = base_ms.max(1);
+    DIAL_BACKOFF_BASE_MS.store(base, Ordering::Relaxed);
+    DIAL_BACKOFF_CAP_MS.store(cap_ms.max(base), Ordering::Relaxed);
+}
+
 /// Dial `addr`, retrying until `limit` (the far side may not be up yet
 /// — rendezvous tolerates any launch order). Each attempt uses a short
 /// connect timeout so an unreachable host fails the *step* deadline,
-/// not the OS's multi-minute SYN schedule.
+/// not the OS's multi-minute SYN schedule. Failed attempts back off
+/// exponentially (capped, with deterministic per-addr/attempt jitter so
+/// a fleet of dialers doesn't retry in lockstep yet any single failure
+/// replays identically).
 fn dial_retry(
     addr: &str,
     limit: Instant,
@@ -114,24 +139,37 @@ fn dial_retry(
         .ok_or_else(|| {
             format!("dialing {what}: {addr:?} resolves to no address")
         })?;
+    let base = DIAL_BACKOFF_BASE_MS.load(Ordering::Relaxed).max(1);
+    let cap = DIAL_BACKOFF_CAP_MS.load(Ordering::Relaxed).max(base);
     let mut last_err = String::new();
+    let mut attempts = 0u64;
     loop {
         let left = time_left(limit);
         if left.is_zero() {
             return Err(format!(
-                "dialing {what}: unreachable before the deadline \
-                 (last error: {last_err})"
+                "dialing {what}: unreachable before the deadline after \
+                 {attempts} attempt(s) (last error: {last_err})"
             ));
         }
-        let attempt = left.min(Duration::from_secs(2));
+        let attempt_cap = left.min(Duration::from_secs(2));
         match TcpStream::connect_timeout(
             &target,
-            attempt.max(Duration::from_millis(10)),
+            attempt_cap.max(Duration::from_millis(10)),
         ) {
             Ok(s) => return Ok(s),
             Err(e) => {
+                attempts += 1;
                 last_err = e.to_string();
-                std::thread::sleep(Duration::from_millis(50));
+                // base · 2^(attempts-1), capped; jitter adds up to 50%
+                // more, hashed from (addr, attempt) so it is stable
+                // across replays but different across dialers.
+                let exp = base
+                    .saturating_mul(1u64 << (attempts - 1).min(16))
+                    .min(cap);
+                let jitter = xxh64(addr.as_bytes(), attempts) % (exp / 2 + 1);
+                std::thread::sleep(
+                    Duration::from_millis(exp + jitter).min(time_left(limit)),
+                );
             }
         }
     }
@@ -322,16 +360,21 @@ pub(crate) fn driver_rendezvous(
     Ok((ctrls, final_map))
 }
 
-/// Recovery: accept the replacement worker's JOIN for `expected` on the
-/// retained registrar listener. JOINs claiming any other rank are
-/// REJECTed (they are stale or misconfigured — the fabric knows exactly
-/// which rank died) and the wait continues until `deadline`.
-pub(crate) fn accept_respawn_join(
+/// Recovery: poll the retained registrar listener for one replacement
+/// JOIN claiming any rank in `expected` (batched recovery replaces a
+/// *set* of dead ranks; replacements are admitted in whatever order
+/// they dial in). JOINs claiming a live rank are REJECTed (stale or
+/// misconfigured respawns) and polling continues. Returns `Ok(None)`
+/// once `slice` elapses without an admission — the caller interleaves
+/// these short polls with survivor liveness sweeps so a death arriving
+/// mid-recovery folds into the in-flight batch instead of deadlocking
+/// the wait.
+pub(crate) fn poll_respawn_join(
     listener: &TcpListener,
-    expected: usize,
-    deadline: Duration,
-) -> Result<TcpCtrl, String> {
-    let limit = Instant::now() + deadline;
+    expected: &[usize],
+    slice: Duration,
+) -> Result<Option<(usize, TcpCtrl)>, String> {
+    let limit = Instant::now() + slice;
     loop {
         match listener.accept() {
             Ok((stream, peer)) => {
@@ -344,10 +387,11 @@ pub(crate) fn accept_respawn_join(
                     format!("respawned worker at {peer}"),
                     DeadlineOnly,
                 )?;
-                let (k, token, _payload) =
-                    c.recv(time_left(limit)).map_err(|e| {
-                        format!("respawn: waiting for JOIN: {e}")
-                    })?;
+                // Once accepted, the JOIN frame is already in flight —
+                // give it a real read window even on a short poll slice.
+                let (k, token, _payload) = c
+                    .recv(Duration::from_secs(10))
+                    .map_err(|e| format!("respawn: waiting for JOIN: {e}"))?;
                 if k != kind::JOIN {
                     return Err(format!(
                         "respawn: {} sent frame kind {k} instead of JOIN",
@@ -355,29 +399,26 @@ pub(crate) fn accept_respawn_join(
                     ));
                 }
                 let rank = token as usize;
-                if rank != expected {
+                if !expected.contains(&rank) {
                     eprintln!(
                         "respawn: rejecting JOIN from {peer}: claimed rank \
-                         {rank}, but rank {expected} is being replaced"
+                         {rank}, but rank(s) {expected:?} are being replaced"
                     );
                     reject_join(
                         c,
                         &format!(
-                            "rank {rank} is alive — only rank {expected} \
-                             is being replaced"
+                            "rank {rank} is alive — only rank(s) \
+                             {expected:?} are being replaced"
                         ),
                     );
                     continue;
                 }
                 c.desc = format!("respawned worker rank {rank} ({peer})");
-                return Ok(c);
+                return Ok(Some((rank, c)));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 if Instant::now() > limit {
-                    return Err(format!(
-                        "respawn: no replacement for rank {expected} joined \
-                         within {deadline:?}"
-                    ));
+                    return Ok(None);
                 }
                 std::thread::sleep(Duration::from_millis(5));
             }
@@ -401,17 +442,20 @@ pub(crate) struct JoinedWorker {
     pub listener: Option<TcpListener>,
 }
 
-/// Accept one mesh connection on `listener` and validate its HELLO
-/// frame: dialer rank `expect_rank`, generation `expect_gen` (bootstrap
-/// dials carry an empty payload = generation 0). Returns the connection
-/// with any over-read bytes preserved.
-pub(crate) fn accept_hello(
+/// Poll `listener` for one mesh connection and validate its HELLO
+/// frame: dialer rank in `expect`, generation `expect_gen` (bootstrap
+/// dials carry an empty payload = generation 0). Returns the dialer's
+/// rank and the connection with any over-read bytes preserved, or
+/// `Ok(None)` once `slice` elapses with nothing pending — parked
+/// survivors interleave these short polls with control-channel reads so
+/// a superseding PAUSE can fold a new death into an in-flight re-mesh.
+pub(crate) fn accept_hello_any(
     listener: &TcpListener,
-    expect_rank: usize,
+    expect: &[usize],
     expect_gen: u64,
-    deadline: Duration,
-) -> Result<Conn<TcpStream>, String> {
-    let limit = Instant::now() + deadline;
+    slice: Duration,
+) -> Result<Option<(usize, Conn<TcpStream>)>, String> {
+    let limit = Instant::now() + slice;
     loop {
         match listener.accept() {
             Ok((stream, peer_addr)) => {
@@ -424,8 +468,10 @@ pub(crate) fn accept_hello(
                     format!("inbound mesh connection from {peer_addr}"),
                     DeadlineOnly,
                 )?;
+                // The HELLO is already in flight once the dial landed —
+                // give it a real read window even on a short poll slice.
                 let (k, token, payload) =
-                    link.recv(time_left(limit)).map_err(|e| {
+                    link.recv(Duration::from_secs(10)).map_err(|e| {
                         format!("rendezvous: waiting for mesh HELLO: {e}")
                     })?;
                 if k != kind::HELLO {
@@ -442,25 +488,23 @@ pub(crate) fn accept_hello(
                     get_u64(&mut input)
                         .map_err(|e| format!("bad mesh HELLO payload: {e}"))?
                 };
-                if j != expect_rank || gen != expect_gen {
+                if !expect.contains(&j) || gen != expect_gen {
                     return Err(format!(
                         "rendezvous: mesh HELLO claims rank {j} generation \
-                         {gen}; expected rank {expect_rank} generation \
+                         {gen}; expected rank(s) {expect:?} generation \
                          {expect_gen}"
                     ));
                 }
                 // carry any bytes the HELLO read over-pulled into the
                 // peer connection — nothing on the wire is ever dropped
                 let (stream, leftover) = link.into_parts();
-                return Conn::with_leftover(stream, leftover)
-                    .map_err(|e| format!("peer {j}: {e}"));
+                let conn = Conn::with_leftover(stream, leftover)
+                    .map_err(|e| format!("peer {j}: {e}"))?;
+                return Ok(Some((j, conn)));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 if Instant::now() > limit {
-                    return Err(format!(
-                        "rendezvous: timed out waiting for mesh dial from \
-                         rank {expect_rank}"
-                    ));
+                    return Ok(None);
                 }
                 std::thread::sleep(Duration::from_millis(5));
             }
@@ -681,9 +725,14 @@ fn bootstrap_join(
 }
 
 /// The respawn flow: the driver answered JOIN with MESH(final map,
-/// token = recovery generation). Dial every survivor with a
-/// generation-stamped HELLO, bind a fresh ephemeral mesh listener for
-/// future recoveries, report MESHED with its address.
+/// token = recovery generation). The payload may carry a trailing
+/// *pending* rank list — replacements the driver has not admitted yet
+/// (batched recovery replaces a set of dead ranks one JOIN at a time).
+/// Dial every survivor and every earlier replacement with a
+/// generation-stamped HELLO, bind a fresh ephemeral mesh listener,
+/// report MESHED with its address, then accept the pending
+/// replacements' HELLOs (they dial us once the driver admits them and
+/// hands them our fresh address).
 fn respawn_join(
     mut ctrl: TcpCtrl,
     rank: usize,
@@ -705,13 +754,32 @@ fn respawn_join(
             "rendezvous: respawn MESH carries generation 0".to_string()
         );
     }
+    // Trailing pending list (absent = single-rank recovery wire format).
+    let mut pending: Vec<usize> = Vec::new();
+    if let Ok(n) = get_u64(&mut input) {
+        if n as usize > ranks {
+            return Err(format!("rendezvous: MESH names {n} pending ranks"));
+        }
+        for _ in 0..n {
+            let r = get_u64(&mut input)
+                .map_err(|e| format!("bad MESH pending list: {e}"))?
+                as usize;
+            if r >= ranks || r == rank {
+                return Err(format!(
+                    "rendezvous: MESH pending list names rank {r}"
+                ));
+            }
+            pending.push(r);
+        }
+    }
 
-    // Dial every survivor (they are parked, each accepting exactly one
-    // generation-validated connection).
+    // Dial every survivor and every already-admitted replacement (they
+    // are parked, each accepting generation-validated connections).
+    // Pending ranks have no listener yet — they dial *us* later.
     let mut peers: Vec<Option<PeerConn<TcpStream>>> =
         (0..ranks).map(|_| None).collect();
     for (j, addr) in final_map.iter().enumerate() {
-        if j == rank {
+        if j == rank || pending.contains(&j) {
             continue;
         }
         let s = dial_hello(
@@ -751,6 +819,37 @@ fn respawn_join(
     let mut meshed = Vec::new();
     put_str(&mut meshed, &actual);
     ctrl.send_payload(kind::MESHED, gen, &meshed)?;
+
+    // Accept the pending (later-admitted) replacements' HELLOs on the
+    // fresh listener — they learn our address from their own MESH map.
+    if !pending.is_empty() {
+        let l = listener.as_ref().ok_or_else(|| {
+            format!(
+                "rendezvous: {} pending replacement(s) must dial this \
+                 worker, but binding a mesh listener failed",
+                pending.len()
+            )
+        })?;
+        let mut remaining = pending.clone();
+        while !remaining.is_empty() {
+            if time_left(limit).is_zero() {
+                return Err(format!(
+                    "rendezvous: timed out waiting for mesh dials from \
+                     pending replacement rank(s) {remaining:?}"
+                ));
+            }
+            if let Some((j, conn)) = accept_hello_any(
+                l,
+                &remaining,
+                gen,
+                Duration::from_millis(100),
+            )? {
+                remaining.retain(|&r| r != j);
+                peers[j] = Some(PeerConn::new(conn, j));
+            }
+        }
+    }
+
     let (stream, leftover) = ctrl.into_parts();
     let ctrl_conn = Conn::with_leftover(stream, leftover)
         .map_err(|e| format!("ctrl: {e}"))?;
@@ -784,6 +883,18 @@ mod tests {
         // zero ranks reject
         let empty = encode_map(&[]);
         assert!(decode_map(&mut empty.as_slice()).is_err());
+    }
+
+    #[test]
+    fn dial_retry_deadline_error_names_the_attempt_count() {
+        // port 9 (discard) is almost surely unbound: every attempt is
+        // refused fast, so the retry loop runs a few backoff rounds
+        let limit = Instant::now() + Duration::from_millis(250);
+        let err = dial_retry("127.0.0.1:9", limit, "nobody")
+            .err()
+            .expect("nothing listens on port 9");
+        assert!(err.contains("attempt(s)"), "{err}");
+        assert!(err.contains("nobody"), "{err}");
     }
 
     /// Raw client: dial, send JOIN(rank), return the first reply frame.

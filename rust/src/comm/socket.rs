@@ -64,9 +64,12 @@
 //! backend) and keeps an in-memory copy as its rollback target.
 //!
 //! Recovery rolls **every** rank back to that barrier: survivors receive
-//! PAUSE (drain writes so only whole frames are on the wire, drop the
-//! dead peer's connection, accept the replacement's re-mesh dial via
-//! [`FabricHooks::accept_replacement`]), then RESTORE (reload the
+//! PAUSE naming the whole dead set (drain writes so only whole frames
+//! are on the wire, drop every dead peer's connection, accept each
+//! replacement's re-mesh dial via
+//! [`FabricHooks::try_accept_replacement`] — polling the control
+//! channel between accept slices so a superseding PAUSE folds a
+//! mid-recovery death into the batch), then RESTORE (reload the
 //! rollback record, reset channel tokens to the barrier's values, bump
 //! the recovery generation). Frames from the abandoned generation that
 //! are still buffered in a surviving channel are identified by the frame
@@ -87,12 +90,16 @@ use std::time::{Duration, Instant};
 
 use super::codec::{
     decode_frame, decode_msgs, decode_policy, encode_frame_into,
-    encode_msg_frame_gen, encode_policy_into, frame_len, get_u32, get_u64,
+    encode_frame_into_gen, encode_msg_frame_gen, encode_policy_into,
+    frame_len, get_u32, get_u64,
     put_u32, put_u64, put_u8, WireError, WireMsg, FRAME_HEADER_LEN,
 };
 use super::outbox::FlushPolicy;
 use super::transport::{flush_outbox, Transport};
-use super::{Chaos, CommStats, FabricActor, Outbox, RankStats, WireActor};
+use super::{
+    Chaos, CommStats, FabricActor, NetChaos, Outbox, RankStats, WireActor,
+};
+use crate::hash::xxh64_u64;
 use crate::snapshot::checkpoint::CheckpointRecord;
 
 /// Frame kinds on the wire (mesh, control, and rendezvous channels).
@@ -162,6 +169,11 @@ pub(crate) mod kind {
     /// stored barrier stays pending: a rank that died mid-barrier may
     /// have skipped it, so recovery names the exact barrier to restore.
     pub const CKPT_COMMIT: u8 = 24;
+    /// Peer → peer: heartbeat on an idle mesh channel (empty payload,
+    /// token 0). Consumed before token validation — it carries no
+    /// messages, bumps no counters, and exists only so each end can
+    /// tell a quiet-but-healthy channel from a dead one.
+    pub const HB: u8 = 25;
 }
 
 /// How long a blocked control-channel read may go silent before the
@@ -179,8 +191,9 @@ pub(crate) const DEFAULT_REARM_CAP: u32 = 10;
 pub(crate) const CHAOS_ABORT: &str = "chaos: injected fault — dying mid-epoch";
 
 /// The stream capabilities the socket loop needs — implemented by
-/// `UnixStream` (process backend) and `TcpStream` (tcp backend).
-pub(crate) trait SocketLike: Read + Write + Send {
+/// `UnixStream` (process backend), `TcpStream` (tcp backend), and
+/// [`ChaosTransport`] (either of those behind a fault interposer).
+pub trait SocketLike: Read + Write + Send {
     fn set_nonblocking_mode(&self, nonblocking: bool) -> std::io::Result<()>;
     fn set_read_timeout_opt(
         &self,
@@ -230,6 +243,314 @@ impl SocketLike for std::net::TcpStream {
         timeout: Option<Duration>,
     ) -> std::io::Result<()> {
         self.set_write_timeout(timeout)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chaos interposer: seeded, frame-granular network fault injection
+// ---------------------------------------------------------------------
+
+/// A stream wrapper that injects deterministic, seed-driven faults at
+/// frame granularity — the `ChaosTransport` of the chaos plane (see
+/// [`NetChaos`]). Faults are applied on the **read path**: the
+/// interposer parses the inner byte stream into whole frames and, per
+/// frame, rolls one deterministic per-mille decision from
+/// `xxh64(channel seed, frame index)`:
+///
+/// * **drop** — the frame vanishes; the receiver sees a token gap on the
+///   next MSGS frame (or a heartbeat token audit) and recovery rolls
+///   back.
+/// * **duplicate** — the frame arrives twice; the second copy overruns
+///   the channel token and is rejected.
+/// * **corrupt** — one bit flips (never in the length field, so the
+///   receiver's framing stays aligned and the CRC or a field check
+///   rejects promptly instead of waiting for bytes that never come).
+/// * **delay** — the frame and everything behind it (FIFO preserved) is
+///   withheld for `delay_polls` read polls; pure latency, no recovery.
+/// * **half-open stall / partition** — if either endpoint of the channel
+///   is in `partition_mask`, reads return `WouldBlock` forever after
+///   `stall_after_frames` frames while writes keep succeeding — exactly
+///   a half-open link. Only heartbeat staleness detects this.
+///
+/// Wrapping with [`ChaosTransport::clean`] (or a [`NetChaos`] that is
+/// not [`NetChaos::active`]) is a transparent pass-through, so worker
+/// loops can be monomorphized over `ChaosTransport<S>` unconditionally.
+/// If the inner bytes ever fail to parse as frames the interposer fails
+/// open: it stops injecting and passes bytes through raw.
+pub struct ChaosTransport<S> {
+    inner: S,
+    state: Option<Box<ChaosState>>,
+}
+
+struct ChaosState {
+    /// Per-channel seed: `xxh64((my_rank << 32) | peer_rank, cfg.seed)`.
+    seed: u64,
+    cfg: NetChaos,
+    /// Frames fully processed on this channel — the fault-roll index.
+    frames: u64,
+    /// Raw bytes read from the inner stream, not yet framed.
+    staged: Vec<u8>,
+    /// Bytes approved for delivery to the caller.
+    ready: Vec<u8>,
+    ready_pos: usize,
+    /// A delayed frame is withheld for this many more read calls.
+    hold_polls: u32,
+    /// The frame at the front of `staged` already rolled `delay` and
+    /// must be delivered (without a re-roll) once the hold expires.
+    delay_pending: bool,
+    /// This channel is in the partition set.
+    partitioned: bool,
+    /// The partition tripped: every read stalls from now on.
+    stalled: bool,
+    /// Remaining lossy-fault (drop/dup/corrupt) budget; `None` =
+    /// unlimited.
+    budget: Option<u32>,
+    /// Frame parse failed (foreign traffic): inject nothing, pass raw.
+    passthrough: bool,
+}
+
+fn chaos_would_block() -> std::io::Error {
+    std::io::Error::new(ErrorKind::WouldBlock, "chaos: frame withheld")
+}
+
+impl ChaosState {
+    /// Frame as many staged bytes as possible through the fault roll,
+    /// moving approved bytes into `ready`.
+    fn process(&mut self) {
+        loop {
+            if self.stalled || self.hold_polls > 0 || self.passthrough {
+                return;
+            }
+            let total = match frame_len(&self.staged) {
+                Ok(Some(t)) if self.staged.len() >= t => t,
+                Ok(_) => return, // incomplete frame — wait for bytes
+                Err(_) => {
+                    // not frame traffic — fail open, stop injecting
+                    self.passthrough = true;
+                    let mut staged = std::mem::take(&mut self.staged);
+                    self.ready.append(&mut staged);
+                    return;
+                }
+            };
+            if self.partitioned && self.frames >= self.cfg.stall_after_frames
+            {
+                self.stalled = true;
+                return;
+            }
+            let idx = self.frames;
+            if self.delay_pending {
+                self.delay_pending = false;
+                self.ready.extend_from_slice(&self.staged[..total]);
+                self.staged.drain(..total);
+                self.frames += 1;
+                continue;
+            }
+            let roll = (xxh64_u64(idx, self.seed) % 1000) as u16;
+            let d = self.cfg.drop_per_mille;
+            let u = d + self.cfg.dup_per_mille;
+            let c = u + self.cfg.corrupt_per_mille;
+            let l = c + self.cfg.delay_per_mille;
+            let lossy_ok = self.budget.map_or(true, |b| b > 0);
+            if roll < c && lossy_ok {
+                if let Some(b) = self.budget.as_mut() {
+                    *b -= 1;
+                }
+                if roll < d {
+                    // drop
+                    self.staged.drain(..total);
+                } else if roll < u {
+                    // duplicate
+                    self.ready.extend_from_slice(&self.staged[..total]);
+                    self.ready.extend_from_slice(&self.staged[..total]);
+                    self.staged.drain(..total);
+                } else {
+                    // corrupt: flip one bit anywhere except the length
+                    // field at header[12..16)
+                    let mut frame = self.staged[..total].to_vec();
+                    let span = (total - 4) as u64;
+                    let h = xxh64_u64(idx ^ 0x9E37_79B9_7F4A_7C15, self.seed);
+                    let mut pos = (h % span) as usize;
+                    if pos >= 12 {
+                        pos += 4;
+                    }
+                    frame[pos] ^= 1 << ((h >> 32) % 8);
+                    self.ready.extend_from_slice(&frame);
+                    self.staged.drain(..total);
+                }
+                self.frames += 1;
+                continue;
+            }
+            if roll >= c && roll < l {
+                // delay: withhold this frame and everything behind it;
+                // the roll index is consumed — delivery skips the re-roll
+                self.delay_pending = true;
+                self.hold_polls = u32::from(self.cfg.delay_polls.max(1));
+                return;
+            }
+            // clean
+            self.ready.extend_from_slice(&self.staged[..total]);
+            self.staged.drain(..total);
+            self.frames += 1;
+        }
+    }
+}
+
+impl<S> ChaosTransport<S> {
+    /// Transparent pass-through (no faults, no buffering).
+    pub fn clean(inner: S) -> Self {
+        Self { inner, state: None }
+    }
+
+    /// Wrap one mesh channel (`my_rank` reads from `peer_rank`) under
+    /// the given fault policy. Inactive policies degrade to
+    /// [`ChaosTransport::clean`].
+    pub fn with_faults(
+        inner: S,
+        cfg: NetChaos,
+        my_rank: usize,
+        peer_rank: usize,
+    ) -> Self {
+        if !cfg.active() {
+            return Self::clean(inner);
+        }
+        let in_mask = |r: usize| {
+            r < 64 && cfg.partition_mask & (1u64 << (r as u32)) != 0
+        };
+        let partitioned = in_mask(my_rank) || in_mask(peer_rank);
+        let rates = cfg.drop_per_mille > 0
+            || cfg.dup_per_mille > 0
+            || cfg.corrupt_per_mille > 0
+            || cfg.delay_per_mille > 0;
+        if !rates && !partitioned {
+            return Self::clean(inner);
+        }
+        let channel = ((my_rank as u64) << 32) | peer_rank as u64;
+        Self {
+            inner,
+            state: Some(Box::new(ChaosState {
+                seed: xxh64_u64(channel, cfg.seed),
+                cfg,
+                frames: 0,
+                staged: Vec::new(),
+                ready: Vec::new(),
+                ready_pos: 0,
+                hold_polls: 0,
+                delay_pending: false,
+                partitioned,
+                stalled: false,
+                budget: if cfg.fault_budget > 0 {
+                    Some(u32::from(cfg.fault_budget))
+                } else {
+                    None
+                },
+                passthrough: false,
+            })),
+        }
+    }
+}
+
+impl<S: Read> Read for ChaosTransport<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let Self { inner, state } = self;
+        let Some(st) = state.as_deref_mut() else {
+            return inner.read(buf);
+        };
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        loop {
+            // 1. serve already-approved bytes first (FIFO preserved)
+            if st.ready_pos < st.ready.len() {
+                let n = (st.ready.len() - st.ready_pos).min(buf.len());
+                buf[..n].copy_from_slice(
+                    &st.ready[st.ready_pos..st.ready_pos + n],
+                );
+                st.ready_pos += n;
+                if st.ready_pos == st.ready.len() {
+                    st.ready.clear();
+                    st.ready_pos = 0;
+                }
+                return Ok(n);
+            }
+            if st.stalled {
+                return Err(chaos_would_block());
+            }
+            if st.hold_polls > 0 {
+                st.hold_polls -= 1;
+                if st.hold_polls > 0 {
+                    return Err(chaos_would_block());
+                }
+            }
+            if st.passthrough && st.staged.is_empty() {
+                return inner.read(buf);
+            }
+            // 2. pull whatever the inner stream has
+            let mut tmp = [0u8; 1 << 16];
+            let got = match inner.read(&mut tmp) {
+                Ok(0) => {
+                    // EOF: release anything still staged (a trailing
+                    // partial frame surfaces as "closed mid-frame" at
+                    // the receiver, exactly like a real dead peer)
+                    if st.staged.is_empty() {
+                        return Ok(0);
+                    }
+                    let mut staged = std::mem::take(&mut st.staged);
+                    st.ready.append(&mut staged);
+                    continue;
+                }
+                Ok(n) => {
+                    st.staged.extend_from_slice(&tmp[..n]);
+                    n
+                }
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock
+                        || e.kind() == ErrorKind::TimedOut =>
+                {
+                    0
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            // 3. frame the staged bytes through the fault roll
+            st.process();
+            if st.ready_pos < st.ready.len() {
+                continue; // serve
+            }
+            if st.stalled || st.hold_polls > 0 || got == 0 {
+                return Err(chaos_would_block());
+            }
+            // bytes arrived but no complete frame yet — read more
+        }
+    }
+}
+
+impl<S: Write> Write for ChaosTransport<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+impl<S: SocketLike> SocketLike for ChaosTransport<S> {
+    fn set_nonblocking_mode(&self, nonblocking: bool) -> std::io::Result<()> {
+        self.inner.set_nonblocking_mode(nonblocking)
+    }
+
+    fn set_read_timeout_opt(
+        &self,
+        timeout: Option<Duration>,
+    ) -> std::io::Result<()> {
+        self.inner.set_read_timeout_opt(timeout)
+    }
+
+    fn set_write_timeout_opt(
+        &self,
+        timeout: Option<Duration>,
+    ) -> std::io::Result<()> {
+        self.inner.set_write_timeout_opt(timeout)
     }
 }
 
@@ -425,6 +746,20 @@ impl<S: SocketLike> Conn<S> {
     }
 }
 
+impl<S> Conn<S> {
+    /// Re-wrap the underlying stream (e.g. behind a [`ChaosTransport`])
+    /// without disturbing buffered inbound bytes or queued writes.
+    pub(crate) fn map_stream<T>(self, f: impl FnOnce(S) -> T) -> Conn<T> {
+        Conn {
+            stream: f(self.stream),
+            rbuf: self.rbuf,
+            rpos: self.rpos,
+            wqueue: self.wqueue,
+            wpos: self.wpos,
+        }
+    }
+}
+
 /// Poll `ctrl` until one complete control frame is available and return
 /// its `(kind, token, payload)`. `Ok(None)` means the peer closed the
 /// channel cleanly (no partial frame pending) — end of the worker's
@@ -493,6 +828,11 @@ pub(crate) struct PeerConn<S> {
     /// Set when the peer died mid-epoch on a resilient run: the channel
     /// parks (reads skip, sends drop) until recovery replaces it.
     failed: Option<String>,
+    /// Last instant any bytes arrived from this peer — the heartbeat
+    /// staleness clock.
+    last_rx: Instant,
+    /// Last instant a heartbeat was queued toward this peer.
+    last_hb: Instant,
 }
 
 impl<S: SocketLike> PeerConn<S> {
@@ -503,6 +843,8 @@ impl<S: SocketLike> PeerConn<S> {
             sent_seq: 0,
             recv_seq: 0,
             failed: None,
+            last_rx: Instant::now(),
+            last_hb: Instant::now(),
         }
     }
 
@@ -512,11 +854,44 @@ impl<S: SocketLike> PeerConn<S> {
     fn reset_epoch(&mut self, sent_seq: u64, recv_seq: u64) {
         self.sent_seq = sent_seq;
         self.recv_seq = recv_seq;
+        self.last_rx = Instant::now();
+        self.last_hb = Instant::now();
+        // heartbeat stragglers from the tail of the previous epoch are
+        // harmless — drain any complete HB frames parked in the buffer
+        while let Ok(Some(total)) = self.conn.next_frame_bytes(&self.label)
+        {
+            let mut input = self.conn.frame_at_cursor(total);
+            match decode_frame(&mut input) {
+                Ok(f) if f.kind == kind::HB => {
+                    self.conn.consume(total);
+                    self.conn.compact();
+                }
+                _ => break,
+            }
+        }
         debug_assert_eq!(
             self.conn.pending_read_bytes(),
             0,
             "mesh channel must be drained at an epoch boundary"
         );
+    }
+
+    /// Re-wrap the underlying stream (e.g. in a [`ChaosTransport`])
+    /// while preserving the channel's counters, parked state and
+    /// staleness clocks.
+    pub(crate) fn map_stream<T>(
+        self,
+        f: impl FnOnce(S) -> T,
+    ) -> PeerConn<T> {
+        PeerConn {
+            conn: self.conn.map_stream(f),
+            label: self.label,
+            sent_seq: self.sent_seq,
+            recv_seq: self.recv_seq,
+            failed: self.failed,
+            last_rx: self.last_rx,
+            last_hb: self.last_hb,
+        }
     }
 }
 
@@ -535,6 +910,9 @@ struct SocketTransport<'a, S, M> {
     io_error: Option<String>,
     /// Recovery generation stamped into outbound MSGS frames.
     gen: u16,
+    /// Fabric epoch id — stamped into HB frames so stragglers crossing
+    /// an epoch boundary are never token-audited against the new epoch.
+    epoch: u64,
     /// Resilient epoch: peer failures park the channel instead of
     /// aborting, and stale-generation frames are discarded.
     resilient: bool,
@@ -566,11 +944,15 @@ impl<S: SocketLike, M: WireMsg> SocketTransport<'_, S, M> {
 
     /// Read and decode every complete inbound frame from `p`.
     /// Returns `(batch, frame bytes)` pairs in arrival order. On a
-    /// resilient epoch a dead peer parks its channel (empty result);
-    /// frames stamped with an older recovery generation are discarded.
+    /// resilient epoch a dead peer — or a channel that delivered a
+    /// mangled frame (lossy link, chaos injection) — parks its channel
+    /// (empty result) instead of killing the worker; frames stamped
+    /// with an older recovery generation are discarded; HB frames are
+    /// consumed before token validation.
     fn read_frames(&mut self, p: usize) -> Result<Vec<(Vec<M>, u64)>, String> {
         let resilient = self.resilient;
         let my_gen = self.gen;
+        let my_epoch = self.epoch;
         let Some(peer) = self.peers[p].as_mut() else {
             // the slot is empty only while recovery is replacing it
             return Ok(Vec::new());
@@ -586,6 +968,9 @@ impl<S: SocketLike, M: WireMsg> SocketTransport<'_, S, M> {
             }
             Err(e) => return Err(e),
         };
+        if outcome.progressed {
+            peer.last_rx = Instant::now();
+        }
         if outcome.eof {
             let msg = format!("{}: peer closed", peer.label);
             if resilient {
@@ -594,55 +979,68 @@ impl<S: SocketLike, M: WireMsg> SocketTransport<'_, S, M> {
             }
             return Err(msg);
         }
-        let what = peer.label.as_str();
         let mut out = Vec::new();
-        while let Some(total) = peer.conn.next_frame_bytes(what)? {
-            let (fgen, ftoken, msgs) = {
-                let mut input = peer.conn.frame_at_cursor(total);
-                let frame = decode_frame(&mut input)
-                    .map_err(|e| format!("{what}: {e}"))?;
-                if frame.kind != kind::MSGS {
-                    return Err(format!(
-                        "{what}: unexpected frame kind {}",
-                        frame.kind
-                    ));
-                }
-                if frame.gen != my_gen {
-                    (frame.gen, frame.token, None)
-                } else {
-                    let msgs: Vec<M> = decode_msgs(&frame)
-                        .map_err(|e| format!("{what}: {e}"))?;
-                    (frame.gen, frame.token, Some(msgs))
-                }
-            };
-            let Some(msgs) = msgs else {
-                if fgen < my_gen {
-                    // a whole frame from an abandoned incarnation —
-                    // fully written before its sender rolled back (it
-                    // may even straggle into the NEXT epoch over a
-                    // persistent mesh connection); discard without
-                    // touching the current token sequence
-                    peer.conn.consume(total);
-                    continue;
-                }
-                return Err(format!(
-                    "{what}: frame generation {fgen} is ahead of this \
-                     worker's recovery generation {my_gen}"
-                ));
-            };
-            let expect = peer.recv_seq.wrapping_add(msgs.len() as u64);
-            if ftoken != expect {
-                return Err(format!(
-                    "{what}: termination token mismatch \
-                     (expected {expect}, got {ftoken})"
-                ));
-            }
-            peer.recv_seq = expect;
-            peer.conn.consume(total);
-            out.push((msgs, total as u64));
+        match drain_peer_frames(peer, my_gen, my_epoch, &mut out) {
+            Ok(()) => {}
+            Err(e) if resilient => peer.failed = Some(e),
+            Err(e) => return Err(e),
         }
         peer.conn.compact();
         Ok(out)
+    }
+
+    /// Queue a heartbeat on every live channel that has not been HB'd
+    /// for `interval`. The HB token carries this channel's cumulative
+    /// `sent_seq`, so the receiver can audit a quiet channel for
+    /// dropped frames; the payload carries the fabric epoch so
+    /// stragglers crossing an epoch boundary are never mis-audited.
+    fn queue_heartbeats(&mut self, interval: Duration) {
+        let now = Instant::now();
+        let gen = self.gen;
+        let epoch = self.epoch;
+        let resilient = self.resilient;
+        let io_error = &mut self.io_error;
+        for peer in self.peers.iter_mut().flatten() {
+            if peer.failed.is_some()
+                || now.duration_since(peer.last_hb) < interval
+            {
+                continue;
+            }
+            peer.last_hb = now;
+            let mut payload = Vec::with_capacity(8);
+            put_u64(&mut payload, epoch);
+            let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + 8);
+            encode_frame_into_gen(
+                kind::HB,
+                gen,
+                0,
+                peer.sent_seq,
+                &payload,
+                &mut frame,
+            );
+            peer.conn.queue_frame(frame);
+            if let Err(e) = peer.conn.pump_write(&peer.label) {
+                if resilient {
+                    peer.failed = Some(e);
+                } else if io_error.is_none() {
+                    *io_error = Some(e);
+                }
+            }
+        }
+    }
+
+    /// First live peer silent for longer than `timeout`, with the
+    /// observed staleness in milliseconds.
+    fn stale_peer(&self, timeout: Duration) -> Option<(usize, u64)> {
+        let now = Instant::now();
+        self.peers.iter().enumerate().find_map(|(p, peer)| {
+            let peer = peer.as_ref()?;
+            if peer.failed.is_some() {
+                return None;
+            }
+            let silent = now.duration_since(peer.last_rx);
+            (silent > timeout).then(|| (p, silent.as_millis() as u64))
+        })
     }
 
     /// Park every live peer channel at a frame boundary (see
@@ -696,10 +1094,16 @@ impl<S: SocketLike, M: WireMsg> SocketTransport<'_, S, M> {
         self.sent = sent_total;
         self.selfq.clear();
         self.io_error = None;
+        let now = Instant::now();
         for (p, peer) in self.peers.iter_mut().enumerate() {
             if let Some(peer) = peer {
                 peer.sent_seq = channels[p].0;
                 peer.recv_seq = channels[p].1;
+                // recovery may have taken longer than the staleness
+                // threshold — re-base every liveness clock so healthy
+                // survivors are not instantly declared stale
+                peer.last_rx = now;
+                peer.last_hb = now;
             }
         }
     }
@@ -725,6 +1129,114 @@ impl<S: SocketLike, M: WireMsg> SocketTransport<'_, S, M> {
             p.as_ref().is_some_and(|pc| pc.failed.is_some())
         })
     }
+
+    /// Park a peer channel as failed (heartbeat staleness detection).
+    fn mark_peer_failed(&mut self, p: usize, msg: String) {
+        if let Some(peer) = self.peers[p].as_mut() {
+            if peer.failed.is_none() {
+                peer.failed = Some(msg);
+            }
+        }
+    }
+}
+
+/// Decode every complete inbound frame buffered on `peer`: HB frames
+/// are consumed before token validation (they bump no counters, but a
+/// same-generation same-epoch HB audits the channel token, so a quiet
+/// channel still detects dropped frames), stale-generation frames are
+/// discarded, and MSGS frames are token-validated and appended to
+/// `out` as `(batch, frame bytes)` pairs in arrival order.
+fn drain_peer_frames<S: SocketLike, M: WireMsg>(
+    peer: &mut PeerConn<S>,
+    my_gen: u16,
+    my_epoch: u64,
+    out: &mut Vec<(Vec<M>, u64)>,
+) -> Result<(), String> {
+    enum Inbound<M> {
+        Hb { audit: Option<String> },
+        StaleGen,
+        FutureGen(u16),
+        Batch { token: u64, msgs: Vec<M> },
+    }
+    let what = peer.label.as_str();
+    while let Some(total) = peer.conn.next_frame_bytes(what)? {
+        let parsed = {
+            let mut input = peer.conn.frame_at_cursor(total);
+            let frame = decode_frame(&mut input)
+                .map_err(|e| format!("{what}: {e}"))?;
+            if frame.kind == kind::HB {
+                let mut pl = frame.payload;
+                let hb_epoch = get_u64(&mut pl).unwrap_or(u64::MAX);
+                let audit = if frame.gen == my_gen
+                    && hb_epoch == my_epoch
+                    && frame.token != peer.recv_seq
+                {
+                    Some(format!(
+                        "{what}: heartbeat token audit — peer sent \
+                         through token {}, channel received {} \
+                         (frames lost on the wire)",
+                        frame.token, peer.recv_seq
+                    ))
+                } else {
+                    None
+                };
+                Inbound::Hb { audit }
+            } else if frame.kind != kind::MSGS {
+                return Err(format!(
+                    "{what}: unexpected frame kind {}",
+                    frame.kind
+                ));
+            } else if frame.gen != my_gen {
+                if frame.gen < my_gen {
+                    Inbound::StaleGen
+                } else {
+                    Inbound::FutureGen(frame.gen)
+                }
+            } else {
+                let msgs: Vec<M> = decode_msgs(&frame)
+                    .map_err(|e| format!("{what}: {e}"))?;
+                Inbound::Batch {
+                    token: frame.token,
+                    msgs,
+                }
+            }
+        };
+        match parsed {
+            Inbound::Hb { audit } => {
+                peer.conn.consume(total);
+                if let Some(a) = audit {
+                    return Err(a);
+                }
+            }
+            Inbound::StaleGen => {
+                // a whole frame from an abandoned incarnation — fully
+                // written before its sender rolled back (it may even
+                // straggle into the NEXT epoch over a persistent mesh
+                // connection); discard without touching the current
+                // token sequence
+                peer.conn.consume(total);
+            }
+            Inbound::FutureGen(fgen) => {
+                return Err(format!(
+                    "{what}: frame generation {fgen} is ahead of this \
+                     worker's recovery generation {my_gen}"
+                ));
+            }
+            Inbound::Batch { token, msgs } => {
+                let expect = peer.recv_seq.wrapping_add(msgs.len() as u64);
+                if token != expect {
+                    return Err(format!(
+                        "{what}: termination token mismatch \
+                         (expected {expect}, got {token})"
+                    ));
+                }
+                peer.recv_seq = expect;
+                peer.conn.consume(total);
+                out.push((msgs, total as u64));
+            }
+        }
+    }
+    Ok(())
 }
 
 impl<S: SocketLike, M: WireMsg> Transport<M> for SocketTransport<'_, S, M> {
@@ -801,6 +1313,10 @@ pub(crate) struct EpochSpec {
     /// The barrier the resume record must come from (0 when `resume`
     /// is [`ResumeSrc::None`]).
     pub resume_barrier: u64,
+    /// Mesh heartbeat cadence in milliseconds (0 = heartbeats off).
+    pub hb_interval_ms: u64,
+    /// Peer-staleness threshold in milliseconds (0 = staleness off).
+    pub hb_timeout_ms: u64,
     /// Resume leg.
     pub resume: ResumeSrc,
 }
@@ -815,6 +1331,8 @@ impl EpochSpec {
             epoch: 1,
             gen: 0,
             resume_barrier: 0,
+            hb_interval_ms: 0,
+            hb_timeout_ms: 0,
             resume: ResumeSrc::None,
         }
     }
@@ -853,6 +1371,8 @@ pub(crate) fn encode_seed<A: FabricActor>(
     put_u64(&mut out, spec.chunk);
     put_u64(&mut out, spec.epoch);
     put_u64(&mut out, spec.gen);
+    put_u64(&mut out, spec.hb_interval_ms);
+    put_u64(&mut out, spec.hb_timeout_ms);
     put_u64(&mut out, spec.resume_barrier);
     match &spec.resume {
         ResumeSrc::None => put_u8(&mut out, 0),
@@ -892,6 +1412,8 @@ pub(crate) fn split_seed(payload: &[u8]) -> Result<(SeedHead, &[u8]), String> {
     let chunk = get_u64(&mut input).map_err(err)?;
     let epoch = get_u64(&mut input).map_err(err)?;
     let gen = get_u64(&mut input).map_err(err)?;
+    let hb_interval_ms = get_u64(&mut input).map_err(err)?;
+    let hb_timeout_ms = get_u64(&mut input).map_err(err)?;
     let resume_barrier = get_u64(&mut input).map_err(err)?;
     let resume = match super::codec::get_u8(&mut input).map_err(err)? {
         0 => ResumeSrc::None,
@@ -914,6 +1436,8 @@ pub(crate) fn split_seed(payload: &[u8]) -> Result<(SeedHead, &[u8]), String> {
                 epoch,
                 gen,
                 resume_barrier,
+                hb_interval_ms,
+                hb_timeout_ms,
                 resume,
             },
         },
@@ -950,14 +1474,19 @@ pub(crate) trait FabricHooks<S> {
     fn load_resume(&mut self, epoch: u64, barrier: u64)
         -> Result<Vec<u8>, String>;
 
-    /// Accept the respawned rank `failed`'s re-mesh dial (HELLO carrying
-    /// generation `gen`) and return the new connection.
-    fn accept_replacement(
+    /// Poll for one re-mesh dial from any of the `remaining` respawned
+    /// ranks (HELLO carrying generation `gen`) for at most `slice`.
+    /// `Ok(None)` means nobody dialed within the slice — the caller
+    /// interleaves these short slices with control-channel polls so a
+    /// superseding PAUSE (a death folding into the in-flight recovery
+    /// batch) is noticed instead of deadlocking on an accept that can
+    /// never complete.
+    fn try_accept_replacement(
         &mut self,
-        failed: usize,
+        remaining: &[usize],
         gen: u64,
-        deadline: Duration,
-    ) -> Result<Conn<S>, String>;
+        slice: Duration,
+    ) -> Result<Option<(usize, Conn<S>)>, String>;
 }
 
 // ---------------------------------------------------------------------
@@ -1125,6 +1654,7 @@ where
         io_error: None,
         gen: (gen & 0xFFFF) as u16,
         resilient: spec.resilient,
+        epoch: spec.epoch,
     };
     let mut outbox: Outbox<A::Msg> =
         Outbox::with_seeds(ranks, head.policy, &head.seeds);
@@ -1163,12 +1693,16 @@ where
 
     let chaos_hit = |delivered: u64, gen: u64| -> bool {
         chaos.is_some_and(|c| {
-            c.rank == rank
+            (c.rank == rank || c.rank2 == rank)
+                && !c.on_pause
                 && c.epoch == spec.epoch
                 && c.generation == gen
                 && delivered >= c.after_delivered
         })
     };
+    let hb_interval = Duration::from_millis(spec.hb_interval_ms);
+    let hb_timeout = Duration::from_millis(spec.hb_timeout_ms);
+    let mut stale_ms = 0u64;
 
     let mut stop = false;
     while !stop {
@@ -1217,6 +1751,29 @@ where
             }
         }
 
+        // 3b. heartbeat plane: keep idle channels audibly alive, and
+        // declare a peer stale once it has been silent past the
+        // timeout (dead rank, dead link, or partition — the driver
+        // disambiguates from the control channel's state)
+        if spec.hb_interval_ms > 0 {
+            tp.queue_heartbeats(hb_interval);
+            tp.check()?;
+        }
+        if spec.hb_timeout_ms > 0 {
+            if let Some((p, silent_ms)) = tp.stale_peer(hb_timeout) {
+                let msg = format!(
+                    "peer {p}: heartbeat silence for {silent_ms}ms \
+                     (dead rank, dead link, or partition)"
+                );
+                if spec.resilient {
+                    stale_ms = silent_ms;
+                    tp.mark_peer_failed(p, msg);
+                } else {
+                    return Err(msg);
+                }
+            }
+        }
+
         // 4. control frames from the driver
         let ctrl_fill = ctrl.fill("ctrl")?;
         if ctrl_fill.eof {
@@ -1239,6 +1796,7 @@ where
                         tp.sent,
                         delivered,
                         tp.first_failed_peer(),
+                        stale_ms,
                     );
                 }
                 kind::IDLE => {
@@ -1251,6 +1809,7 @@ where
                         tp.sent,
                         delivered,
                         tp.first_failed_peer(),
+                        stale_ms,
                     );
                 }
                 kind::STEP => {
@@ -1367,51 +1926,114 @@ where
                             "ctrl: PAUSE on a non-resilient epoch".into()
                         );
                     }
-                    let mut pin = fpayload.as_slice();
-                    let perr =
-                        |e: WireError| format!("ctrl: bad pause frame: {e}");
-                    let dead = get_u64(&mut pin).map_err(perr)? as usize;
-                    let pgen = get_u64(&mut pin).map_err(perr)?;
-                    let rbarrier = get_u64(&mut pin).map_err(perr)?;
-                    if pgen != gen + 1 {
-                        return Err(format!(
-                            "ctrl: PAUSE for generation {pgen}, this worker \
-                             is at generation {gen}"
-                        ));
+                    if chaos.is_some_and(|c| {
+                        c.on_pause
+                            && (c.rank == rank || c.rank2 == rank)
+                            && c.epoch == spec.epoch
+                            && c.generation == gen
+                    }) {
+                        // a death landing mid-recovery: this survivor
+                        // dies on the PAUSE itself and must fold into
+                        // the in-flight batch
+                        return Err(CHAOS_ABORT.to_string());
                     }
-                    if dead >= ranks || dead == rank {
-                        return Err(format!(
-                            "ctrl: PAUSE names rank {dead} dead, but this \
-                             is rank {rank} of {ranks}"
-                        ));
-                    }
-                    // park: whole frames only toward every survivor,
-                    // then hand the dead channel over to recovery
-                    tp.park_live_writes()?;
-                    tp.drop_peer(dead);
-                    queue_ack(ctrl, kind::PAUSE_ACK, pgen);
-                    ctrl.drain_writes("ctrl")?;
-                    // incremental re-mesh: the replacement dials us
-                    let conn = hooks.accept_replacement(
-                        dead,
-                        pgen,
-                        CTRL_DEADLINE,
-                    )?;
-                    tp.install_peer(dead, PeerConn::new(conn, dead));
-                    queue_ack(ctrl, kind::REMESHED, pgen);
-                    ctrl.drain_writes("ctrl")?;
-                    // wait for the global rollback order
-                    let (rk, rtoken, _rp) =
-                        next_ctrl_frame(ctrl, Some(CTRL_DEADLINE))?
-                            .ok_or_else(|| {
-                                "ctrl: driver closed during recovery"
-                                    .to_string()
-                            })?;
-                    if rk != kind::RESTORE || rtoken != pgen {
-                        return Err(format!(
-                            "ctrl: expected RESTORE gen {pgen}, got kind \
-                             {rk} token {rtoken}"
-                        ));
+                    let (mut dead_set, mut pgen, mut rbarrier) =
+                        decode_pause_payload(&fpayload)?;
+                    'recover: loop {
+                        if pgen <= gen {
+                            return Err(format!(
+                                "ctrl: PAUSE for generation {pgen}, this \
+                                 worker is already at generation {gen}"
+                            ));
+                        }
+                        if dead_set.iter().any(|&d| d >= ranks) {
+                            return Err(format!(
+                                "ctrl: PAUSE names dead set {dead_set:?} \
+                                 outside {ranks} ranks"
+                            ));
+                        }
+                        if dead_set.contains(&rank) {
+                            return Err(format!(
+                                "ctrl: PAUSE declares rank {rank} dead \
+                                 (partitioned or wedged) — exiting so a \
+                                 replacement can take the slot"
+                            ));
+                        }
+                        // park: whole frames only toward every survivor,
+                        // then hand every dead channel over to recovery
+                        tp.park_live_writes()?;
+                        for &d in &dead_set {
+                            tp.drop_peer(d);
+                        }
+                        queue_ack(ctrl, kind::PAUSE_ACK, pgen);
+                        ctrl.drain_writes("ctrl")?;
+                        // incremental re-mesh: every replacement in the
+                        // batch dials us. Accept in short slices,
+                        // interleaved with control polls, so a
+                        // superseding PAUSE (another death folding into
+                        // the batch) restarts the cycle instead of
+                        // deadlocking on a dial that will never come.
+                        let mut remaining = dead_set.clone();
+                        let accept_deadline = Instant::now() + CTRL_DEADLINE;
+                        while !remaining.is_empty() {
+                            if Instant::now() > accept_deadline {
+                                return Err(format!(
+                                    "re-mesh: replacements for ranks \
+                                     {remaining:?} never dialed within \
+                                     {CTRL_DEADLINE:?}"
+                                ));
+                            }
+                            if let Some((k2, _t2, p2)) =
+                                poll_ctrl_frame(ctrl)?
+                            {
+                                if k2 != kind::PAUSE {
+                                    return Err(format!(
+                                        "ctrl: unexpected frame kind {k2} \
+                                         while re-meshing"
+                                    ));
+                                }
+                                let (d2, g2, b2) =
+                                    decode_pause_payload(&p2)?;
+                                dead_set = d2;
+                                pgen = g2;
+                                rbarrier = b2;
+                                continue 'recover;
+                            }
+                            if let Some((r, conn)) = hooks
+                                .try_accept_replacement(
+                                    &remaining,
+                                    pgen,
+                                    Duration::from_millis(100),
+                                )?
+                            {
+                                remaining.retain(|&x| x != r);
+                                tp.install_peer(r, PeerConn::new(conn, r));
+                            }
+                        }
+                        queue_ack(ctrl, kind::REMESHED, pgen);
+                        ctrl.drain_writes("ctrl")?;
+                        // wait for the global rollback order — or a
+                        // superseding PAUSE folding another death in
+                        let (rk, rtoken, rp) =
+                            next_ctrl_frame(ctrl, Some(CTRL_DEADLINE))?
+                                .ok_or_else(|| {
+                                    "ctrl: driver closed during recovery"
+                                        .to_string()
+                                })?;
+                        if rk == kind::PAUSE {
+                            let (d2, g2, b2) = decode_pause_payload(&rp)?;
+                            dead_set = d2;
+                            pgen = g2;
+                            rbarrier = b2;
+                            continue 'recover;
+                        }
+                        if rk != kind::RESTORE || rtoken != pgen {
+                            return Err(format!(
+                                "ctrl: expected RESTORE gen {pgen}, got \
+                                 kind {rk} token {rtoken}"
+                            ));
+                        }
+                        break 'recover;
                     }
                     // roll back to the barrier recovery named: it is the
                     // last one the driver saw acknowledged by ALL ranks,
@@ -1450,6 +2072,7 @@ where
                     frames_in = rec.frames_in;
                     bytes_in = rec.bytes_in;
                     gen = pgen;
+                    stale_ms = 0;
                     tp.restore(pgen, rec.sent_total, &rec.channels);
                     outbox =
                         Outbox::with_seeds(ranks, head.policy, &head.seeds);
@@ -1471,6 +2094,16 @@ where
                     queue_ack(ctrl, kind::RESTORED, ftoken);
                 }
                 kind::STOP => {
+                    // best-effort: push queued heartbeat stragglers onto
+                    // the wire so persistent mesh channels end the epoch
+                    // at a frame boundary
+                    if spec.hb_interval_ms > 0 {
+                        for peer in tp.peers.iter_mut().flatten() {
+                            if peer.failed.is_none() {
+                                let _ = peer.conn.drain_writes(&peer.label);
+                            }
+                        }
+                    }
                     stop = true;
                     break;
                 }
@@ -1500,21 +2133,26 @@ where
     ctrl.drain_writes("ctrl")
 }
 
-/// REPORT payload: `[sent, delivered, failed_peer]` — `failed_peer` is
-/// `u64::MAX` when every mesh channel is healthy, else the lowest rank
-/// whose channel parked as failed.
+/// REPORT payload: `[sent, delivered, failed_peer, stale_ms]` —
+/// `failed_peer` is `u64::MAX` when every mesh channel is healthy, else
+/// the lowest rank whose channel parked as failed; `stale_ms` is the
+/// heartbeat silence observed when staleness detection parked it (0 for
+/// failures detected by I/O errors). Older workers sent only the first
+/// three words; the driver parses the fourth as optional.
 fn queue_report<S: SocketLike>(
     ctrl: &mut Conn<S>,
     wave: u64,
     sent: u64,
     delivered: u64,
     failed_peer: Option<usize>,
+    stale_ms: u64,
 ) {
-    let mut payload = Vec::with_capacity(24);
+    let mut payload = Vec::with_capacity(32);
     put_u64(&mut payload, sent);
     put_u64(&mut payload, delivered);
     put_u64(&mut payload, failed_peer.map_or(u64::MAX, |p| p as u64));
-    let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + 24);
+    put_u64(&mut payload, stale_ms);
+    let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + 32);
     encode_frame_into(kind::REPORT, 0, wave, &payload, &mut frame);
     ctrl.queue_frame(frame);
 }
@@ -1523,6 +2161,68 @@ fn queue_ack<S: SocketLike>(ctrl: &mut Conn<S>, k: u8, token: u64) {
     let mut frame = Vec::with_capacity(FRAME_HEADER_LEN);
     encode_frame_into(k, 0, token, &[], &mut frame);
     ctrl.queue_frame(frame);
+}
+
+/// Encode a PAUSE payload naming the whole dead set:
+/// `[u64 n, n × u64 dead, u64 gen, u64 barrier]`.
+pub(crate) fn encode_pause_payload(
+    dead: &[usize],
+    gen: u64,
+    barrier: u64,
+) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8 * (dead.len() + 3));
+    put_u64(&mut p, dead.len() as u64);
+    for &d in dead {
+        put_u64(&mut p, d as u64);
+    }
+    put_u64(&mut p, gen);
+    put_u64(&mut p, barrier);
+    p
+}
+
+/// Decode a PAUSE payload into `(dead set, generation, barrier)`.
+fn decode_pause_payload(
+    payload: &[u8],
+) -> Result<(Vec<usize>, u64, u64), String> {
+    let err = |e: WireError| format!("ctrl: bad pause frame: {e}");
+    let mut pin = payload;
+    let n = get_u64(&mut pin).map_err(err)? as usize;
+    if n == 0 || n > 4096 {
+        return Err(format!(
+            "ctrl: bad pause frame: dead-set size {n} out of range"
+        ));
+    }
+    let mut dead = Vec::with_capacity(n);
+    for _ in 0..n {
+        dead.push(get_u64(&mut pin).map_err(err)? as usize);
+    }
+    let gen = get_u64(&mut pin).map_err(err)?;
+    let barrier = get_u64(&mut pin).map_err(err)?;
+    Ok((dead, gen, barrier))
+}
+
+/// Nonblocking poll for one complete control frame; `Ok(None)` when no
+/// frame is buffered yet. EOF mid-recovery is an error (the driver must
+/// outlive its workers).
+fn poll_ctrl_frame<S: SocketLike>(
+    ctrl: &mut Conn<S>,
+) -> Result<Option<(u8, u64, Vec<u8>)>, String> {
+    let outcome = ctrl.fill("ctrl")?;
+    if let Some(total) = ctrl.next_frame_bytes("ctrl")? {
+        let decoded = {
+            let mut input = ctrl.frame_at_cursor(total);
+            let frame =
+                decode_frame(&mut input).map_err(|e| format!("ctrl: {e}"))?;
+            (frame.kind, frame.token, frame.payload.to_vec())
+        };
+        ctrl.consume(total);
+        ctrl.compact();
+        return Ok(Some(decoded));
+    }
+    if outcome.eof {
+        return Err("ctrl: driver closed during recovery".into());
+    }
+    Ok(None)
 }
 
 // ---------------------------------------------------------------------
@@ -1716,6 +2416,32 @@ impl<S: SocketLike, L: Liveness> DriverCtrl<S, L> {
             }
         }
     }
+
+    /// Bounded liveness sweep of this control channel: `true` when the
+    /// worker is positively gone (EOF or a hard read error), `false`
+    /// when the channel is merely quiet. Any bytes read while probing
+    /// are buffered — no control frame is ever lost to the sweep. Used
+    /// after a first failure to collect the whole concurrent dead set
+    /// into one batched recovery cycle.
+    pub fn peer_vanished(&mut self) -> bool {
+        // the stream already carries a 20ms read timeout (set in `new`)
+        let mut tmp = [0u8; 1 << 12];
+        match self.stream.read(&mut tmp) {
+            Ok(0) => true,
+            Ok(n) => {
+                self.rbuf.extend_from_slice(&tmp[..n]);
+                false
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted =>
+            {
+                false
+            }
+            Err(_) => true,
+        }
+    }
 }
 
 /// Receive control frames from `c` until one matches `(want, token)`,
@@ -1784,10 +2510,21 @@ pub(crate) fn collect_reports<S: SocketLike, L: Liveness>(
         let sent = get_u64(&mut input).map_err(err)?;
         let delivered = get_u64(&mut input).map_err(err)?;
         let failed_peer = get_u64(&mut input).map_err(err)?;
+        // optional fourth word (heartbeat staleness in ms) — absent in
+        // pre-heartbeat REPORT frames
+        let stale_ms = get_u64(&mut input).unwrap_or(0);
         if failed_peer != u64::MAX {
+            let how = if stale_ms > 0 {
+                format!(
+                    "heartbeat-stale for {stale_ms}ms (dead rank, dead \
+                     link, or partition)"
+                )
+            } else {
+                "failed (peer dead or link reset)".to_string()
+            };
             let msg = format!(
                 "{desc}: reports its mesh channel to rank {failed_peer} \
-                 as failed (peer dead or link reset)"
+                 as {how}"
             );
             // attribute to the named peer when it is a valid rank,
             // otherwise to the (corrupt) reporter itself
@@ -2026,6 +2763,72 @@ where
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Fuzz probe: drive arbitrary bytes through the real mesh receive path
+// ---------------------------------------------------------------------
+
+/// Feed `bytes` through a real mesh receive path (the same
+/// [`Conn`]/[`PeerConn`] framing and validation the worker loop runs)
+/// and report the verdict: `Ok(n)` — the stream parsed cleanly and
+/// delivered `n` messages; `Err` — the stream was rejected (bad magic,
+/// CRC mismatch, token/generation violation, or truncation at EOF).
+///
+/// The writer end is written to, flushed, and **dropped before the read
+/// loop starts**, so a mutation that makes the reader wait for bytes
+/// that never come resolves promptly via EOF instead of hanging — the
+/// property the frame-header fuzz suite asserts. A reader that still
+/// produces no verdict within 5s returns a distinct
+/// `"no verdict within"` error so tests can tell a hang from a
+/// rejection.
+///
+/// `my_gen` is the receiver's recovery generation and `start_recv_seq`
+/// re-bases the channel token (for exercising the wraparound boundary).
+pub fn probe_frame_rejection<S: SocketLike>(
+    writer: S,
+    reader: S,
+    bytes: &[u8],
+    my_gen: u64,
+    start_recv_seq: u64,
+) -> Result<u64, String> {
+    {
+        let mut w = writer;
+        w.set_nonblocking_mode(false)
+            .map_err(|e| format!("probe: set_blocking: {e}"))?;
+        w.write_all(bytes)
+            .map_err(|e| format!("probe: write: {e}"))?;
+        let _ = w.flush();
+        // drop: the reader's wait for missing bytes ends at EOF
+    }
+    let mut peer = PeerConn::new(Conn::new(reader)?, 0);
+    peer.recv_seq = start_recv_seq;
+    let gen16 = (my_gen & 0xFFFF) as u16;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut delivered = 0u64;
+    loop {
+        let outcome = peer.conn.fill(&peer.label)?;
+        let mut out: Vec<(Vec<(u64, u64)>, u64)> = Vec::new();
+        drain_peer_frames::<S, (u64, u64)>(&mut peer, gen16, 1, &mut out)?;
+        for (msgs, _) in out {
+            delivered += msgs.len() as u64;
+        }
+        if outcome.eof {
+            let trailing = peer.conn.pending_read_bytes();
+            if trailing > 0 {
+                return Err(format!(
+                    "{}: peer closed mid-frame ({trailing} trailing \
+                     bytes)",
+                    peer.label
+                ));
+            }
+            return Ok(delivered);
+        }
+        if Instant::now() > deadline {
+            return Err("probe: no verdict within 5s (reader hung)".into());
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
 #[cfg(all(test, unix))]
 mod tests {
     use super::*;
@@ -2070,6 +2873,7 @@ mod tests {
                 scratch: Vec::new(),
                 io_error: None,
                 gen: 0,
+                epoch: 1,
                 resilient: false,
             };
         let mut got = 0usize;
@@ -2134,6 +2938,7 @@ mod tests {
                     scratch: Vec::new(),
                     io_error: None,
                     gen: 1,
+                    epoch: 1,
                     resilient,
                 };
             std::thread::sleep(Duration::from_millis(10));
@@ -2247,6 +3052,8 @@ mod tests {
             epoch: 5,
             gen: 2,
             resume_barrier: 3,
+            hb_interval_ms: 40,
+            hb_timeout_ms: 4000,
             resume: ResumeSrc::Inline(vec![1, 2, 3, 4]),
         };
         let payload =
@@ -2259,6 +3066,8 @@ mod tests {
         assert_eq!(head.spec.epoch, 5);
         assert_eq!(head.spec.gen, 2);
         assert_eq!(head.spec.resume_barrier, 3);
+        assert_eq!(head.spec.hb_interval_ms, 40);
+        assert_eq!(head.spec.hb_timeout_ms, 4000);
         match &head.spec.resume {
             ResumeSrc::Inline(b) => assert_eq!(b, &vec![1, 2, 3, 4]),
             other => panic!("wrong resume source {other:?}"),

@@ -22,15 +22,20 @@
 //!
 //! With a checkpointing [`FaultPolicy`], [`TcpFabric::run_epoch_full`]
 //! runs the epoch resiliently (see `comm` module docs). When a rank
-//! dies the driver pauses the survivors, accepts a replacement
-//! `degreesketch worker --connect … --rank R --resume <ckpt-dir>` JOIN
-//! on the registrar, re-meshes it incrementally (the replacement dials
-//! every survivor), re-SEEDs only the replacement with a resume spec
-//! naming the exact barrier to restore, broadcasts RESTORE, and the
-//! epoch continues from the checkpoint frontier — DEG/ANF sketches and
-//! triangle heavy hitters come out bit-identical to an undisturbed run
-//! (test-enforced). Workers write their barrier records under
-//! [`WorkerOptions::ckpt_dir`].
+//! dies the driver sweeps every control channel for *other* concurrent
+//! deaths, pauses the survivors with the full dead **set**, admits
+//! replacement `degreesketch worker --connect … --rank R --resume
+//! <ckpt-dir>` JOINs on the registrar in whatever order they dial in,
+//! re-meshes each incrementally (a replacement dials every survivor
+//! and every earlier replacement, and accepts the later ones), re-SEEDs
+//! only the replacements with resume specs naming the exact barrier to
+//! restore, broadcasts RESTORE, and the epoch continues from the
+//! checkpoint frontier — DEG/ANF sketches and triangle heavy hitters
+//! come out bit-identical to an undisturbed run (test-enforced). A
+//! death landing *during* the recovery folds into the in-flight batch:
+//! the cycle restarts at the next generation with the enlarged set
+//! instead of aborting the fabric. Workers write their barrier records
+//! under [`WorkerOptions::ckpt_dir`].
 //!
 //! [`Backend::Tcp`](super::Backend::Tcp) routes through a process-global
 //! fabric ([`configure_driver`] → first epoch performs the rendezvous →
@@ -44,17 +49,22 @@
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::codec::put_u64;
 use super::outbox::FlushPolicy;
 use super::rendezvous::{self, TcpCtrl};
 use super::socket::{
-    self, kind, CkptPlan, Conn, EpochSpec, FabricHooks, PeerConn, ResumeSrc,
-    SeedHead,
+    self, kind, ChaosTransport, CkptPlan, Conn, EpochSpec, FabricHooks,
+    PeerConn, ResumeSrc, SeedHead,
 };
 use super::{Backend, Chaos, CommStats, FabricActor, FaultPolicy, WireMsg};
 use crate::snapshot::checkpoint::{checkpoint_file_name, write_record_bytes};
+
+/// Every tcp worker stream is wrapped in the chaos interposer — a
+/// transparent pass-through unless the launcher armed
+/// [`WorkerOptions::chaos`] with active [`super::NetChaos`] rates.
+type TcpChaos = ChaosTransport<TcpStream>;
 
 /// Default per-step rendezvous / control deadline.
 pub const DEFAULT_DEADLINE: Duration = Duration::from_secs(60);
@@ -127,6 +137,20 @@ pub struct TcpFabric {
     /// straggles across an epoch boundary on a persistent mesh
     /// connection can never alias a live generation.
     incarnation: u64,
+}
+
+/// Result of one batched recovery cycle: converged, or torn down by
+/// deaths that must fold into the in-flight batch.
+enum CycleOutcome {
+    Done,
+    Fold {
+        /// Ranks found dead during the cycle (may be empty when the
+        /// failing party was a replacement already in the dead set).
+        newly_dead: Vec<usize>,
+        /// Replacements admitted before the cycle tore down — told to
+        /// exit so their launchers respawn them at the next generation.
+        admitted: Vec<usize>,
+    },
 }
 
 impl TcpFabric {
@@ -206,6 +230,8 @@ impl TcpFabric {
             epoch: self.epoch,
             gen: self.incarnation,
             resume_barrier: 0,
+            hb_interval_ms: fault.hb_interval_ms,
+            hb_timeout_ms: fault.hb_timeout_ms,
             resume: ResumeSrc::None,
         };
         for (rank, c) in self.ctrls.iter_mut().enumerate() {
@@ -243,29 +269,40 @@ impl TcpFabric {
                             e.rank, e.msg
                         ));
                     }
+                    // Sweep every other control channel: concurrent
+                    // deaths are batched into one recovery cycle
+                    // instead of burning a rollback per corpse.
+                    let mut dead = vec![e.rank];
+                    for (r, c) in self.ctrls.iter_mut().enumerate() {
+                        if r != e.rank && c.peer_vanished() {
+                            dead.push(r);
+                        }
+                    }
+                    dead.sort_unstable();
                     gen += 1;
-                    self.incarnation = gen;
                     restores += 1;
                     eprintln!(
                         "tcp fabric: worker rank {} died mid-epoch ({}); \
-                         pausing survivors and awaiting a respawned \
-                         worker --resume (generation {gen}, restoring \
-                         barrier {checkpoints})",
+                         dead set {dead:?} — pausing survivors and \
+                         awaiting respawned worker(s) --resume \
+                         (generation {gen}, restoring barrier \
+                         {checkpoints})",
                         e.rank, e.msg
                     );
-                    self.recover(
-                        e.rank,
-                        gen,
+                    self.recover_set(
+                        &mut dead,
+                        &mut gen,
                         checkpoints,
-                        &actors[e.rank],
+                        actors,
                         policy,
                         seeds,
                         &fault,
                     )?;
+                    self.incarnation = gen;
                     eprintln!(
-                        "tcp fabric: rank {} resumed from checkpoint \
-                         barrier {checkpoints}; epoch continues",
-                        e.rank
+                        "tcp fabric: rank(s) {dead:?} resumed from \
+                         checkpoint barrier {checkpoints}; epoch \
+                         continues at generation {gen}"
                     );
                 }
             }
@@ -280,15 +317,19 @@ impl TcpFabric {
         Ok(stats)
     }
 
-    /// Recovery after `dead` died: pause the survivors, admit the
-    /// respawned worker, re-mesh it incrementally, re-seed it with a
-    /// resume spec for `barrier`, then order the fabric-wide rollback.
-    fn recover<A>(
+    /// Batched recovery after the ranks in `dead` died: pause the
+    /// survivors with the full set, admit respawned replacements in
+    /// JOIN-arrival order, re-mesh each incrementally, re-seed them
+    /// with resume specs for `barrier`, then order the fabric-wide
+    /// rollback. A death landing *during* the cycle folds into the
+    /// batch: `dead` grows, `gen` bumps, and the cycle restarts —
+    /// callers see the final set and generation through the `&mut`s.
+    fn recover_set<A>(
         &mut self,
-        dead: usize,
-        gen: u64,
+        dead: &mut Vec<usize>,
+        gen: &mut u64,
         barrier: u64,
-        dead_actor: &A,
+        actors: &[A],
         policy: FlushPolicy,
         seeds: &[usize],
         fault: &FaultPolicy,
@@ -298,76 +339,221 @@ impl TcpFabric {
         A::Msg: WireMsg,
     {
         let ranks = self.ctrls.len();
-        // 1. PAUSE every survivor; collect their acks (drained writes).
-        let mut pp = Vec::with_capacity(24);
-        put_u64(&mut pp, dead as u64);
-        put_u64(&mut pp, gen);
-        put_u64(&mut pp, barrier);
-        for (r, c) in self.ctrls.iter_mut().enumerate() {
-            if r == dead {
-                continue;
+        // Fold ceiling: a fabric losing ranks faster than it can pause
+        // the survivors must eventually abort, not loop.
+        let max_cycles = fault.max_respawns.max(1) as usize + 2;
+        for _ in 0..max_cycles {
+            if dead.len() >= ranks {
+                return Err(format!(
+                    "recovery impossible: all {ranks} ranks are dead"
+                ));
             }
-            c.send_payload(kind::PAUSE, gen, &pp)
-                .map_err(|e| format!("pausing rank {r}: {e}"))?;
-        }
-        for (r, c) in self.ctrls.iter_mut().enumerate() {
-            if r == dead {
-                continue;
-            }
-            socket::recv_matching(c, kind::PAUSE_ACK, gen)
-                .map_err(|e| format!("pausing rank {r}: {e}"))?;
-        }
-        // 2. Admit the replacement's JOIN on the retained registrar.
-        let new_ctrl = rendezvous::accept_respawn_join(
-            &self.listener,
-            dead,
-            RESPAWN_JOIN_DEADLINE,
-        )?;
-        self.ctrls[dead] = new_ctrl;
-        // 3. Hand it the mesh map; it dials every parked survivor.
-        let map_payload = rendezvous::encode_map(&self.final_map);
-        self.ctrls[dead]
-            .send_payload(kind::MESH, gen, &map_payload)
-            .map_err(|e| format!("re-meshing rank {dead}: {e}"))?;
-        for (r, c) in self.ctrls.iter_mut().enumerate() {
-            if r == dead {
-                continue;
-            }
-            socket::recv_matching(c, kind::REMESHED, gen)
-                .map_err(|e| format!("re-meshing rank {r}: {e}"))?;
-        }
-        let meshed =
-            socket::recv_matching(&mut self.ctrls[dead], kind::MESHED, gen)
-                .map_err(|e| format!("re-meshing rank {dead}: {e}"))?;
-        {
-            // fold the replacement's fresh mesh listener into the map so
-            // a later recovery can dial it too
-            let mut input = meshed.as_slice();
-            if let Ok(addr) = rendezvous::get_str(&mut input) {
-                if !addr.is_empty() {
-                    self.final_map[dead] = addr;
+            match self.run_recovery_cycle(
+                dead, *gen, barrier, actors, policy, seeds, fault,
+            )? {
+                CycleOutcome::Done => return Ok(()),
+                CycleOutcome::Fold { newly_dead, admitted } => {
+                    eprintln!(
+                        "tcp fabric: rank(s) {newly_dead:?} died \
+                         mid-recovery; folding into the in-flight batch \
+                         (generation {} supersedes {})",
+                        *gen + 1,
+                        *gen
+                    );
+                    // Replacements admitted in the torn-down cycle are
+                    // told to exit (best-effort) so their launchers
+                    // respawn them; they re-join at the new generation.
+                    for &r in &admitted {
+                        let _ = self.ctrls[r].send(kind::SHUTDOWN, 0);
+                    }
+                    dead.extend(newly_dead);
+                    dead.sort_unstable();
+                    dead.dedup();
+                    *gen += 1;
                 }
             }
         }
-        // 4. Re-seed only the replacement, resuming the named barrier
-        //    from its local checkpoint file (barrier 0 = no barrier was
-        //    completed yet: clean replay from the top of the epoch).
+        Err(format!(
+            "recovery folded {max_cycles} times without converging \
+             (dead set {dead:?})"
+        ))
+    }
+
+    /// One PAUSE-set → admit/re-mesh-set → re-seed → RESTORE cycle.
+    /// Failures before the rollback phase report a [`CycleOutcome::Fold`]
+    /// naming any additional corpses; failures during the rollback
+    /// phase itself are hard errors (the fold window closes once
+    /// replacements hold resume state).
+    #[allow(clippy::too_many_arguments)]
+    fn run_recovery_cycle<A>(
+        &mut self,
+        dead: &[usize],
+        gen: u64,
+        barrier: u64,
+        actors: &[A],
+        policy: FlushPolicy,
+        seeds: &[usize],
+        fault: &FaultPolicy,
+    ) -> Result<CycleOutcome, String>
+    where
+        A: FabricActor,
+        A::Msg: WireMsg,
+    {
+        // 1. PAUSE every survivor with the full dead set; collect acks
+        //    (drained writes). A survivor dying here folds in.
+        let pp = socket::encode_pause_payload(dead, gen, barrier);
+        let mut fold: Vec<usize> = Vec::new();
+        for (r, c) in self.ctrls.iter_mut().enumerate() {
+            if dead.contains(&r) {
+                continue;
+            }
+            if c.send_payload(kind::PAUSE, gen, &pp).is_err() {
+                fold.push(r);
+            }
+        }
+        if fold.is_empty() {
+            for (r, c) in self.ctrls.iter_mut().enumerate() {
+                if dead.contains(&r) {
+                    continue;
+                }
+                if socket::recv_matching(c, kind::PAUSE_ACK, gen).is_err() {
+                    fold.push(r);
+                }
+            }
+        }
+        if !fold.is_empty() {
+            return Ok(CycleOutcome::Fold {
+                newly_dead: fold,
+                admitted: Vec::new(),
+            });
+        }
+
+        // 2. Admit replacements in JOIN-arrival order. Each gets the
+        //    current mesh map plus the still-pending dead ranks: it
+        //    dials survivors + earlier replacements and accepts the
+        //    later ones. Short poll slices keep the driver watching the
+        //    survivors for deaths that must fold into this batch.
+        let mut remaining: Vec<usize> = dead.to_vec();
+        let mut admitted: Vec<usize> = Vec::new();
+        let start = Instant::now();
+        while !remaining.is_empty() {
+            if start.elapsed() > RESPAWN_JOIN_DEADLINE {
+                return Err(format!(
+                    "respawn: no replacement for rank(s) {remaining:?} \
+                     joined within {RESPAWN_JOIN_DEADLINE:?}"
+                ));
+            }
+            let polled = rendezvous::poll_respawn_join(
+                &self.listener,
+                &remaining,
+                Duration::from_millis(100),
+            )?;
+            let Some((r, ctrl)) = polled else {
+                // nobody dialed this slice — sweep the live ranks for a
+                // death that must fold into the batch
+                let mut vanished = Vec::new();
+                for (s, c) in self.ctrls.iter_mut().enumerate() {
+                    let live =
+                        !dead.contains(&s) || admitted.contains(&s);
+                    if live && c.peer_vanished() {
+                        vanished.push(s);
+                    }
+                }
+                if !vanished.is_empty() {
+                    return Ok(CycleOutcome::Fold {
+                        newly_dead: vanished,
+                        admitted,
+                    });
+                }
+                continue;
+            };
+            self.ctrls[r] = ctrl;
+            remaining.retain(|&x| x != r);
+            // hand it the mesh map + the ranks still pending admission
+            let mut payload = rendezvous::encode_map(&self.final_map);
+            put_u64(&mut payload, remaining.len() as u64);
+            for &p in &remaining {
+                put_u64(&mut payload, p as u64);
+            }
+            if self.ctrls[r]
+                .send_payload(kind::MESH, gen, &payload)
+                .is_err()
+            {
+                return Ok(CycleOutcome::Fold {
+                    newly_dead: Vec::new(),
+                    admitted,
+                });
+            }
+            // its MESHED reports the fresh mesh listener it bound (it
+            // has dialed every survivor + earlier replacement by then)
+            match socket::recv_matching(&mut self.ctrls[r], kind::MESHED, gen)
+            {
+                Ok(meshed) => {
+                    let mut input = meshed.as_slice();
+                    if let Ok(addr) = rendezvous::get_str(&mut input) {
+                        if !addr.is_empty() {
+                            self.final_map[r] = addr;
+                        }
+                    }
+                    admitted.push(r);
+                }
+                Err(_) => {
+                    // the replacement (or a survivor it dials) tore the
+                    // re-mesh — sweep for corpses and retry the cycle
+                    let mut vanished = Vec::new();
+                    for (s, c) in self.ctrls.iter_mut().enumerate() {
+                        if !dead.contains(&s) && c.peer_vanished() {
+                            vanished.push(s);
+                        }
+                    }
+                    return Ok(CycleOutcome::Fold {
+                        newly_dead: vanished,
+                        admitted,
+                    });
+                }
+            }
+        }
+
+        // 3. Every survivor confirms its side of the re-mesh.
+        for (r, c) in self.ctrls.iter_mut().enumerate() {
+            if dead.contains(&r) {
+                continue;
+            }
+            if socket::recv_matching(c, kind::REMESHED, gen).is_err() {
+                fold.push(r);
+            }
+        }
+        if !fold.is_empty() {
+            return Ok(CycleOutcome::Fold {
+                newly_dead: fold,
+                admitted,
+            });
+        }
+
+        // 4. Re-seed only the replacements, each resuming the named
+        //    barrier from its local checkpoint file (barrier 0 = no
+        //    barrier completed yet: clean replay from the epoch top).
         let spec = EpochSpec {
             resilient: true,
             chunk: fault.chunk.max(1),
             epoch: self.epoch,
             gen,
             resume_barrier: barrier,
+            hb_interval_ms: fault.hb_interval_ms,
+            hb_timeout_ms: fault.hb_timeout_ms,
             resume: if barrier > 0 {
                 ResumeSrc::File
             } else {
                 ResumeSrc::None
             },
         };
-        let payload = socket::encode_seed(dead_actor, policy, seeds, &spec);
-        self.ctrls[dead]
-            .send_payload(kind::SEED, 0, &payload)
-            .map_err(|e| format!("re-seeding rank {dead}: {e}"))?;
+        for &r in dead {
+            let payload =
+                socket::encode_seed(&actors[r], policy, seeds, &spec);
+            self.ctrls[r]
+                .send_payload(kind::SEED, 0, &payload)
+                .map_err(|e| format!("re-seeding rank {r}: {e}"))?;
+        }
         // 5. Fabric-wide rollback to the named barrier.
         for (r, c) in self.ctrls.iter_mut().enumerate() {
             c.send(kind::RESTORE, gen)
@@ -377,7 +563,7 @@ impl TcpFabric {
             socket::recv_matching(c, kind::RESTORED, gen)
                 .map_err(|e| format!("restoring rank {r}: {e}"))?;
         }
-        Ok(())
+        Ok(CycleOutcome::Done)
     }
 
     /// Tell every worker the fabric is done; workers exit cleanly.
@@ -540,7 +726,7 @@ impl TcpHooks<'_> {
     }
 }
 
-impl FabricHooks<TcpStream> for TcpHooks<'_> {
+impl FabricHooks<TcpChaos> for TcpHooks<'_> {
     fn store_checkpoint(
         &mut self,
         epoch: u64,
@@ -590,18 +776,21 @@ impl FabricHooks<TcpStream> for TcpHooks<'_> {
         })
     }
 
-    fn accept_replacement(
+    fn try_accept_replacement(
         &mut self,
-        failed: usize,
+        remaining: &[usize],
         gen: u64,
-        deadline: Duration,
-    ) -> Result<Conn<TcpStream>, String> {
+        slice: Duration,
+    ) -> Result<Option<(usize, Conn<TcpChaos>)>, String> {
         let listener = self.listener.ok_or_else(|| {
             "this worker has no mesh listener; it cannot accept a \
              replacement's re-mesh dial"
                 .to_string()
         })?;
-        rendezvous::accept_hello(listener, failed, gen, deadline)
+        // replacement channels start clean: injecting faults onto a
+        // recovery generation would fault the recovery of the faults
+        Ok(rendezvous::accept_hello_any(listener, remaining, gen, slice)?
+            .map(|(r, conn)| (r, conn.map_stream(ChaosTransport::clean))))
     }
 }
 
@@ -610,8 +799,8 @@ type Handler = Box<
             usize,
             &SeedHead,
             &[u8],
-            &mut Conn<TcpStream>,
-            &mut [Option<PeerConn<TcpStream>>],
+            &mut Conn<TcpChaos>,
+            &mut [Option<PeerConn<TcpChaos>>],
             &mut TcpHooks<'_>,
             Option<Chaos>,
         ) -> Result<(), String>
@@ -648,11 +837,11 @@ impl WorkerDispatch {
             |rank: usize,
              head: &SeedHead,
              seed: &[u8],
-             ctrl: &mut Conn<TcpStream>,
-             peers: &mut [Option<PeerConn<TcpStream>>],
+             ctrl: &mut Conn<TcpChaos>,
+             peers: &mut [Option<PeerConn<TcpChaos>>],
              hooks: &mut TcpHooks<'_>,
              chaos: Option<Chaos>| {
-                socket::worker_epoch::<A, TcpStream>(
+                socket::worker_epoch::<A, TcpChaos>(
                     rank, head, seed, ctrl, peers, hooks, chaos,
                 )
             },
@@ -699,8 +888,25 @@ pub fn run_worker_opts(
     opts: WorkerOptions,
 ) -> Result<(), String> {
     let joined = rendezvous::worker_join(connect, rank, opts.deadline)?;
-    let mut ctrl = joined.ctrl;
-    let mut peers = joined.peers;
+    // Wrap every stream in the chaos interposer: the control channel
+    // always clean (faulting it would fault the recovery protocol
+    // itself), the mesh channels under the armed fault policy (a
+    // transparent pass-through when no net chaos is configured).
+    let net = opts.chaos.map(|c| c.net).filter(super::NetChaos::active);
+    let mut ctrl = joined.ctrl.map_stream(ChaosTransport::clean);
+    let mut peers: Vec<Option<PeerConn<TcpChaos>>> = joined
+        .peers
+        .into_iter()
+        .enumerate()
+        .map(|(j, p)| {
+            p.map(|pc| {
+                pc.map_stream(|s| match net {
+                    Some(n) => ChaosTransport::with_faults(s, n, rank, j),
+                    None => ChaosTransport::clean(s),
+                })
+            })
+        })
+        .collect();
     let listener = joined.listener;
     let mut resume = opts.resume;
     loop {

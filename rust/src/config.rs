@@ -188,7 +188,11 @@ impl Config {
     /// `comm.checkpoint_chunk` (edges per seed chunk),
     /// `comm.liveness_rearms` (cap on control-deadline re-arms before a
     /// silent worker is declared dead) and `comm.max_respawns` (recovery
-    /// generations per epoch).
+    /// generations per epoch). Liveness probing is driven by
+    /// `comm.hb_interval_ms` (send a heartbeat on a mesh channel after
+    /// this much idle time; 0 = off) and `comm.hb_timeout_ms` (declare a
+    /// peer link stale after this much silence; 0 = off, and must exceed
+    /// the interval when both are set).
     pub fn fault_policy(&self) -> Result<FaultPolicy> {
         let d = FaultPolicy::default();
         let every = self
@@ -199,6 +203,10 @@ impl Config {
             self.get_int("comm.liveness_rearms", d.rearm_cap as i64);
         let respawns =
             self.get_int("comm.max_respawns", d.max_respawns as i64);
+        let hb_interval =
+            self.get_int("comm.hb_interval_ms", d.hb_interval_ms as i64);
+        let hb_timeout =
+            self.get_int("comm.hb_timeout_ms", d.hb_timeout_ms as i64);
         if every < 0 || secs < 0 {
             bail!(
                 "comm.checkpoint_interval and comm.checkpoint_secs must \
@@ -220,14 +228,45 @@ impl Config {
                 u32::MAX
             );
         }
+        if hb_interval < 0 || hb_timeout < 0 {
+            bail!("comm.hb_interval_ms and comm.hb_timeout_ms must be >= 0");
+        }
+        if hb_interval > 0 && hb_timeout > 0 && hb_timeout <= hb_interval {
+            bail!(
+                "comm.hb_timeout_ms ({hb_timeout}) must exceed \
+                 comm.hb_interval_ms ({hb_interval})"
+            );
+        }
         Ok(FaultPolicy {
             ckpt_every_chunks: every as u64,
             ckpt_secs: secs as u64,
             chunk: chunk as u64,
             rearm_cap: rearms as u32,
             max_respawns: respawns as u32,
+            hb_interval_ms: hb_interval as u64,
+            hb_timeout_ms: hb_timeout as u64,
             chaos: None,
         })
+    }
+
+    /// Dial-retry backoff knobs: `comm.dial_backoff_base_ms` (first
+    /// retry delay; doubles per attempt) and `comm.dial_backoff_cap_ms`
+    /// (ceiling on the exponential). Validates and installs them into
+    /// the rendezvous dialer; returns the `(base, cap)` pair applied.
+    pub fn apply_dial_backoff(&self) -> Result<(u64, u64)> {
+        let base = self.get_int("comm.dial_backoff_base_ms", 25);
+        let cap = self.get_int("comm.dial_backoff_cap_ms", 2000);
+        if base <= 0 {
+            bail!("comm.dial_backoff_base_ms must be positive, got {base}");
+        }
+        if cap < base {
+            bail!(
+                "comm.dial_backoff_cap_ms ({cap}) must be >= \
+                 comm.dial_backoff_base_ms ({base})"
+            );
+        }
+        crate::comm::rendezvous::set_dial_backoff(base as u64, cap as u64);
+        Ok((base as u64, cap as u64))
     }
 }
 
@@ -318,6 +357,43 @@ adaptive_flush = false
         let mut c3 = Config::parse("").unwrap();
         c3.set_override("comm.liveness_rearms=0").unwrap();
         assert!(c3.fault_policy().is_err());
+    }
+
+    #[test]
+    fn heartbeat_keys_parse_and_validate() {
+        let mut c = Config::parse("").unwrap();
+        c.set_override("comm.hb_interval_ms=50").unwrap();
+        c.set_override("comm.hb_timeout_ms=400").unwrap();
+        let f = c.fault_policy().unwrap();
+        assert_eq!(f.hb_interval_ms, 50);
+        assert_eq!(f.hb_timeout_ms, 400);
+
+        // Timeout must exceed interval when both are enabled.
+        c.set_override("comm.hb_timeout_ms=50").unwrap();
+        assert!(c.fault_policy().is_err());
+        // ... but either alone is fine (0 disables the other side).
+        c.set_override("comm.hb_timeout_ms=0").unwrap();
+        assert_eq!(c.fault_policy().unwrap().hb_timeout_ms, 0);
+        c.set_override("comm.hb_interval_ms=-1").unwrap();
+        assert!(c.fault_policy().is_err());
+    }
+
+    #[test]
+    fn dial_backoff_keys_validate() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.apply_dial_backoff().unwrap(), (25, 2000));
+
+        let mut c2 = Config::parse("").unwrap();
+        c2.set_override("comm.dial_backoff_base_ms=10").unwrap();
+        c2.set_override("comm.dial_backoff_cap_ms=100").unwrap();
+        assert_eq!(c2.apply_dial_backoff().unwrap(), (10, 100));
+
+        c2.set_override("comm.dial_backoff_cap_ms=5").unwrap();
+        assert!(c2.apply_dial_backoff().is_err());
+        c2.set_override("comm.dial_backoff_base_ms=0").unwrap();
+        assert!(c2.apply_dial_backoff().is_err());
+        // Restore defaults so other tests see the stock dialer pacing.
+        Config::parse("").unwrap().apply_dial_backoff().unwrap();
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! UNION <x> [<y> ...]  → <estimate> | NONE
 //! STATS                → vertices=<n> ranks=<p> p=<p> mem=<bytes>
 //!                        dense=<n> mode=<heap|mmap> resident=<bytes>
+//!                        evicted=<n>
 //!                        comm=<sequential|threaded|process|tcp|none>
 //!                        [ckpts=<n> restores=<n>]
 //!                        [rank<i>=<msgs>/<bytes>/<flushes> ...]
@@ -33,12 +34,20 @@
 //! engine is shared read-only. Finished connection threads are reaped in
 //! the accept loop (not hoarded until shutdown), so long-lived servers
 //! hold O(live connections) handles.
+//!
+//! Connections are additionally bounded by [`ConnLimits`]: reads carry a
+//! socket-level timeout, and a client silent for longer than the idle cap
+//! is evicted (answered `ERR idle timeout, closing` and disconnected)
+//! rather than pinning a thread forever — the defense against half-open
+//! peers that vanished without a FIN. Evictions are counted and reported
+//! as `evicted=<n>` in `STATS`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -58,25 +67,55 @@ fn reap_finished(workers: &mut Vec<JoinHandle<()>>) {
     }
 }
 
+/// Per-connection read bounds: `read_timeout` is the socket-level poll
+/// granularity; a client silent for longer than `idle_cap` is evicted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConnLimits {
+    pub read_timeout: Duration,
+    pub idle_cap: Duration,
+}
+
+impl Default for ConnLimits {
+    fn default() -> Self {
+        Self {
+            read_timeout: Duration::from_millis(250),
+            idle_cap: Duration::from_secs(300),
+        }
+    }
+}
+
 /// A running server handle (listener thread spawns per-connection threads).
 pub struct QueryServer {
     addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
     /// Connection threads currently tracked by the accept loop (post-reap).
     live: Arc<AtomicUsize>,
+    /// Connections evicted for exceeding the idle cap (reported in STATS).
+    evicted: Arc<AtomicU64>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl QueryServer {
     /// Bind and start serving. `addr` like `"127.0.0.1:0"` (0 = ephemeral).
     pub fn start(engine: Arc<QueryEngine>, addr: &str) -> Result<Self> {
+        Self::start_with_limits(engine, addr, ConnLimits::default())
+    }
+
+    /// [`QueryServer::start`] with explicit per-connection read bounds.
+    pub fn start_with_limits(
+        engine: Arc<QueryEngine>,
+        addr: &str,
+        limits: ConnLimits,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let live = Arc::new(AtomicUsize::new(0));
+        let evicted = Arc::new(AtomicU64::new(0));
         let stop = Arc::clone(&shutdown);
         let live_in = Arc::clone(&live);
+        let evicted_in = Arc::clone(&evicted);
         let handle = std::thread::spawn(move || {
             let mut workers: Vec<JoinHandle<()>> = Vec::new();
             loop {
@@ -86,8 +125,11 @@ impl QueryServer {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let engine = Arc::clone(&engine);
+                        let evictions = Arc::clone(&evicted_in);
                         workers.push(std::thread::spawn(move || {
-                            let _ = serve_connection(stream, &engine);
+                            let _ = serve_connection(
+                                stream, &engine, limits, &evictions,
+                            );
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -110,6 +152,7 @@ impl QueryServer {
             addr: local,
             shutdown,
             live,
+            evicted,
             handle: Some(handle),
         })
     }
@@ -122,6 +165,11 @@ impl QueryServer {
     /// bounded by the number of live connections thanks to in-loop reaping.
     pub fn live_workers(&self) -> usize {
         self.live.load(Ordering::Relaxed)
+    }
+
+    /// Connections evicted so far for exceeding the idle cap.
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
     }
 
     /// Stop accepting and join the listener thread.
@@ -144,22 +192,61 @@ impl Drop for QueryServer {
     }
 }
 
-fn serve_connection(stream: TcpStream, engine: &QueryEngine) -> Result<()> {
+fn serve_connection(
+    stream: TcpStream,
+    engine: &QueryEngine,
+    limits: ConnLimits,
+    evictions: &AtomicU64,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(limits.read_timeout))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        let response = match respond(&line, engine) {
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        let last_activity = Instant::now();
+        // Deadline-bounded line read: a socket-level timeout makes each
+        // read_until attempt return WouldBlock/TimedOut, and silence past
+        // the idle cap evicts the client. A half-written line counts as
+        // silence too — partial bytes never reset the idle clock.
+        let eof = loop {
+            match reader.read_until(b'\n', &mut buf) {
+                Ok(0) => break true,
+                Ok(_) if buf.ends_with(b"\n") => break false,
+                Ok(_) => {} // partial line: keep reading toward the cap
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if last_activity.elapsed() >= limits.idle_cap {
+                        evictions.fetch_add(1, Ordering::Relaxed);
+                        let _ = writeln!(writer, "ERR idle timeout, closing");
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        if buf.is_empty() {
+            return Ok(()); // clean EOF between lines
+        }
+        let line = String::from_utf8_lossy(&buf);
+        let response = match respond(line.trim_end(), engine, evictions) {
             Response::Line(s) => s,
             Response::Bye => {
                 writeln!(writer, "BYE")?;
-                break;
+                return Ok(());
             }
         };
         writeln!(writer, "{response}")?;
+        if eof {
+            return Ok(()); // final line arrived without a trailing newline
+        }
     }
-    Ok(())
 }
 
 enum Response {
@@ -167,7 +254,7 @@ enum Response {
     Bye,
 }
 
-fn respond(line: &str, engine: &QueryEngine) -> Response {
+fn respond(line: &str, engine: &QueryEngine, evictions: &AtomicU64) -> Response {
     let mut it = line.split_whitespace();
     let cmd = match it.next() {
         Some(c) => c.to_ascii_uppercase(),
@@ -225,14 +312,16 @@ fn respond(line: &str, engine: &QueryEngine) -> Response {
         },
         "STATS" => {
             let mut line = format!(
-                "vertices={} ranks={} p={} mem={} dense={} mode={} resident={}",
+                "vertices={} ranks={} p={} mem={} dense={} mode={} \
+                 resident={} evicted={}",
                 engine.num_vertices(),
                 engine.num_ranks(),
                 engine.config().p(),
                 engine.heap_bytes(),
                 engine.num_dense_sketches(),
                 engine.backing_mode(),
-                engine.resident_bytes()
+                engine.resident_bytes(),
+                evictions.load(Ordering::Relaxed)
             );
             match engine.accumulation_stats() {
                 Some(cs) => {
@@ -380,6 +469,39 @@ mod tests {
             );
             std::thread::sleep(std::time::Duration::from_millis(20));
         }
+        server.stop();
+    }
+
+    #[test]
+    fn idle_connections_are_evicted_and_counted() {
+        let limits = ConnLimits {
+            read_timeout: Duration::from_millis(10),
+            idle_cap: Duration::from_millis(80),
+        };
+        let server =
+            QueryServer::start_with_limits(test_engine(), "127.0.0.1:0", limits)
+                .unwrap();
+        let addr = server.addr();
+        // A silent client — and a half-open one that wrote a partial line
+        // (no newline) — must both be evicted, not parked forever.
+        let silent = TcpStream::connect(addr).unwrap();
+        let half_open = TcpStream::connect(addr).unwrap();
+        {
+            let mut w = half_open.try_clone().unwrap();
+            write!(w, "DEG ").unwrap(); // never finishes the line
+        }
+        for stream in [silent, half_open] {
+            let mut r = BufReader::new(stream);
+            let mut resp = String::new();
+            r.read_line(&mut resp).unwrap();
+            assert!(resp.starts_with("ERR idle"), "{resp:?}");
+            resp.clear();
+            assert_eq!(r.read_line(&mut resp).unwrap(), 0, "not closed");
+        }
+        // A live client still works and sees the eviction counter in STATS.
+        let out = ask(addr, &["STATS", "QUIT"]);
+        assert!(out[0].contains("evicted=2"), "{:?}", out[0]);
+        assert_eq!(server.evicted(), 2);
         server.stop();
     }
 

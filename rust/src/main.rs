@@ -215,6 +215,14 @@ fn cmd_worker(args: &Args) -> Result<()> {
     if let Some(src) = args.get("resume") {
         opts.resume = Some(PathBuf::from(src));
     }
+    // Workers dial the driver (and, on re-mesh, each other); give them the
+    // same retry pacing knobs the driver side reads from config.
+    let backoff_base = args.get_u64("dial-backoff-base-ms", 25)?;
+    let backoff_cap = args.get_u64("dial-backoff-cap-ms", 2000)?;
+    if backoff_base == 0 || backoff_cap < backoff_base {
+        bail!("--dial-backoff-cap-ms must be >= --dial-backoff-base-ms >= 1");
+    }
+    degreesketch::comm::rendezvous::set_dial_backoff(backoff_base, backoff_cap);
     args.finish()?;
     eprintln!("worker rank {rank}: joining fabric via {connect}");
     degreesketch::comm::tcp::run_worker_opts(
@@ -253,9 +261,12 @@ fn flush_policy_of(args: &Args, config: &Config) -> Result<FlushPolicy> {
 
 /// Fault-tolerance policy: `comm.*` config keys overridden by
 /// `--checkpoint N` (checkpoint every N seed chunks — any nonzero value
-/// makes the socket-backend epoch resilient), `--checkpoint-secs M` and
-/// `--checkpoint-chunk E` (edges per seed chunk).
+/// makes the socket-backend epoch resilient), `--checkpoint-secs M`,
+/// `--checkpoint-chunk E` (edges per seed chunk), and the liveness
+/// probes `--hb-interval-ms` / `--hb-timeout-ms`. Also installs the
+/// `comm.dial_backoff_*` retry pacing into the rendezvous dialer.
 fn fault_policy_of(args: &Args, config: &Config) -> Result<FaultPolicy> {
+    config.apply_dial_backoff()?;
     let mut fault = config.fault_policy()?;
     if let Some(raw) = args.get("checkpoint") {
         fault.ckpt_every_chunks = raw
@@ -275,6 +286,22 @@ fn fault_policy_of(args: &Args, config: &Config) -> Result<FaultPolicy> {
             bail!("--checkpoint-chunk must be positive");
         }
         fault.chunk = chunk;
+    }
+    if let Some(ms) = args.get_u64_opt("hb-interval-ms")? {
+        fault.hb_interval_ms = ms;
+    }
+    if let Some(ms) = args.get_u64_opt("hb-timeout-ms")? {
+        fault.hb_timeout_ms = ms;
+    }
+    if fault.hb_interval_ms > 0
+        && fault.hb_timeout_ms > 0
+        && fault.hb_timeout_ms <= fault.hb_interval_ms
+    {
+        bail!(
+            "--hb-timeout-ms ({}) must exceed --hb-interval-ms ({})",
+            fault.hb_timeout_ms,
+            fault.hb_interval_ms
+        );
     }
     Ok(fault)
 }

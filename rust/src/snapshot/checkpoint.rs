@@ -271,6 +271,52 @@ pub fn checkpoint_file_name(epoch: u64, barrier: u64, rank: usize) -> String {
     format!("ckpt-e{epoch}-b{barrier}-r{rank}.dsc")
 }
 
+/// The highest barrier of `epoch` for which **every** rank in `ranks`
+/// has a decodable record under `dir`, or `None` if no barrier is fully
+/// covered. This is the restore target for a batched multi-rank
+/// recovery when the driver's in-memory barrier bookkeeping is gone
+/// (driver restart): individual ranks may have raced ahead and written
+/// barrier `b + 1` before dying, but only a barrier held by the whole
+/// set is safe to roll the fabric back to.
+pub fn latest_common_barrier(
+    dir: &Path,
+    epoch: u64,
+    ranks: &[usize],
+) -> Option<u64> {
+    let mut best: Option<u64> = None;
+    let entries = std::fs::read_dir(dir).ok()?;
+    let first = *ranks.first()?;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        // Scan barriers via the first rank's files, then demand the rest.
+        let Some(rest) = name.strip_prefix(&format!("ckpt-e{epoch}-b"))
+        else {
+            continue;
+        };
+        let Some(barrier) = rest
+            .strip_suffix(&format!("-r{first}.dsc"))
+            .and_then(|b| b.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        if best.is_some_and(|b| b >= barrier) {
+            continue;
+        }
+        let covered = ranks.iter().all(|&r| {
+            CheckpointRecord::read_file(
+                &dir.join(checkpoint_file_name(epoch, barrier, r)),
+            )
+            .map(|rec| rec.rank as usize == r && rec.barrier == barrier)
+            .unwrap_or(false)
+        });
+        if covered {
+            best = Some(barrier);
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,6 +385,44 @@ mod tests {
         assert_eq!(CheckpointRecord::read_file(&path).unwrap().pos, 99);
         std::fs::remove_file(&path).unwrap();
         assert!(CheckpointRecord::read_file(&path).is_err());
+    }
+
+    #[test]
+    fn latest_common_barrier_demands_full_rank_coverage() {
+        let dir = std::env::temp_dir().join("degreesketch_ckpt_common");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let write = |barrier: u64, rank: u32| {
+            let mut rec = sample();
+            rec.barrier = barrier;
+            rec.rank = rank;
+            rec.write_file(&dir.join(checkpoint_file_name(
+                rec.epoch,
+                barrier,
+                rank as usize,
+            )))
+            .unwrap();
+        };
+        assert_eq!(latest_common_barrier(&dir, 3, &[1, 2]), None);
+        // barrier 5 held by both ranks; barrier 6 only by rank 1 (it
+        // raced ahead before dying) — the safe rollback target is 5
+        write(5, 1);
+        write(5, 2);
+        write(6, 1);
+        assert_eq!(latest_common_barrier(&dir, 3, &[1, 2]), Some(5));
+        assert_eq!(latest_common_barrier(&dir, 3, &[1]), Some(6));
+        // a corrupt record disqualifies its barrier
+        write(7, 1);
+        write(7, 2);
+        let p7 = dir.join(checkpoint_file_name(3, 7, 2));
+        let mut bytes = std::fs::read(&p7).unwrap();
+        let n = bytes.len();
+        bytes[n / 2] ^= 0x10;
+        std::fs::write(&p7, bytes).unwrap();
+        assert_eq!(latest_common_barrier(&dir, 3, &[1, 2]), Some(5));
+        // wrong epoch: nothing to restore
+        assert_eq!(latest_common_barrier(&dir, 4, &[1, 2]), None);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -6,9 +6,14 @@
 //! rendezvous; exercised here with in-process worker threads over real
 //! localhost sockets) must produce identical DEG / ANF / triangle
 //! answers on a generated graph. Plus fabric failure modes: corrupt and
-//! truncated frames over a real TCP socket are rejected, and a
-//! rendezvous with an unreachable rank fails fast with a clear error
-//! instead of hanging.
+//! truncated frames over a real TCP socket are rejected, a rendezvous
+//! with an unreachable rank fails fast with a clear error instead of
+//! hanging, every single-bit frame-header mutation is rejected by the
+//! real receive path on both socket families, and the chaos suites —
+//! seeded drop/dup/corrupt/delay/partition injection, concurrent
+//! double-kills batched into one recovery cycle, and a death landing
+//! mid-recovery folding into the in-flight batch — all demand answers
+//! bit-identical to sequential.
 
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
@@ -16,10 +21,12 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use degreesketch::comm::codec::{
-    decode_frame, decode_msgs, encode_msg_frame, FRAME_HEADER_LEN,
+    decode_frame, decode_msgs, encode_msg_frame, encode_msg_frame_gen,
+    FRAME_HEADER_LEN,
 };
+use degreesketch::comm::socket::{probe_frame_rejection, SocketLike};
 use degreesketch::comm::tcp::{self, TcpFabric, WorkerDispatch, WorkerOptions};
-use degreesketch::comm::{Backend, Chaos, FaultPolicy, WireMsg};
+use degreesketch::comm::{Backend, Chaos, FaultPolicy, NetChaos, WireMsg};
 use degreesketch::coordinator::worker_dispatch;
 use degreesketch::coordinator::anf::{
     neighborhood_approximation, AnfMsg, AnfOptions,
@@ -446,12 +453,7 @@ fn process_kill_resume_accumulation_is_bit_identical_to_sequential() {
         let fault = FaultPolicy {
             ckpt_every_chunks: 2,
             chunk: 64,
-            chaos: Some(Chaos {
-                rank: 1 + (trial as usize % 3),
-                epoch: 1,
-                after_delivered: after,
-                generation: 0,
-            }),
+            chaos: Some(Chaos::kill(1 + (trial as usize % 3), 1, after)),
             ..FaultPolicy::default()
         };
         let killed = accumulate_stream(
@@ -491,12 +493,7 @@ fn process_kill_resume_full_pipeline_matches_sequential() {
         let fault = FaultPolicy {
             ckpt_every_chunks: 1,
             chunk: 48,
-            chaos: Some(Chaos {
-                rank: 1,
-                epoch: 1,
-                after_delivered: after,
-                generation: 0,
-            }),
+            chaos: Some(Chaos::kill(1, 1, after)),
             ..FaultPolicy::default()
         };
         let prc = run_all_fault(&edges, Backend::Process, fault);
@@ -556,12 +553,7 @@ fn tcp_kill_resume_with_respawned_worker_is_bit_identical() {
         let dir = ckpt_root.join(format!("r{rank}"));
         // rank 2 abruptly drops every socket mid-accumulation — the
         // thread-world equivalent of SIGKILL
-        let chaos = (rank == 2).then_some(Chaos {
-            rank: 2,
-            epoch: 1,
-            after_delivered: 80,
-            generation: 0,
-        });
+        let chaos = (rank == 2).then_some(Chaos::kill(2, 1, 80));
         workers.push(std::thread::spawn(move || {
             tcp::run_worker_opts(
                 worker_dispatch(),
@@ -663,6 +655,573 @@ fn checkpoint_records_reject_corruption_and_truncation() {
             "truncation at {cut} accepted"
         );
     }
+}
+
+// ---------------------------------------------------------------------
+// Frame-header mutation fuzzing: every byte of the 28-byte header is
+// load-bearing — any single-bit flip must be *rejected* (never hang,
+// never silently accepted) by the real mesh receive path, on both
+// socket families and across the token-wrap boundary.
+// ---------------------------------------------------------------------
+
+fn assert_header_mutations_rejected<S: SocketLike>(
+    label: &str,
+    mut pair: impl FnMut() -> (S, S),
+) {
+    let gen: u64 = 7;
+    // a plain start and one that wraps the cumulative token through
+    // u64::MAX mid-stream
+    for start in [0u64, u64::MAX - 2] {
+        let msgs1: Vec<(u64, u64)> = (0..5).map(|i| (i, i * 3)).collect();
+        let msgs2: Vec<(u64, u64)> = (0..3).map(|i| (i, i + 9)).collect();
+        let (mut scratch, mut wire) = (Vec::new(), Vec::new());
+        encode_msg_frame_gen(
+            0,
+            gen as u16,
+            start.wrapping_add(5),
+            &msgs1,
+            &mut scratch,
+            &mut wire,
+        );
+        encode_msg_frame_gen(
+            0,
+            gen as u16,
+            start.wrapping_add(8),
+            &msgs2,
+            &mut scratch,
+            &mut wire,
+        );
+        // baseline: the unmutated stream parses clean end to end
+        let (w, r) = pair();
+        let n = probe_frame_rejection(w, r, &wire, gen, start)
+            .unwrap_or_else(|e| panic!("{label} baseline (start {start}): {e}"));
+        assert_eq!(n, 8, "{label} baseline delivered (start {start})");
+        // every header byte of the first frame, two bit positions each:
+        // magic, kind, pad, generation, count, length, token, CRC
+        for byte in 0..FRAME_HEADER_LEN {
+            for bit in [0x01u8, 0x80] {
+                let mut bad = wire.clone();
+                bad[byte] ^= bit;
+                let (w, r) = pair();
+                let err = probe_frame_rejection(w, r, &bad, gen, start)
+                    .err()
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "{label}: header byte {byte} bit {bit:#04x} \
+                             accepted (start {start})"
+                        )
+                    });
+                assert!(
+                    !err.contains("no verdict within"),
+                    "{label}: header byte {byte} bit {bit:#04x} hung the \
+                     receiver instead of being rejected: {err}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn frame_header_mutations_are_rejected_on_unix_sockets() {
+    assert_header_mutations_rejected("unix", || {
+        std::os::unix::net::UnixStream::pair().unwrap()
+    });
+}
+
+#[test]
+fn frame_header_mutations_are_rejected_on_tcp_sockets() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    assert_header_mutations_rejected("tcp", || {
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    });
+}
+
+// ---------------------------------------------------------------------
+// Seeded network chaos (the ChaosTransport interposer) and batched
+// multi-rank recovery — the tentpole acceptance suite
+// ---------------------------------------------------------------------
+
+#[test]
+fn process_concurrent_double_kill_recovers_in_one_batch() {
+    // ranks 1 AND 2 die by the same delivered-count trigger: the driver
+    // must recover the set in ONE batched cycle (restores == 1), with
+    // every answer bit-identical to sequential
+    let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
+    let seq = run_all(&edges, Backend::Sequential);
+    let fault = FaultPolicy {
+        ckpt_every_chunks: 1,
+        chunk: 48,
+        chaos: Some(Chaos {
+            rank2: 2,
+            ..Chaos::kill(1, 1, 60)
+        }),
+        ..FaultPolicy::default()
+    };
+    let prc = run_all_fault(&edges, Backend::Process, fault);
+    assert_answers_match(&seq, &prc);
+    assert_eq!(
+        prc.ds.accumulation_stats.restores, 1,
+        "concurrent deaths must recover in a single batched cycle: {:?}",
+        prc.ds.accumulation_stats
+    );
+}
+
+#[test]
+fn process_lossy_network_chaos_stays_bit_identical() {
+    // seeded drop/dup/corrupt/delay on every mesh channel: lossy faults
+    // are detected (CRC, token gaps, heartbeat token audit) and repaired
+    // by recovery, never silently absorbed into a wrong answer
+    let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
+    let seq = run_all(&edges, Backend::Sequential);
+    let net = NetChaos {
+        seed: 0xC4A0_05EE_D001,
+        drop_per_mille: 25,
+        dup_per_mille: 15,
+        corrupt_per_mille: 15,
+        delay_per_mille: 50,
+        delay_polls: 3,
+        fault_budget: 2,
+        ..NetChaos::default()
+    };
+    let fault = FaultPolicy {
+        ckpt_every_chunks: 1,
+        chunk: 48,
+        hb_interval_ms: 10,
+        hb_timeout_ms: 500,
+        chaos: Some(Chaos {
+            net,
+            ..Chaos::default()
+        }),
+        ..FaultPolicy::default()
+    };
+    let prc = run_all_fault(&edges, Backend::Process, fault);
+    assert_answers_match(&seq, &prc);
+    assert!(
+        prc.ds.accumulation_stats.restores >= 1,
+        "lossy chaos at these rates must trigger at least one recovery \
+         (seed {:#x}): {:?}",
+        net.seed,
+        prc.ds.accumulation_stats
+    );
+}
+
+#[test]
+fn process_partition_is_detected_by_heartbeat_staleness() {
+    // rank 2's mesh links go half-open (reads stall forever, writes keep
+    // succeeding) after a few frames — the failure mode only the
+    // heartbeat staleness plane can see. Detection must happen at the
+    // hb timeout, recovery must restore bit-identical answers.
+    let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
+    let seq = run_all(&edges, Backend::Sequential);
+    let net = NetChaos {
+        seed: 0xDEAD_11,
+        partition_mask: 1 << 2,
+        stall_after_frames: 4,
+        ..NetChaos::default()
+    };
+    let fault = FaultPolicy {
+        ckpt_every_chunks: 1,
+        chunk: 48,
+        hb_interval_ms: 10,
+        hb_timeout_ms: 300,
+        chaos: Some(Chaos {
+            net,
+            ..Chaos::default()
+        }),
+        ..FaultPolicy::default()
+    };
+    let prc = run_all_fault(&edges, Backend::Process, fault);
+    assert_answers_match(&seq, &prc);
+    assert!(
+        prc.ds.accumulation_stats.restores >= 1,
+        "a partitioned rank must be detected and recovered: {:?}",
+        prc.ds.accumulation_stats
+    );
+}
+
+#[test]
+fn tcp_delay_chaos_is_pure_latency() {
+    // delay-only chaos on every tcp worker's mesh reads: frames are
+    // withheld (FIFO-preserving) for several polls but never lost, so
+    // answers match sequential with zero recoveries
+    let _guard = GLOBAL_FABRIC_LOCK
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    let ranks = 4;
+    let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
+    let seq = run_all(&edges, Backend::Sequential);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let registrar = listener.local_addr().unwrap().to_string();
+    tcp::configure_driver(listener, vec!["127.0.0.1:0".to_string(); ranks]);
+    let chaos = Chaos {
+        net: NetChaos {
+            seed: 0xDE1A_7,
+            delay_per_mille: 120,
+            delay_polls: 2,
+            ..NetChaos::default()
+        },
+        ..Chaos::default()
+    };
+    let workers: Vec<_> = (0..ranks)
+        .map(|rank| {
+            let registrar = registrar.clone();
+            std::thread::spawn(move || {
+                tcp::run_worker_opts(
+                    worker_dispatch(),
+                    &registrar,
+                    rank,
+                    WorkerOptions {
+                        deadline: Duration::from_secs(120),
+                        chaos: Some(chaos),
+                        ..Default::default()
+                    },
+                )
+            })
+        })
+        .collect();
+
+    let tcp_ans = run_all(&edges, Backend::Tcp);
+    tcp::shutdown_driver();
+    for w in workers {
+        w.join().expect("worker thread").expect("worker ran clean");
+    }
+    assert_answers_match(&seq, &tcp_ans);
+    assert_eq!(tcp_ans.ds.accumulation_stats.restores, 0);
+}
+
+/// Respawner for the tcp kill suites: waits for its victim to die, then
+/// keeps relaunching the replacement (with `--resume`) until the fabric
+/// is done — a replacement folded out of a superseded recovery cycle
+/// exits cleanly and must re-join the next cycle.
+fn spawn_respawner(
+    victim: std::thread::JoinHandle<Result<(), String>>,
+    rank: usize,
+    registrar: String,
+    dir: std::path::PathBuf,
+    done: Arc<std::sync::atomic::AtomicBool>,
+) -> std::thread::JoinHandle<Result<(), String>> {
+    std::thread::spawn(move || {
+        let died = victim.join().expect("victim thread");
+        assert!(
+            died.is_err(),
+            "rank {rank} chaos victim must die mid-epoch, got {died:?}"
+        );
+        loop {
+            let res = tcp::run_worker_opts(
+                worker_dispatch(),
+                &registrar,
+                rank,
+                WorkerOptions {
+                    deadline: Duration::from_secs(120),
+                    ckpt_dir: dir.clone(),
+                    resume: Some(dir.clone()),
+                    chaos: None,
+                },
+            );
+            if done.load(std::sync::atomic::Ordering::Relaxed) {
+                return res;
+            }
+        }
+    })
+}
+
+#[test]
+fn tcp_concurrent_double_kill_recovers_in_one_batched_cycle() {
+    // ranks 1 and 2 both drop every socket mid-accumulation; the driver
+    // must pause the survivors ONCE, admit both replacements into the
+    // same re-mesh, and restore in a single batched cycle
+    let _guard = GLOBAL_FABRIC_LOCK
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    let ranks = 4;
+    let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
+    let seq = run_all(&edges, Backend::Sequential);
+
+    let ckpt_root = std::env::temp_dir().join(format!(
+        "degreesketch_tcp_dkill_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&ckpt_root);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let registrar = listener.local_addr().unwrap().to_string();
+    tcp::configure_driver(listener, vec!["127.0.0.1:0".to_string(); ranks]);
+
+    let mut workers = Vec::new();
+    for rank in 0..ranks {
+        let registrar = registrar.clone();
+        let dir = ckpt_root.join(format!("r{rank}"));
+        let chaos = match rank {
+            1 => Some(Chaos::kill(1, 1, 60)),
+            2 => Some(Chaos::kill(2, 1, 70)),
+            _ => None,
+        };
+        workers.push(std::thread::spawn(move || {
+            tcp::run_worker_opts(
+                worker_dispatch(),
+                &registrar,
+                rank,
+                WorkerOptions {
+                    deadline: Duration::from_secs(120),
+                    ckpt_dir: dir,
+                    resume: None,
+                    chaos,
+                },
+            )
+        }));
+    }
+    let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let victim2 = workers.remove(2);
+    let victim1 = workers.remove(1);
+    let respawners = [
+        spawn_respawner(
+            victim1,
+            1,
+            registrar.clone(),
+            ckpt_root.join("r1"),
+            Arc::clone(&done),
+        ),
+        spawn_respawner(
+            victim2,
+            2,
+            registrar.clone(),
+            ckpt_root.join("r2"),
+            Arc::clone(&done),
+        ),
+    ];
+
+    let fault = FaultPolicy {
+        ckpt_every_chunks: 1,
+        chunk: 32,
+        ..FaultPolicy::default()
+    };
+    let tcp_ans = run_all_fault(&edges, Backend::Tcp, fault);
+    done.store(true, std::sync::atomic::Ordering::Relaxed);
+    tcp::shutdown_driver();
+    for w in workers {
+        w.join().expect("worker thread").expect("worker ran clean");
+    }
+    for r in respawners {
+        r.join()
+            .expect("respawner thread")
+            .expect("replacement worker ran clean");
+    }
+
+    assert_answers_match(&seq, &tcp_ans);
+    assert_eq!(
+        tcp_ans.ds.accumulation_stats.restores, 1,
+        "two concurrent deaths must be recovered by ONE batched \
+         PAUSE/re-mesh cycle: {:?}",
+        tcp_ans.ds.accumulation_stats
+    );
+    let _ = std::fs::remove_dir_all(&ckpt_root);
+}
+
+#[test]
+fn tcp_death_mid_recovery_folds_into_the_batch() {
+    // rank 1 dies by delivered count; rank 3 dies the moment the PAUSE
+    // for rank 1's recovery reaches it — a death landing mid-recovery.
+    // The driver must fold rank 3 into the in-flight batch and still
+    // finish with restores == 1 (one recover call, superseded cycles
+    // torn down internally).
+    let _guard = GLOBAL_FABRIC_LOCK
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    let ranks = 4;
+    let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
+    let seq = run_all(&edges, Backend::Sequential);
+
+    let ckpt_root = std::env::temp_dir().join(format!(
+        "degreesketch_tcp_fold_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&ckpt_root);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let registrar = listener.local_addr().unwrap().to_string();
+    tcp::configure_driver(listener, vec!["127.0.0.1:0".to_string(); ranks]);
+
+    let mut workers = Vec::new();
+    for rank in 0..ranks {
+        let registrar = registrar.clone();
+        let dir = ckpt_root.join(format!("r{rank}"));
+        let chaos = match rank {
+            1 => Some(Chaos::kill(1, 1, 60)),
+            3 => Some(Chaos {
+                rank: 3,
+                epoch: 1,
+                on_pause: true,
+                ..Chaos::default()
+            }),
+            _ => None,
+        };
+        workers.push(std::thread::spawn(move || {
+            tcp::run_worker_opts(
+                worker_dispatch(),
+                &registrar,
+                rank,
+                WorkerOptions {
+                    deadline: Duration::from_secs(120),
+                    ckpt_dir: dir,
+                    resume: None,
+                    chaos,
+                },
+            )
+        }));
+    }
+    let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let victim3 = workers.remove(3);
+    let victim1 = workers.remove(1);
+    let respawners = [
+        spawn_respawner(
+            victim1,
+            1,
+            registrar.clone(),
+            ckpt_root.join("r1"),
+            Arc::clone(&done),
+        ),
+        spawn_respawner(
+            victim3,
+            3,
+            registrar.clone(),
+            ckpt_root.join("r3"),
+            Arc::clone(&done),
+        ),
+    ];
+
+    let fault = FaultPolicy {
+        ckpt_every_chunks: 1,
+        chunk: 32,
+        ..FaultPolicy::default()
+    };
+    let tcp_ans = run_all_fault(&edges, Backend::Tcp, fault);
+    done.store(true, std::sync::atomic::Ordering::Relaxed);
+    tcp::shutdown_driver();
+    for w in workers {
+        w.join().expect("worker thread").expect("worker ran clean");
+    }
+    for r in respawners {
+        r.join()
+            .expect("respawner thread")
+            .expect("replacement worker ran clean");
+    }
+
+    assert_answers_match(&seq, &tcp_ans);
+    assert_eq!(
+        tcp_ans.ds.accumulation_stats.restores, 1,
+        "the mid-recovery death must fold into the in-flight batch, \
+         not start a second recovery: {:?}",
+        tcp_ans.ds.accumulation_stats
+    );
+    let _ = std::fs::remove_dir_all(&ckpt_root);
+}
+
+// ---------------------------------------------------------------------
+// Chaos soak (env-gated; the CI chaos-soak job drives this with
+// randomized seeds): run the full pipeline under a seeded fault mix and
+// a concurrent double-kill, diffing every answer against sequential.
+// Reproduce any failure with CHAOS_SOAK=1 CHAOS_SOAK_SEED=<printed seed>.
+// ---------------------------------------------------------------------
+
+#[test]
+fn chaos_soak_randomized_fault_mix() {
+    if std::env::var("CHAOS_SOAK").ok().as_deref() != Some("1") {
+        return; // opt-in: the soak runs minutes, not CI-tier-1 seconds
+    }
+    let seed = std::env::var("CHAOS_SOAK_SEED")
+        .ok()
+        .and_then(|s| {
+            let s = s.trim().to_string();
+            let hex = s.strip_prefix("0x").unwrap_or(&s);
+            u64::from_str_radix(hex, 16)
+                .ok()
+                .or_else(|| s.parse::<u64>().ok())
+        })
+        .unwrap_or(0xC0FF_EE00);
+    println!("chaos soak seed = {seed:#018x}");
+    let mut rng = Xoshiro256ss::new(seed);
+    let edges = GraphSpec::parse("ws:200:6:5").unwrap().generate(6);
+    let seq = run_all(&edges, Backend::Sequential);
+
+    // rounds of randomized drop/dup/corrupt/delay rates
+    for round in 0..2u32 {
+        let net = NetChaos {
+            seed: rng.next_u64() | 1,
+            drop_per_mille: (rng.next_below(25) + 5) as u16,
+            dup_per_mille: rng.next_below(20) as u16,
+            corrupt_per_mille: rng.next_below(20) as u16,
+            delay_per_mille: (rng.next_below(80) + 20) as u16,
+            delay_polls: (rng.next_below(4) + 1) as u16,
+            fault_budget: 2,
+            ..NetChaos::default()
+        };
+        let fault = FaultPolicy {
+            ckpt_every_chunks: 1,
+            chunk: 48,
+            hb_interval_ms: 10,
+            hb_timeout_ms: 500,
+            chaos: Some(Chaos {
+                net,
+                ..Chaos::default()
+            }),
+            ..FaultPolicy::default()
+        };
+        let prc = run_all_fault(&edges, Backend::Process, fault);
+        assert_answers_match(&seq, &prc);
+        println!(
+            "chaos soak round {round}: channel seed {:#018x}, restores={}",
+            net.seed, prc.ds.accumulation_stats.restores
+        );
+    }
+
+    // a randomized rank-set partition, detected by heartbeat staleness
+    let partitioned = 1 + rng.next_below(3) as usize;
+    let net = NetChaos {
+        seed: rng.next_u64() | 1,
+        partition_mask: 1 << partitioned,
+        stall_after_frames: rng.next_below(8),
+        ..NetChaos::default()
+    };
+    let fault = FaultPolicy {
+        ckpt_every_chunks: 1,
+        chunk: 48,
+        hb_interval_ms: 10,
+        hb_timeout_ms: 300,
+        chaos: Some(Chaos {
+            net,
+            ..Chaos::default()
+        }),
+        ..FaultPolicy::default()
+    };
+    let prc = run_all_fault(&edges, Backend::Process, fault);
+    assert_answers_match(&seq, &prc);
+    println!(
+        "chaos soak partition: rank {partitioned}, restores={}",
+        prc.ds.accumulation_stats.restores
+    );
+
+    // and the concurrent double-kill at a randomized trigger point
+    let after = 30 + rng.next_below(120);
+    let fault = FaultPolicy {
+        ckpt_every_chunks: 1,
+        chunk: 48,
+        chaos: Some(Chaos {
+            rank2: 2,
+            ..Chaos::kill(1, 1, after)
+        }),
+        ..FaultPolicy::default()
+    };
+    let prc = run_all_fault(&edges, Backend::Process, fault);
+    assert_answers_match(&seq, &prc);
+    assert_eq!(
+        prc.ds.accumulation_stats.restores, 1,
+        "soak double-kill (after {after}) must batch into one cycle"
+    );
+    println!("chaos soak double-kill: after={after}, restores=1");
 }
 
 #[test]
