@@ -207,6 +207,46 @@
 //! REDUCE (global sums / top-k heap merges) happens **between** runs, on
 //! the actor states the schedulers hand back — matching the paper's
 //! "REDUCE operations occur between passes over σ".
+//!
+//! # Observability
+//!
+//! Every protocol step above emits a structured trace event through
+//! [`crate::telemetry`] (armed with `--trace-dir`, merged by
+//! `degreesketch trace inspect`):
+//!
+//! * **Epoch lifecycle** — the driver emits `epoch.start` (the anchor
+//!   each rank's timeline is aligned on), `epoch.end`, and
+//!   `recovery.cycle` per recovery generation; workers mirror
+//!   `epoch.start`/`epoch.end` around their epoch loop.
+//! * **Seeding & barriers** — workers emit `step.chunk` per STEP
+//!   window; the driver brackets each quiescent checkpoint barrier with
+//!   `barrier.begin`/`barrier.end` (the inspect subcommand reports the
+//!   dwell between them) and `ckpt.commit` after the two-phase commit;
+//!   workers emit `ckpt.store` when their record hits disk and
+//!   `ckpt.commit` when the COMMIT lands.
+//! * **Recovery** — workers emit `pause` on PAUSE, `restore.rollback`
+//!   after rolling back to the restored barrier.
+//! * **Liveness & chaos** — `hb.stale` fires when a worker declares a
+//!   peer dead from HB silence (staleness also rides the next REPORT and
+//!   surfaces as [`CommStats::max_stale_ms`]); every injected chaos
+//!   fault emits `chaos.<kind>` and bumps
+//!   `degreesketch_chaos_faults_total`.
+//! * **Flush policy** — adaptive threshold moves emit
+//!   `flush.grow`/`flush.shrink` with the channel and new threshold.
+//!
+//! Workers ship buffered events and counter deltas to the driver as a
+//! CRC'd, generation-qualified TELEM blob (see [`crate::telemetry::wire`])
+//! piggybacked on frames the protocol already exchanges: an optional
+//! trailing extension of each REPORT payload (after the
+//! `[sent, delivered, failed_peer, stale_ms]` words) and a
+//! length-prefixed leg in the STATE payload between the stats words and
+//! the actor state. Both extensions are backward-shaped: old payload
+//! parsers that stop at the fixed words simply ignore them. Delivery is
+//! best-effort — a REPORT skipped as stale by `recv_matching` drops
+//! that window's delta (bounded loss, counted by the worker's `dropped`
+//! field); STATE-leg deltas are reliable since STATE collection is the
+//! epoch's final handshake. Stale-generation blobs (a rolled-back
+//! worker's pre-recovery life) are rejected at ingest.
 
 pub mod codec;
 mod outbox;
@@ -255,6 +295,10 @@ pub struct CommStats {
     pub checkpoints: u64,
     /// Recovery generations executed (rank deaths survived via rollback).
     pub restores: u64,
+    /// Worst heartbeat staleness any rank reported before declaring a
+    /// peer dead (ms; 0 when no HB staleness was observed). Surfaced in
+    /// server `STATS`/`METRICS` so partitions are visible after the fact.
+    pub max_stale_ms: u64,
     /// Per-destination-rank breakdown (indexed by rank).
     pub per_rank: Vec<RankStats>,
 }

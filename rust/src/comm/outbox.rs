@@ -179,7 +179,17 @@ impl<M> Outbox<M> {
         let buf = std::mem::take(&mut self.bufs[to]);
         if self.policy.adaptive && !buf.is_empty() {
             let t = &mut self.thresholds[to];
-            *t = t.saturating_mul(2).min(self.policy.max);
+            let grown = t.saturating_mul(2).min(self.policy.max);
+            if grown != *t {
+                crate::telemetry::count("degreesketch_flush_grow_total", 1);
+                if crate::telemetry::enabled() {
+                    crate::telemetry::event(
+                        "flush.grow",
+                        &[("channel", to as u64), ("threshold", grown as u64)],
+                    );
+                }
+            }
+            *t = grown;
         }
         buf
     }
@@ -199,7 +209,17 @@ impl<M> Outbox<M> {
             .filter(|(_, b)| !b.is_empty())
             .map(|(to, b)| {
                 if adaptive && b.len() < thresholds[to] / 2 {
-                    thresholds[to] = (thresholds[to] / 2).max(min);
+                    let shrunk = (thresholds[to] / 2).max(min);
+                    if shrunk != thresholds[to] {
+                        crate::telemetry::count("degreesketch_flush_shrink_total", 1);
+                        if crate::telemetry::enabled() {
+                            crate::telemetry::event(
+                                "flush.shrink",
+                                &[("channel", to as u64), ("threshold", shrunk as u64)],
+                            );
+                        }
+                    }
+                    thresholds[to] = shrunk;
                 }
                 (to, std::mem::take(b))
             })

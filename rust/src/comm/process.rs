@@ -113,6 +113,7 @@ mod unix {
         Backend, Chaos, CommStats, FabricActor, FaultPolicy, NetChaos,
         WireMsg,
     };
+    use crate::telemetry;
 
     /// Every worker-side stream is wrapped in the chaos interposer — a
     /// transparent pass-through unless [`Chaos::net`] is armed.
@@ -278,6 +279,8 @@ mod unix {
         let mut gen = 0u64;
         let mut checkpoints = 0u64;
         let mut restores = 0u64;
+        let mut max_stale_ms = 0u64;
+        telemetry::driver_epoch_start(ranks as u64, (gen & 0xFFFF) as u16);
         // Latest fully-acknowledged barrier records, one per rank (the
         // CKPT acks carry them inline). Updated all-or-nothing, so a
         // re-fork always resumes a consistent fabric-wide barrier.
@@ -302,6 +305,11 @@ mod unix {
                 Ok(mut stats) => {
                     stats.checkpoints = checkpoints;
                     stats.restores = restores;
+                    stats.max_stale_ms = max_stale_ms;
+                    telemetry::driver_event(
+                        "epoch.end",
+                        &[("restores", restores), ("checkpoints", checkpoints)],
+                    );
                     return (actors, stats);
                 }
                 Err(e) => {
@@ -312,6 +320,16 @@ mod unix {
                     }
                     gen += 1;
                     restores += 1;
+                    max_stale_ms = max_stale_ms.max(e.stale_ms);
+                    telemetry::driver_event(
+                        "recovery.cycle",
+                        &[
+                            ("gen", gen),
+                            ("rank", e.rank as u64),
+                            ("barrier", checkpoints),
+                            ("stale_ms", e.stale_ms),
+                        ],
+                    );
                     eprintln!(
                         "process epoch: worker rank {} died ({}); \
                          re-forking the fleet from checkpoint barrier \

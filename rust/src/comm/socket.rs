@@ -101,6 +101,7 @@ use super::{
 };
 use crate::hash::xxh64_u64;
 use crate::snapshot::checkpoint::CheckpointRecord;
+use crate::telemetry;
 
 /// Frame kinds on the wire (mesh, control, and rendezvous channels).
 pub(crate) mod kind {
@@ -335,6 +336,8 @@ impl ChaosState {
             if self.partitioned && self.frames >= self.cfg.stall_after_frames
             {
                 self.stalled = true;
+                telemetry::count("degreesketch_chaos_faults_total", 1);
+                telemetry::event("chaos.partition", &[("frame", self.frames)]);
                 return;
             }
             let idx = self.frames;
@@ -355,15 +358,19 @@ impl ChaosState {
                 if let Some(b) = self.budget.as_mut() {
                     *b -= 1;
                 }
+                telemetry::count("degreesketch_chaos_faults_total", 1);
                 if roll < d {
                     // drop
+                    telemetry::event("chaos.drop", &[("frame", idx)]);
                     self.staged.drain(..total);
                 } else if roll < u {
                     // duplicate
+                    telemetry::event("chaos.dup", &[("frame", idx)]);
                     self.ready.extend_from_slice(&self.staged[..total]);
                     self.ready.extend_from_slice(&self.staged[..total]);
                     self.staged.drain(..total);
                 } else {
+                    telemetry::event("chaos.corrupt", &[("frame", idx)]);
                     // corrupt: flip one bit anywhere except the length
                     // field at header[12..16)
                     let mut frame = self.staged[..total].to_vec();
@@ -383,6 +390,8 @@ impl ChaosState {
             if roll >= c && roll < l {
                 // delay: withhold this frame and everything behind it;
                 // the roll index is consumed — delivery skips the re-roll
+                telemetry::count("degreesketch_chaos_faults_total", 1);
+                telemetry::event("chaos.delay", &[("frame", idx)]);
                 self.delay_pending = true;
                 self.hold_polls = u32::from(self.cfg.delay_polls.max(1));
                 return;
@@ -1598,6 +1607,14 @@ where
     }
     let input_len = actor.input_len() as u64;
 
+    // Arm this thread's telemetry context: trace events and counters
+    // buffer locally and ship to the driver on REPORT/STATE frames.
+    telemetry::begin_worker(rank);
+    telemetry::event(
+        "epoch.start",
+        &[("epoch", spec.epoch), ("gen", spec.gen)],
+    );
+
     // Resume overlay (respawned tcp worker / re-forked process worker).
     let mut gen: u64 = spec.gen;
     let mut pos: u64 = 0;
@@ -1767,6 +1784,10 @@ where
                 );
                 if spec.resilient {
                     stale_ms = silent_ms;
+                    telemetry::event(
+                        "hb.stale",
+                        &[("peer", p as u64), ("silent_ms", silent_ms)],
+                    );
                     tp.mark_peer_failed(p, msg);
                 } else {
                     return Err(msg);
@@ -1793,6 +1814,7 @@ where
                     queue_report(
                         ctrl,
                         ftoken,
+                        tp.gen,
                         tp.sent,
                         delivered,
                         tp.first_failed_peer(),
@@ -1806,6 +1828,7 @@ where
                     queue_report(
                         ctrl,
                         ftoken,
+                        tp.gen,
                         tp.sent,
                         delivered,
                         tp.first_failed_peer(),
@@ -1829,6 +1852,10 @@ where
                             &mut outbox,
                         );
                         pos = end;
+                        telemetry::event(
+                            "step.chunk",
+                            &[("pos", pos), ("remaining", input_len - pos)],
+                        );
                         flush_outbox(
                             &mut outbox,
                             &mut sent_base,
@@ -1886,6 +1913,10 @@ where
                     let bytes = rec.encode();
                     let ack =
                         hooks.store_checkpoint(spec.epoch, barrier, &bytes)?;
+                    telemetry::event(
+                        "ckpt.store",
+                        &[("barrier", barrier), ("bytes", bytes.len() as u64)],
+                    );
                     pending = Some((barrier, bytes));
                     let mut frame = Vec::with_capacity(
                         FRAME_HEADER_LEN + ack.len(),
@@ -1910,6 +1941,7 @@ where
                         Some((b, bytes)) if b == ftoken => {
                             committed = Some((b, bytes));
                             hooks.commit_checkpoint(spec.epoch, b);
+                            telemetry::event("ckpt.commit", &[("barrier", b)]);
                         }
                         other => {
                             return Err(format!(
@@ -1939,6 +1971,10 @@ where
                     }
                     let (mut dead_set, mut pgen, mut rbarrier) =
                         decode_pause_payload(&fpayload)?;
+                    telemetry::event(
+                        "pause",
+                        &[("gen", pgen), ("dead", dead_set.len() as u64)],
+                    );
                     'recover: loop {
                         if pgen <= gen {
                             return Err(format!(
@@ -2079,6 +2115,10 @@ where
                     sent_base = 0;
                     committed = Some((rbarrier, rec_bytes));
                     pending = None;
+                    telemetry::event(
+                        "restore.rollback",
+                        &[("gen", pgen), ("barrier", rbarrier)],
+                    );
                     queue_ack(ctrl, kind::RESTORED, pgen);
                 }
                 kind::RESTORE => {
@@ -2104,6 +2144,10 @@ where
                             }
                         }
                     }
+                    telemetry::event(
+                        "epoch.end",
+                        &[("delivered", delivered)],
+                    );
                     stop = true;
                     break;
                 }
@@ -2120,16 +2164,22 @@ where
         }
     }
 
-    // Final state: inbound stats record + serialized actor state.
+    // Final state: inbound stats record + TELEM leg + serialized actor
+    // state. The TELEM leg is length-prefixed so `collect_state`'s
+    // consume-exactly contract on the actor state still holds.
     let mut payload = Vec::new();
     put_u64(&mut payload, delivered);
     put_u64(&mut payload, bytes_in);
     put_u64(&mut payload, frames_in);
     put_u64(&mut payload, tp.sent);
+    let telem = telemetry::take_delta((gen & 0xFFFF) as u16).unwrap_or_default();
+    put_u32(&mut payload, telem.len() as u32);
+    payload.extend_from_slice(&telem);
     actor.write_state(&mut payload);
     let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
     encode_frame_into(kind::STATE, 0, 0, &payload, &mut frame);
     ctrl.queue_frame(frame);
+    telemetry::end_worker();
     ctrl.drain_writes("ctrl")
 }
 
@@ -2138,10 +2188,14 @@ where
 /// the lowest rank whose channel parked as failed; `stale_ms` is the
 /// heartbeat silence observed when staleness detection parked it (0 for
 /// failures detected by I/O errors). Older workers sent only the first
-/// three words; the driver parses the fourth as optional.
+/// three words; the driver parses the fourth as optional. After the
+/// fixed words an optional TELEM delta blob (CRC'd, gen-qualified; see
+/// `telemetry::wire`) ships this worker's buffered telemetry —
+/// delivery is best-effort, a stale-skipped REPORT loses its window.
 fn queue_report<S: SocketLike>(
     ctrl: &mut Conn<S>,
     wave: u64,
+    gen: u16,
     sent: u64,
     delivered: u64,
     failed_peer: Option<usize>,
@@ -2152,6 +2206,9 @@ fn queue_report<S: SocketLike>(
     put_u64(&mut payload, delivered);
     put_u64(&mut payload, failed_peer.map_or(u64::MAX, |p| p as u64));
     put_u64(&mut payload, stale_ms);
+    if let Some(blob) = telemetry::take_delta(gen) {
+        payload.extend_from_slice(&blob);
+    }
     let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + 32);
     encode_frame_into(kind::REPORT, 0, wave, &payload, &mut frame);
     ctrl.queue_frame(frame);
@@ -2235,11 +2292,25 @@ fn poll_ctrl_frame<S: SocketLike>(
 pub(crate) struct RankError {
     pub rank: usize,
     pub msg: String,
+    /// Heartbeat silence (ms) the reporting worker observed before the
+    /// failure was declared; 0 when the failure surfaced as an I/O
+    /// error instead of HB staleness. Recovery folds the max into
+    /// [`super::CommStats::max_stale_ms`].
+    pub stale_ms: u64,
 }
 
 impl RankError {
     pub(crate) fn new(rank: usize, msg: String) -> Self {
-        Self { rank, msg }
+        Self {
+            rank,
+            msg,
+            stale_ms: 0,
+        }
+    }
+
+    pub(crate) fn with_stale(mut self, stale_ms: u64) -> Self {
+        self.stale_ms = stale_ms;
+        self
     }
 }
 
@@ -2513,6 +2584,14 @@ pub(crate) fn collect_reports<S: SocketLike, L: Liveness>(
         // optional fourth word (heartbeat staleness in ms) — absent in
         // pre-heartbeat REPORT frames
         let stale_ms = get_u64(&mut input).unwrap_or(0);
+        // Optional TELEM extension after the fixed words: ingest before
+        // any failure handling so a failing wave still lands its
+        // telemetry. Best-effort — a bad blob is noted, not fatal.
+        if !input.is_empty() {
+            if let Err(e) = telemetry::ingest_remote(r, input) {
+                eprintln!("[comm] {desc}: bad TELEM leg on report: {e}");
+            }
+        }
         if failed_peer != u64::MAX {
             let how = if stale_ms > 0 {
                 format!(
@@ -2533,7 +2612,7 @@ pub(crate) fn collect_reports<S: SocketLike, L: Liveness>(
             } else {
                 r
             };
-            return Err(RankError::new(rank, msg));
+            return Err(RankError::new(rank, msg).with_stale(stale_ms));
         }
         s += sent;
         d += delivered;
@@ -2579,6 +2658,10 @@ fn run_idle_rounds<S: SocketLike, L: Liveness>(
         collect_reports(ctrls, *wave)?;
         let sent_after = wait_quiescent(ctrls, wave)?;
         if sent_after == sent_before {
+            telemetry::driver_event(
+                "quiesce",
+                &[("idle_rounds", idle_rounds)],
+            );
             return Ok(idle_rounds);
         }
     }
@@ -2676,6 +2759,10 @@ pub(crate) fn drive_resilient<S: SocketLike, L: Liveness>(
             || (plan.secs > 0
                 && last_ckpt.elapsed().as_secs() >= plan.secs);
         if due {
+            telemetry::driver_event(
+                "barrier.begin",
+                &[("barrier", *checkpoints + 1)],
+            );
             // reach a true barrier first: idle rounds drain every
             // partial fan/batch buffer, so write_state sees a settled
             // actor and every channel token pair agrees
@@ -2706,6 +2793,8 @@ pub(crate) fn drive_resilient<S: SocketLike, L: Liveness>(
                 c.send(kind::CKPT_COMMIT, barrier)
                     .map_err(|e| RankError::new(r, e))?;
             }
+            telemetry::driver_event("ckpt.commit", &[("barrier", barrier)]);
+            telemetry::driver_event("barrier.end", &[("barrier", barrier)]);
             last_ckpt = Instant::now();
         }
     }
@@ -2750,6 +2839,23 @@ where
         bytes: bytes_in,
         flushes: frames_in,
     };
+    // TELEM leg: length-prefixed delta blob between the stats words and
+    // the actor state (see `telemetry::wire`). Best-effort ingest.
+    let telem_len = get_u32(&mut input).map_err(err)? as usize;
+    if telem_len > input.len() {
+        return Err(format!(
+            "{}: telem leg of {telem_len} bytes exceeds remaining {}",
+            ctrl.desc,
+            input.len()
+        ));
+    }
+    let (blob, rest) = input.split_at(telem_len);
+    if !blob.is_empty() {
+        if let Err(e) = telemetry::ingest_remote(rank, blob) {
+            eprintln!("[comm] {}: bad TELEM leg on state: {e}", ctrl.desc);
+        }
+    }
+    input = rest;
     actor
         .read_state(&mut input)
         .map_err(|e| format!("{}: state decode failed: {e}", ctrl.desc))?;

@@ -60,6 +60,7 @@ use super::socket::{
 };
 use super::{Backend, Chaos, CommStats, FabricActor, FaultPolicy, WireMsg};
 use crate::snapshot::checkpoint::{checkpoint_file_name, write_record_bytes};
+use crate::telemetry;
 
 /// Every tcp worker stream is wrapped in the chaos interposer — a
 /// transparent pass-through unless the launcher armed
@@ -243,6 +244,8 @@ impl TcpFabric {
         let mut gen = self.incarnation;
         let mut checkpoints = 0u64;
         let mut restores = 0u64;
+        let mut max_stale_ms = 0u64;
+        telemetry::driver_epoch_start(ranks as u64, (gen & 0xFFFF) as u16);
         let idle_rounds = loop {
             let res = match &plan {
                 Some(p) => socket::drive_resilient(
@@ -281,6 +284,16 @@ impl TcpFabric {
                     dead.sort_unstable();
                     gen += 1;
                     restores += 1;
+                    max_stale_ms = max_stale_ms.max(e.stale_ms);
+                    telemetry::driver_event(
+                        "recovery.cycle",
+                        &[
+                            ("gen", gen),
+                            ("dead", dead.len() as u64),
+                            ("barrier", checkpoints),
+                            ("stale_ms", e.stale_ms),
+                        ],
+                    );
                     eprintln!(
                         "tcp fabric: worker rank {} died mid-epoch ({}); \
                          dead set {dead:?} — pausing survivors and \
@@ -311,9 +324,18 @@ impl TcpFabric {
         stats.idle_rounds = idle_rounds;
         stats.checkpoints = checkpoints;
         stats.restores = restores;
+        stats.max_stale_ms = max_stale_ms;
         for (rank, c) in self.ctrls.iter_mut().enumerate() {
             socket::collect_state(c, &mut actors[rank], &mut stats, rank)?;
         }
+        telemetry::driver_event(
+            "epoch.end",
+            &[
+                ("epoch", self.epoch),
+                ("restores", restores),
+                ("checkpoints", checkpoints),
+            ],
+        );
         Ok(stats)
     }
 

@@ -201,7 +201,9 @@ pub fn run_threaded<A: Actor + 'static>(
         flushes: shared.flushes.load(Ordering::SeqCst),
         bytes: shared.bytes.load(Ordering::SeqCst),
         idle_rounds,
+        max_stale_ms: 0,
         per_rank: Vec::with_capacity(ranks),
+        ..CommStats::default()
     };
     for rc in &shared.per_rank {
         stats.per_rank.push(RankStats {

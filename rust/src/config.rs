@@ -249,6 +249,18 @@ impl Config {
         })
     }
 
+    /// Telemetry knob: `telemetry.trace_dir` arms the driver-side trace
+    /// sink for epoch-running subcommands — structured fabric events
+    /// stream into per-rank JSONL files under that directory, merged
+    /// later by `degreesketch trace inspect`. The CLI's `--trace-dir`
+    /// flag overrides it; absent/empty means tracing stays off.
+    pub fn trace_dir(&self) -> Option<&str> {
+        match self.get_str("telemetry.trace_dir", "") {
+            "" => None,
+            dir => Some(dir),
+        }
+    }
+
     /// Dial-retry backoff knobs: `comm.dial_backoff_base_ms` (first
     /// retry delay; doubles per attempt) and `comm.dial_backoff_cap_ms`
     /// (ceiling on the exponential). Validates and installs them into
@@ -394,6 +406,17 @@ adaptive_flush = false
         assert!(c2.apply_dial_backoff().is_err());
         // Restore defaults so other tests see the stock dialer pacing.
         Config::parse("").unwrap().apply_dial_backoff().unwrap();
+    }
+
+    #[test]
+    fn telemetry_trace_dir_parses_from_config() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.trace_dir(), None);
+        let mut c2 = Config::parse("").unwrap();
+        c2.set_override("telemetry.trace_dir=\"/tmp/trace.d\"").unwrap();
+        assert_eq!(c2.trace_dir(), Some("/tmp/trace.d"));
+        c2.set_override("telemetry.trace_dir=\"\"").unwrap();
+        assert_eq!(c2.trace_dir(), None);
     }
 
     #[test]

@@ -13,10 +13,20 @@
 //!                        dense=<n> mode=<heap|mmap> resident=<bytes>
 //!                        evicted=<n>
 //!                        comm=<sequential|threaded|process|tcp|none>
-//!                        [ckpts=<n> restores=<n>]
+//!                        [ckpts=<n> restores=<n> hb_stale_ms=<ms>]
 //!                        [rank<i>=<msgs>/<bytes>/<flushes> ...]
+//! METRICS              → Prometheus text exposition, terminated by a
+//!                        `# EOF` line (the one multi-line response)
 //! QUIT                 → BYE (closes the connection)
 //! ```
+//!
+//! `METRICS` scrapes the server's own registry (per-query-kind request
+//! counters and log2-bucketed latency histograms with p50/p90/p99
+//! quantile summaries, engine gauges, comm/checkpoint/recovery and
+//! heartbeat-staleness gauges) concatenated with the process-global
+//! [`telemetry::registry`] (fabric counters merged from worker TELEM
+//! deltas). Clients read until the `# EOF` line — it is both the
+//! OpenMetrics terminator and the framing for this one multi-line verb.
 //!
 //! `mem` is the engine's *private heap* sketch bytes and `resident` the
 //! *mapped snapshot* bytes (shared address space): a heap-loaded server
@@ -52,6 +62,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::hll::Domination;
+use crate::telemetry::{self, prom, Registry};
 
 use super::engine::QueryEngine;
 
@@ -92,6 +103,9 @@ pub struct QueryServer {
     live: Arc<AtomicUsize>,
     /// Connections evicted for exceeding the idle cap (reported in STATS).
     evicted: Arc<AtomicU64>,
+    /// This server's metric series (query counters + latency histograms),
+    /// exposed by the `METRICS` verb alongside the process-global registry.
+    metrics: Arc<Registry>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -113,9 +127,11 @@ impl QueryServer {
         let shutdown = Arc::new(AtomicBool::new(false));
         let live = Arc::new(AtomicUsize::new(0));
         let evicted = Arc::new(AtomicU64::new(0));
+        let metrics = Arc::new(Registry::new());
         let stop = Arc::clone(&shutdown);
         let live_in = Arc::clone(&live);
         let evicted_in = Arc::clone(&evicted);
+        let metrics_in = Arc::clone(&metrics);
         let handle = std::thread::spawn(move || {
             let mut workers: Vec<JoinHandle<()>> = Vec::new();
             loop {
@@ -126,9 +142,10 @@ impl QueryServer {
                     Ok((stream, _)) => {
                         let engine = Arc::clone(&engine);
                         let evictions = Arc::clone(&evicted_in);
+                        let metrics = Arc::clone(&metrics_in);
                         workers.push(std::thread::spawn(move || {
                             let _ = serve_connection(
-                                stream, &engine, limits, &evictions,
+                                stream, &engine, limits, &evictions, &metrics,
                             );
                         }));
                     }
@@ -153,6 +170,7 @@ impl QueryServer {
             shutdown,
             live,
             evicted,
+            metrics,
             handle: Some(handle),
         })
     }
@@ -170,6 +188,11 @@ impl QueryServer {
     /// Connections evicted so far for exceeding the idle cap.
     pub fn evicted(&self) -> u64 {
         self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// This server's metric registry (query counters, latency histograms).
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
     }
 
     /// Stop accepting and join the listener thread.
@@ -197,6 +220,7 @@ fn serve_connection(
     engine: &QueryEngine,
     limits: ConnLimits,
     evictions: &AtomicU64,
+    metrics: &Registry,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(limits.read_timeout))?;
@@ -235,14 +259,16 @@ fn serve_connection(
             return Ok(()); // clean EOF between lines
         }
         let line = String::from_utf8_lossy(&buf);
-        let response = match respond(line.trim_end(), engine, evictions) {
-            Response::Line(s) => s,
+        match respond(line.trim_end(), engine, evictions, metrics) {
+            Response::Line(s) => writeln!(writer, "{s}")?,
+            // Multi-line payloads carry their own framing (the final
+            // `# EOF` line) and their own trailing newline.
+            Response::Multi(s) => writer.write_all(s.as_bytes())?,
             Response::Bye => {
                 writeln!(writer, "BYE")?;
                 return Ok(());
             }
-        };
-        writeln!(writer, "{response}")?;
+        }
         if eof {
             return Ok(()); // final line arrived without a trailing newline
         }
@@ -251,10 +277,68 @@ fn serve_connection(
 
 enum Response {
     Line(String),
+    /// A multi-line body that ends with its own framing (`# EOF\n`).
+    Multi(String),
     Bye,
 }
 
-fn respond(line: &str, engine: &QueryEngine, evictions: &AtomicU64) -> Response {
+/// Record one served query into the per-server registry: a request
+/// counter and a latency histogram sample (microseconds), both labeled
+/// with the query kind so `METRICS` exposes p50/p90/p99 per verb.
+fn record_query(metrics: &Registry, kind: &str, started: Instant) {
+    metrics
+        .counter("degreesketch_queries_total", &[("kind", kind)])
+        .inc();
+    metrics
+        .histogram("degreesketch_query_latency_us", &[("kind", kind)])
+        .observe(started.elapsed().as_micros() as u64);
+}
+
+/// Refresh scrape-time gauges: engine sizing, eviction count, and — when
+/// this engine was accumulated in-process — the comm fabric's message,
+/// checkpoint, recovery and heartbeat-staleness totals (per-rank traffic
+/// under a `rank` label).
+fn scrape_gauges(metrics: &Registry, engine: &QueryEngine, evictions: &AtomicU64) {
+    let g = |name: &str, v: u64| metrics.gauge(name, &[]).set(v);
+    g("degreesketch_server_vertices", engine.num_vertices() as u64);
+    g("degreesketch_server_heap_bytes", engine.heap_bytes() as u64);
+    g(
+        "degreesketch_server_resident_bytes",
+        engine.resident_bytes() as u64,
+    );
+    g(
+        "degreesketch_server_dense_sketches",
+        engine.num_dense_sketches() as u64,
+    );
+    g(
+        "degreesketch_server_evicted_connections",
+        evictions.load(Ordering::Relaxed),
+    );
+    if let Some(cs) = engine.accumulation_stats() {
+        g("degreesketch_comm_messages", cs.messages);
+        g("degreesketch_comm_bytes", cs.bytes);
+        g("degreesketch_comm_flushes", cs.flushes);
+        g("degreesketch_comm_checkpoints", cs.checkpoints);
+        g("degreesketch_comm_restores", cs.restores);
+        g("degreesketch_comm_hb_stale_ms", cs.max_stale_ms);
+        for (r, pr) in cs.per_rank.iter().enumerate() {
+            let rank = r.to_string();
+            metrics
+                .gauge("degreesketch_comm_rank_messages", &[("rank", &rank)])
+                .set(pr.messages);
+            metrics
+                .gauge("degreesketch_comm_rank_bytes", &[("rank", &rank)])
+                .set(pr.bytes);
+        }
+    }
+}
+
+fn respond(
+    line: &str,
+    engine: &QueryEngine,
+    evictions: &AtomicU64,
+    metrics: &Registry,
+) -> Response {
     let mut it = line.split_whitespace();
     let cmd = match it.next() {
         Some(c) => c.to_ascii_uppercase(),
@@ -264,20 +348,25 @@ fn respond(line: &str, engine: &QueryEngine, evictions: &AtomicU64) -> Response 
         it.map(|t| t.parse::<u64>().map_err(|_| format!("bad id {t:?}")))
             .collect()
     };
+    let started = Instant::now();
     match cmd.as_str() {
         "DEG" => match parse_ids(it) {
-            Ok(ids) if ids.len() == 1 => Response::Line(
-                engine
-                    .degree(ids[0])
-                    .map(|d| format!("{d:.3}"))
-                    .unwrap_or_else(|| "NONE".into()),
-            ),
+            Ok(ids) if ids.len() == 1 => {
+                let resp = Response::Line(
+                    engine
+                        .degree(ids[0])
+                        .map(|d| format!("{d:.3}"))
+                        .unwrap_or_else(|| "NONE".into()),
+                );
+                record_query(metrics, "deg", started);
+                resp
+            }
             Ok(_) => Response::Line("ERR usage: DEG <x>".into()),
             Err(e) => Response::Line(format!("ERR {e}")),
         },
         "TRI" => match parse_ids(it) {
             Ok(ids) if ids.len() == 2 => {
-                match engine.intersection(ids[0], ids[1]) {
+                let resp = match engine.intersection(ids[0], ids[1]) {
                     Some(est) => Response::Line(format!(
                         "{:.3} {:.3} {}",
                         est.intersection,
@@ -285,31 +374,45 @@ fn respond(line: &str, engine: &QueryEngine, evictions: &AtomicU64) -> Response 
                         u8::from(est.domination != Domination::None)
                     )),
                     None => Response::Line("NONE".into()),
-                }
+                };
+                record_query(metrics, "tri", started);
+                resp
             }
             Ok(_) => Response::Line("ERR usage: TRI <x> <y>".into()),
             Err(e) => Response::Line(format!("ERR {e}")),
         },
         "JACCARD" => match parse_ids(it) {
-            Ok(ids) if ids.len() == 2 => Response::Line(
-                engine
-                    .jaccard(ids[0], ids[1])
-                    .map(|j| format!("{j:.6}"))
-                    .unwrap_or_else(|| "NONE".into()),
-            ),
+            Ok(ids) if ids.len() == 2 => {
+                let resp = Response::Line(
+                    engine
+                        .jaccard(ids[0], ids[1])
+                        .map(|j| format!("{j:.6}"))
+                        .unwrap_or_else(|| "NONE".into()),
+                );
+                record_query(metrics, "jaccard", started);
+                resp
+            }
             Ok(_) => Response::Line("ERR usage: JACCARD <x> <y>".into()),
             Err(e) => Response::Line(format!("ERR {e}")),
         },
         "UNION" => match parse_ids(it) {
-            Ok(ids) if !ids.is_empty() => Response::Line(
-                engine
-                    .union_cardinality(&ids)
-                    .map(|u| format!("{u:.3}"))
-                    .unwrap_or_else(|| "NONE".into()),
-            ),
+            Ok(ids) if !ids.is_empty() => {
+                let resp = Response::Line(
+                    engine
+                        .union_cardinality(&ids)
+                        .map(|u| format!("{u:.3}"))
+                        .unwrap_or_else(|| "NONE".into()),
+                );
+                record_query(metrics, "union", started);
+                resp
+            }
             Ok(_) => Response::Line("ERR usage: UNION <x> [<y> ...]".into()),
             Err(e) => Response::Line(format!("ERR {e}")),
         },
+        "METRICS" => {
+            scrape_gauges(metrics, engine, evictions);
+            Response::Multi(prom::render(&[metrics, telemetry::registry()]))
+        }
         "STATS" => {
             let mut line = format!(
                 "vertices={} ranks={} p={} mem={} dense={} mode={} \
@@ -326,10 +429,11 @@ fn respond(line: &str, engine: &QueryEngine, evictions: &AtomicU64) -> Response 
             match engine.accumulation_stats() {
                 Some(cs) => {
                     line.push_str(&format!(
-                        " comm={} ckpts={} restores={}",
+                        " comm={} ckpts={} restores={} hb_stale_ms={}",
                         cs.mode.name(),
                         cs.checkpoints,
-                        cs.restores
+                        cs.restores,
+                        cs.max_stale_ms
                     ));
                     for (r, pr) in cs.per_rank.iter().enumerate() {
                         line.push_str(&format!(
@@ -381,6 +485,26 @@ mod tests {
         out
     }
 
+    /// One METRICS scrape: reads the multi-line body through its `# EOF`
+    /// framing line (inclusive).
+    fn scrape_metrics(addr: std::net::SocketAddr) -> String {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        writeln!(w, "METRICS").unwrap();
+        let mut text = String::new();
+        loop {
+            let mut line = String::new();
+            assert!(r.read_line(&mut line).unwrap() > 0, "closed before # EOF");
+            text.push_str(&line);
+            if line.trim_end() == "# EOF" {
+                break;
+            }
+        }
+        writeln!(w, "QUIT").unwrap();
+        text
+    }
+
     #[test]
     fn serves_queries_over_tcp() {
         let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
@@ -415,6 +539,59 @@ mod tests {
         assert!(resp[5].contains("rank1="), "{:?}", resp[5]);
         assert!(resp[6].starts_with("ERR"));
         assert_eq!(resp[7], "BYE");
+        server.stop();
+    }
+
+    #[test]
+    fn metrics_verb_serves_valid_prometheus_text_with_quantiles() {
+        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        // Exercise each timed verb so every per-kind series exists.
+        let _ = ask(
+            addr,
+            &["DEG 0", "DEG 33", "TRI 0 33", "JACCARD 0 1", "UNION 0 33", "QUIT"],
+        );
+        let text = scrape_metrics(addr);
+        // Must pass the minimal Prometheus checker (TYPE lines, cumulative
+        // buckets, # EOF framing).
+        let samples = prom::check_text(&text)
+            .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{text}"));
+        assert!(samples > 10, "suspiciously few samples:\n{text}");
+        for kind in ["deg", "tri", "jaccard", "union"] {
+            assert!(
+                text.contains(&format!(
+                    "degreesketch_queries_total{{kind=\"{kind}\"}}"
+                )),
+                "missing counter for {kind}:\n{text}"
+            );
+            for q in ["0.5", "0.99"] {
+                assert!(
+                    text.contains(&format!(
+                        "degreesketch_query_latency_us_quantiles\
+                         {{kind=\"{kind}\",quantile=\"{q}\"}}"
+                    )),
+                    "missing p{q} for {kind}:\n{text}"
+                );
+            }
+        }
+        // Comm gauges from the in-process accumulation are scraped too.
+        assert!(text.contains("degreesketch_comm_messages"), "{text}");
+        assert!(text.contains("degreesketch_comm_hb_stale_ms"), "{text}");
+        // DEG ran twice above; the counter must say so.
+        assert!(
+            text.contains("degreesketch_queries_total{kind=\"deg\"} 2"),
+            "{text}"
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn stats_reports_hb_staleness_alongside_recovery_counts() {
+        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
+        let resp = ask(server.addr(), &["STATS", "QUIT"]);
+        assert!(resp[0].contains("ckpts="), "{:?}", resp[0]);
+        assert!(resp[0].contains("restores="), "{:?}", resp[0]);
+        assert!(resp[0].contains("hb_stale_ms=0"), "{:?}", resp[0]);
         server.stop();
     }
 

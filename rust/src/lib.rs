@@ -27,4 +27,5 @@ pub mod hll;
 pub mod metrics;
 pub mod runtime;
 pub mod snapshot;
+pub mod telemetry;
 pub mod util;

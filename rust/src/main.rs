@@ -23,6 +23,7 @@
 //!                         [--intersect mle|ix|pjrt] [--exact]
 //! degreesketch exact      --graph g.txt triangles|neighborhoods
 //! degreesketch calibrate-beta --p 8
+//! degreesketch trace      inspect <dir> [--limit N]
 //! degreesketch info
 //! ```
 //!
@@ -41,6 +42,12 @@
 //! on the socket backends: a SIGKILLed worker can be respawned with
 //! `worker --resume <ckpt-dir>` and the epoch resumes from the last
 //! barrier instead of aborting — see `comm.checkpoint_*` config keys).
+//!
+//! Epoch-running subcommands also accept `--trace-dir DIR` (or config
+//! `telemetry.trace_dir`): the fabric streams structured events —
+//! epoch lifecycle, checkpoint commits, recovery cycles, chaos faults —
+//! into per-rank JSONL files under DIR, merged into one timeline by
+//! `degreesketch trace inspect DIR`.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -104,6 +111,7 @@ fn run(argv: &[String]) -> Result<()> {
         "triangles" => cmd_triangles(&args, &config),
         "exact" => cmd_exact(&args),
         "calibrate-beta" => cmd_calibrate(&args),
+        "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         other => bail!("unknown subcommand {other:?} (try --help)"),
     };
@@ -117,7 +125,7 @@ fn print_usage() {
     println!(
         "degreesketch — distributed cardinality sketches on massive graphs\n\
          subcommands: generate accumulate worker query serve snapshot anf \
-         triangles exact calibrate-beta info\n\
+         triangles exact calibrate-beta trace info\n\
          see README.md for full usage"
     );
 }
@@ -236,6 +244,23 @@ fn cmd_worker(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Arm the telemetry trace sink when `--trace-dir` (or config
+/// `telemetry.trace_dir`) names a directory: the driver and every
+/// fabric rank then stream structured events into per-rank JSONL files
+/// there, merged afterwards by `degreesketch trace inspect`.
+fn telemetry_of(args: &Args, config: &Config) -> Result<()> {
+    let dir = args
+        .get("trace-dir")
+        .or_else(|| config.trace_dir())
+        .map(str::to_string);
+    if let Some(dir) = dir {
+        degreesketch::telemetry::set_trace_dir(Path::new(&dir))
+            .with_context(|| format!("arming trace dir {dir:?}"))?;
+        eprintln!("telemetry: tracing fabric events under {dir}");
+    }
+    Ok(())
+}
+
 /// Comm-plane flush policy: `comm.*` config keys overridden by
 /// `--flush-threshold N` and pinned fixed by `--fixed-flush`.
 fn flush_policy_of(args: &Args, config: &Config) -> Result<FlushPolicy> {
@@ -338,6 +363,7 @@ fn cmd_accumulate(args: &Args, config: &Config) -> Result<()> {
     let flush = flush_policy_of(args, config)?;
     let fault = fault_policy_of(args, config)?;
     setup_comm_backend(args, config, backend, ranks)?;
+    telemetry_of(args, config)?;
     args.finish()?;
 
     let stream = MemoryStream::new(edges);
@@ -422,7 +448,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let server = QueryServer::start(engine, &addr)?;
     println!("serving DegreeSketch queries on {}", server.addr());
-    println!("protocol: DEG x | TRI x y | JACCARD x y | UNION x.. | STATS | QUIT");
+    println!(
+        "protocol: DEG x | TRI x y | JACCARD x y | UNION x.. | \
+         STATS | METRICS | QUIT"
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -464,6 +493,7 @@ fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
                 let flush = flush_policy_of(args, config)?;
                 let fault = fault_policy_of(args, config)?;
                 setup_comm_backend(args, config, backend, ranks)?;
+                telemetry_of(args, config)?;
                 args.finish()?;
                 let ds = accumulate_stream(
                     &MemoryStream::new(edges),
@@ -549,19 +579,41 @@ fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
                 let stream = std::net::TcpStream::connect(server.addr())?;
                 let mut w = stream.try_clone()?;
                 let mut r = BufReader::new(stream);
-                for probe in ["STATS", "DEG 0", "QUIT"] {
+                for probe in ["STATS", "DEG 0"] {
                     writeln!(w, "{probe}")?;
                     let mut resp = String::new();
                     r.read_line(&mut resp)?;
                     println!("self-check {probe} -> {}", resp.trim());
                 }
+                // METRICS is the one multi-line verb: read through its
+                // `# EOF` framing line, then validate the exposition.
+                writeln!(w, "METRICS")?;
+                let mut text = String::new();
+                loop {
+                    let mut line = String::new();
+                    if r.read_line(&mut line)? == 0 {
+                        bail!("server closed before # EOF in METRICS");
+                    }
+                    text.push_str(&line);
+                    if line.trim_end() == "# EOF" {
+                        break;
+                    }
+                }
+                let samples = degreesketch::telemetry::prom::check_text(&text)
+                    .map_err(anyhow::Error::msg)
+                    .context("self-check METRICS invalid")?;
+                println!("self-check METRICS -> {samples} samples, valid");
+                writeln!(w, "QUIT")?;
+                let mut resp = String::new();
+                r.read_line(&mut resp)?;
+                println!("self-check QUIT -> {}", resp.trim());
                 server.stop();
                 println!("self-check OK");
                 return Ok(());
             }
             println!(
                 "protocol: DEG x | TRI x y | JACCARD x y | UNION x.. | \
-                 STATS | QUIT"
+                 STATS | METRICS | QUIT"
             );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -583,6 +635,7 @@ fn cmd_anf(args: &Args, config: &Config) -> Result<()> {
     let flush = flush_policy_of(args, config)?;
     let fault = fault_policy_of(args, config)?;
     setup_comm_backend(args, config, backend, ranks)?;
+    telemetry_of(args, config)?;
     let want_exact = args.has("exact");
     args.finish()?;
 
@@ -658,6 +711,7 @@ fn cmd_triangles(args: &Args, config: &Config) -> Result<()> {
     let discard = args.has("discard-dominated")
         || config.get_bool("triangles.discard_dominated", false);
     setup_comm_backend(args, config, backend, ranks)?;
+    telemetry_of(args, config)?;
     args.finish()?;
     if matches!(backend, Backend::Process | Backend::Tcp)
         && intersect_kind == "pjrt"
@@ -800,6 +854,53 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
             .join(", ")
     );
     println!("paste into BETA_TABLE in rust/src/hll/beta.rs");
+    Ok(())
+}
+
+/// `trace inspect <dir>`: merge the per-rank JSONL streams a traced run
+/// wrote under `--trace-dir` into one fabric timeline and print it,
+/// followed by per-kind event counts and the driver's quiescent-barrier
+/// dwell times.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("");
+    if action != "inspect" {
+        bail!("trace action must be inspect, got {action:?}");
+    }
+    let dir = match args.positional.get(1) {
+        Some(d) => d.clone(),
+        None => args.require("dir")?.to_string(),
+    };
+    let limit = args.get_usize("limit", 1000)?;
+    args.finish()?;
+    let tl = degreesketch::telemetry::Timeline::merge_dir(Path::new(&dir))
+        .with_context(|| format!("merging trace streams in {dir:?}"))?;
+    if tl.events.is_empty() {
+        bail!("no trace events under {dir:?} (was the run traced?)");
+    }
+    let rendered = tl.render();
+    let mut shown = 0usize;
+    for line in rendered.lines() {
+        if shown >= limit {
+            println!("... ({} more events; raise --limit)", tl.events.len() - shown);
+            break;
+        }
+        println!("{line}");
+        shown += 1;
+    }
+    println!("-- {} events, {} malformed lines", tl.events.len(), tl.malformed);
+    for (kind, n) in tl.counts_by_kind() {
+        println!("   {kind}: {n}");
+    }
+    let dwells = tl.barrier_dwells_us();
+    if !dwells.is_empty() {
+        for (i, us) in dwells.iter().enumerate() {
+            println!("barrier {}: dwell {us}us", i + 1);
+        }
+    }
     Ok(())
 }
 

@@ -1,15 +1,22 @@
-//! Lightweight metrics: named counters and timers for the coordinator's
-//! observability surface (printed by the CLI with `--metrics`).
+//! Compat shim over [`crate::telemetry`] for the old `--metrics`
+//! surface: named counters and wall timers with the original
+//! `counter k = v` / `timer k = vs` report format.
+//!
+//! The previous implementation took a mutex on *every* increment (and
+//! its fast path re-acquired the same lock it had just released — the
+//! classic check-then-act double-lock). Counters are now backed by a
+//! private [`telemetry::Registry`], so an increment is one shard lookup
+//! plus a relaxed atomic add, and handles can be cached for hot loops.
 
+use crate::telemetry::{Counter, Registry, SampleValue};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 /// A process-wide metrics registry (cheap atomic counters + wall timers).
 #[derive(Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    counters: Registry,
     timers: Mutex<BTreeMap<String, f64>>,
 }
 
@@ -18,18 +25,16 @@ impl Metrics {
         Self::default()
     }
 
-    /// Add `delta` to a named counter.
+    /// Add `delta` to a named counter (single lock acquisition to
+    /// resolve the series, lock-free add after).
     pub fn count(&self, name: &str, delta: u64) {
-        let map = self.counters.lock().unwrap();
-        if let Some(c) = map.get(name) {
-            c.fetch_add(delta, Ordering::Relaxed);
-            return;
-        }
-        drop(map);
-        let mut map = self.counters.lock().unwrap();
-        map.entry(name.to_string())
-            .or_insert_with(|| AtomicU64::new(0))
-            .fetch_add(delta, Ordering::Relaxed);
+        self.counters.counter(name, &[]).add(delta);
+    }
+
+    /// A cacheable handle for hot loops: increments through it touch no
+    /// lock at all.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.counters.counter(name, &[])
     }
 
     /// Time a closure and record its wall seconds under `name` (summed).
@@ -49,10 +54,12 @@ impl Metrics {
     /// Snapshot all counters.
     pub fn counters(&self) -> BTreeMap<String, u64> {
         self.counters
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .snapshot()
+            .into_iter()
+            .filter_map(|s| match s.value {
+                SampleValue::Counter(v) => Some((s.name, v)),
+                _ => None,
+            })
             .collect()
     }
 
@@ -96,5 +103,25 @@ mod tests {
         m.time("work", || std::thread::sleep(std::time::Duration::from_millis(2)));
         assert!(m.timers()["work"] > 0.0);
         assert!(m.report().contains("counter") || m.report().contains("timer"));
+    }
+
+    #[test]
+    fn cached_handles_and_concurrent_counts() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                let c = m.counter("hot");
+                for _ in 0..5_000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counters()["hot"], 20_000);
+        assert!(m.report().contains("counter hot = 20000"));
     }
 }

@@ -1,0 +1,214 @@
+//! Log2-bucketed latency histogram with lock-free recording.
+//!
+//! A value `v` lands in bucket `64 - v.leading_zeros()` (bucket 0 is
+//! reserved for `v == 0`), so bucket `i >= 1` covers `[2^(i-1), 2^i)`.
+//! Quantiles are estimated by walking the cumulative counts to the
+//! bucket containing the requested order statistic and interpolating
+//! linearly inside it — the estimate is therefore always inside the
+//! same power-of-two bucket as the exact order statistic, i.e. within a
+//! factor of 2 of it (property-tested against exact sorts below).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: one for zero plus one per bit position.
+pub const BUCKETS: usize = 65;
+
+/// Which bucket a value lands in.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `i` (the largest value it can hold).
+pub fn bucket_upper(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        64 => u64::MAX,
+        _ => (1u64 << i) - 1,
+    }
+}
+
+/// Inclusive lower bound of bucket `i`.
+pub fn bucket_lower(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        _ => 1u64 << (i - 1),
+    }
+}
+
+/// Lock-free log2 histogram: 65 atomic buckets plus running sum/count.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: [const { AtomicU64::new(0) }; BUCKETS],
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observed values (wrapping on overflow).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// A consistent-enough copy of the bucket counts for rendering.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            buckets,
+            sum: self.sum(),
+            count: buckets.iter().sum(),
+        }
+    }
+
+    /// Estimate the `q`-quantile (`0.0 ..= 1.0`); `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        self.snapshot().quantile(q)
+    }
+}
+
+/// A point-in-time copy of a [`Histogram`]'s state.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub sum: u64,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    /// Estimate the `q`-quantile by interpolating inside the bucket
+    /// that contains the `ceil(q * count)`-th smallest observation.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // Rank of the order statistic we want, 1-based.
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let prev = cum;
+            cum += c;
+            if cum >= target {
+                let lo = bucket_lower(i) as f64;
+                let hi = bucket_upper(i) as f64;
+                let frac = (target - prev) as f64 / c as f64;
+                // Clamp: `hi as f64` rounds up to the next power of two
+                // for i > 53, which would let the cast escape the bucket.
+                let est = (lo + (hi - lo) * frac) as u64;
+                return Some(est.clamp(bucket_lower(i), bucket_upper(i)));
+            }
+        }
+        // Unreachable when count == Σ buckets, but don't panic on a
+        // racy snapshot.
+        Some(bucket_upper(BUCKETS - 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+
+    #[test]
+    fn bucket_bounds_partition_u64() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        for i in 0..BUCKETS {
+            assert_eq!(bucket_of(bucket_lower(i)), i, "lower bound of {i}");
+            assert_eq!(bucket_of(bucket_upper(i)), i, "upper bound of {i}");
+        }
+        // Buckets tile the domain with no gaps.
+        for i in 1..BUCKETS {
+            assert_eq!(bucket_upper(i - 1).wrapping_add(1), bucket_lower(i).max(1));
+        }
+    }
+
+    #[test]
+    fn quantile_empty_and_single() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), None);
+        h.observe(42);
+        let p50 = h.quantile(0.5).unwrap();
+        assert_eq!(bucket_of(p50), bucket_of(42));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.sum(), 42);
+    }
+
+    /// Property: for random samples and random quantiles, the estimate
+    /// lands in the same log2 bucket as the exact order statistic.
+    #[test]
+    fn quantile_matches_exact_bucket() {
+        Cases::new("hist_quantile", 200).run(|rng| {
+            let n = 1 + (rng.next_u64() % 500) as usize;
+            let h = Histogram::new();
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Mix of magnitudes: shift a 64-bit draw by a random amount.
+                let v = rng.next_u64() >> (rng.next_u64() % 64);
+                h.observe(v);
+                xs.push(v);
+            }
+            xs.sort_unstable();
+            for &q in &[0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                let est = h.quantile(q).unwrap();
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let exact = xs[rank - 1];
+                assert_eq!(
+                    bucket_of(est),
+                    bucket_of(exact),
+                    "q={q} n={n} est={est} exact={exact}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn snapshot_count_is_bucket_sum() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 1, 7, 1 << 20, u64::MAX] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 6);
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.buckets[1], 2);
+        assert_eq!(s.buckets[64], 1);
+    }
+}

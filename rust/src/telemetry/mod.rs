@@ -1,0 +1,626 @@
+//! # Telemetry plane
+//!
+//! Fabric-wide observability in four pieces:
+//!
+//! * [`Registry`] — sharded, label-aware metric series: lock-free
+//!   atomic counters and gauges plus log2-bucketed [`hist::Histogram`]s.
+//!   Series lookup takes one shard lock; every subsequent increment on
+//!   the returned handle is a single atomic op (this replaces the old
+//!   `metrics.rs` mutex-per-increment map, which survives only as a
+//!   compat shim over this registry).
+//! * [`trace`] — structured span/event records written as per-rank
+//!   JSONL under `--trace-dir`, merged into one fabric timeline by
+//!   `degreesketch trace inspect`.
+//! * [`wire`] — the TELEM codec leg: CRC'd, generation-qualified
+//!   delta blobs piggybacked on REPORT/STATE frames so workers ship
+//!   telemetry to the driver without new protocol round trips.
+//! * [`prom`] — Prometheus text exposition for the query server's
+//!   `METRICS` verb, with estimated quantiles per histogram.
+//!
+//! ## Routing model
+//!
+//! The free functions [`count`] and [`event`] are callable from any
+//! layer and route by context. A fabric worker (forked process, spawned
+//! `worker` binary, or in-process test thread) calls [`begin_worker`]
+//! at epoch start, which installs a *thread-local* recording context:
+//! counts and events buffer locally, and the socket layer drains them
+//! with [`take_delta`] whenever a REPORT or STATE frame leaves for the
+//! driver. Everything else (driver, sequential/threaded backends, the
+//! query server) records straight into the process-global [`registry`]
+//! and — when a trace dir is armed via [`set_trace_dir`] — the driver
+//! JSONL stream. Thread-locals keep in-process multi-rank tests honest:
+//! each simulated rank records into its own context with no cross-talk.
+
+pub mod hist;
+pub mod prom;
+pub mod trace;
+pub mod wire;
+
+pub use hist::Histogram;
+pub use trace::{Timeline, TraceEvent};
+pub use wire::TelemDelta;
+
+use crate::comm::codec::WireError;
+use crate::hash::xxh64;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::fs::{self, File};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Cap on buffered worker events between two delta ships; overflow is
+/// counted in `TelemDelta::dropped` rather than growing without bound.
+const EVENT_RING_CAP: usize = 8192;
+
+const SHARDS: usize = 16;
+
+/// What a series measures (part of its identity: the same name with a
+/// different kind is a distinct series, so a misuse can't panic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SeriesKind {
+    Counter,
+    Gauge,
+    Hist,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct FullKey {
+    kind: SeriesKind,
+    name: String,
+    labels: Vec<(String, String)>,
+}
+
+#[derive(Debug)]
+enum Series {
+    Counter(AtomicU64),
+    Gauge(AtomicU64),
+    Hist(Histogram),
+}
+
+/// A counter handle: cloneable, increments are single atomic adds.
+#[derive(Clone)]
+pub struct Counter(Arc<Series>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, delta: u64) {
+        if let Series::Counter(v) = &*self.0 {
+            v.fetch_add(delta, Ordering::Relaxed);
+        }
+    }
+    pub fn get(&self) -> u64 {
+        match &*self.0 {
+            Series::Counter(v) => v.load(Ordering::Relaxed),
+            _ => 0,
+        }
+    }
+}
+
+/// A gauge handle: last-write-wins point-in-time value.
+#[derive(Clone)]
+pub struct Gauge(Arc<Series>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        if let Series::Gauge(g) = &*self.0 {
+            g.store(v, Ordering::Relaxed);
+        }
+    }
+    /// Raise to `v` if it exceeds the current value.
+    pub fn raise(&self, v: u64) {
+        if let Series::Gauge(g) = &*self.0 {
+            g.fetch_max(v, Ordering::Relaxed);
+        }
+    }
+    pub fn get(&self) -> u64 {
+        match &*self.0 {
+            Series::Gauge(g) => g.load(Ordering::Relaxed),
+            _ => 0,
+        }
+    }
+}
+
+/// A histogram handle; see [`hist::Histogram`] for bucket semantics.
+#[derive(Clone)]
+pub struct HistHandle(Arc<Series>);
+
+impl HistHandle {
+    pub fn observe(&self, v: u64) {
+        if let Series::Hist(h) = &*self.0 {
+            h.observe(v);
+        }
+    }
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        match &*self.0 {
+            Series::Hist(h) => h.quantile(q),
+            _ => None,
+        }
+    }
+    pub fn count(&self) -> u64 {
+        match &*self.0 {
+            Series::Hist(h) => h.count(),
+            _ => 0,
+        }
+    }
+}
+
+/// One exported sample in a registry snapshot.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub kind: SeriesKind,
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: SampleValue,
+}
+
+#[derive(Debug, Clone)]
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(u64),
+    Hist(hist::HistSnapshot),
+}
+
+/// Sharded series store: one lock per shard on lookup, atomics after.
+pub struct Registry {
+    shards: [Mutex<HashMap<FullKey, Arc<Series>>>; SHARDS],
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self {
+            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+        }
+    }
+
+    fn series(&self, kind: SeriesKind, name: &str, labels: &[(&str, &str)]) -> Arc<Series> {
+        let mut labels: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        labels.sort();
+        let key = FullKey {
+            kind,
+            name: name.to_string(),
+            labels,
+        };
+        let shard = (xxh64(name.as_bytes(), 0x7E1E) as usize) % SHARDS;
+        let mut map = self.shards[shard].lock().unwrap();
+        map.entry(key)
+            .or_insert_with(|| {
+                Arc::new(match kind {
+                    SeriesKind::Counter => Series::Counter(AtomicU64::new(0)),
+                    SeriesKind::Gauge => Series::Gauge(AtomicU64::new(0)),
+                    SeriesKind::Hist => Series::Hist(Histogram::new()),
+                })
+            })
+            .clone()
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        Counter(self.series(SeriesKind::Counter, name, labels))
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        Gauge(self.series(SeriesKind::Gauge, name, labels))
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> HistHandle {
+        HistHandle(self.series(SeriesKind::Hist, name, labels))
+    }
+
+    /// Snapshot every series, sorted by `(name, labels, kind)` so the
+    /// exposition output is deterministic.
+    pub fn snapshot(&self) -> Vec<Sample> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let map = shard.lock().unwrap();
+            for (key, series) in map.iter() {
+                let value = match &**series {
+                    Series::Counter(v) => SampleValue::Counter(v.load(Ordering::Relaxed)),
+                    Series::Gauge(v) => SampleValue::Gauge(v.load(Ordering::Relaxed)),
+                    Series::Hist(h) => SampleValue::Hist(h.snapshot()),
+                };
+                out.push(Sample {
+                    kind: key.kind,
+                    name: key.name.clone(),
+                    labels: key.labels.clone(),
+                    value,
+                });
+            }
+        }
+        out.sort_by(|a, b| {
+            (&a.name, &a.labels, a.kind).cmp(&(&b.name, &b.labels, b.kind))
+        });
+        out
+    }
+}
+
+/// The process-global registry (driver/server-side series; worker
+/// deltas merge into it with a `rank` label on arrival).
+pub fn registry() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+// ---------------------------------------------------------------------
+// Worker-side recording context (thread-local).
+// ---------------------------------------------------------------------
+
+struct WorkerCtx {
+    rank: usize,
+    seq: u64,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+    counters: BTreeMap<String, u64>,
+}
+
+thread_local! {
+    static WORKER: RefCell<Option<WorkerCtx>> = const { RefCell::new(None) };
+}
+
+/// Install a fresh worker recording context on this thread. Called at
+/// the top of every fabric worker epoch; forked children inherit the
+/// parent's thread-locals, so this also resets any driver-side state
+/// they were born with.
+pub fn begin_worker(rank: usize) {
+    WORKER.with(|w| {
+        *w.borrow_mut() = Some(WorkerCtx {
+            rank,
+            seq: 0,
+            events: Vec::new(),
+            dropped: 0,
+            counters: BTreeMap::new(),
+        });
+    });
+}
+
+/// Tear down the worker context (end of epoch); later records route to
+/// the process-global side again.
+pub fn end_worker() {
+    WORKER.with(|w| *w.borrow_mut() = None);
+}
+
+/// True when this thread is recording as a fabric worker.
+pub fn worker_active() -> bool {
+    WORKER.with(|w| w.borrow().is_some())
+}
+
+/// Drain this worker's buffered telemetry into an encoded TELEM blob
+/// stamped with `gen`; `None` when there is nothing to ship (or no
+/// worker context is active).
+pub fn take_delta(gen: u16) -> Option<Vec<u8>> {
+    WORKER.with(|w| {
+        let mut b = w.borrow_mut();
+        let ctx = b.as_mut()?;
+        if ctx.events.is_empty() && ctx.counters.is_empty() && ctx.dropped == 0 {
+            return None;
+        }
+        let delta = TelemDelta {
+            gen,
+            counters: std::mem::take(&mut ctx.counters).into_iter().collect(),
+            events: std::mem::take(&mut ctx.events),
+            dropped: std::mem::take(&mut ctx.dropped),
+        };
+        Some(delta.encode())
+    })
+}
+
+// ---------------------------------------------------------------------
+// Driver-side trace sink.
+// ---------------------------------------------------------------------
+
+struct Sink {
+    dir: PathBuf,
+    driver: File,
+    rank_files: HashMap<usize, File>,
+    /// Highest generation accepted per rank this epoch; stale blobs
+    /// (from a rolled-back worker's pre-recovery life) are dropped.
+    last_gen: HashMap<usize, u16>,
+    seq: u64,
+}
+
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+static SINK_ACTIVE: AtomicBool = AtomicBool::new(false);
+
+/// Arm the driver trace sink: creates `dir` and starts `driver.jsonl`
+/// (truncating any previous run's stream).
+pub fn set_trace_dir(dir: &Path) -> std::io::Result<()> {
+    fs::create_dir_all(dir)?;
+    let driver = File::create(dir.join("driver.jsonl"))?;
+    let mut guard = SINK.lock().unwrap();
+    *guard = Some(Sink {
+        dir: dir.to_path_buf(),
+        driver,
+        rank_files: HashMap::new(),
+        last_gen: HashMap::new(),
+        seq: 0,
+    });
+    SINK_ACTIVE.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// The armed trace dir, if any.
+pub fn trace_dir() -> Option<PathBuf> {
+    SINK.lock().unwrap().as_ref().map(|s| s.dir.clone())
+}
+
+/// Cheap check for call sites that want to skip event formatting when
+/// nothing is recording on this thread or in this process.
+pub fn enabled() -> bool {
+    worker_active() || SINK_ACTIVE.load(Ordering::Acquire)
+}
+
+/// Record a driver-side trace event (rank `-1`); no-op without an
+/// armed sink.
+pub fn driver_event(kind: &str, fields: &[(&str, u64)]) {
+    let mut guard = SINK.lock().unwrap();
+    if let Some(sink) = guard.as_mut() {
+        let ev = TraceEvent {
+            t_us: trace::now_us(),
+            rank: -1,
+            seq: sink.seq,
+            kind: kind.to_string(),
+            fields: fields.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        };
+        sink.seq += 1;
+        let _ = writeln!(sink.driver, "{}", ev.to_jsonl());
+    }
+}
+
+/// Driver marks the start of a fabric epoch: resets per-rank generation
+/// floors (each epoch restarts its own generation sequence) and emits
+/// the `epoch.start` anchor the timeline merge aligns on.
+pub fn driver_epoch_start(ranks: u64, gen: u16) {
+    let mut guard = SINK.lock().unwrap();
+    if let Some(sink) = guard.as_mut() {
+        sink.last_gen.clear();
+    }
+    drop(guard);
+    driver_event("epoch.start", &[("ranks", ranks), ("gen", gen as u64)]);
+}
+
+/// Ingest a worker's TELEM blob received on `rank`'s channel: verify
+/// CRC, drop stale generations, append events to `rank-<r>.jsonl`, and
+/// merge counter deltas into the global registry under a `rank` label.
+pub fn ingest_remote(rank: usize, blob: &[u8]) -> Result<(), WireError> {
+    let mut input = blob;
+    let delta = TelemDelta::decode(&mut input)?;
+    {
+        let mut guard = SINK.lock().unwrap();
+        if let Some(sink) = guard.as_mut() {
+            let floor = sink.last_gen.entry(rank).or_insert(delta.gen);
+            if delta.gen < *floor {
+                return Ok(()); // stale pre-recovery delta
+            }
+            *floor = delta.gen;
+            let dir = sink.dir.clone();
+            let file = match sink.rank_files.entry(rank) {
+                std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    let f = File::create(dir.join(format!("rank-{rank}.jsonl")))
+                        .map_err(|e| WireError::Invalid(format!("trace sink io: {e}")))?;
+                    e.insert(f)
+                }
+            };
+            for ev in &delta.events {
+                let mut ev = ev.clone();
+                ev.rank = rank as i64;
+                let _ = writeln!(file, "{}", ev.to_jsonl());
+            }
+        }
+    }
+    let rank_label = rank.to_string();
+    for (name, d) in &delta.counters {
+        registry().counter(name, &[("rank", &rank_label)]).add(*d);
+    }
+    if delta.dropped > 0 {
+        registry()
+            .counter("degreesketch_trace_events_dropped_total", &[("rank", &rank_label)])
+            .add(delta.dropped);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Context-routed free functions — the API the fabric layers call.
+// ---------------------------------------------------------------------
+
+/// Increment a (label-less) counter. Worker threads buffer the delta
+/// for the next TELEM ship; everything else lands in [`registry`].
+pub fn count(name: &str, delta: u64) {
+    let routed = WORKER.with(|w| {
+        if let Some(ctx) = w.borrow_mut().as_mut() {
+            *ctx.counters.entry(name.to_string()).or_insert(0) += delta;
+            true
+        } else {
+            false
+        }
+    });
+    if !routed {
+        registry().counter(name, &[]).add(delta);
+    }
+}
+
+/// Record a structured trace event. Worker threads buffer it (bounded
+/// by [`EVENT_RING_CAP`]); the driver writes it to `driver.jsonl` when
+/// a trace dir is armed; otherwise it is dropped.
+pub fn event(kind: &str, fields: &[(&str, u64)]) {
+    let routed = WORKER.with(|w| {
+        if let Some(ctx) = w.borrow_mut().as_mut() {
+            if ctx.events.len() >= EVENT_RING_CAP {
+                ctx.dropped += 1;
+            } else {
+                let ev = TraceEvent {
+                    t_us: trace::now_us(),
+                    rank: ctx.rank as i64,
+                    seq: ctx.seq,
+                    kind: kind.to_string(),
+                    fields: fields.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+                };
+                ctx.seq += 1;
+                ctx.events.push(ev);
+            }
+            true
+        } else {
+            false
+        }
+    });
+    if !routed {
+        driver_event(kind, fields);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = Registry::new();
+        let c = r.counter("requests_total", &[("kind", "deg")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same (name, labels) resolves to the same series.
+        assert_eq!(r.counter("requests_total", &[("kind", "deg")]).get(), 5);
+        // Different labels are a different series.
+        assert_eq!(r.counter("requests_total", &[("kind", "tri")]).get(), 0);
+        let g = r.gauge("resident", &[]);
+        g.set(7);
+        g.raise(3);
+        assert_eq!(g.get(), 7);
+        g.raise(11);
+        assert_eq!(g.get(), 11);
+    }
+
+    #[test]
+    fn label_order_is_canonicalized() {
+        let r = Registry::new();
+        r.counter("x", &[("a", "1"), ("b", "2")]).add(2);
+        assert_eq!(r.counter("x", &[("b", "2"), ("a", "1")]).get(), 2);
+    }
+
+    #[test]
+    fn kind_mismatch_is_a_distinct_series_not_a_panic() {
+        let r = Registry::new();
+        r.counter("dual", &[]).add(3);
+        let g = r.gauge("dual", &[]);
+        assert_eq!(g.get(), 0);
+        g.set(9);
+        assert_eq!(r.counter("dual", &[]).get(), 3);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let r = Registry::new();
+        r.counter("b_metric", &[]).add(1);
+        r.counter("a_metric", &[("rank", "1")]).add(2);
+        r.counter("a_metric", &[("rank", "0")]).add(3);
+        r.histogram("lat", &[]).observe(100);
+        let snap = r.snapshot();
+        let names: Vec<_> = snap
+            .iter()
+            .map(|s| (s.name.as_str(), s.labels.clone()))
+            .collect();
+        assert_eq!(
+            names,
+            vec![
+                ("a_metric", vec![("rank".into(), "0".into())]),
+                ("a_metric", vec![("rank".into(), "1".into())]),
+                ("b_metric", vec![]),
+                ("lat", vec![]),
+            ]
+        );
+    }
+
+    #[test]
+    fn concurrent_increments_do_not_lose_counts() {
+        let r = std::sync::Arc::new(Registry::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                let c = r.counter("hot", &[]);
+                for _ in 0..10_000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("hot", &[]).get(), 80_000);
+    }
+
+    #[test]
+    fn worker_context_buffers_and_ships() {
+        std::thread::spawn(|| {
+            begin_worker(3);
+            assert!(worker_active());
+            count("degreesketch_test_ships_total", 2);
+            event("epoch.start", &[("gen", 0)]);
+            event("step.chunk", &[("pos", 10)]);
+            let blob = take_delta(1).expect("delta");
+            let mut input = &blob[..];
+            let delta = TelemDelta::decode(&mut input).unwrap();
+            assert_eq!(delta.gen, 1);
+            assert_eq!(
+                delta.counters,
+                vec![("degreesketch_test_ships_total".to_string(), 2)]
+            );
+            assert_eq!(delta.events.len(), 2);
+            assert_eq!(delta.events[0].kind, "epoch.start");
+            // Drained: nothing further to ship.
+            assert!(take_delta(1).is_none());
+            end_worker();
+            assert!(!worker_active());
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn ingest_drops_stale_generations_once_armed() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsk-telem-test-{}",
+            std::process::id()
+        ));
+        set_trace_dir(&dir).unwrap();
+        driver_epoch_start(2, 0);
+        let fresh = TelemDelta {
+            gen: 2,
+            counters: vec![("degreesketch_test_ingest_total".into(), 5)],
+            events: vec![],
+            dropped: 0,
+        };
+        ingest_remote(9, &fresh.encode()).unwrap();
+        let stale = TelemDelta {
+            gen: 1,
+            counters: vec![("degreesketch_test_ingest_total".into(), 100)],
+            events: vec![],
+            dropped: 0,
+        };
+        ingest_remote(9, &stale.encode()).unwrap();
+        assert_eq!(
+            registry()
+                .counter("degreesketch_test_ingest_total", &[("rank", "9")])
+                .get(),
+            5
+        );
+        // Corrupt blobs are rejected before any state changes.
+        let mut bad = fresh.encode();
+        bad[6] ^= 0x40;
+        assert!(ingest_remote(9, &bad).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,337 @@
+//! Prometheus text-format exposition for [`Registry`] snapshots.
+//!
+//! Counters and gauges render as plain sample lines; histograms render
+//! as the standard `_bucket{le=...}`/`_sum`/`_count` family (cumulative
+//! buckets on the log2 upper bounds) *plus* a summary-style
+//! `<name>_quantiles{quantile="..."}` family with estimated p50/p90/p99
+//! so scrapers that don't do histogram math still see latency
+//! percentiles. Output ends with an OpenMetrics-style `# EOF` line,
+//! which doubles as the framing terminator for the query server's
+//! multi-line `METRICS` response.
+//!
+//! [`check_text`] is a deliberately small validator used by tests and
+//! the CI scrape step: it checks name syntax, TYPE declarations,
+//! label/value shape, and that histogram bucket counts are cumulative.
+
+use super::hist::{bucket_upper, BUCKETS};
+use super::{Registry, Sample, SampleValue, SeriesKind};
+use std::fmt::Write as _;
+
+/// Quantiles exported for every histogram family.
+pub const QUANTILES: &[(f64, &str)] = &[(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")];
+
+/// Render the concatenated snapshots of `registries` as Prometheus
+/// text. Series names must be disjoint across registries (ours are
+/// prefixed per subsystem); families are emitted in sorted name order.
+pub fn render(registries: &[&Registry]) -> String {
+    let mut samples: Vec<Sample> = Vec::new();
+    for r in registries {
+        samples.extend(r.snapshot());
+    }
+    samples.sort_by(|a, b| (&a.name, &a.labels, a.kind).cmp(&(&b.name, &b.labels, b.kind)));
+
+    let mut out = String::new();
+    let mut last_family: Option<(String, SeriesKind)> = None;
+    for s in &samples {
+        let family = (s.name.clone(), s.kind);
+        if last_family.as_ref() != Some(&family) {
+            let type_name = match s.kind {
+                SeriesKind::Counter => "counter",
+                SeriesKind::Gauge => "gauge",
+                SeriesKind::Hist => "histogram",
+            };
+            let _ = writeln!(out, "# TYPE {} {}", s.name, type_name);
+            if s.kind == SeriesKind::Hist {
+                let _ = writeln!(out, "# TYPE {}_quantiles summary", s.name);
+            }
+            last_family = Some(family);
+        }
+        match &s.value {
+            SampleValue::Counter(v) | SampleValue::Gauge(v) => {
+                let _ = writeln!(out, "{}{} {}", s.name, labels_text(&s.labels, &[]), v);
+            }
+            SampleValue::Hist(h) => {
+                let top = (0..BUCKETS).rev().find(|&i| h.buckets[i] != 0);
+                let mut cum = 0u64;
+                if let Some(top) = top {
+                    for (i, &c) in h.buckets.iter().enumerate().take(top + 1) {
+                        cum += c;
+                        let le = bucket_upper(i).to_string();
+                        let _ = writeln!(
+                            out,
+                            "{}_bucket{} {}",
+                            s.name,
+                            labels_text(&s.labels, &[("le", &le)]),
+                            cum
+                        );
+                    }
+                }
+                let _ = writeln!(
+                    out,
+                    "{}_bucket{} {}",
+                    s.name,
+                    labels_text(&s.labels, &[("le", "+Inf")]),
+                    h.count
+                );
+                let _ = writeln!(out, "{}_sum{} {}", s.name, labels_text(&s.labels, &[]), h.sum);
+                let _ = writeln!(
+                    out,
+                    "{}_count{} {}",
+                    s.name,
+                    labels_text(&s.labels, &[]),
+                    h.count
+                );
+                for &(q, qs) in QUANTILES {
+                    if let Some(v) = h.quantile(q) {
+                        let _ = writeln!(
+                            out,
+                            "{}_quantiles{} {}",
+                            s.name,
+                            labels_text(&s.labels, &[("quantile", qs)]),
+                            v
+                        );
+                    }
+                }
+            }
+        }
+    }
+    out.push_str("# EOF\n");
+    out
+}
+
+fn labels_text(labels: &[(String, String)], extra: &[(&str, &str)]) -> String {
+    if labels.is_empty() && extra.is_empty() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    let mut first = true;
+    for (k, v) in labels
+        .iter()
+        .map(|(k, v)| (k.as_str(), v.as_str()))
+        .chain(extra.iter().copied())
+    {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(out, "{}=\"{}\"", k, escape_label(v));
+    }
+    out.push('}');
+    out
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+// ---------------------------------------------------------------------
+// Minimal format checker (tests / CI scrape assertions).
+// ---------------------------------------------------------------------
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .next()
+            .is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Validate Prometheus text output: every sample line must parse, its
+/// base family must be TYPE-declared first, and histogram `_bucket`
+/// series must be cumulative in declaration order. Returns the number
+/// of sample lines on success.
+pub fn check_text(text: &str) -> Result<usize, String> {
+    let mut declared: Vec<(String, String)> = Vec::new(); // (name, type)
+    let mut samples = 0usize;
+    let mut last_bucket: Option<(String, u64)> = None; // (series w/o le, cum)
+    let mut saw_eof = false;
+    for (no, line) in text.lines().enumerate() {
+        let err = |msg: &str| Err(format!("line {}: {} in {:?}", no + 1, msg, line));
+        if saw_eof {
+            return err("content after # EOF");
+        }
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            if rest == "EOF" {
+                saw_eof = true;
+                continue;
+            }
+            if let Some(decl) = rest.strip_prefix("TYPE ") {
+                let mut parts = decl.split_whitespace();
+                let (Some(name), Some(ty), None) = (parts.next(), parts.next(), parts.next())
+                else {
+                    return err("malformed TYPE");
+                };
+                if !valid_name(name) {
+                    return err("bad family name");
+                }
+                if !["counter", "gauge", "histogram", "summary"].contains(&ty) {
+                    return err("unknown family type");
+                }
+                declared.push((name.to_string(), ty.to_string()));
+            }
+            continue; // other comments are fine
+        }
+        // Sample line: name[{labels}] value
+        let (series, value) = line.rsplit_once(' ').ok_or_else(|| {
+            format!("line {}: no value in {:?}", no + 1, line)
+        })?;
+        if value.parse::<f64>().is_err() && value != "+Inf" && value != "NaN" {
+            return err("unparsable value");
+        }
+        let (name, labels) = match series.split_once('{') {
+            Some((n, rest)) => {
+                let Some(body) = rest.strip_suffix('}') else {
+                    return err("unterminated label set");
+                };
+                (n, Some(body))
+            }
+            None => (series, None),
+        };
+        if !valid_name(name) {
+            return err("bad metric name");
+        }
+        let mut le: Option<String> = None;
+        if let Some(body) = labels {
+            for pair in split_label_pairs(body) {
+                let Some((k, v)) = pair.split_once('=') else {
+                    return err("label without =");
+                };
+                if !valid_name(k) {
+                    return err("bad label name");
+                }
+                if !(v.starts_with('"') && v.ends_with('"') && v.len() >= 2) {
+                    return err("unquoted label value");
+                }
+                if k == "le" {
+                    le = Some(v[1..v.len() - 1].to_string());
+                }
+            }
+        }
+        // The family must be declared: exact name, or a histogram/summary
+        // suffix of a declared family.
+        let family_ok = declared.iter().any(|(n, ty)| {
+            name == n
+                || (ty == "histogram"
+                    && ["_bucket", "_sum", "_count"]
+                        .iter()
+                        .any(|sfx| name == format!("{n}{sfx}")))
+        });
+        if !family_ok {
+            return err("sample for undeclared family");
+        }
+        // Cumulative-bucket check, per contiguous bucket run.
+        if name.ends_with("_bucket") {
+            let base = series.replace(",le=", ",\0le=").replace("{le=", "{\0le=");
+            let base = base.split('\0').next().unwrap_or("").to_string();
+            let v: u64 = value.parse().map_err(|_| {
+                format!("line {}: non-integer bucket count in {:?}", no + 1, line)
+            })?;
+            if le.is_none() {
+                return err("_bucket without le label");
+            }
+            if let Some((prev_base, prev_cum)) = &last_bucket {
+                if *prev_base == base && v < *prev_cum {
+                    return err("bucket counts not cumulative");
+                }
+            }
+            last_bucket = Some((base, v));
+        } else {
+            last_bucket = None;
+        }
+        samples += 1;
+    }
+    if !saw_eof {
+        return Err("missing # EOF terminator".to_string());
+    }
+    Ok(samples)
+}
+
+/// Split a label body on commas that sit between pairs (label values
+/// are quoted and may contain escaped quotes, but never raw commas in
+/// our output; this keeps the checker honest about quoting anyway).
+fn split_label_pairs(body: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_quotes = false;
+    let mut escaped = false;
+    for (i, c) in body.char_indices() {
+        match c {
+            '\\' if in_quotes => escaped = !escaped,
+            '"' if !escaped => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                out.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => escaped = false,
+        }
+    }
+    if start < body.len() {
+        out.push(&body[start..]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+
+    #[test]
+    fn renders_and_validates() {
+        let r = Registry::new();
+        r.counter("degreesketch_queries_total", &[("kind", "deg")]).add(3);
+        r.counter("degreesketch_queries_total", &[("kind", "tri")]).add(1);
+        r.gauge("degreesketch_snapshot_resident", &[]).set(42);
+        let h = r.histogram("degreesketch_query_latency_us", &[("kind", "deg")]);
+        for v in [3u64, 5, 9, 120, 4000] {
+            h.observe(v);
+        }
+        let text = render(&[&r]);
+        let n = check_text(&text).expect("valid exposition");
+        assert!(n >= 8, "expected a rich sample set, got {n}:\n{text}");
+        assert!(text.contains("# TYPE degreesketch_query_latency_us histogram"));
+        assert!(text.contains("degreesketch_query_latency_us_bucket{kind=\"deg\",le=\"+Inf\"} 5"));
+        assert!(text.contains("degreesketch_query_latency_us_count{kind=\"deg\"} 5"));
+        assert!(text.contains("quantile=\"0.5\""));
+        assert!(text.contains("quantile=\"0.99\""));
+        assert!(text.ends_with("# EOF\n"));
+    }
+
+    #[test]
+    fn two_registries_concatenate() {
+        let a = Registry::new();
+        let b = Registry::new();
+        a.counter("degreesketch_server_requests_total", &[]).add(1);
+        b.counter("degreesketch_fabric_restores_total", &[]).add(2);
+        let text = render(&[&a, &b]);
+        check_text(&text).unwrap();
+        assert!(text.contains("degreesketch_server_requests_total 1"));
+        assert!(text.contains("degreesketch_fabric_restores_total 2"));
+    }
+
+    #[test]
+    fn checker_rejects_malformed_output() {
+        assert!(check_text("no eof at all\n").is_err());
+        assert!(check_text("undeclared_metric 5\n# EOF\n").is_err());
+        assert!(check_text("# TYPE m counter\nm not_a_number\n# EOF\n").is_err());
+        assert!(check_text("# TYPE m counter\nm{l=unquoted} 3\n# EOF\n").is_err());
+        assert!(check_text(
+            "# TYPE h histogram\nh_bucket{le=\"1\"} 5\nh_bucket{le=\"3\"} 2\n# EOF\n"
+        )
+        .is_err());
+        assert!(check_text("# TYPE ok counter\nok 1\n# EOF\n").is_ok());
+    }
+
+    #[test]
+    fn empty_registry_is_still_wellformed() {
+        let text = render(&[&Registry::new()]);
+        assert_eq!(check_text(&text), Ok(0));
+        assert_eq!(text, "# EOF\n");
+    }
+}

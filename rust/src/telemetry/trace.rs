@@ -1,0 +1,363 @@
+//! Structured fabric trace events: JSONL encoding, parsing, and the
+//! cross-rank timeline merge behind `degreesketch trace inspect`.
+//!
+//! Every event carries a monotonic per-process timestamp (`t_us`,
+//! microseconds since the first telemetry call in that process), the
+//! emitting rank (`-1` for the driver), and a per-emitter sequence
+//! number. Clocks are *not* synchronized across processes, so the merge
+//! aligns each rank's stream on its `epoch.start` event and orders by
+//! the resulting relative time; ties break by `(rank, seq)` so the
+//! merged timeline is deterministic regardless of file read order.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Microseconds since the process's telemetry epoch (monotonic).
+pub fn now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    epoch.elapsed().as_micros() as u64
+}
+
+/// One structured trace record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Monotonic microseconds in the emitting process.
+    pub t_us: u64,
+    /// Emitting rank; `-1` is the driver.
+    pub rank: i64,
+    /// Per-emitter sequence number (total order within one stream).
+    pub seq: u64,
+    /// Dotted event kind, e.g. `"ckpt.commit"` or `"chaos.drop"`.
+    pub kind: String,
+    /// Flat numeric payload, insertion-ordered.
+    pub fields: Vec<(String, u64)>,
+}
+
+impl TraceEvent {
+    /// Render as one JSONL line (no trailing newline). Kinds and field
+    /// keys are internal dotted identifiers, so no string escaping is
+    /// needed; `escape_json` guards against future misuse anyway.
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::with_capacity(64);
+        let _ = write!(
+            s,
+            "{{\"t_us\":{},\"rank\":{},\"seq\":{},\"kind\":\"{}\"",
+            self.t_us,
+            self.rank,
+            self.seq,
+            escape_json(&self.kind)
+        );
+        if !self.fields.is_empty() {
+            s.push_str(",\"f\":{");
+            for (i, (k, v)) in self.fields.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                let _ = write!(s, "\"{}\":{}", escape_json(k), v);
+            }
+            s.push('}');
+        }
+        s.push('}');
+        s
+    }
+
+    /// Parse one line produced by [`to_jsonl`]. This is a parser for
+    /// our own flat format, not a general JSON reader; unknown keys are
+    /// rejected so format drift fails loudly.
+    pub fn parse_jsonl(line: &str) -> Option<TraceEvent> {
+        let line = line.trim();
+        let inner = line.strip_prefix('{')?.strip_suffix('}')?;
+        let mut ev = TraceEvent {
+            t_us: 0,
+            rank: 0,
+            seq: 0,
+            kind: String::new(),
+            fields: Vec::new(),
+        };
+        let mut rest = inner;
+        let mut saw_kind = false;
+        while !rest.is_empty() {
+            rest = rest.trim_start_matches(',');
+            let key_end = rest.find("\":")?;
+            let key = rest.strip_prefix('"')?.get(..key_end - 1)?;
+            rest = &rest[key_end + 2..];
+            match key {
+                "t_us" | "rank" | "seq" => {
+                    let end = rest.find(',').unwrap_or(rest.len());
+                    let num = &rest[..end];
+                    match key {
+                        "t_us" => ev.t_us = num.parse().ok()?,
+                        "rank" => ev.rank = num.parse().ok()?,
+                        _ => ev.seq = num.parse().ok()?,
+                    }
+                    rest = &rest[end..];
+                }
+                "kind" => {
+                    let body = rest.strip_prefix('"')?;
+                    let end = body.find('"')?;
+                    ev.kind = body[..end].to_string();
+                    saw_kind = true;
+                    rest = &body[end + 1..];
+                }
+                "f" => {
+                    let body = rest.strip_prefix('{')?;
+                    let end = body.find('}')?;
+                    for pair in body[..end].split(',').filter(|p| !p.is_empty()) {
+                        let (k, v) = pair.split_once(':')?;
+                        let k = k.strip_prefix('"')?.strip_suffix('"')?;
+                        ev.fields.push((k.to_string(), v.parse().ok()?));
+                    }
+                    rest = &body[end + 1..];
+                }
+                _ => return None,
+            }
+        }
+        if saw_kind {
+            Some(ev)
+        } else {
+            None
+        }
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    if s.chars().all(|c| c != '"' && c != '\\' && c >= ' ') {
+        return s.to_string();
+    }
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if c < ' ' => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One event in a merged timeline, with its rank-aligned relative time.
+#[derive(Debug, Clone)]
+pub struct MergedEvent {
+    /// Microseconds since the emitting rank's `epoch.start` (events
+    /// before it get 0).
+    pub t_rel: u64,
+    pub event: TraceEvent,
+}
+
+/// A fabric-wide timeline assembled from per-rank JSONL files.
+#[derive(Debug, Default)]
+pub struct Timeline {
+    pub events: Vec<MergedEvent>,
+    /// Lines that failed to parse (surfaced, not silently dropped).
+    pub malformed: usize,
+}
+
+impl Timeline {
+    /// Merge all `*.jsonl` streams under `dir` (the layout written by
+    /// the driver sink: `driver.jsonl` plus `rank-<r>.jsonl`).
+    pub fn merge_dir(dir: &Path) -> std::io::Result<Timeline> {
+        let mut streams: Vec<Vec<TraceEvent>> = Vec::new();
+        let mut malformed = 0usize;
+        let mut names: Vec<_> = fs::read_dir(dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+            .collect();
+        names.sort();
+        for path in names {
+            let text = fs::read_to_string(&path)?;
+            let mut stream = Vec::new();
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                match TraceEvent::parse_jsonl(line) {
+                    Some(ev) => stream.push(ev),
+                    None => malformed += 1,
+                }
+            }
+            streams.push(stream);
+        }
+        Ok(Self::merge_streams(streams, malformed))
+    }
+
+    /// Deterministic merge: align each stream on its first
+    /// `epoch.start`, then sort by `(t_rel, rank, seq)`.
+    pub fn merge_streams(streams: Vec<Vec<TraceEvent>>, malformed: usize) -> Timeline {
+        let mut events = Vec::new();
+        for stream in streams {
+            let base = stream
+                .iter()
+                .find(|e| e.kind == "epoch.start")
+                .map(|e| e.t_us)
+                .unwrap_or_else(|| stream.iter().map(|e| e.t_us).min().unwrap_or(0));
+            for ev in stream {
+                events.push(MergedEvent {
+                    t_rel: ev.t_us.saturating_sub(base),
+                    event: ev,
+                });
+            }
+        }
+        events.sort_by_key(|m| (m.t_rel, m.event.rank, m.event.seq));
+        Timeline { events, malformed }
+    }
+
+    /// Count events per kind (for summaries and assertions).
+    pub fn counts_by_kind(&self) -> BTreeMap<String, u64> {
+        let mut out = BTreeMap::new();
+        for m in &self.events {
+            *out.entry(m.event.kind.clone()).or_insert(0u64) += 1;
+        }
+        out
+    }
+
+    /// Dwell times of the driver's quiescent barriers: microseconds
+    /// between each `barrier.begin` and the next `barrier.end`, paired
+    /// in driver-sequence order.
+    pub fn barrier_dwells_us(&self) -> Vec<u64> {
+        let mut driver: Vec<&TraceEvent> = self
+            .events
+            .iter()
+            .map(|m| &m.event)
+            .filter(|e| e.rank == -1)
+            .collect();
+        driver.sort_by_key(|e| e.seq);
+        let mut dwells = Vec::new();
+        let mut open: Option<u64> = None;
+        for ev in driver {
+            match ev.kind.as_str() {
+                "barrier.begin" => open = Some(ev.t_us),
+                "barrier.end" => {
+                    if let Some(t0) = open.take() {
+                        dwells.push(ev.t_us.saturating_sub(t0));
+                    }
+                }
+                _ => {}
+            }
+        }
+        dwells
+    }
+
+    /// Render the merged timeline as human-readable text (the body of
+    /// `trace inspect`).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for m in &self.events {
+            let who = if m.event.rank < 0 {
+                "driver".to_string()
+            } else {
+                format!("rank{}", m.event.rank)
+            };
+            let _ = write!(out, "{:>10}us {:>8} {}", m.t_rel, who, m.event.kind);
+            for (k, v) in &m.event.fields {
+                let _ = write!(out, " {k}={v}");
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+
+    fn ev(t_us: u64, rank: i64, seq: u64, kind: &str, fields: &[(&str, u64)]) -> TraceEvent {
+        TraceEvent {
+            t_us,
+            rank,
+            seq,
+            kind: kind.to_string(),
+            fields: fields.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trip() {
+        let e = ev(123, 2, 7, "ckpt.commit", &[("barrier", 3), ("gen", 1)]);
+        let line = e.to_jsonl();
+        assert_eq!(TraceEvent::parse_jsonl(&line), Some(e));
+        let bare = ev(0, -1, 0, "epoch.start", &[]);
+        assert_eq!(TraceEvent::parse_jsonl(&bare.to_jsonl()), Some(bare));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert_eq!(TraceEvent::parse_jsonl("not json"), None);
+        assert_eq!(TraceEvent::parse_jsonl("{\"t_us\":1}"), None); // no kind
+        assert_eq!(TraceEvent::parse_jsonl("{\"bogus\":1,\"kind\":\"x\"}"), None);
+    }
+
+    #[test]
+    fn merge_aligns_on_epoch_start_and_is_deterministic() {
+        // Rank 0's clock starts 1000us "later" than rank 1's; alignment
+        // on epoch.start must interleave their steps correctly.
+        let r0 = vec![
+            ev(1000, 0, 0, "epoch.start", &[]),
+            ev(1010, 0, 1, "step.chunk", &[("pos", 1)]),
+        ];
+        let r1 = vec![
+            ev(5, 1, 0, "epoch.start", &[]),
+            ev(20, 1, 1, "step.chunk", &[("pos", 1)]),
+        ];
+        let a = Timeline::merge_streams(vec![r0.clone(), r1.clone()], 0);
+        let b = Timeline::merge_streams(vec![r1, r0], 0);
+        let kinds_a: Vec<_> = a.events.iter().map(|m| (m.t_rel, m.event.rank)).collect();
+        let kinds_b: Vec<_> = b.events.iter().map(|m| (m.t_rel, m.event.rank)).collect();
+        assert_eq!(kinds_a, kinds_b);
+        assert_eq!(kinds_a, vec![(0, 0), (0, 1), (10, 0), (15, 1)]);
+    }
+
+    /// Property: merging randomly shuffled copies of the same streams
+    /// yields the identical timeline.
+    #[test]
+    fn merge_is_order_invariant() {
+        Cases::new("trace_merge_determinism", 50).run(|rng| {
+            let ranks = 2 + (rng.next_u64() % 3) as i64;
+            let mut streams = Vec::new();
+            for r in 0..ranks {
+                let base = rng.next_u64() % 10_000;
+                let n = 1 + (rng.next_u64() % 20) as u64;
+                let mut s = vec![ev(base, r, 0, "epoch.start", &[])];
+                for i in 1..n {
+                    s.push(ev(
+                        base + i * (1 + rng.next_u64() % 50),
+                        r,
+                        i,
+                        "step.chunk",
+                        &[("i", i)],
+                    ));
+                }
+                streams.push(s);
+            }
+            let reference = Timeline::merge_streams(streams.clone(), 0);
+            rng.shuffle(&mut streams);
+            let shuffled = Timeline::merge_streams(streams, 0);
+            let key = |t: &Timeline| {
+                t.events
+                    .iter()
+                    .map(|m| (m.t_rel, m.event.rank, m.event.seq))
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(key(&reference), key(&shuffled));
+        });
+    }
+
+    #[test]
+    fn barrier_dwells_pair_begin_end() {
+        let driver = vec![
+            ev(10, -1, 0, "epoch.start", &[]),
+            ev(100, -1, 1, "barrier.begin", &[("barrier", 1)]),
+            ev(150, -1, 2, "barrier.end", &[("barrier", 1)]),
+            ev(200, -1, 3, "barrier.begin", &[("barrier", 2)]),
+            ev(280, -1, 4, "barrier.end", &[("barrier", 2)]),
+        ];
+        let tl = Timeline::merge_streams(vec![driver], 0);
+        assert_eq!(tl.barrier_dwells_us(), vec![50, 80]);
+    }
+}

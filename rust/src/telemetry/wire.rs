@@ -1,0 +1,288 @@
+//! The TELEM codec leg: worker→driver telemetry deltas piggybacked on
+//! REPORT and STATE frames.
+//!
+//! A delta blob is self-delimiting and self-checking so it can ride as
+//! an optional trailing extension of an existing frame payload:
+//!
+//! ```text
+//! "DTEL" | ver u8 | gen u16 | n_counters u32 | {name_len u16, name, delta u64}*
+//!        | n_events u32 | {t_us u64, seq u64, kind_len u16, kind,
+//!                          n_fields u8, {key_len u16, key, val u64}*}*
+//!        | dropped u64 | crc32 u32
+//! ```
+//!
+//! The CRC covers every preceding byte and is verified *first*, so any
+//! single byte flip anywhere in the blob is rejected before parsing
+//! (property-tested below). `gen` carries the worker's fabric
+//! generation; the driver sink drops blobs from stale generations so a
+//! rolled-back worker cannot double-count its pre-recovery deltas.
+
+use super::trace::TraceEvent;
+use crate::comm::codec::{get_u32, get_u64, put_u32, put_u64, WireError};
+use crate::util::crc32::crc32;
+
+const MAGIC: &[u8; 4] = b"DTEL";
+const VERSION: u8 = 1;
+
+/// Defensive parse caps — a corrupt length field must not allocate.
+const MAX_COUNTERS: u32 = 4096;
+const MAX_EVENTS: u32 = 1 << 17;
+const MAX_NAME: u16 = 256;
+const MAX_FIELDS: u8 = 16;
+
+/// One worker telemetry delta: counter increments since the last ship
+/// plus buffered trace events.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TelemDelta {
+    /// Fabric generation the delta was recorded under.
+    pub gen: u16,
+    /// `(metric name, increment)` pairs.
+    pub counters: Vec<(String, u64)>,
+    /// Trace events buffered since the last ship.
+    pub events: Vec<TraceEvent>,
+    /// Events discarded because the ring was full.
+    pub dropped: u64,
+}
+
+impl TelemDelta {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.events.is_empty() && self.dropped == 0
+    }
+
+    /// Encode to a self-checking blob.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION);
+        out.extend_from_slice(&self.gen.to_le_bytes());
+        put_u32(&mut out, self.counters.len() as u32);
+        for (name, delta) in &self.counters {
+            put_str(&mut out, name);
+            put_u64(&mut out, *delta);
+        }
+        put_u32(&mut out, self.events.len() as u32);
+        for ev in &self.events {
+            put_u64(&mut out, ev.t_us);
+            put_u64(&mut out, ev.seq);
+            put_str(&mut out, &ev.kind);
+            out.push(ev.fields.len().min(MAX_FIELDS as usize) as u8);
+            for (k, v) in ev.fields.iter().take(MAX_FIELDS as usize) {
+                put_str(&mut out, k);
+                put_u64(&mut out, *v);
+            }
+        }
+        put_u64(&mut out, self.dropped);
+        let crc = crc32(&out);
+        put_u32(&mut out, crc);
+        out
+    }
+
+    /// Decode a blob, consuming `input` exactly. The CRC is verified
+    /// over the whole slice before any field is trusted.
+    pub fn decode(input: &mut &[u8]) -> Result<TelemDelta, WireError> {
+        let buf = *input;
+        if buf.len() < MAGIC.len() + 1 + 2 + 4 + 4 + 8 + 4 {
+            return Err(WireError::Truncated);
+        }
+        let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+        let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        let actual = crc32(body);
+        if actual != stored {
+            return Err(WireError::BadCrc { stored, actual });
+        }
+        let mut rest = body;
+        if rest[..4] != *MAGIC {
+            return Err(WireError::Invalid("telem magic".into()));
+        }
+        rest = &rest[4..];
+        if rest[0] != VERSION {
+            return Err(WireError::Invalid("telem version".into()));
+        }
+        let gen = u16::from_le_bytes([rest[1], rest[2]]);
+        rest = &rest[3..];
+        let mut out = TelemDelta {
+            gen,
+            ..Default::default()
+        };
+        let n_counters = get_u32(&mut rest)?;
+        if n_counters > MAX_COUNTERS {
+            return Err(WireError::Invalid("telem counter count".into()));
+        }
+        for _ in 0..n_counters {
+            let name = get_str(&mut rest)?;
+            let delta = get_u64(&mut rest)?;
+            out.counters.push((name, delta));
+        }
+        let n_events = get_u32(&mut rest)?;
+        if n_events > MAX_EVENTS {
+            return Err(WireError::Invalid("telem event count".into()));
+        }
+        for _ in 0..n_events {
+            let t_us = get_u64(&mut rest)?;
+            let seq = get_u64(&mut rest)?;
+            let kind = get_str(&mut rest)?;
+            if rest.is_empty() {
+                return Err(WireError::Truncated);
+            }
+            let n_fields = rest[0];
+            rest = &rest[1..];
+            if n_fields > MAX_FIELDS {
+                return Err(WireError::Invalid("telem field count".into()));
+            }
+            let mut fields = Vec::with_capacity(n_fields as usize);
+            for _ in 0..n_fields {
+                let k = get_str(&mut rest)?;
+                let v = get_u64(&mut rest)?;
+                fields.push((k, v));
+            }
+            out.events.push(TraceEvent {
+                t_us,
+                // Rank is assigned by the driver sink from the channel
+                // the blob arrived on — the wire doesn't carry it.
+                rank: 0,
+                seq,
+                kind,
+                fields,
+            });
+        }
+        out.dropped = get_u64(&mut rest)?;
+        if !rest.is_empty() {
+            return Err(WireError::Invalid("telem trailing bytes".into()));
+        }
+        *input = &[];
+        Ok(out)
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = &s.as_bytes()[..s.len().min(MAX_NAME as usize)];
+    out.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+    out.extend_from_slice(bytes);
+}
+
+fn get_str(input: &mut &[u8]) -> Result<String, WireError> {
+    if input.len() < 2 {
+        return Err(WireError::Truncated);
+    }
+    let len = u16::from_le_bytes([input[0], input[1]]) as usize;
+    if len > MAX_NAME as usize {
+        return Err(WireError::Invalid("telem name length".into()));
+    }
+    let rest = &input[2..];
+    if rest.len() < len {
+        return Err(WireError::Truncated);
+    }
+    let s = std::str::from_utf8(&rest[..len])
+        .map_err(|_| WireError::Invalid("telem name utf8".into()))?
+        .to_string();
+    *input = &rest[len..];
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+
+    fn sample(gen: u16) -> TelemDelta {
+        TelemDelta {
+            gen,
+            counters: vec![
+                ("degreesketch_chaos_faults_total".into(), 3),
+                ("degreesketch_fabric_hb_stale_ms".into(), 1200),
+            ],
+            events: vec![
+                TraceEvent {
+                    t_us: 10,
+                    rank: 0,
+                    seq: 0,
+                    kind: "epoch.start".into(),
+                    fields: vec![],
+                },
+                TraceEvent {
+                    t_us: 55,
+                    rank: 0,
+                    seq: 1,
+                    kind: "ckpt.store".into(),
+                    fields: vec![("barrier".into(), 2), ("bytes".into(), 9000)],
+                },
+            ],
+            dropped: 1,
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        for d in [TelemDelta::default(), sample(0), sample(7)] {
+            let blob = d.encode();
+            let mut input = &blob[..];
+            let back = TelemDelta::decode(&mut input).expect("decode");
+            assert!(input.is_empty());
+            assert_eq!(back.gen, d.gen);
+            assert_eq!(back.counters, d.counters);
+            assert_eq!(back.dropped, d.dropped);
+            assert_eq!(back.events.len(), d.events.len());
+            for (a, b) in back.events.iter().zip(&d.events) {
+                assert_eq!((a.t_us, a.seq, &a.kind, &a.fields), (b.t_us, b.seq, &b.kind, &b.fields));
+            }
+        }
+    }
+
+    /// Every single byte flip anywhere in the blob must be rejected.
+    #[test]
+    fn any_byte_flip_is_rejected() {
+        let blob = sample(3).encode();
+        for i in 0..blob.len() {
+            for bit in [0x01u8, 0x80] {
+                let mut bad = blob.clone();
+                bad[i] ^= bit;
+                let mut input = &bad[..];
+                assert!(
+                    TelemDelta::decode(&mut input).is_err(),
+                    "flip at byte {i} bit {bit:#x} was accepted"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_is_rejected() {
+        let blob = sample(1).encode();
+        for cut in 0..blob.len() {
+            let mut input = &blob[..cut];
+            assert!(TelemDelta::decode(&mut input).is_err(), "cut at {cut}");
+        }
+    }
+
+    /// Random structurally-valid deltas survive the round trip.
+    #[test]
+    fn round_trip_fuzz() {
+        Cases::new("telem_wire_round_trip", 100).run(|rng| {
+            let mut d = TelemDelta {
+                gen: (rng.next_u64() & 0xFFFF) as u16,
+                dropped: rng.next_u64() % 100,
+                ..Default::default()
+            };
+            for i in 0..(rng.next_u64() % 8) {
+                d.counters.push((format!("metric_{i}"), rng.next_u64()));
+            }
+            for i in 0..(rng.next_u64() % 8) {
+                let mut fields = Vec::new();
+                for j in 0..(rng.next_u64() % 4) {
+                    fields.push((format!("k{j}"), rng.next_u64()));
+                }
+                d.events.push(TraceEvent {
+                    t_us: rng.next_u64() % 1_000_000,
+                    rank: 0,
+                    seq: i,
+                    kind: format!("kind.{}", rng.next_u64() % 10),
+                    fields,
+                });
+            }
+            let blob = d.encode();
+            let mut input = &blob[..];
+            let back = TelemDelta::decode(&mut input).unwrap();
+            assert_eq!(back, d);
+        });
+    }
+}

@@ -1,0 +1,133 @@
+//! End-to-end telemetry plane test: a chaos-enabled resilient
+//! accumulation on the process backend (forked workers over Unix
+//! sockets) with the trace sink armed must leave a merged timeline that
+//! shows the whole story — per-rank epoch lifecycles and checkpoint
+//! stores shipped over the piggybacked TELEM codec leg, injected
+//! network faults recorded by the chaos interposer, checkpoint commits
+//! and barrier dwells on the driver side, and the recovery cycle after
+//! the killed worker re-forks. The sketches must still come out
+//! bit-identical to an undisturbed sequential run: observability must
+//! never perturb answers.
+//!
+//! This lives in its own integration-test binary on purpose: the trace
+//! sink is process-global, and sharing it with unrelated tests would
+//! interleave their driver events into our timeline.
+
+#![cfg(unix)]
+
+use degreesketch::comm::{Backend, Chaos, FaultPolicy, NetChaos};
+use degreesketch::coordinator::sketch::{accumulate_stream, AccumulateOptions};
+use degreesketch::graph::gen::GraphSpec;
+use degreesketch::graph::stream::MemoryStream;
+use degreesketch::hll::HllConfig;
+use degreesketch::telemetry::{self, Timeline};
+
+#[test]
+fn chaos_accumulation_traces_faults_and_recovery_in_merged_timeline() {
+    let dir = std::env::temp_dir().join(format!(
+        "dsk-telemetry-e2e-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    telemetry::set_trace_dir(&dir).unwrap();
+
+    let edges = GraphSpec::parse("ws:600:6:5").unwrap().generate(11);
+    let stream = MemoryStream::new(edges);
+    let cfg = HllConfig::new(8, 0xFA11);
+    let seq = accumulate_stream(
+        &stream,
+        4,
+        cfg,
+        AccumulateOptions {
+            backend: Backend::Sequential,
+            ..Default::default()
+        },
+    );
+
+    // 1800 edges → ~450 per rank → 8 STEP waves of 64; barriers after
+    // waves 2/4/6. Every mesh frame is delayed one read poll (pure
+    // latency, recorded as chaos.delay by each receiving worker). Rank 1
+    // sees ~128 deliveries per wave, so dying at 500 lands around wave 4
+    // — safely past barrier 1 even under hash-partition skew, so the
+    // generation-0 telemetry (chaos events, worker epoch.start) has
+    // already shipped on the barrier's REPORT waves — and safely before
+    // the ~900 total, forcing exactly one re-fork recovery.
+    let fault = FaultPolicy {
+        ckpt_every_chunks: 2,
+        chunk: 64,
+        chaos: Some(Chaos {
+            net: NetChaos {
+                seed: 0xC0FFEE,
+                delay_per_mille: 1000,
+                delay_polls: 1,
+                ..NetChaos::default()
+            },
+            ..Chaos::kill(1, 1, 500)
+        }),
+        ..FaultPolicy::default()
+    };
+    let traced = accumulate_stream(
+        &stream,
+        4,
+        cfg,
+        AccumulateOptions {
+            backend: Backend::Process,
+            fault,
+            ..Default::default()
+        },
+    );
+    assert_eq!(
+        traced.accumulation_stats.restores, 1,
+        "the injected death must trigger exactly one recovery"
+    );
+
+    // Observability never perturbs answers: bit-identical to sequential.
+    assert_eq!(seq.num_vertices(), traced.num_vertices());
+    for (v, h) in seq.iter() {
+        assert_eq!(Some(h), traced.sketch(v), "sketch {v}");
+    }
+
+    let tl = Timeline::merge_dir(&dir).unwrap();
+    assert_eq!(tl.malformed, 0, "malformed trace lines");
+    let counts = tl.counts_by_kind();
+
+    // The driver recorded the recovery cycle (the acceptance criterion).
+    assert!(
+        counts.get("recovery.cycle").copied().unwrap_or(0) >= 1,
+        "no recovery.cycle in timeline: {counts:?}"
+    );
+    // Injected chaos faults made it into the merged timeline via the
+    // TELEM piggyback (workers buffered them; REPORT waves shipped them).
+    let chaos_events: u64 = counts
+        .iter()
+        .filter(|(k, _)| k.starts_with("chaos."))
+        .map(|(_, n)| n)
+        .sum();
+    assert!(chaos_events >= 1, "no injected faults in timeline: {counts:?}");
+    // Driver and worker lifecycles are both present (driver epoch.start
+    // plus at least one shipped worker epoch.start).
+    assert!(
+        counts.get("epoch.start").copied().unwrap_or(0) >= 2,
+        "expected driver + worker epoch.start events: {counts:?}"
+    );
+    assert!(
+        counts.get("epoch.end").copied().unwrap_or(0) >= 1,
+        "no epoch.end in timeline: {counts:?}"
+    );
+    // Checkpoint barriers committed, and their dwell times are derivable
+    // (what `degreesketch trace inspect` prints per barrier).
+    assert!(
+        counts.get("ckpt.commit").copied().unwrap_or(0) >= 1,
+        "no ckpt.commit in timeline: {counts:?}"
+    );
+    assert!(
+        !tl.barrier_dwells_us().is_empty(),
+        "no barrier dwells derived: {counts:?}"
+    );
+    // The rendered timeline names both the driver and a worker rank.
+    let rendered = tl.render();
+    assert!(rendered.contains("driver"), "{rendered}");
+    assert!(rendered.contains("rank"), "{rendered}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
