@@ -676,6 +676,37 @@ impl<S: SocketLike> Conn<S> {
         }
     }
 
+    /// Next complete `\n`-terminated line at the parse cursor, without
+    /// the terminator. The query-serving reactor rides its line protocol
+    /// on the same buffered nonblocking machinery the fabric uses for
+    /// DSKF frames — only the framing differs (newline vs length
+    /// header), so `fill`/`pump_write` and the cursor/compaction logic
+    /// are shared verbatim.
+    pub fn take_line(&mut self) -> Option<Vec<u8>> {
+        let avail = &self.rbuf[self.rpos..];
+        let nl = avail.iter().position(|&b| b == b'\n')?;
+        let line = avail[..nl].to_vec();
+        self.rpos += nl + 1;
+        Some(line)
+    }
+
+    /// Remaining unparsed bytes as one final unterminated line (a client
+    /// whose last request arrived without a trailing newline before EOF
+    /// is still answered, matching the blocking server's behavior).
+    pub fn take_trailing(&mut self) -> Option<Vec<u8>> {
+        if self.rpos == self.rbuf.len() {
+            return None;
+        }
+        let line = self.rbuf[self.rpos..].to_vec();
+        self.rpos = self.rbuf.len();
+        Some(line)
+    }
+
+    /// Whether any queued write bytes are still waiting for the socket.
+    pub fn has_queued_writes(&self) -> bool {
+        !self.wqueue.is_empty()
+    }
+
     pub fn queue_frame(&mut self, frame: Vec<u8>) {
         self.wqueue.push_back(frame);
     }

@@ -11,6 +11,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::comm::{Backend, FaultPolicy, FlushPolicy};
+use crate::coordinator::serve::{ConnLimits, ServeOptions};
 use crate::coordinator::Partitioner;
 use crate::hll::Estimator;
 
@@ -249,6 +250,46 @@ impl Config {
         })
     }
 
+    /// Serving-tier knobs (`serve.*` keys). Validation is light — the
+    /// options struct itself clamps zeros to sane behavior (0 workers =
+    /// auto, 0 cache entries = caching off).
+    pub fn serve_options(&self) -> Result<ServeOptions> {
+        let d = ServeOptions::default();
+        let workers = self.get_int("serve.workers", d.workers as i64);
+        let batch_max = self.get_int("serve.batch_max", d.batch_max as i64);
+        let cache =
+            self.get_int("serve.cache_capacity", d.cache_capacity as i64);
+        let pending = self.get_int("serve.pending_cap", d.pending_cap as i64);
+        let read_ms = self.get_int(
+            "serve.read_timeout_ms",
+            d.limits.read_timeout.as_millis() as i64,
+        );
+        let idle_secs =
+            self.get_int("serve.idle_secs", d.limits.idle_cap.as_secs() as i64);
+        if workers < 0 || batch_max <= 0 || cache < 0 {
+            bail!(
+                "serve.workers/cache_capacity must be >= 0 and \
+                 serve.batch_max positive"
+            );
+        }
+        if pending <= 0 || read_ms <= 0 || idle_secs <= 0 {
+            bail!(
+                "serve.pending_cap, serve.read_timeout_ms and \
+                 serve.idle_secs must be positive"
+            );
+        }
+        Ok(ServeOptions {
+            workers: workers as usize,
+            batch_max: batch_max as usize,
+            cache_capacity: cache as usize,
+            pending_cap: pending as usize,
+            limits: ConnLimits {
+                read_timeout: std::time::Duration::from_millis(read_ms as u64),
+                idle_cap: std::time::Duration::from_secs(idle_secs as u64),
+            },
+        })
+    }
+
     /// Telemetry knob: `telemetry.trace_dir` arms the driver-side trace
     /// sink for epoch-running subcommands — structured fabric events
     /// stream into per-rank JSONL files under that directory, merged
@@ -343,6 +384,29 @@ adaptive_flush = false
         assert_eq!(c2.flush_policy().unwrap().threshold, 512);
         c2.set_override("comm.flush_threshold=0").unwrap();
         assert!(c2.flush_policy().is_err());
+    }
+
+    #[test]
+    fn serve_keys_parse_and_validate() {
+        let c = Config::parse("").unwrap();
+        let d = c.serve_options().unwrap();
+        assert_eq!(d.batch_max, ServeOptions::default().batch_max);
+        assert!(d.resolved_workers() >= 1);
+
+        let mut c2 = Config::parse("").unwrap();
+        c2.set_override("serve.workers=2").unwrap();
+        c2.set_override("serve.batch_max=16").unwrap();
+        c2.set_override("serve.cache_capacity=0").unwrap();
+        c2.set_override("serve.idle_secs=30").unwrap();
+        let o = c2.serve_options().unwrap();
+        assert_eq!(o.workers, 2);
+        assert_eq!(o.resolved_workers(), 2);
+        assert_eq!(o.batch_max, 16);
+        assert_eq!(o.cache_capacity, 0);
+        assert_eq!(o.limits.idle_cap, std::time::Duration::from_secs(30));
+
+        c2.set_override("serve.batch_max=0").unwrap();
+        assert!(c2.serve_options().is_err());
     }
 
     #[test]

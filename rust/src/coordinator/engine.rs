@@ -56,6 +56,11 @@ pub struct QueryEngine {
     data: EngineData,
     mle: MleOptions,
     estimator: Estimator,
+    /// Where a snapshot-backed engine was opened from (path + backing
+    /// mode) — what the serving tier's `RELOAD` verb reopens to flip to
+    /// the next snapshot generation. `None` for heap engines and for
+    /// snapshots wrapped without a path.
+    origin: Option<(std::path::PathBuf, SnapshotMode)>,
 }
 
 impl QueryEngine {
@@ -64,6 +69,7 @@ impl QueryEngine {
             data: EngineData::Heap(ds),
             mle: MleOptions::default(),
             estimator: Estimator::default(),
+            origin: None,
         }
     }
 
@@ -73,7 +79,27 @@ impl QueryEngine {
             data: EngineData::Mapped(snap),
             mle: MleOptions::default(),
             estimator: Estimator::default(),
+            origin: None,
         }
+    }
+
+    /// The snapshot path + mode this engine can be reopened from, when
+    /// it was opened via [`QueryEngine::open_snapshot`]/`load`.
+    pub fn reload_origin(&self) -> Option<(&Path, SnapshotMode)> {
+        self.origin.as_ref().map(|(p, m)| (p.as_path(), *m))
+    }
+
+    /// Reopen the origin snapshot as a fresh engine — the `RELOAD`
+    /// primitive. The current engine keeps serving untouched; on error
+    /// (e.g. a half-written file) nothing changes.
+    pub fn reopen(&self) -> Result<Self> {
+        let Some((path, mode)) = self.reload_origin() else {
+            bail!(
+                "engine has no reload origin (heap-accumulated or wrapped \
+                 without a path); RELOAD needs a snapshot-served engine"
+            );
+        };
+        Self::open_snapshot_with(path, mode)
     }
 
     /// The heap-resident sketch, when this engine owns one (`None` for
@@ -261,12 +287,16 @@ impl QueryEngine {
 
     /// Map a snapshot file (`mmap` where available, heap fallback).
     pub fn open_snapshot(path: &Path) -> Result<Self> {
-        Ok(Self::from_snapshot(MappedSnapshot::open(path)?))
+        Self::open_snapshot_with(path, SnapshotMode::Auto)
     }
 
-    /// Map a snapshot file with an explicit backing mode.
+    /// Map a snapshot file with an explicit backing mode. The path and
+    /// mode are remembered as the engine's reload origin.
     pub fn open_snapshot_with(path: &Path, mode: SnapshotMode) -> Result<Self> {
-        Ok(Self::from_snapshot(MappedSnapshot::open_with(path, mode)?))
+        let mut engine =
+            Self::from_snapshot(MappedSnapshot::open_with(path, mode)?);
+        engine.origin = Some((path.to_path_buf(), mode));
+        Ok(engine)
     }
 
     /// Convert a legacy shard directory into a snapshot file without

@@ -12,12 +12,25 @@
 //! * [`engine`] — persistence + the "leave-behind queryable data
 //!   structure": save/load an accumulated DegreeSketch and answer degree /
 //!   intersection / union queries without touching σ again.
-//! * [`server`] — a line-protocol TCP front end over the engine.
+//! * [`serve`] — the query-serving tier over the engine: an event-driven
+//!   reactor (one thread, every socket), request batching into the
+//!   intersect kernels, a generation-tagged hot-vertex result cache,
+//!   zero-downtime snapshot swaps (`RELOAD`), and the `loadgen` client
+//!   fleet that benchmarks it all.
+//! * [`server`] — compatibility shim re-exporting the serve tier's
+//!   `QueryServer` under its historical path.
+//!
+//! Layering: [`sketch`]/[`anf`]/[`triangles`] *build* estimates over the
+//! comm fabric; [`engine`] *persists* them; [`serve`] *answers* for them
+//! at high QPS. Queries never touch the fabric — a served engine is
+//! read-only and shared, so the serving tier scales with sockets and
+//! cores, not ranks.
 
 pub mod anf;
 pub mod engine;
 pub mod heap;
 pub mod partition;
+pub mod serve;
 pub mod server;
 pub mod sketch;
 pub mod triangles;

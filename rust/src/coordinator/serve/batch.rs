@@ -1,0 +1,307 @@
+//! The request batcher: a bounded pending queue feeding a worker pool
+//! that drains *batches*, not single requests.
+//!
+//! Coalescing happens inside one drained batch: repeated keys are
+//! computed once and fanned out, and every TRI/JACCARD on the same
+//! vertex pair shares a single register-scan + MLE solve (the
+//! `pair_stats_ref`/`mle_intersect_ref` split from the intersect
+//! kernels — one pass over the registers answers both verbs). Each
+//! batch pins one `(engine, generation)` pair up front, so its answers
+//! are computed wholly against one snapshot generation even if a
+//! `RELOAD` lands mid-batch.
+//!
+//! The queue bound doubles as the admission valve: `try_push` refuses
+//! when full and the reactor sheds that request with `ERR overloaded`
+//! instead of letting latency collapse under unbounded queueing.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::hll::{Domination, IntersectionEstimate};
+use crate::snapshot::GenSwap;
+use crate::telemetry::Registry;
+
+use super::super::engine::QueryEngine;
+use super::cache::{CacheKey, ResultCache};
+use super::QueryKind;
+
+/// One admitted query waiting for a worker. `token`/`conn_id` name the
+/// issuing connection (the id guards against slot reuse); `seq` is its
+/// response slot, so the reactor can interleave worker completions with
+/// inline answers in strict request order.
+pub struct Job {
+    pub key: CacheKey,
+    pub token: usize,
+    pub conn_id: u64,
+    pub seq: u64,
+    pub started: Instant,
+}
+
+/// A computed response line headed back to the reactor.
+pub struct Completion {
+    pub token: usize,
+    pub conn_id: u64,
+    pub seq: u64,
+    pub line: String,
+}
+
+/// The bounded pending-request queue (reactor pushes, workers drain).
+pub struct BatchQueue {
+    inner: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    cap: usize,
+    shutdown: AtomicBool,
+}
+
+impl BatchQueue {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Admit a job, or refuse (`false`) when the queue is at capacity —
+    /// the caller sheds the request.
+    pub fn try_push(&self, job: Job) -> bool {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.cap {
+            return false;
+        }
+        q.push_back(job);
+        drop(q);
+        self.cv.notify_one();
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain up to `max` jobs, blocking briefly when empty. An empty
+    /// result means "nothing yet — re-check shutdown and call again".
+    pub fn pop_batch(&self, max: usize) -> Vec<Job> {
+        let mut q = self.inner.lock().unwrap();
+        while q.is_empty() {
+            if self.shutdown.load(Ordering::Relaxed) {
+                return Vec::new();
+            }
+            let (guard, timeout) = self
+                .cv
+                .wait_timeout(q, Duration::from_millis(100))
+                .unwrap();
+            q = guard;
+            if timeout.timed_out() && q.is_empty() {
+                return Vec::new();
+            }
+        }
+        let n = q.len().min(max.max(1));
+        q.drain(..n).collect()
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.cv.notify_all();
+    }
+}
+
+/// Completions travelling back to the reactor, plus the wake that pulls
+/// it out of `poll` to deliver them.
+pub struct Completions {
+    out: Mutex<Vec<Completion>>,
+    wake: super::poller::WakeTx,
+}
+
+impl Completions {
+    pub fn new(wake: super::poller::WakeTx) -> Self {
+        Self {
+            out: Mutex::new(Vec::new()),
+            wake,
+        }
+    }
+
+    pub fn push(&self, mut batch: Vec<Completion>) {
+        if batch.is_empty() {
+            return;
+        }
+        self.out.lock().unwrap().append(&mut batch);
+        self.wake.wake();
+    }
+
+    pub fn drain(&self) -> Vec<Completion> {
+        std::mem::take(&mut *self.out.lock().unwrap())
+    }
+}
+
+/// Everything one query worker needs, shared across the pool.
+pub struct WorkerShared {
+    pub queue: Arc<BatchQueue>,
+    pub engine: Arc<GenSwap<QueryEngine>>,
+    pub cache: Arc<ResultCache>,
+    pub metrics: Arc<Registry>,
+    pub completions: Arc<Completions>,
+    pub batch_max: usize,
+}
+
+/// Record one served query: a request counter and a latency histogram
+/// sample (microseconds, measured from reactor parse time — queue wait
+/// included, it is real serving latency), both labeled with the query
+/// kind so `METRICS` exposes p50/p90/p99 per verb.
+pub fn record_query(metrics: &Registry, kind: &str, started: Instant) {
+    metrics
+        .counter("degreesketch_queries_total", &[("kind", kind)])
+        .inc();
+    metrics
+        .histogram("degreesketch_query_latency_us", &[("kind", kind)])
+        .observe(started.elapsed().as_micros() as u64);
+}
+
+/// Format the answer for one query key — the single source of truth for
+/// response formatting, shared (via the cache) by every serving path,
+/// which is what makes batched/cached answers bit-identical to direct
+/// engine calls. `pairs` memoizes intersection estimates within a
+/// batch: TRI and JACCARD on the same `(x, y)` share one MLE solve.
+fn answer_key(
+    engine: &QueryEngine,
+    key: &CacheKey,
+    pairs: &mut HashMap<(u64, u64), Option<IntersectionEstimate>>,
+) -> String {
+    match key.kind {
+        QueryKind::Deg => engine
+            .degree(key.ids[0])
+            .map(|d| format!("{d:.3}"))
+            .unwrap_or_else(|| "NONE".into()),
+        QueryKind::Tri | QueryKind::Jaccard => {
+            let (x, y) = (key.ids[0], key.ids[1]);
+            let est = pairs
+                .entry((x, y))
+                .or_insert_with(|| engine.intersection(x, y));
+            match (key.kind, est.as_ref()) {
+                (QueryKind::Tri, Some(est)) => format!(
+                    "{:.3} {:.3} {}",
+                    est.intersection,
+                    est.union,
+                    u8::from(est.domination != Domination::None)
+                ),
+                (QueryKind::Jaccard, Some(est)) => {
+                    format!("{:.6}", est.jaccard())
+                }
+                _ => "NONE".into(),
+            }
+        }
+        QueryKind::Union => engine
+            .union_cardinality(&key.ids)
+            .map(|u| format!("{u:.3}"))
+            .unwrap_or_else(|| "NONE".into()),
+    }
+}
+
+/// One worker's life: drain a batch, pin the engine generation, answer
+/// every job (coalescing duplicates and shared pairs), feed the cache,
+/// and hand the completions back to the reactor.
+pub fn run_worker(sh: &WorkerShared) {
+    loop {
+        let batch = sh.queue.pop_batch(sh.batch_max);
+        if batch.is_empty() {
+            if sh.queue.is_shutdown() {
+                return;
+            }
+            continue;
+        }
+        let (engine, gen) = sh.engine.load();
+        sh.metrics
+            .histogram("degreesketch_query_batch_size", &[])
+            .observe(batch.len() as u64);
+        sh.metrics
+            .gauge("degreesketch_query_batch_max", &[])
+            .raise(batch.len() as u64);
+        let mut answers: HashMap<CacheKey, String> = HashMap::new();
+        let mut pairs: HashMap<(u64, u64), Option<IntersectionEstimate>> =
+            HashMap::new();
+        let mut out = Vec::with_capacity(batch.len());
+        for job in batch {
+            let line = match answers.get(&job.key) {
+                Some(l) => l.clone(),
+                None => {
+                    let l = answer_key(&engine, &job.key, &mut pairs);
+                    sh.cache.insert(job.key.clone(), gen, l.clone());
+                    answers.insert(job.key.clone(), l.clone());
+                    l
+                }
+            };
+            record_query(&sh.metrics, job.key.kind.name(), job.started);
+            out.push(Completion {
+                token: job.token,
+                conn_id: job.conn_id,
+                seq: job.seq,
+                line,
+            });
+        }
+        sh.completions.push(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(n: u64) -> Job {
+        Job {
+            key: CacheKey {
+                kind: QueryKind::Deg,
+                ids: vec![n],
+            },
+            token: n as usize,
+            conn_id: n,
+            seq: 0,
+            started: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn queue_bound_refuses_when_full() {
+        let q = BatchQueue::new(2);
+        assert!(q.try_push(job(0)));
+        assert!(q.try_push(job(1)));
+        assert!(!q.try_push(job(2)), "cap=2 must shed the third");
+        let drained = q.pop_batch(10);
+        assert_eq!(drained.len(), 2);
+        assert!(q.try_push(job(3)));
+    }
+
+    #[test]
+    fn pop_batch_caps_at_max() {
+        let q = BatchQueue::new(100);
+        for i in 0..10 {
+            assert!(q.try_push(job(i)));
+        }
+        assert_eq!(q.pop_batch(4).len(), 4);
+        assert_eq!(q.pop_batch(100).len(), 6);
+    }
+
+    #[test]
+    fn shutdown_unblocks_pop() {
+        let q = Arc::new(BatchQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || loop {
+            if q2.pop_batch(8).is_empty() && q2.is_shutdown() {
+                return;
+            }
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.shutdown();
+        h.join().unwrap();
+    }
+}

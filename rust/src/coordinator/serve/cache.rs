@@ -1,0 +1,182 @@
+//! The hot-vertex result cache: sharded, bounded, generation-tagged.
+//!
+//! Keys are whole requests `(kind, ids)`; values are the *formatted
+//! response line* computed by the batcher, so a hit is bit-identical to
+//! a recomputation by construction (the parity contract). Every entry
+//! is tagged with the snapshot generation it was computed under; a
+//! lookup only matches the *current* generation, which makes snapshot
+//! swaps free — no sweep, stale entries just stop matching and are
+//! overwritten or FIFO-churned out.
+//!
+//! Sharding (16 ways, one mutex each) keeps the reactor's lookup and
+//! the workers' inserts from contending on one lock; per-shard FIFO
+//! eviction bounds memory without LRU bookkeeping on the hit path.
+
+use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::QueryKind;
+
+const SHARDS: usize = 16;
+
+/// A whole request as cached: the verb plus its vertex ids, in request
+/// order (TRI x y and TRI y x are distinct keys — symmetric answers are
+/// not assumed, bit-parity is).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub kind: QueryKind,
+    pub ids: Vec<u64>,
+}
+
+struct Shard {
+    map: HashMap<CacheKey, (u64, String)>,
+    /// Insertion order for FIFO eviction (keys in `map` exactly once).
+    order: VecDeque<CacheKey>,
+}
+
+pub struct ResultCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ResultCache {
+    /// `capacity` in total entries; 0 disables the cache entirely.
+    pub fn new(capacity: usize) -> Self {
+        let per_shard_cap = capacity.div_ceil(SHARDS);
+        Self {
+            shards: (0..SHARDS)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        map: HashMap::new(),
+                        order: VecDeque::new(),
+                    })
+                })
+                .collect(),
+            per_shard_cap,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.per_shard_cap > 0
+    }
+
+    fn shard_of(&self, key: &CacheKey) -> &Mutex<Shard> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARDS]
+    }
+
+    /// The cached response line for `key` at generation `gen`, counting
+    /// the hit/miss. Entries from other generations are misses.
+    pub fn get(&self, key: &CacheKey, gen: u64) -> Option<String> {
+        if !self.enabled() {
+            return None;
+        }
+        let shard = self.shard_of(key).lock().unwrap();
+        match shard.map.get(key) {
+            Some((g, line)) if *g == gen => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(line.clone())
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record `line` as the generation-`gen` answer for `key`.
+    pub fn insert(&self, key: CacheKey, gen: u64, line: String) {
+        if !self.enabled() {
+            return;
+        }
+        let mut shard = self.shard_of(&key).lock().unwrap();
+        if shard.map.insert(key.clone(), (gen, line)).is_none() {
+            shard.order.push_back(key);
+            if shard.order.len() > self.per_shard_cap {
+                if let Some(old) = shard.order.pop_front() {
+                    shard.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Live entries across all shards (test/inspection helper).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(kind: QueryKind, ids: &[u64]) -> CacheKey {
+        CacheKey {
+            kind,
+            ids: ids.to_vec(),
+        }
+    }
+
+    #[test]
+    fn hit_only_on_matching_generation() {
+        let c = ResultCache::new(1024);
+        let k = key(QueryKind::Deg, &[7]);
+        assert_eq!(c.get(&k, 0), None);
+        c.insert(k.clone(), 0, "17.000".into());
+        assert_eq!(c.get(&k, 0).as_deref(), Some("17.000"));
+        // a generation flip invalidates without any sweep
+        assert_eq!(c.get(&k, 1), None);
+        c.insert(k.clone(), 1, "18.000".into());
+        assert_eq!(c.get(&k, 1).as_deref(), Some("18.000"));
+        assert_eq!(c.hits(), 2);
+        assert_eq!(c.misses(), 2);
+    }
+
+    #[test]
+    fn ordered_ids_are_distinct_keys() {
+        let c = ResultCache::new(1024);
+        c.insert(key(QueryKind::Tri, &[1, 2]), 0, "a".into());
+        assert_eq!(c.get(&key(QueryKind::Tri, &[2, 1]), 0), None);
+        assert_eq!(c.get(&key(QueryKind::Jaccard, &[1, 2]), 0), None);
+        assert_eq!(c.get(&key(QueryKind::Tri, &[1, 2]), 0).as_deref(), Some("a"));
+    }
+
+    #[test]
+    fn capacity_bounds_entries_fifo() {
+        let c = ResultCache::new(SHARDS); // one entry per shard
+        for v in 0..1000u64 {
+            c.insert(key(QueryKind::Deg, &[v]), 0, v.to_string());
+        }
+        assert!(c.len() <= SHARDS, "len={}", c.len());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let c = ResultCache::new(0);
+        assert!(!c.enabled());
+        c.insert(key(QueryKind::Deg, &[1]), 0, "x".into());
+        assert_eq!(c.get(&key(QueryKind::Deg, &[1]), 0), None);
+        assert!(c.is_empty());
+        // disabled caches count nothing — hit rate stays undefined
+        assert_eq!(c.hits() + c.misses(), 0);
+    }
+}

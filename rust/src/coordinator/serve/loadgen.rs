@@ -1,0 +1,534 @@
+//! `degreesketch loadgen` — a poll-driven load generator for the
+//! serving tier.
+//!
+//! The same trick that lets the reactor serve 10k sockets from one
+//! thread lets a *client* drive 10k sockets from a handful: each worker
+//! thread owns `connections / threads` nonblocking [`Conn`]s in one
+//! poll set, keeps exactly one request in flight per connection, and
+//! times every response. Latencies land in a shared telemetry
+//! histogram, so the reported p50/p90/p99 come from the same
+//! log2-bucket + ring-sampled quantile machinery the server exposes —
+//! one definition of "p99" on both ends of the wire.
+//!
+//! The request mix is deliberately cache-shaped: a configurable
+//! fraction of requests targets a small hot set of vertices (default
+//! 90% → 128 vertices), the rest spray uniformly, so the run measures
+//! the serving tier as deployed — batcher coalescing plus hot-vertex
+//! cache — not just the raw kernel path. With `--live-reload` the
+//! driver issues a `RELOAD` at the halfway mark and requires it to
+//! succeed: the QPS and tail-latency numbers then *include* a snapshot
+//! generation swap, which is the zero-downtime claim stated as a
+//! benchmark.
+//!
+//! Ends with a `STATS` probe for the server-side cache hit/miss and
+//! shed counters and writes the whole summary as JSON (`--out
+//! BENCH_serving.json`): connections, requests, error count, wall
+//! time, QPS, latency quantiles (µs), cache hit rate, generation
+//! before/after. Any protocol error, eviction, or failed reload makes
+//! the run fail — the CI e2e gate runs this binary directly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::socket::Conn;
+use crate::hash::Xoshiro256ss;
+use crate::telemetry::Registry;
+
+use super::poller::{self, fd_of, PollSlot};
+
+/// Knobs for one load-generation run (CLI flags map 1:1).
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Server address, e.g. `127.0.0.1:7514`.
+    pub addr: String,
+    /// Concurrent connections across the whole fleet.
+    pub connections: usize,
+    /// Total requests across the fleet (split evenly per connection).
+    pub requests: u64,
+    /// Driver threads; 0 = auto (one per ~2048 connections, ≥2, ≤8).
+    pub threads: usize,
+    /// Hot-set size: this many distinct vertices absorb `hot_fraction`
+    /// of the traffic.
+    pub hot_vertices: usize,
+    /// Share of requests aimed at the hot set (0.0–1.0).
+    pub hot_fraction: f64,
+    pub seed: u64,
+    /// Issue a `RELOAD` at the halfway mark and require `OK`.
+    pub live_reload: bool,
+    /// Write the JSON summary here.
+    pub out: Option<PathBuf>,
+    /// Fail the run if p99 exceeds this bound (the CI latency gate).
+    pub max_p99_ms: Option<f64>,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7514".into(),
+            connections: 64,
+            requests: 10_000,
+            threads: 0,
+            hot_vertices: 128,
+            hot_fraction: 0.9,
+            seed: 0x10AD,
+            live_reload: false,
+            out: None,
+            max_p99_ms: None,
+        }
+    }
+}
+
+impl LoadgenOptions {
+    fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        self.connections.div_ceil(2048).clamp(2, 8)
+    }
+}
+
+/// What one run measured (everything that lands in the JSON summary).
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub connections: usize,
+    pub requests_sent: u64,
+    pub responses_ok: u64,
+    pub errors: u64,
+    pub elapsed: Duration,
+    pub qps: f64,
+    pub p50_us: u64,
+    pub p90_us: u64,
+    pub p99_us: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub shed: u64,
+    pub generation_start: u64,
+    pub generation_end: u64,
+    pub reloaded: bool,
+}
+
+impl LoadgenReport {
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// The summary as a JSON object (hand-rendered; every field is a
+    /// number or bool, so no escaping is needed).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"connections\": {},\n  \"requests_sent\": {},\n  \
+             \"responses_ok\": {},\n  \"errors\": {},\n  \
+             \"elapsed_secs\": {:.3},\n  \"qps\": {:.1},\n  \
+             \"p50_us\": {},\n  \"p90_us\": {},\n  \"p99_us\": {},\n  \
+             \"cache_hits\": {},\n  \"cache_misses\": {},\n  \
+             \"cache_hit_rate\": {:.4},\n  \"shed\": {},\n  \
+             \"generation_start\": {},\n  \"generation_end\": {},\n  \
+             \"reloaded\": {}\n}}\n",
+            self.connections,
+            self.requests_sent,
+            self.responses_ok,
+            self.errors,
+            self.elapsed.as_secs_f64(),
+            self.qps,
+            self.p50_us,
+            self.p90_us,
+            self.p99_us,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_hit_rate(),
+            self.shed,
+            self.generation_start,
+            self.generation_end,
+            self.reloaded
+        )
+    }
+}
+
+/// One blocking control-channel exchange: send `line`, read one line.
+fn control_ask(addr: &str, line: &str) -> Result<String> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("loadgen: connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut w = stream.try_clone()?;
+    let mut r = BufReader::new(stream);
+    writeln!(w, "{line}")?;
+    let mut resp = String::new();
+    r.read_line(&mut resp)?;
+    writeln!(w, "QUIT").ok();
+    Ok(resp.trim().to_string())
+}
+
+fn stats_field(stats: &str, name: &str) -> Option<u64> {
+    stats
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix(name)?.strip_prefix('=')?.parse().ok())
+}
+
+/// One in-flight client connection owned by a driver thread.
+struct LgConn {
+    conn: Conn<TcpStream>,
+    fd: i32,
+    inflight: Option<Instant>,
+    remaining: u64,
+    rng: Xoshiro256ss,
+}
+
+impl LgConn {
+    /// Compose the next request line from the traffic mix.
+    fn next_request(&mut self, vertices: u64, hot: u64, hot_frac: f64) -> String {
+        let pick = |rng: &mut Xoshiro256ss| -> u64 {
+            if rng.next_f64() < hot_frac {
+                rng.next_below(hot.max(1))
+            } else {
+                rng.next_below(vertices.max(1))
+            }
+        };
+        let roll = self.rng.next_f64();
+        if roll < 0.5 {
+            let x = pick(&mut self.rng);
+            format!("DEG {x}\n")
+        } else if roll < 0.7 {
+            let x = pick(&mut self.rng);
+            let y = pick(&mut self.rng);
+            format!("TRI {x} {y}\n")
+        } else if roll < 0.85 {
+            let x = pick(&mut self.rng);
+            let y = pick(&mut self.rng);
+            format!("JACCARD {x} {y}\n")
+        } else {
+            let x = pick(&mut self.rng);
+            let y = pick(&mut self.rng);
+            format!("UNION {x} {y}\n")
+        }
+    }
+}
+
+struct DriverShared {
+    lat: crate::telemetry::HistHandle,
+    sent: AtomicU64,
+    ok: AtomicU64,
+    errors: AtomicU64,
+    halfway: AtomicBool,
+}
+
+/// One driver thread: `conns` connections, one request in flight each.
+fn drive(
+    addr: &str,
+    conns: usize,
+    per_conn: u64,
+    seed: u64,
+    vertices: u64,
+    hot: u64,
+    hot_frac: f64,
+    sh: &DriverShared,
+) {
+    let mut clients: Vec<LgConn> = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let Ok(stream) = TcpStream::connect(addr) else {
+            sh.errors.fetch_add(per_conn, Ordering::Relaxed);
+            continue;
+        };
+        stream.set_nodelay(true).ok();
+        let fd = fd_of(&stream);
+        match Conn::new(stream) {
+            Ok(conn) => clients.push(LgConn {
+                conn,
+                fd,
+                inflight: None,
+                remaining: per_conn,
+                rng: Xoshiro256ss::new(seed ^ (i as u64) << 17),
+            }),
+            Err(_) => {
+                sh.errors.fetch_add(per_conn, Ordering::Relaxed);
+            }
+        }
+    }
+    let mut slots: Vec<PollSlot> = Vec::with_capacity(clients.len());
+    loop {
+        let mut live = 0;
+        slots.clear();
+        for c in &clients {
+            let done = c.remaining == 0 && c.inflight.is_none();
+            if !done {
+                live += 1;
+            }
+            slots.push(if done {
+                PollSlot::new(-1, false, false)
+            } else {
+                PollSlot::new(
+                    c.fd,
+                    c.inflight.is_some(),
+                    c.conn.has_queued_writes(),
+                )
+            });
+        }
+        if live == 0 {
+            break;
+        }
+        poller::poll(&mut slots, Duration::from_millis(50));
+        for (c, flags) in clients.iter_mut().zip(&slots) {
+            if flags.fd < 0 {
+                continue;
+            }
+            let mut dead = false;
+            if flags.readable || flags.broken {
+                match c.conn.fill("loadgen") {
+                    Ok(out) => {
+                        while let Some(line) = c.conn.take_line() {
+                            if let Some(t0) = c.inflight.take() {
+                                let us = t0.elapsed().as_micros() as u64;
+                                if line.starts_with(b"ERR") {
+                                    sh.errors.fetch_add(1, Ordering::Relaxed);
+                                } else {
+                                    sh.lat.observe(us);
+                                    sh.ok.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        c.conn.compact();
+                        if out.eof {
+                            dead = true;
+                        }
+                    }
+                    Err(_) => dead = true,
+                }
+            }
+            if !dead && c.inflight.is_none() && c.remaining > 0 {
+                let req = c.next_request(vertices, hot, hot_frac);
+                c.conn.queue_frame(req.into_bytes());
+                c.inflight = Some(Instant::now());
+                c.remaining -= 1;
+                sh.sent.fetch_add(1, Ordering::Relaxed);
+            }
+            if !dead
+                && c.conn.has_queued_writes()
+                && c.conn.pump_write("loadgen").is_err()
+            {
+                dead = true;
+            }
+            if dead {
+                // a dropped connection forfeits its remaining quota —
+                // counted as errors so the run cannot pass silently
+                let lost =
+                    c.remaining + u64::from(c.inflight.take().is_some());
+                sh.errors.fetch_add(lost, Ordering::Relaxed);
+                c.remaining = 0;
+            }
+        }
+    }
+}
+
+/// Run the fleet against a live server and gather the report.
+pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
+    // probe the server: vertex count for the traffic mix, generation
+    // and counter baselines for the report
+    let stats0 = control_ask(&opts.addr, "STATS")?;
+    let vertices = stats_field(&stats0, "vertices")
+        .ok_or_else(|| anyhow!("bad STATS from {}: {stats0:?}", opts.addr))?;
+    let gen0 = stats_field(&stats0, "generation").unwrap_or(0);
+    let hits0 = stats_field(&stats0, "cache_hits").unwrap_or(0);
+    let misses0 = stats_field(&stats0, "cache_misses").unwrap_or(0);
+    if vertices == 0 {
+        bail!("server at {} reports an empty engine", opts.addr);
+    }
+
+    let threads = opts.resolved_threads().min(opts.connections.max(1));
+    let per_thread = opts.connections.div_ceil(threads);
+    let per_conn = (opts.requests / opts.connections.max(1) as u64).max(1);
+    let registry = Registry::new();
+    let shared = Arc::new(DriverShared {
+        lat: registry.histogram("loadgen_latency_us", &[]),
+        sent: AtomicU64::new(0),
+        ok: AtomicU64::new(0),
+        errors: AtomicU64::new(0),
+        halfway: AtomicBool::new(false),
+    });
+    let total_planned = per_conn * opts.connections as u64;
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let mut assigned = 0usize;
+    for t in 0..threads {
+        let n = per_thread.min(opts.connections - assigned);
+        assigned += n;
+        if n == 0 {
+            break;
+        }
+        let addr = opts.addr.clone();
+        let sh = Arc::clone(&shared);
+        let seed = opts
+            .seed
+            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(t as u64 + 1));
+        let hot = opts.hot_vertices.max(1) as u64;
+        let hot_frac = opts.hot_fraction.clamp(0.0, 1.0);
+        handles.push(std::thread::spawn(move || {
+            drive(&addr, n, per_conn, seed, vertices, hot, hot_frac, &sh)
+        }));
+    }
+
+    // the main thread is the controller: watch progress, fire the
+    // mid-run RELOAD once half the responses are in
+    let mut reloaded = false;
+    while handles.iter().any(|h| !h.is_finished()) {
+        if opts.live_reload
+            && !shared.halfway.load(Ordering::Relaxed)
+            && shared.ok.load(Ordering::Relaxed)
+                + shared.errors.load(Ordering::Relaxed)
+                >= total_planned / 2
+        {
+            shared.halfway.store(true, Ordering::Relaxed);
+            let resp = control_ask(&opts.addr, "RELOAD")?;
+            if !resp.starts_with("OK") {
+                bail!("mid-run RELOAD failed: {resp:?}");
+            }
+            reloaded = true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("loadgen driver panicked"))?;
+    }
+    let elapsed = t0.elapsed();
+    if opts.live_reload && !reloaded {
+        // the fleet finished before the halfway check fired — reload
+        // anyway so the verb is still exercised end-to-end
+        let resp = control_ask(&opts.addr, "RELOAD")?;
+        if !resp.starts_with("OK") {
+            bail!("post-run RELOAD failed: {resp:?}");
+        }
+        reloaded = true;
+    }
+
+    let stats1 = control_ask(&opts.addr, "STATS")?;
+    let report = LoadgenReport {
+        connections: opts.connections,
+        requests_sent: shared.sent.load(Ordering::Relaxed),
+        responses_ok: shared.ok.load(Ordering::Relaxed),
+        errors: shared.errors.load(Ordering::Relaxed),
+        elapsed,
+        qps: shared.ok.load(Ordering::Relaxed) as f64
+            / elapsed.as_secs_f64().max(1e-9),
+        p50_us: shared.lat.quantile(0.5).unwrap_or(0),
+        p90_us: shared.lat.quantile(0.9).unwrap_or(0),
+        p99_us: shared.lat.quantile(0.99).unwrap_or(0),
+        cache_hits: stats_field(&stats1, "cache_hits")
+            .unwrap_or(0)
+            .saturating_sub(hits0),
+        cache_misses: stats_field(&stats1, "cache_misses")
+            .unwrap_or(0)
+            .saturating_sub(misses0),
+        shed: stats_field(&stats1, "shed").unwrap_or(0),
+        generation_start: gen0,
+        generation_end: stats_field(&stats1, "generation").unwrap_or(gen0),
+        reloaded,
+    };
+
+    if let Some(out) = &opts.out {
+        std::fs::write(out, report.to_json())
+            .with_context(|| format!("loadgen: write {}", out.display()))?;
+    }
+    if let Some(bound_ms) = opts.max_p99_ms {
+        let p99_ms = report.p99_us as f64 / 1000.0;
+        if p99_ms > bound_ms {
+            bail!("p99 {p99_ms:.2}ms exceeds bound {bound_ms:.2}ms");
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_field_parses_server_stats_lines() {
+        let line = "vertices=34 ranks=2 p=12 mem=100 generation=3 \
+                    cache_hits=17 cache_misses=4 shed=0 comm=none";
+        assert_eq!(stats_field(line, "vertices"), Some(34));
+        assert_eq!(stats_field(line, "generation"), Some(3));
+        assert_eq!(stats_field(line, "cache_hits"), Some(17));
+        assert_eq!(stats_field(line, "absent"), None);
+    }
+
+    #[test]
+    fn report_json_is_well_formed() {
+        let r = LoadgenReport {
+            connections: 8,
+            requests_sent: 100,
+            responses_ok: 99,
+            errors: 1,
+            elapsed: Duration::from_millis(1500),
+            qps: 66.0,
+            p50_us: 120,
+            p90_us: 340,
+            p99_us: 900,
+            cache_hits: 60,
+            cache_misses: 40,
+            shed: 0,
+            generation_start: 0,
+            generation_end: 1,
+            reloaded: true,
+        };
+        let j = r.to_json();
+        assert!(j.contains("\"p99_us\": 900"), "{j}");
+        assert!(j.contains("\"cache_hit_rate\": 0.6000"), "{j}");
+        assert!(j.contains("\"reloaded\": true"), "{j}");
+        // balanced braces and quotes, parseable by eye and by jq
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('"').count() % 2, 0);
+    }
+
+    #[test]
+    fn loadgen_end_to_end_against_live_server() {
+        use crate::coordinator::serve::{QueryServer, ServeOptions};
+        use crate::coordinator::sketch::{
+            accumulate_stream, AccumulateOptions,
+        };
+        use crate::coordinator::QueryEngine;
+        use crate::graph::gen::karate;
+        use crate::graph::stream::MemoryStream;
+        use crate::hll::HllConfig;
+
+        let stream = MemoryStream::new(karate::edges());
+        let ds = accumulate_stream(
+            &stream,
+            2,
+            HllConfig::new(12, 0x5E),
+            AccumulateOptions::default(),
+        );
+        let engine = Arc::new(QueryEngine::new(ds));
+        let server = QueryServer::start_with_opts(
+            engine,
+            "127.0.0.1:0",
+            ServeOptions::default(),
+        )
+        .unwrap();
+        let report = run(&LoadgenOptions {
+            addr: server.addr().to_string(),
+            connections: 16,
+            requests: 800,
+            threads: 2,
+            hot_vertices: 8,
+            hot_fraction: 0.9,
+            ..LoadgenOptions::default()
+        })
+        .unwrap();
+        assert_eq!(report.errors, 0, "{report:?}");
+        assert_eq!(report.responses_ok, 800, "{report:?}");
+        // 90% of traffic on 8 hot vertices must produce cache hits
+        assert!(report.cache_hits > 0, "{report:?}");
+        assert!(report.p99_us > 0, "{report:?}");
+        server.stop();
+    }
+}

@@ -1,0 +1,148 @@
+//! The query-serving tier: an event-driven connection layer over the
+//! persistent [`QueryEngine`](super::engine::QueryEngine).
+//!
+//! The PR-2 snapshot made the engine cheap to *open* (O(1) mmap); this
+//! module makes it cheap to *serve* — the paper's "persistent query
+//! engine" treated as a high-QPS estimation service rather than a batch
+//! artifact. Like the comm plane, it is built as explicit layers:
+//!
+//! * **Readiness** ([`poller`]) — a `poll(2)` binding in the style of
+//!   the snapshot module's raw `mmap` binding (the `libc` crate is
+//!   unavailable offline), with a portable sleep-tick fallback, plus the
+//!   self-wake pipe the worker pool uses to interrupt a sleeping
+//!   reactor.
+//! * **Reactor** ([`reactor`]) — ONE thread owns the listener and every
+//!   client socket, each wrapped in the same buffered nonblocking
+//!   [`Conn`](crate::comm::socket::Conn) machinery the fabric uses for
+//!   DSKF frames (only the framing differs: newline vs length header).
+//!   It accepts, parses request lines, answers protocol/cached requests
+//!   inline, hands query work to the batcher, and writes completions
+//!   back — in strict per-connection request order via response slots,
+//!   so pipelined clients never see reordered answers. Idle-connection
+//!   eviction (the PR-6 `ConnLimits` contract) rides the poll deadline:
+//!   a client silent past `idle_cap` is answered
+//!   `ERR idle timeout, closing` and disconnected, counted in `STATS`
+//!   as `evicted=<n>`.
+//! * **Batcher** ([`batch`]) — a bounded pending-request queue feeding a
+//!   small worker pool. Each worker drains up to `batch_max` requests in
+//!   one pass and coalesces them: repeated keys are answered once, and
+//!   every TRI/JACCARD on the same vertex pair shares a single
+//!   `pair_stats_ref` + MLE solve — concurrent load turns into batched
+//!   calls over the intersect kernels instead of per-request lock
+//!   traffic. The queue bound is the admission valve: when it is full
+//!   the reactor sheds with `ERR overloaded` instead of queueing
+//!   unboundedly.
+//! * **Cache** ([`cache`]) — a sharded, bounded, generation-tagged
+//!   result cache for hot vertices. Entries store the *formatted
+//!   response line*, so a hit is bit-identical to a recomputation by
+//!   construction. Tags make snapshot swaps free: entries recorded
+//!   under generation N silently stop matching when the engine slot
+//!   says N+1 — no sweep, no lock storm.
+//! * **Swap** — the engine lives in a
+//!   [`GenSwap`](crate::snapshot::GenSwap): workers pin one `(engine,
+//!   generation)` pair per batch, so every answer is computed wholly
+//!   against one generation (never a blend), while the `RELOAD` verb
+//!   opens the snapshot path fresh (typically after a writer renamed
+//!   the next generation over it) and swaps it in with zero dropped
+//!   connections — the old mmap stays valid until its last batch
+//!   finishes.
+//! * **Load generator** ([`loadgen`]) — `degreesketch loadgen`: a
+//!   poll-driven client fleet (10k+ connections on a handful of
+//!   threads) reporting p50/p90/p99 latency, QPS, and the server's
+//!   cache hit rate into `BENCH_serving.json`.
+//!
+//! Every stage records into the PR-7 telemetry plane and is visible in
+//! one `METRICS` scrape: per-kind query counters and latency quantiles,
+//! the batch-size histogram (`degreesketch_query_batch_size`), cache
+//! hit/miss counters, shed counts, and the serving generation.
+
+pub mod batch;
+pub mod cache;
+pub mod loadgen;
+pub mod poller;
+pub mod reactor;
+
+pub use reactor::QueryServer;
+
+use std::time::Duration;
+
+/// The query verbs that flow through the batcher and cache (the other
+/// verbs — STATS/METRICS/RELOAD/QUIT — are answered inline by the
+/// reactor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QueryKind {
+    Deg,
+    Tri,
+    Jaccard,
+    Union,
+}
+
+impl QueryKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Deg => "deg",
+            Self::Tri => "tri",
+            Self::Jaccard => "jaccard",
+            Self::Union => "union",
+        }
+    }
+}
+
+/// Per-connection read bounds: `read_timeout` caps the reactor's poll
+/// wait (the eviction scan granularity); a client silent for longer
+/// than `idle_cap` is evicted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConnLimits {
+    pub read_timeout: Duration,
+    pub idle_cap: Duration,
+}
+
+impl Default for ConnLimits {
+    fn default() -> Self {
+        Self {
+            read_timeout: Duration::from_millis(250),
+            idle_cap: Duration::from_secs(300),
+        }
+    }
+}
+
+/// Serving-tier knobs (config section `serve.*`, overridable per flag).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Query worker threads; 0 = auto (min(cores, 4)).
+    pub workers: usize,
+    /// Most requests one worker drains into a single batch.
+    pub batch_max: usize,
+    /// Result-cache capacity in entries (0 disables caching).
+    pub cache_capacity: usize,
+    /// Pending-request queue bound — beyond it the reactor sheds with
+    /// `ERR overloaded`.
+    pub pending_cap: usize,
+    pub limits: ConnLimits,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            batch_max: 64,
+            cache_capacity: 65536,
+            pending_cap: 8192,
+            limits: ConnLimits::default(),
+        }
+    }
+}
+
+impl ServeOptions {
+    /// `workers` with 0 resolved to the machine's parallelism (capped —
+    /// serving work is short and lock-light, more threads just contend).
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(1, 4)
+    }
+}

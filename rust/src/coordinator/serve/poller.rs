@@ -1,0 +1,253 @@
+//! Readiness notification for the serving reactor: a raw `poll(2)`
+//! binding on unix (bound directly against the platform libc, like the
+//! snapshot module's `mmap` binding — the `libc` crate is unavailable
+//! offline), and a bounded sleep-tick fallback elsewhere so the reactor
+//! stays portable: on the fallback every socket is reported ready and
+//! the nonblocking reads/writes themselves sort out who actually has
+//! data (`WouldBlock` is harmless), at a fixed small tick cost.
+//!
+//! Also home to the self-wake pipe: worker threads finish batches while
+//! the reactor may be parked in `poll`, so completions write one byte
+//! into a socketpair whose read end sits in the poll set.
+
+use std::time::Duration;
+
+/// One pollable slot: the fd plus the interest flags for this round.
+/// `fd < 0` marks an empty slot that is never reported ready.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PollSlot {
+    pub fd: i32,
+    pub want_read: bool,
+    pub want_write: bool,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error/hangup/invalid — the owner should try IO and let the
+    /// resulting error close the connection.
+    pub broken: bool,
+}
+
+impl PollSlot {
+    pub fn new(fd: i32, want_read: bool, want_write: bool) -> Self {
+        Self {
+            fd,
+            want_read,
+            want_write,
+            readable: false,
+            writable: false,
+            broken: false,
+        }
+    }
+}
+
+/// The raw fd of any `AsRawFd` stream (−1 on platforms without fds,
+/// where the fallback poller reports everything ready anyway).
+#[cfg(unix)]
+pub fn fd_of<T: std::os::unix::io::AsRawFd>(s: &T) -> i32 {
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub fn fd_of<T>(_s: &T) -> i32 {
+    -1
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::c_int;
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    #[cfg(target_os = "linux")]
+    pub type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    pub type NfdsT = std::os::raw::c_uint;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+    }
+
+    // flag values shared by Linux and the BSD/darwin family
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+}
+
+/// Wait up to `timeout` for readiness on `slots`, filling in the
+/// outcome flags. Returns how many slots are ready (0 on timeout).
+#[cfg(unix)]
+pub fn poll(slots: &mut [PollSlot], timeout: Duration) -> usize {
+    let mut fds: Vec<sys::PollFd> = slots
+        .iter()
+        .map(|s| sys::PollFd {
+            fd: if s.fd >= 0 && (s.want_read || s.want_write) {
+                s.fd
+            } else {
+                // poll(2) ignores negative fds — exactly what an empty
+                // or interest-free slot wants
+                -1
+            },
+            events: (if s.want_read { sys::POLLIN } else { 0 })
+                | (if s.want_write { sys::POLLOUT } else { 0 }),
+            revents: 0,
+        })
+        .collect();
+    let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+    let rc = unsafe {
+        sys::poll(fds.as_mut_ptr(), fds.len() as sys::NfdsT, ms.max(1))
+    };
+    if rc <= 0 {
+        // timeout, or EINTR/transient error: report nothing ready; the
+        // reactor's next round retries
+        for s in slots.iter_mut() {
+            (s.readable, s.writable, s.broken) = (false, false, false);
+        }
+        return 0;
+    }
+    let mut ready = 0;
+    for (s, f) in slots.iter_mut().zip(&fds) {
+        s.readable = f.revents & sys::POLLIN != 0;
+        s.writable = f.revents & sys::POLLOUT != 0;
+        s.broken =
+            f.revents & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0;
+        if s.readable || s.writable || s.broken {
+            ready += 1;
+        }
+    }
+    ready
+}
+
+/// Portable fallback: sleep a bounded tick and report every interested
+/// slot ready — the nonblocking IO that follows is the real filter.
+#[cfg(not(unix))]
+pub fn poll(slots: &mut [PollSlot], timeout: Duration) -> usize {
+    std::thread::sleep(timeout.min(Duration::from_millis(2)));
+    let mut ready = 0;
+    for s in slots.iter_mut() {
+        s.readable = s.want_read;
+        s.writable = s.want_write;
+        s.broken = false;
+        if s.readable || s.writable {
+            ready += 1;
+        }
+    }
+    ready
+}
+
+// ---------------------------------------------------------------------
+// Self-wake pipe
+// ---------------------------------------------------------------------
+
+/// Write end of the reactor's wake pipe — cloneable, shared by the
+/// worker pool's completion queue and the server's stop path.
+#[derive(Clone)]
+pub struct WakeTx {
+    #[cfg(unix)]
+    tx: std::sync::Arc<std::os::unix::net::UnixStream>,
+}
+
+impl WakeTx {
+    /// Nudge the reactor: one byte into the pipe. A full pipe means the
+    /// reactor is hopelessly behind on wakes already — dropping the
+    /// byte is fine, it will drain the pipe and the completion queue on
+    /// the same round.
+    pub fn wake(&self) {
+        #[cfg(unix)]
+        {
+            use std::io::Write;
+            let _ = (&*self.tx).write(&[1u8]);
+        }
+    }
+}
+
+/// Read end of the wake pipe: polled by the reactor, drained each round.
+pub struct WakeRx {
+    #[cfg(unix)]
+    rx: std::os::unix::net::UnixStream,
+}
+
+impl WakeRx {
+    pub fn fd(&self) -> i32 {
+        #[cfg(unix)]
+        {
+            fd_of(&self.rx)
+        }
+        #[cfg(not(unix))]
+        {
+            -1
+        }
+    }
+
+    /// Swallow every pending wake byte.
+    pub fn drain(&self) {
+        #[cfg(unix)]
+        {
+            use std::io::Read;
+            let mut buf = [0u8; 256];
+            while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+        }
+    }
+}
+
+/// A connected wake pair (`UnixStream::pair` on unix — pure std, both
+/// ends nonblocking; inert elsewhere, where the fallback poller's sleep
+/// tick bounds wake latency instead).
+pub fn wake_pair() -> std::io::Result<(WakeTx, WakeRx)> {
+    #[cfg(unix)]
+    {
+        let (tx, rx) = std::os::unix::net::UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok((
+            WakeTx {
+                tx: std::sync::Arc::new(tx),
+            },
+            WakeRx { rx },
+        ))
+    }
+    #[cfg(not(unix))]
+    {
+        Ok((WakeTx {}, WakeRx {}))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(unix)]
+    #[test]
+    fn poll_reports_wake_pipe_readability() {
+        let (tx, rx) = wake_pair().unwrap();
+        let mut slots = [PollSlot::new(rx.fd(), true, false)];
+        // nothing written yet: a short poll times out
+        assert_eq!(poll(&mut slots, Duration::from_millis(5)), 0);
+        assert!(!slots[0].readable);
+        tx.wake();
+        assert_eq!(poll(&mut slots, Duration::from_millis(1000)), 1);
+        assert!(slots[0].readable);
+        rx.drain();
+        // drained: back to timing out
+        assert_eq!(poll(&mut slots, Duration::from_millis(5)), 0);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn negative_fd_slots_are_ignored() {
+        let (tx, rx) = wake_pair().unwrap();
+        tx.wake();
+        let mut slots = [
+            PollSlot::new(-1, true, true),
+            PollSlot::new(rx.fd(), true, false),
+        ];
+        assert_eq!(poll(&mut slots, Duration::from_millis(1000)), 1);
+        assert!(!slots[0].readable && !slots[0].broken);
+        assert!(slots[1].readable);
+    }
+}

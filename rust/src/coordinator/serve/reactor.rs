@@ -1,0 +1,1023 @@
+//! The serving reactor: one thread, every socket, `poll(2)` readiness.
+//!
+//! Protocol (request → response, one line each):
+//!
+//! ```text
+//! DEG <x>              → <estimate> | NONE
+//! TRI <x> <y>          → <intersection> <union> <dominated:0|1> | NONE
+//! JACCARD <x> <y>      → <jaccard> | NONE
+//! UNION <x> [<y> ...]  → <estimate> | NONE
+//! STATS                → vertices=<n> ranks=<p> p=<p> mem=<bytes>
+//!                        dense=<n> mode=<heap|mmap> resident=<bytes>
+//!                        evicted=<n> generation=<g> conns=<n>
+//!                        pending=<n> shed=<n> cache_hits=<n>
+//!                        cache_misses=<n>
+//!                        comm=<sequential|threaded|process|tcp|none>
+//!                        [ckpts=<n> restores=<n> hb_stale_ms=<ms>]
+//!                        [rank<i>=<msgs>/<bytes>/<flushes> ...]
+//! METRICS              → Prometheus text exposition, terminated by a
+//!                        `# EOF` line (the one multi-line response)
+//! RELOAD [path]        → OK generation=<g> vertices=<n> resident=<b>
+//!                        | ERR reload: <why>  (old generation keeps
+//!                        serving on error — zero downtime either way)
+//! QUIT                 → BYE (closes the connection)
+//! ```
+//!
+//! Unknown commands answer `ERR <reason>`. `mem`/`resident`/`comm`
+//! semantics are unchanged from the thread-per-connection server this
+//! replaces: `mem` is private heap sketch bytes, `resident` the mapped
+//! snapshot bytes (shared page cache), `comm` the backend that
+//! accumulated the engine (`none` for disk-loaded ones).
+//!
+//! Request handling is split by cost: STATS/METRICS/RELOAD/QUIT and
+//! every parse error are answered inline by the reactor; DEG/TRI/
+//! JACCARD/UNION first consult the generation-tagged result cache and
+//! only on a miss enter the bounded pending queue toward the worker
+//! pool (or shed with `ERR overloaded` when it is full). Responses are
+//! delivered through per-connection *slots* in request order, so a
+//! pipelined client mixing cached, inline, and worker-computed requests
+//! never sees reordered answers.
+
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::comm::socket::Conn;
+use crate::snapshot::GenSwap;
+use crate::telemetry::{self, prom, Counter, Registry};
+
+use super::super::engine::QueryEngine;
+use super::batch::{
+    record_query, run_worker, BatchQueue, Completions, Job, WorkerShared,
+};
+use super::cache::{CacheKey, ResultCache};
+use super::poller::{self, fd_of, PollSlot, WakeRx, WakeTx};
+use super::{ConnLimits, QueryKind, ServeOptions};
+
+/// A request line longer than this without a newline is abuse, not a
+/// query — the client is answered `ERR line too long` and dropped.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// A running serving-tier handle: one reactor thread plus the query
+/// worker pool. Dropping (or [`QueryServer::stop`]) shuts everything
+/// down and joins the threads.
+pub struct QueryServer {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    live: Arc<AtomicUsize>,
+    evicted: Arc<AtomicU64>,
+    metrics: Arc<Registry>,
+    engine: Arc<GenSwap<QueryEngine>>,
+    cache: Arc<ResultCache>,
+    queue: Arc<BatchQueue>,
+    wake: WakeTx,
+    reactor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl QueryServer {
+    /// Bind and start serving. `addr` like `"127.0.0.1:0"` (0 = ephemeral).
+    pub fn start(engine: Arc<QueryEngine>, addr: &str) -> Result<Self> {
+        Self::start_with_opts(engine, addr, ServeOptions::default())
+    }
+
+    /// [`QueryServer::start`] with explicit per-connection read bounds.
+    pub fn start_with_limits(
+        engine: Arc<QueryEngine>,
+        addr: &str,
+        limits: ConnLimits,
+    ) -> Result<Self> {
+        Self::start_with_opts(
+            engine,
+            addr,
+            ServeOptions {
+                limits,
+                ..ServeOptions::default()
+            },
+        )
+    }
+
+    /// Full-control start: worker count, batch bound, cache capacity,
+    /// admission queue depth, connection limits.
+    pub fn start_with_opts(
+        engine: Arc<QueryEngine>,
+        addr: &str,
+        opts: ServeOptions,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(AtomicUsize::new(0));
+        let evicted = Arc::new(AtomicU64::new(0));
+        let metrics = Arc::new(Registry::new());
+        let engine = Arc::new(GenSwap::new(engine));
+        let cache = Arc::new(ResultCache::new(opts.cache_capacity));
+        let queue = Arc::new(BatchQueue::new(opts.pending_cap));
+        let (wake, wake_rx) = poller::wake_pair()?;
+        let completions = Arc::new(Completions::new(wake.clone()));
+
+        let shared = Arc::new(WorkerShared {
+            queue: Arc::clone(&queue),
+            engine: Arc::clone(&engine),
+            cache: Arc::clone(&cache),
+            metrics: Arc::clone(&metrics),
+            completions: Arc::clone(&completions),
+            batch_max: opts.batch_max.max(1),
+        });
+        let workers = (0..opts.resolved_workers())
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || run_worker(&sh))
+            })
+            .collect();
+
+        let reactor = Reactor {
+            listener,
+            wake_rx,
+            shutdown: Arc::clone(&shutdown),
+            live: Arc::clone(&live),
+            evicted: Arc::clone(&evicted),
+            metrics: Arc::clone(&metrics),
+            engine: Arc::clone(&engine),
+            cache: Arc::clone(&cache),
+            queue: Arc::clone(&queue),
+            completions,
+            limits: opts.limits,
+            clients: Vec::new(),
+            free: Vec::new(),
+            next_conn_id: 0,
+            hits: metrics.counter("degreesketch_cache_hits_total", &[]),
+            misses: metrics.counter("degreesketch_cache_misses_total", &[]),
+            shed: metrics.counter("degreesketch_requests_shed_total", &[]),
+            reloads: metrics.counter("degreesketch_reloads_total", &[]),
+        };
+        let handle = std::thread::spawn(move || reactor.run());
+
+        Ok(Self {
+            addr: local,
+            shutdown,
+            live,
+            evicted,
+            metrics,
+            engine,
+            cache,
+            queue,
+            wake,
+            reactor: Some(handle),
+            workers,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Live connections currently owned by the reactor.
+    pub fn live_workers(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// Connections evicted so far for exceeding the idle cap.
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// This server's metric registry (query counters, latency and
+    /// batch-size histograms, cache/shed/reload counters).
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// The snapshot generation currently being served.
+    pub fn generation(&self) -> u64 {
+        self.engine.generation()
+    }
+
+    /// Result-cache hit/miss totals (also in `STATS` and `METRICS`).
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits(), self.cache.misses())
+    }
+
+    fn begin_stop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.queue.shutdown();
+        self.wake.wake();
+        if let Some(h) = self.reactor.take() {
+            let _ = h.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    /// Stop serving and join the reactor + worker threads.
+    pub fn stop(mut self) {
+        self.begin_stop();
+    }
+}
+
+impl Drop for QueryServer {
+    fn drop(&mut self) {
+        self.begin_stop();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-connection state
+// ---------------------------------------------------------------------
+
+struct Client {
+    conn: Conn<TcpStream>,
+    fd: i32,
+    /// Monotonic connection id — completions carry it so an answer for
+    /// a dead connection can never be delivered to its slot's reuser.
+    id: u64,
+    token: usize,
+    last_activity: Instant,
+    /// Response slots in request order (`None` = awaiting a worker).
+    /// Only the contiguous ready prefix is ever written out.
+    pending: VecDeque<Option<String>>,
+    /// Sequence number of `pending`'s front slot.
+    base_seq: u64,
+    next_seq: u64,
+    read_closed: bool,
+    closing: bool,
+}
+
+impl Client {
+    fn reserve_slot(&mut self) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push_back(None);
+        seq
+    }
+
+    fn fill_slot(&mut self, seq: u64, line: String) {
+        if let Some(idx) = seq.checked_sub(self.base_seq) {
+            if let Some(slot) = self.pending.get_mut(idx as usize) {
+                *slot = Some(line);
+            }
+        }
+    }
+
+    fn push_inline(&mut self, line: String) {
+        let seq = self.reserve_slot();
+        self.fill_slot(seq, line);
+    }
+
+    /// Move every contiguous ready response into the write queue.
+    fn flush_ready(&mut self) {
+        while matches!(self.pending.front(), Some(Some(_))) {
+            let line = self.pending.pop_front().flatten().unwrap();
+            self.base_seq += 1;
+            self.conn.queue_frame(line.into_bytes());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Request parsing
+// ---------------------------------------------------------------------
+
+enum Request {
+    Query(CacheKey),
+    /// Parse errors and usage messages, answered as-is.
+    Immediate(String),
+    Stats,
+    Metrics,
+    Reload(Option<String>),
+    Quit,
+}
+
+fn parse_request(line: &str) -> Request {
+    let mut it = line.split_whitespace();
+    let Some(cmd) = it.next() else {
+        return Request::Immediate("ERR empty".into());
+    };
+    let cmd = cmd.to_ascii_uppercase();
+    let parse_ids = |it: std::str::SplitWhitespace| -> Result<Vec<u64>, String> {
+        it.map(|t| t.parse::<u64>().map_err(|_| format!("bad id {t:?}")))
+            .collect()
+    };
+    let query = |kind: QueryKind, ids: Vec<u64>| {
+        Request::Query(CacheKey { kind, ids })
+    };
+    match cmd.as_str() {
+        "DEG" => match parse_ids(it) {
+            Ok(ids) if ids.len() == 1 => query(QueryKind::Deg, ids),
+            Ok(_) => Request::Immediate("ERR usage: DEG <x>".into()),
+            Err(e) => Request::Immediate(format!("ERR {e}")),
+        },
+        "TRI" => match parse_ids(it) {
+            Ok(ids) if ids.len() == 2 => query(QueryKind::Tri, ids),
+            Ok(_) => Request::Immediate("ERR usage: TRI <x> <y>".into()),
+            Err(e) => Request::Immediate(format!("ERR {e}")),
+        },
+        "JACCARD" => match parse_ids(it) {
+            Ok(ids) if ids.len() == 2 => query(QueryKind::Jaccard, ids),
+            Ok(_) => Request::Immediate("ERR usage: JACCARD <x> <y>".into()),
+            Err(e) => Request::Immediate(format!("ERR {e}")),
+        },
+        "UNION" => match parse_ids(it) {
+            Ok(ids) if !ids.is_empty() => query(QueryKind::Union, ids),
+            Ok(_) => Request::Immediate("ERR usage: UNION <x> [<y> ...]".into()),
+            Err(e) => Request::Immediate(format!("ERR {e}")),
+        },
+        "STATS" => Request::Stats,
+        "METRICS" => Request::Metrics,
+        "RELOAD" => {
+            let path = it.next().map(String::from);
+            match it.next() {
+                Some(_) => Request::Immediate("ERR usage: RELOAD [path]".into()),
+                None => Request::Reload(path),
+            }
+        }
+        "QUIT" => Request::Quit,
+        other => Request::Immediate(format!("ERR unknown command {other:?}")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// The reactor proper
+// ---------------------------------------------------------------------
+
+struct Reactor {
+    listener: TcpListener,
+    wake_rx: WakeRx,
+    shutdown: Arc<AtomicBool>,
+    live: Arc<AtomicUsize>,
+    evicted: Arc<AtomicU64>,
+    metrics: Arc<Registry>,
+    engine: Arc<GenSwap<QueryEngine>>,
+    cache: Arc<ResultCache>,
+    queue: Arc<BatchQueue>,
+    completions: Arc<Completions>,
+    limits: ConnLimits,
+    clients: Vec<Option<Client>>,
+    /// Freed slot indices, reused before growing `clients`.
+    free: Vec<usize>,
+    next_conn_id: u64,
+    hits: Counter,
+    misses: Counter,
+    shed: Counter,
+    reloads: Counter,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        // listener + wake pipe occupy the first two poll slots
+        const FIXED: usize = 2;
+        loop {
+            if self.shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            let mut slots = Vec::with_capacity(self.clients.len() + FIXED);
+            slots.push(PollSlot::new(fd_of(&self.listener), true, false));
+            slots.push(PollSlot::new(self.wake_rx.fd(), true, false));
+            for c in &self.clients {
+                slots.push(match c {
+                    Some(c) => PollSlot::new(
+                        c.fd,
+                        !c.read_closed,
+                        c.conn.has_queued_writes(),
+                    ),
+                    None => PollSlot::new(-1, false, false),
+                });
+            }
+            let timeout = self
+                .limits
+                .read_timeout
+                .min(Duration::from_millis(250))
+                .max(Duration::from_millis(1));
+            poller::poll(&mut slots, timeout);
+            let now = Instant::now();
+            self.wake_rx.drain();
+
+            // deliver worker completions into their response slots
+            for done in self.completions.drain() {
+                if let Some(c) = self
+                    .clients
+                    .get_mut(done.token)
+                    .and_then(|s| s.as_mut())
+                {
+                    if c.id == done.conn_id {
+                        c.fill_slot(done.seq, done.line + "\n");
+                        c.last_activity = now;
+                    }
+                }
+            }
+
+            if slots[0].readable {
+                self.accept_all(now);
+            }
+
+            for token in 0..self.clients.len() {
+                let flags = slots
+                    .get(FIXED + token)
+                    .copied()
+                    .unwrap_or_default();
+                self.client_io(token, &flags, now);
+            }
+
+            self.sweep(now);
+        }
+        self.live.store(0, Ordering::Relaxed);
+    }
+
+    fn accept_all(&mut self, now: Instant) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nodelay(true).ok();
+                    let fd = fd_of(&stream);
+                    // Conn::new flips the stream nonblocking
+                    let Ok(conn) = Conn::new(stream) else { continue };
+                    self.next_conn_id += 1;
+                    let token = self.free.pop().unwrap_or_else(|| {
+                        self.clients.push(None);
+                        self.clients.len() - 1
+                    });
+                    self.clients[token] = Some(Client {
+                        conn,
+                        fd,
+                        id: self.next_conn_id,
+                        token,
+                        last_activity: now,
+                        pending: VecDeque::new(),
+                        base_seq: 0,
+                        next_seq: 0,
+                        read_closed: false,
+                        closing: false,
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// One connection's IO round: fill + parse on readability, then
+    /// flush ready responses and pump the write queue.
+    fn client_io(&mut self, token: usize, flags: &PollSlot, now: Instant) {
+        let Some(mut c) = self.clients[token].take() else {
+            return;
+        };
+        let mut dead = false;
+        if (flags.readable || flags.broken) && !c.read_closed {
+            match c.conn.fill("serve") {
+                Ok(outcome) => {
+                    if outcome.eof {
+                        c.read_closed = true;
+                    }
+                    while let Some(line) = c.conn.take_line() {
+                        c.last_activity = now;
+                        self.handle_line(&mut c, &line);
+                    }
+                    if c.read_closed {
+                        // a final request without a trailing newline is
+                        // still answered (blocking-server behavior)
+                        if let Some(rest) = c.conn.take_trailing() {
+                            c.last_activity = now;
+                            self.handle_line(&mut c, &rest);
+                        }
+                    } else if c.conn.pending_read_bytes() > MAX_LINE_BYTES {
+                        c.push_inline("ERR line too long\n".into());
+                        c.closing = true;
+                    }
+                    c.conn.compact();
+                }
+                Err(_) => dead = true,
+            }
+        }
+        if !dead {
+            c.flush_ready();
+            if c.conn.has_queued_writes()
+                && c.conn.pump_write("serve").is_err()
+            {
+                dead = true;
+            }
+        }
+        if dead {
+            self.release(token);
+        } else {
+            self.clients[token] = Some(c);
+        }
+    }
+
+    fn handle_line(&mut self, c: &mut Client, raw: &[u8]) {
+        if c.closing {
+            return; // post-QUIT pipeline residue is ignored
+        }
+        let text = String::from_utf8_lossy(raw);
+        let line = text.trim_end();
+        let started = Instant::now();
+        match parse_request(line) {
+            Request::Query(key) => {
+                let gen = self.engine.generation();
+                if let Some(hit) = self.cache.get(&key, gen) {
+                    self.hits.inc();
+                    record_query(&self.metrics, key.kind.name(), started);
+                    c.push_inline(hit + "\n");
+                    return;
+                }
+                self.misses.inc();
+                let seq = c.reserve_slot();
+                let admitted = self.queue.try_push(Job {
+                    key,
+                    token: c.token,
+                    conn_id: c.id,
+                    seq,
+                    started,
+                });
+                if !admitted {
+                    self.shed.inc();
+                    c.fill_slot(seq, "ERR overloaded\n".into());
+                }
+            }
+            Request::Immediate(s) => c.push_inline(s + "\n"),
+            Request::Stats => {
+                let line = self.stats_line();
+                c.push_inline(line + "\n");
+            }
+            Request::Metrics => {
+                self.scrape_gauges();
+                // multi-line: carries its own framing (`# EOF\n`)
+                c.push_inline(prom::render(&[
+                    &self.metrics,
+                    telemetry::registry(),
+                ]));
+            }
+            Request::Reload(path) => {
+                let reply = self.do_reload(path.as_deref());
+                c.push_inline(reply + "\n");
+            }
+            Request::Quit => {
+                c.push_inline("BYE\n".into());
+                c.closing = true;
+            }
+        }
+    }
+
+    /// Open the next snapshot generation and swap it in. The current
+    /// generation serves until the swap lands; on error it simply keeps
+    /// serving — a failed reload is invisible to other clients.
+    fn do_reload(&self, path_arg: Option<&str>) -> String {
+        let (cur, _) = self.engine.load();
+        let opened = match path_arg {
+            Some(p) => {
+                // explicit path: keep the current backing mode if known
+                let mode = cur
+                    .reload_origin()
+                    .map(|(_, m)| m)
+                    .unwrap_or_default();
+                QueryEngine::open_snapshot_with(Path::new(p), mode)
+            }
+            None => cur.reopen(),
+        };
+        match opened {
+            Ok(next) => {
+                let vertices = next.num_vertices();
+                let resident = next.resident_bytes();
+                let gen = self.engine.swap(Arc::new(next));
+                self.reloads.inc();
+                self.metrics
+                    .gauge("degreesketch_server_generation", &[])
+                    .set(gen);
+                format!(
+                    "OK generation={gen} vertices={vertices} \
+                     resident={resident}"
+                )
+            }
+            // single-line error: the anyhow chain joined with ": "
+            Err(e) => format!("ERR reload: {e:#}"),
+        }
+    }
+
+    fn stats_line(&self) -> String {
+        let (engine, gen) = self.engine.load();
+        let mut line = format!(
+            "vertices={} ranks={} p={} mem={} dense={} mode={} \
+             resident={} evicted={}",
+            engine.num_vertices(),
+            engine.num_ranks(),
+            engine.config().p(),
+            engine.heap_bytes(),
+            engine.num_dense_sketches(),
+            engine.backing_mode(),
+            engine.resident_bytes(),
+            self.evicted.load(Ordering::Relaxed)
+        );
+        line.push_str(&format!(
+            " generation={gen} conns={} pending={} shed={} cache_hits={} \
+             cache_misses={}",
+            self.clients.iter().filter(|c| c.is_some()).count(),
+            self.queue.len(),
+            self.shed.get(),
+            self.hits.get(),
+            self.misses.get()
+        ));
+        match engine.accumulation_stats() {
+            Some(cs) => {
+                line.push_str(&format!(
+                    " comm={} ckpts={} restores={} hb_stale_ms={}",
+                    cs.mode.name(),
+                    cs.checkpoints,
+                    cs.restores,
+                    cs.max_stale_ms
+                ));
+                for (r, pr) in cs.per_rank.iter().enumerate() {
+                    line.push_str(&format!(
+                        " rank{r}={}/{}/{}",
+                        pr.messages, pr.bytes, pr.flushes
+                    ));
+                }
+            }
+            None => line.push_str(" comm=none"),
+        }
+        line
+    }
+
+    /// Refresh scrape-time gauges: engine sizing, serving-tier state,
+    /// and — when this engine was accumulated in-process — the comm
+    /// fabric's message/checkpoint/recovery/heartbeat totals.
+    fn scrape_gauges(&self) {
+        let (engine, gen) = self.engine.load();
+        let g = |name: &str, v: u64| self.metrics.gauge(name, &[]).set(v);
+        g("degreesketch_server_vertices", engine.num_vertices() as u64);
+        g("degreesketch_server_heap_bytes", engine.heap_bytes() as u64);
+        g(
+            "degreesketch_server_resident_bytes",
+            engine.resident_bytes() as u64,
+        );
+        g(
+            "degreesketch_server_dense_sketches",
+            engine.num_dense_sketches() as u64,
+        );
+        g(
+            "degreesketch_server_evicted_connections",
+            self.evicted.load(Ordering::Relaxed),
+        );
+        g("degreesketch_server_generation", gen);
+        g(
+            "degreesketch_server_connections",
+            self.clients.iter().filter(|c| c.is_some()).count() as u64,
+        );
+        g("degreesketch_server_pending_requests", self.queue.len() as u64);
+        if let Some(cs) = engine.accumulation_stats() {
+            g("degreesketch_comm_messages", cs.messages);
+            g("degreesketch_comm_bytes", cs.bytes);
+            g("degreesketch_comm_flushes", cs.flushes);
+            g("degreesketch_comm_checkpoints", cs.checkpoints);
+            g("degreesketch_comm_restores", cs.restores);
+            g("degreesketch_comm_hb_stale_ms", cs.max_stale_ms);
+            for (r, pr) in cs.per_rank.iter().enumerate() {
+                let rank = r.to_string();
+                self.metrics
+                    .gauge("degreesketch_comm_rank_messages", &[("rank", &rank)])
+                    .set(pr.messages);
+                self.metrics
+                    .gauge("degreesketch_comm_rank_bytes", &[("rank", &rank)])
+                    .set(pr.bytes);
+            }
+        }
+    }
+
+    /// Close idle/finished connections and refresh the live count.
+    fn sweep(&mut self, now: Instant) {
+        for token in 0..self.clients.len() {
+            let Some(c) = self.clients[token].as_mut() else {
+                continue;
+            };
+            let done_reading = c.read_closed || c.closing;
+            let drained =
+                c.pending.is_empty() && !c.conn.has_queued_writes();
+            if done_reading && drained {
+                self.release(token);
+                continue;
+            }
+            // Idle eviction by poll deadline: only truly idle clients —
+            // nothing in flight, silent past the cap. Partial lines
+            // never reset the idle clock (`last_activity` moves on
+            // complete requests only), so half-open peers that wrote
+            // "DEG " and vanished are evicted too.
+            if !done_reading
+                && c.pending.is_empty()
+                && now.duration_since(c.last_activity) >= self.limits.idle_cap
+            {
+                c.conn
+                    .queue_frame(b"ERR idle timeout, closing\n".to_vec());
+                let _ = c.conn.pump_write("serve-evict");
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+                self.release(token);
+            }
+        }
+        let n = self.clients.iter().filter(|c| c.is_some()).count();
+        self.live.store(n, Ordering::Relaxed);
+    }
+
+    fn release(&mut self, token: usize) {
+        if self.clients[token].take().is_some() {
+            self.free.push(token);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sketch::{accumulate_stream, AccumulateOptions};
+    use crate::graph::gen::karate;
+    use crate::graph::stream::MemoryStream;
+    use crate::hll::HllConfig;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn test_engine() -> Arc<QueryEngine> {
+        let stream = MemoryStream::new(karate::edges());
+        let ds = accumulate_stream(
+            &stream,
+            2,
+            HllConfig::new(12, 0x5E),
+            AccumulateOptions::default(),
+        );
+        Arc::new(QueryEngine::new(ds))
+    }
+
+    fn ask(addr: std::net::SocketAddr, lines: &[&str]) -> Vec<String> {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut out = Vec::new();
+        for l in lines {
+            writeln!(w, "{l}").unwrap();
+            let mut resp = String::new();
+            r.read_line(&mut resp).unwrap();
+            out.push(resp.trim().to_string());
+        }
+        out
+    }
+
+    /// One METRICS scrape: reads the multi-line body through its `# EOF`
+    /// framing line (inclusive).
+    fn scrape_metrics(addr: std::net::SocketAddr) -> String {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        writeln!(w, "METRICS").unwrap();
+        let mut text = String::new();
+        loop {
+            let mut line = String::new();
+            assert!(r.read_line(&mut line).unwrap() > 0, "closed before # EOF");
+            text.push_str(&line);
+            if line.trim_end() == "# EOF" {
+                break;
+            }
+        }
+        writeln!(w, "QUIT").unwrap();
+        text
+    }
+
+    #[test]
+    fn serves_queries_over_tcp() {
+        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let resp = ask(
+            addr,
+            &[
+                "DEG 33",
+                "DEG 999",
+                "TRI 0 33",
+                "JACCARD 0 1",
+                "UNION 0 33",
+                "STATS",
+                "NOPE",
+                "QUIT",
+            ],
+        );
+        let d: f64 = resp[0].parse().unwrap();
+        assert!((d - 17.0).abs() < 2.0, "{resp:?}");
+        assert_eq!(resp[1], "NONE");
+        assert_eq!(resp[2].split_whitespace().count(), 3);
+        let j: f64 = resp[3].parse().unwrap();
+        assert!((0.0..=1.0).contains(&j));
+        assert!(resp[4].parse::<f64>().unwrap() > 20.0);
+        assert!(resp[5].starts_with("vertices=34"), "{:?}", resp[5]);
+        assert!(resp[5].contains("mode=heap"), "{:?}", resp[5]);
+        assert!(resp[5].contains("resident="), "{:?}", resp[5]);
+        assert!(resp[5].contains("generation=0"), "{:?}", resp[5]);
+        // accumulated in-process on 2 sequential ranks: comm backend and
+        // both ranks' message/byte/flush counters are reported
+        assert!(resp[5].contains("comm=sequential"), "{:?}", resp[5]);
+        assert!(resp[5].contains("rank0="), "{:?}", resp[5]);
+        assert!(resp[5].contains("rank1="), "{:?}", resp[5]);
+        assert!(resp[6].starts_with("ERR"));
+        assert_eq!(resp[7], "BYE");
+        server.stop();
+    }
+
+    #[test]
+    fn pipelined_requests_answer_in_order() {
+        // One write carrying inline (STATS), worker (DEG/TRI), and
+        // cached requests: responses must come back in request order.
+        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        write!(w, "DEG 33\nSTATS\nDEG 33\nTRI 0 33\nSTATS\nQUIT\n").unwrap();
+        let mut lines = Vec::new();
+        for _ in 0..6 {
+            let mut line = String::new();
+            assert!(r.read_line(&mut line).unwrap() > 0);
+            lines.push(line.trim().to_string());
+        }
+        assert!(lines[0].parse::<f64>().is_ok(), "{lines:?}");
+        assert!(lines[1].starts_with("vertices="), "{lines:?}");
+        // the repeat answers bit-identically (cached or recomputed)
+        assert_eq!(lines[0], lines[2], "{lines:?}");
+        assert_eq!(lines[3].split_whitespace().count(), 3, "{lines:?}");
+        assert!(lines[4].starts_with("vertices="), "{lines:?}");
+        assert_eq!(lines[5], "BYE");
+        server.stop();
+    }
+
+    #[test]
+    fn metrics_verb_serves_valid_prometheus_text_with_quantiles() {
+        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        // Exercise each timed verb so every per-kind series exists.
+        let _ = ask(
+            addr,
+            &["DEG 0", "DEG 33", "TRI 0 33", "JACCARD 0 1", "UNION 0 33", "QUIT"],
+        );
+        let text = scrape_metrics(addr);
+        // Must pass the minimal Prometheus checker (TYPE lines, cumulative
+        // buckets, # EOF framing).
+        let samples = prom::check_text(&text)
+            .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{text}"));
+        assert!(samples > 10, "suspiciously few samples:\n{text}");
+        for kind in ["deg", "tri", "jaccard", "union"] {
+            assert!(
+                text.contains(&format!(
+                    "degreesketch_queries_total{{kind=\"{kind}\"}}"
+                )),
+                "missing counter for {kind}:\n{text}"
+            );
+            for q in ["0.5", "0.99"] {
+                assert!(
+                    text.contains(&format!(
+                        "degreesketch_query_latency_us_quantiles\
+                         {{kind=\"{kind}\",quantile=\"{q}\"}}"
+                    )),
+                    "missing p{q} for {kind}:\n{text}"
+                );
+            }
+        }
+        // The serving tier's own series: batch-size histogram (every
+        // worker batch observes), cache counters, generation gauge.
+        assert!(text.contains("degreesketch_query_batch_size"), "{text}");
+        assert!(text.contains("degreesketch_cache_misses_total"), "{text}");
+        assert!(text.contains("degreesketch_server_generation"), "{text}");
+        // Comm gauges from the in-process accumulation are scraped too.
+        assert!(text.contains("degreesketch_comm_messages"), "{text}");
+        assert!(text.contains("degreesketch_comm_hb_stale_ms"), "{text}");
+        // DEG ran twice above; the counter must say so.
+        assert!(
+            text.contains("degreesketch_queries_total{kind=\"deg\"} 2"),
+            "{text}"
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn stats_reports_hb_staleness_alongside_recovery_counts() {
+        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
+        let resp = ask(server.addr(), &["STATS", "QUIT"]);
+        assert!(resp[0].contains("ckpts="), "{:?}", resp[0]);
+        assert!(resp[0].contains("restores="), "{:?}", resp[0]);
+        assert!(resp[0].contains("hb_stale_ms=0"), "{:?}", resp[0]);
+        server.stop();
+    }
+
+    #[test]
+    fn stats_reports_mmap_backing_for_snapshot_engines() {
+        let path = std::env::temp_dir().join("ds_server_stats.snap");
+        let _ = std::fs::remove_file(&path);
+        test_engine().save_snapshot(&path).unwrap();
+        let engine = Arc::new(QueryEngine::load(&path).unwrap());
+        let expected_mode = format!("mode={}", engine.backing_mode());
+        let server = QueryServer::start(engine, "127.0.0.1:0").unwrap();
+        let resp = ask(server.addr(), &["STATS", "QUIT"]);
+        // mmap on 64-bit unix; the heap fallback elsewhere — either way the
+        // snapshot resident size (the file length) is reported
+        assert!(resp[0].contains(&expected_mode), "{:?}", resp[0]);
+        // loaded engines weren't accumulated here: no comm stats to report
+        assert!(resp[0].contains("comm=none"), "{:?}", resp[0]);
+        let resident: u64 = resp[0]
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("resident="))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(resident, std::fs::metadata(&path).unwrap().len());
+        server.stop();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn reload_on_heap_engine_reports_error_and_keeps_serving() {
+        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
+        let resp = ask(server.addr(), &["RELOAD", "DEG 33", "QUIT"]);
+        assert!(resp[0].starts_with("ERR reload"), "{:?}", resp[0]);
+        // the failed reload changed nothing — queries still flow
+        assert!(resp[1].parse::<f64>().is_ok(), "{:?}", resp[1]);
+        assert_eq!(server.generation(), 0);
+        server.stop();
+    }
+
+    #[test]
+    fn finished_workers_are_reaped_in_the_accept_loop() {
+        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        for _ in 0..16 {
+            let resp = ask(addr, &["DEG 0", "QUIT"]);
+            assert!(resp[0].parse::<f64>().is_ok());
+        }
+        // every connection above is closed; after the next reactor round
+        // the live-connection count must fall back to ~0 rather than
+        // accumulating one slot per historical connection
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(5);
+        loop {
+            // poke the loop so it runs a sweep pass even if idle
+            let _ = ask(addr, &["QUIT"]);
+            if server.live_workers() <= 2 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "connections never swept: {}",
+                server.live_workers()
+            );
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn idle_connections_are_evicted_and_counted() {
+        let limits = ConnLimits {
+            read_timeout: Duration::from_millis(10),
+            idle_cap: Duration::from_millis(80),
+        };
+        let server =
+            QueryServer::start_with_limits(test_engine(), "127.0.0.1:0", limits)
+                .unwrap();
+        let addr = server.addr();
+        // A silent client — and a half-open one that wrote a partial line
+        // (no newline) — must both be evicted, not parked forever.
+        let silent = TcpStream::connect(addr).unwrap();
+        let half_open = TcpStream::connect(addr).unwrap();
+        {
+            let mut w = half_open.try_clone().unwrap();
+            write!(w, "DEG ").unwrap(); // never finishes the line
+        }
+        for stream in [silent, half_open] {
+            let mut r = BufReader::new(stream);
+            let mut resp = String::new();
+            r.read_line(&mut resp).unwrap();
+            assert!(resp.starts_with("ERR idle"), "{resp:?}");
+            resp.clear();
+            assert_eq!(r.read_line(&mut resp).unwrap(), 0, "not closed");
+        }
+        // A live client still works and sees the eviction counter in STATS.
+        let out = ask(addr, &["STATS", "QUIT"]);
+        assert!(out[0].contains("evicted=2"), "{:?}", out[0]);
+        assert_eq!(server.evicted(), 2);
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let resp = ask(addr, &["DEG 0", "QUIT"]);
+                    resp[0].parse::<f64>().unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let d = h.join().unwrap();
+            assert!((d - 16.0).abs() < 2.0);
+        }
+        server.stop();
+    }
+}

@@ -1,703 +1,11 @@
-//! TCP query server: a line protocol over the persistent [`QueryEngine`].
+//! Compatibility shim: the TCP query server now lives in the serving
+//! tier ([`super::serve`]).
 //!
-//! This is the deployment face of the "leave-behind query engine": a
-//! saved DegreeSketch is loaded once and served to clients. Protocol
-//! (request → response, one line each):
-//!
-//! ```text
-//! DEG <x>              → <estimate> | NONE
-//! TRI <x> <y>          → <intersection> <union> <dominated:0|1> | NONE
-//! JACCARD <x> <y>      → <jaccard> | NONE
-//! UNION <x> [<y> ...]  → <estimate> | NONE
-//! STATS                → vertices=<n> ranks=<p> p=<p> mem=<bytes>
-//!                        dense=<n> mode=<heap|mmap> resident=<bytes>
-//!                        evicted=<n>
-//!                        comm=<sequential|threaded|process|tcp|none>
-//!                        [ckpts=<n> restores=<n> hb_stale_ms=<ms>]
-//!                        [rank<i>=<msgs>/<bytes>/<flushes> ...]
-//! METRICS              → Prometheus text exposition, terminated by a
-//!                        `# EOF` line (the one multi-line response)
-//! QUIT                 → BYE (closes the connection)
-//! ```
-//!
-//! `METRICS` scrapes the server's own registry (per-query-kind request
-//! counters and log2-bucketed latency histograms with p50/p90/p99
-//! quantile summaries, engine gauges, comm/checkpoint/recovery and
-//! heartbeat-staleness gauges) concatenated with the process-global
-//! [`telemetry::registry`] (fabric counters merged from worker TELEM
-//! deltas). Clients read until the `# EOF` line — it is both the
-//! OpenMetrics terminator and the framing for this one multi-line verb.
-//!
-//! `mem` is the engine's *private heap* sketch bytes and `resident` the
-//! *mapped snapshot* bytes (shared address space): a heap-loaded server
-//! reports `mem=<bytes> mode=heap resident=0`, a snapshot-backed one
-//! `mem=0 mode=mmap resident=<file len>` — so operators can confirm that
-//! N processes serving one snapshot share a single page-cache copy.
-//!
-//! `comm` names the comm backend that accumulated the sketch, and each
-//! `rank<i>` field reports that rank's inbound accumulation traffic
-//! (messages/bytes/flushes), so operators can spot partition skew from a
-//! live server. Engines loaded from disk report `comm=none` — their
-//! accumulation happened in another process.
-//!
-//! Unknown commands answer `ERR <reason>`. One thread per connection; the
-//! engine is shared read-only. Finished connection threads are reaped in
-//! the accept loop (not hoarded until shutdown), so long-lived servers
-//! hold O(live connections) handles.
-//!
-//! Connections are additionally bounded by [`ConnLimits`]: reads carry a
-//! socket-level timeout, and a client silent for longer than the idle cap
-//! is evicted (answered `ERR idle timeout, closing` and disconnected)
-//! rather than pinning a thread forever — the defense against half-open
-//! peers that vanished without a FIN. Evictions are counted and reported
-//! as `evicted=<n>` in `STATS`.
+//! The original thread-per-connection server grew into an event-driven
+//! reactor + batcher + cache stack; this module keeps the old import
+//! path (`coordinator::server::QueryServer`) and the old API
+//! (`start`/`start_with_limits`/`stop`, `ConnLimits`) stable for
+//! existing callers and tests. New code should import from
+//! [`crate::coordinator::serve`] directly.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
-
-use anyhow::Result;
-
-use crate::hll::Domination;
-use crate::telemetry::{self, prom, Registry};
-
-use super::engine::QueryEngine;
-
-/// Join every finished worker, keeping only live ones.
-fn reap_finished(workers: &mut Vec<JoinHandle<()>>) {
-    let mut i = 0;
-    while i < workers.len() {
-        if workers[i].is_finished() {
-            let _ = workers.swap_remove(i).join();
-        } else {
-            i += 1;
-        }
-    }
-}
-
-/// Per-connection read bounds: `read_timeout` is the socket-level poll
-/// granularity; a client silent for longer than `idle_cap` is evicted.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ConnLimits {
-    pub read_timeout: Duration,
-    pub idle_cap: Duration,
-}
-
-impl Default for ConnLimits {
-    fn default() -> Self {
-        Self {
-            read_timeout: Duration::from_millis(250),
-            idle_cap: Duration::from_secs(300),
-        }
-    }
-}
-
-/// A running server handle (listener thread spawns per-connection threads).
-pub struct QueryServer {
-    addr: std::net::SocketAddr,
-    shutdown: Arc<AtomicBool>,
-    /// Connection threads currently tracked by the accept loop (post-reap).
-    live: Arc<AtomicUsize>,
-    /// Connections evicted for exceeding the idle cap (reported in STATS).
-    evicted: Arc<AtomicU64>,
-    /// This server's metric series (query counters + latency histograms),
-    /// exposed by the `METRICS` verb alongside the process-global registry.
-    metrics: Arc<Registry>,
-    handle: Option<std::thread::JoinHandle<()>>,
-}
-
-impl QueryServer {
-    /// Bind and start serving. `addr` like `"127.0.0.1:0"` (0 = ephemeral).
-    pub fn start(engine: Arc<QueryEngine>, addr: &str) -> Result<Self> {
-        Self::start_with_limits(engine, addr, ConnLimits::default())
-    }
-
-    /// [`QueryServer::start`] with explicit per-connection read bounds.
-    pub fn start_with_limits(
-        engine: Arc<QueryEngine>,
-        addr: &str,
-        limits: ConnLimits,
-    ) -> Result<Self> {
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let live = Arc::new(AtomicUsize::new(0));
-        let evicted = Arc::new(AtomicU64::new(0));
-        let metrics = Arc::new(Registry::new());
-        let stop = Arc::clone(&shutdown);
-        let live_in = Arc::clone(&live);
-        let evicted_in = Arc::clone(&evicted);
-        let metrics_in = Arc::clone(&metrics);
-        let handle = std::thread::spawn(move || {
-            let mut workers: Vec<JoinHandle<()>> = Vec::new();
-            loop {
-                if stop.load(Ordering::Relaxed) {
-                    break;
-                }
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let engine = Arc::clone(&engine);
-                        let evictions = Arc::clone(&evicted_in);
-                        let metrics = Arc::clone(&metrics_in);
-                        workers.push(std::thread::spawn(move || {
-                            let _ = serve_connection(
-                                stream, &engine, limits, &evictions, &metrics,
-                            );
-                        }));
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
-                }
-                // reap completed connections so the handle vector tracks
-                // live connections instead of growing for the server's
-                // whole lifetime
-                reap_finished(&mut workers);
-                live_in.store(workers.len(), Ordering::Relaxed);
-            }
-            for w in workers {
-                let _ = w.join();
-            }
-            live_in.store(0, Ordering::Relaxed);
-        });
-        Ok(Self {
-            addr: local,
-            shutdown,
-            live,
-            evicted,
-            metrics,
-            handle: Some(handle),
-        })
-    }
-
-    pub fn addr(&self) -> std::net::SocketAddr {
-        self.addr
-    }
-
-    /// Connection-thread handles currently held by the accept loop. Stays
-    /// bounded by the number of live connections thanks to in-loop reaping.
-    pub fn live_workers(&self) -> usize {
-        self.live.load(Ordering::Relaxed)
-    }
-
-    /// Connections evicted so far for exceeding the idle cap.
-    pub fn evicted(&self) -> u64 {
-        self.evicted.load(Ordering::Relaxed)
-    }
-
-    /// This server's metric registry (query counters, latency histograms).
-    pub fn metrics(&self) -> &Registry {
-        &self.metrics
-    }
-
-    /// Stop accepting and join the listener thread.
-    pub fn stop(mut self) {
-        self.shutdown
-            .store(true, std::sync::atomic::Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for QueryServer {
-    fn drop(&mut self) {
-        self.shutdown
-            .store(true, std::sync::atomic::Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn serve_connection(
-    stream: TcpStream,
-    engine: &QueryEngine,
-    limits: ConnLimits,
-    evictions: &AtomicU64,
-    metrics: &Registry,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(limits.read_timeout))?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let mut buf = Vec::new();
-    loop {
-        buf.clear();
-        let last_activity = Instant::now();
-        // Deadline-bounded line read: a socket-level timeout makes each
-        // read_until attempt return WouldBlock/TimedOut, and silence past
-        // the idle cap evicts the client. A half-written line counts as
-        // silence too — partial bytes never reset the idle clock.
-        let eof = loop {
-            match reader.read_until(b'\n', &mut buf) {
-                Ok(0) => break true,
-                Ok(_) if buf.ends_with(b"\n") => break false,
-                Ok(_) => {} // partial line: keep reading toward the cap
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        std::io::ErrorKind::WouldBlock
-                            | std::io::ErrorKind::TimedOut
-                    ) =>
-                {
-                    if last_activity.elapsed() >= limits.idle_cap {
-                        evictions.fetch_add(1, Ordering::Relaxed);
-                        let _ = writeln!(writer, "ERR idle timeout, closing");
-                        return Ok(());
-                    }
-                }
-                Err(e) => return Err(e.into()),
-            }
-        };
-        if buf.is_empty() {
-            return Ok(()); // clean EOF between lines
-        }
-        let line = String::from_utf8_lossy(&buf);
-        match respond(line.trim_end(), engine, evictions, metrics) {
-            Response::Line(s) => writeln!(writer, "{s}")?,
-            // Multi-line payloads carry their own framing (the final
-            // `# EOF` line) and their own trailing newline.
-            Response::Multi(s) => writer.write_all(s.as_bytes())?,
-            Response::Bye => {
-                writeln!(writer, "BYE")?;
-                return Ok(());
-            }
-        }
-        if eof {
-            return Ok(()); // final line arrived without a trailing newline
-        }
-    }
-}
-
-enum Response {
-    Line(String),
-    /// A multi-line body that ends with its own framing (`# EOF\n`).
-    Multi(String),
-    Bye,
-}
-
-/// Record one served query into the per-server registry: a request
-/// counter and a latency histogram sample (microseconds), both labeled
-/// with the query kind so `METRICS` exposes p50/p90/p99 per verb.
-fn record_query(metrics: &Registry, kind: &str, started: Instant) {
-    metrics
-        .counter("degreesketch_queries_total", &[("kind", kind)])
-        .inc();
-    metrics
-        .histogram("degreesketch_query_latency_us", &[("kind", kind)])
-        .observe(started.elapsed().as_micros() as u64);
-}
-
-/// Refresh scrape-time gauges: engine sizing, eviction count, and — when
-/// this engine was accumulated in-process — the comm fabric's message,
-/// checkpoint, recovery and heartbeat-staleness totals (per-rank traffic
-/// under a `rank` label).
-fn scrape_gauges(metrics: &Registry, engine: &QueryEngine, evictions: &AtomicU64) {
-    let g = |name: &str, v: u64| metrics.gauge(name, &[]).set(v);
-    g("degreesketch_server_vertices", engine.num_vertices() as u64);
-    g("degreesketch_server_heap_bytes", engine.heap_bytes() as u64);
-    g(
-        "degreesketch_server_resident_bytes",
-        engine.resident_bytes() as u64,
-    );
-    g(
-        "degreesketch_server_dense_sketches",
-        engine.num_dense_sketches() as u64,
-    );
-    g(
-        "degreesketch_server_evicted_connections",
-        evictions.load(Ordering::Relaxed),
-    );
-    if let Some(cs) = engine.accumulation_stats() {
-        g("degreesketch_comm_messages", cs.messages);
-        g("degreesketch_comm_bytes", cs.bytes);
-        g("degreesketch_comm_flushes", cs.flushes);
-        g("degreesketch_comm_checkpoints", cs.checkpoints);
-        g("degreesketch_comm_restores", cs.restores);
-        g("degreesketch_comm_hb_stale_ms", cs.max_stale_ms);
-        for (r, pr) in cs.per_rank.iter().enumerate() {
-            let rank = r.to_string();
-            metrics
-                .gauge("degreesketch_comm_rank_messages", &[("rank", &rank)])
-                .set(pr.messages);
-            metrics
-                .gauge("degreesketch_comm_rank_bytes", &[("rank", &rank)])
-                .set(pr.bytes);
-        }
-    }
-}
-
-fn respond(
-    line: &str,
-    engine: &QueryEngine,
-    evictions: &AtomicU64,
-    metrics: &Registry,
-) -> Response {
-    let mut it = line.split_whitespace();
-    let cmd = match it.next() {
-        Some(c) => c.to_ascii_uppercase(),
-        None => return Response::Line("ERR empty".into()),
-    };
-    let parse_ids = |it: std::str::SplitWhitespace| -> Result<Vec<u64>, String> {
-        it.map(|t| t.parse::<u64>().map_err(|_| format!("bad id {t:?}")))
-            .collect()
-    };
-    let started = Instant::now();
-    match cmd.as_str() {
-        "DEG" => match parse_ids(it) {
-            Ok(ids) if ids.len() == 1 => {
-                let resp = Response::Line(
-                    engine
-                        .degree(ids[0])
-                        .map(|d| format!("{d:.3}"))
-                        .unwrap_or_else(|| "NONE".into()),
-                );
-                record_query(metrics, "deg", started);
-                resp
-            }
-            Ok(_) => Response::Line("ERR usage: DEG <x>".into()),
-            Err(e) => Response::Line(format!("ERR {e}")),
-        },
-        "TRI" => match parse_ids(it) {
-            Ok(ids) if ids.len() == 2 => {
-                let resp = match engine.intersection(ids[0], ids[1]) {
-                    Some(est) => Response::Line(format!(
-                        "{:.3} {:.3} {}",
-                        est.intersection,
-                        est.union,
-                        u8::from(est.domination != Domination::None)
-                    )),
-                    None => Response::Line("NONE".into()),
-                };
-                record_query(metrics, "tri", started);
-                resp
-            }
-            Ok(_) => Response::Line("ERR usage: TRI <x> <y>".into()),
-            Err(e) => Response::Line(format!("ERR {e}")),
-        },
-        "JACCARD" => match parse_ids(it) {
-            Ok(ids) if ids.len() == 2 => {
-                let resp = Response::Line(
-                    engine
-                        .jaccard(ids[0], ids[1])
-                        .map(|j| format!("{j:.6}"))
-                        .unwrap_or_else(|| "NONE".into()),
-                );
-                record_query(metrics, "jaccard", started);
-                resp
-            }
-            Ok(_) => Response::Line("ERR usage: JACCARD <x> <y>".into()),
-            Err(e) => Response::Line(format!("ERR {e}")),
-        },
-        "UNION" => match parse_ids(it) {
-            Ok(ids) if !ids.is_empty() => {
-                let resp = Response::Line(
-                    engine
-                        .union_cardinality(&ids)
-                        .map(|u| format!("{u:.3}"))
-                        .unwrap_or_else(|| "NONE".into()),
-                );
-                record_query(metrics, "union", started);
-                resp
-            }
-            Ok(_) => Response::Line("ERR usage: UNION <x> [<y> ...]".into()),
-            Err(e) => Response::Line(format!("ERR {e}")),
-        },
-        "METRICS" => {
-            scrape_gauges(metrics, engine, evictions);
-            Response::Multi(prom::render(&[metrics, telemetry::registry()]))
-        }
-        "STATS" => {
-            let mut line = format!(
-                "vertices={} ranks={} p={} mem={} dense={} mode={} \
-                 resident={} evicted={}",
-                engine.num_vertices(),
-                engine.num_ranks(),
-                engine.config().p(),
-                engine.heap_bytes(),
-                engine.num_dense_sketches(),
-                engine.backing_mode(),
-                engine.resident_bytes(),
-                evictions.load(Ordering::Relaxed)
-            );
-            match engine.accumulation_stats() {
-                Some(cs) => {
-                    line.push_str(&format!(
-                        " comm={} ckpts={} restores={} hb_stale_ms={}",
-                        cs.mode.name(),
-                        cs.checkpoints,
-                        cs.restores,
-                        cs.max_stale_ms
-                    ));
-                    for (r, pr) in cs.per_rank.iter().enumerate() {
-                        line.push_str(&format!(
-                            " rank{r}={}/{}/{}",
-                            pr.messages, pr.bytes, pr.flushes
-                        ));
-                    }
-                }
-                None => line.push_str(" comm=none"),
-            }
-            Response::Line(line)
-        }
-        "QUIT" => Response::Bye,
-        other => Response::Line(format!("ERR unknown command {other:?}")),
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::coordinator::sketch::{accumulate_stream, AccumulateOptions};
-    use crate::graph::gen::karate;
-    use crate::graph::stream::MemoryStream;
-    use crate::hll::HllConfig;
-    use std::io::{BufRead, BufReader, Write};
-
-    fn test_engine() -> Arc<QueryEngine> {
-        let stream = MemoryStream::new(karate::edges());
-        let ds = accumulate_stream(
-            &stream,
-            2,
-            HllConfig::new(12, 0x5E),
-            AccumulateOptions::default(),
-        );
-        Arc::new(QueryEngine::new(ds))
-    }
-
-    fn ask(addr: std::net::SocketAddr, lines: &[&str]) -> Vec<String> {
-        let stream = TcpStream::connect(addr).unwrap();
-        let mut w = stream.try_clone().unwrap();
-        let mut r = BufReader::new(stream);
-        let mut out = Vec::new();
-        for l in lines {
-            writeln!(w, "{l}").unwrap();
-            let mut resp = String::new();
-            r.read_line(&mut resp).unwrap();
-            out.push(resp.trim().to_string());
-        }
-        out
-    }
-
-    /// One METRICS scrape: reads the multi-line body through its `# EOF`
-    /// framing line (inclusive).
-    fn scrape_metrics(addr: std::net::SocketAddr) -> String {
-        let stream = TcpStream::connect(addr).unwrap();
-        let mut w = stream.try_clone().unwrap();
-        let mut r = BufReader::new(stream);
-        writeln!(w, "METRICS").unwrap();
-        let mut text = String::new();
-        loop {
-            let mut line = String::new();
-            assert!(r.read_line(&mut line).unwrap() > 0, "closed before # EOF");
-            text.push_str(&line);
-            if line.trim_end() == "# EOF" {
-                break;
-            }
-        }
-        writeln!(w, "QUIT").unwrap();
-        text
-    }
-
-    #[test]
-    fn serves_queries_over_tcp() {
-        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
-        let addr = server.addr();
-        let resp = ask(
-            addr,
-            &[
-                "DEG 33",
-                "DEG 999",
-                "TRI 0 33",
-                "JACCARD 0 1",
-                "UNION 0 33",
-                "STATS",
-                "NOPE",
-                "QUIT",
-            ],
-        );
-        let d: f64 = resp[0].parse().unwrap();
-        assert!((d - 17.0).abs() < 2.0, "{resp:?}");
-        assert_eq!(resp[1], "NONE");
-        assert_eq!(resp[2].split_whitespace().count(), 3);
-        let j: f64 = resp[3].parse().unwrap();
-        assert!((0.0..=1.0).contains(&j));
-        assert!(resp[4].parse::<f64>().unwrap() > 20.0);
-        assert!(resp[5].starts_with("vertices=34"), "{:?}", resp[5]);
-        assert!(resp[5].contains("mode=heap"), "{:?}", resp[5]);
-        assert!(resp[5].contains("resident="), "{:?}", resp[5]);
-        // accumulated in-process on 2 sequential ranks: comm backend and
-        // both ranks' message/byte/flush counters are reported
-        assert!(resp[5].contains("comm=sequential"), "{:?}", resp[5]);
-        assert!(resp[5].contains("rank0="), "{:?}", resp[5]);
-        assert!(resp[5].contains("rank1="), "{:?}", resp[5]);
-        assert!(resp[6].starts_with("ERR"));
-        assert_eq!(resp[7], "BYE");
-        server.stop();
-    }
-
-    #[test]
-    fn metrics_verb_serves_valid_prometheus_text_with_quantiles() {
-        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
-        let addr = server.addr();
-        // Exercise each timed verb so every per-kind series exists.
-        let _ = ask(
-            addr,
-            &["DEG 0", "DEG 33", "TRI 0 33", "JACCARD 0 1", "UNION 0 33", "QUIT"],
-        );
-        let text = scrape_metrics(addr);
-        // Must pass the minimal Prometheus checker (TYPE lines, cumulative
-        // buckets, # EOF framing).
-        let samples = prom::check_text(&text)
-            .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{text}"));
-        assert!(samples > 10, "suspiciously few samples:\n{text}");
-        for kind in ["deg", "tri", "jaccard", "union"] {
-            assert!(
-                text.contains(&format!(
-                    "degreesketch_queries_total{{kind=\"{kind}\"}}"
-                )),
-                "missing counter for {kind}:\n{text}"
-            );
-            for q in ["0.5", "0.99"] {
-                assert!(
-                    text.contains(&format!(
-                        "degreesketch_query_latency_us_quantiles\
-                         {{kind=\"{kind}\",quantile=\"{q}\"}}"
-                    )),
-                    "missing p{q} for {kind}:\n{text}"
-                );
-            }
-        }
-        // Comm gauges from the in-process accumulation are scraped too.
-        assert!(text.contains("degreesketch_comm_messages"), "{text}");
-        assert!(text.contains("degreesketch_comm_hb_stale_ms"), "{text}");
-        // DEG ran twice above; the counter must say so.
-        assert!(
-            text.contains("degreesketch_queries_total{kind=\"deg\"} 2"),
-            "{text}"
-        );
-        server.stop();
-    }
-
-    #[test]
-    fn stats_reports_hb_staleness_alongside_recovery_counts() {
-        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
-        let resp = ask(server.addr(), &["STATS", "QUIT"]);
-        assert!(resp[0].contains("ckpts="), "{:?}", resp[0]);
-        assert!(resp[0].contains("restores="), "{:?}", resp[0]);
-        assert!(resp[0].contains("hb_stale_ms=0"), "{:?}", resp[0]);
-        server.stop();
-    }
-
-    #[test]
-    fn stats_reports_mmap_backing_for_snapshot_engines() {
-        let path = std::env::temp_dir().join("ds_server_stats.snap");
-        let _ = std::fs::remove_file(&path);
-        test_engine().save_snapshot(&path).unwrap();
-        let engine = Arc::new(QueryEngine::load(&path).unwrap());
-        let expected_mode = format!("mode={}", engine.backing_mode());
-        let server = QueryServer::start(engine, "127.0.0.1:0").unwrap();
-        let resp = ask(server.addr(), &["STATS", "QUIT"]);
-        // mmap on 64-bit unix; the heap fallback elsewhere — either way the
-        // snapshot resident size (the file length) is reported
-        assert!(resp[0].contains(&expected_mode), "{:?}", resp[0]);
-        // loaded engines weren't accumulated here: no comm stats to report
-        assert!(resp[0].contains("comm=none"), "{:?}", resp[0]);
-        let resident: u64 = resp[0]
-            .split_whitespace()
-            .find_map(|t| t.strip_prefix("resident="))
-            .unwrap()
-            .parse()
-            .unwrap();
-        assert_eq!(resident, std::fs::metadata(&path).unwrap().len());
-        server.stop();
-        std::fs::remove_file(&path).unwrap();
-    }
-
-    #[test]
-    fn finished_workers_are_reaped_in_the_accept_loop() {
-        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
-        let addr = server.addr();
-        for _ in 0..16 {
-            let resp = ask(addr, &["DEG 0", "QUIT"]);
-            assert!(resp[0].parse::<f64>().is_ok());
-        }
-        // every connection above is closed; after the next accept-loop
-        // tick the tracked handle count must fall back to ~0 rather than
-        // accumulating one handle per historical connection
-        let deadline = std::time::Instant::now()
-            + std::time::Duration::from_secs(5);
-        loop {
-            // poke the loop so it runs a reap pass even if idle
-            let _ = ask(addr, &["QUIT"]);
-            if server.live_workers() <= 2 {
-                break;
-            }
-            assert!(
-                std::time::Instant::now() < deadline,
-                "workers never reaped: {}",
-                server.live_workers()
-            );
-            std::thread::sleep(std::time::Duration::from_millis(20));
-        }
-        server.stop();
-    }
-
-    #[test]
-    fn idle_connections_are_evicted_and_counted() {
-        let limits = ConnLimits {
-            read_timeout: Duration::from_millis(10),
-            idle_cap: Duration::from_millis(80),
-        };
-        let server =
-            QueryServer::start_with_limits(test_engine(), "127.0.0.1:0", limits)
-                .unwrap();
-        let addr = server.addr();
-        // A silent client — and a half-open one that wrote a partial line
-        // (no newline) — must both be evicted, not parked forever.
-        let silent = TcpStream::connect(addr).unwrap();
-        let half_open = TcpStream::connect(addr).unwrap();
-        {
-            let mut w = half_open.try_clone().unwrap();
-            write!(w, "DEG ").unwrap(); // never finishes the line
-        }
-        for stream in [silent, half_open] {
-            let mut r = BufReader::new(stream);
-            let mut resp = String::new();
-            r.read_line(&mut resp).unwrap();
-            assert!(resp.starts_with("ERR idle"), "{resp:?}");
-            resp.clear();
-            assert_eq!(r.read_line(&mut resp).unwrap(), 0, "not closed");
-        }
-        // A live client still works and sees the eviction counter in STATS.
-        let out = ask(addr, &["STATS", "QUIT"]);
-        assert!(out[0].contains("evicted=2"), "{:?}", out[0]);
-        assert_eq!(server.evicted(), 2);
-        server.stop();
-    }
-
-    #[test]
-    fn concurrent_clients() {
-        let server = QueryServer::start(test_engine(), "127.0.0.1:0").unwrap();
-        let addr = server.addr();
-        let handles: Vec<_> = (0..4)
-            .map(|_| {
-                std::thread::spawn(move || {
-                    let resp = ask(addr, &["DEG 0", "QUIT"]);
-                    resp[0].parse::<f64>().unwrap()
-                })
-            })
-            .collect();
-        for h in handles {
-            let d = h.join().unwrap();
-            assert!((d - 16.0).abs() < 2.0);
-        }
-        server.stop();
-    }
-}
+pub use super::serve::{ConnLimits, QueryServer};

@@ -13,11 +13,20 @@
 //!                         [--resume DIR|FILE]
 //! degreesketch query      --sketch sketch.d/ deg 42
 //! degreesketch serve      --sketch sketch.d/|sketch.snap --addr 127.0.0.1:7171
+//!                         [--workers N] [--batch-max N]
+//!                         [--cache-capacity N] [--pending-cap N]
+//!                         [--idle-secs S]
 //! degreesketch snapshot   create  --sketch sketch.d/ --out sketch.snap
 //! degreesketch snapshot   create  --graph g.txt --ranks 8 --p 12 --out s.snap
 //! degreesketch snapshot   inspect --file sketch.snap [--verify]
 //! degreesketch snapshot   serve   --file sketch.snap --addr 127.0.0.1:7171
 //!                                 [--mode auto|mmap|heap] [--self-check]
+//!                                 [serve flags as above]
+//! degreesketch loadgen    --addr 127.0.0.1:7171 --connections 1000
+//!                         --requests 100000 [--threads N]
+//!                         [--hot-vertices N] [--hot-fraction F]
+//!                         [--live-reload] [--max-p99-ms MS]
+//!                         [--out BENCH_serving.json] [--seed S]
 //! degreesketch anf        --graph g.txt --ranks 8 --p 8 --max-t 5 [--exact]
 //! degreesketch triangles  edge|vertex --graph g.txt --k 100 --p 12
 //!                         [--intersect mle|ix|pjrt] [--exact]
@@ -58,6 +67,7 @@ use degreesketch::cli::Args;
 use degreesketch::comm::{Backend, FaultPolicy, FlushPolicy};
 use degreesketch::config::Config;
 use degreesketch::coordinator::anf::{neighborhood_approximation, AnfOptions};
+use degreesketch::coordinator::serve::{loadgen, ConnLimits, ServeOptions};
 use degreesketch::coordinator::sketch::{
     accumulate_stream, AccumulateOptions,
 };
@@ -105,7 +115,8 @@ fn run(argv: &[String]) -> Result<()> {
         "accumulate" => cmd_accumulate(&args, &config),
         "worker" => cmd_worker(&args),
         "query" => cmd_query(&args),
-        "serve" => cmd_serve(&args),
+        "serve" => cmd_serve(&args, &config),
+        "loadgen" => cmd_loadgen(&args),
         "snapshot" => cmd_snapshot(&args, &config),
         "anf" => cmd_anf(&args, &config),
         "triangles" => cmd_triangles(&args, &config),
@@ -124,8 +135,8 @@ fn run(argv: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "degreesketch — distributed cardinality sketches on massive graphs\n\
-         subcommands: generate accumulate worker query serve snapshot anf \
-         triangles exact calibrate-beta trace info\n\
+         subcommands: generate accumulate worker query serve loadgen \
+         snapshot anf triangles exact calibrate-beta trace info\n\
          see README.md for full usage"
     );
 }
@@ -434,9 +445,45 @@ fn cmd_query(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+/// Serving-tier options: config `serve.*` keys as the base, per-run
+/// flags on top.
+fn serve_options_of(args: &Args, config: &Config) -> Result<ServeOptions> {
+    let base = config.serve_options()?;
+    Ok(ServeOptions {
+        workers: args.get_usize("workers", base.workers)?,
+        batch_max: args.get_usize("batch-max", base.batch_max)?,
+        cache_capacity: args
+            .get_usize("cache-capacity", base.cache_capacity)?,
+        pending_cap: args.get_usize("pending-cap", base.pending_cap)?,
+        limits: ConnLimits {
+            read_timeout: base.limits.read_timeout,
+            idle_cap: std::time::Duration::from_secs(
+                args.get_u64("idle-secs", base.limits.idle_cap.as_secs())?,
+            ),
+        },
+    })
+}
+
+fn print_serving(server: &QueryServer, opts: &ServeOptions) {
+    println!("serving DegreeSketch queries on {}", server.addr());
+    println!(
+        "serving tier: {} workers, batch_max={}, cache={} entries, \
+         pending_cap={}",
+        opts.resolved_workers(),
+        opts.batch_max,
+        opts.cache_capacity,
+        opts.pending_cap
+    );
+    println!(
+        "protocol: DEG x | TRI x y | JACCARD x y | UNION x.. | \
+         STATS | METRICS | RELOAD [path] | QUIT"
+    );
+}
+
+fn cmd_serve(args: &Args, config: &Config) -> Result<()> {
     let dir = args.require("sketch")?.to_string();
     let addr = args.get_or("addr", "127.0.0.1:7171").to_string();
+    let opts = serve_options_of(args, config)?;
     args.finish()?;
     let engine = Arc::new(QueryEngine::load(Path::new(&dir))?);
     println!(
@@ -446,15 +493,83 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.heap_bytes(),
         engine.resident_bytes()
     );
-    let server = QueryServer::start(engine, &addr)?;
-    println!("serving DegreeSketch queries on {}", server.addr());
-    println!(
-        "protocol: DEG x | TRI x y | JACCARD x y | UNION x.. | \
-         STATS | METRICS | QUIT"
-    );
+    let server = QueryServer::start_with_opts(engine, &addr, opts)?;
+    print_serving(&server, &opts);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let defaults = loadgen::LoadgenOptions::default();
+    let hot_fraction = match args.get("hot-fraction") {
+        Some(s) => s
+            .parse::<f64>()
+            .with_context(|| format!("bad --hot-fraction {s:?}"))?,
+        None => defaults.hot_fraction,
+    };
+    let max_p99_ms = match args.get("max-p99-ms") {
+        Some(s) => Some(
+            s.parse::<f64>()
+                .with_context(|| format!("bad --max-p99-ms {s:?}"))?,
+        ),
+        None => None,
+    };
+    let opts = loadgen::LoadgenOptions {
+        addr: args.get_or("addr", &defaults.addr).to_string(),
+        connections: args.get_usize("connections", defaults.connections)?,
+        requests: args.get_u64("requests", defaults.requests)?,
+        threads: args.get_usize("threads", defaults.threads)?,
+        hot_vertices: args.get_usize("hot-vertices", defaults.hot_vertices)?,
+        hot_fraction,
+        seed: args.get_u64("seed", defaults.seed)?,
+        live_reload: args.has("live-reload"),
+        out: args.get("out").map(PathBuf::from),
+        max_p99_ms,
+    };
+    args.finish()?;
+    println!(
+        "loadgen: {} connections, {} requests against {} \
+         (hot set {} @ {:.0}%{})",
+        opts.connections,
+        opts.requests,
+        opts.addr,
+        opts.hot_vertices,
+        opts.hot_fraction * 100.0,
+        if opts.live_reload { ", live reload at halfway" } else { "" }
+    );
+    let report = loadgen::run(&opts)?;
+    println!(
+        "done: {} ok / {} errors in {:.2}s — {:.0} qps",
+        report.responses_ok,
+        report.errors,
+        report.elapsed.as_secs_f64(),
+        report.qps
+    );
+    println!(
+        "latency p50={}us p90={}us p99={}us; cache hit rate {:.1}% \
+         ({} hits / {} misses), shed={}",
+        report.p50_us,
+        report.p90_us,
+        report.p99_us,
+        report.cache_hit_rate() * 100.0,
+        report.cache_hits,
+        report.cache_misses,
+        report.shed
+    );
+    if report.reloaded {
+        println!(
+            "live reload: generation {} -> {}",
+            report.generation_start, report.generation_end
+        );
+    }
+    if let Some(out) = &opts.out {
+        println!("wrote {}", out.display());
+    }
+    if report.errors > 0 {
+        bail!("{} requests failed", report.errors);
+    }
+    Ok(())
 }
 
 fn parse_snapshot_mode(args: &Args) -> Result<SnapshotMode> {
@@ -559,6 +674,13 @@ fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
             let addr = args.get_or("addr", "127.0.0.1:7171").to_string();
             let mode = parse_snapshot_mode(args)?;
             let self_check = args.has("self-check");
+            let mut opts = serve_options_of(args, config)?;
+            if self_check {
+                // one worker makes batch formation observable: while it
+                // chews the first request, the rest of a pipelined burst
+                // queues up and drains as one batch
+                opts.workers = 1;
+            }
             args.finish()?;
             let engine = Arc::new(QueryEngine::open_snapshot_with(
                 Path::new(&file),
@@ -570,51 +692,14 @@ fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
                 engine.backing_mode(),
                 engine.resident_bytes()
             );
-            let server = QueryServer::start(engine, &addr)?;
-            println!("serving DegreeSketch queries on {}", server.addr());
+            let server = QueryServer::start_with_opts(engine, &addr, opts)?;
+            print_serving(&server, &opts);
             if self_check {
-                // round-trip a client through the live server, then exit —
-                // used by CI to prove serve-from-snapshot end to end
-                use std::io::{BufRead, BufReader, Write};
-                let stream = std::net::TcpStream::connect(server.addr())?;
-                let mut w = stream.try_clone()?;
-                let mut r = BufReader::new(stream);
-                for probe in ["STATS", "DEG 0"] {
-                    writeln!(w, "{probe}")?;
-                    let mut resp = String::new();
-                    r.read_line(&mut resp)?;
-                    println!("self-check {probe} -> {}", resp.trim());
-                }
-                // METRICS is the one multi-line verb: read through its
-                // `# EOF` framing line, then validate the exposition.
-                writeln!(w, "METRICS")?;
-                let mut text = String::new();
-                loop {
-                    let mut line = String::new();
-                    if r.read_line(&mut line)? == 0 {
-                        bail!("server closed before # EOF in METRICS");
-                    }
-                    text.push_str(&line);
-                    if line.trim_end() == "# EOF" {
-                        break;
-                    }
-                }
-                let samples = degreesketch::telemetry::prom::check_text(&text)
-                    .map_err(anyhow::Error::msg)
-                    .context("self-check METRICS invalid")?;
-                println!("self-check METRICS -> {samples} samples, valid");
-                writeln!(w, "QUIT")?;
-                let mut resp = String::new();
-                r.read_line(&mut resp)?;
-                println!("self-check QUIT -> {}", resp.trim());
+                self_check_serving(&server)?;
                 server.stop();
                 println!("self-check OK");
                 return Ok(());
             }
-            println!(
-                "protocol: DEG x | TRI x y | JACCARD x y | UNION x.. | \
-                 STATS | METRICS | QUIT"
-            );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
@@ -623,6 +708,108 @@ fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
             bail!("snapshot action must be create|inspect|serve, got {other:?}")
         }
     }
+}
+
+/// Read one METRICS exposition from a live server (through `# EOF`).
+fn scrape_metrics(addr: std::net::SocketAddr) -> Result<String> {
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    let mut w = stream.try_clone()?;
+    let mut r = BufReader::new(stream);
+    writeln!(w, "METRICS")?;
+    let mut text = String::new();
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            bail!("server closed before # EOF in METRICS");
+        }
+        text.push_str(&line);
+        if line.trim_end() == "# EOF" {
+            break;
+        }
+    }
+    writeln!(w, "QUIT").ok();
+    Ok(text)
+}
+
+/// The value of an unlabeled series in an exposition, if present.
+fn metric_value(text: &str, series: &str) -> Option<f64> {
+    text.lines().find_map(|l| {
+        l.strip_prefix(series)?.strip_prefix(' ')?.trim().parse().ok()
+    })
+}
+
+/// The CI serving probe: basic verbs, a valid METRICS exposition, and
+/// proof that the batched path actually forms batches (>1) under a
+/// pipelined burst.
+fn self_check_serving(server: &QueryServer) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = server.addr();
+    let stream = std::net::TcpStream::connect(addr)?;
+    let mut w = stream.try_clone()?;
+    let mut r = BufReader::new(stream);
+    for probe in ["STATS", "DEG 0"] {
+        writeln!(w, "{probe}")?;
+        let mut resp = String::new();
+        r.read_line(&mut resp)?;
+        println!("self-check {probe} -> {}", resp.trim());
+    }
+    writeln!(w, "QUIT")?;
+    let mut resp = String::new();
+    r.read_line(&mut resp)?;
+    println!("self-check QUIT -> {}", resp.trim());
+
+    // The batched path: pipeline bursts of distinct queries (fresh ids
+    // each round, so every one misses the cache and queues) until the
+    // worker pool demonstrably drained >= 2 requests in one batch. With
+    // the single self-check worker, the burst queues while the worker
+    // chews its first request — a batch forms almost immediately.
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let mut round = 0u64;
+    let batch_max = loop {
+        round += 1;
+        let stream = std::net::TcpStream::connect(addr)?;
+        let mut w = stream.try_clone()?;
+        let mut r = BufReader::new(stream);
+        let mut burst = String::new();
+        for i in 0..32u64 {
+            burst.push_str(&format!("DEG {}\n", round * 100_000 + i));
+        }
+        w.write_all(burst.as_bytes())?;
+        w.flush()?;
+        for _ in 0..32 {
+            let mut line = String::new();
+            if r.read_line(&mut line)? == 0 {
+                bail!("server closed mid-burst");
+            }
+        }
+        writeln!(w, "QUIT").ok();
+        let text = scrape_metrics(addr)?;
+        match metric_value(&text, "degreesketch_query_batch_max") {
+            Some(v) if v >= 2.0 => break v,
+            _ if std::time::Instant::now() > deadline => {
+                bail!("batched path never formed a batch > 1")
+            }
+            _ => {}
+        }
+    };
+    // full exposition check, with the batch histogram now non-empty
+    let text = scrape_metrics(addr)?;
+    let samples = degreesketch::telemetry::prom::check_text(&text)
+        .map_err(anyhow::Error::msg)
+        .context("self-check METRICS invalid")?;
+    let batches = metric_value(&text, "degreesketch_query_batch_size_count")
+        .unwrap_or(0.0);
+    if batches < 1.0 {
+        bail!("batch-size histogram empty after burst:\n{text}");
+    }
+    println!(
+        "self-check METRICS -> {samples} samples, valid; {batches} \
+         batches drained, max batch {batch_max}"
+    );
+    Ok(())
 }
 
 fn cmd_anf(args: &Args, config: &Config) -> Result<()> {

@@ -71,6 +71,7 @@ pub use checkpoint::CheckpointRecord;
 pub use layout::{MAGIC, VERSION};
 pub use reader::{MappedSnapshot, RankStats};
 pub use source::{
-    AccessPattern, HeapSource, SnapshotMode, SnapshotSource, SourceKind,
+    AccessPattern, GenSwap, HeapSource, SnapshotMode, SnapshotSource,
+    SourceKind,
 };
 pub use writer::{SnapshotStats, SnapshotWriter};
