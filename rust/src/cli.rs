@@ -20,7 +20,7 @@ pub struct Args {
 /// Flags that take no value.
 const BOOL_FLAGS: &[&str] = &[
     "exact", "metrics", "help", "discard-dominated", "write", "quiet",
-    "verify", "self-check", "fixed-flush", "live-reload",
+    "verify", "self-check", "fixed-flush", "live-reload", "json",
 ];
 
 impl Args {

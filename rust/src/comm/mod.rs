@@ -233,6 +233,38 @@
 //!   `degreesketch_chaos_faults_total`.
 //! * **Flush policy** — adaptive threshold moves emit
 //!   `flush.grow`/`flush.shrink` with the channel and new threshold.
+//! * **Traffic heatmap** — when tracing is armed, every batch leaving
+//!   [`transport::flush_outbox`] is attributed to a
+//!   `src-rank × dst-rank × vertex-range` cell of a lock-free grid (see
+//!   [`crate::telemetry::heatmap`]; ranges are a stable hash split of
+//!   the vertex id space, 2^k buckets with `k =`
+//!   [`crate::telemetry::heatmap::RANGES_LOG2`]). In-memory backends
+//!   count `size_of::<Msg>()`-estimated bytes — identical to
+//!   [`CommStats::bytes`] accounting, so grid totals reconcile exactly;
+//!   socket backends count the same estimate while `CommStats` counts
+//!   encoded frame bytes, so there the grid is an estimate. Socket
+//!   workers drain their grid as `heat.cell` events (fields
+//!   `src`/`dst`/`range`/`msgs`/`bytes`/`k`/`epoch`) on the **reliable
+//!   STATE leg only** — never on lossy REPORTs — so a completed epoch's
+//!   heatmap is complete. Cells from a worker built with a different
+//!   `k` are folded into the unattributed lane rather than dropped. The
+//!   driver folds local + remote cells into a
+//!   [`crate::telemetry::heatmap::TrafficMatrix`] and emits one
+//!   `heat.epoch` summary event per epoch (total msgs/bytes, cut-edge
+//!   byte fraction and per-rank byte skew in per-mille, plus the
+//!   `CommStats` byte total for reconciliation); the same summary rides
+//!   back on [`CommStats::heat`]. Replay a trace with
+//!   `degreesketch heatmap <trace-dir>`.
+//! * **Query spans** — the serve tier samples 1-in-N requests
+//!   (`serve.span_sample`) into `serve.span` events (fields
+//!   `queue_us`/`kernel_us`/`flush_us`/`total_us`/`kind`/`hit`) written
+//!   to `serve.jsonl` in the trace dir, plus per-stage
+//!   `degreesketch_query_stage_us` histograms in METRICS. Requests
+//!   slower than `serve.slow_query_us` are **always** logged to the
+//!   `serve.access_log` JSONL regardless of sampling, so tail outliers
+//!   survive any sampling rate. Unsampled fast requests appear only in
+//!   aggregate counters — per-request loss is by design, bounded by the
+//!   sampling rate.
 //!
 //! Workers ship buffered events and counter deltas to the driver as a
 //! CRC'd, generation-qualified TELEM blob (see [`crate::telemetry::wire`])
@@ -301,6 +333,10 @@ pub struct CommStats {
     pub max_stale_ms: u64,
     /// Per-destination-rank breakdown (indexed by rank).
     pub per_rank: Vec<RankStats>,
+    /// Traffic-heatmap summary for the epoch (cut fraction / skew in
+    /// per-mille; see [`crate::telemetry::heatmap`]). `None` unless the
+    /// epoch ran with tracing armed.
+    pub heat: Option<crate::telemetry::heatmap::HeatSummary>,
 }
 
 impl CommStats {
@@ -532,6 +568,16 @@ pub trait Actor: Send {
     /// Called once per global quiescence round; may send messages (which
     /// trigger another round). Default: nothing.
     fn on_idle(&mut self, _out: &mut Outbox<Self::Msg>) {}
+
+    /// Vertex-range attribution for the traffic heatmap: map an outgoing
+    /// message to the vertex id that determines its destination range
+    /// (see [`crate::telemetry::heatmap::range_of`]). `None` (the
+    /// default) books the message into the unattributed lane — traffic
+    /// still counts toward totals and skew, just not toward per-range
+    /// hot-spot ranking. Only called while a heat grid is armed.
+    fn heat_vertex(_msg: &Self::Msg) -> Option<u64> {
+        None
+    }
 }
 
 /// An [`Actor`] whose post-epoch state has a wire format. The process
@@ -658,7 +704,13 @@ pub fn run_epoch_with<A: Actor + 'static>(
     actors: &mut Vec<A>,
     policy: FlushPolicy,
 ) -> CommStats {
-    match backend {
+    let ranks = actors.len();
+    let he = if crate::telemetry::enabled() {
+        Some(crate::telemetry::heatmap::epoch_begin(ranks))
+    } else {
+        None
+    };
+    let mut stats = match backend {
         Backend::Sequential => run_sequential(actors),
         Backend::Threaded => {
             let owned = std::mem::take(actors);
@@ -670,7 +722,11 @@ pub fn run_epoch_with<A: Actor + 'static>(
             "the socket backends need wire-capable actors: \
              call run_epoch_wire with a FabricActor"
         ),
+    };
+    if let Some(ep) = he {
+        stats.heat = crate::telemetry::heatmap::epoch_end(ep, stats.bytes);
     }
+    stats
 }
 
 /// Run one epoch on any backend, including the socket backends.
@@ -722,7 +778,13 @@ where
     A: FabricActor + 'static,
     A::Msg: WireMsg,
 {
-    match backend {
+    let ranks = actors.len();
+    let he = if crate::telemetry::enabled() {
+        Some(crate::telemetry::heatmap::epoch_begin(ranks))
+    } else {
+        None
+    };
+    let mut stats = match backend {
         Backend::Sequential => run_sequential(actors),
         Backend::Threaded => {
             let owned = std::mem::take(actors);
@@ -738,7 +800,11 @@ where
             stats
         }
         Backend::Tcp => tcp::run_global(actors, policy, seeds, fault),
+    };
+    if let Some(ep) = he {
+        stats.heat = crate::telemetry::heatmap::epoch_end(ep, stats.bytes);
     }
+    stats
 }
 
 #[cfg(test)]

@@ -441,6 +441,7 @@ mod unix {
             };
             let spec = EpochSpec {
                 resilient: plan.is_some(),
+                trace: crate::telemetry::enabled(),
                 chunk: plan.map_or(0, |p| p.chunk),
                 epoch: 1,
                 gen,

@@ -14,6 +14,7 @@ use std::collections::VecDeque;
 use super::outbox::FlushPolicy;
 use super::transport::{batch_bytes_estimate, flush_outbox, Transport};
 use super::{Actor, Backend, CommStats, Outbox};
+use crate::telemetry::heatmap::HeatSampler;
 
 /// The sequential transport: per-rank `VecDeque` receive queues.
 struct QueueTransport<'a, M> {
@@ -49,10 +50,23 @@ pub fn run_sequential<A: Actor>(actors: &mut [A]) -> CommStats {
     let mut outbox: Outbox<A::Msg> = Outbox::new(ranks, FlushPolicy::unbounded());
     let mut sent_base = 0u64;
 
+    // Per-rank heat samplers (None unless a heat grid is armed). The
+    // outbox is shared across ranks here, so the acting rank's sampler is
+    // passed at each drain to keep src attribution honest.
+    let heats: Vec<Option<HeatSampler<A::Msg>>> = (0..ranks)
+        .map(|r| HeatSampler::new(r, A::heat_vertex))
+        .collect();
+
     // Computation context (σ_P read) for every rank.
-    for actor in actors.iter_mut() {
+    for (rank, actor) in actors.iter_mut().enumerate() {
         actor.seed(&mut outbox);
-        drain(&mut outbox, &mut sent_base, &mut queues, &mut stats);
+        drain(
+            &mut outbox,
+            &mut sent_base,
+            &mut queues,
+            &mut stats,
+            heats[rank].as_ref(),
+        );
     }
 
     loop {
@@ -66,16 +80,28 @@ pub fn run_sequential<A: Actor>(actors: &mut [A]) -> CommStats {
                     stats.messages += 1;
                     stats.per_rank[rank].messages += 1;
                     progressed = true;
-                    drain(&mut outbox, &mut sent_base, &mut queues, &mut stats);
+                    drain(
+                        &mut outbox,
+                        &mut sent_base,
+                        &mut queues,
+                        &mut stats,
+                        heats[rank].as_ref(),
+                    );
                 }
             }
         }
         // global idle round
         stats.idle_rounds += 1;
         let before = outbox.total_sent();
-        for actor in actors.iter_mut() {
+        for (rank, actor) in actors.iter_mut().enumerate() {
             actor.on_idle(&mut outbox);
-            drain(&mut outbox, &mut sent_base, &mut queues, &mut stats);
+            drain(
+                &mut outbox,
+                &mut sent_base,
+                &mut queues,
+                &mut stats,
+                heats[rank].as_ref(),
+            );
         }
         if outbox.total_sent() == before {
             break;
@@ -89,7 +115,8 @@ fn drain<M>(
     sent_base: &mut u64,
     queues: &mut [VecDeque<M>],
     stats: &mut CommStats,
+    heat: Option<&HeatSampler<M>>,
 ) {
     let mut transport = QueueTransport { queues, stats };
-    flush_outbox(outbox, sent_base, &mut transport, true);
+    flush_outbox(outbox, sent_base, &mut transport, true, heat);
 }

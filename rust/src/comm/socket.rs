@@ -1343,6 +1343,10 @@ pub(crate) enum ResumeSrc {
 pub(crate) struct EpochSpec {
     /// Checkpointed execution: chunked seed, barriers, rollback.
     pub resilient: bool,
+    /// Driver has a trace sink armed: workers arm their heat grid and
+    /// ship `heat.cell` events on the STATE leg. Untraced epochs skip
+    /// all heat sampling.
+    pub trace: bool,
     /// Seed units per STEP chunk (informational; STEP frames carry the
     /// live value).
     pub chunk: u64,
@@ -1367,6 +1371,7 @@ impl EpochSpec {
     pub(crate) fn plain() -> Self {
         Self {
             resilient: false,
+            trace: false,
             chunk: 0,
             epoch: 1,
             gen: 0,
@@ -1407,7 +1412,10 @@ pub(crate) fn encode_seed<A: FabricActor>(
     for &s in seeds {
         put_u64(&mut out, s as u64);
     }
-    put_u8(&mut out, u8::from(spec.resilient));
+    put_u8(
+        &mut out,
+        u8::from(spec.resilient) | (u8::from(spec.trace) << 1),
+    );
     put_u64(&mut out, spec.chunk);
     put_u64(&mut out, spec.epoch);
     put_u64(&mut out, spec.gen);
@@ -1442,13 +1450,12 @@ pub(crate) fn split_seed(payload: &[u8]) -> Result<(SeedHead, &[u8]), String> {
     for _ in 0..n {
         seeds.push(get_u64(&mut input).map_err(err)? as usize);
     }
-    let resilient = match super::codec::get_u8(&mut input).map_err(err)? {
-        0 => false,
-        1 => true,
-        other => {
-            return Err(format!("bad seed frame: resilient byte {other}"))
-        }
-    };
+    let flags = super::codec::get_u8(&mut input).map_err(err)?;
+    if flags > 3 {
+        return Err(format!("bad seed frame: flags byte {flags}"));
+    }
+    let resilient = flags & 1 != 0;
+    let trace = flags & 2 != 0;
     let chunk = get_u64(&mut input).map_err(err)?;
     let epoch = get_u64(&mut input).map_err(err)?;
     let gen = get_u64(&mut input).map_err(err)?;
@@ -1472,6 +1479,7 @@ pub(crate) fn split_seed(payload: &[u8]) -> Result<(SeedHead, &[u8]), String> {
             seeds,
             spec: EpochSpec {
                 resilient,
+                trace,
                 chunk,
                 epoch,
                 gen,
@@ -1645,6 +1653,11 @@ where
         "epoch.start",
         &[("epoch", spec.epoch), ("gen", spec.gen)],
     );
+    // Traced epochs also arm the per-range traffic grid; its cells ship
+    // as `heat.cell` events on the reliable STATE leg below.
+    if spec.trace {
+        crate::telemetry::heatmap::arm(ranks);
+    }
 
     // Resume overlay (respawned tcp worker / re-forked process worker).
     let mut gen: u64 = spec.gen;
@@ -1707,6 +1720,11 @@ where
     let mut outbox: Outbox<A::Msg> =
         Outbox::with_seeds(ranks, head.policy, &head.seeds);
     let mut sent_base = 0u64;
+    let heat = if spec.trace {
+        crate::telemetry::heatmap::HeatSampler::new(rank, A::heat_vertex)
+    } else {
+        None
+    };
 
     if spec.resilient {
         if committed.is_none() {
@@ -1735,7 +1753,7 @@ where
         // Plain epoch: the whole seed context runs up front, exactly as
         // before fault tolerance existed.
         actor.seed(&mut outbox);
-        flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+        flush_outbox(&mut outbox, &mut sent_base, &mut tp, true, heat.as_ref());
         tp.check()?;
     }
 
@@ -1765,11 +1783,17 @@ where
             let n = batch.len() as u64;
             for msg in batch {
                 actor.on_message(msg, &mut outbox);
-                flush_outbox(&mut outbox, &mut sent_base, &mut tp, false);
+                flush_outbox(
+                    &mut outbox,
+                    &mut sent_base,
+                    &mut tp,
+                    false,
+                    heat.as_ref(),
+                );
             }
             delivered += n;
             frames_in += 1;
-            flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+            flush_outbox(&mut outbox, &mut sent_base, &mut tp, true, heat.as_ref());
             tp.check()?;
             if chaos_hit(delivered, gen) {
                 return Err(CHAOS_ABORT.to_string());
@@ -1786,12 +1810,24 @@ where
                 let n = msgs.len() as u64;
                 for msg in msgs {
                     actor.on_message(msg, &mut outbox);
-                    flush_outbox(&mut outbox, &mut sent_base, &mut tp, false);
+                    flush_outbox(
+                        &mut outbox,
+                        &mut sent_base,
+                        &mut tp,
+                        false,
+                        heat.as_ref(),
+                    );
                 }
                 delivered += n;
                 frames_in += 1;
                 bytes_in += nbytes;
-                flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+                flush_outbox(
+                    &mut outbox,
+                    &mut sent_base,
+                    &mut tp,
+                    true,
+                    heat.as_ref(),
+                );
                 tp.check()?;
                 if chaos_hit(delivered, gen) {
                     return Err(CHAOS_ABORT.to_string());
@@ -1854,7 +1890,13 @@ where
                 }
                 kind::IDLE => {
                     actor.on_idle(&mut outbox);
-                    flush_outbox(&mut outbox, &mut sent_base, &mut tp, true);
+                    flush_outbox(
+                        &mut outbox,
+                        &mut sent_base,
+                        &mut tp,
+                        true,
+                        heat.as_ref(),
+                    );
                     tp.check()?;
                     queue_report(
                         ctrl,
@@ -1892,6 +1934,7 @@ where
                             &mut sent_base,
                             &mut tp,
                             true,
+                            heat.as_ref(),
                         );
                         tp.check()?;
                     }
@@ -2203,6 +2246,12 @@ where
     put_u64(&mut payload, bytes_in);
     put_u64(&mut payload, frames_in);
     put_u64(&mut payload, tp.sent);
+    // Drain this worker's heat cells into events *before* take_delta so
+    // they ride the reliable STATE leg (REPORT is lossy, and calling
+    // event() inside take_delta's WorkerCtx borrow would deadlock).
+    if spec.trace {
+        crate::telemetry::heatmap::flush_to_events(spec.epoch);
+    }
     let telem = telemetry::take_delta((gen & 0xFFFF) as u16).unwrap_or_default();
     put_u32(&mut payload, telem.len() as u32);
     payload.extend_from_slice(&telem);
@@ -3185,6 +3234,7 @@ mod tests {
         }
         let spec = EpochSpec {
             resilient: true,
+            trace: true,
             chunk: 77,
             epoch: 5,
             gen: 2,
@@ -3199,6 +3249,7 @@ mod tests {
         assert_eq!(head.actor_kind, "nop");
         assert_eq!(head.seeds, vec![9, 8]);
         assert!(head.spec.resilient);
+        assert!(head.spec.trace);
         assert_eq!(head.spec.chunk, 77);
         assert_eq!(head.spec.epoch, 5);
         assert_eq!(head.spec.gen, 2);

@@ -227,6 +227,7 @@ impl TcpFabric {
         let plan = CkptPlan::from_fault(&fault);
         let spec = EpochSpec {
             resilient: plan.is_some(),
+            trace: telemetry::enabled(),
             chunk: fault.chunk.max(1),
             epoch: self.epoch,
             gen: self.incarnation,
@@ -557,6 +558,7 @@ impl TcpFabric {
         //    barrier completed yet: clean replay from the epoch top).
         let spec = EpochSpec {
             resilient: true,
+            trace: telemetry::enabled(),
             chunk: fault.chunk.max(1),
             epoch: self.epoch,
             gen,

@@ -230,10 +230,14 @@ fn worker_loop<A: Actor>(
         Outbox::with_seeds(senders.len(), policy, seeds);
     let mut sent_base = 0u64;
     let mut transport = ChannelTransport { senders, shared };
+    // Traffic sampler for this rank (None unless a heat grid is armed).
+    // Byte accounting matches ChannelTransport's size-of estimate, so
+    // grid totals reconcile exactly with CommStats on this backend.
+    let heat = crate::telemetry::heatmap::HeatSampler::new(rank, A::heat_vertex);
 
     // Seed context.
     actor.seed(&mut outbox);
-    flush_outbox(&mut outbox, &mut sent_base, &mut transport, true);
+    flush_outbox(&mut outbox, &mut sent_base, &mut transport, true, heat.as_ref());
     shared.outstanding.fetch_sub(1, Ordering::AcqRel);
 
     loop {
@@ -242,7 +246,13 @@ fn worker_loop<A: Actor>(
                 let n = batch.len() as i64;
                 for msg in batch {
                     actor.on_message(msg, &mut outbox);
-                    flush_outbox(&mut outbox, &mut sent_base, &mut transport, false);
+                    flush_outbox(
+                        &mut outbox,
+                        &mut sent_base,
+                        &mut transport,
+                        false,
+                        heat.as_ref(),
+                    );
                 }
                 shared.delivered.fetch_add(n as u64, Ordering::Relaxed);
                 shared.per_rank[rank]
@@ -250,17 +260,35 @@ fn worker_loop<A: Actor>(
                     .fetch_add(n as u64, Ordering::Relaxed);
                 // flush before acknowledging, so our sends are visible in
                 // `outstanding` before the decrement
-                flush_outbox(&mut outbox, &mut sent_base, &mut transport, true);
+                flush_outbox(
+                    &mut outbox,
+                    &mut sent_base,
+                    &mut transport,
+                    true,
+                    heat.as_ref(),
+                );
                 shared.outstanding.fetch_sub(n, Ordering::AcqRel);
             }
             Ok(Packet::IdleProbe) => {
                 actor.on_idle(&mut outbox);
-                flush_outbox(&mut outbox, &mut sent_base, &mut transport, true);
+                flush_outbox(
+                    &mut outbox,
+                    &mut sent_base,
+                    &mut transport,
+                    true,
+                    heat.as_ref(),
+                );
                 shared.outstanding.fetch_sub(1, Ordering::AcqRel);
             }
             Ok(Packet::Stop) => break,
             Err(RecvTimeoutError::Timeout) => {
-                flush_outbox(&mut outbox, &mut sent_base, &mut transport, true);
+                flush_outbox(
+                    &mut outbox,
+                    &mut sent_base,
+                    &mut transport,
+                    true,
+                    heat.as_ref(),
+                );
             }
             Err(RecvTimeoutError::Disconnected) => break,
         }

@@ -16,6 +16,7 @@
 //! token accounting) are built on.
 
 use super::outbox::Outbox;
+use crate::telemetry::heatmap::HeatSampler;
 
 /// Destination of flushed batches for one rank (one instance per worker).
 pub(crate) trait Transport<M> {
@@ -30,12 +31,16 @@ pub(crate) trait Transport<M> {
 /// Move outbox contents into the transport. `force`: drain everything;
 /// otherwise only buffers that crossed their per-destination threshold.
 /// `sent_base` is the caller-held cursor into `outbox.total_sent()` (what
-/// `note_queued` has already accounted).
+/// `note_queued` has already accounted). `heat` is the rank's traffic
+/// sampler when a heat grid is armed (`None` on untraced runs): every
+/// shipped batch is classified into the per-range heatmap right before it
+/// leaves, so the grid sees exactly what the transport sees.
 pub(crate) fn flush_outbox<M, T: Transport<M>>(
     outbox: &mut Outbox<M>,
     sent_base: &mut u64,
     transport: &mut T,
     force: bool,
+    heat: Option<&HeatSampler<M>>,
 ) {
     let queued = outbox.total_sent();
     if queued > *sent_base {
@@ -44,12 +49,18 @@ pub(crate) fn flush_outbox<M, T: Transport<M>>(
     }
     if force {
         for (to, batch) in outbox.drain_all() {
+            if let Some(h) = heat {
+                h.record(to, &batch);
+            }
             transport.ship(to, batch);
         }
     } else {
         for to in outbox.take_hot() {
             let batch = outbox.take_buf_eager(to);
             if !batch.is_empty() {
+                if let Some(h) = heat {
+                    h.record(to, &batch);
+                }
                 transport.ship(to, batch);
             }
         }
@@ -92,10 +103,10 @@ mod tests {
         outbox.send(1, 10);
         outbox.send(1, 11); // crosses threshold
         outbox.send(0, 12);
-        flush_outbox(&mut outbox, &mut base, &mut t, false);
+        flush_outbox(&mut outbox, &mut base, &mut t, false, None);
         assert_eq!(t.queued, 3, "all queued messages accounted");
         assert_eq!(t.shipped, vec![(1, vec![10, 11])], "only the hot lane");
-        flush_outbox(&mut outbox, &mut base, &mut t, true);
+        flush_outbox(&mut outbox, &mut base, &mut t, true, None);
         assert_eq!(t.queued, 3, "no double accounting");
         assert_eq!(t.shipped.len(), 2);
         assert_eq!(t.shipped[1], (0, vec![12]));

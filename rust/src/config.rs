@@ -278,11 +278,25 @@ impl Config {
                  serve.idle_secs must be positive"
             );
         }
+        let span_sample =
+            self.get_int("serve.span_sample", d.span_sample as i64);
+        let slow_us =
+            self.get_int("serve.slow_query_us", d.slow_query_us as i64);
+        if span_sample < 0 || slow_us < 0 {
+            bail!("serve.span_sample and serve.slow_query_us must be >= 0");
+        }
+        let access_log = match self.get_str("serve.access_log", "") {
+            "" => None,
+            p => Some(std::path::PathBuf::from(p)),
+        };
         Ok(ServeOptions {
             workers: workers as usize,
             batch_max: batch_max as usize,
             cache_capacity: cache as usize,
             pending_cap: pending as usize,
+            span_sample: span_sample as u64,
+            slow_query_us: slow_us as u64,
+            access_log,
             limits: ConnLimits {
                 read_timeout: std::time::Duration::from_millis(read_ms as u64),
                 idle_cap: std::time::Duration::from_secs(idle_secs as u64),
@@ -407,6 +421,28 @@ adaptive_flush = false
 
         c2.set_override("serve.batch_max=0").unwrap();
         assert!(c2.serve_options().is_err());
+
+        // span/access-log keys: defaults off, overrides land, negatives
+        // rejected
+        let c3 = Config::parse("").unwrap();
+        let o3 = c3.serve_options().unwrap();
+        assert_eq!(o3.span_sample, 0);
+        assert_eq!(o3.slow_query_us, 0);
+        assert!(o3.access_log.is_none());
+        let mut c4 = Config::parse("").unwrap();
+        c4.set_override("serve.span_sample=8").unwrap();
+        c4.set_override("serve.slow_query_us=5000").unwrap();
+        c4.set_override("serve.access_log=\"/tmp/ds_access.jsonl\"")
+            .unwrap();
+        let o4 = c4.serve_options().unwrap();
+        assert_eq!(o4.span_sample, 8);
+        assert_eq!(o4.slow_query_us, 5000);
+        assert_eq!(
+            o4.access_log.as_deref(),
+            Some(std::path::Path::new("/tmp/ds_access.jsonl"))
+        );
+        c4.set_override("serve.span_sample=-1").unwrap();
+        assert!(c4.serve_options().is_err());
     }
 
     #[test]

@@ -231,6 +231,16 @@ impl Actor for AnfActor {
             self.flush_fwd(dst, out);
         }
     }
+
+    fn heat_vertex(msg: &AnfMsg) -> Option<u64> {
+        match msg {
+            // EDGE routes on f(x)
+            AnfMsg::Edge(x, _) => Some(*x),
+            // a FAN's targets all share one destination rank, so any
+            // target names the range; use the first
+            AnfMsg::Fan(_, targets) => targets.first().copied(),
+        }
+    }
 }
 
 impl WireActor for AnfActor {

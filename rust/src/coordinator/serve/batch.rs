@@ -37,14 +37,33 @@ pub struct Job {
     pub conn_id: u64,
     pub seq: u64,
     pub started: Instant,
+    /// Whether this query was picked by the reactor's 1-in-N span
+    /// sampler: the worker measures its stages and the reactor emits a
+    /// `serve.span` record on delivery.
+    pub sampled: bool,
 }
 
-/// A computed response line headed back to the reactor.
+/// A computed response line headed back to the reactor, carrying the
+/// span measurements the worker took on the way (the reactor adds the
+/// final flush stage when it delivers the line).
 pub struct Completion {
     pub token: usize,
     pub conn_id: u64,
     pub seq: u64,
     pub line: String,
+    pub kind: QueryKind,
+    pub sampled: bool,
+    /// Index of the worker that computed the answer (its span track).
+    pub worker: usize,
+    /// Wait between reactor admission and the worker draining the job.
+    pub queue_us: u64,
+    /// Time inside `answer_key` (0 for answers deduplicated within the
+    /// batch — the kernel ran once for the whole group).
+    pub kernel_us: u64,
+    /// When the query entered the reactor (end-to-end latency anchor).
+    pub started: Instant,
+    /// When the worker finished computing (flush-stage anchor).
+    pub finished: Instant,
 }
 
 /// The bounded pending-request queue (reactor pushes, workers drain).
@@ -210,8 +229,10 @@ fn answer_key(
 
 /// One worker's life: drain a batch, pin the engine generation, answer
 /// every job (coalescing duplicates and shared pairs), feed the cache,
-/// and hand the completions back to the reactor.
-pub fn run_worker(sh: &WorkerShared) {
+/// and hand the completions back to the reactor. `worker` is this
+/// worker's pool index — span records carry it so each worker gets its
+/// own track in the Chrome export.
+pub fn run_worker(sh: &WorkerShared, worker: usize) {
     loop {
         let batch = sh.queue.pop_batch(sh.batch_max);
         if batch.is_empty() {
@@ -220,6 +241,7 @@ pub fn run_worker(sh: &WorkerShared) {
             }
             continue;
         }
+        let drained = Instant::now();
         let (engine, gen) = sh.engine.load();
         sh.metrics
             .histogram("degreesketch_query_batch_size", &[])
@@ -232,13 +254,16 @@ pub fn run_worker(sh: &WorkerShared) {
             HashMap::new();
         let mut out = Vec::with_capacity(batch.len());
         for job in batch {
-            let line = match answers.get(&job.key) {
-                Some(l) => l.clone(),
+            let (line, kernel_us) = match answers.get(&job.key) {
+                // deduplicated within the batch: the kernel already ran
+                Some(l) => (l.clone(), 0),
                 None => {
+                    let k0 = Instant::now();
                     let l = answer_key(&engine, &job.key, &mut pairs);
+                    let kernel_us = k0.elapsed().as_micros() as u64;
                     sh.cache.insert(job.key.clone(), gen, l.clone());
                     answers.insert(job.key.clone(), l.clone());
-                    l
+                    (l, kernel_us)
                 }
             };
             record_query(&sh.metrics, job.key.kind.name(), job.started);
@@ -247,6 +272,15 @@ pub fn run_worker(sh: &WorkerShared) {
                 conn_id: job.conn_id,
                 seq: job.seq,
                 line,
+                kind: job.key.kind,
+                sampled: job.sampled,
+                worker,
+                queue_us: drained
+                    .saturating_duration_since(job.started)
+                    .as_micros() as u64,
+                kernel_us,
+                started: job.started,
+                finished: Instant::now(),
             });
         }
         sh.completions.push(out);
@@ -267,6 +301,7 @@ mod tests {
             conn_id: n,
             seq: 0,
             started: Instant::now(),
+            sampled: false,
         }
     }
 

@@ -51,10 +51,20 @@
 //!   threads) reporting p50/p90/p99 latency, QPS, and the server's
 //!   cache hit rate into `BENCH_serving.json`.
 //!
+//! * **Spans** — every Nth query ([`ServeOptions::span_sample`]) is
+//!   traced end to end: the reactor stamps admission, the worker
+//!   measures queue wait and kernel time, and completion delivery
+//!   measures write flush. Sampled spans become `serve.span` events in
+//!   the trace dir (one Chrome-export track per worker) and JSONL
+//!   access-log records; queries slower than
+//!   [`ServeOptions::slow_query_us`] are logged **regardless** of
+//!   sampling, so outliers always leave a record.
+//!
 //! Every stage records into the PR-7 telemetry plane and is visible in
 //! one `METRICS` scrape: per-kind query counters and latency quantiles,
-//! the batch-size histogram (`degreesketch_query_batch_size`), cache
-//! hit/miss counters, shed counts, and the serving generation.
+//! per-stage span histograms (`degreesketch_query_stage_us`), the
+//! batch-size histogram (`degreesketch_query_batch_size`), per-kind
+//! cache hit/miss counters, shed counts, and the serving generation.
 
 pub mod batch;
 pub mod cache;
@@ -86,6 +96,17 @@ impl QueryKind {
             Self::Union => "union",
         }
     }
+
+    /// Stable numeric code for trace-event fields (`serve.span`'s
+    /// `kind` field; events carry u64s, not strings).
+    pub fn index(self) -> u64 {
+        match self {
+            Self::Deg => 0,
+            Self::Tri => 1,
+            Self::Jaccard => 2,
+            Self::Union => 3,
+        }
+    }
 }
 
 /// Per-connection read bounds: `read_timeout` caps the reactor's poll
@@ -107,7 +128,7 @@ impl Default for ConnLimits {
 }
 
 /// Serving-tier knobs (config section `serve.*`, overridable per flag).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServeOptions {
     /// Query worker threads; 0 = auto (min(cores, 4)).
     pub workers: usize,
@@ -118,6 +139,20 @@ pub struct ServeOptions {
     /// Pending-request queue bound — beyond it the reactor sheds with
     /// `ERR overloaded`.
     pub pending_cap: usize,
+    /// Query-span sampling: every Nth query gets a full per-stage span
+    /// (`serve.span` trace event + access-log record). 0 disables
+    /// sampling; 1 spans every query. Sampling bounds the per-request
+    /// overhead — unsampled queries still feed the per-stage histograms
+    /// and per-kind counters, they just produce no per-request record.
+    pub span_sample: u64,
+    /// Slow-query threshold in microseconds: a query whose end-to-end
+    /// latency reaches this is **always** written to the access log,
+    /// whether or not it was sampled — tail outliers survive any
+    /// sampling rate. 0 disables the threshold.
+    pub slow_query_us: u64,
+    /// JSONL access log path (sampled queries + every slow query).
+    /// `None` disables the log.
+    pub access_log: Option<std::path::PathBuf>,
     pub limits: ConnLimits,
 }
 
@@ -128,6 +163,9 @@ impl Default for ServeOptions {
             batch_max: 64,
             cache_capacity: 65536,
             pending_cap: 8192,
+            span_sample: 0,
+            slow_query_us: 0,
+            access_log: None,
             limits: ConnLimits::default(),
         }
     }

@@ -39,12 +39,13 @@
 //! never sees reordered answers.
 
 use std::collections::VecDeque;
+use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use anyhow::Result;
 
@@ -54,7 +55,8 @@ use crate::telemetry::{self, prom, Counter, Registry};
 
 use super::super::engine::QueryEngine;
 use super::batch::{
-    record_query, run_worker, BatchQueue, Completions, Job, WorkerShared,
+    record_query, run_worker, BatchQueue, Completion, Completions, Job,
+    WorkerShared,
 };
 use super::cache::{CacheKey, ResultCache};
 use super::poller::{self, fd_of, PollSlot, WakeRx, WakeTx};
@@ -131,13 +133,18 @@ impl QueryServer {
             completions: Arc::clone(&completions),
             batch_max: opts.batch_max.max(1),
         });
-        let workers = (0..opts.resolved_workers())
-            .map(|_| {
+        let workers_n = opts.resolved_workers();
+        let workers = (0..workers_n)
+            .map(|i| {
                 let sh = Arc::clone(&shared);
-                std::thread::spawn(move || run_worker(&sh))
+                std::thread::spawn(move || run_worker(&sh, i))
             })
             .collect();
 
+        let access = match opts.access_log.as_ref() {
+            Some(p) => Some(std::fs::File::create(p)?),
+            None => None,
+        };
         let reactor = Reactor {
             listener,
             wake_rx,
@@ -153,8 +160,13 @@ impl QueryServer {
             clients: Vec::new(),
             free: Vec::new(),
             next_conn_id: 0,
-            hits: metrics.counter("degreesketch_cache_hits_total", &[]),
-            misses: metrics.counter("degreesketch_cache_misses_total", &[]),
+            hits_total: 0,
+            misses_total: 0,
+            span_sample: opts.span_sample,
+            slow_us: opts.slow_query_us,
+            span_counter: 0,
+            workers_n,
+            access,
             shed: metrics.counter("degreesketch_requests_shed_total", &[]),
             reloads: metrics.counter("degreesketch_reloads_total", &[]),
         };
@@ -364,8 +376,20 @@ struct Reactor {
     /// Freed slot indices, reused before growing `clients`.
     free: Vec<usize>,
     next_conn_id: u64,
-    hits: Counter,
-    misses: Counter,
+    /// Aggregate cache totals for `STATS` (the per-kind counters live in
+    /// the metric registry as `degreesketch_cache_{hits,misses}_total`).
+    hits_total: u64,
+    misses_total: u64,
+    /// 1-in-N query-span sampling (0 = off) and the rolling counter
+    /// behind it.
+    span_sample: u64,
+    slow_us: u64,
+    span_counter: u64,
+    /// Worker pool size; cache-hit spans (answered inline by the
+    /// reactor, no worker involved) log on track `workers_n`.
+    workers_n: usize,
+    /// JSONL access log (sampled queries + every slow query).
+    access: Option<std::fs::File>,
     shed: Counter,
     reloads: Counter,
 }
@@ -402,16 +426,41 @@ impl Reactor {
 
             // deliver worker completions into their response slots
             for done in self.completions.drain() {
+                let Completion {
+                    token,
+                    conn_id,
+                    seq,
+                    line,
+                    kind,
+                    sampled,
+                    worker,
+                    queue_us,
+                    kernel_us,
+                    started,
+                    finished,
+                } = done;
                 if let Some(c) = self
                     .clients
-                    .get_mut(done.token)
+                    .get_mut(token)
                     .and_then(|s| s.as_mut())
                 {
-                    if c.id == done.conn_id {
-                        c.fill_slot(done.seq, done.line + "\n");
+                    if c.id == conn_id {
+                        c.fill_slot(seq, line + "\n");
                         c.last_activity = now;
                     }
                 }
+                // span bookkeeping runs even when the connection died —
+                // the work happened either way
+                let flush_us = now
+                    .saturating_duration_since(finished)
+                    .as_micros() as u64;
+                let total_us = now
+                    .saturating_duration_since(started)
+                    .as_micros() as u64;
+                self.finish_span(
+                    worker, kind, false, queue_us, kernel_us, flush_us,
+                    total_us, sampled,
+                );
             }
 
             if slots[0].readable {
@@ -520,14 +569,41 @@ impl Reactor {
         let started = Instant::now();
         match parse_request(line) {
             Request::Query(key) => {
+                // 1-in-N span sampling, decided at admission so the
+                // whole pipeline (worker included) measures its stages
+                let sampled = self.span_sample > 0 && {
+                    let n = self.span_counter;
+                    self.span_counter += 1;
+                    n % self.span_sample == 0
+                };
+                let kind = key.kind;
                 let gen = self.engine.generation();
                 if let Some(hit) = self.cache.get(&key, gen) {
-                    self.hits.inc();
-                    record_query(&self.metrics, key.kind.name(), started);
+                    self.hits_total += 1;
+                    self.metrics
+                        .counter(
+                            "degreesketch_cache_hits_total",
+                            &[("kind", kind.name())],
+                        )
+                        .inc();
+                    record_query(&self.metrics, kind.name(), started);
                     c.push_inline(hit + "\n");
+                    // the whole span is the cache lookup: answered
+                    // inline, no queue/kernel/flush stages
+                    let cache_us = started.elapsed().as_micros() as u64;
+                    self.finish_span(
+                        self.workers_n, kind, true, 0, 0, 0, cache_us,
+                        sampled,
+                    );
                     return;
                 }
-                self.misses.inc();
+                self.misses_total += 1;
+                self.metrics
+                    .counter(
+                        "degreesketch_cache_misses_total",
+                        &[("kind", kind.name())],
+                    )
+                    .inc();
                 let seq = c.reserve_slot();
                 let admitted = self.queue.try_push(Job {
                     key,
@@ -535,6 +611,7 @@ impl Reactor {
                     conn_id: c.id,
                     seq,
                     started,
+                    sampled,
                 });
                 if !admitted {
                     self.shed.inc();
@@ -562,6 +639,76 @@ impl Reactor {
                 c.push_inline("BYE\n".into());
                 c.closing = true;
             }
+        }
+    }
+
+    /// Close out one query's span: feed the per-stage histograms, and —
+    /// when the query was sampled or breached the slow-query threshold —
+    /// write the per-request records (trace event + access log). `hit`
+    /// marks a cache hit answered inline by the reactor: its only stage
+    /// is the cache lookup (`total_us`), logged on track `workers_n`.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_span(
+        &mut self,
+        worker: usize,
+        kind: QueryKind,
+        hit: bool,
+        queue_us: u64,
+        kernel_us: u64,
+        flush_us: u64,
+        total_us: u64,
+        sampled: bool,
+    ) {
+        let kname = kind.name();
+        let stages: &[(&str, u64)] = if hit {
+            &[("cache", total_us)]
+        } else {
+            &[
+                ("queue", queue_us),
+                ("kernel", kernel_us),
+                ("flush", flush_us),
+            ]
+        };
+        for (stage, v) in stages {
+            self.metrics
+                .histogram(
+                    "degreesketch_query_stage_us",
+                    &[("stage", stage), ("kind", kname)],
+                )
+                .observe(*v);
+        }
+        let slow = self.slow_us > 0 && total_us >= self.slow_us;
+        if sampled {
+            telemetry::serve_event(
+                worker,
+                "serve.span",
+                &[
+                    ("kind", kind.index()),
+                    ("hit", u64::from(hit)),
+                    ("queue_us", queue_us),
+                    ("kernel_us", kernel_us),
+                    ("flush_us", flush_us),
+                    ("total_us", total_us),
+                ],
+            );
+        }
+        // slow queries ALWAYS reach the access log, sampled or not —
+        // tail outliers must survive any sampling rate
+        if (sampled || slow) && self.access.is_some() {
+            let t_us = SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_micros() as u64)
+                .unwrap_or(0);
+            let w = self.access.as_mut().unwrap();
+            let _ = writeln!(
+                w,
+                "{{\"t_us\":{t_us},\"kind\":\"{kname}\",\"hit\":{hit},\
+                 \"worker\":{worker},\"queue_us\":{queue_us},\
+                 \"kernel_us\":{kernel_us},\"flush_us\":{flush_us},\
+                 \"total_us\":{total_us},\"sampled\":{sampled},\
+                 \"slow\":{slow}}}"
+            );
+            let _ = w.flush();
         }
     }
 
@@ -620,8 +767,8 @@ impl Reactor {
             self.clients.iter().filter(|c| c.is_some()).count(),
             self.queue.len(),
             self.shed.get(),
-            self.hits.get(),
-            self.misses.get()
+            self.hits_total,
+            self.misses_total
         ));
         match engine.accumulation_stats() {
             Some(cs) => {

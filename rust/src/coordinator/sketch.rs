@@ -254,6 +254,11 @@ impl Actor for AccumActor {
         // quiescence: land the partial batch
         self.store.insert_batch(&mut self.batch);
     }
+
+    fn heat_vertex((x, _): &Edge) -> Option<u64> {
+        // destination rank is f(x), so x names the traffic range
+        Some(*x)
+    }
 }
 
 impl WireActor for AccumActor {
@@ -398,6 +403,10 @@ impl Actor for ReferenceActor {
             .entry(x)
             .or_insert_with(|| Hll::new(self.config))
             .insert(y);
+    }
+
+    fn heat_vertex((x, _): &Edge) -> Option<u64> {
+        Some(*x)
     }
 }
 

@@ -425,6 +425,16 @@ impl Actor for TriActor {
             self.flush_pending(out);
         }
     }
+
+    fn heat_vertex(msg: &TriMsg) -> Option<u64> {
+        match msg {
+            // EDGE and EST route on f(x)
+            TriMsg::Edge(x, _) | TriMsg::Est(x, _) => Some(*x),
+            // a FAN's targets share one destination rank; the first
+            // target names the range
+            TriMsg::Fan(_, _, targets) => targets.first().copied(),
+        }
+    }
 }
 
 impl WireActor for TriActor {

@@ -15,7 +15,9 @@
 //! degreesketch serve      --sketch sketch.d/|sketch.snap --addr 127.0.0.1:7171
 //!                         [--workers N] [--batch-max N]
 //!                         [--cache-capacity N] [--pending-cap N]
-//!                         [--idle-secs S]
+//!                         [--idle-secs S] [--span-sample N]
+//!                         [--slow-query-us US] [--access-log FILE]
+//!                         [--trace-dir DIR]
 //! degreesketch snapshot   create  --sketch sketch.d/ --out sketch.snap
 //! degreesketch snapshot   create  --graph g.txt --ranks 8 --p 12 --out s.snap
 //! degreesketch snapshot   inspect --file sketch.snap [--verify]
@@ -32,7 +34,9 @@
 //!                         [--intersect mle|ix|pjrt] [--exact]
 //! degreesketch exact      --graph g.txt triangles|neighborhoods
 //! degreesketch calibrate-beta --p 8
-//! degreesketch trace      inspect <dir> [--limit N]
+//! degreesketch trace      inspect <dir> [--limit N] [--json]
+//! degreesketch trace      export  <dir> --format chrome [--out FILE]
+//! degreesketch heatmap    <dir> [--top K]
 //! degreesketch info
 //! ```
 //!
@@ -54,9 +58,17 @@
 //!
 //! Epoch-running subcommands also accept `--trace-dir DIR` (or config
 //! `telemetry.trace_dir`): the fabric streams structured events —
-//! epoch lifecycle, checkpoint commits, recovery cycles, chaos faults —
-//! into per-rank JSONL files under DIR, merged into one timeline by
-//! `degreesketch trace inspect DIR`.
+//! epoch lifecycle, checkpoint commits, recovery cycles, chaos faults,
+//! per-range traffic heat cells — into per-rank JSONL files under DIR,
+//! merged into one timeline by `degreesketch trace inspect DIR`.
+//! `degreesketch heatmap DIR` rebuilds the per-epoch traffic matrices
+//! (cut-edge fraction, per-rank byte skew, hot vertex ranges) from the
+//! same trace, and `degreesketch trace export --format chrome` converts
+//! it to Chrome trace-event JSON loadable in ui.perfetto.dev. The serve
+//! tier joins the same plane: `serve`/`snapshot serve` accept
+//! `--trace-dir` plus `--span-sample N` (trace every Nth query's
+//! queue/kernel/flush stages), `--slow-query-us US` and
+//! `--access-log FILE` (JSONL; slow queries always logged).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -123,6 +135,7 @@ fn run(argv: &[String]) -> Result<()> {
         "exact" => cmd_exact(&args),
         "calibrate-beta" => cmd_calibrate(&args),
         "trace" => cmd_trace(&args),
+        "heatmap" => cmd_heatmap(&args),
         "info" => cmd_info(&args),
         other => bail!("unknown subcommand {other:?} (try --help)"),
     };
@@ -136,7 +149,7 @@ fn print_usage() {
     println!(
         "degreesketch — distributed cardinality sketches on massive graphs\n\
          subcommands: generate accumulate worker query serve loadgen \
-         snapshot anf triangles exact calibrate-beta trace info\n\
+         snapshot anf triangles exact calibrate-beta trace heatmap info\n\
          see README.md for full usage"
     );
 }
@@ -455,6 +468,13 @@ fn serve_options_of(args: &Args, config: &Config) -> Result<ServeOptions> {
         cache_capacity: args
             .get_usize("cache-capacity", base.cache_capacity)?,
         pending_cap: args.get_usize("pending-cap", base.pending_cap)?,
+        span_sample: args.get_u64("span-sample", base.span_sample)?,
+        slow_query_us: args
+            .get_u64("slow-query-us", base.slow_query_us)?,
+        access_log: args
+            .get("access-log")
+            .map(PathBuf::from)
+            .or(base.access_log),
         limits: ConnLimits {
             read_timeout: base.limits.read_timeout,
             idle_cap: std::time::Duration::from_secs(
@@ -484,6 +504,7 @@ fn cmd_serve(args: &Args, config: &Config) -> Result<()> {
     let dir = args.require("sketch")?.to_string();
     let addr = args.get_or("addr", "127.0.0.1:7171").to_string();
     let opts = serve_options_of(args, config)?;
+    telemetry_of(args, config)?;
     args.finish()?;
     let engine = Arc::new(QueryEngine::load(Path::new(&dir))?);
     println!(
@@ -493,7 +514,7 @@ fn cmd_serve(args: &Args, config: &Config) -> Result<()> {
         engine.heap_bytes(),
         engine.resident_bytes()
     );
-    let server = QueryServer::start_with_opts(engine, &addr, opts)?;
+    let server = QueryServer::start_with_opts(engine, &addr, opts.clone())?;
     print_serving(&server, &opts);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -681,6 +702,7 @@ fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
                 // queues up and drains as one batch
                 opts.workers = 1;
             }
+            telemetry_of(args, config)?;
             args.finish()?;
             let engine = Arc::new(QueryEngine::open_snapshot_with(
                 Path::new(&file),
@@ -692,7 +714,8 @@ fn cmd_snapshot(args: &Args, config: &Config) -> Result<()> {
                 engine.backing_mode(),
                 engine.resident_bytes()
             );
-            let server = QueryServer::start_with_opts(engine, &addr, opts)?;
+            let server =
+                QueryServer::start_with_opts(engine, &addr, opts.clone())?;
             print_serving(&server, &opts);
             if self_check {
                 self_check_serving(&server)?;
@@ -1044,27 +1067,64 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `trace inspect <dir>`: merge the per-rank JSONL streams a traced run
-/// wrote under `--trace-dir` into one fabric timeline and print it,
+/// `trace inspect <dir>` merges the per-rank JSONL streams a traced run
+/// wrote under `--trace-dir` into one fabric timeline and prints it,
 /// followed by per-kind event counts and the driver's quiescent-barrier
-/// dwell times.
+/// dwell times (`--json` prints the machine-readable summary instead).
+/// `trace export <dir> --format chrome [--out FILE]` converts the same
+/// timeline to Chrome trace-event JSON, loadable in `chrome://tracing`
+/// or ui.perfetto.dev (one track per rank, one per serve worker).
 fn cmd_trace(args: &Args) -> Result<()> {
     let action = args
         .positional
         .first()
         .map(String::as_str)
         .unwrap_or("");
-    if action != "inspect" {
-        bail!("trace action must be inspect, got {action:?}");
+    if action != "inspect" && action != "export" {
+        bail!("trace action must be inspect|export, got {action:?}");
     }
     let dir = match args.positional.get(1) {
         Some(d) => d.clone(),
         None => args.require("dir")?.to_string(),
     };
+    if action == "export" {
+        let format = args.get_or("format", "chrome").to_string();
+        if format != "chrome" {
+            bail!("trace export --format must be chrome, got {format:?}");
+        }
+        let out = args.get("out").map(String::from);
+        args.finish()?;
+        let tl = degreesketch::telemetry::Timeline::merge_dir(Path::new(&dir))
+            .with_context(|| format!("merging trace streams in {dir:?}"))?;
+        if tl.events.is_empty() {
+            bail!("no trace events under {dir:?} (was the run traced?)");
+        }
+        let json = degreesketch::telemetry::export::chrome_trace(&tl);
+        match out {
+            Some(path) => {
+                std::fs::write(&path, &json)
+                    .with_context(|| format!("writing {path}"))?;
+                println!(
+                    "wrote {path}: {} events as Chrome trace JSON \
+                     ({} bytes) — load in ui.perfetto.dev",
+                    tl.events.len(),
+                    json.len()
+                );
+            }
+            None => println!("{json}"),
+        }
+        return Ok(());
+    }
     let limit = args.get_usize("limit", 1000)?;
+    let as_json = args.has("json");
     args.finish()?;
     let tl = degreesketch::telemetry::Timeline::merge_dir(Path::new(&dir))
         .with_context(|| format!("merging trace streams in {dir:?}"))?;
+    if as_json {
+        // machine-readable: stable key order, one JSON object, nothing else
+        println!("{}", tl.summary_json());
+        return Ok(());
+    }
     if tl.events.is_empty() {
         bail!("no trace events under {dir:?} (was the run traced?)");
     }
@@ -1078,7 +1138,12 @@ fn cmd_trace(args: &Args) -> Result<()> {
         println!("{line}");
         shown += 1;
     }
-    println!("-- {} events, {} malformed lines", tl.events.len(), tl.malformed);
+    println!(
+        "-- {} events, {} malformed lines, truncated={}",
+        tl.events.len(),
+        tl.malformed,
+        tl.truncated
+    );
     for (kind, n) in tl.counts_by_kind() {
         println!("   {kind}: {n}");
     }
@@ -1088,6 +1153,27 @@ fn cmd_trace(args: &Args) -> Result<()> {
             println!("barrier {}: dwell {us}us", i + 1);
         }
     }
+    Ok(())
+}
+
+/// `heatmap <dir>`: rebuild the per-epoch traffic matrices from the
+/// `heat.cell`/`heat.epoch` events of a traced run and print, per
+/// epoch: total messages/bytes, the cut-edge byte fraction, per-rank
+/// byte skew, the src×dst byte matrix, and the top `--top` hottest
+/// cross-rank vertex ranges.
+fn cmd_heatmap(args: &Args) -> Result<()> {
+    let dir = match args.positional.first() {
+        Some(d) => d.clone(),
+        None => args.require("dir")?.to_string(),
+    };
+    let top = args.get_usize("top", 8)?;
+    args.finish()?;
+    let tl = degreesketch::telemetry::Timeline::merge_dir(Path::new(&dir))
+        .with_context(|| format!("merging trace streams in {dir:?}"))?;
+    print!(
+        "{}",
+        degreesketch::telemetry::heatmap::render_report(&tl, top)
+    );
     Ok(())
 }
 

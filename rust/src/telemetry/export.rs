@@ -1,0 +1,556 @@
+//! Chrome/Perfetto trace-event export for merged timelines.
+//!
+//! `degreesketch trace export --format chrome` turns the per-rank JSONL
+//! streams under a trace dir into one Chrome trace-event JSON array —
+//! the format ui.perfetto.dev and chrome://tracing load directly — so
+//! any fabric run becomes a flamegraph-style timeline.
+//!
+//! Track model: one process (`pid` 0, named `degreesketch`), one thread
+//! per emitter. `tid` is `rank + 1` (driver −1 → 0, rank *r* → *r*+1,
+//! serve worker *w* → 1001+*w*), each named by an `"M"` metadata event.
+//! Every trace event becomes an `"i"` instant carrying its fields as
+//! args; additionally, driver `barrier.begin`/`end` pairs and
+//! `serve.span` records (which carry their own stage durations) become
+//! `"X"` complete slices, the spans with nested queue/kernel/flush
+//! children so the serve pipeline reads as a flame.
+//!
+//! [`parse_json`] is a dependency-free JSON reader used by the unit
+//! tests to round-trip the export (and by `trace inspect --json`
+//! consumers who want a sanity check); it is a validator, not a general
+//! JSON library.
+
+use std::fmt::Write as _;
+
+use super::trace::{MergedEvent, Timeline, TraceEvent};
+
+/// Serve-tier span track offset: serve worker `w` logs as rank
+/// `SERVE_TRACK_BASE + w` in the trace stream.
+pub const SERVE_TRACK_BASE: i64 = 1000;
+
+fn tid_of(rank: i64) -> i64 {
+    rank + 1
+}
+
+fn track_name(rank: i64) -> String {
+    if rank < 0 {
+        "driver".to_string()
+    } else if rank >= SERVE_TRACK_BASE {
+        format!("serve worker {}", rank - SERVE_TRACK_BASE)
+    } else {
+        format!("rank {rank}")
+    }
+}
+
+fn field(ev: &TraceEvent, name: &str) -> u64 {
+    ev.fields
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|&(_, v)| v)
+        .unwrap_or(0)
+}
+
+fn push_args(out: &mut String, ev: &TraceEvent) {
+    out.push_str(",\"args\":{");
+    for (i, (k, v)) in ev.fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "\"{}\":{}", escape(k), v);
+    }
+    out.push('}');
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if c < ' ' => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn push_event(out: &mut String, first: &mut bool, body: String) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    out.push('\n');
+    out.push_str(&body);
+}
+
+fn instant(me: &MergedEvent) -> String {
+    let ev = &me.event;
+    let mut s = format!(
+        "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{},\"pid\":0,\"tid\":{}",
+        escape(&ev.kind),
+        me.t_rel,
+        tid_of(ev.rank)
+    );
+    push_args(&mut s, ev);
+    s.push('}');
+    s
+}
+
+fn complete(name: &str, ts: u64, dur: u64, tid: i64, ev: Option<&TraceEvent>) -> String {
+    let mut s = format!(
+        "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{ts},\"dur\":{dur},\"pid\":0,\"tid\":{tid}",
+        escape(name)
+    );
+    if let Some(ev) = ev {
+        push_args(&mut s, ev);
+    }
+    s.push('}');
+    s
+}
+
+/// Render a merged timeline as a Chrome trace-event JSON array.
+pub fn chrome_trace(tl: &Timeline) -> String {
+    let mut out = String::with_capacity(4096 + tl.events.len() * 128);
+    out.push('[');
+    let mut first = true;
+
+    // Process + thread metadata, one thread per distinct emitter rank.
+    push_event(
+        &mut out,
+        &mut first,
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"args\":{\"name\":\"degreesketch\"}}"
+            .to_string(),
+    );
+    let mut ranks: Vec<i64> = tl.events.iter().map(|m| m.event.rank).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    for r in &ranks {
+        push_event(
+            &mut out,
+            &mut first,
+            format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\"args\":{{\"name\":\"{}\"}}}}",
+                tid_of(*r),
+                escape(&track_name(*r))
+            ),
+        );
+    }
+
+    // Driver barrier dwells as complete slices.
+    let mut open_barrier: Option<u64> = None;
+    for me in &tl.events {
+        let ev = &me.event;
+        if ev.rank == -1 {
+            match ev.kind.as_str() {
+                "barrier.begin" => open_barrier = Some(me.t_rel),
+                "barrier.end" => {
+                    if let Some(t0) = open_barrier.take() {
+                        push_event(
+                            &mut out,
+                            &mut first,
+                            complete(
+                                "barrier",
+                                t0,
+                                me.t_rel.saturating_sub(t0),
+                                tid_of(-1),
+                                Some(ev),
+                            ),
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    for me in &tl.events {
+        let ev = &me.event;
+        if ev.kind == "serve.span" {
+            // Span records are stamped at completion and carry stage
+            // durations; lay the slice back from the stamp and nest the
+            // stages sequentially from its start.
+            let total = field(ev, "total_us");
+            let start = me.t_rel.saturating_sub(total);
+            push_event(
+                &mut out,
+                &mut first,
+                complete("serve.span", start, total, tid_of(ev.rank), Some(ev)),
+            );
+            let mut cursor = start;
+            let mut left = total;
+            for stage in ["queue_us", "kernel_us", "flush_us"] {
+                let dur = field(ev, stage).min(left);
+                if dur > 0 {
+                    push_event(
+                        &mut out,
+                        &mut first,
+                        complete(
+                            stage.trim_end_matches("_us"),
+                            cursor,
+                            dur,
+                            tid_of(ev.rank),
+                            None,
+                        ),
+                    );
+                    cursor += dur;
+                    left -= dur;
+                }
+            }
+        } else {
+            push_event(&mut out, &mut first, instant(me));
+        }
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON reader (round-trip validation; no serde in this tree).
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Object member lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_obj()?
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a complete JSON document. Errors carry the byte offset.
+pub fn parse_json(text: &str) -> Result<Json, String> {
+    let b = text.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        return Err(format!("trailing data at byte {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected '{}' at byte {}", c as char, *pos))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".to_string()),
+        Some(b'{') => {
+            *pos += 1;
+            let mut members = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(members));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, b':')?;
+                let val = parse_value(b, pos)?;
+                members.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(members));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {}", *pos)),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {}", *pos)),
+                }
+            }
+        }
+        Some(b'"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some(b't') => {
+            if b[*pos..].starts_with(b"true") {
+                *pos += 4;
+                Ok(Json::Bool(true))
+            } else {
+                Err(format!("bad literal at byte {}", *pos))
+            }
+        }
+        Some(b'f') => {
+            if b[*pos..].starts_with(b"false") {
+                *pos += 5;
+                Ok(Json::Bool(false))
+            } else {
+                Err(format!("bad literal at byte {}", *pos))
+            }
+        }
+        Some(b'n') => {
+            if b[*pos..].starts_with(b"null") {
+                *pos += 4;
+                Ok(Json::Null)
+            } else {
+                Err(format!("bad literal at byte {}", *pos))
+            }
+        }
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => return Err("unterminated string".to_string()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| "short \\u escape".to_string())?;
+                        let code = u32::from_str_radix(
+                            std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?,
+                            16,
+                        )
+                        .map_err(|_| "bad \\u escape")?;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    _ => return Err(format!("bad escape at byte {}", *pos)),
+                }
+                *pos += 1;
+            }
+            Some(&c) => {
+                // Collect the full UTF-8 sequence starting here.
+                let start = *pos;
+                let len = match c {
+                    0x00..=0x7f => 1,
+                    0xc0..=0xdf => 2,
+                    0xe0..=0xef => 3,
+                    _ => 4,
+                };
+                let end = (start + len).min(b.len());
+                out.push_str(
+                    std::str::from_utf8(&b[start..end]).map_err(|_| "invalid utf-8")?,
+                );
+                *pos = end;
+            }
+        }
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).map_err(|_| "bad number")?;
+    text.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("bad number '{text}' at byte {start}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{Timeline, TraceEvent};
+    use super::*;
+
+    fn ev(t_us: u64, rank: i64, seq: u64, kind: &str, fields: &[(&str, u64)]) -> TraceEvent {
+        TraceEvent {
+            t_us,
+            rank,
+            seq,
+            kind: kind.to_string(),
+            fields: fields.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+
+    #[test]
+    fn json_parser_handles_basics() {
+        let v = parse_json(r#"{"a":[1,2.5,-3],"b":"x\"y","c":true,"d":null}"#).unwrap();
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x\"y"));
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[2].as_num(), Some(-3.0));
+        assert_eq!(v.get("c"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("d"), Some(&Json::Null));
+        assert!(parse_json("{\"a\":1").is_err());
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("{} trailing").is_err());
+    }
+
+    #[test]
+    fn chrome_export_round_trips_with_tracks_and_span() {
+        let streams = vec![
+            vec![
+                ev(10, -1, 0, "epoch.start", &[("ranks", 2)]),
+                ev(100, -1, 1, "barrier.begin", &[("barrier", 1)]),
+                ev(160, -1, 2, "barrier.end", &[("barrier", 1)]),
+            ],
+            vec![
+                ev(12, 0, 0, "epoch.start", &[]),
+                ev(40, 0, 1, "flush.grow", &[("to", 1)]),
+            ],
+            vec![ev(15, 1, 0, "epoch.start", &[])],
+            vec![ev(
+                500,
+                SERVE_TRACK_BASE,
+                0,
+                "serve.span",
+                &[
+                    ("kind", 0),
+                    ("queue_us", 30),
+                    ("kernel_us", 50),
+                    ("flush_us", 10),
+                    ("total_us", 100),
+                ],
+            )],
+        ];
+        let tl = Timeline::merge_streams(streams, 0);
+        let json = chrome_trace(&tl);
+        let doc = parse_json(&json).expect("valid chrome trace JSON");
+        let arr = doc.as_arr().expect("top-level array");
+        // Track metadata: driver, rank 0, rank 1, serve worker 0.
+        let names: Vec<&str> = arr
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .filter_map(|e| e.get("args")?.get("name")?.as_str())
+            .collect();
+        assert!(names.contains(&"driver"), "{names:?}");
+        assert!(names.contains(&"rank 0"));
+        assert!(names.contains(&"rank 1"));
+        assert!(names.contains(&"serve worker 0"));
+        // Every non-metadata event has name/ph/ts/pid/tid.
+        for e in arr {
+            assert!(e.get("name").is_some());
+            let ph = e.get("ph").and_then(Json::as_str).unwrap();
+            if ph != "M" {
+                assert!(e.get("ts").and_then(Json::as_num).is_some());
+                assert!(e.get("tid").and_then(Json::as_num).is_some());
+            }
+            assert!(e.get("pid").and_then(Json::as_num).is_some());
+        }
+        // Barrier dwell became an X slice of the right duration.
+        let barrier = arr
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("barrier"))
+            .expect("barrier slice");
+        assert_eq!(barrier.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(barrier.get("dur").and_then(Json::as_num), Some(60.0));
+        // The serve span produced a parent X plus nested stage slices on
+        // the serve worker track.
+        let span = arr
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("serve.span"))
+            .expect("serve span slice");
+        assert_eq!(span.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(span.get("dur").and_then(Json::as_num), Some(100.0));
+        assert_eq!(
+            span.get("tid").and_then(Json::as_num),
+            Some((SERVE_TRACK_BASE + 1) as f64)
+        );
+        for stage in ["queue", "kernel", "flush"] {
+            assert!(
+                arr.iter().any(|e| {
+                    e.get("name").and_then(Json::as_str) == Some(stage)
+                        && e.get("ph").and_then(Json::as_str) == Some("X")
+                }),
+                "missing stage slice {stage}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_timeline_exports_valid_json() {
+        let tl = Timeline::default();
+        let doc = parse_json(&chrome_trace(&tl)).unwrap();
+        // Still a valid array with the process metadata record.
+        assert_eq!(doc.as_arr().unwrap().len(), 1);
+    }
+}

@@ -16,6 +16,14 @@
 //!   telemetry to the driver without new protocol round trips.
 //! * [`prom`] — Prometheus text exposition for the query server's
 //!   `METRICS` verb, with estimated quantiles per histogram.
+//! * [`heatmap`] — the workload introspection layer: a lock-free
+//!   `[src × dst × vertex-range]` traffic accumulator sampled at every
+//!   outbox flush, shipped as `heat.cell` events on the TELEM leg,
+//!   folded into a per-epoch `TrafficMatrix` (cut-edge fraction, byte
+//!   skew, hot ranges) behind `degreesketch heatmap`.
+//! * [`export`] — Chrome/Perfetto trace-event JSON conversion of a
+//!   merged timeline (`degreesketch trace export --format chrome`):
+//!   one track per rank plus one per serve worker.
 //!
 //! ## Routing model
 //!
@@ -31,6 +39,8 @@
 //! JSONL stream. Thread-locals keep in-process multi-rank tests honest:
 //! each simulated rank records into its own context with no cross-talk.
 
+pub mod export;
+pub mod heatmap;
 pub mod hist;
 pub mod prom;
 pub mod trace;
@@ -323,6 +333,8 @@ struct Sink {
     dir: PathBuf,
     driver: File,
     rank_files: HashMap<usize, File>,
+    /// Lazily opened `serve.jsonl` stream for serve-tier span records.
+    serve: Option<File>,
     /// Highest generation accepted per rank this epoch; stale blobs
     /// (from a rolled-back worker's pre-recovery life) are dropped.
     last_gen: HashMap<usize, u16>,
@@ -342,6 +354,7 @@ pub fn set_trace_dir(dir: &Path) -> std::io::Result<()> {
         dir: dir.to_path_buf(),
         driver,
         rank_files: HashMap::new(),
+        serve: None,
         last_gen: HashMap::new(),
         seq: 0,
     });
@@ -374,6 +387,31 @@ pub fn driver_event(kind: &str, fields: &[(&str, u64)]) {
         };
         sink.seq += 1;
         let _ = writeln!(sink.driver, "{}", ev.to_jsonl());
+    }
+}
+
+/// Record a serve-tier span/event on worker track `track` (written to
+/// `serve.jsonl` as rank `SERVE_TRACK_BASE + track`, so the timeline
+/// merge and the Chrome export give each serve worker its own track).
+/// No-op without an armed sink.
+pub fn serve_event(track: usize, kind: &str, fields: &[(&str, u64)]) {
+    let mut guard = SINK.lock().unwrap();
+    if let Some(sink) = guard.as_mut() {
+        if sink.serve.is_none() {
+            sink.serve = File::create(sink.dir.join("serve.jsonl")).ok();
+        }
+        let Some(file) = sink.serve.as_mut() else {
+            return;
+        };
+        let ev = TraceEvent {
+            t_us: trace::now_us(),
+            rank: export::SERVE_TRACK_BASE + track as i64,
+            seq: sink.seq,
+            kind: kind.to_string(),
+            fields: fields.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        };
+        sink.seq += 1;
+        let _ = writeln!(file, "{}", ev.to_jsonl());
     }
 }
 
@@ -415,6 +453,26 @@ pub fn ingest_remote(rank: usize, blob: &[u8]) -> Result<(), WireError> {
             for ev in &delta.events {
                 let mut ev = ev.clone();
                 ev.rank = rank as i64;
+                // Heat cells are also folded into the driver-side epoch
+                // accumulator (they still land in the rank stream so the
+                // heatmap CLI can replay them from disk later).
+                if ev.kind == "heat.cell" {
+                    let f = |name: &str| {
+                        ev.fields
+                            .iter()
+                            .find(|(k, _)| k == name)
+                            .map(|&(_, v)| v)
+                            .unwrap_or(0)
+                    };
+                    heatmap::fold_remote_cell(
+                        f("src"),
+                        f("dst"),
+                        f("range"),
+                        f("msgs"),
+                        f("bytes"),
+                        f("k"),
+                    );
+                }
                 let _ = writeln!(file, "{}", ev.to_jsonl());
             }
         }

@@ -158,6 +158,9 @@ pub struct Timeline {
     pub events: Vec<MergedEvent>,
     /// Lines that failed to parse (surfaced, not silently dropped).
     pub malformed: usize,
+    /// Truncated trailing lines (a worker killed mid-write leaves a
+    /// partial final record; tolerated and counted, never merged).
+    pub truncated: usize,
 }
 
 impl Timeline {
@@ -166,6 +169,7 @@ impl Timeline {
     pub fn merge_dir(dir: &Path) -> std::io::Result<Timeline> {
         let mut streams: Vec<Vec<TraceEvent>> = Vec::new();
         let mut malformed = 0usize;
+        let mut truncated = 0usize;
         let mut names: Vec<_> = fs::read_dir(dir)?
             .filter_map(|e| e.ok().map(|e| e.path()))
             .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
@@ -173,16 +177,34 @@ impl Timeline {
         names.sort();
         for path in names {
             let text = fs::read_to_string(&path)?;
+            // A stream whose file does not end in '\n' was cut off
+            // mid-record (worker killed mid-write); its final line is
+            // expected to be partial and must not poison the merge.
+            let tail_is_partial = !text.is_empty() && !text.ends_with('\n');
+            let mut lines: Vec<&str> =
+                text.lines().filter(|l| !l.trim().is_empty()).collect();
+            let tail = if tail_is_partial { lines.pop() } else { None };
             let mut stream = Vec::new();
-            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            for line in lines {
                 match TraceEvent::parse_jsonl(line) {
                     Some(ev) => stream.push(ev),
                     None => malformed += 1,
                 }
             }
+            if let Some(tail) = tail {
+                // A partial tail that still parses (e.g. the write lost
+                // only the newline) is kept; otherwise it counts as
+                // truncated, not malformed.
+                match TraceEvent::parse_jsonl(tail) {
+                    Some(ev) => stream.push(ev),
+                    None => truncated += 1,
+                }
+            }
             streams.push(stream);
         }
-        Ok(Self::merge_streams(streams, malformed))
+        let mut tl = Self::merge_streams(streams, malformed);
+        tl.truncated = truncated;
+        Ok(tl)
     }
 
     /// Deterministic merge: align each stream on its first
@@ -203,7 +225,7 @@ impl Timeline {
             }
         }
         events.sort_by_key(|m| (m.t_rel, m.event.rank, m.event.seq));
-        Timeline { events, malformed }
+        Timeline { events, malformed, truncated: 0 }
     }
 
     /// Count events per kind (for summaries and assertions).
@@ -240,6 +262,36 @@ impl Timeline {
             }
         }
         dwells
+    }
+
+    /// Machine-readable summary for `trace inspect --json`: event and
+    /// skip counts, per-kind counts (sorted by kind), and barrier dwell
+    /// times in driver order. Key order is fixed so CI assertions can be
+    /// structural.
+    pub fn summary_json(&self) -> String {
+        let mut out = String::with_capacity(256);
+        let _ = write!(
+            out,
+            "{{\"events\":{},\"malformed\":{},\"truncated\":{},\"counts\":{{",
+            self.events.len(),
+            self.malformed,
+            self.truncated
+        );
+        for (i, (kind, n)) in self.counts_by_kind().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{}\":{}", escape_json(kind), n);
+        }
+        out.push_str("},\"barrier_dwells_us\":[");
+        for (i, d) in self.barrier_dwells_us().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{d}");
+        }
+        out.push_str("]}");
+        out
     }
 
     /// Render the merged timeline as human-readable text (the body of
@@ -346,6 +398,70 @@ mod tests {
             };
             assert_eq!(key(&reference), key(&shuffled));
         });
+    }
+
+    #[test]
+    fn merge_dir_tolerates_truncated_trailing_line() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsk-trace-trunc-{}-{}",
+            std::process::id(),
+            now_us()
+        ));
+        fs::create_dir_all(&dir).unwrap();
+        let good = ev(10, 0, 0, "epoch.start", &[]).to_jsonl();
+        let good2 = ev(20, 0, 1, "step.chunk", &[("pos", 1)]).to_jsonl();
+        // Simulate a worker killed mid-write: full line, then a partial
+        // record with no trailing newline.
+        fs::write(
+            dir.join("rank-0.jsonl"),
+            format!("{good}\n{good2}\n{{\"t_us\":30,\"ra"),
+        )
+        .unwrap();
+        fs::write(
+            dir.join("driver.jsonl"),
+            format!("{}\n", ev(5, -1, 0, "epoch.start", &[]).to_jsonl()),
+        )
+        .unwrap();
+        let tl = Timeline::merge_dir(&dir).unwrap();
+        assert_eq!(tl.truncated, 1);
+        assert_eq!(tl.malformed, 0);
+        assert_eq!(tl.events.len(), 3);
+        // A garbage line in the *middle* still counts as malformed.
+        fs::write(
+            dir.join("rank-1.jsonl"),
+            format!("not json\n{good}\n"),
+        )
+        .unwrap();
+        let tl = Timeline::merge_dir(&dir).unwrap();
+        assert_eq!(tl.malformed, 1);
+        assert_eq!(tl.truncated, 1);
+        // A complete final line merely missing its newline is kept.
+        fs::write(dir.join("rank-2.jsonl"), good.clone()).unwrap();
+        let tl = Timeline::merge_dir(&dir).unwrap();
+        assert_eq!(tl.truncated, 1);
+        assert_eq!(tl.events.len(), 5);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_json_is_stable_and_parseable() {
+        let driver = vec![
+            ev(10, -1, 0, "epoch.start", &[]),
+            ev(100, -1, 1, "barrier.begin", &[("barrier", 1)]),
+            ev(150, -1, 2, "barrier.end", &[("barrier", 1)]),
+            ev(160, -1, 3, "step.chunk", &[("pos", 2)]),
+        ];
+        let mut tl = Timeline::merge_streams(vec![driver], 2);
+        tl.truncated = 1;
+        let json = tl.summary_json();
+        assert_eq!(
+            json,
+            "{\"events\":4,\"malformed\":2,\"truncated\":1,\"counts\":{\
+             \"barrier.begin\":1,\"barrier.end\":1,\"epoch.start\":1,\
+             \"step.chunk\":1},\"barrier_dwells_us\":[50]}"
+        );
+        // Structurally valid JSON by the export-layer parser.
+        assert!(crate::telemetry::export::parse_json(&json).is_ok());
     }
 
     #[test]

@@ -1,0 +1,229 @@
+//! End-to-end workload-introspection test: traced epochs must leave a
+//! traffic heatmap that *reconciles exactly* with the comm plane's own
+//! accounting, without perturbing a single answer.
+//!
+//! * A 4-rank threaded accumulation with the trace sink armed carries a
+//!   [`HeatSummary`] in its `CommStats` whose byte total equals the
+//!   fabric's `bytes` counter (in-memory backends share the
+//!   `batch_bytes_estimate` accounting with the sampler, so the
+//!   reconciliation is exact, and the per-destination matrix columns
+//!   match the per-rank stats).
+//! * Every ANF pass is its own traced epoch with its own reconciling
+//!   summary.
+//! * Traced and untraced runs produce bit-identical sketches.
+//! * The merged timeline replays into the `degreesketch heatmap` report
+//!   and round-trips through the Chrome trace-event export, including a
+//!   serve-tier span on its own worker track.
+//!
+//! This lives in its own integration-test binary on purpose: the trace
+//! sink is process-global, and sharing it with unrelated tests would
+//! interleave their driver events into our timeline.
+
+use std::sync::Arc;
+
+use degreesketch::comm::Backend;
+use degreesketch::coordinator::anf::{
+    neighborhood_approximation, AnfOptions,
+};
+use degreesketch::coordinator::serve::{QueryServer, ServeOptions};
+use degreesketch::coordinator::sketch::{
+    accumulate_stream, AccumulateOptions,
+};
+use degreesketch::coordinator::QueryEngine;
+use degreesketch::graph::gen::GraphSpec;
+use degreesketch::graph::stream::{EdgeStream, MemoryStream};
+use degreesketch::hll::HllConfig;
+use degreesketch::telemetry::heatmap::{Cell, TrafficMatrix};
+use degreesketch::telemetry::{self, export, heatmap, Timeline};
+
+/// Rebuild the heat cells recorded in a merged timeline (the same
+/// decoding `degreesketch heatmap` uses).
+fn cells_of(tl: &Timeline) -> Vec<Cell> {
+    let mut out = Vec::new();
+    for me in &tl.events {
+        let ev = &me.event;
+        if ev.kind != "heat.cell" {
+            continue;
+        }
+        let f = |name: &str| {
+            ev.fields
+                .iter()
+                .find(|(k, _)| k == name)
+                .map(|&(_, v)| v)
+                .unwrap_or(0)
+        };
+        out.push(Cell {
+            src: f("src") as usize,
+            dst: f("dst") as usize,
+            lane: f("range") as usize,
+            msgs: f("msgs"),
+            bytes: f("bytes"),
+        });
+    }
+    out
+}
+
+#[test]
+fn traced_epochs_reconcile_heat_with_comm_stats_and_export() {
+    let edges = GraphSpec::parse("ws:600:6:5").unwrap().generate(17);
+    let stream = MemoryStream::new(edges);
+    let cfg = HllConfig::new(8, 0x41AF);
+    let mk_opts = AccumulateOptions {
+        backend: Backend::Threaded,
+        ..Default::default()
+    };
+
+    // Untraced baseline first — the sink is process-global and stays
+    // armed once set, so the "tracing off" half of the contract has to
+    // run before it: no heat summary, and the reference answers.
+    let untraced = accumulate_stream(&stream, 4, cfg, mk_opts);
+    assert!(
+        untraced.accumulation_stats.heat.is_none(),
+        "untraced epoch must not carry a heat summary"
+    );
+
+    let dir = std::env::temp_dir()
+        .join(format!("dsk-heatmap-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    telemetry::set_trace_dir(&dir).unwrap();
+
+    let traced = accumulate_stream(&stream, 4, cfg, mk_opts);
+
+    // Observability never perturbs answers: bit-identical sketches.
+    assert_eq!(untraced.num_vertices(), traced.num_vertices());
+    for (v, h) in untraced.iter() {
+        assert_eq!(Some(h), traced.sketch(v), "sketch {v}");
+    }
+
+    let stats = &traced.accumulation_stats;
+    let heat = stats
+        .heat
+        .expect("traced epoch must carry a heat summary");
+    // The threaded backend's byte counter uses the same
+    // batch_bytes_estimate the sampler records — exact reconciliation,
+    // and every shipped message is delivered exactly once.
+    assert_eq!(heat.bytes, stats.bytes, "heat bytes vs CommStats bytes");
+    assert_eq!(heat.msgs, stats.messages, "heat msgs vs CommStats msgs");
+    assert!(heat.msgs > 0, "no traffic sampled");
+    // A hash-partitioned connected graph on 4 ranks must cross ranks,
+    // and max/mean outbound bytes is >= 1 by construction.
+    assert!(
+        heat.cut_per_mille > 0 && heat.cut_per_mille <= 1000,
+        "cut_per_mille {} out of range",
+        heat.cut_per_mille
+    );
+    assert!(
+        heat.skew_per_mille >= 1000,
+        "skew {} < 1000 (max/mean cannot be < 1)",
+        heat.skew_per_mille
+    );
+
+    // Per-rank reconciliation: rebuild the matrix from the trace itself
+    // (only one traced epoch so far) and compare each destination
+    // column against the per-rank stats, which count bytes at ship time
+    // indexed by destination.
+    let tl = Timeline::merge_dir(&dir).unwrap();
+    assert_eq!(tl.malformed, 0);
+    let matrix = TrafficMatrix::from_cells(&cells_of(&tl));
+    assert_eq!(matrix.ranks, 4);
+    assert_eq!(matrix.total_bytes(), stats.bytes);
+    for (d, pr) in stats.per_rank.iter().enumerate() {
+        let col: u64 =
+            (0..matrix.ranks).map(|s| matrix.pair_total(s, d).1).sum();
+        assert_eq!(col, pr.bytes, "rank {d} byte column diverged");
+    }
+
+    // Every ANF pass is its own traced epoch with its own summary.
+    let shards = stream.shard(4);
+    let anf = neighborhood_approximation(
+        &traced,
+        &shards,
+        AnfOptions {
+            backend: Backend::Threaded,
+            max_t: 3,
+            ..Default::default()
+        },
+    );
+    assert_eq!(anf.pass_stats.len(), 2, "max_t=3 runs passes t=2,3");
+    for (i, ps) in anf.pass_stats.iter().enumerate() {
+        let h = ps.heat.unwrap_or_else(|| panic!("pass {i} lost its heat"));
+        assert_eq!(h.bytes, ps.bytes, "pass {i} heat bytes diverged");
+    }
+
+    // A served query with sampling armed lands a serve-tier span in the
+    // same trace dir, on its own worker track.
+    let server = QueryServer::start_with_opts(
+        Arc::new(QueryEngine::new(traced)),
+        "127.0.0.1:0",
+        ServeOptions {
+            workers: 1,
+            span_sample: 1,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let s = std::net::TcpStream::connect(addr).unwrap();
+        let mut w = s.try_clone().unwrap();
+        let mut r = BufReader::new(s);
+        for req in ["DEG 1", "DEG 2", "DEG 1", "QUIT"] {
+            writeln!(w, "{req}").unwrap();
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert!(!line.trim().is_empty(), "{req} got no answer");
+        }
+    }
+    server.stop();
+
+    // The full timeline: one heat.epoch per traced epoch (accumulate +
+    // two ANF passes), heat cells, and the sampled serve spans.
+    let tl = Timeline::merge_dir(&dir).unwrap();
+    assert_eq!(tl.malformed, 0);
+    let counts = tl.counts_by_kind();
+    assert_eq!(
+        counts.get("heat.epoch").copied().unwrap_or(0),
+        3,
+        "expected 3 traced epochs: {counts:?}"
+    );
+    assert!(
+        counts.get("heat.cell").copied().unwrap_or(0) >= 1,
+        "no heat cells: {counts:?}"
+    );
+    assert!(
+        counts.get("serve.span").copied().unwrap_or(0) >= 3,
+        "sampled serve spans missing: {counts:?}"
+    );
+
+    // The replay renderer reports every epoch and flags the in-memory
+    // backend's reconciliation as exact.
+    let report = heatmap::render_report(&tl, 8);
+    assert!(report.contains("cut="), "{report}");
+    assert!(report.contains("hot ranges"), "{report}");
+    assert!(report.contains("(exact)"), "{report}");
+    assert!(!report.contains("(estimate)"), "{report}");
+
+    // The Chrome export is valid JSON with per-rank tracks, the heat
+    // instants, and the serve-span slice on its worker track.
+    let json = export::chrome_trace(&tl);
+    let doc = export::parse_json(&json)
+        .unwrap_or_else(|e| panic!("chrome export is not valid JSON: {e}"));
+    let events = doc.as_arr().expect("top level must be an array");
+    assert!(!events.is_empty());
+    for want in ["heat.epoch", "serve.span", "serve worker 0", "driver"] {
+        assert!(
+            events.iter().any(|e| {
+                e.get("name").and_then(export::Json::as_str)
+                    == Some(want)
+                    || e.get("args")
+                        .and_then(|a| a.get("name"))
+                        .and_then(export::Json::as_str)
+                        == Some(want)
+            }),
+            "no {want:?} event in export"
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -14,6 +14,13 @@
 //!   connection keeps working afterwards.
 //! * **Batching** — concurrent load actually forms batches (the
 //!   batch-size histogram fills, max batch ≥ 2).
+//! * **Metrics under fire** — `METRICS` scraped in a loop while 8
+//!   threads hammer mixed verbs: every scrape passes the exposition
+//!   checker and the query counters are monotone across scrapes.
+//! * **Spans** — with `span_sample`/`slow_query_us`/`access_log` armed,
+//!   answers stay bit-identical, per-stage histograms appear in
+//!   `METRICS`, and the JSONL access log captures slow queries even
+//!   when the sampler skipped them.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -275,6 +282,7 @@ fn overload_sheds_with_err_overloaded_and_connection_survives() {
         cache_capacity: 0,
         pending_cap: 4,
         limits: ConnLimits::default(),
+        ..ServeOptions::default()
     };
     let server = QueryServer::start_with_opts(
         Arc::new(heap_engine(0x5E)),
@@ -398,4 +406,208 @@ fn reload_with_explicit_path_upgrades_heap_server() {
     assert_eq!(server.generation(), 1);
     server.stop();
     std::fs::remove_file(&snap).unwrap();
+}
+
+/// One METRICS scrape: reads the multi-line exposition body through its
+/// `# EOF` framing line (inclusive).
+fn scrape_metrics(addr: std::net::SocketAddr) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    writeln!(w, "METRICS").unwrap();
+    let mut text = String::new();
+    loop {
+        let mut line = String::new();
+        assert!(r.read_line(&mut line).unwrap() > 0, "closed before # EOF");
+        text.push_str(&line);
+        if line.trim_end() == "# EOF" {
+            break;
+        }
+    }
+    writeln!(w, "QUIT").ok();
+    text
+}
+
+/// Sum every sample of a counter family across its label sets.
+fn counter_sum(text: &str, name: &str) -> u64 {
+    text.lines()
+        .filter(|l| !l.starts_with('#') && l.starts_with(name))
+        .filter_map(|l| l.rsplit(' ').next()?.parse::<u64>().ok())
+        .sum()
+}
+
+/// `METRICS` scraped concurrently with load must always be a valid
+/// exposition (no torn lines, no histogram-cumulativity violations) and
+/// its counters must be monotone from scrape to scrape.
+#[test]
+fn metrics_scrapes_stay_valid_and_monotone_under_concurrent_load() {
+    let server =
+        QueryServer::start(Arc::new(heap_engine(0x5E)), "127.0.0.1:0")
+            .unwrap();
+    let addr = server.addr();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let clients: Vec<_> = (0..8u64)
+        .map(|t| {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut rounds = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    // two passes over the same keys: the second is
+                    // cache-hit territory, so hit *and* miss counters
+                    // move while we scrape
+                    let mut reqs = Vec::new();
+                    for _pass in 0..2 {
+                        for v in 0..8u64 {
+                            let w = (v + t) % 34;
+                            reqs.push(format!("DEG {v}"));
+                            reqs.push(format!("TRI {v} {w}"));
+                            reqs.push(format!("JACCARD {v} {w}"));
+                            reqs.push(format!("UNION {v} {w}"));
+                        }
+                    }
+                    let n = reqs.len();
+                    assert_eq!(ask(addr, &reqs).len(), n);
+                    rounds += 1;
+                }
+                rounds
+            })
+        })
+        .collect();
+
+    let mut last_queries = 0u64;
+    let mut last_cache = 0u64;
+    for scrape in 0..15 {
+        let text = scrape_metrics(addr);
+        if let Err(e) = degreesketch::telemetry::prom::check_text(&text) {
+            panic!("scrape {scrape} failed exposition check: {e}");
+        }
+        let queries = counter_sum(&text, "degreesketch_queries_total");
+        let cache = counter_sum(&text, "degreesketch_cache_hits_total")
+            + counter_sum(&text, "degreesketch_cache_misses_total");
+        assert!(
+            queries >= last_queries,
+            "queries_total went backwards: {last_queries} -> {queries}"
+        );
+        assert!(
+            cache >= last_cache,
+            "cache counters went backwards: {last_cache} -> {cache}"
+        );
+        last_queries = queries;
+        last_cache = cache;
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let mut rounds = 0;
+    for c in clients {
+        rounds += c.join().unwrap();
+    }
+    assert!(rounds > 0, "clients never completed a round");
+    assert!(last_queries > 0, "no queries observed across 15 scrapes");
+
+    // after the dust settles, every verb shows up per-kind, and the
+    // duplicate passes above must have produced per-kind hit counters
+    let text = scrape_metrics(addr);
+    for kind in ["deg", "tri", "jaccard", "union"] {
+        assert!(
+            text.contains(&format!(
+                "degreesketch_queries_total{{kind=\"{kind}\"}}"
+            )),
+            "missing per-kind series for {kind}"
+        );
+    }
+    assert!(
+        text.contains("degreesketch_cache_hits_total{kind="),
+        "no per-kind cache-hit counter in:\n{text}"
+    );
+    server.stop();
+}
+
+/// Span sampling end to end: answers stay bit-identical with tracing
+/// armed, per-stage histograms land in `METRICS`, and the JSONL access
+/// log records sampled queries *and* slow outliers the sampler skipped.
+#[test]
+fn span_sampling_feeds_access_log_and_stage_histograms() {
+    let log = tmp_path("access.jsonl");
+    let _ = std::fs::remove_file(&log);
+    let opts = ServeOptions {
+        workers: 1,
+        // sample every 2nd query; a 1 us slow threshold makes every
+        // worker-computed query an "outlier", so unsampled misses must
+        // still reach the log through the slow path
+        span_sample: 2,
+        slow_query_us: 1,
+        access_log: Some(log.clone()),
+        ..ServeOptions::default()
+    };
+    let server = QueryServer::start_with_opts(
+        Arc::new(heap_engine(0x5E)),
+        "127.0.0.1:0",
+        opts,
+    )
+    .unwrap();
+    let addr = server.addr();
+    let reference = heap_engine(0x5E);
+
+    let mut reqs = Vec::new();
+    let mut expected = Vec::new();
+    // two passes: pass 0 is all misses (kernel spans), pass 1 all hits
+    // (cache spans)
+    for _pass in 0..2 {
+        for v in 0..16u64 {
+            let w = (v + 1) % 34;
+            reqs.push(format!("DEG {v}"));
+            expected.push(expect_deg(&reference, v));
+            reqs.push(format!("TRI {v} {w}"));
+            expected.push(expect_tri(&reference, v, w));
+        }
+    }
+    let got = ask(addr, &reqs);
+    for ((req, want), got) in reqs.iter().zip(&expected).zip(&got) {
+        assert_eq!(got, want, "{req} diverged with spans armed");
+    }
+
+    let text = scrape_metrics(addr);
+    degreesketch::telemetry::prom::check_text(&text).unwrap();
+    assert!(
+        text.contains("degreesketch_query_stage_us"),
+        "no per-stage histogram in:\n{text}"
+    );
+    for stage in ["queue", "kernel", "flush", "cache"] {
+        assert!(
+            text.contains(&format!("stage=\"{stage}\"")),
+            "stage {stage} missing from METRICS:\n{text}"
+        );
+    }
+    server.stop();
+
+    // the access log: every line is a complete JSON object with the
+    // span fields; slow outliers are present even where unsampled
+    let body = std::fs::read_to_string(&log).unwrap();
+    let mut lines = 0usize;
+    let mut unsampled_slow = 0usize;
+    for line in body.lines() {
+        let v = degreesketch::telemetry::export::parse_json(line)
+            .unwrap_or_else(|e| panic!("bad access-log line {line:?}: {e}"));
+        for key in ["t_us", "kind", "hit", "worker", "queue_us",
+            "kernel_us", "flush_us", "total_us", "sampled", "slow"]
+        {
+            assert!(v.get(key).is_some(), "{key} missing in {line}");
+        }
+        if v.get("sampled") == Some(&degreesketch::telemetry::export::Json::Bool(false)) {
+            assert_eq!(
+                v.get("slow"),
+                Some(&degreesketch::telemetry::export::Json::Bool(true)),
+                "unsampled line logged without being slow: {line}"
+            );
+            unsampled_slow += 1;
+        }
+        lines += 1;
+    }
+    assert!(lines > 0, "access log is empty");
+    assert!(
+        unsampled_slow > 0,
+        "no unsampled slow query reached the log — the always-log-\
+         outliers path never fired ({lines} lines total)"
+    );
+    std::fs::remove_file(&log).unwrap();
 }

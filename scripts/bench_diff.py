@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_microbench.json files and gate on regressions.
+
+Usage: bench_diff.py PRIOR.json CURRENT.json [--fail-pct 20]
+
+Rows are matched by their "component" name. Timed rows compare
+`rate_per_s` (higher is better); ratio rows compare `speedup` (higher is
+better). A populated row that loses more than --fail-pct percent of its
+prior value fails the gate; rows that are null on either side (the bench
+never ran, e.g. toolchain-less authoring containers) only warn, so a
+cold artifact chain cannot break CI.
+"""
+
+import argparse
+import json
+import sys
+
+
+def metric_of(row):
+    """(metric_name, value) for one results[] row; value may be None."""
+    if "rate_per_s" in row:
+        return "rate_per_s", row["rate_per_s"]
+    if "speedup" in row:
+        return "speedup", row["speedup"]
+    return None, None
+
+
+def index(doc):
+    out = {}
+    for row in doc.get("results", []):
+        name = row.get("component")
+        if name:
+            out[name] = row
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prior")
+    ap.add_argument("current")
+    ap.add_argument("--fail-pct", type=float, default=20.0)
+    args = ap.parse_args()
+
+    with open(args.prior) as f:
+        prior = index(json.load(f))
+    with open(args.current) as f:
+        current = index(json.load(f))
+
+    width = max((len(n) for n in current | prior), default=9)
+    print(f"{'component':<{width}}  {'prior':>14}  {'current':>14}  delta")
+    print("-" * (width + 44))
+
+    regressions = []
+    warnings = 0
+    for name in sorted(current | prior):
+        p_row, c_row = prior.get(name), current.get(name)
+        if p_row is None:
+            print(f"{name:<{width}}  {'--':>14}  {'new row':>14}  (no baseline)")
+            continue
+        if c_row is None:
+            print(f"{name:<{width}}  {'dropped':>14}  {'--':>14}  WARN: row vanished")
+            warnings += 1
+            continue
+        _, p = metric_of(p_row)
+        kind, c = metric_of(c_row)
+        if p is None or c is None:
+            print(f"{name:<{width}}  {fmt(p):>14}  {fmt(c):>14}  WARN: unpopulated")
+            warnings += 1
+            continue
+        delta_pct = (c - p) / p * 100.0 if p else 0.0
+        flag = ""
+        if delta_pct < -args.fail_pct:
+            flag = f"  FAIL: {kind} regressed beyond -{args.fail_pct:g}%"
+            regressions.append((name, delta_pct))
+        print(f"{name:<{width}}  {fmt(p):>14}  {fmt(c):>14}  {delta_pct:+7.1f}%{flag}")
+
+    print()
+    if warnings:
+        print(f"{warnings} row(s) unpopulated or missing (warned, not failed)")
+    if regressions:
+        print(f"{len(regressions)} regression(s) beyond {args.fail_pct:g}%:")
+        for name, pct in regressions:
+            print(f"  {name}: {pct:+.1f}%")
+        sys.exit(1)
+    print("bench gate: OK")
+
+
+def fmt(v):
+    if v is None:
+        return "null"
+    if isinstance(v, float) and (v >= 1000 or v == int(v)):
+        return f"{v:,.0f}"
+    return f"{v:.3g}"
+
+
+if __name__ == "__main__":
+    main()
