@@ -17,10 +17,16 @@ pub struct Args {
     consumed: std::cell::RefCell<Vec<String>>,
 }
 
-/// Flags that take no value.
+/// Flags that take no value. Kept in lockstep with the `.has(...)`
+/// call sites by dslint's `bool-flags` rule: every entry here must
+/// have a `.has` reader, every `.has` literal must be listed here, and
+/// no entry may double as a value-taking flag. (PR 9 shipped `--json`
+/// reading as a value flag because it was missing from this table;
+/// `metrics`/`write`/`quiet` were dead entries removed by the same
+/// audit.)
 const BOOL_FLAGS: &[&str] = &[
-    "exact", "metrics", "help", "discard-dominated", "write", "quiet",
-    "verify", "self-check", "fixed-flush", "live-reload", "json",
+    "exact", "help", "discard-dominated", "verify", "self-check",
+    "fixed-flush", "live-reload", "json",
 ];
 
 impl Args {

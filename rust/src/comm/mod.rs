@@ -226,6 +226,15 @@
 //!   `ckpt.commit` when the COMMIT lands.
 //! * **Recovery** — workers emit `pause` on PAUSE, `restore.rollback`
 //!   after rolling back to the restored barrier.
+//! * **Quiescence** — the driver emits `quiesce` (field `idle_rounds`)
+//!   when the fleet's outstanding-message count reaches zero and the
+//!   epoch's termination barrier can proceed.
+//!
+//! This list is the **authoritative vocabulary**: dslint's trace-vocab
+//! rule rejects any `event`/`driver_event`/`serve_event` call site
+//! whose kind literal is not documented here (backticked dotted names,
+//! plus the bare kinds `pause` and `quiesce`, plus the `chaos.<kind>`
+//! family). Add the doc line first, then the emit site.
 //! * **Liveness & chaos** — `hb.stale` fires when a worker declares a
 //!   peer dead from HB silence (staleness also rides the next REPORT and
 //!   surfaces as [`CommStats::max_stale_ms`]); every injected chaos

@@ -136,6 +136,8 @@ mod unix {
         let bytes = line.as_bytes();
         let mut off = 0usize;
         while off < bytes.len() {
+            // SAFETY: writes from a live &[u8] with an in-bounds length;
+            // fd 2 is always open, and write(2) never touches the buffer.
             let n = unsafe {
                 sys::write(2, bytes[off..].as_ptr(), bytes.len() - off)
             };
@@ -183,6 +185,10 @@ mod unix {
         fn still_alive(&mut self) -> Result<bool, String> {
             let mut status: i32 = 0;
             let reaped =
+                // SAFETY: `status` is a live stack i32 for the
+                // out-pointer; WNOHANG waitpid on a pid we forked has
+                // no other preconditions (a stale pid just returns
+                // -1/ECHILD).
                 unsafe { sys::waitpid(self.pid, &mut status, WNOHANG) };
             if reaped == self.pid {
                 Err(format!("exited mid-epoch ({})", decode_status(status)))
@@ -201,6 +207,8 @@ mod unix {
         let mut notes = String::new();
         for (rank, &pid) in pids.iter().enumerate() {
             let mut status: i32 = 0;
+            // SAFETY: same as PidLiveness — valid out-pointer, WNOHANG,
+            // pid from our own fork bookkeeping.
             let reaped = unsafe { sys::waitpid(pid, &mut status, WNOHANG) };
             if reaped == pid {
                 if status != 0 {
@@ -215,6 +223,10 @@ mod unix {
                 // already reaped elsewhere: the pid is no longer ours
                 continue;
             }
+            // SAFETY: the WNOHANG probe above proved `pid` is still our
+            // unreaped child, so SIGKILL targets a process we own and
+            // the blocking waitpid (valid out-pointer) reaps it exactly
+            // once.
             unsafe {
                 sys::kill(pid, SIGKILL);
                 sys::waitpid(pid, &mut status, 0);
@@ -388,6 +400,10 @@ mod unix {
             // output on their own descriptors
             let _ = std::io::stdout().flush();
             let _ = std::io::stderr().flush();
+            // SAFETY: fork itself has no preconditions; the child side
+            // confines itself to async-signal-safe work (socket I/O and
+            // raw_stderr, no allocator-dependent locks are held — stdio
+            // is flushed above) before _exit.
             let pid = unsafe { sys::fork() };
             assert!(pid >= 0, "fork failed");
             if pid == 0 {
@@ -399,6 +415,9 @@ mod unix {
                     &mut ctrl_child,
                     chaos,
                 );
+                // SAFETY: _exit never returns and skips atexit/Drop
+                // machinery — exactly what a forked child that must not
+                // run the parent's destructors needs.
                 unsafe { sys::_exit(code) }
             }
             pids.push(pid);
@@ -507,6 +526,8 @@ mod unix {
         // the parent's mesh copies close (see the comment at fork time).
         for (rank, pid) in pids.iter().enumerate() {
             let mut status: i32 = 0;
+            // SAFETY: blocking waitpid with a valid out-pointer on a pid
+            // from our `pids` list; each pid is reaped exactly once here.
             let got = unsafe { sys::waitpid(*pid, &mut status, 0) };
             assert_eq!(got, *pid, "waitpid failed for rank {rank}");
             if status != 0 {
@@ -647,6 +668,9 @@ mod unix {
 }
 
 #[cfg(all(test, unix))]
+// Miri cannot emulate the raw poll/mmap/fork/socket syscalls these
+// tests drive; the Miri CI job scopes to the pure-core suites instead.
+#[cfg(not(miri))]
 mod tests {
     use super::super::codec::{
         get_u64, get_u8, put_u64, put_u8, WireError, WireMsg,

@@ -73,6 +73,9 @@ impl<M> Transport<M> for ChannelTransport<'_, M> {
         self.shared.outstanding.fetch_add(n as i64, Ordering::AcqRel);
     }
 
+    // RELAXED: flushes/bytes are traffic statistics; the channel send
+    // (and `outstanding`'s AcqRel in note_queued) carry the actual
+    // synchronization for the batch itself.
     fn ship(&mut self, to: usize, batch: Vec<M>) {
         let bytes = batch_bytes_estimate::<M>(batch.len());
         self.shared.flushes.fetch_add(1, Ordering::Relaxed);
@@ -217,6 +220,8 @@ pub fn run_threaded<A: Actor + 'static>(
 
 /// One rank's receive loop: runs the three actor contexts, flushing the
 /// outbox through the channel transport.
+// RELAXED: delivered/per-rank message counts are statistics; the
+// quiescence protocol rides solely on `outstanding`'s AcqRel pairs.
 fn worker_loop<A: Actor>(
     rank: usize,
     mut actor: A,

@@ -250,9 +250,15 @@ impl Config {
         })
     }
 
-    /// Serving-tier knobs (`serve.*` keys). Validation is light — the
-    /// options struct itself clamps zeros to sane behavior (0 workers =
-    /// auto, 0 cache entries = caching off).
+    /// Serving-tier knobs: `serve.workers` (handler threads; 0 = auto),
+    /// `serve.batch_max` (keys folded into one intersect-kernel batch),
+    /// `serve.cache_capacity` (hot-vertex cache entries; 0 = caching
+    /// off), `serve.pending_cap` (queued requests per connection),
+    /// `serve.read_timeout_ms` / `serve.idle_secs` (connection limits),
+    /// `serve.span_sample` (record every Nth query span; 0 = off),
+    /// `serve.slow_query_us` (always-record latency threshold; 0 = off)
+    /// and `serve.access_log` (JSONL access-log path; empty = off).
+    /// Zeros where allowed clamp to sane behavior rather than erroring.
     pub fn serve_options(&self) -> Result<ServeOptions> {
         let d = ServeOptions::default();
         let workers = self.get_int("serve.workers", d.workers as i64);
@@ -334,6 +340,91 @@ impl Config {
         }
         crate::comm::rendezvous::set_dial_backoff(base as u64, cap as u64);
         Ok((base as u64, cap as u64))
+    }
+
+    /// Schema-check the infrastructure sections (`comm.*`, `serve.*`,
+    /// `telemetry.*`) before any subsystem consumes them: unknown keys
+    /// in those sections are rejected (a typo'd `--set serve.worker=8`
+    /// used to be silently ignored and the default applied), values
+    /// must carry the expected type (the typed getters silently fall
+    /// back to defaults on mismatch, which hides `serve.workers="8"`),
+    /// and a few knobs get upper caps that the per-subsystem builders
+    /// never enforced. Called from `run()` in main.rs right after CLI
+    /// overrides land, so it sees the merged file + `--set` view.
+    pub fn validate(&self) -> Result<()> {
+        // The schema lives inside this function so that every key
+        // literal sits in the `bail`-capable arm dslint's config-parity
+        // rule demands — this IS the validation arm for keys whose
+        // typed builder has nothing to range-check (e.g. the string
+        // knobs `comm.listen`, `comm.hosts`, `serve.access_log`,
+        // `telemetry.trace_dir`).
+        const INT: u8 = 0;
+        const STR: u8 = 1;
+        const BOOL: u8 = 2;
+        const KNOWN: &[(&str, u8)] = &[
+            ("comm.flush_threshold", INT),
+            ("comm.adaptive_flush", BOOL),
+            ("comm.checkpoint_interval", INT),
+            ("comm.checkpoint_secs", INT),
+            ("comm.checkpoint_chunk", INT),
+            ("comm.liveness_rearms", INT),
+            ("comm.max_respawns", INT),
+            ("comm.hb_interval_ms", INT),
+            ("comm.hb_timeout_ms", INT),
+            ("comm.dial_backoff_base_ms", INT),
+            ("comm.dial_backoff_cap_ms", INT),
+            ("comm.listen", STR),
+            ("comm.hosts", STR),
+            ("serve.workers", INT),
+            ("serve.batch_max", INT),
+            ("serve.cache_capacity", INT),
+            ("serve.pending_cap", INT),
+            ("serve.read_timeout_ms", INT),
+            ("serve.idle_secs", INT),
+            ("serve.span_sample", INT),
+            ("serve.slow_query_us", INT),
+            ("serve.access_log", STR),
+            ("telemetry.trace_dir", STR),
+        ];
+        for (key, val) in &self.values {
+            let section = key.split('.').next().unwrap_or("");
+            if !matches!(section, "comm" | "serve" | "telemetry") {
+                continue;
+            }
+            let Some((_, want)) = KNOWN.iter().find(|(k, _)| *k == key)
+            else {
+                bail!(
+                    "unknown config key `{key}` in section [{section}] \
+                     (typo? known keys are listed in config.rs)"
+                );
+            };
+            let ok = match *want {
+                INT => val.as_int().is_some(),
+                STR => val.as_str().is_some(),
+                _ => val.as_bool().is_some(),
+            };
+            if !ok {
+                let want_name = match *want {
+                    INT => "an integer",
+                    STR => "a quoted string",
+                    _ => "a boolean",
+                };
+                bail!("config key `{key}` must be {want_name}, got {val:?}");
+            }
+        }
+        // Upper caps the per-subsystem builders only bound from below.
+        const CAPS: &[(&str, i64)] = &[
+            ("serve.workers", 4096),
+            ("serve.batch_max", 65536),
+            ("comm.flush_threshold", 1 << 20),
+        ];
+        for (key, cap) in CAPS {
+            let v = self.get_int(key, 0);
+            if v > *cap {
+                bail!("{key} = {v} exceeds the supported cap of {cap}");
+            }
+        }
+        Ok(())
     }
 }
 
@@ -550,6 +641,47 @@ adaptive_flush = false
         assert_eq!(c.get_int("run.ranks", 0), 16);
         assert_eq!(c.estimator().unwrap(), Estimator::Classic);
         assert!(c.set_override("no-equals-sign").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_infra_keys() {
+        let c = Config::parse(SAMPLE).unwrap();
+        c.validate().unwrap();
+
+        // a typo'd key in a schema'd section is an error, not a silent
+        // fall-through to defaults
+        let mut c2 = Config::parse("").unwrap();
+        c2.set_override("serve.worker=8").unwrap();
+        let err = c2.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown config key"), "{err}");
+
+        // app-level sections stay open: unknown keys there are fine
+        let mut c3 = Config::parse("").unwrap();
+        c3.set_override("experiment.tag=\"fig7\"").unwrap();
+        c3.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_type_mismatches_and_cap_overruns() {
+        let mut c = Config::parse("").unwrap();
+        c.set_override("serve.workers=\"8\"").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("must be an integer"), "{err}");
+
+        let mut c2 = Config::parse("").unwrap();
+        c2.set_override("comm.adaptive_flush=1").unwrap();
+        assert!(c2.validate().is_err());
+
+        let mut c3 = Config::parse("").unwrap();
+        c3.set_override("serve.workers=100000").unwrap();
+        let err = c3.validate().unwrap_err().to_string();
+        assert!(err.contains("exceeds the supported cap"), "{err}");
+        c3.set_override("serve.workers=4096").unwrap();
+        c3.validate().unwrap();
+
+        let mut c4 = Config::parse("").unwrap();
+        c4.set_override("comm.flush_threshold=2000000").unwrap();
+        assert!(c4.validate().is_err());
     }
 
     #[test]

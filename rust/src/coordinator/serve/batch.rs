@@ -107,6 +107,9 @@ impl BatchQueue {
 
     /// Drain up to `max` jobs, blocking briefly when empty. An empty
     /// result means "nothing yet — re-check shutdown and call again".
+    // RELAXED: the shutdown flag is a monotonic latch with no data
+    // dependencies; the queue mutex already orders job handoff, and a
+    // raced-past set is caught on the next 100ms wakeup.
     pub fn pop_batch(&self, max: usize) -> Vec<Job> {
         let mut q = self.inner.lock().unwrap();
         while q.is_empty() {
@@ -126,10 +129,14 @@ impl BatchQueue {
         q.drain(..n).collect()
     }
 
+    // RELAXED: monotonic latch read; see pop_batch.
     pub fn is_shutdown(&self) -> bool {
         self.shutdown.load(Ordering::Relaxed)
     }
 
+    // RELAXED: monotonic latch set; notify_all below pairs with the
+    // condvar wait in pop_batch, which re-reads the flag under no
+    // ordering assumptions.
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::Relaxed);
         self.cv.notify_all();

@@ -74,6 +74,8 @@ impl ResultCache {
 
     /// The cached response line for `key` at generation `gen`, counting
     /// the hit/miss. Entries from other generations are misses.
+    // RELAXED: hit/miss tallies are statistics only — no reader makes a
+    // control decision on them, so cross-counter ordering is irrelevant.
     pub fn get(&self, key: &CacheKey, gen: u64) -> Option<String> {
         if !self.enabled() {
             return None;
@@ -107,10 +109,12 @@ impl ResultCache {
         }
     }
 
+    // RELAXED: statistics read; may lag a concurrent get() by design.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
+    // RELAXED: statistics read; may lag a concurrent get() by design.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }

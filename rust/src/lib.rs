@@ -16,6 +16,11 @@
 //! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
 //! reproduced tables/figures.
 
+// Every `unsafe` block/impl in this crate must carry a `// SAFETY:`
+// comment; enforced twice — by clippy here and by `tools/dslint`'s
+// safety-comment rule (which also runs offline, without a toolchain).
+#![deny(clippy::undocumented_unsafe_blocks)]
+
 pub mod bench_util;
 pub mod cli;
 pub mod comm;

@@ -70,6 +70,10 @@
 //! queue/kernel/flush stages), `--slow-query-us US` and
 //! `--access-log FILE` (JSONL; slow queries always logged).
 
+// Mirrors the lib crate root: undocumented `unsafe` is a hard error
+// (see `tools/dslint`'s safety-comment rule for the offline twin).
+#![deny(clippy::undocumented_unsafe_blocks)]
+
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -122,6 +126,10 @@ fn run(argv: &[String]) -> Result<()> {
             config.set_override(spec)?;
         }
     }
+    // schema-check the merged file + --set view before any subsystem
+    // consumes it: unknown serve./comm./telemetry. keys and type
+    // mismatches fail fast here instead of silently defaulting
+    config.validate()?;
     let result = match args.subcommand.as_str() {
         "generate" => cmd_generate(&args),
         "accumulate" => cmd_accumulate(&args, &config),
@@ -311,8 +319,9 @@ fn flush_policy_of(args: &Args, config: &Config) -> Result<FlushPolicy> {
 /// Fault-tolerance policy: `comm.*` config keys overridden by
 /// `--checkpoint N` (checkpoint every N seed chunks — any nonzero value
 /// makes the socket-backend epoch resilient), `--checkpoint-secs M`,
-/// `--checkpoint-chunk E` (edges per seed chunk), and the liveness
-/// probes `--hb-interval-ms` / `--hb-timeout-ms`. Also installs the
+/// `--checkpoint-chunk E` (edges per seed chunk), the recovery caps
+/// `--liveness-rearms` / `--max-respawns`, and the liveness probes
+/// `--hb-interval-ms` / `--hb-timeout-ms`. Also installs the
 /// `comm.dial_backoff_*` retry pacing into the rendezvous dialer.
 fn fault_policy_of(args: &Args, config: &Config) -> Result<FaultPolicy> {
     config.apply_dial_backoff()?;
@@ -335,6 +344,18 @@ fn fault_policy_of(args: &Args, config: &Config) -> Result<FaultPolicy> {
             bail!("--checkpoint-chunk must be positive");
         }
         fault.chunk = chunk;
+    }
+    if let Some(n) = args.get_u64_opt("liveness-rearms")? {
+        if n == 0 || n > u32::MAX as u64 {
+            bail!("--liveness-rearms must be in 1..={}", u32::MAX);
+        }
+        fault.rearm_cap = n as u32;
+    }
+    if let Some(n) = args.get_u64_opt("max-respawns")? {
+        if n > u32::MAX as u64 {
+            bail!("--max-respawns must be <= {}", u32::MAX);
+        }
+        fault.max_respawns = n as u32;
     }
     if let Some(ms) = args.get_u64_opt("hb-interval-ms")? {
         fault.hb_interval_ms = ms;
@@ -476,7 +497,10 @@ fn serve_options_of(args: &Args, config: &Config) -> Result<ServeOptions> {
             .map(PathBuf::from)
             .or(base.access_log),
         limits: ConnLimits {
-            read_timeout: base.limits.read_timeout,
+            read_timeout: std::time::Duration::from_millis(args.get_u64(
+                "read-timeout-ms",
+                base.limits.read_timeout.as_millis() as u64,
+            )?),
             idle_cap: std::time::Duration::from_secs(
                 args.get_u64("idle-secs", base.limits.idle_cap.as_secs())?,
             ),

@@ -63,7 +63,10 @@ impl HeapSource {
         let mut f = File::open(path)?;
         let len = f.metadata()?.len() as usize;
         let mut buf = vec![0u64; len.div_ceil(8)];
-        // view the u64 backing store as bytes for the read
+        // SAFETY: views the u64 backing store as bytes for the read —
+        // `buf` holds `len.div_ceil(8) * 8 >= len` initialized bytes,
+        // u8 has no alignment requirement, and `dst` is dropped before
+        // `buf` moves into the returned struct.
         let dst = unsafe {
             std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len)
         };
@@ -74,6 +77,9 @@ impl HeapSource {
 
 impl SnapshotSource for HeapSource {
     fn bytes(&self) -> &[u8] {
+        // SAFETY: `buf` owns at least `len` initialized bytes (see
+        // `open`), and the borrow is tied to `&self`, so the slice
+        // cannot outlive the allocation.
         unsafe {
             std::slice::from_raw_parts(self.buf.as_ptr() as *const u8, self.len)
         }
@@ -131,6 +137,9 @@ impl MmapSource {
                 "cannot map an empty file",
             ));
         }
+        // SAFETY: plain FFI call; a null addr + PROT_READ + MAP_SHARED
+        // request over a freshly opened fd has no preconditions beyond
+        // `len > 0`, checked above. The result is validated before use.
         let ptr = unsafe {
             sys::mmap(
                 std::ptr::null_mut(),
@@ -155,6 +164,9 @@ impl MmapSource {
 #[cfg(all(unix, target_pointer_width = "64"))]
 impl SnapshotSource for MmapSource {
     fn bytes(&self) -> &[u8] {
+        // SAFETY: `ptr` is a PROT_READ mapping of exactly `len` bytes
+        // held until Drop; the borrow is tied to `&self`, and nothing
+        // writes through the mapping.
         unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
     }
 
@@ -171,6 +183,9 @@ impl SnapshotSource for MmapSource {
             AccessPattern::Random => sys::MADV_RANDOM,
             AccessPattern::Sequential => sys::MADV_SEQUENTIAL,
         };
+        // SAFETY: advises over the exact `[ptr, ptr+len)` region this
+        // struct mapped and still holds; madvise never invalidates the
+        // mapping, and the return value is deliberately ignored.
         unsafe {
             sys::madvise(
                 self.ptr as *mut std::os::raw::c_void,
@@ -184,6 +199,8 @@ impl SnapshotSource for MmapSource {
 #[cfg(all(unix, target_pointer_width = "64"))]
 impl Drop for MmapSource {
     fn drop(&mut self) {
+        // SAFETY: unmaps exactly the region `open` mapped; Drop runs at
+        // most once, and no `bytes()` borrow can outlive `self`.
         unsafe {
             sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
         }
@@ -194,6 +211,8 @@ impl Drop for MmapSource {
 // concurrent readers from any thread are fine.
 #[cfg(all(unix, target_pointer_width = "64"))]
 unsafe impl Send for MmapSource {}
+// SAFETY: same argument as Send above — `&MmapSource` only exposes
+// immutable reads of an immutable mapping.
 #[cfg(all(unix, target_pointer_width = "64"))]
 unsafe impl Sync for MmapSource {}
 
@@ -290,6 +309,9 @@ pub fn open_source(
 }
 
 #[cfg(test)]
+// Miri cannot emulate the raw poll/mmap/fork/socket syscalls these
+// tests drive; the Miri CI job scopes to the pure-core suites instead.
+#[cfg(not(miri))]
 mod tests {
     use super::*;
 

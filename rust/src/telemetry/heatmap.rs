@@ -101,6 +101,9 @@ impl HeatGrid {
 
     /// Relaxed accumulate; out-of-range coordinates are dropped (a sampler
     /// built for a different fleet size must not scribble).
+    // RELAXED: per-cell traffic tallies with no inter-cell invariant;
+    // drain() swaps each cell independently, so increments never need
+    // to be ordered against each other.
     pub fn add(&self, src: usize, dst: usize, lane: usize, msgs: u64, bytes: u64) {
         if src >= self.ranks || dst >= self.ranks || lane >= LANES {
             return;
@@ -112,6 +115,9 @@ impl HeatGrid {
 
     /// Atomically swap every cell to zero and return the non-empty ones.
     /// Safe against concurrent `add`: each counter is drained exactly once.
+    // RELAXED: the swap's atomicity (not its ordering) is what "drained
+    // exactly once" relies on; a concurrent add landing after the swap
+    // simply counts toward the next epoch.
     pub fn drain(&self) -> Vec<Cell> {
         let mut out = Vec::new();
         for src in 0..self.ranks {
@@ -257,6 +263,8 @@ pub fn flush_to_events(epoch: u64) {
 }
 
 /// Driver-side: arm the grid for a traced epoch and return its label.
+// RELAXED: the epoch label is a monotonic tag taken by the single
+// driver thread; nothing synchronizes on it.
 pub fn epoch_begin(ranks: usize) -> u64 {
     arm(ranks);
     FOLD.lock().unwrap().clear();

@@ -60,6 +60,9 @@ impl Histogram {
     }
 
     /// Record one observation.
+    // RELAXED: buckets/sum/count are independent statistics; readers
+    // tolerate a torn view across them (count is recomputed from the
+    // bucket snapshot), so no cross-cell ordering is needed.
     pub fn observe(&self, v: u64) {
         self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
@@ -67,16 +70,21 @@ impl Histogram {
     }
 
     /// Total observations recorded.
+    // RELAXED: statistics read; may trail in-flight observes.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
     /// Sum of all observed values (wrapping on overflow).
+    // RELAXED: statistics read; may trail in-flight observes.
     pub fn sum(&self) -> u64 {
         self.sum.load(Ordering::Relaxed)
     }
 
     /// A consistent-enough copy of the bucket counts for rendering.
+    // RELAXED: each bucket is read independently; "consistent enough"
+    // is the documented contract — quantiles over a mid-observe
+    // snapshot are off by at most the in-flight observations.
     pub fn snapshot(&self) -> HistSnapshot {
         let mut buckets = [0u64; BUCKETS];
         for (dst, src) in buckets.iter_mut().zip(self.buckets.iter()) {

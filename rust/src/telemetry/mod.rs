@@ -97,11 +97,13 @@ impl Counter {
     pub fn inc(&self) {
         self.add(1);
     }
+    // RELAXED: metric counters order nothing; scrapes tolerate lag.
     pub fn add(&self, delta: u64) {
         if let Series::Counter(v) = &*self.0 {
             v.fetch_add(delta, Ordering::Relaxed);
         }
     }
+    // RELAXED: metric read; see add.
     pub fn get(&self) -> u64 {
         match &*self.0 {
             Series::Counter(v) => v.load(Ordering::Relaxed),
@@ -115,17 +117,21 @@ impl Counter {
 pub struct Gauge(Arc<Series>);
 
 impl Gauge {
+    // RELAXED: last-write-wins metric value; scrapes tolerate lag.
     pub fn set(&self, v: u64) {
         if let Series::Gauge(g) = &*self.0 {
             g.store(v, Ordering::Relaxed);
         }
     }
     /// Raise to `v` if it exceeds the current value.
+    // RELAXED: fetch_max's atomicity alone keeps the high-water mark;
+    // no other data hangs off it.
     pub fn raise(&self, v: u64) {
         if let Series::Gauge(g) = &*self.0 {
             g.fetch_max(v, Ordering::Relaxed);
         }
     }
+    // RELAXED: metric read; see set.
     pub fn get(&self) -> u64 {
         match &*self.0 {
             Series::Gauge(g) => g.load(Ordering::Relaxed),
@@ -230,6 +236,9 @@ impl Registry {
 
     /// Snapshot every series, sorted by `(name, labels, kind)` so the
     /// exposition output is deterministic.
+    // RELAXED: scrape-time reads of independent metric cells; the shard
+    // mutex pins the series map, not the values, and a scrape that
+    // trails in-flight increments is correct by contract.
     pub fn snapshot(&self) -> Vec<Sample> {
         let mut out = Vec::new();
         for shard in &self.shards {

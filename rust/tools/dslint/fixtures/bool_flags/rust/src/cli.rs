@@ -1,0 +1,15 @@
+//! bool-flags fixture: `metrics` is a dead entry (no `.has` site) and
+//! `config` is listed here despite being a value-taking flag.
+
+pub const BOOL_FLAGS: &[&str] = &["exact", "metrics", "config"];
+
+pub struct Args;
+
+impl Args {
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+    pub fn get(&self, _name: &str) -> Option<String> {
+        None
+    }
+}

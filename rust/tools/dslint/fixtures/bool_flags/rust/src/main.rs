@@ -1,0 +1,9 @@
+//! bool-flags fixture: `--json` is read with `.has` but was never
+//! added to BOOL_FLAGS — a reproduction of the PR 9 bug.
+
+pub fn run(args: &crate::cli::Args) {
+    let _exact = args.has("exact");
+    let _json = args.has("json");
+    let _cfg_flag = args.has("config");
+    let _cfg_value = args.get("config");
+}

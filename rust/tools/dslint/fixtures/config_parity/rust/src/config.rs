@@ -1,0 +1,16 @@
+//! config-parity fixture. The `serve.workers` key is fully wired:
+//! documented here, range-checked below, and matched by `--workers`
+//! in main.rs. The widgets knob below has none of the three (its key
+//! is deliberately NOT spelled out in any comment).
+
+pub fn serve_options(c: &Config) -> Result<i64> {
+    let w = c.get_i64("serve.workers");
+    if w > 4096 {
+        bail!("serve.workers out of range");
+    }
+    Ok(w)
+}
+
+pub fn widgets(c: &Config) -> i64 {
+    c.get_i64("serve.widgets")
+}

@@ -1,0 +1,5 @@
+//! config-parity fixture: only `--workers` exists as a flag.
+
+pub fn apply(args: &Args) {
+    let _ = args.get_u64_opt("workers");
+}

@@ -1,0 +1,18 @@
+//! frame-kinds fixture: REPORT duplicates PROBE's value, and GHOST has
+//! no dispatch arm anywhere.
+
+pub mod kind {
+    pub const MSGS: u8 = 0;
+    pub const PROBE: u8 = 1;
+    pub const REPORT: u8 = 1;
+    pub const GHOST: u8 = 3;
+}
+
+pub fn dispatch(k: u8) {
+    match k {
+        kind::MSGS => {}
+        kind::PROBE => {}
+        kind::REPORT => {}
+        _ => {}
+    }
+}

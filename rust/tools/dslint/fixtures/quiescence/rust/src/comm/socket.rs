@@ -1,0 +1,5 @@
+//! quiescence fixture: a rogue ship outside transport.rs::flush_outbox.
+
+pub fn send_direct(link: &mut Link, f: Frame) {
+    link.ship(f);
+}

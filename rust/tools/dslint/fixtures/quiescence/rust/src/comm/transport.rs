@@ -1,0 +1,9 @@
+//! quiescence fixture: flush_outbox ships BEFORE noting the queued
+//! count — the ordering the real transport must never exhibit.
+
+pub fn flush_outbox(t: &mut Outbox) {
+    for f in t.frames.drain(..) {
+        t.link.ship(f);
+    }
+    t.quiesce.note_queued(1);
+}

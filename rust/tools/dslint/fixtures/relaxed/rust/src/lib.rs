@@ -1,0 +1,17 @@
+//! relaxed-rationale fixture: `good` carries a RELAXED rationale,
+//! `bump` does not.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    // RELAXED: monotonic counter; readers tolerate staleness.
+    pub fn good(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn bump(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+}

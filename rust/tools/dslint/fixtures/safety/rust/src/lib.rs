@@ -1,0 +1,21 @@
+//! safety-comment fixture: two annotated sites (must not fire, lines 6
+//! and 16) and two unannotated sites (must fire, lines 10 and 18).
+
+pub fn ok_block(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees `p` points to a live byte.
+    unsafe { *p }
+}
+
+pub fn bad_block(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+pub struct Handle(*const u8);
+
+// SAFETY: Handle is an opaque token; the pointer is never dereferenced.
+unsafe impl Send for Handle {}
+
+unsafe impl Sync for Handle {}
+
+// decoy: literal text must not be lexed as code
+pub const DOC: &str = "unsafe { not real }";

@@ -1,0 +1,4 @@
+//! # Observability
+//!
+//! Documented trace-event kinds: `epoch.start` marks the beginning of
+//! an epoch, and `chaos.<kind>` covers every injected-fault family.

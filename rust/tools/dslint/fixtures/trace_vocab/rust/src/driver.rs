@@ -1,0 +1,8 @@
+//! trace-vocab fixture: two documented emissions and one
+//! out-of-vocabulary kind (`bogus.kind`).
+
+pub fn go() {
+    telemetry::event("epoch.start", &[]);
+    telemetry::event("chaos.drop", &[]);
+    telemetry::event("bogus.kind", &[]);
+}

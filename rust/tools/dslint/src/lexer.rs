@@ -1,0 +1,527 @@
+//! A comment/string-aware Rust lexer — just enough structure for the
+//! cross-file invariant rules in [`crate::rules`].
+//!
+//! Hand-rolled (crates.io is unreachable in the build environment, so
+//! syn/proc-macro2 are off the table — same precedent as the main
+//! crate's crc32, JSON parser, and poll(2)/mmap bindings). It does NOT
+//! parse Rust; it tokenizes it: identifiers, numbers, string literals,
+//! and single-character punctuation, with comments and literal bodies
+//! kept out of the token stream so a rule can never be fooled by
+//! `"unsafe"` inside a string or `// .ship(` inside a comment.
+//!
+//! Handled literal forms: `//` line comments, nested `/* */` block
+//! comments, `"…"` strings with escapes, raw strings `r"…"` /
+//! `r#"…"#` (any hash depth, plus `b` prefixes), byte strings, char
+//! literals (including escapes), and lifetimes (`'a` is NOT a char
+//! literal).
+
+/// One lexical token, tagged with its 1-based source line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub line: usize,
+    pub kind: Tok,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword (`unsafe`, `fn`, `kind`, …).
+    Ident(String),
+    /// Numeric literal, raw text (`0x1F`, `25`, `1_000u64`).
+    Num(String),
+    /// String literal *content* (delimiters and prefixes stripped,
+    /// escapes left as written).
+    Str(String),
+    /// Any other non-whitespace character.
+    Punct(char),
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(self, Tok::Ident(i) if i == s)
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(self, Tok::Punct(p) if *p == c)
+    }
+
+    pub fn as_str_lit(&self) -> Option<&str> {
+        match self {
+            Tok::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// One lexed source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the scan root, with `/` separators.
+    pub path: String,
+    pub tokens: Vec<Token>,
+    /// Comment text per physical line it appears on (block comments
+    /// contribute one entry per line they span).
+    pub comments: Vec<(usize, String)>,
+    /// The source with comments and literal bodies blanked to spaces —
+    /// line-classification support for the walk-up rules.
+    pub masked: Vec<String>,
+}
+
+impl SourceFile {
+    pub fn lex(path: &str, text: &str) -> SourceFile {
+        Lexer::new(text).run(path)
+    }
+
+    /// All comment texts on `line`, concatenated.
+    pub fn comment_on(&self, line: usize) -> Option<String> {
+        let mut out = String::new();
+        for (l, t) in &self.comments {
+            if *l == line {
+                out.push_str(t);
+                out.push(' ');
+            }
+        }
+        if out.is_empty() {
+            None
+        } else {
+            Some(out)
+        }
+    }
+
+    /// Classify `line` (1-based) for the comment walk-up rules.
+    pub fn line_class(&self, line: usize) -> LineClass {
+        let code = self
+            .masked
+            .get(line - 1)
+            .map(|s| s.trim().to_string())
+            .unwrap_or_default();
+        let has_comment = self.comment_on(line).is_some();
+        if code.is_empty() {
+            if has_comment {
+                LineClass::CommentOnly
+            } else {
+                LineClass::Blank
+            }
+        } else if (code.starts_with("#[") || code.starts_with("#!["))
+            && code.ends_with(']')
+        {
+            LineClass::AttributeOnly
+        } else {
+            LineClass::Code
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LineClass {
+    Blank,
+    CommentOnly,
+    AttributeOnly,
+    Code,
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+    tokens: Vec<Token>,
+    comments: Vec<(usize, String)>,
+    masked: Vec<String>,
+    cur_masked: String,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(text: &'a str) -> Self {
+        Lexer {
+            src: text.as_bytes(),
+            pos: 0,
+            line: 1,
+            tokens: Vec::new(),
+            comments: Vec::new(),
+            masked: Vec::new(),
+            cur_masked: String::new(),
+        }
+    }
+
+    fn peek(&self, ahead: usize) -> u8 {
+        *self.src.get(self.pos + ahead).unwrap_or(&0)
+    }
+
+    /// Consume one byte, maintaining line count and the masked view.
+    /// `mask`: emit a space into the masked line instead of the byte.
+    fn bump(&mut self, mask: bool) -> u8 {
+        let b = self.src[self.pos];
+        self.pos += 1;
+        if b == b'\n' {
+            let done = std::mem::take(&mut self.cur_masked);
+            self.masked.push(done);
+            self.line += 1;
+        } else if mask {
+            self.cur_masked.push(' ');
+        } else {
+            self.cur_masked.push(b as char);
+        }
+        b
+    }
+
+    fn run(mut self, path: &str) -> SourceFile {
+        while self.pos < self.src.len() {
+            let b = self.peek(0);
+            match b {
+                b'/' if self.peek(1) == b'/' => self.line_comment(),
+                b'/' if self.peek(1) == b'*' => self.block_comment(),
+                b'"' => self.string(0),
+                b'r' | b'b' if self.raw_or_byte_prefix() => {}
+                b'\'' => self.char_or_lifetime(),
+                c if c.is_ascii_alphabetic() || c == b'_' => self.ident(),
+                c if c.is_ascii_digit() => self.number(),
+                c if c.is_ascii_whitespace() => {
+                    self.bump(false);
+                }
+                c => {
+                    let line = self.line;
+                    self.bump(false);
+                    self.tokens.push(Token {
+                        line,
+                        kind: Tok::Punct(c as char),
+                    });
+                }
+            }
+        }
+        if !self.cur_masked.is_empty() {
+            let done = std::mem::take(&mut self.cur_masked);
+            self.masked.push(done);
+        }
+        SourceFile {
+            path: path.to_string(),
+            tokens: self.tokens,
+            comments: self.comments,
+            masked: self.masked,
+        }
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        while self.pos < self.src.len() && self.peek(0) != b'\n' {
+            text.push(self.bump(true) as char);
+        }
+        self.comments.push((line, text));
+    }
+
+    fn block_comment(&mut self) {
+        self.bump(true); // '/'
+        self.bump(true); // '*'
+        let mut depth = 1usize;
+        let mut text = String::new();
+        let mut line = self.line;
+        while self.pos < self.src.len() && depth > 0 {
+            if self.peek(0) == b'/' && self.peek(1) == b'*' {
+                depth += 1;
+                self.bump(true);
+                self.bump(true);
+                text.push_str("/*");
+            } else if self.peek(0) == b'*' && self.peek(1) == b'/' {
+                depth -= 1;
+                self.bump(true);
+                self.bump(true);
+            } else {
+                let b = self.bump(true);
+                if b == b'\n' {
+                    self.comments.push((line, std::mem::take(&mut text)));
+                    line = self.line;
+                } else {
+                    text.push(b as char);
+                }
+            }
+        }
+        self.comments.push((line, text));
+    }
+
+    /// Handle `r"…"`, `r#"…"#`, `br"…"`, `b"…"`, `b'…'` prefixes.
+    /// Returns true when it consumed a literal; false means the `r`/`b`
+    /// is a plain identifier start and the caller should fall through.
+    fn raw_or_byte_prefix(&mut self) -> bool {
+        let mut ahead = 1; // past the r/b
+        if self.peek(0) == b'b' && self.peek(1) == b'r' {
+            ahead = 2;
+        }
+        let mut hashes = 0usize;
+        while self.peek(ahead + hashes) == b'#' {
+            hashes += 1;
+        }
+        let next = self.peek(ahead + hashes);
+        let is_raw = self.peek(0) == b'r' || ahead == 2;
+        if is_raw && next == b'"' {
+            for _ in 0..(ahead + hashes) {
+                self.bump(false);
+            }
+            self.string(hashes);
+            return true;
+        }
+        if self.peek(0) == b'b' && hashes == 0 && ahead == 1 {
+            if next == b'"' {
+                self.bump(false);
+                self.string(0);
+                return true;
+            }
+            if next == b'\'' {
+                self.bump(false);
+                self.char_literal();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Consume a string literal whose opening `"` is at `self.pos`;
+    /// `hashes` > 0 means a raw string closed by `"` + that many `#`.
+    fn string(&mut self, hashes: usize) {
+        let line = self.line;
+        self.bump(false); // opening quote
+        let mut content = String::new();
+        while self.pos < self.src.len() {
+            if self.peek(0) == b'"' {
+                let mut ok = true;
+                for h in 0..hashes {
+                    if self.peek(1 + h) != b'#' {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    self.bump(false);
+                    for _ in 0..hashes {
+                        self.bump(false);
+                    }
+                    break;
+                }
+            }
+            if hashes == 0 && self.peek(0) == b'\\' {
+                content.push(self.bump(true) as char);
+                if self.pos < self.src.len() {
+                    content.push(self.bump(true) as char);
+                }
+                continue;
+            }
+            content.push(self.bump(true) as char);
+        }
+        self.tokens.push(Token {
+            line,
+            kind: Tok::Str(content),
+        });
+    }
+
+    /// At a `'`: char literal or lifetime? A lifetime is `'ident` not
+    /// followed by a closing quote; everything else quote-delimited is
+    /// a char literal.
+    fn char_or_lifetime(&mut self) {
+        let c1 = self.peek(1);
+        if c1 == b'\\' || (self.peek(2) == b'\'' && c1 != b'\'') {
+            self.char_literal();
+        } else {
+            // lifetime: drop the quote, let the ident lex normally
+            self.bump(false);
+        }
+    }
+
+    fn char_literal(&mut self) {
+        self.bump(false); // opening '
+        while self.pos < self.src.len() {
+            match self.peek(0) {
+                b'\\' => {
+                    self.bump(true);
+                    if self.pos < self.src.len() {
+                        self.bump(true);
+                    }
+                }
+                b'\'' => {
+                    self.bump(false);
+                    break;
+                }
+                _ => {
+                    self.bump(true);
+                }
+            }
+        }
+    }
+
+    fn ident(&mut self) {
+        let line = self.line;
+        let mut s = String::new();
+        while self.pos < self.src.len()
+            && (self.peek(0).is_ascii_alphanumeric() || self.peek(0) == b'_')
+        {
+            s.push(self.bump(false) as char);
+        }
+        self.tokens.push(Token {
+            line,
+            kind: Tok::Ident(s),
+        });
+    }
+
+    fn number(&mut self) {
+        let line = self.line;
+        let mut s = String::new();
+        while self.pos < self.src.len()
+            && (self.peek(0).is_ascii_alphanumeric() || self.peek(0) == b'_')
+        {
+            s.push(self.bump(false) as char);
+        }
+        self.tokens.push(Token {
+            line,
+            kind: Tok::Num(s),
+        });
+    }
+}
+
+/// A `fn` item's extent in a token stream: `[sig_tok, end_tok]` token
+/// indices and `[sig_line, end_line]` source lines.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub sig_line: usize,
+    pub end_line: usize,
+    pub sig_tok: usize,
+    pub end_tok: usize,
+}
+
+/// Every `fn` item with a body. Brace-matched on the token stream
+/// (paren/bracket-aware, so `fn f(x: [u8; 4]) -> R {…}` resolves the
+/// right opening brace); bodyless trait methods (`;` before `{`) are
+/// skipped.
+pub fn fn_spans(file: &SourceFile) -> Vec<FnSpan> {
+    let toks = &file.tokens;
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].kind.is_ident("fn") {
+            let name = match toks.get(i + 1).map(|t| &t.kind) {
+                Some(Tok::Ident(n)) => n.clone(),
+                _ => {
+                    i += 1;
+                    continue;
+                }
+            };
+            let sig_line = toks[i].line;
+            let sig_tok = i;
+            // find the body '{' at paren/bracket depth 0; a ';' first
+            // means no body
+            let mut j = i + 2;
+            let mut depth = 0i32;
+            let mut body = None;
+            while j < toks.len() {
+                match &toks[j].kind {
+                    Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                    Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                    Tok::Punct(';') if depth == 0 => break,
+                    Tok::Punct('{') if depth == 0 => {
+                        body = Some(j);
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if let Some(open) = body {
+                let mut braces = 0i32;
+                let mut k = open;
+                while k < toks.len() {
+                    match &toks[k].kind {
+                        Tok::Punct('{') => braces += 1,
+                        Tok::Punct('}') => {
+                            braces -= 1;
+                            if braces == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                spans.push(FnSpan {
+                    name,
+                    sig_line,
+                    end_line: toks.get(k).map_or(sig_line, |t| t.line),
+                    sig_tok,
+                    end_tok: k.min(toks.len().saturating_sub(1)),
+                });
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// The innermost span containing token index `idx`.
+pub fn enclosing_fn(spans: &[FnSpan], idx: usize) -> Option<&FnSpan> {
+    spans
+        .iter()
+        .filter(|s| s.sig_tok <= idx && idx <= s.end_tok)
+        .min_by_key(|s| s.end_tok - s.sig_tok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_leave_the_token_stream() {
+        let f = SourceFile::lex(
+            "t.rs",
+            "let x = \"unsafe {\"; // unsafe {\n/* .ship( */ call();\n",
+        );
+        assert!(!f.tokens.iter().any(|t| t.kind.is_ident("unsafe")));
+        assert!(!f.tokens.iter().any(|t| t.kind.is_ident("ship")));
+        assert_eq!(f.comments.len(), 2);
+        assert_eq!(
+            f.tokens.iter().filter(|t| t.kind.is_ident("call")).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let f = SourceFile::lex(
+            "t.rs",
+            "let s = r#\"has \"quotes\" and unsafe\"#;\nfn f<'a>(x: &'a str) {}\nlet c = '\\'';\nlet d = 'x';\n",
+        );
+        assert!(!f.tokens.iter().any(|t| t.kind.is_ident("unsafe")));
+        assert!(!f.tokens.iter().any(|t| t.kind.is_ident("quotes")));
+        // lifetime ident survives as a token (quote stripped)
+        assert!(f.tokens.iter().any(|t| t.kind.is_ident("a")));
+        assert!(f.tokens.iter().any(|t| t.kind.is_ident("str")));
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies_and_skip_trait_decls() {
+        let src = "trait T { fn nope(&self); }\n\
+                   fn outer(x: [u8; 3]) -> u32 {\n\
+                       fn inner() -> u32 { 7 }\n\
+                       inner()\n\
+                   }\n";
+        let f = SourceFile::lex("t.rs", src);
+        let spans = fn_spans(&f);
+        let names: Vec<&str> =
+            spans.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "inner"]);
+        assert_eq!(spans[0].sig_line, 2);
+        assert_eq!(spans[0].end_line, 5);
+        // innermost resolution
+        let inner_tok = f
+            .tokens
+            .iter()
+            .position(|t| matches!(&t.kind, Tok::Num(n) if n == "7"))
+            .unwrap();
+        assert_eq!(enclosing_fn(&spans, inner_tok).unwrap().name, "inner");
+    }
+
+    #[test]
+    fn line_classes() {
+        let src = "// just a comment\n#[cfg(test)]\nlet x = 1; // trailing\n\n";
+        let f = SourceFile::lex("t.rs", src);
+        assert_eq!(f.line_class(1), LineClass::CommentOnly);
+        assert_eq!(f.line_class(2), LineClass::AttributeOnly);
+        assert_eq!(f.line_class(3), LineClass::Code);
+        assert_eq!(f.line_class(4), LineClass::Blank);
+    }
+}

@@ -1,0 +1,84 @@
+//! `dslint` — the DegreeSketch invariant linter.
+//!
+//! Scans `<root>/rust/src/**/*.rs` with a comment/string-aware lexer
+//! and enforces the cross-file contracts catalogued in
+//! `CONTRIBUTING.md` (SAFETY/RELAXED annotations, frame-kind registry
+//! integrity, BOOL_FLAGS parity, config-key wiring, trace-event
+//! vocabulary, the transport quiescence invariant).
+//!
+//! Usage: `dslint [--root DIR]` (root defaults to the current
+//! directory; CI runs it from the repository root). Exits 1 when any
+//! violation is found, printing one `file:line: rule: message` per
+//! finding.
+
+mod lexer;
+mod rules;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(d) => root = PathBuf::from(d),
+                None => {
+                    eprintln!("dslint: --root requires a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: dslint [--root DIR]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("dslint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let tree = match rules::Tree::load(&root) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("dslint: failed to read {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if tree.files.is_empty() {
+        eprintln!(
+            "dslint: no Rust sources under {}/rust/src",
+            root.display()
+        );
+        return ExitCode::from(2);
+    }
+
+    let mut violations = Vec::new();
+    for rule in rules::all_rules() {
+        violations.extend(rule.check(&tree));
+    }
+    violations.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!(
+            "dslint: {} files scanned, {} rules, 0 violations",
+            tree.files.len(),
+            rules::all_rules().len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "dslint: {} violation(s) across {} files scanned",
+            violations.len(),
+            tree.files.len()
+        );
+        ExitCode::FAILURE
+    }
+}

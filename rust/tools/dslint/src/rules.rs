@@ -1,0 +1,956 @@
+//! The invariant rules `dslint` enforces, each encoding one cross-file
+//! contract the compiler cannot see:
+//!
+//! * `safety-comment` — every `unsafe` block / `unsafe impl` carries a
+//!   `// SAFETY:` justification (mirror of clippy's
+//!   `undocumented_unsafe_blocks`, so the tree stays clean even when
+//!   only one of the two tools runs).
+//! * `frame-kinds` — frame-kind constants in `comm/socket.rs` are
+//!   unique, and every kind is referenced (dispatched) outside its
+//!   defining module — a dead or duplicated wire tag is a protocol bug.
+//! * `bool-flags` — every `args.has("x")` literal appears in
+//!   `BOOL_FLAGS`, every `BOOL_FLAGS` entry has a `.has` site, and no
+//!   value-taking accessor reads a `BOOL_FLAGS` name (the PR 9
+//!   `--json` bug class, both directions).
+//! * `config-parity` — every `serve.*` / `comm.*` / `telemetry.*`
+//!   config key has a CLI flag in `main.rs`, sits in a validating
+//!   (`bail`-capable) function in `config.rs`, and is mentioned in a
+//!   `config.rs` comment.
+//! * `trace-vocab` — trace-event kind literals passed to
+//!   `event` / `driver_event` / `serve_event` match the vocabulary
+//!   documented in `comm/mod.rs`.
+//! * `relaxed-rationale` — every function touching
+//!   `Ordering::Relaxed` carries a `// RELAXED:` rationale.
+//! * `quiescence` — `.ship(` appears only inside
+//!   `transport.rs::flush_outbox`, and `note_queued` precedes the
+//!   first ship (the quiescence-counting contract from `comm/mod.rs`).
+
+use crate::lexer::{enclosing_fn, fn_spans, FnSpan, LineClass, SourceFile, Tok};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+/// One finding. Rendered as `file:line: rule: msg`.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// A lexed source tree (everything under `<root>/rust/src`).
+pub struct Tree {
+    pub files: Vec<SourceFile>,
+}
+
+impl Tree {
+    pub fn load(root: &Path) -> std::io::Result<Tree> {
+        let mut files = Vec::new();
+        let mut stack = vec![root.join("rust").join("src")];
+        while let Some(dir) = stack.pop() {
+            let rd = match std::fs::read_dir(&dir) {
+                Ok(r) => r,
+                Err(_) => continue,
+            };
+            for entry in rd.flatten() {
+                let p = entry.path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else if p.extension().is_some_and(|e| e == "rs") {
+                    let text = std::fs::read_to_string(&p)?;
+                    let rel = p
+                        .strip_prefix(root)
+                        .unwrap_or(&p)
+                        .to_string_lossy()
+                        .replace('\\', "/");
+                    files.push(SourceFile::lex(&rel, &text));
+                }
+            }
+        }
+        files.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(Tree { files })
+    }
+
+    pub fn find(&self, suffix: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path.ends_with(suffix))
+    }
+}
+
+pub trait Rule {
+    fn name(&self) -> &'static str;
+    fn check(&self, tree: &Tree) -> Vec<Violation>;
+}
+
+pub fn all_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(SafetyComment),
+        Box::new(FrameKinds),
+        Box::new(BoolFlags),
+        Box::new(ConfigParity),
+        Box::new(TraceVocab),
+        Box::new(RelaxedRationale),
+        Box::new(Quiescence),
+    ]
+}
+
+// ---------------------------------------------------------------- helpers
+
+/// Token-index spans `[mod_kw, close_brace]` of every inline
+/// `mod <name> { … }` in `file`.
+fn mod_spans(file: &SourceFile, name: &str) -> Vec<(usize, usize)> {
+    let toks = &file.tokens;
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if toks[i].kind.is_ident("mod")
+            && toks[i + 1].kind.is_ident(name)
+            && toks[i + 2].kind.is_punct('{')
+        {
+            let mut depth = 0i32;
+            let mut k = i + 2;
+            while k < toks.len() {
+                match &toks[k].kind {
+                    Tok::Punct('{') => depth += 1,
+                    Tok::Punct('}') => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            out.push((i, k));
+            i = k;
+        }
+        i += 1;
+    }
+    out
+}
+
+fn in_spans(spans: &[(usize, usize)], idx: usize) -> bool {
+    spans.iter().any(|(a, b)| *a <= idx && idx <= *b)
+}
+
+/// Unit-test module spans — rules that audit production invariants
+/// (flag wiring, trace kinds, ship sites, Relaxed rationales) skip
+/// `mod tests` bodies so test scaffolding doesn't need annotations.
+/// `safety-comment` deliberately does NOT skip them: the clippy deny
+/// it mirrors applies to test code too.
+fn test_spans(file: &SourceFile) -> Vec<(usize, usize)> {
+    mod_spans(file, "tests")
+}
+
+/// Is a `SAFETY:` / `RELAXED:`-style marker attached to `line`?
+/// Accepted on the line itself or in the contiguous comment /
+/// attribute block directly above (clippy's
+/// `accept-comment-above-attributes` behaviour).
+fn marker_at(file: &SourceFile, line: usize, marker: &str) -> bool {
+    if file
+        .comment_on(line)
+        .is_some_and(|c| c.contains(marker))
+    {
+        return true;
+    }
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        match file.line_class(l) {
+            LineClass::CommentOnly => {
+                if file.comment_on(l).is_some_and(|c| c.contains(marker)) {
+                    return true;
+                }
+            }
+            LineClass::AttributeOnly | LineClass::Blank => {}
+            LineClass::Code => return false,
+        }
+    }
+    false
+}
+
+/// First string literal inside the call whose opening paren is at
+/// token index `open` (which must be a `(`), scanning to the matching
+/// close. Returns `(line, literal)`.
+fn first_str_in_call(
+    file: &SourceFile,
+    open: usize,
+) -> Option<(usize, String)> {
+    let toks = &file.tokens;
+    let mut depth = 0i32;
+    let mut k = open;
+    while k < toks.len() {
+        match &toks[k].kind {
+            Tok::Punct('(') => depth += 1,
+            Tok::Punct(')') => {
+                depth -= 1;
+                if depth == 0 {
+                    return None;
+                }
+            }
+            Tok::Str(s) => return Some((toks[k].line, s.clone())),
+            _ => {}
+        }
+        k += 1;
+    }
+    None
+}
+
+// ------------------------------------------------------------ rule: safety
+
+pub struct SafetyComment;
+
+impl Rule for SafetyComment {
+    fn name(&self) -> &'static str {
+        "safety-comment"
+    }
+
+    fn check(&self, tree: &Tree) -> Vec<Violation> {
+        let mut out = Vec::new();
+        for file in &tree.files {
+            let toks = &file.tokens;
+            for i in 0..toks.len() {
+                if !toks[i].kind.is_ident("unsafe") {
+                    continue;
+                }
+                let what = match toks.get(i + 1).map(|t| &t.kind) {
+                    Some(Tok::Punct('{')) => "unsafe block",
+                    Some(Tok::Ident(k)) if k == "impl" => "unsafe impl",
+                    // `unsafe fn` signatures document their contract in
+                    // the doc comment; clippy's lint skips them too.
+                    _ => continue,
+                };
+                if !marker_at(file, toks[i].line, "SAFETY:") {
+                    out.push(Violation {
+                        file: file.path.clone(),
+                        line: toks[i].line,
+                        rule: self.name(),
+                        msg: format!("{what} without a `// SAFETY:` justification"),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------- rule: frame-kinds
+
+pub struct FrameKinds;
+
+impl Rule for FrameKinds {
+    fn name(&self) -> &'static str {
+        "frame-kinds"
+    }
+
+    fn check(&self, tree: &Tree) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let Some(socket) = tree.find("comm/socket.rs") else {
+            return out;
+        };
+        let spans = mod_spans(socket, "kind");
+        let Some(&kind_span) = spans.first() else {
+            return out;
+        };
+
+        // consts inside `mod kind { … }`: (name, value, line)
+        let toks = &socket.tokens;
+        let mut consts: Vec<(String, u64, usize)> = Vec::new();
+        let mut i = kind_span.0;
+        while i <= kind_span.1 {
+            if toks[i].kind.is_ident("const") {
+                if let Some(Tok::Ident(name)) =
+                    toks.get(i + 1).map(|t| &t.kind)
+                {
+                    let mut j = i + 2;
+                    while j <= kind_span.1
+                        && !toks[j].kind.is_punct('=')
+                        && !toks[j].kind.is_punct(';')
+                    {
+                        j += 1;
+                    }
+                    if let Some(Tok::Num(n)) =
+                        toks.get(j + 1).map(|t| &t.kind)
+                    {
+                        if let Some(v) = parse_num(n) {
+                            consts.push((name.clone(), v, toks[i].line));
+                        }
+                    }
+                }
+            }
+            i += 1;
+        }
+
+        // uniqueness
+        let mut by_value: BTreeMap<u64, Vec<&(String, u64, usize)>> =
+            BTreeMap::new();
+        for c in &consts {
+            by_value.entry(c.1).or_default().push(c);
+        }
+        for (v, dup) in by_value.iter().filter(|(_, d)| d.len() > 1) {
+            let names: Vec<&str> =
+                dup.iter().map(|c| c.0.as_str()).collect();
+            out.push(Violation {
+                file: socket.path.clone(),
+                line: dup[1].2,
+                rule: self.name(),
+                msg: format!(
+                    "frame-kind value {v} assigned to multiple constants: {}",
+                    names.join(", ")
+                ),
+            });
+        }
+
+        // every kind referenced as `kind::NAME` outside the defining mod
+        let mut referenced: BTreeSet<String> = BTreeSet::new();
+        for file in &tree.files {
+            let t = &file.tokens;
+            for i in 0..t.len().saturating_sub(3) {
+                if t[i].kind.is_ident("kind")
+                    && t[i + 1].kind.is_punct(':')
+                    && t[i + 2].kind.is_punct(':')
+                {
+                    if file.path == socket.path
+                        && in_spans(&[kind_span], i)
+                    {
+                        continue;
+                    }
+                    if let Tok::Ident(name) = &t[i + 3].kind {
+                        referenced.insert(name.clone());
+                    }
+                }
+            }
+        }
+        for (name, _, line) in &consts {
+            if !referenced.contains(name) {
+                out.push(Violation {
+                    file: socket.path.clone(),
+                    line: *line,
+                    rule: self.name(),
+                    msg: format!(
+                        "frame kind `{name}` is never referenced outside \
+                         `mod kind` — dead wire tag or missing dispatch arm"
+                    ),
+                });
+            }
+        }
+        out
+    }
+}
+
+fn parse_num(n: &str) -> Option<u64> {
+    let s: String = n.chars().filter(|c| *c != '_').collect();
+    let s = s
+        .trim_end_matches(|c: char| c.is_ascii_alphabetic())
+        .to_string();
+    if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+// -------------------------------------------------------- rule: bool-flags
+
+/// Accessors on `Args` that take a value: a flag read through these
+/// must NOT be in `BOOL_FLAGS` (and vice versa for `.has`).
+const GET_FAMILY: &[&str] = &[
+    "get", "get_or", "get_u64", "get_usize", "get_u64_opt", "get_u8",
+    "require",
+];
+
+pub struct BoolFlags;
+
+impl Rule for BoolFlags {
+    fn name(&self) -> &'static str {
+        "bool-flags"
+    }
+
+    fn check(&self, tree: &Tree) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let Some(cli) = tree.find("src/cli.rs") else {
+            return out;
+        };
+
+        // BOOL_FLAGS entries: string literals between `BOOL_FLAGS … =`
+        // and the terminating `;`.
+        let mut flags: BTreeMap<String, usize> = BTreeMap::new();
+        let toks = &cli.tokens;
+        if let Some(start) =
+            toks.iter().position(|t| t.kind.is_ident("BOOL_FLAGS"))
+        {
+            for t in &toks[start..] {
+                match &t.kind {
+                    Tok::Str(s) => {
+                        flags.entry(s.clone()).or_insert(t.line);
+                    }
+                    Tok::Punct(';') => break,
+                    _ => {}
+                }
+            }
+        }
+        if flags.is_empty() {
+            out.push(Violation {
+                file: cli.path.clone(),
+                line: 1,
+                rule: self.name(),
+                msg: "could not locate a populated BOOL_FLAGS table".into(),
+            });
+            return out;
+        }
+
+        let mut has_sites: BTreeMap<String, (String, usize)> =
+            BTreeMap::new();
+        for file in &tree.files {
+            let skip = test_spans(file);
+            let t = &file.tokens;
+            for i in 0..t.len().saturating_sub(2) {
+                if in_spans(&skip, i) || !t[i].kind.is_punct('.') {
+                    continue;
+                }
+                let Tok::Ident(m) = &t[i + 1].kind else { continue };
+                if !t[i + 2].kind.is_punct('(') {
+                    continue;
+                }
+                let Some((line, lit)) = first_str_in_call(file, i + 2)
+                else {
+                    continue;
+                };
+                if m == "has" {
+                    has_sites
+                        .entry(lit.clone())
+                        .or_insert((file.path.clone(), line));
+                    if !flags.contains_key(&lit) {
+                        out.push(Violation {
+                            file: file.path.clone(),
+                            line,
+                            rule: self.name(),
+                            msg: format!(
+                                "`--{lit}` is read with `.has` but missing \
+                                 from BOOL_FLAGS (the PR 9 `--json` bug class)"
+                            ),
+                        });
+                    }
+                } else if GET_FAMILY.contains(&m.as_str())
+                    && flags.contains_key(&lit)
+                {
+                    out.push(Violation {
+                        file: file.path.clone(),
+                        line,
+                        rule: self.name(),
+                        msg: format!(
+                            "`--{lit}` is in BOOL_FLAGS but read through \
+                             value accessor `.{m}` — flags cannot be both"
+                        ),
+                    });
+                }
+            }
+        }
+        for (flag, line) in &flags {
+            if !has_sites.contains_key(flag) {
+                out.push(Violation {
+                    file: cli.path.clone(),
+                    line: *line,
+                    rule: self.name(),
+                    msg: format!(
+                        "BOOL_FLAGS entry `{flag}` has no `.has(\"{flag}\")` \
+                         site — dead flag"
+                    ),
+                });
+            }
+        }
+        out
+    }
+}
+
+// ----------------------------------------------------- rule: config-parity
+
+/// Keys whose CLI flag is not the mechanical `last segment, _ → -`
+/// derivation.
+const FLAG_OVERRIDES: &[(&str, &str)] = &[
+    ("comm.checkpoint_interval", "checkpoint"),
+    ("comm.adaptive_flush", "fixed-flush"),
+];
+
+pub struct ConfigParity;
+
+impl ConfigParity {
+    fn flag_for(key: &str) -> String {
+        for (k, f) in FLAG_OVERRIDES {
+            if *k == key {
+                return (*f).to_string();
+            }
+        }
+        key.rsplit('.').next().unwrap_or(key).replace('_', "-")
+    }
+
+    fn is_key(s: &str) -> bool {
+        let Some(rest) = ["serve.", "comm.", "telemetry."]
+            .iter()
+            .find_map(|p| s.strip_prefix(p))
+        else {
+            return false;
+        };
+        !rest.is_empty()
+            && rest
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+    }
+}
+
+impl Rule for ConfigParity {
+    fn name(&self) -> &'static str {
+        "config-parity"
+    }
+
+    fn check(&self, tree: &Tree) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let (Some(config), Some(main)) =
+            (tree.find("src/config.rs"), tree.find("src/main.rs"))
+        else {
+            return out;
+        };
+
+        // keys: every dotted serve/comm/telemetry literal in config.rs
+        // outside `mod tests`, with every token index it occurs at
+        let skip = test_spans(config);
+        let mut keys: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, t) in config.tokens.iter().enumerate() {
+            if in_spans(&skip, i) {
+                continue;
+            }
+            if let Tok::Str(s) = &t.kind {
+                if Self::is_key(s) {
+                    keys.entry(s.clone()).or_default().push(i);
+                }
+            }
+        }
+
+        let main_strs: BTreeSet<&str> = main
+            .tokens
+            .iter()
+            .filter_map(|t| t.kind.as_str_lit())
+            .collect();
+        let spans = fn_spans(config);
+        let bail_fns: Vec<&FnSpan> = spans
+            .iter()
+            .filter(|s| {
+                config.tokens[s.sig_tok..=s.end_tok.min(config.tokens.len() - 1)]
+                    .iter()
+                    .any(|t| t.kind.is_ident("bail"))
+            })
+            .collect();
+        let all_comments: String = config
+            .comments
+            .iter()
+            .map(|(_, c)| c.as_str())
+            .collect::<Vec<_>>()
+            .join("\n");
+
+        for (key, idxs) in &keys {
+            let line = config.tokens[idxs[0]].line;
+            let flag = Self::flag_for(key);
+            if !main_strs.contains(flag.as_str()) {
+                out.push(Violation {
+                    file: config.path.clone(),
+                    line,
+                    rule: self.name(),
+                    msg: format!(
+                        "config key `{key}` has no matching `--{flag}` \
+                         CLI flag in main.rs"
+                    ),
+                });
+            }
+            let validated = idxs.iter().any(|i| {
+                bail_fns.iter().any(|s| s.sig_tok <= *i && *i <= s.end_tok)
+            });
+            if !validated {
+                out.push(Violation {
+                    file: config.path.clone(),
+                    line,
+                    rule: self.name(),
+                    msg: format!(
+                        "config key `{key}` never appears in a validating \
+                         (`bail`-capable) function in config.rs"
+                    ),
+                });
+            }
+            if !all_comments.contains(key.as_str()) {
+                out.push(Violation {
+                    file: config.path.clone(),
+                    line,
+                    rule: self.name(),
+                    msg: format!(
+                        "config key `{key}` is not mentioned in any \
+                         config.rs comment — undocumented knob"
+                    ),
+                });
+            }
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------- rule: trace-vocab
+
+/// Functions whose first string argument is a trace-event kind.
+const EMITTERS: &[&str] = &["event", "driver_event", "serve_event"];
+
+/// Kinds documented without a dot, so backtick extraction (which keys
+/// on dotted names) cannot find them mechanically.
+const BARE_KINDS: &[&str] = &["pause", "quiesce"];
+
+pub struct TraceVocab;
+
+impl Rule for TraceVocab {
+    fn name(&self) -> &'static str {
+        "trace-vocab"
+    }
+
+    fn check(&self, tree: &Tree) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let Some(comm_mod) = tree.find("comm/mod.rs") else {
+            return out;
+        };
+
+        // vocabulary: backticked dotted names in comm/mod.rs comments;
+        // `chaos.<kind>` documents a wildcard family
+        let mut vocab: BTreeSet<String> = BTreeSet::new();
+        let mut prefixes: Vec<String> = Vec::new();
+        for (_, text) in &comm_mod.comments {
+            for (i, part) in text.split('`').enumerate() {
+                if i % 2 == 0 {
+                    continue;
+                }
+                if let Some(pos) = part.find(".<") {
+                    let prefix = &part[..pos + 1];
+                    if prefix
+                        .chars()
+                        .all(|c| c.is_ascii_lowercase() || c == '_' || c == '.')
+                    {
+                        prefixes.push(prefix.to_string());
+                    }
+                } else if part.contains('.')
+                    && !part.starts_with('.')
+                    && !part.ends_with('.')
+                    && part.chars().all(|c| {
+                        c.is_ascii_lowercase() || c == '_' || c == '.'
+                    })
+                {
+                    vocab.insert(part.to_string());
+                }
+            }
+        }
+        if vocab.is_empty() {
+            return out;
+        }
+
+        for file in &tree.files {
+            let skip = test_spans(file);
+            let t = &file.tokens;
+            for i in 0..t.len().saturating_sub(1) {
+                if in_spans(&skip, i) {
+                    continue;
+                }
+                let Tok::Ident(name) = &t[i].kind else { continue };
+                if !EMITTERS.contains(&name.as_str())
+                    || !t[i + 1].kind.is_punct('(')
+                {
+                    continue;
+                }
+                // skip definitions and method calls on other receivers
+                if i > 0
+                    && (t[i - 1].kind.is_ident("fn")
+                        || t[i - 1].kind.is_punct('.'))
+                {
+                    continue;
+                }
+                let Some((line, kind)) = first_str_in_call(file, i + 1)
+                else {
+                    continue;
+                };
+                let ok = vocab.contains(&kind)
+                    || BARE_KINDS.contains(&kind.as_str())
+                    || prefixes.iter().any(|p| kind.starts_with(p.as_str()));
+                if !ok {
+                    out.push(Violation {
+                        file: file.path.clone(),
+                        line,
+                        rule: self.name(),
+                        msg: format!(
+                            "trace event kind `{kind}` is not in the \
+                             vocabulary documented in comm/mod.rs"
+                        ),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+// ------------------------------------------------- rule: relaxed-rationale
+
+pub struct RelaxedRationale;
+
+impl Rule for RelaxedRationale {
+    fn name(&self) -> &'static str {
+        "relaxed-rationale"
+    }
+
+    fn check(&self, tree: &Tree) -> Vec<Violation> {
+        let mut out = Vec::new();
+        for file in &tree.files {
+            let skip = test_spans(file);
+            let spans = fn_spans(file);
+            let mut flagged: BTreeSet<usize> = BTreeSet::new();
+            for (i, t) in file.tokens.iter().enumerate() {
+                if !t.kind.is_ident("Relaxed") || in_spans(&skip, i) {
+                    continue;
+                }
+                // `use …::Ordering::Relaxed;` and other non-fn sites
+                // carry no memory-ordering decision of their own
+                let Some(f) = enclosing_fn(&spans, i) else {
+                    continue;
+                };
+                if flagged.contains(&f.sig_tok) {
+                    continue;
+                }
+                // accepted anywhere from the comment block above the
+                // signature to the end of the body
+                let mut start = f.sig_line;
+                while start > 1
+                    && matches!(
+                        file.line_class(start - 1),
+                        LineClass::CommentOnly | LineClass::AttributeOnly
+                    )
+                {
+                    start -= 1;
+                }
+                let has = file.comments.iter().any(|(l, c)| {
+                    *l >= start && *l <= f.end_line && c.contains("RELAXED:")
+                });
+                if !has {
+                    flagged.insert(f.sig_tok);
+                    out.push(Violation {
+                        file: file.path.clone(),
+                        line: f.sig_line,
+                        rule: self.name(),
+                        msg: format!(
+                            "fn `{}` uses Ordering::Relaxed without a \
+                             `// RELAXED:` rationale",
+                            f.name
+                        ),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+// -------------------------------------------------------- rule: quiescence
+
+pub struct Quiescence;
+
+impl Rule for Quiescence {
+    fn name(&self) -> &'static str {
+        "quiescence"
+    }
+
+    fn check(&self, tree: &Tree) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let mut transport_ships: Vec<usize> = Vec::new(); // lines
+        for file in &tree.files {
+            let is_transport = file.path.ends_with("comm/transport.rs");
+            let skip = test_spans(file);
+            let spans = fn_spans(file);
+            let flush = spans.iter().find(|s| s.name == "flush_outbox");
+            let t = &file.tokens;
+            for i in 0..t.len().saturating_sub(2) {
+                if in_spans(&skip, i) {
+                    continue;
+                }
+                if !(t[i].kind.is_punct('.')
+                    && t[i + 1].kind.is_ident("ship")
+                    && t[i + 2].kind.is_punct('('))
+                {
+                    continue;
+                }
+                let line = t[i].line;
+                let inside_flush = flush
+                    .is_some_and(|s| s.sig_tok <= i && i <= s.end_tok);
+                if is_transport && inside_flush {
+                    transport_ships.push(line);
+                } else {
+                    out.push(Violation {
+                        file: file.path.clone(),
+                        line,
+                        rule: self.name(),
+                        msg: "`.ship(` outside transport.rs::flush_outbox \
+                              bypasses quiescence accounting"
+                            .into(),
+                    });
+                }
+            }
+            if is_transport {
+                if let (Some(s), Some(&first_ship)) =
+                    (flush, transport_ships.first())
+                {
+                    let queued_line = (s.sig_tok..=s.end_tok)
+                        .filter(|&j| {
+                            t[j].kind.is_ident("note_queued")
+                                && t.get(j + 1)
+                                    .is_some_and(|n| n.kind.is_punct('('))
+                        })
+                        .map(|j| t[j].line)
+                        .min();
+                    match queued_line {
+                        Some(q) if q < first_ship => {}
+                        Some(q) => out.push(Violation {
+                            file: file.path.clone(),
+                            line: q,
+                            rule: self.name(),
+                            msg: format!(
+                                "note_queued (line {q}) must precede the \
+                                 first ship (line {first_ship}) in \
+                                 flush_outbox"
+                            ),
+                        }),
+                        None => out.push(Violation {
+                            file: file.path.clone(),
+                            line: first_ship,
+                            rule: self.name(),
+                            msg: "flush_outbox ships frames without \
+                                  calling note_queued first"
+                                .into(),
+                        }),
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+// ----------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> Tree {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("fixtures")
+            .join(name);
+        Tree::load(&root).expect("fixture tree loads")
+    }
+
+    fn msgs(v: &[Violation]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn safety_comment_fires_on_seeded_violations() {
+        let v = SafetyComment.check(&fixture("safety"));
+        let m = msgs(&v);
+        assert_eq!(v.len(), 2, "{m:?}");
+        assert!(m.iter().any(|s| s.contains("unsafe block")), "{m:?}");
+        assert!(m.iter().any(|s| s.contains("unsafe impl")), "{m:?}");
+        // the annotated block and annotated impl must NOT fire
+        assert!(v.iter().all(|x| x.line != 6 && x.line != 16), "{m:?}");
+    }
+
+    #[test]
+    fn frame_kinds_fires_on_duplicate_and_dead_tags() {
+        let v = FrameKinds.check(&fixture("frame_kinds"));
+        let m = msgs(&v);
+        assert_eq!(v.len(), 2, "{m:?}");
+        assert!(
+            m.iter().any(|s| s.contains("assigned to multiple")),
+            "{m:?}"
+        );
+        assert!(m.iter().any(|s| s.contains("`GHOST`")), "{m:?}");
+    }
+
+    #[test]
+    fn bool_flags_reproduces_the_pr9_json_bug() {
+        let v = BoolFlags.check(&fixture("bool_flags"));
+        let m = msgs(&v);
+        assert_eq!(v.len(), 3, "{m:?}");
+        // the PR 9 class: read with .has, missing from BOOL_FLAGS
+        assert!(
+            m.iter().any(|s| s.contains("--json") && s.contains("missing")),
+            "{m:?}"
+        );
+        // dead entry with no .has site
+        assert!(
+            m.iter().any(|s| s.contains("`metrics`") && s.contains("dead")),
+            "{m:?}"
+        );
+        // value accessor reading a BOOL_FLAGS name
+        assert!(
+            m.iter().any(|s| s.contains("--config") && s.contains(".get")),
+            "{m:?}"
+        );
+    }
+
+    #[test]
+    fn config_parity_fires_on_unwired_key() {
+        let v = ConfigParity.check(&fixture("config_parity"));
+        let m = msgs(&v);
+        // serve.widgets: no flag, no validation arm, no doc mention
+        assert_eq!(v.len(), 3, "{m:?}");
+        assert!(m.iter().all(|s| s.contains("serve.widgets")), "{m:?}");
+        assert!(m.iter().any(|s| s.contains("--widgets")), "{m:?}");
+        assert!(m.iter().any(|s| s.contains("validating")), "{m:?}");
+        assert!(m.iter().any(|s| s.contains("undocumented knob")), "{m:?}");
+    }
+
+    #[test]
+    fn trace_vocab_fires_on_undocumented_kind() {
+        let v = TraceVocab.check(&fixture("trace_vocab"));
+        let m = msgs(&v);
+        assert_eq!(v.len(), 1, "{m:?}");
+        assert!(m[0].contains("`bogus.kind`"), "{m:?}");
+    }
+
+    #[test]
+    fn relaxed_rationale_fires_per_function() {
+        let v = RelaxedRationale.check(&fixture("relaxed"));
+        let m = msgs(&v);
+        assert_eq!(v.len(), 1, "{m:?}");
+        assert!(m[0].contains("`bump`"), "{m:?}");
+    }
+
+    #[test]
+    fn quiescence_fires_on_rogue_ship_and_bad_ordering() {
+        let v = Quiescence.check(&fixture("quiescence"));
+        let m = msgs(&v);
+        assert_eq!(v.len(), 2, "{m:?}");
+        assert!(
+            m.iter().any(|s| s.contains("outside transport.rs")),
+            "{m:?}"
+        );
+        assert!(m.iter().any(|s| s.contains("must precede")), "{m:?}");
+    }
+
+    #[test]
+    fn flag_derivation_handles_overrides() {
+        assert_eq!(ConfigParity::flag_for("serve.batch_max"), "batch-max");
+        assert_eq!(
+            ConfigParity::flag_for("comm.checkpoint_interval"),
+            "checkpoint"
+        );
+        assert_eq!(
+            ConfigParity::flag_for("comm.adaptive_flush"),
+            "fixed-flush"
+        );
+    }
+}

@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Unit tests for the bench_diff.py regression gate.
+
+Drives the script as a subprocess (the same way CI invokes it) and
+asserts on exit codes + output text, covering the three behaviors the
+gate promises:
+
+  * a populated row losing more than --fail-pct of its prior value
+    FAILS (exit 1),
+  * rows that are null on either side only WARN (exit 0), so a cold
+    artifact chain from a toolchain-less builder cannot break CI,
+  * a missing input file is a hard error (nonzero exit), never a
+    silent pass.
+
+Run with:  python3 -m unittest discover -s scripts -p 'test_*.py' -v
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "bench_diff.py")
+
+
+def doc(rows):
+    return {"results": rows}
+
+
+def row(component, **metrics):
+    r = {"component": component}
+    r.update(metrics)
+    return r
+
+
+class BenchDiffTest(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+
+    def write(self, name, payload):
+        path = os.path.join(self.dir.name, name)
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        return path
+
+    def run_gate(self, prior, current, *extra):
+        return subprocess.run(
+            [sys.executable, SCRIPT, prior, current, *extra],
+            capture_output=True, text=True)
+
+    def test_regression_beyond_threshold_fails(self):
+        prior = self.write("prior.json", doc([
+            row("hll_fold", rate_per_s=1000.0),
+            row("intersect", speedup=4.0),
+        ]))
+        current = self.write("current.json", doc([
+            row("hll_fold", rate_per_s=700.0),   # -30% < -20%: fail
+            row("intersect", speedup=3.9),       # -2.5%: fine
+        ]))
+        res = self.run_gate(prior, current, "--fail-pct", "20")
+        self.assertEqual(res.returncode, 1, res.stdout + res.stderr)
+        self.assertIn("FAIL: rate_per_s regressed", res.stdout)
+        self.assertIn("1 regression(s) beyond 20%", res.stdout)
+        self.assertNotIn("bench gate: OK", res.stdout)
+
+    def test_regression_within_threshold_passes(self):
+        prior = self.write("prior.json", doc([row("k", rate_per_s=1000.0)]))
+        current = self.write("current.json", doc([row("k", rate_per_s=850.0)]))
+        res = self.run_gate(prior, current, "--fail-pct", "20")
+        self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
+        self.assertIn("bench gate: OK", res.stdout)
+
+    def test_null_rows_warn_but_pass(self):
+        # the toolchain-less authoring container ships null metrics; the
+        # gate must warn, not fail
+        prior = self.write("prior.json", doc([
+            row("hll_fold", rate_per_s=1000.0),
+            row("cold", rate_per_s=None),
+        ]))
+        current = self.write("current.json", doc([
+            row("hll_fold", rate_per_s=None),
+            row("cold", rate_per_s=None),
+        ]))
+        res = self.run_gate(prior, current)
+        self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
+        self.assertIn("WARN: unpopulated", res.stdout)
+        self.assertIn("2 row(s) unpopulated or missing", res.stdout)
+        self.assertIn("bench gate: OK", res.stdout)
+
+    def test_new_and_dropped_rows(self):
+        prior = self.write("prior.json", doc([
+            row("kept", rate_per_s=100.0),
+            row("gone", rate_per_s=50.0),
+        ]))
+        current = self.write("current.json", doc([
+            row("kept", rate_per_s=100.0),
+            row("fresh", rate_per_s=9.0),
+        ]))
+        res = self.run_gate(prior, current)
+        # a new row has no baseline, a dropped row warns; neither fails
+        self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
+        self.assertIn("(no baseline)", res.stdout)
+        self.assertIn("WARN: row vanished", res.stdout)
+        self.assertIn("bench gate: OK", res.stdout)
+
+    def test_missing_file_is_a_hard_error(self):
+        current = self.write("current.json", doc([]))
+        res = self.run_gate(os.path.join(self.dir.name, "nope.json"),
+                            current)
+        self.assertNotEqual(res.returncode, 0)
+        self.assertNotIn("bench gate: OK", res.stdout)
+
+    def test_malformed_json_is_a_hard_error(self):
+        prior = self.write("prior.json", doc([]))
+        bad = os.path.join(self.dir.name, "bad.json")
+        with open(bad, "w") as f:
+            f.write("{not json")
+        res = self.run_gate(prior, bad)
+        self.assertNotEqual(res.returncode, 0)
+        self.assertNotIn("bench gate: OK", res.stdout)
+
+    def test_improvement_never_fails(self):
+        prior = self.write("prior.json", doc([row("k", speedup=2.0)]))
+        current = self.write("current.json", doc([row("k", speedup=9.0)]))
+        res = self.run_gate(prior, current, "--fail-pct", "1")
+        self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
+        self.assertIn("bench gate: OK", res.stdout)
+
+
+if __name__ == "__main__":
+    unittest.main()
